@@ -1,0 +1,54 @@
+//! Downstream-task example: reproduce one row-group of the paper's Table 1
+//! style comparison on the tiny config — untrained base vs LoRA vs
+//! LoRAM-Stru (recovered), across math / CSR / code.
+//!
+//!   cargo run --release --example downstream_eval
+
+use loram::coordinator::downstream::{eval_all, ModelUnderTest};
+use loram::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use loram::data::instruct::Dataset;
+use loram::params::init_lora;
+use loram::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(loram::default_artifact_dir())?;
+    std::fs::create_dir_all("runs")?;
+    let mk = |variant, pruned: Option<&str>| PipelineConfig {
+        base: "tiny".into(),
+        pruned: pruned.map(String::from),
+        variant,
+        pretrain_steps: 60,
+        align_steps: 12,
+        sft_steps: 30,
+        dataset: Dataset::Hermes,
+        seed: 0,
+        eval_every: 0,
+        eval_seqs: 8,
+        run_dir: "runs".into(),
+        ..Default::default()
+    };
+
+    let loram = Pipeline::new(&rt, mk(Variant::Stru, Some("tiny_p50"))).run()?;
+    let lora = Pipeline::new(&rt, mk(Variant::Lora, None)).run()?;
+    let cfg = rt.load("eval_tiny")?.meta.config.clone();
+    let zero = init_lora(&cfg, 0);
+
+    println!(
+        "{:<22} {:>7} {:>7} {:>9} {:>8} {:>8}",
+        "method", "mathqa", "gsm", "csr_mean", "pass@1", "pass@10"
+    );
+    for (name, weights) in [
+        ("tiny w/o FT", &zero),
+        ("tiny LoRA", &lora.lora_recovered),
+        ("tiny LoRAM-Stru", &loram.lora_recovered),
+    ] {
+        let m = ModelUnderTest::new(&rt, "tiny", &[&loram.base_params, weights])?;
+        let s = eval_all(&m, 0, 12, 8, 4, 4, &[0.0, 0.4])?;
+        println!(
+            "{:<22} {:>7.3} {:>7.3} {:>9.3} {:>8.3} {:>8.3}",
+            name, s.mathqa, s.gsm, s.csr_mean, s.pass1, s.pass10
+        );
+    }
+    println!("\n(Full-scale version: `loram repro --exp tab1 --scale paper`.)");
+    Ok(())
+}

@@ -1,0 +1,315 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts consumed by the Rust runtime.
+
+HLO *text* (not `lowered.compile()` / proto `.serialize()`) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids that xla_extension 0.5.1 (behind the `xla` 0.1.6 crate) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Every artifact `<name>.hlo.txt` is written together with `<name>.meta.json`
+describing the exact input/output tensor order, shapes and dtypes plus the
+model config — the Rust runtime is driven entirely by that metadata.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--suite std|smoke] \
+        [--only regex] [--list] [--pallas]
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import PRESETS, ModelConfig, pruned_config
+from . import model as M
+
+# Per-artifact static shapes (proxy scale for the single-core testbed; the
+# paper's 512-token/batch-128 setup is noted in EXPERIMENTS.md).
+TRAIN_B, TRAIN_S = 4, 64
+EVAL_B, EVAL_S = 8, 64
+LOGITS_B, LOGITS_S = 4, 64
+# Block 16 divides every projection dim across the preset family (the paper
+# uses QLoRA's 64; storage accounting in rust/src/quant covers both).
+NF4_BLOCK = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class Artifact:
+    def __init__(self, name, fn, in_specs, out_names, cfg: ModelConfig,
+                 extra=None):
+        self.name = name
+        self.fn = fn
+        self.in_specs = in_specs          # list[(name, ShapeDtypeStruct)]
+        self.out_names = out_names
+        self.cfg = cfg
+        self.extra = extra or {}
+
+    def emit(self, out_dir):
+        t0 = time.time()
+        specs = [s for _, s in self.in_specs]
+        lowered = jax.jit(self.fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        outs = jax.eval_shape(self.fn, *specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        assert len(outs) == len(self.out_names), \
+            (self.name, len(outs), len(self.out_names))
+        meta = {
+            "name": self.name,
+            "config": self.cfg.to_dict(),
+            "inputs": [_io_entry(n, s) for n, s in self.in_specs],
+            "outputs": [_io_entry(n, s) for n, s in zip(self.out_names, outs)],
+            "extra": self.extra,
+        }
+        with open(os.path.join(out_dir, f"{self.name}.hlo.txt"), "w") as f:
+            f.write(text)
+        with open(os.path.join(out_dir, f"{self.name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        print(f"  {self.name}: {len(text)//1024} KiB hlo, "
+              f"{len(self.in_specs)} in / {len(self.out_names)} out, "
+              f"{time.time()-t0:.1f}s", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Spec helpers for each artifact kind
+# ---------------------------------------------------------------------------
+
+def _param_specs(cfg, names=None):
+    shapes = M.param_shapes(cfg)
+    names = names if names is not None else list(shapes.keys())
+    return [(n, _spec(shapes[n])) for n in names]
+
+
+def _lora_specs(cfg, prefix=""):
+    return [(prefix + n, _spec(s)) for n, s in M.lora_shapes(cfg).items()]
+
+
+def _mask_specs(cfg):
+    shapes = M.layer_proj_shapes(cfg, 0)
+    out = []
+    for i in range(cfg.n_layers):
+        ls = M.layer_proj_shapes(cfg, i)
+        for k in M.LAYER_PROJ:
+            out.append((f"l{i}.{k}.mask", _spec(ls[k])))
+    return out
+
+
+def _quant_specs(cfg):
+    out = []
+    for i in range(cfg.n_layers):
+        ls = M.layer_proj_shapes(cfg, i)
+        for k in M.QUANT_PROJ:
+            m, n = ls[k]
+            out.append((f"l{i}.{k}.codes", _spec((m, n), jnp.int32)))
+            out.append((f"l{i}.{k}.absmax", _spec((m, n // NF4_BLOCK))))
+    return out
+
+
+def pretrain_artifact(cfg, masked=False, b=TRAIN_B, s=TRAIN_S, tag=""):
+    fn, pnames, mnames = M.make_pretrain_step(cfg, masked=masked)
+    ins = [("step", _spec((), jnp.float32)), ("lr", _spec((), jnp.float32)),
+           ("tokens", _spec((b, s + 1), jnp.int32)),
+           ("loss_mask", _spec((b, s)))]
+    ins += _param_specs(cfg, pnames)
+    ins += [("adam_m." + n, sp) for n, sp in _param_specs(cfg, pnames)]
+    ins += [("adam_v." + n, sp) for n, sp in _param_specs(cfg, pnames)]
+    if masked:
+        ins += _mask_specs(cfg)
+    outs = (["loss"] + ["new." + n for n in pnames]
+            + ["new_m." + n for n in pnames] + ["new_v." + n for n in pnames])
+    name = f"pretrain_{cfg.name}{tag}" + ("_m" if masked else "")
+    return Artifact(name, fn, ins, outs, cfg,
+                    {"kind": "pretrain", "batch": b, "seq": s,
+                     "masked": masked, "param_names": pnames,
+                     "mask_names": mnames})
+
+
+def sft_artifact(cfg, masked=False, quantized=False, b=TRAIN_B, s=TRAIN_S):
+    fn, pnames, qnames, mnames, lnames = M.make_sft_step(
+        cfg, masked=masked, quantized=quantized, nf4_block=NF4_BLOCK)
+    ins = [("step", _spec((), jnp.float32)), ("lr", _spec((), jnp.float32)),
+           ("tokens", _spec((b, s + 1), jnp.int32)),
+           ("loss_mask", _spec((b, s)))]
+    ins += _param_specs(cfg, pnames)
+    if quantized:
+        ins += _quant_specs(cfg)
+    if masked:
+        ins += _mask_specs(cfg)
+    ins += _lora_specs(cfg)
+    ins += [("adam_m." + n, sp) for n, sp in _lora_specs(cfg)]
+    ins += [("adam_v." + n, sp) for n, sp in _lora_specs(cfg)]
+    outs = (["loss"] + ["new." + n for n in lnames]
+            + ["new_m." + n for n in lnames] + ["new_v." + n for n in lnames])
+    tag = ("_m" if masked else "") + ("_q" if quantized else "")
+    return Artifact(f"sft_{cfg.name}{tag}", fn, ins, outs, cfg,
+                    {"kind": "sft", "batch": b, "seq": s, "masked": masked,
+                     "quantized": quantized, "nf4_block": NF4_BLOCK,
+                     "param_names": pnames, "quant_names": qnames,
+                     "mask_names": mnames, "lora_names": lnames})
+
+
+def eval_artifact(cfg, b=EVAL_B, s=EVAL_S):
+    fn, pnames, lnames = M.make_eval_loss(cfg)
+    ins = [("tokens", _spec((b, s + 1), jnp.int32)),
+           ("loss_mask", _spec((b, s)))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    return Artifact(f"eval_{cfg.name}", fn, ins, ["nll_sum", "tok_count"],
+                    cfg, {"kind": "eval", "batch": b, "seq": s,
+                          "param_names": pnames, "lora_names": lnames})
+
+
+def logits_artifact(cfg, b=LOGITS_B, s=LOGITS_S):
+    fn, pnames, lnames = M.make_logits(cfg)
+    ins = [("tokens", _spec((b, s), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    return Artifact(f"logits_{cfg.name}", fn, ins, ["logits"], cfg,
+                    {"kind": "logits", "batch": b, "seq": s,
+                     "param_names": pnames, "lora_names": lnames})
+
+
+def grad_imp_artifact(cfg, b=TRAIN_B, s=TRAIN_S):
+    fn, pnames = M.make_grad_importance(cfg)
+    ins = [("tokens", _spec((b, s + 1), jnp.int32)),
+           ("loss_mask", _spec((b, s)))]
+    ins += _param_specs(cfg, pnames)
+    return Artifact(f"gradimp_{cfg.name}", fn, ins, ["head_imp", "ff_imp"],
+                    cfg, {"kind": "gradimp", "batch": b, "seq": s,
+                          "param_names": pnames})
+
+
+def kernel_demo_artifact(use_pallas: bool):
+    """Small logits artifact lowered *through the Pallas kernels* — the
+    kernel-path validation target (compared against the jnp path by both
+    pytest and the Rust integration test)."""
+    cfg = PRESETS["tiny"]
+    fn_ref, pnames, lnames = M.make_logits(cfg)
+
+    def fn(tokens, *flat):
+        params = dict(zip(pnames, flat[:len(pnames)]))
+        lora = dict(zip(lnames, flat[len(pnames):]))
+        proj = M.ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        return (M.forward(cfg, proj, tokens),)
+
+    ins = [("tokens", _spec((2, 32), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    name = "logits_tiny_pallas" if use_pallas else "logits_tiny_jnp"
+    return Artifact(name, fn, ins, ["logits"], cfg,
+                    {"kind": "logits", "batch": 2, "seq": 32,
+                     "pallas": use_pallas, "param_names": pnames,
+                     "lora_names": lnames})
+
+
+# ---------------------------------------------------------------------------
+# Suites
+# ---------------------------------------------------------------------------
+
+def build_suite(suite: str):
+    arts = []
+    P = PRESETS
+
+    def pruned(base, ratio):
+        return pruned_config(P[base], ratio)
+
+    if suite in ("smoke", "std"):
+        tiny = P["tiny"]
+        arts += [pretrain_artifact(tiny, b=2, s=32),
+                 sft_artifact(tiny, b=2, s=32),
+                 sft_artifact(tiny, masked=True, b=2, s=32),
+                 sft_artifact(tiny, quantized=True, b=2, s=32),
+                 eval_artifact(tiny, b=2, s=32),
+                 logits_artifact(tiny, b=2, s=32),
+                 grad_imp_artifact(tiny, b=2, s=32),
+                 pretrain_artifact(tiny, masked=True, b=2, s=32),
+                 pretrain_artifact(pruned_config(tiny, 0.5), b=2, s=32),
+                 sft_artifact(pruned_config(tiny, 0.5), b=2, s=32),
+                 sft_artifact(pruned_config(tiny, 0.5), quantized=True, b=2, s=32),
+                 eval_artifact(pruned_config(tiny, 0.5), b=2, s=32),
+                 kernel_demo_artifact(True),
+                 kernel_demo_artifact(False)]
+    if suite == "std":
+        # LLaMA-2 proxy herd --------------------------------------------
+        for nm in ("l7b", "l13b", "l70b"):
+            cfg = P[nm]
+            arts += [pretrain_artifact(cfg), sft_artifact(cfg),
+                     eval_artifact(cfg), logits_artifact(cfg)]
+        arts += [grad_imp_artifact(P["l13b"]), grad_imp_artifact(P["l70b"])]
+        # 13B: structured pruned (rand/stru share shapes) + masked variants
+        c13p = pruned("l13b", 0.65)
+        arts += [pretrain_artifact(c13p), sft_artifact(c13p),
+                 eval_artifact(c13p), logits_artifact(c13p)]
+        arts += [sft_artifact(P["l13b"], masked=True),
+                 pretrain_artifact(P["l13b"], masked=True)]
+        # 70B: reduction-ratio sweep (fig7/8) + QLoRAM
+        for ratio in (0.65, 0.75, 0.85, 0.95):
+            cp = pruned("l70b", ratio)
+            arts += [pretrain_artifact(cp), sft_artifact(cp, quantized=True),
+                     eval_artifact(cp)]
+        # LLaMA-3.1 proxy herd (fig5, tab7)
+        for nm in ("l8b", "l70b3"):
+            cfg = P[nm]
+            arts += [pretrain_artifact(cfg), sft_artifact(cfg),
+                     eval_artifact(cfg), logits_artifact(cfg)]
+        arts += [grad_imp_artifact(P["l70b3"])]
+        c703p = pruned("l70b3", 0.85)
+        arts += [pretrain_artifact(c703p), sft_artifact(c703p, quantized=True),
+                 eval_artifact(c703p)]
+        # end-to-end ~100M driver
+        e2e = P["e2e100m"]
+        arts += [pretrain_artifact(e2e, b=4, s=128),
+                 eval_artifact(e2e, b=4, s=128)]
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--suite", default="std", choices=["std", "smoke"])
+    ap.add_argument("--only", default=None, help="regex filter on names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    arts = build_suite(args.suite)
+    if args.only:
+        pat = re.compile(args.only)
+        arts = [a for a in arts if pat.search(a.name)]
+    if args.list:
+        for a in arts:
+            print(a.name)
+        return
+    os.makedirs(args.out_dir, exist_ok=True)
+    print(f"emitting {len(arts)} artifacts to {args.out_dir}", flush=True)
+    t0 = time.time()
+    for a in arts:
+        a.emit(args.out_dir)
+    # suite-level manifest for the Rust registry
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"suite": args.suite,
+                   "artifacts": sorted(a.name for a in arts)}, f, indent=1)
+    print(f"done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

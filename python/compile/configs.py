@@ -1,0 +1,125 @@
+"""Model configuration presets shared between the L2 compile path and the
+Rust coordinator (exported as JSON next to each artifact).
+
+The proxy family mirrors the LLaMA recipe (RMSNorm, SwiGLU, RoPE, optional
+GQA) at a scale trainable on this single-core CPU testbed; the *real*
+LLaMA-2/3.1 shape specs used for analytic memory accounting live on the Rust
+side (rust/src/memory/), not here.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List, Optional
+
+
+@dataclass
+class ModelConfig:
+    name: str
+    vocab_size: int = 512
+    d_model: int = 256
+    n_layers: int = 8
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    d_ff: int = 688
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    # LoRA
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    lora_lm_head: bool = True  # LLaMA-3 proxies exclude lm_head LoRA (paper §B)
+    # Structured pruning plan: per-layer (n_heads_kept, n_kv_heads_kept, d_ff_kept).
+    # None = unpruned (full) model.
+    layer_plan: Optional[List[List[int]]] = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def layer_shapes(self, i: int):
+        """(n_heads, n_kv_heads, d_ff) for layer i under the pruning plan."""
+        if self.layer_plan is None:
+            return (self.n_heads, self.n_kv_heads, self.d_ff)
+        h, kv, ff = self.layer_plan[i]
+        return (h, kv, ff)
+
+    def param_count(self) -> int:
+        n = self.vocab_size * self.d_model  # embed
+        hd = self.head_dim
+        for i in range(self.n_layers):
+            h, kv, ff = self.layer_shapes(i)
+            n += self.d_model * (h * hd)          # wq
+            n += self.d_model * (kv * hd) * 2     # wk, wv
+            n += (h * hd) * self.d_model          # wo
+            n += self.d_model * ff * 2            # w_up, w_gate
+            n += ff * self.d_model                # w_down
+            n += self.d_model * 2                 # two rmsnorm scales
+        n += self.d_model                          # final norm
+        n += self.d_model * self.vocab_size        # lm_head
+        return n
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Proxy presets (roles documented in DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def _mk(name, d, layers, heads, kv, ff, **kw) -> ModelConfig:
+    return ModelConfig(name=name, d_model=d, n_layers=layers, n_heads=heads,
+                       n_kv_heads=kv, d_ff=ff, **kw)
+
+
+PRESETS = {
+    # LLaMA-2 proxy herd
+    "l7b":  _mk("l7b", 192, 6, 6, 6, 512),
+    "l13b": _mk("l13b", 256, 8, 8, 8, 688),
+    "l70b": _mk("l70b", 384, 12, 12, 4, 1024),
+    # LLaMA-3.1 proxy herd (no lm_head LoRA)
+    "l8b":  _mk("l8b", 224, 7, 8, 4, 608, lora_lm_head=False),
+    "l70b3": _mk("l70b3", 416, 13, 13, 13, 1104, lora_lm_head=False),
+    # tiny CI config
+    "tiny": _mk("tiny", 64, 2, 2, 2, 160, max_seq=64),
+    # end-to-end ~100M validation driver
+    "e2e100m": _mk("e2e100m", 768, 12, 12, 12, 2048, vocab_size=512, max_seq=128),
+}
+
+
+def structured_plan(cfg: ModelConfig, ratio: float, protect_first: int,
+                    protect_last: int, head_scores=None, ff_scores=None,
+                    seed: int = 0) -> List[List[int]]:
+    """Build a per-layer kept-shape plan for structured pruning.
+
+    `ratio` is the fraction of parameters *removed* from the prunable middle
+    layers (paper's "pruning ratio"). Heads and d_ff channels are removed at
+    the same per-layer rate, mirroring LLM-Pruner's uniform block-wise setup.
+    The first `protect_first` and last `protect_last` layers are untouched.
+    Scores (if given) only reorder *which* channels are kept — counts are
+    identical for rand/stru so their reduction ratio matches (paper Tab. 4).
+    """
+    keep = 1.0 - ratio
+    plan = []
+    for i in range(cfg.n_layers):
+        if i < protect_first or i >= cfg.n_layers - protect_last:
+            plan.append([cfg.n_heads, cfg.n_kv_heads, cfg.d_ff])
+        else:
+            h = max(1, round(cfg.n_heads * keep))
+            # keep kv head count in proportion, at least 1, and divide heads
+            kv = max(1, round(cfg.n_kv_heads * keep)) if cfg.n_kv_heads != cfg.n_heads else h
+            # multiples of 16 keep NF4 block alignment (see aot.NF4_BLOCK)
+            ff = max(16, int(round(cfg.d_ff * keep / 16.0)) * 16)
+            plan.append([h, kv, ff])
+    return plan
+
+
+def pruned_config(cfg: ModelConfig, ratio: float, protect_first=None,
+                  protect_last=None, suffix="p") -> ModelConfig:
+    """Derive the pruned (train-time) config from a full config."""
+    if protect_first is None:
+        protect_first = 4 if cfg.n_layers > 8 else 2
+    if protect_last is None:
+        protect_last = 2 if cfg.n_layers > 8 else 1
+    plan = structured_plan(cfg, ratio, protect_first, protect_last)
+    out = ModelConfig(**{**cfg.to_dict(), "name": f"{cfg.name}_{suffix}{int(ratio*100)}",
+                         "layer_plan": plan})
+    return out

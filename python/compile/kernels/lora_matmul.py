@@ -1,0 +1,84 @@
+"""Fused LoRA matmul Pallas kernel: y = x @ W + scale * (x @ A) @ B.
+
+This is the projection-level hot-spot of LoRA/LoRAM training and inference
+(paper Eq. 1/4/7): every attention and MLP projection runs it. The fusion
+point is the insight worth a kernel — the low-rank update never materialises
+W + s·AB in HBM; the rank-r path rides along in registers/VMEM while the
+dense W tile streams through the MXU.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid is (s/bs, n/bn, m/bm)
+with the contraction axis innermost. Per (i, j) output tile we keep two VMEM
+scratch accumulators: the (bs, bn) output tile and the (bs, r) running x·A
+product. On the final contraction step the rank-r product is expanded
+through B and added — one extra (bs, r)x(r, bn) MXU pass per output tile,
+amortised over m/bm contraction steps.
+
+Lowered with interpret=True (CPU PJRT cannot execute Mosaic custom-calls);
+the real-TPU tile plan and VMEM budget are estimated in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+from .tiling import fit_tile
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *, scale, n_m):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    xa_ref[...] += jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_m - 1)
+    def _finish():
+        lora = jnp.dot(xa_ref[...], b_ref[...],
+                       preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bs", "bn", "bm"))
+def lora_matmul(x, w, a, b, scale: float = 1.0,
+                bs: int = 128, bn: int = 128, bm: int = 128):
+    """Fused y = x@W + scale·(x@A)@B. Shapes: x (s,m), w (m,n), a (m,r), b (r,n)."""
+    s, m = x.shape
+    n = w.shape[1]
+    r = a.shape[1]
+    bs, bn, bm = fit_tile(s, bs), fit_tile(n, bn), fit_tile(m, bm)
+    n_m = m // bm
+    grid = (s // bs, n // bn, n_m)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_m=n_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bm), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, j)),   # w
+            pl.BlockSpec((bm, r), lambda i, j, k: (k, 0)),    # a
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),    # b
+        ],
+        out_specs=pl.BlockSpec((bs, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), x.dtype),
+        # VMEM accumulators: output tile + running x·A
+        scratch_shapes=[
+            pltpu.VMEM((bs, bn), jnp.float32),
+            pltpu.VMEM((bs, r), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, a, b)
+
+
+def lora_matmul_or_ref(x, w, a, b, scale, use_pallas: bool):
+    """Dispatch used by the L2 model: Pallas kernel or the jnp oracle."""
+    if use_pallas:
+        return lora_matmul(x, w, a, b, scale=float(scale))
+    return ref.lora_matmul_ref(x, w, a, b, scale)

@@ -1,0 +1,83 @@
+"""Masked LoRA matmul Pallas kernel — the non-structured LoRAM forward.
+
+Paper Eq. 4 with deployment notes C1/C2: under semi-structured (4:8) or
+unstructured pruning the base weight keeps its shape with zeros at pruned
+positions, and the low-rank update must also be *masked* so pruned positions
+receive no update (their gradients are blocked through the same mask).
+
+    y = x @ W0^P + scale * x @ ((A·B) ∘ M)
+
+The mask couples the (m, n) geometry of A·B, so the low-rank product cannot
+stay factorised — but it never needs to hit HBM either: this kernel
+materialises (A·B)∘M one (bm, bn) VMEM tile at a time, adds it onto the
+pruned base tile, and feeds the combined tile through the MXU. HBM traffic
+is identical to a plain matmul plus the rank-r factors.
+
+Gradient note: the VJP wrt A/B applies the same mask to the upstream
+cotangent (see model.py::masked_lora_proj), implementing C2 exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+from .tiling import fit_tile
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, m_ref, o_ref, acc_ref, *, scale, n_m):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Materialise the masked low-rank tile in VMEM and fuse into the base tile.
+    dw = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    w_eff = w_ref[...].astype(jnp.float32) + scale * dw * m_ref[...]
+    acc_ref[...] += jnp.dot(x_ref[...], w_eff,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_m - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bs", "bn", "bm"))
+def masked_lora_matmul(x, w_p, a, b, mask, scale: float = 1.0,
+                       bs: int = 128, bn: int = 128, bm: int = 128):
+    """y = x@W0^P + scale·x@((A·B)∘M).
+
+    x (s, m); w_p (m, n) pruned base (zeros at pruned entries);
+    a (m, r); b (r, n); mask (m, n) in {0, 1}.
+    """
+    s, m = x.shape
+    n = w_p.shape[1]
+    r = a.shape[1]
+    bs, bn, bm = fit_tile(s, bs), fit_tile(n, bn), fit_tile(m, bm)
+    n_m = m // bm
+    grid = (s // bs, n // bn, n_m)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_m=n_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bm), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, j)),   # w_p
+            pl.BlockSpec((bm, r), lambda i, j, k: (k, 0)),    # a
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),    # b
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, j)),   # mask
+        ],
+        out_specs=pl.BlockSpec((bs, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bs, bn), jnp.float32)],
+        interpret=True,
+    )(x, w_p, a, b, mask)
+
+
+def masked_lora_matmul_or_ref(x, w_p, a, b, mask, scale, use_pallas: bool):
+    if use_pallas:
+        return masked_lora_matmul(x, w_p, a, b, mask, scale=float(scale))
+    return ref.masked_lora_matmul_ref(x, w_p, a, b, mask, scale)

@@ -1,0 +1,83 @@
+"""NF4 dequantise-and-matmul Pallas kernel — the QLoRAM base-weight path.
+
+Paper Eq. 9: during QLoRAM training the pruned base weight is stored in NF4
+(4-bit NormalFloat, blockwise absmax scaling) and dequantised on the fly in
+the forward pass:  y = x @ Q⁻¹(W0^P) (+ the LoRA path, fused upstream).
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation): QLoRA's CUDA kernel
+dequantises 4-bit codes in registers ahead of the tensor-core MMA. Here the
+(bm, bn) code tile and its (bm, bn/block) absmax tile ride into VMEM
+together via paired BlockSpecs; the VPU does the codebook gather + scale and
+hands a dense f32 tile to the MXU. The codebook (16 floats) lives in SMEM as
+a constant. Codes are carried as int32 in the artifact (the xla 0.1.6
+literal bridge has no u4/u8 path) — *storage* accounting uses the packed
+4-bit size, see rust/src/quant/.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+from .tiling import fit_tile, fit_tile_multiple
+
+
+def _kernel(cb_ref, x_ref, c_ref, s_ref, o_ref, acc_ref, *, block, n_m):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = c_ref[...]
+    # Codebook gather on the VPU; the 16-entry table arrives as a dedicated
+    # (replicated) input block rather than a captured constant.
+    w = cb_ref[...][codes]
+    bm, bn = codes.shape
+    scale = jnp.repeat(s_ref[...], block, axis=1)
+    acc_ref[...] += jnp.dot(x_ref[...], w * scale,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_m - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bs", "bn", "bm"))
+def nf4_dequant_matmul(x, codes, absmax, block: int = 64,
+                       bs: int = 128, bn: int = 128, bm: int = 128):
+    """y = x @ dequant_nf4(codes, absmax).
+
+    x (s, m); codes (m, n) int32 in [0,16); absmax (m, n//block).
+    bn must be a multiple of `block` so absmax tiles align.
+    """
+    s, m = x.shape
+    n = codes.shape[1]
+    bs, bm = fit_tile(s, bs), fit_tile(m, bm)
+    bn = fit_tile_multiple(n, bn, block)   # absmax tiles must stay aligned
+    assert n % bn == 0 and bn % block == 0
+    n_m = m // bm
+    grid = (s // bs, n // bn, n_m)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block, n_m=n_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((16,), lambda i, j, k: (0,)),                  # codebook
+            pl.BlockSpec((bs, bm), lambda i, j, k: (i, k)),             # x
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, j)),             # codes
+            pl.BlockSpec((bm, bn // block), lambda i, j, k: (k, j)),    # absmax
+        ],
+        out_specs=pl.BlockSpec((bs, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bs, bn), jnp.float32)],
+        interpret=True,
+    )(ref.NF4_CODEBOOK, x, codes, absmax)
+
+
+def nf4_dequant_matmul_or_ref(x, codes, absmax, block, use_pallas: bool):
+    if use_pallas:
+        return nf4_dequant_matmul(x, codes, absmax, block=block)
+    return ref.nf4_dequant_matmul_ref(x, codes, absmax, block)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is checked against its oracle by `python/tests/test_kernels.py` (hypothesis
+shape/dtype sweeps + fixed seeds). They are also the implementations used by
+the *fast path* artifacts (DESIGN.md §5): under `interpret=True`, Pallas
+kernels lower to per-grid-point loops that are slow on the CPU PJRT backend,
+so AOT defaults to these fused-by-XLA formulations and emits kernel-path
+variants for validation benches.
+"""
+
+import jax.numpy as jnp
+
+# The 16-entry NF4 codebook (QLoRA, Dettmers et al. 2023): quantiles of a
+# standard normal, normalised so the extreme codes are ±1.
+NF4_CODEBOOK = jnp.array(
+    [-1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+     -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+     0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+     0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+     0.7229568362236023, 1.0],
+    dtype=jnp.float32,
+)
+
+
+def lora_matmul_ref(x, w, a, b, scale):
+    """y = x @ w + scale * (x @ a) @ b.
+
+    x: (s, m); w: (m, n); a: (m, r); b: (r, n).
+    """
+    return x @ w + scale * ((x @ a) @ b)
+
+
+def masked_lora_matmul_ref(x, w_p, a, b, mask, scale):
+    """Non-structured LoRAM forward (paper Eq. 4 with C1/C2):
+
+    y = x @ W0^P + scale * x @ ((A B) ∘ M)
+
+    w_p already contains zeros at pruned positions; the mask is applied to
+    the materialised low-rank product so pruned positions receive no update.
+    """
+    dw = (a @ b) * mask
+    return x @ w_p + scale * (x @ dw)
+
+
+def nf4_dequant_ref(codes, absmax, block: int):
+    """Blockwise NF4 dequantisation along the last axis.
+
+    codes: (m, n) int32 in [0, 16); absmax: (m, n // block) per-block scale.
+    """
+    w = NF4_CODEBOOK[codes]
+    scale = jnp.repeat(absmax, block, axis=1)
+    return w * scale
+
+
+def nf4_dequant_matmul_ref(x, codes, absmax, block: int):
+    """y = x @ dequant_nf4(codes, absmax)  (QLoRAM base-weight path, Eq. 9)."""
+    return x @ nf4_dequant_ref(codes, absmax, block)
+
+
+def nf4_quantize_ref(w, block: int):
+    """Blockwise NF4 quantisation (oracle for the Rust quantizer too).
+
+    Returns (codes int32 (m, n), absmax (m, n//block)).
+    """
+    m, n = w.shape
+    assert n % block == 0
+    blocks = w.reshape(m, n // block, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    safe = jnp.where(absmax == 0, 1.0, absmax)
+    normed = blocks / safe[..., None]
+    dists = jnp.abs(normed[..., None] - NF4_CODEBOOK[None, None, None, :])
+    codes = jnp.argmin(dists, axis=-1).astype(jnp.int32)
+    return codes.reshape(m, n), absmax

@@ -1,0 +1,31 @@
+"""Tile-size selection shared by the Pallas kernels.
+
+Pallas BlockSpecs here require tiles that evenly divide the array dims (no
+masking epilogue is implemented). `fit_tile` picks the largest divisor of
+`dim` that is <= `target`, preferring multiples of `align` (the TPU lane
+granule, 8 sublanes x 128 lanes for f32 — we align to 8 and let the target
+default of 128 capture the lane dimension)."""
+
+
+def fit_tile(dim: int, target: int, align: int = 8) -> int:
+    target = min(target, dim)
+    best = 1
+    for t in range(1, target + 1):
+        if dim % t == 0:
+            if t % align == 0:
+                best = max(best, t)
+            elif best % align != 0:
+                best = max(best, t)
+    # prefer aligned divisors when one exists
+    aligned = [t for t in range(align, target + 1, align)
+               if dim % t == 0]
+    return max(aligned) if aligned else best
+
+
+def fit_tile_multiple(dim: int, target: int, multiple: int) -> int:
+    """Largest divisor of `dim` <= target that is a multiple of `multiple`."""
+    target = min(target, dim)
+    for t in range(target - target % multiple, 0, -multiple):
+        if dim % t == 0:
+            return t
+    return multiple if dim % multiple == 0 else dim

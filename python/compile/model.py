@@ -1,0 +1,468 @@
+"""L2: the LLaMA-architecture model with LoRA/LoRAM adapters, in JAX.
+
+This module is build-time only. `aot.py` lowers the functions defined here
+to HLO text artifacts; the Rust coordinator (L3) executes them via PJRT and
+never imports Python.
+
+Parameter layout
+----------------
+Parameters travel between Rust and the artifacts as a *flat, ordered list*
+of tensors. The canonical order is defined by `param_names(cfg)` /
+`lora_names(cfg)` and exported in every artifact's `.meta.json`; Rust packs
+its `TensorStore` into PJRT buffers in exactly that order.
+
+Weight convention: every projection is stored as (in_features, out_features)
+and applied as `y = x @ W` — matching the L1 kernels.
+
+LoRA convention (paper §2.1, W_Δ = B·A there): here `a` is the (in, r)
+down-projection (normal init) and `b` the (r, out) up-projection (zero
+init), so W_Δ = a @ b and y += (alpha/r) · (x@a)@b. `recovery` (Eq. 5/6) is
+performed host-side in Rust by scattering pruned-shape a/b into full-shape
+zeros; the same `logits`/`eval_loss` artifacts then serve base, LoRA and
+recovered-LoRAM inference.
+"""
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.lora_matmul import lora_matmul_or_ref
+from .kernels.masked_lora import masked_lora_matmul_or_ref
+from .kernels.nf4 import nf4_dequant_matmul_or_ref
+from .kernels import ref as kref
+
+# Projections that receive LoRA adapters (paper §2.2: q,k,v,o + gate,up,down
+# [+ lm_head for the LLaMA-2 family]).
+LAYER_PROJ = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+# Projections that are NF4-quantised under QLoRAM (linear layers only;
+# embeddings and norms stay in full precision, as in QLoRA).
+QUANT_PROJ = LAYER_PROJ
+
+
+# ---------------------------------------------------------------------------
+# Parameter naming / shapes
+# ---------------------------------------------------------------------------
+
+def layer_proj_shapes(cfg: ModelConfig, i: int) -> Dict[str, tuple]:
+    h, kv, ff = cfg.layer_shapes(i)
+    hd = cfg.head_dim
+    d = cfg.d_model
+    return {
+        "wq": (d, h * hd),
+        "wk": (d, kv * hd),
+        "wv": (d, kv * hd),
+        "wo": (h * hd, d),
+        "w_gate": (d, ff),
+        "w_up": (d, ff),
+        "w_down": (ff, d),
+    }
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """name -> shape for all base parameters, in canonical order."""
+    out: Dict[str, tuple] = {}
+    out["embed"] = (cfg.vocab_size, cfg.d_model)
+    for i in range(cfg.n_layers):
+        out[f"l{i}.attn_norm"] = (cfg.d_model,)
+        for k, shp in layer_proj_shapes(cfg, i).items():
+            out[f"l{i}.{k}"] = shp
+        out[f"l{i}.mlp_norm"] = (cfg.d_model,)
+    out["final_norm"] = (cfg.d_model,)
+    out["lm_head"] = (cfg.d_model, cfg.vocab_size)
+    return out
+
+
+def lora_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """name -> shape for LoRA a/b factors, in canonical order."""
+    r = cfg.lora_rank
+    out: Dict[str, tuple] = {}
+    for i in range(cfg.n_layers):
+        for k, (m, n) in layer_proj_shapes(cfg, i).items():
+            out[f"l{i}.{k}.lora_a"] = (m, r)
+            out[f"l{i}.{k}.lora_b"] = (r, n)
+    if cfg.lora_lm_head:
+        out["lm_head.lora_a"] = (cfg.d_model, r)
+        out["lm_head.lora_b"] = (r, cfg.vocab_size)
+    return out
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    return list(param_shapes(cfg).keys())
+
+
+def lora_names(cfg: ModelConfig) -> List[str]:
+    return list(lora_shapes(cfg).keys())
+
+
+def mask_names(cfg: ModelConfig) -> List[str]:
+    """Masked (non-structured) variants carry one {0,1} mask per projection."""
+    out = []
+    for i in range(cfg.n_layers):
+        for k in LAYER_PROJ:
+            out.append(f"l{i}.{k}.mask")
+    return out
+
+
+def quant_names(cfg: ModelConfig) -> List[str]:
+    """QLoRAM: projection weights are replaced by (codes, absmax) pairs."""
+    out = []
+    for i in range(cfg.n_layers):
+        for k in QUANT_PROJ:
+            out.append(f"l{i}.{k}.codes")
+            out.append(f"l{i}.{k}.absmax")
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    """Scaled-normal init (GPT-2 style residual scaling on wo/w_down)."""
+    shapes = param_shapes(cfg)
+    params = {}
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    keys = jax.random.split(key, len(shapes))
+    for (name, shp), k in zip(shapes.items(), keys):
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shp, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith(".wo") or name.endswith(".w_down"):
+                std = 0.02 * resid_scale
+            params[name] = std * jax.random.normal(k, shp, jnp.float32)
+    return params
+
+
+def init_lora(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    shapes = lora_shapes(cfg)
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for (name, shp), k in zip(shapes.items(), keys):
+        if name.endswith("lora_a"):
+            out[name] = jax.random.normal(k, shp, jnp.float32) / jnp.sqrt(shp[0])
+        else:
+            out[name] = jnp.zeros(shp, jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x, theta):
+    """Rotary embeddings. x: (B, S, H, hd)."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(s, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]            # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+class ProjCtx:
+    """How a projection multiplies its input — dense, masked, or quantised.
+
+    One ProjCtx per artifact variant; chooses the L1 kernel (or its oracle)
+    per projection and wires LoRA through the C2 gradient mask when needed.
+    """
+
+    def __init__(self, params, lora=None, masks=None, quant=None,
+                 cfg: ModelConfig = None, use_pallas: bool = False,
+                 nf4_block: int = 16):
+        self.p = params
+        self.lora = lora or {}
+        self.masks = masks or {}
+        self.quant = quant or {}
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+        self.nf4_block = nf4_block
+        self.scale = cfg.lora_alpha / cfg.lora_rank
+
+    def __call__(self, x, name):
+        """x: (..., in) -> (..., out) for projection `name` (e.g. 'l3.wq')."""
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        a = self.lora.get(f"{name}.lora_a")
+        mask = self.masks.get(f"{name}.mask")
+        codes = self.quant.get(f"{name}.codes")
+        if codes is not None:
+            absmax = self.quant[f"{name}.absmax"]
+            y = nf4_dequant_matmul_or_ref(x2, codes, absmax, self.nf4_block,
+                                          self.use_pallas)
+            if a is not None:
+                b = self.lora[f"{name}.lora_b"]
+                if mask is not None:
+                    y = y + self.scale * (x2 @ ((a @ b) * mask))
+                else:
+                    y = y + self.scale * ((x2 @ a) @ b)
+        else:
+            w = self.p[name]
+            if a is not None:
+                b = self.lora[f"{name}.lora_b"]
+                if mask is not None:
+                    y = masked_lora_matmul_or_ref(x2, w, a, b, mask,
+                                                  self.scale, self.use_pallas)
+                else:
+                    y = lora_matmul_or_ref(x2, w, a, b, self.scale,
+                                           self.use_pallas)
+            else:
+                y = x2 @ w
+        return y.reshape(*lead, y.shape[-1])
+
+
+def forward(cfg: ModelConfig, proj: ProjCtx, tokens):
+    """tokens (B, S) int32 -> logits (B, S, V)."""
+    p = proj.p
+    x = p["embed"][tokens]                          # (B, S, D)
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    for i in range(cfg.n_layers):
+        h, kv, _ = cfg.layer_shapes(i)
+        xin = rmsnorm(x, p[f"l{i}.attn_norm"], cfg.rms_eps)
+        q = proj(xin, f"l{i}.wq").reshape(b, s, h, hd)
+        k = proj(xin, f"l{i}.wk").reshape(b, s, kv, hd)
+        v = proj(xin, f"l{i}.wv").reshape(b, s, kv, hd)
+        q = rope(q, cfg.rope_theta)
+        k = rope(k, cfg.rope_theta)
+        if kv != h:
+            rep = h // kv if h % kv == 0 else 1
+            if kv * rep != h:
+                # pruned head counts may not divide; tile then trim
+                k = jnp.tile(k, (1, 1, (h + kv - 1) // kv, 1))[:, :, :h]
+                v = jnp.tile(v, (1, 1, (h + kv - 1) // kv, 1))[:, :, :h]
+            else:
+                k = jnp.repeat(k, rep, axis=2)
+                v = jnp.repeat(v, rep, axis=2)
+        att = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", att, v).reshape(b, s, h * hd)
+        x = x + proj(out, f"l{i}.wo")
+        xin = rmsnorm(x, p[f"l{i}.mlp_norm"], cfg.rms_eps)
+        gate = proj(xin, f"l{i}.w_gate")
+        up = proj(xin, f"l{i}.w_up")
+        x = x + proj(jax.nn.silu(gate) * up, f"l{i}.w_down")
+    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+    if proj.lora.get("lm_head.lora_a") is not None:
+        x2 = x.reshape(-1, d)
+        logits = lora_matmul_or_ref(
+            x2, p["lm_head"], proj.lora["lm_head.lora_a"],
+            proj.lora["lm_head.lora_b"], proj.scale, proj.use_pallas)
+        logits = logits.reshape(b, s, -1)
+    else:
+        logits = x @ p["lm_head"]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def token_nll(logits, targets, loss_mask):
+    """Per-sequence (sum NLL, token count). logits (B,S,V); targets (B,S)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    nll = nll * loss_mask
+    return nll.sum(axis=-1), loss_mask.sum(axis=-1)
+
+
+def mean_loss(logits, targets, loss_mask):
+    s, c = token_nll(logits, targets, loss_mask)
+    return s.sum() / jnp.maximum(c.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled; optax is not available in this image)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(grads, params, m, v, step, lr):
+    """One Adam step over aligned dicts. `step` is the 1-based step count."""
+    b1t = ADAM_B1 ** step
+    b2t = ADAM_B2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = ADAM_B1 * m[k] + (1 - ADAM_B1) * g
+        vk = ADAM_B2 * v[k] + (1 - ADAM_B2) * g * g
+        mhat = mk / (1 - b1t)
+        vhat = vk / (1 - b2t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Artifact entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_init_fn(cfg: ModelConfig):
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        kp, kl = jax.random.split(key)
+        params = init_params(cfg, kp)
+        lora = init_lora(cfg, kl)
+        return (tuple(params[k] for k in param_names(cfg))
+                + tuple(lora[k] for k in lora_names(cfg)))
+    return init_fn
+
+
+def make_pretrain_step(cfg: ModelConfig, masked=False, use_pallas=False):
+    """Full-parameter LM step: pre-training *and* alignment (Eq. 8).
+
+    With `masked=True` (non-structured LoRAM alignment) the projection
+    gradients are multiplied by the pruning mask so pruned positions stay
+    exactly zero through continual pre-training.
+    """
+    pnames = param_names(cfg)
+    mnames = mask_names(cfg) if masked else []
+
+    def step_fn(step, lr, tokens, loss_mask, *flat):
+        n = len(pnames)
+        params = dict(zip(pnames, flat[:n]))
+        m = dict(zip(pnames, flat[n:2 * n]))
+        v = dict(zip(pnames, flat[2 * n:3 * n]))
+        masks = dict(zip(mnames, flat[3 * n:3 * n + len(mnames)]))
+
+        def loss_fn(ps):
+            proj = ProjCtx(ps, cfg=cfg, use_pallas=use_pallas)
+            logits = forward(cfg, proj, tokens[:, :-1])
+            return mean_loss(logits, tokens[:, 1:], loss_mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if masked:
+            for key, msk in masks.items():
+                wname = key[:-len(".mask")]
+                grads[wname] = grads[wname] * msk
+        new_p, new_m, new_v = adam_update(grads, params, m, v, step, lr)
+        return ((loss,)
+                + tuple(new_p[k] for k in pnames)
+                + tuple(new_m[k] for k in pnames)
+                + tuple(new_v[k] for k in pnames))
+    return step_fn, pnames, mnames
+
+
+def make_sft_step(cfg: ModelConfig, masked=False, quantized=False,
+                  use_pallas=False, nf4_block=16):
+    """LoRA SFT step: Adam on a/b only; base frozen (dense, masked or NF4)."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg)
+    mnames = mask_names(cfg) if masked else []
+    qnames = quant_names(cfg) if quantized else []
+    if quantized:
+        pnames = [p for p in pnames
+                  if not any(p.endswith("." + q) for q in QUANT_PROJ)]
+
+    def step_fn(step, lr, tokens, loss_mask, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        quant = dict(zip(qnames, flat[i:i + len(qnames)])); i += len(qnames)
+        masks = dict(zip(mnames, flat[i:i + len(mnames)])); i += len(mnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        m = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        v = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+
+        def loss_fn(lr_params):
+            proj = ProjCtx(params, lora=lr_params, masks=masks, quant=quant,
+                           cfg=cfg, use_pallas=use_pallas, nf4_block=nf4_block)
+            logits = forward(cfg, proj, tokens[:, :-1])
+            return mean_loss(logits, tokens[:, 1:], loss_mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(lora)
+        new_l, new_m, new_v = adam_update(grads, lora, m, v, step, lr)
+        return ((loss,)
+                + tuple(new_l[k] for k in lnames)
+                + tuple(new_m[k] for k in lnames)
+                + tuple(new_v[k] for k in lnames))
+    return step_fn, pnames, qnames, mnames, lnames
+
+
+def make_eval_loss(cfg: ModelConfig, with_lora=True, use_pallas=False):
+    """Per-sequence (sum NLL, count) — perplexity and option scoring."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg) if with_lora else []
+
+    def eval_fn(tokens, loss_mask, *flat):
+        params = dict(zip(pnames, flat[:len(pnames)]))
+        lora = dict(zip(lnames, flat[len(pnames):]))
+        proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        logits = forward(cfg, proj, tokens[:, :-1])
+        s, c = token_nll(logits, tokens[:, 1:], loss_mask)
+        return (s, c)
+    return eval_fn, pnames, lnames
+
+
+def make_logits(cfg: ModelConfig, with_lora=True, use_pallas=False):
+    """Full-sequence logits; Rust slices positions for decoding/sampling."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg) if with_lora else []
+
+    def logits_fn(tokens, *flat):
+        params = dict(zip(pnames, flat[:len(pnames)]))
+        lora = dict(zip(lnames, flat[len(pnames):]))
+        proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        return (forward(cfg, proj, tokens),)
+    return logits_fn, pnames, lnames
+
+
+def make_grad_importance(cfg: ModelConfig):
+    """LLM-Pruner-style first-order importance on a calibration batch.
+
+    Returns per-layer head importance (L, n_heads) and per-layer MLP channel
+    importance (L, d_ff), aggregated as Σ|w·∂w| over each head/channel group.
+    Only valid for the *full* (unpruned) config.
+    """
+    pnames = param_names(cfg)
+    hd = cfg.head_dim
+
+    def imp_fn(tokens, loss_mask, *flat):
+        params = dict(zip(pnames, flat))
+
+        def loss_fn(ps):
+            proj = ProjCtx(ps, cfg=cfg)
+            logits = forward(cfg, proj, tokens[:, :-1])
+            return mean_loss(logits, tokens[:, 1:], loss_mask)
+
+        grads = jax.grad(loss_fn)(params)
+        head_imp, ff_imp = [], []
+        for i in range(cfg.n_layers):
+            acc = jnp.zeros((cfg.n_heads,), jnp.float32)
+            for nm in ("wq", "wo"):
+                w = params[f"l{i}.{nm}"]
+                g = grads[f"l{i}.{nm}"]
+                s = jnp.abs(w * g)
+                if nm == "wq":
+                    s = s.reshape(cfg.d_model, cfg.n_heads, hd).sum((0, 2))
+                else:
+                    s = s.reshape(cfg.n_heads, hd, cfg.d_model).sum((1, 2))
+                acc = acc + s
+            # kv projections score kv-head groups; spread to query heads
+            kvacc = jnp.zeros((cfg.n_kv_heads,), jnp.float32)
+            for nm in ("wk", "wv"):
+                w = params[f"l{i}.{nm}"]
+                g = grads[f"l{i}.{nm}"]
+                s = jnp.abs(w * g).reshape(cfg.d_model, cfg.n_kv_heads, hd)
+                kvacc = kvacc + s.sum((0, 2))
+            rep = cfg.n_heads // cfg.n_kv_heads
+            acc = acc + jnp.repeat(kvacc, rep)
+            head_imp.append(acc)
+            f = jnp.zeros((cfg.d_ff,), jnp.float32)
+            for nm, ax in (("w_gate", 0), ("w_up", 0), ("w_down", 1)):
+                w = params[f"l{i}.{nm}"]
+                g = grads[f"l{i}.{nm}"]
+                f = f + jnp.abs(w * g).sum(axis=ax)
+            ff_imp.append(f)
+        return (jnp.stack(head_imp), jnp.stack(ff_imp))
+    return imp_fn, pnames

@@ -1,0 +1,173 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps the shape/scale space; fixed-seed cases pin the numerics.
+Tolerances are f32 matmul accumulation tolerances (kernels accumulate in
+f32 scratch, oracles accumulate via XLA dot — bit-identical is not expected).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lora_matmul import lora_matmul
+from compile.kernels.masked_lora import masked_lora_matmul
+from compile.kernels.nf4 import nf4_dequant_matmul
+from compile.kernels.tiling import fit_tile, fit_tile_multiple
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# tiling
+# ---------------------------------------------------------------------------
+
+@given(dim=st.integers(1, 512), target=st.integers(1, 256))
+@settings(max_examples=200, deadline=None)
+def test_fit_tile_divides(dim, target):
+    t = fit_tile(dim, target)
+    assert 1 <= t <= max(dim, 1)
+    assert dim % t == 0
+    assert t <= max(target, 1) or t == 1
+
+
+@given(dim=st.integers(1, 64).map(lambda k: k * 16),
+       target=st.integers(16, 256))
+@settings(max_examples=100, deadline=None)
+def test_fit_tile_multiple_divides(dim, target):
+    t = fit_tile_multiple(dim, target, 16)
+    assert dim % t == 0 and t % 16 == 0
+
+
+# ---------------------------------------------------------------------------
+# lora_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,m,n,r,scale", [
+    (8, 16, 24, 4, 1.0),
+    (16, 32, 48, 8, 2.0),
+    (64, 64, 160, 8, 0.5),   # non-pow2 n (tiny d_ff)
+    (1, 16, 16, 1, 3.0),
+])
+def test_lora_matmul_fixed(s, m, n, r, scale):
+    rng = np.random.default_rng(42)
+    x, w = _rand(rng, s, m), _rand(rng, m, n)
+    a, b = _rand(rng, m, r), _rand(rng, r, n)
+    got = lora_matmul(x, w, a, b, scale=scale, bs=8, bn=16, bm=16)
+    want = ref.lora_matmul_ref(x, w, a, b, scale)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@given(s=st.sampled_from([1, 4, 8, 32]),
+       m=st.sampled_from([8, 16, 48, 64]),
+       n=st.sampled_from([8, 16, 80, 128]),
+       r=st.sampled_from([1, 2, 8]),
+       scale=st.floats(0.0, 4.0),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_lora_matmul_sweep(s, m, n, r, scale, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, s, m), _rand(rng, m, n)
+    a, b = _rand(rng, m, r), _rand(rng, r, n)
+    got = lora_matmul(x, w, a, b, scale=scale, bs=16, bn=32, bm=16)
+    want = ref.lora_matmul_ref(x, w, a, b, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_lora_matmul_zero_b_is_base_matmul():
+    """LoRA invariant: with b = 0 the fused kernel equals the base matmul."""
+    rng = np.random.default_rng(7)
+    x, w, a = _rand(rng, 8, 32), _rand(rng, 32, 64), _rand(rng, 32, 8)
+    b = jnp.zeros((8, 64), jnp.float32)
+    got = lora_matmul(x, w, a, b, scale=2.0)
+    np.testing.assert_allclose(got, x @ w, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# masked_lora_matmul
+# ---------------------------------------------------------------------------
+
+@given(s=st.sampled_from([4, 8]), m=st.sampled_from([16, 32]),
+       n=st.sampled_from([16, 64]), r=st.sampled_from([2, 8]),
+       density=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_masked_lora_sweep(s, m, n, r, density, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, s, m), _rand(rng, m, n)
+    a, b = _rand(rng, m, r), _rand(rng, r, n)
+    mask = jnp.asarray(rng.random((m, n)) < density, jnp.float32)
+    wp = w * mask
+    got = masked_lora_matmul(x, wp, a, b, mask, scale=1.5, bs=8, bn=16, bm=16)
+    want = ref.masked_lora_matmul_ref(x, wp, a, b, mask, 1.5)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_masked_lora_full_mask_equals_dense():
+    """M = 1 everywhere must reduce to the dense fused kernel."""
+    rng = np.random.default_rng(3)
+    x, w = _rand(rng, 8, 32), _rand(rng, 32, 48)
+    a, b = _rand(rng, 32, 4), _rand(rng, 4, 48)
+    ones = jnp.ones((32, 48), jnp.float32)
+    got = masked_lora_matmul(x, w, a, b, ones, scale=2.0)
+    want = ref.lora_matmul_ref(x, w, a, b, 2.0)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_masked_lora_zero_mask_kills_everything():
+    """M = 0 everywhere: pruned base (zeros) + fully-masked update = 0."""
+    rng = np.random.default_rng(4)
+    x = _rand(rng, 8, 32)
+    zeros = jnp.zeros((32, 48), jnp.float32)
+    a, b = _rand(rng, 32, 4), _rand(rng, 4, 48)
+    got = masked_lora_matmul(x, zeros, a, b, zeros, scale=2.0)
+    np.testing.assert_allclose(got, jnp.zeros((8, 48)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# NF4
+# ---------------------------------------------------------------------------
+
+def test_nf4_quantize_roundtrip_error_bounded():
+    """Blockwise NF4: |w - dq(q(w))| <= absmax * max codebook gap / 2."""
+    rng = np.random.default_rng(5)
+    w = _rand(rng, 32, 128)
+    codes, absmax = ref.nf4_quantize_ref(w, 16)
+    wd = ref.nf4_dequant_ref(codes, absmax, 16)
+    gaps = np.diff(np.asarray(ref.NF4_CODEBOOK))
+    bound = np.repeat(np.asarray(absmax), 16, axis=1) * (gaps.max() / 2 + 1e-6)
+    assert np.all(np.abs(np.asarray(wd - w)) <= bound)
+
+
+def test_nf4_extremes_are_exact():
+    """Block extreme |max| elements map to codes 0/15 and round-trip exactly."""
+    w = jnp.asarray([[1.0] + [0.0] * 15, [-2.0] + [0.5] * 15], jnp.float32)
+    codes, absmax = ref.nf4_quantize_ref(w, 16)
+    wd = ref.nf4_dequant_ref(codes, absmax, 16)
+    assert float(wd[0, 0]) == pytest.approx(1.0)
+    assert float(wd[1, 0]) == pytest.approx(-2.0)
+
+
+@given(s=st.sampled_from([4, 8]), m=st.sampled_from([16, 32]),
+       n=st.sampled_from([32, 64, 160]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_nf4_dequant_matmul_sweep(s, m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, s, m), _rand(rng, m, n)
+    codes, absmax = ref.nf4_quantize_ref(w, 16)
+    got = nf4_dequant_matmul(x, codes, absmax, block=16, bs=8, bn=32, bm=16)
+    want = ref.nf4_dequant_matmul_ref(x, codes, absmax, 16)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_nf4_quant_codes_in_range():
+    rng = np.random.default_rng(6)
+    w = _rand(rng, 16, 64) * 10
+    codes, absmax = ref.nf4_quantize_ref(w, 16)
+    c = np.asarray(codes)
+    assert c.min() >= 0 and c.max() <= 15
+    assert np.all(np.asarray(absmax) >= 0)

@@ -1,0 +1,313 @@
+"""L2 model correctness: shapes, losses, training dynamics, LoRAM semantics.
+
+These tests exercise the exact functions that aot.py lowers, so passing here
+means the artifacts compute the right thing (the Rust integration tests then
+check the PJRT round-trip itself).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import PRESETS, ModelConfig, pruned_config
+from compile.kernels import ref as kref
+
+CFG = PRESETS["tiny"]
+
+
+def _params(cfg, seed=0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _lora(cfg, seed=1):
+    return M.init_lora(cfg, jax.random.PRNGKey(seed))
+
+
+def _tokens(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# shapes & config plumbing
+# ---------------------------------------------------------------------------
+
+def test_param_count_matches_shapes():
+    for name, cfg in PRESETS.items():
+        total = sum(int(np.prod(s)) for s in M.param_shapes(cfg).values())
+        assert total == cfg.param_count(), name
+
+
+def test_pruned_config_shrinks_params():
+    cfg = PRESETS["l13b"]
+    p = pruned_config(cfg, 0.65)
+    assert p.param_count() < cfg.param_count()
+    # protected layers keep full shapes
+    assert p.layer_shapes(0) == (cfg.n_heads, cfg.n_kv_heads, cfg.d_ff)
+    assert p.layer_shapes(cfg.n_layers - 1) == \
+        (cfg.n_heads, cfg.n_kv_heads, cfg.d_ff)
+    # middle layers are pruned
+    mid = cfg.n_layers // 2
+    h, kv, ff = p.layer_shapes(mid)
+    assert h < cfg.n_heads and ff < cfg.d_ff
+
+
+def test_reduction_ratio_monotone_in_pruning_ratio():
+    cfg = PRESETS["l70b"]
+    counts = [pruned_config(cfg, r).param_count()
+              for r in (0.65, 0.75, 0.85, 0.95)]
+    assert counts == sorted(counts, reverse=True)
+
+
+def test_forward_shapes():
+    params = _params(CFG)
+    proj = M.ProjCtx(params, cfg=CFG)
+    toks = _tokens(CFG, 2, 16)
+    logits = M.forward(CFG, proj, toks)
+    assert logits.shape == (2, 16, CFG.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_pruned_config_shapes():
+    cfg = pruned_config(CFG, 0.5)
+    params = _params(cfg)
+    proj = M.ProjCtx(params, cfg=cfg)
+    logits = M.forward(cfg, proj, _tokens(cfg, 2, 16))
+    assert logits.shape == (2, 16, cfg.vocab_size)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = _params(CFG)
+    proj = M.ProjCtx(params, cfg=CFG)
+    t1 = _tokens(CFG, 1, 16, seed=0)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % CFG.vocab_size)
+    l1 = M.forward(CFG, proj, t1)
+    l2 = M.forward(CFG, proj, t2)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+# ---------------------------------------------------------------------------
+# LoRA semantics
+# ---------------------------------------------------------------------------
+
+def test_fresh_lora_is_identity():
+    """b initialises to zero, so fresh LoRA must not change the forward."""
+    params = _params(CFG)
+    lora = _lora(CFG)
+    toks = _tokens(CFG, 2, 16)
+    base = M.forward(CFG, M.ProjCtx(params, cfg=CFG), toks)
+    with_lora = M.forward(CFG, M.ProjCtx(params, lora=lora, cfg=CFG), toks)
+    np.testing.assert_allclose(base, with_lora, rtol=1e-6, atol=1e-6)
+
+
+def test_lora_merge_equivalence():
+    """x@(W + s·a·b) == fused LoRA path — the recovery/merge identity (Eq. 7)."""
+    cfg = CFG
+    params = _params(cfg)
+    lora = _lora(cfg)
+    # give b real values
+    lora = {k: (v if k.endswith("lora_a")
+                else jax.random.normal(jax.random.PRNGKey(9), v.shape) * 0.05)
+            for k, v in lora.items()}
+    toks = _tokens(cfg, 2, 16)
+    fused = M.forward(cfg, M.ProjCtx(params, lora=lora, cfg=cfg), toks)
+    merged = dict(params)
+    scale = cfg.lora_alpha / cfg.lora_rank
+    for i in range(cfg.n_layers):
+        for k in M.LAYER_PROJ:
+            nm = f"l{i}.{k}"
+            merged[nm] = params[nm] + scale * (
+                lora[f"{nm}.lora_a"] @ lora[f"{nm}.lora_b"])
+    merged["lm_head"] = params["lm_head"] + scale * (
+        lora["lm_head.lora_a"] @ lora["lm_head.lora_b"])
+    plain = M.forward(cfg, M.ProjCtx(merged, cfg=cfg), toks)
+    np.testing.assert_allclose(fused, plain, rtol=2e-4, atol=2e-4)
+
+
+def test_masked_lora_blocks_pruned_positions():
+    """C2: gradients w.r.t. a/b only flow through unpruned positions —
+    equivalently, the masked forward ignores updates at masked entries."""
+    cfg = CFG
+    params = _params(cfg)
+    lora = _lora(cfg)
+    rng = np.random.default_rng(0)
+    masks, mparams = {}, dict(params)
+    for i in range(cfg.n_layers):
+        for k in M.LAYER_PROJ:
+            nm = f"l{i}.{k}"
+            m = jnp.asarray(rng.integers(0, 2, params[nm].shape), jnp.float32)
+            masks[f"{nm}.mask"] = m
+            mparams[nm] = params[nm] * m
+    toks = _tokens(cfg, 2, 16)
+
+    def loss(lr):
+        proj = M.ProjCtx(mparams, lora=lr, masks=masks, cfg=cfg)
+        logits = M.forward(cfg, proj, toks[:, :-1])
+        return M.mean_loss(logits, toks[:, 1:],
+                           jnp.ones((2, 15), jnp.float32))
+
+    grads = jax.grad(loss)(lora)
+    # gradient w.r.t. a for a fully-masked projection must be zero
+    nm = "l0.wq"
+    zmask = {**masks, f"{nm}.mask": jnp.zeros_like(masks[f"{nm}.mask"])}
+
+    def loss0(lr):
+        proj = M.ProjCtx(mparams, lora=lr, masks=zmask, cfg=cfg)
+        logits = M.forward(cfg, proj, toks[:, :-1])
+        return M.mean_loss(logits, toks[:, 1:],
+                           jnp.ones((2, 15), jnp.float32))
+
+    g0 = jax.grad(loss0)(lora)
+    assert float(jnp.abs(g0[f"{nm}.lora_a"]).max()) == 0.0
+    assert float(jnp.abs(g0[f"{nm}.lora_b"]).max()) == 0.0
+    # ... but is generally nonzero under a random mask (b: fresh LoRA has
+    # b = 0, so only b receives gradient on the first step)
+    assert float(jnp.abs(grads[f"{nm}.lora_b"]).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# losses & optimiser
+# ---------------------------------------------------------------------------
+
+def test_token_nll_matches_manual():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(2, 4, 8)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, 8, (2, 4)), jnp.int32)
+    mask = jnp.ones((2, 4), jnp.float32)
+    s, c = M.token_nll(logits, targets, mask)
+    logp = np.log(np.exp(logits) / np.exp(logits).sum(-1, keepdims=True))
+    want = -np.take_along_axis(logp, np.asarray(targets)[..., None],
+                               axis=-1)[..., 0].sum(-1)
+    np.testing.assert_allclose(s, want, rtol=1e-5)
+    np.testing.assert_allclose(c, [4.0, 4.0])
+
+
+def test_loss_mask_excludes_tokens():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, 8, (1, 4)), jnp.int32)
+    m1 = jnp.asarray([[1, 1, 0, 0]], jnp.float32)
+    s1, c1 = M.token_nll(logits, targets, m1)
+    sfull, _ = M.token_nll(logits, targets, jnp.ones((1, 4), jnp.float32))
+    assert float(s1[0]) < float(sfull[0])
+    assert float(c1[0]) == 2.0
+
+
+def test_adam_decreases_loss_pretrain():
+    """A few full-param steps on a fixed batch must reduce the loss."""
+    cfg = CFG
+    fn, pnames, _ = M.make_pretrain_step(cfg)
+    params = _params(cfg)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    toks = _tokens(cfg, 2, 17)
+    mask = jnp.ones((2, 16), jnp.float32)
+    losses = []
+    for step in range(1, 6):
+        out = fn(jnp.float32(step), jnp.float32(1e-2), toks, mask,
+                 *[params[k] for k in pnames], *[m[k] for k in pnames],
+                 *[v[k] for k in pnames])
+        losses.append(float(out[0]))
+        n = len(pnames)
+        params = dict(zip(pnames, out[1:1 + n]))
+        m = dict(zip(pnames, out[1 + n:1 + 2 * n]))
+        v = dict(zip(pnames, out[1 + 2 * n:1 + 3 * n]))
+    assert losses[-1] < losses[0]
+
+
+def test_sft_step_only_updates_lora():
+    cfg = CFG
+    fn, pnames, qn, mn, lnames = M.make_sft_step(cfg)
+    params = _params(cfg)
+    lora = _lora(cfg)
+    m = {k: jnp.zeros_like(t) for k, t in lora.items()}
+    v = {k: jnp.zeros_like(t) for k, t in lora.items()}
+    toks = _tokens(cfg, 2, 17)
+    mask = jnp.ones((2, 16), jnp.float32)
+    out = fn(jnp.float32(1), jnp.float32(1e-3), toks, mask,
+             *[params[k] for k in pnames], *[lora[k] for k in lnames],
+             *[m[k] for k in lnames], *[v[k] for k in lnames])
+    loss = float(out[0])
+    assert np.isfinite(loss)
+    new_lora = dict(zip(lnames, out[1:1 + len(lnames)]))
+    nl = len(lnames)
+    new_m = dict(zip(lnames, out[1 + nl:1 + 2 * nl]))
+    new_v = dict(zip(lnames, out[1 + 2 * nl:1 + 3 * nl]))
+    # step 1 with fresh LoRA (b = 0): every b changes; a has zero gradient
+    for k in lnames:
+        delta = float(jnp.abs(new_lora[k] - lora[k]).max())
+        if k.endswith("lora_b"):
+            assert delta > 0, k
+        else:
+            assert delta == 0, k
+    # step 2: a receives gradient through the now-nonzero b
+    out2 = fn(jnp.float32(2), jnp.float32(1e-3), toks, mask,
+              *[params[k] for k in pnames],
+              *[new_lora[k] for k in lnames],
+              *[new_m[k] for k in lnames], *[new_v[k] for k in lnames])
+    lora2 = dict(zip(lnames, out2[1:1 + nl]))
+    changed = sum(float(jnp.abs(lora2[k] - new_lora[k]).max()) > 0
+                  for k in lnames)
+    assert changed == nl
+
+
+def test_quantized_sft_close_to_dense():
+    """NF4-based SFT loss must approximate the f32 loss (paper Eq. 9)."""
+    cfg = CFG
+    from compile.aot import NF4_BLOCK
+    fn_q, pnames_q, qnames, _, lnames = M.make_sft_step(cfg, quantized=True)
+    fn_d, pnames_d, _, _, _ = M.make_sft_step(cfg)
+    params = _params(cfg)
+    lora = _lora(cfg)
+    m = {k: jnp.zeros_like(t) for k, t in lora.items()}
+    v = {k: jnp.zeros_like(t) for k, t in lora.items()}
+    quant = {}
+    for i in range(cfg.n_layers):
+        for k in M.QUANT_PROJ:
+            nm = f"l{i}.{k}"
+            codes, absmax = kref.nf4_quantize_ref(params[nm], NF4_BLOCK)
+            quant[f"{nm}.codes"] = codes
+            quant[f"{nm}.absmax"] = absmax
+    toks = _tokens(cfg, 2, 17)
+    mask = jnp.ones((2, 16), jnp.float32)
+    common = (jnp.float32(1), jnp.float32(1e-3), toks, mask)
+    out_q = fn_q(*common, *[params[k] for k in pnames_q],
+                 *[quant[k] for k in qnames], *[lora[k] for k in lnames],
+                 *[m[k] for k in lnames], *[v[k] for k in lnames])
+    out_d = fn_d(*common, *[params[k] for k in pnames_d],
+                 *[lora[k] for k in lnames], *[m[k] for k in lnames],
+                 *[v[k] for k in lnames])
+    assert abs(float(out_q[0]) - float(out_d[0])) < 0.5
+
+
+def test_grad_importance_shapes_and_positivity():
+    cfg = CFG
+    fn, pnames = M.make_grad_importance(cfg)
+    params = _params(cfg)
+    toks = _tokens(cfg, 2, 17)
+    mask = jnp.ones((2, 16), jnp.float32)
+    head_imp, ff_imp = fn(toks, mask, *[params[k] for k in pnames])
+    assert head_imp.shape == (cfg.n_layers, cfg.n_heads)
+    assert ff_imp.shape == (cfg.n_layers, cfg.d_ff)
+    assert float(head_imp.min()) >= 0.0 and float(ff_imp.min()) >= 0.0
+    assert float(head_imp.max()) > 0.0
+
+
+def test_eval_loss_matches_mean_loss():
+    cfg = CFG
+    fn, pnames, lnames = M.make_eval_loss(cfg)
+    params = _params(cfg)
+    lora = _lora(cfg)
+    toks = _tokens(cfg, 2, 17)
+    mask = jnp.ones((2, 16), jnp.float32)
+    s, c = fn(toks, mask, *[params[k] for k in pnames],
+              *[lora[k] for k in lnames])
+    proj = M.ProjCtx(params, lora=lora, cfg=cfg)
+    logits = M.forward(cfg, proj, toks[:, :-1])
+    want = M.mean_loss(logits, toks[:, 1:], mask)
+    np.testing.assert_allclose(float(s.sum() / c.sum()), float(want),
+                               rtol=1e-5)

@@ -1,0 +1,211 @@
+//! `cargo bench` — component benches (hand-rolled harness; no criterion in
+//! the vendor set). One bench per hot path, plus per-table aliases mapping
+//! to the paper's evaluation (DESIGN.md §3):
+//!
+//!   tab8_*   — training-phase step latency/throughput (Table 8)
+//!   fig3_*   — eval/perplexity path that produces the convergence curves
+//!   tab3_*   — generation/decode path behind pass@k
+//!   substrate benches: NF4 quant, pruning plans, recovery, tokenizer, JSON
+//!
+//! Requires `make artifacts` (tiny suite) for the runtime benches.
+
+use loram::bench::{bench, bench_throughput};
+use loram::coordinator::evaluate::{test_sequences, Evaluator};
+use loram::coordinator::generate::{Generator, SampleCfg};
+use loram::coordinator::train::TrainSession;
+use loram::data::instruct::Dataset;
+use loram::data::{corpus::Corpus, make_batch};
+use loram::params::{init_lora, init_params};
+use loram::pruning;
+use loram::quant;
+use loram::runtime::Runtime;
+use loram::tensor::Tensor;
+use loram::tokenizer::Tokenizer;
+use loram::util::json::Json;
+use loram::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // cargo passes harness flags like `--bench`; only bare words filter
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+    println!("loram bench suite (filter: {:?})", filter);
+
+    // ---------------- pure-substrate benches -----------------------------
+    let mut rng = Rng::new(0);
+    let w = Tensor::from_f32(&[256, 512], rng.normal_vec(256 * 512, 1.0));
+    if run("nf4_quantize") {
+        bench_throughput("nf4_quantize_256x512", 2, 10, (256 * 512) as f64, "elem/s", || {
+            std::hint::black_box(quant::quantize(&w, 16));
+        })
+        .report();
+    }
+    if run("nf4_dequantize") {
+        let q = quant::quantize(&w, 16);
+        bench_throughput("nf4_dequantize_256x512", 2, 10, (256 * 512) as f64, "elem/s", || {
+            std::hint::black_box(quant::dequantize(&q));
+        })
+        .report();
+    }
+    if run("semi_mask") {
+        bench("pruning_semi_mask_4of8_256x512", 2, 10, || {
+            std::hint::black_box(pruning::semi_mask_4of8(&w));
+        })
+        .report();
+    }
+    if run("unst_mask") {
+        bench("pruning_unst_mask_256x512", 2, 10, || {
+            std::hint::black_box(pruning::unstructured_mask(&w, 0.55));
+        })
+        .report();
+    }
+    if run("tokenizer") {
+        let tk = Tokenizer::new();
+        let text = "Q: 12+34= A: 46 ".repeat(64);
+        bench_throughput("tokenizer_encode_1KiB", 5, 50, text.len() as f64, "B/s", || {
+            std::hint::black_box(tk.encode(&text));
+        })
+        .report();
+    }
+    if run("json") {
+        let doc = Json::obj(vec![
+            ("xs", Json::arr_f64(&(0..256).map(|x| x as f64).collect::<Vec<_>>())),
+            ("name", Json::str("bench")),
+        ])
+        .to_string();
+        bench("json_parse_2KiB", 5, 50, || {
+            std::hint::black_box(Json::parse(&doc).unwrap());
+        })
+        .report();
+    }
+    if run("corpus") {
+        let mut c = Corpus::new(0, 0.5);
+        bench_throughput("corpus_gen_seq64", 3, 30, 65.0, "tok/s", || {
+            std::hint::black_box(c.next_seq(64));
+        })
+        .report();
+    }
+
+    // ---------------- runtime benches (need artifacts) --------------------
+    let rt = match Runtime::new(loram::default_artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(skipping runtime benches: {e})");
+            return Ok(());
+        }
+    };
+    if rt.load("eval_tiny").is_err() {
+        println!("(skipping runtime benches: tiny artifacts missing — run `make artifacts`)");
+        return Ok(());
+    }
+    let cfg = rt.load("eval_tiny")?.meta.config.clone();
+    let params = init_params(&cfg, 0);
+    let lora = init_lora(&cfg, 0);
+
+    if run("plan") || run("recovery") {
+        let pruned_cfg = rt.load("eval_tiny_p50")?.meta.config.clone();
+        let plan = pruning::StructuredPlan::random(&cfg, &pruned_cfg, 0)?;
+        if run("plan") {
+            bench("pruning_slice_params_tiny", 2, 10, || {
+                std::hint::black_box(pruning::slice_params(&params, &cfg, &plan).unwrap());
+            })
+            .report();
+        }
+        if run("recovery") {
+            let pruned_lora = init_lora(&pruned_cfg, 0);
+            bench("recovery_scatter_tiny", 2, 10, || {
+                std::hint::black_box(
+                    pruning::recover_lora(&pruned_lora, &cfg, &plan).unwrap(),
+                );
+            })
+            .report();
+        }
+    }
+
+    if run("fig3") || run("eval") {
+        let ev = Evaluator::new(&rt, "eval_tiny", &[&params, &lora])?;
+        let seqs = test_sequences(Dataset::Alpaca, 0, 8);
+        bench_throughput("fig3_eval_ppl_8seq", 1, 8, 8.0, "seq/s", || {
+            std::hint::black_box(ev.perplexity(&seqs, true).unwrap());
+        })
+        .report();
+    }
+
+    if run("tab8") || run("sft") {
+        let mut sess = TrainSession::new(&rt, "sft_tiny", &[&params, &lora])?;
+        let (b, s) = (sess.batch_size(), sess.seq_len());
+        let mut corpus = Corpus::new(1, 0.5);
+        bench_throughput("tab8_sft_step_tiny", 2, 12, b as f64, "samples/s", || {
+            let seqs = corpus.next_seqs(b, s);
+            let batch = make_batch(&seqs, b, s, true);
+            sess.train_step(&batch, 1e-3).unwrap();
+        })
+        .report();
+        let mut pre = TrainSession::new(&rt, "pretrain_tiny", &[&params])?;
+        bench_throughput("tab8_pretrain_step_tiny", 2, 12, b as f64, "samples/s", || {
+            let seqs = corpus.next_seqs(b, s);
+            let batch = make_batch(&seqs, b, s, false);
+            pre.train_step(&batch, 1e-3).unwrap();
+        })
+        .report();
+    }
+
+    if run("tab3") || run("decode") {
+        let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora])?;
+        let mut grng = Rng::new(2);
+        let prompts = vec!["Q: 2+3=".to_string(), "Q: 4+4=".to_string()];
+        bench_throughput("tab3_decode_8tok_b2", 1, 6, 16.0, "tok/s", || {
+            std::hint::black_box(
+                gen.generate_batch(
+                    &prompts,
+                    SampleCfg {
+                        temperature: 0.0,
+                        top_p: 1.0,
+                        max_new: 8,
+                    },
+                    &mut grng,
+                )
+                .unwrap(),
+            );
+        })
+        .report();
+    }
+
+    if run("pallas") {
+        // L1 kernel-path vs jnp-path logits artifacts (numerical parity is
+        // asserted by the integration tests; here we compare latency)
+        for name in ["logits_tiny_jnp", "logits_tiny_pallas"] {
+            if let Ok(art) = rt.load(name) {
+                let mut store = loram::tensor::TensorStore::new();
+                for (k, v) in &params.map {
+                    store.insert(k.clone(), v.clone());
+                }
+                for (k, v) in &lora.map {
+                    store.insert(k.clone(), v.clone());
+                }
+                store.insert(
+                    "tokens",
+                    Tensor::from_i32(&[2, 32], vec![65; 64]),
+                );
+                bench(&format!("l1_{name}"), 1, 6, || {
+                    std::hint::black_box(rt.run(&art, &store).unwrap());
+                })
+                .report();
+            }
+        }
+    }
+
+    let m = rt.metrics.borrow();
+    println!(
+        "\nruntime totals: {} compiles ({:.0} ms), {} executions ({:.0} ms), h2d {} MiB, d2h {} MiB",
+        m.compiles,
+        m.compile_ms,
+        m.executions,
+        m.execute_ms,
+        m.h2d_bytes >> 20,
+        m.d2h_bytes >> 20
+    );
+    Ok(())
+}

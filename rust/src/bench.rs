@@ -1,0 +1,107 @@
+//! Hand-rolled bench harness (no criterion in the vendor set).
+//!
+//! `cargo bench` drives `rust/benches/bench_main.rs`, which uses this
+//! module: warmup, timed iterations, mean/p50/p99 reporting, and a simple
+//! `--filter` facility.
+
+use crate::util::stats;
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let tp = self
+            .throughput
+            .map(|(v, unit)| format!("  {v:>10.2} {unit}"))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>6} it  mean {:>9.3} ms  p50 {:>9.3} ms  p99 {:>9.3} ms{}",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p99_ms, tp
+        );
+    }
+}
+
+/// Run `f` with warmup, then time `iters` iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: stats::mean(&samples),
+        p50_ms: stats::percentile(&samples, 50.0),
+        p99_ms: stats::percentile(&samples, 99.0),
+        throughput: None,
+    }
+}
+
+/// Like `bench`, attaching an items/sec throughput derived from the mean.
+pub fn bench_throughput(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    items_per_iter: f64,
+    unit: &'static str,
+    f: impl FnMut(),
+) -> BenchResult {
+    let mut r = bench(name, warmup, iters, f);
+    r.throughput = Some((items_per_iter / (r.mean_ms / 1e3), unit));
+    r
+}
+
+/// Peak RSS of this process in MiB (Linux), for Table 8's memory column.
+pub fn peak_rss_mib() -> f64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p99_ms >= r.p50_ms);
+    }
+
+    #[test]
+    fn rss_is_positive() {
+        assert!(peak_rss_mib() > 1.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Appendix D analysis: L2 norms of the trained low-rank matrices.
+//!
+//! Head-wise norms for attention adapters (Eq. 10) and masked layer-wise
+//! mean norms for MLP adapters (Eq. 11), emitted as CSV heatmap data.
+
+use crate::runtime::ModelCfg;
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::log::Csv;
+use anyhow::Result;
+use std::path::Path;
+
+/// Materialise W_Δ = a @ b for one projection (small at proxy scale).
+pub fn lora_delta(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, r) = a.dims2();
+    let (r2, n) = b.dims2();
+    assert_eq!(r, r2);
+    let av = a.f32s();
+    let bv = b.f32s();
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for k in 0..r {
+            let aik = av[i * r + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bv[k * n..(k + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    Tensor::from_f32(&[m, n], out)
+}
+
+/// Eq. 10: per-head L2 norm of W_Δ for q/k/v (column blocks) or o (row
+/// blocks).
+pub fn head_norms(delta: &Tensor, n_heads: usize, head_dim: usize, is_output: bool) -> Vec<f64> {
+    let (m, n) = delta.dims2();
+    let v = delta.f32s();
+    (0..n_heads)
+        .map(|h| {
+            let mut s = 0f64;
+            if is_output {
+                for i in h * head_dim..(h + 1) * head_dim {
+                    for j in 0..n {
+                        s += (v[i * n + j] as f64).powi(2);
+                    }
+                }
+            } else {
+                for i in 0..m {
+                    for j in h * head_dim..(h + 1) * head_dim {
+                        s += (v[i * n + j] as f64).powi(2);
+                    }
+                }
+            }
+            s.sqrt()
+        })
+        .collect()
+}
+
+/// Eq. 11: masked mean row/col L2 norm of an MLP adapter delta.
+pub fn mlp_mean_norm(delta: &Tensor, rows: bool) -> f64 {
+    let (m, n) = delta.dims2();
+    let v = delta.f32s();
+    let outer = if rows { m } else { n };
+    let mut total = 0f64;
+    let mut active = 0usize;
+    for i in 0..outer {
+        let mut s = 0f64;
+        for j in 0..(if rows { n } else { m }) {
+            let x = if rows { v[i * n + j] } else { v[j * n + i] };
+            s += (x as f64).powi(2);
+        }
+        if s > 0.0 {
+            total += s.sqrt();
+            active += 1;
+        }
+    }
+    if active == 0 {
+        0.0
+    } else {
+        total / active as f64
+    }
+}
+
+/// Emit Appendix-D CSVs: attention head norms + MLP layer norms.
+pub fn dump_lora_norms(
+    cfg: &ModelCfg,
+    lora: &TensorStore,
+    out_dir: &Path,
+    tag: &str,
+) -> Result<()> {
+    let hd = cfg.head_dim();
+    let mut att = Csv::create(
+        out_dir.join(format!("appD_attn_norms_{tag}.csv")),
+        &["layer", "proj", "head", "l2"],
+    )?;
+    let mut mlp = Csv::create(
+        out_dir.join(format!("appD_mlp_norms_{tag}.csv")),
+        &["layer", "proj", "mean_l2"],
+    )?;
+    for i in 0..cfg.n_layers {
+        let (h, kv, _ff) = cfg.layer_shapes(i);
+        for (proj, heads, is_out) in [
+            ("wq", h, false),
+            ("wk", kv, false),
+            ("wv", kv, false),
+            ("wo", h, true),
+        ] {
+            let a = lora.get(&format!("l{i}.{proj}.lora_a"))?;
+            let b = lora.get(&format!("l{i}.{proj}.lora_b"))?;
+            let delta = lora_delta(a, b);
+            for (hh, norm) in head_norms(&delta, heads, hd, is_out).iter().enumerate() {
+                att.row(&crate::csv_row![i, proj, hh, norm])?;
+            }
+        }
+        for (proj, rows) in [("w_up", false), ("w_gate", false), ("w_down", true)] {
+            let a = lora.get(&format!("l{i}.{proj}.lora_a"))?;
+            let b = lora.get(&format!("l{i}.{proj}.lora_b"))?;
+            let delta = lora_delta(a, b);
+            mlp.row(&crate::csv_row![i, proj, mlp_mean_norm(&delta, rows)])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lora_delta_matches_manual_matmul() {
+        let a = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_f32(&[2, 3], vec![1., 0., 1., 0., 1., 1.]);
+        let d = lora_delta(&a, &b);
+        assert_eq!(d.f32s(), &[1., 2., 3., 3., 4., 7.]);
+    }
+
+    #[test]
+    fn head_norms_partition_total() {
+        let d = Tensor::from_f32(&[2, 4], vec![3., 0., 0., 4., 0., 0., 0., 0.]);
+        let hn = head_norms(&d, 2, 2, false);
+        assert!((hn[0] - 3.0).abs() < 1e-9);
+        assert!((hn[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mlp_mean_norm_ignores_zero_rows() {
+        let d = Tensor::from_f32(&[2, 2], vec![3., 4., 0., 0.]);
+        assert!((mlp_mean_norm(&d, true) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,190 @@
+//! Downstream task evaluation (paper Tables 1–3, 7, Figs. 8, 14–15).
+//!
+//! * math: MathQA stand-in via option log-likelihood (1-shot) + GSM8K
+//!   stand-in via greedy decode and strict match (paper: 8-shot CoT strict)
+//! * CSR: six option-scored subtasks, mean ± standard error (Table 2)
+//! * code: program synthesis; temperature sweep, unbiased pass@k (Table 3)
+
+use crate::coordinator::evaluate::Evaluator;
+use crate::coordinator::generate::{Generator, SampleCfg};
+use crate::data::downstream::{self, EvalItem, CSR_SUBTASKS};
+use crate::data::tasks;
+use crate::runtime::Runtime;
+use crate::tensor::TensorStore;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use anyhow::Result;
+
+/// Weight bundle for downstream evaluation: base params + (possibly zero /
+/// recovered) LoRA factors, evaluated with the *full* model artifacts.
+pub struct ModelUnderTest<'r> {
+    pub evaluator: Evaluator<'r>,
+    pub generator: Generator<'r>,
+}
+
+impl<'r> ModelUnderTest<'r> {
+    pub fn new(
+        rt: &'r Runtime,
+        base_cfg: &str,
+        stores: &[&TensorStore],
+    ) -> Result<ModelUnderTest<'r>> {
+        Ok(ModelUnderTest {
+            evaluator: Evaluator::new(rt, &format!("eval_{base_cfg}"), stores)?,
+            generator: Generator::new(rt, &format!("logits_{base_cfg}"), stores)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DownstreamScores {
+    pub mathqa: f64,
+    pub gsm: f64,
+    pub csr: Vec<(String, f64)>,
+    pub csr_mean: f64,
+    pub csr_se: f64,
+    pub pass1: f64,
+    pub pass10: f64,
+}
+
+/// MathQA stand-in accuracy: option scoring with gold shuffled into place.
+pub fn eval_mathqa(m: &ModelUnderTest, items: &[EvalItem], seed: u64) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    for it in items {
+        let mut opts = it.options.clone();
+        // shuffle so the gold isn't always option 0
+        let mut order: Vec<usize> = (0..opts.len()).collect();
+        rng.shuffle(&mut order);
+        let shuffled: Vec<String> = order.iter().map(|&i| opts[i].clone()).collect();
+        let gold_pos = order.iter().position(|&i| i == 0).unwrap();
+        opts = shuffled;
+        let pick = m.evaluator.score_options(&it.prompt, &opts)?;
+        if pick == gold_pos {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// GSM8K stand-in: greedy decode, strict string match on the answer.
+pub fn eval_gsm(m: &ModelUnderTest, items: &[EvalItem]) -> Result<f64> {
+    let mut rng = Rng::new(0);
+    let prompts: Vec<String> = items.iter().map(|i| i.prompt.clone()).collect();
+    let cfg = SampleCfg {
+        temperature: 0.0,
+        top_p: 1.0,
+        max_new: 8,
+    };
+    let outs = m.generator.complete(&prompts, cfg, &mut rng)?;
+    let correct = outs
+        .iter()
+        .zip(items)
+        .filter(|(o, it)| o.trim() == it.gold)
+        .count();
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// All six CSR subtasks; returns per-task accuracy and the mean ± se row.
+pub fn eval_csr(
+    m: &ModelUnderTest,
+    seed: u64,
+    n_per_task: usize,
+) -> Result<(Vec<(String, f64)>, f64, f64)> {
+    let mut per = vec![];
+    let mut rng = Rng::new(seed ^ 0xc5);
+    for (name, _) in CSR_SUBTASKS {
+        let items = downstream::csr_set(name, seed, n_per_task);
+        let mut correct = 0usize;
+        for it in &items {
+            let mut order: Vec<usize> = (0..it.options.len()).collect();
+            rng.shuffle(&mut order);
+            let opts: Vec<String> = order.iter().map(|&i| it.options[i].clone()).collect();
+            let gold_pos = order.iter().position(|&i| i == 0).unwrap();
+            if m.evaluator.score_options(&it.prompt, &opts)? == gold_pos {
+                correct += 1;
+            }
+        }
+        per.push((name.to_string(), correct as f64 / items.len() as f64));
+    }
+    let accs: Vec<f64> = per.iter().map(|(_, a)| *a).collect();
+    let mean = stats::mean(&accs);
+    let se = stats::proportion_se(mean, n_per_task * CSR_SUBTASKS.len());
+    Ok((per, mean, se))
+}
+
+/// Code generation pass@1 / pass@10: n samples per item across the paper's
+/// temperature sweep, checked by the stack-machine VM, best-over-temps.
+pub fn eval_code(
+    m: &ModelUnderTest,
+    items: &[EvalItem],
+    n_samples: usize,
+    temps: &[f64],
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let mut best = (0.0f64, 0.0f64);
+    for &t in temps {
+        let mut rng = Rng::new(seed ^ (t * 1000.0) as u64);
+        let (mut p1_sum, mut p10_sum) = (0.0, 0.0);
+        for it in items {
+            let gold = tasks::Program::parse(&it.gold).expect("gold parses");
+            let mut correct = 0usize;
+            let n = if t == 0.0 { 1 } else { n_samples };
+            for chunk in (0..n).collect::<Vec<_>>().chunks(m.generator.batch_size()) {
+                let prompts: Vec<String> =
+                    chunk.iter().map(|_| it.prompt.clone()).collect();
+                let cfg = SampleCfg {
+                    temperature: t,
+                    top_p: 0.95,
+                    max_new: 12,
+                };
+                let outs = m.generator.complete(&prompts, cfg, &mut rng)?;
+                correct += outs
+                    .iter()
+                    .filter(|o| tasks::check_program(&gold, o.trim()))
+                    .count();
+            }
+            p1_sum += stats::pass_at_k(n, correct, 1);
+            p10_sum += stats::pass_at_k(n, correct, 10.min(n));
+        }
+        let p1 = p1_sum / items.len().max(1) as f64;
+        let p10 = p10_sum / items.len().max(1) as f64;
+        if p1 > best.0 {
+            best.0 = p1;
+        }
+        if p10 > best.1 {
+            best.1 = p10;
+        }
+    }
+    Ok(best)
+}
+
+/// The full downstream battery (one row of Tables 1+2+3).
+pub fn eval_all(
+    m: &ModelUnderTest,
+    seed: u64,
+    n_math: usize,
+    n_csr: usize,
+    n_code: usize,
+    code_samples: usize,
+    temps: &[f64],
+) -> Result<DownstreamScores> {
+    let mathqa = eval_mathqa(m, &downstream::mathqa_set(seed, n_math), seed)?;
+    let gsm = eval_gsm(m, &downstream::gsm_set(seed, n_math))?;
+    let (csr, csr_mean, csr_se) = eval_csr(m, seed, n_csr)?;
+    let (pass1, pass10) = eval_code(
+        m,
+        &downstream::code_set(seed, n_code),
+        code_samples,
+        temps,
+        seed,
+    )?;
+    Ok(DownstreamScores {
+        mathqa,
+        gsm,
+        csr,
+        csr_mean,
+        csr_se,
+        pass1,
+        pass10,
+    })
+}

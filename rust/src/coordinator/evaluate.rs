@@ -1,0 +1,122 @@
+//! Perplexity / NLL evaluation over `eval_*` artifacts, plus option
+//! log-likelihood scoring (the lm-eval-harness mechanism behind MathQA and
+//! the CSR subtasks).
+
+use crate::data::{make_batch, Batch};
+use crate::runtime::{Artifact, Runtime};
+use crate::tensor::TensorStore;
+use crate::tokenizer::{Tokenizer, SEP};
+use anyhow::Result;
+use std::rc::Rc;
+
+pub struct Evaluator<'r> {
+    pub rt: &'r Runtime,
+    pub art: Rc<Artifact>,
+    /// weights live device-resident: uploaded once at construction, only
+    /// (tokens, loss_mask) move per batch (EXPERIMENTS.md §Perf)
+    sess: std::cell::RefCell<crate::runtime::DeviceSession>,
+}
+
+impl<'r> Evaluator<'r> {
+    pub fn new(rt: &'r Runtime, artifact: &str, stores: &[&TensorStore]) -> Result<Evaluator<'r>> {
+        let art = rt.load(artifact)?;
+        let sess = crate::runtime::DeviceSession::new(rt, art.clone(), stores)?;
+        Ok(Evaluator {
+            rt,
+            art,
+            sess: std::cell::RefCell::new(sess),
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.art.meta.batch()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.art.meta.seq()
+    }
+
+    /// Per-sequence (nll_sum, token_count) for one batch.
+    pub fn eval_batch(&self, batch: &Batch) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut sess = self.sess.borrow_mut();
+        sess.set(self.rt, "tokens", &batch.tokens)?;
+        sess.set(self.rt, "loss_mask", &batch.loss_mask)?;
+        let out = sess.run(self.rt)?;
+        Ok((
+            out.get("nll_sum")?.f32s().to_vec(),
+            out.get("tok_count")?.f32s().to_vec(),
+        ))
+    }
+
+    /// Corpus perplexity over token sequences (padding the tail batch).
+    pub fn perplexity(&self, seqs: &[Vec<i32>], answer_only: bool) -> Result<f64> {
+        let b = self.batch_size();
+        let s = self.seq_len();
+        let (mut nll, mut count) = (0f64, 0f64);
+        for chunk in seqs.chunks(b) {
+            let mut padded: Vec<Vec<i32>> = chunk.to_vec();
+            while padded.len() < b {
+                padded.push(vec![crate::tokenizer::PAD; 2]);
+            }
+            let batch = make_batch(&padded, b, s, answer_only);
+            let (ns, cs) = self.eval_batch(&batch)?;
+            for i in 0..chunk.len() {
+                nll += ns[i] as f64;
+                count += cs[i] as f64;
+            }
+        }
+        Ok((nll / count.max(1.0)).exp())
+    }
+
+    /// Score `prompt + option` continuations; returns the index of the
+    /// lowest per-token NLL option (lm-eval style length-normalised).
+    pub fn score_options(&self, prompt: &str, options: &[String]) -> Result<usize> {
+        let tk = Tokenizer::new();
+        let b = self.batch_size();
+        let s = self.seq_len();
+        let mut scores = vec![f64::INFINITY; options.len()];
+        for (chunk_start, chunk) in options.chunks(b).enumerate().map(|(i, c)| (i * b, c)) {
+            let mut seqs: Vec<Vec<i32>> = chunk
+                .iter()
+                .map(|o| tk.encode_pair(prompt, o))
+                .collect();
+            while seqs.len() < b {
+                seqs.push(vec![crate::tokenizer::PAD; 2]);
+            }
+            // answer_only mask: loss over the option tokens only
+            let batch = make_batch(&seqs, b, s, true);
+            let (ns, cs) = self.eval_batch(&batch)?;
+            for i in 0..chunk.len() {
+                scores[chunk_start + i] = ns[i] as f64 / (cs[i] as f64).max(1.0);
+            }
+        }
+        Ok(scores
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+}
+
+/// Utility shared by evaluate/generate: encode a prompt for scoring with no
+/// response yet (BOS + prompt + SEP).
+pub fn encode_prompt(prompt: &str) -> Vec<i32> {
+    let tk = Tokenizer::new();
+    let mut ids = vec![crate::tokenizer::BOS];
+    ids.extend(tk.encode(prompt));
+    ids.push(SEP);
+    ids
+}
+
+/// Build held-out perplexity sequences for a dataset split.
+pub fn test_sequences(
+    dataset: crate::data::instruct::Dataset,
+    seed: u64,
+    n: usize,
+) -> Vec<Vec<i32>> {
+    let tk = Tokenizer::new();
+    let mut g = crate::data::instruct::InstructGen::new(dataset, seed, 1);
+    (0..n).map(|_| g.next().0.tokens(&tk)).collect()
+}
+

@@ -1,0 +1,72 @@
+//! Experiment runners: one entry per paper table/figure (DESIGN.md §3).
+//!
+//! `loram repro --exp <id> [--scale smoke|paper]` dispatches here; every
+//! runner writes CSV/JSON under `results/<id>/` with the same rows/series
+//! the paper reports.
+
+use crate::runtime::Runtime;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+pub mod scale;
+mod fig3_4;
+mod fig5;
+mod fig6;
+mod fig7_8;
+mod fig16;
+mod tab1_3;
+mod tab456;
+mod tab7;
+mod tab8;
+mod app_d;
+
+pub use scale::Scale;
+
+pub struct ExpCtx<'r> {
+    pub rt: &'r Runtime,
+    pub scale: Scale,
+    pub out_dir: PathBuf,
+    pub run_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl<'r> ExpCtx<'r> {
+    pub fn new(rt: &'r Runtime, scale: Scale, exp: &str, seed: u64) -> Result<ExpCtx<'r>> {
+        let out_dir = PathBuf::from("results").join(exp);
+        std::fs::create_dir_all(&out_dir)?;
+        let run_dir = PathBuf::from("runs");
+        std::fs::create_dir_all(&run_dir)?;
+        Ok(ExpCtx {
+            rt,
+            scale,
+            out_dir,
+            run_dir,
+            seed,
+        })
+    }
+}
+
+/// Dispatch by experiment id.
+pub fn run(rt: &Runtime, exp: &str, scale: Scale, seed: u64) -> Result<()> {
+    let ctx = ExpCtx::new(rt, scale, exp, seed)?;
+    match exp {
+        "fig3" => fig3_4::run(&ctx, crate::data::instruct::Dataset::Hermes),
+        "fig4" => fig3_4::run(&ctx, crate::data::instruct::Dataset::Orca),
+        "tab1" | "tab2" | "tab3" => tab1_3::run(&ctx),
+        "fig5" => fig5::run(&ctx),
+        "fig6" => fig6::run(&ctx),
+        "fig7" => fig7_8::run_fig7(&ctx),
+        "fig8" => fig7_8::run_fig8(&ctx),
+        "tab456" => tab456::run(&ctx),
+        "tab7" => tab7::run(&ctx),
+        "tab8" => tab8::run(&ctx),
+        "fig16" => fig16::run(&ctx),
+        "appD" => app_d::run(&ctx),
+        other => bail!("unknown experiment '{other}' (see DESIGN.md §3)"),
+    }
+}
+
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig3", "fig4", "tab1", "fig5", "fig6", "fig7", "fig8", "tab456", "tab7", "tab8", "fig16",
+    "appD",
+];

@@ -1,0 +1,42 @@
+//! Appendix D: visualisation data for the trained low-rank matrices —
+//! head-wise attention norms + layer-wise MLP norms, for LoRA vs
+//! LoRAM-Stru (recovered), as CSV heatmap inputs.
+
+use super::ExpCtx;
+use crate::coordinator::analysis::dump_lora_norms;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use crate::data::instruct::Dataset;
+use crate::util::log;
+use anyhow::Result;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let (pre, align, sft) = ctx.scale.steps();
+    let (_small, big, big_pruned, _) = ctx.scale.family2();
+    let big_cfg = ctx.rt.load(&format!("eval_{big}"))?.meta.config.clone();
+
+    for (tag, variant, pruned) in [
+        ("lora", Variant::Lora, None),
+        ("loram_stru", Variant::Stru, Some(big_pruned)),
+    ] {
+        let plc = PipelineConfig {
+            base: big.to_string(),
+            pruned: pruned.map(String::from),
+            variant,
+            pretrain_steps: pre,
+            align_steps: align,
+            sft_steps: sft,
+            dataset: Dataset::Hermes,
+            seed: ctx.seed,
+            eval_every: 0,
+            eval_seqs: 8,
+            run_dir: ctx.run_dir.clone(),
+            ..Default::default()
+        };
+        log::info(format!("appD running {tag}"));
+        let res = Pipeline::new(ctx.rt, plc).run()?;
+        // recovered factors live in full-model shapes for both variants
+        dump_lora_norms(&big_cfg, &res.lora_recovered, &ctx.out_dir, tag)?;
+    }
+    log::info(format!("appD -> {}", ctx.out_dir.display()));
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Fig. 16 (App. G): learning-rate tuning for the LoRA baselines — final
+//! in-domain and out-of-domain perplexity across an LR grid.
+
+use super::ExpCtx;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use crate::data::instruct::Dataset;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let (pre, _align, sft) = ctx.scale.steps();
+    let (small, big, _p, _) = ctx.scale.family2();
+    let lrs = match ctx.scale {
+        super::Scale::Smoke => vec![1e-3, 1e-4],
+        super::Scale::Paper => vec![1e-2, 1e-3, 1e-4, 1e-5],
+    };
+    let mut csv = Csv::create(
+        ctx.out_dir.join("fig16_lr_sweep.csv"),
+        &["model", "lr", "final_ood_ppl", "final_id_ppl"],
+    )?;
+    let models: Vec<&str> = if small == big { vec![big] } else { vec![small, big] };
+    for model in models {
+        for &lr in &lrs {
+            let plc = PipelineConfig {
+                base: model.to_string(),
+                pruned: None,
+                variant: Variant::Lora,
+                pretrain_steps: pre,
+                align_steps: 0,
+                sft_steps: sft,
+                lr_sft: lr,
+                dataset: Dataset::Hermes,
+                seed: ctx.seed,
+                eval_every: 0, // final point only
+                eval_seqs: ctx.scale.eval_seqs(),
+                run_dir: ctx.run_dir.clone(),
+                ..Default::default()
+            };
+            log::info(format!("fig16 {model} lr={lr}"));
+            let res = Pipeline::new(ctx.rt, plc).run()?;
+            let last = res.eval_points.last().expect("final eval point");
+            csv.row(&crate::csv_row![model, lr, last.ood_ppl, last.id_ppl])?;
+        }
+    }
+    log::info(format!("fig16 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Figs. 3 & 4: test perplexity over SFT iterations — out-of-domain
+//! (Alpaca stand-in) and in-domain test sets, LoRA baselines vs the four
+//! LoRAM variants, for the 13B-proxy family and (paper scale) the
+//! 70B-proxy QLoRAM family.
+
+use super::{ExpCtx, Scale};
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use crate::data::instruct::Dataset;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+
+pub fn run(ctx: &ExpCtx, dataset: Dataset) -> Result<()> {
+    let (pre, align, sft) = ctx.scale.steps();
+    let mut csv = Csv::create(
+        ctx.out_dir.join("ppl_curves.csv"),
+        &["family", "method", "step", "ood_ppl", "id_ppl", "ood_ppl_wo_recovery"],
+    )?;
+
+    let (small, big, big_pruned, _) = ctx.scale.family2();
+    let mut jobs: Vec<(&str, String, PipelineConfig)> = vec![];
+    let base_cfg = |base: &str, pruned: Option<&str>, variant, quantized| PipelineConfig {
+        base: base.to_string(),
+        pruned: pruned.map(String::from),
+        variant,
+        quantized,
+        pretrain_steps: pre,
+        align_steps: align,
+        sft_steps: sft,
+        dataset,
+        seed: ctx.seed,
+        eval_every: ctx.scale.eval_every(),
+        eval_seqs: ctx.scale.eval_seqs(),
+        run_dir: ctx.run_dir.clone(),
+        ..Default::default()
+    };
+
+    jobs.push(("13b", format!("{small} LoRA"), base_cfg(small, None, Variant::Lora, false)));
+    jobs.push(("13b", format!("{big} LoRA"), base_cfg(big, None, Variant::Lora, false)));
+    for (name, v) in [
+        ("LoRAM-Rand", Variant::Rand),
+        ("LoRAM-Stru", Variant::Stru),
+        ("LoRAM-Semi", Variant::Semi),
+        ("LoRAM-Unst", Variant::Unst),
+    ] {
+        let pruned = if v.structured() { Some(big_pruned) } else { None };
+        jobs.push(("13b", format!("{big} {name}"), base_cfg(big, pruned, v, false)));
+    }
+    if ctx.scale == Scale::Paper {
+        let (small70, big70, big70_pruned, q) = ctx.scale.family70();
+        jobs.push((
+            "70b",
+            format!("{small70} LoRA"),
+            base_cfg(small70, None, Variant::Lora, false),
+        ));
+        for (name, v) in [("QLoRAM-Rand", Variant::Rand), ("QLoRAM-Stru", Variant::Stru)] {
+            jobs.push((
+                "70b",
+                format!("{big70} {name}"),
+                base_cfg(big70, Some(big70_pruned), v, q),
+            ));
+        }
+    }
+
+    for (family, method, cfg) in jobs {
+        log::info(format!("fig3/4[{dataset:?}] running {method}"));
+        let res = Pipeline::new(ctx.rt, cfg).run()?;
+        for p in &res.eval_points {
+            csv.row(&crate::csv_row![
+                family,
+                method,
+                p.step,
+                p.ood_ppl,
+                p.id_ppl,
+                p.ood_ppl_pruned.map(|x| x.to_string()).unwrap_or_default()
+            ])?;
+        }
+    }
+    log::info(format!("fig3/4 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

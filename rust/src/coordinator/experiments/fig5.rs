@@ -1,0 +1,70 @@
+//! Fig. 5: LLaMA-3.1 adaptation — perplexity + downstream for the 3.1
+//! proxy family, and the effect of alignment step count (0 / 200-analogue /
+//! full) on QLoRAM-Stru performance.
+
+use super::ExpCtx;
+use crate::coordinator::downstream::{eval_all, ModelUnderTest};
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use crate::data::instruct::Dataset;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let (pre, align, sft) = ctx.scale.steps();
+    let (small, big, big_pruned, quantized) = ctx.scale.family31();
+    let (n_math, n_csr, n_code, code_samples) = ctx.scale.downstream_sizes();
+    let mut ppl_csv = Csv::create(
+        ctx.out_dir.join("fig5_ppl.csv"),
+        &["method", "align_steps", "step", "ood_ppl", "id_ppl"],
+    )?;
+    let mut ds_csv = Csv::create(
+        ctx.out_dir.join("fig5_downstream.csv"),
+        &["method", "align_steps", "mathqa", "gsm", "csr_mean", "pass10"],
+    )?;
+
+    // alignment-steps sweep: 0 (w/o alignment), 1/8, full — mirroring the
+    // paper's QLoRAM-Stru 0/200/400/1600 sweep
+    let sweeps = [0usize, (align / 8).max(1), align];
+    let mut jobs: Vec<(String, usize, PipelineConfig)> = vec![];
+    let mk = |base: &str, pruned: Option<&str>, v, q, align_steps: usize| PipelineConfig {
+        base: base.to_string(),
+        pruned: pruned.map(String::from),
+        variant: v,
+        quantized: q,
+        pretrain_steps: pre,
+        align_steps,
+        align: align_steps > 0,
+        sft_steps: sft,
+        dataset: Dataset::Hermes,
+        seed: ctx.seed,
+        eval_every: ctx.scale.eval_every(),
+        eval_seqs: ctx.scale.eval_seqs(),
+        run_dir: ctx.run_dir.clone(),
+        ..Default::default()
+    };
+    jobs.push((format!("{small} LoRA"), 0, mk(small, None, Variant::Lora, false, 0)));
+    jobs.push((format!("{big} LoRA"), 0, mk(big, None, Variant::Lora, false, 0)));
+    for &a in &sweeps {
+        jobs.push((
+            format!("{big} QLoRAM-Stru"),
+            a,
+            mk(big, Some(big_pruned), Variant::Stru, quantized, a),
+        ));
+    }
+
+    for (method, align_steps, plc) in jobs {
+        log::info(format!("fig5 running {method} (align={align_steps})"));
+        let base = plc.base.clone();
+        let res = Pipeline::new(ctx.rt, plc).run()?;
+        for p in &res.eval_points {
+            ppl_csv.row(&crate::csv_row![method, align_steps, p.step, p.ood_ppl, p.id_ppl])?;
+        }
+        let m = ModelUnderTest::new(ctx.rt, &base, &[&res.base_params, &res.lora_recovered])?;
+        let s = eval_all(&m, ctx.seed, n_math, n_csr, n_code, code_samples, &ctx.scale.temps())?;
+        ds_csv.row(&crate::csv_row![
+            method, align_steps, s.mathqa, s.gsm, s.csr_mean, s.pass10
+        ])?;
+    }
+    log::info(format!("fig5 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

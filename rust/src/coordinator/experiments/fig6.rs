@@ -1,0 +1,63 @@
+//! Fig. 6: necessity of Recovery & Alignment — ablation over all four
+//! pruning strategies × {±alignment}, tracking both the recovered (full
+//! model) and non-recovered (pruned model) OOD perplexity per eval point.
+//!
+//! The pipeline already computes both series (EvalPoint.ood_ppl vs
+//! .ood_ppl_pruned), so this runner is a 4×2 sweep.
+
+use super::ExpCtx;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use crate::data::instruct::Dataset;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let (pre, align, sft) = ctx.scale.steps();
+    let (_small, big, big_pruned, _) = ctx.scale.family2();
+    let mut csv = Csv::create(
+        ctx.out_dir.join("fig6_ablation.csv"),
+        &["variant", "aligned", "step", "ppl_w_recovery", "ppl_wo_recovery"],
+    )?;
+
+    for (name, v) in [
+        ("rand", Variant::Rand),
+        ("stru", Variant::Stru),
+        ("semi", Variant::Semi),
+        ("unst", Variant::Unst),
+    ] {
+        for aligned in [true, false] {
+            let plc = PipelineConfig {
+                base: big.to_string(),
+                pruned: if v.structured() {
+                    Some(big_pruned.to_string())
+                } else {
+                    None
+                },
+                variant: v,
+                pretrain_steps: pre,
+                align_steps: align,
+                align: aligned,
+                sft_steps: sft,
+                dataset: Dataset::Hermes,
+                seed: ctx.seed,
+                eval_every: ctx.scale.eval_every(),
+                eval_seqs: ctx.scale.eval_seqs(),
+                run_dir: ctx.run_dir.clone(),
+                ..Default::default()
+            };
+            log::info(format!("fig6 running {name} aligned={aligned}"));
+            let res = Pipeline::new(ctx.rt, plc).run()?;
+            for p in &res.eval_points {
+                csv.row(&crate::csv_row![
+                    name,
+                    aligned,
+                    p.step,
+                    p.ood_ppl,
+                    p.ood_ppl_pruned.map(|x| x.to_string()).unwrap_or_default()
+                ])?;
+            }
+        }
+    }
+    log::info(format!("fig6 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Fig. 7: perplexity vs parameter-reduction ratio — QLoRAM-Stru against
+//! naive pruning (the pruned+aligned model evaluated directly, no LoRA, no
+//! recovery) across the 70B-proxy pruning sweep.
+//!
+//! Fig. 8: downstream task scores across the same reduction sweep.
+
+use super::{ExpCtx, Scale};
+use crate::coordinator::downstream::{eval_all, ModelUnderTest};
+use crate::coordinator::evaluate::{test_sequences, Evaluator};
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use crate::data::instruct::Dataset;
+use crate::params::init_lora;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+
+fn sweep(ctx: &ExpCtx) -> Vec<(&'static str, &'static str)> {
+    match ctx.scale {
+        Scale::Smoke => vec![("tiny", "tiny_p50")],
+        Scale::Paper => vec![
+            ("l70b", "l70b_p65"),
+            ("l70b", "l70b_p75"),
+            ("l70b", "l70b_p85"),
+            ("l70b", "l70b_p95"),
+        ],
+    }
+}
+
+fn pipeline_cfg(ctx: &ExpCtx, base: &str, pruned: &str, steps: (usize, usize, usize)) -> PipelineConfig {
+    PipelineConfig {
+        base: base.to_string(),
+        pruned: Some(pruned.to_string()),
+        variant: Variant::Stru,
+        quantized: ctx.scale == Scale::Paper,
+        pretrain_steps: steps.0,
+        align_steps: steps.1,
+        sft_steps: steps.2,
+        dataset: Dataset::Hermes,
+        seed: ctx.seed,
+        eval_every: 0,
+        eval_seqs: ctx.scale.eval_seqs(),
+        run_dir: ctx.run_dir.clone(),
+        ..Default::default()
+    }
+}
+
+pub fn run_fig7(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.scale.steps();
+    let mut csv = Csv::create(
+        ctx.out_dir.join("fig7_scaling.csv"),
+        &["pruned_cfg", "reduction", "qloram_ppl", "naive_ppl", "lora_big_ppl"],
+    )?;
+    let ood = test_sequences(Dataset::Alpaca, ctx.seed, ctx.scale.eval_seqs());
+
+    for (base, pruned) in sweep(ctx) {
+        log::info(format!("fig7 running {pruned}"));
+        let plc = pipeline_cfg(ctx, base, pruned, steps);
+        let quantized = plc.quantized;
+        let res = Pipeline::new(ctx.rt, plc).run()?;
+        let big_cfg = ctx.rt.load(&format!("eval_{base}"))?.meta.config.clone();
+        let pruned_cfg = ctx.rt.load(&format!("eval_{pruned}"))?.meta.config.clone();
+        let reduction = big_cfg.param_count() as f64
+            / (pruned_cfg.param_count() / if quantized { 4 } else { 1 }) as f64;
+        // QLoRAM: recovered lora on the full model
+        let ev = Evaluator::new(
+            ctx.rt,
+            &format!("eval_{base}"),
+            &[&res.base_params, &res.lora_recovered],
+        )?;
+        let qloram_ppl = ev.perplexity(&ood, true)?;
+        // naive pruning: aligned pruned model, fresh (identity) lora
+        let zero = init_lora(&pruned_cfg, 0);
+        let evn = Evaluator::new(
+            ctx.rt,
+            &format!("eval_{pruned}"),
+            &[&res.pruned_params, &zero],
+        )?;
+        let naive_ppl = evn.perplexity(&ood, true)?;
+        // reference: untouched big base
+        let zero_big = init_lora(&big_cfg, 0);
+        let evb = Evaluator::new(ctx.rt, &format!("eval_{base}"), &[&res.base_params, &zero_big])?;
+        let big_ppl = evb.perplexity(&ood, true)?;
+        csv.row(&crate::csv_row![pruned, reduction, qloram_ppl, naive_ppl, big_ppl])?;
+    }
+    log::info(format!("fig7 -> {}", ctx.out_dir.display()));
+    Ok(())
+}
+
+pub fn run_fig8(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.scale.steps();
+    let (n_math, n_csr, n_code, code_samples) = ctx.scale.downstream_sizes();
+    let mut csv = Csv::create(
+        ctx.out_dir.join("fig8_downstream_vs_reduction.csv"),
+        &["pruned_cfg", "reduction", "mathqa", "gsm", "csr_mean", "pass1", "pass10"],
+    )?;
+    for (base, pruned) in sweep(ctx) {
+        log::info(format!("fig8 running {pruned}"));
+        let plc = pipeline_cfg(ctx, base, pruned, steps);
+        let quantized = plc.quantized;
+        let res = Pipeline::new(ctx.rt, plc).run()?;
+        let big_cfg = ctx.rt.load(&format!("eval_{base}"))?.meta.config.clone();
+        let pruned_cfg = ctx.rt.load(&format!("eval_{pruned}"))?.meta.config.clone();
+        let reduction = big_cfg.param_count() as f64
+            / (pruned_cfg.param_count() / if quantized { 4 } else { 1 }) as f64;
+        let m = ModelUnderTest::new(ctx.rt, base, &[&res.base_params, &res.lora_recovered])?;
+        let s = eval_all(&m, ctx.seed, n_math, n_csr, n_code, code_samples, &ctx.scale.temps())?;
+        csv.row(&crate::csv_row![
+            pruned, reduction, s.mathqa, s.gsm, s.csr_mean, s.pass1, s.pass10
+        ])?;
+    }
+    log::info(format!("fig8 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

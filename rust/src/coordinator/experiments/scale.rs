@@ -1,0 +1,83 @@
+//! Experiment scale presets.
+//!
+//! `smoke` exercises every code path in minutes on the tiny artifacts;
+//! `paper` runs the proxy-family reproduction (hours on this single-core
+//! box — step counts noted per experiment in EXPERIMENTS.md).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Paper,
+}
+
+impl Scale {
+    pub fn from_str(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    /// (pretrain, align, sft) step counts.
+    pub fn steps(&self) -> (usize, usize, usize) {
+        match self {
+            Scale::Smoke => (30, 8, 16),
+            Scale::Paper => (600, 120, 200),
+        }
+    }
+
+    pub fn eval_every(&self) -> usize {
+        match self {
+            Scale::Smoke => 8,
+            Scale::Paper => 40,
+        }
+    }
+
+    pub fn eval_seqs(&self) -> usize {
+        match self {
+            Scale::Smoke => 16,
+            Scale::Paper => 64,
+        }
+    }
+
+    /// (n_math, n_csr_per_task, n_code, code_samples)
+    pub fn downstream_sizes(&self) -> (usize, usize, usize, usize) {
+        match self {
+            Scale::Smoke => (12, 8, 4, 4),
+            Scale::Paper => (60, 40, 16, 10),
+        }
+    }
+
+    pub fn temps(&self) -> Vec<f64> {
+        match self {
+            Scale::Smoke => vec![0.0, 0.4],
+            Scale::Paper => vec![0.0, 0.2, 0.4, 0.6, 0.8],
+        }
+    }
+
+    /// Model configs for the LLaMA-2 experiment family:
+    /// (small_lora_baseline, big_base, big_pruned, quantized)
+    pub fn family2(&self) -> (&'static str, &'static str, &'static str, bool) {
+        match self {
+            Scale::Smoke => ("tiny", "tiny", "tiny_p50", false),
+            Scale::Paper => ("l7b", "l13b", "l13b_p65", false),
+        }
+    }
+
+    /// The 70B-analogue family: (lora_baseline, base, pruned, quantized).
+    pub fn family70(&self) -> (&'static str, &'static str, &'static str, bool) {
+        match self {
+            Scale::Smoke => ("tiny", "tiny", "tiny_p50", false),
+            Scale::Paper => ("l13b", "l70b", "l70b_p75", true),
+        }
+    }
+
+    /// LLaMA-3.1 family (fig5/tab7).
+    pub fn family31(&self) -> (&'static str, &'static str, &'static str, bool) {
+        match self {
+            Scale::Smoke => ("tiny", "tiny", "tiny_p50", false),
+            Scale::Paper => ("l8b", "l70b3", "l70b3_p85", true),
+        }
+    }
+}

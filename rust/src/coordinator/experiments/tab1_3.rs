@@ -1,0 +1,152 @@
+//! Tables 1–3 (and App. E Figs. 14–15): downstream performance of LoRAM
+//! variants vs the core competition (untrained big model, LoRA-trained
+//! small sibling) on math / CSR / code, for both instruction datasets.
+//!
+//! All three tables come from the same trained models, so one runner emits
+//! tab1_math.csv, tab2_csr.csv (+ per-subtask appE rows) and tab3_code.csv.
+
+use super::{ExpCtx, Scale};
+use crate::coordinator::downstream::{eval_all, ModelUnderTest};
+use crate::coordinator::pipeline::{ensure_base, Pipeline, PipelineConfig, Variant};
+use crate::data::instruct::Dataset;
+use crate::params::init_lora;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let (pre, align, sft) = ctx.scale.steps();
+    let (n_math, n_csr, n_code, code_samples) = ctx.scale.downstream_sizes();
+    let temps = ctx.scale.temps();
+    let mut math_csv = Csv::create(
+        ctx.out_dir.join("tab1_math.csv"),
+        &["family", "method", "dataset", "mathqa", "gsm", "param_reduction"],
+    )?;
+    let mut csr_csv = Csv::create(
+        ctx.out_dir.join("tab2_csr.csv"),
+        &["family", "method", "dataset", "csr_mean", "csr_se", "param_reduction"],
+    )?;
+    let mut csr_sub_csv = Csv::create(
+        ctx.out_dir.join("appE_csr_subtasks.csv"),
+        &["family", "method", "dataset", "subtask", "acc"],
+    )?;
+    let mut code_csv = Csv::create(
+        ctx.out_dir.join("tab3_code.csv"),
+        &["family", "method", "dataset", "pass1", "pass10", "param_reduction"],
+    )?;
+
+    let mut families = vec![("13b", ctx.scale.family2())];
+    if ctx.scale == Scale::Paper {
+        families.push(("70b", ctx.scale.family70()));
+    }
+
+    for dataset in [Dataset::Hermes, Dataset::Orca] {
+        for &(family, (small, big, big_pruned, quantized)) in &families {
+            let big_params = ensure_base(ctx.rt, big, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+            let big_cfg = ctx.rt.load(&format!("eval_{big}"))?.meta.config.clone();
+            let reduction = |pruned_name: Option<&str>, q: bool| -> Result<f64> {
+                let count = match pruned_name {
+                    Some(p) => {
+                        let c = ctx.rt.load(&format!("eval_{p}"))?.meta.config.clone();
+                        let n = c.param_count();
+                        if q { n / 4 } else { n }
+                    }
+                    None => big_cfg.param_count(),
+                };
+                Ok(big_cfg.param_count() as f64 / count as f64)
+            };
+
+            // -- core competition: big w/o FT -------------------------------
+            let zero_lora = init_lora(&big_cfg, 0);
+            let mut rows: Vec<(String, ModelUnderTest, f64)> = vec![(
+                format!("{big} w/o FT"),
+                ModelUnderTest::new(ctx.rt, big, &[&big_params, &zero_lora])?,
+                1.0,
+            )];
+
+            // -- core competition: small LoRA -------------------------------
+            if small != big {
+                let small_params =
+                    ensure_base(ctx.rt, small, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+                let small_cfg = ctx.rt.load(&format!("eval_{small}"))?.meta.config.clone();
+                let plc = PipelineConfig {
+                    base: small.to_string(),
+                    pruned: None,
+                    variant: Variant::Lora,
+                    pretrain_steps: pre,
+                    align_steps: 0,
+                    sft_steps: sft,
+                    dataset,
+                    seed: ctx.seed,
+                    eval_every: 0,
+                    eval_seqs: 8,
+                    run_dir: ctx.run_dir.clone(),
+                    ..Default::default()
+                };
+                let res = Pipeline::new(ctx.rt, plc).run()?;
+                let red = big_cfg.param_count() as f64 / small_cfg.param_count() as f64;
+                rows.push((
+                    format!("{small} LoRA"),
+                    ModelUnderTest::new(ctx.rt, small, &[&small_params, &res.lora_recovered])?,
+                    red,
+                ));
+            }
+
+            // -- LoRAM variants ---------------------------------------------
+            let variants: Vec<(&str, Variant)> = if family == "70b" {
+                vec![("QLoRAM-Rand", Variant::Rand), ("QLoRAM-Stru", Variant::Stru)]
+            } else {
+                vec![
+                    ("LoRAM-Rand", Variant::Rand),
+                    ("LoRAM-Stru", Variant::Stru),
+                    ("LoRAM-Semi", Variant::Semi),
+                    ("LoRAM-Unst", Variant::Unst),
+                ]
+            };
+            for (name, v) in variants {
+                let pruned = if v.structured() { Some(big_pruned) } else { None };
+                let plc = PipelineConfig {
+                    base: big.to_string(),
+                    pruned: pruned.map(String::from),
+                    variant: v,
+                    quantized: quantized && v.structured(),
+                    pretrain_steps: pre,
+                    align_steps: align,
+                    sft_steps: sft,
+                    dataset,
+                    seed: ctx.seed,
+                    eval_every: 0,
+                    eval_seqs: 8,
+                    run_dir: ctx.run_dir.clone(),
+                    ..Default::default()
+                };
+                let res = Pipeline::new(ctx.rt, plc).run()?;
+                let red = reduction(pruned, quantized && v.structured())?;
+                rows.push((
+                    format!("{big} {name}"),
+                    ModelUnderTest::new(ctx.rt, big, &[&res.base_params, &res.lora_recovered])?,
+                    red,
+                ));
+            }
+
+            for (method, m, red) in &rows {
+                log::info(format!("tab1-3[{dataset:?}] evaluating {method}"));
+                let s = eval_all(m, ctx.seed, n_math, n_csr, n_code, code_samples, &temps)?;
+                let ds = format!("{dataset:?}");
+                math_csv.row(&crate::csv_row![
+                    family, method, ds, s.mathqa, s.gsm, red
+                ])?;
+                csr_csv.row(&crate::csv_row![
+                    family, method, ds, s.csr_mean, s.csr_se, red
+                ])?;
+                for (sub, acc) in &s.csr {
+                    csr_sub_csv.row(&crate::csv_row![family, method, ds, sub, acc])?;
+                }
+                code_csv.row(&crate::csv_row![
+                    family, method, ds, s.pass1, s.pass10, red
+                ])?;
+            }
+        }
+    }
+    log::info(format!("tab1-3 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Table 7: domain-specific fine-tuning (GSM8K stand-in) — QLoRAM-Stru on
+//! the 3.1-70B proxy, SFT'd on the math-heavy chain task directly, vs the
+//! general-instruction variant and the LoRA/base references.
+
+use super::ExpCtx;
+use crate::coordinator::downstream::{eval_gsm, ModelUnderTest};
+use crate::coordinator::pipeline::{ensure_base, Pipeline, PipelineConfig, Variant};
+use crate::data::downstream::gsm_set;
+use crate::data::instruct::Dataset;
+use crate::params::init_lora;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let (pre, align, sft) = ctx.scale.steps();
+    let (small, big, big_pruned, quantized) = ctx.scale.family31();
+    let (n_math, _, _, _) = ctx.scale.downstream_sizes();
+    let items = gsm_set(ctx.seed ^ 7, n_math);
+    let mut csv = Csv::create(
+        ctx.out_dir.join("tab7_domain.csv"),
+        &["method", "train_data", "gsm_acc", "param_reduction"],
+    )?;
+
+    let big_cfg = ctx.rt.load(&format!("eval_{big}"))?.meta.config.clone();
+    let small_cfg = ctx.rt.load(&format!("eval_{small}"))?.meta.config.clone();
+    let pruned_cfg = ctx.rt.load(&format!("eval_{big_pruned}"))?.meta.config.clone();
+    let red_small = big_cfg.param_count() as f64 / small_cfg.param_count() as f64;
+    let red_q = big_cfg.param_count() as f64
+        / (pruned_cfg.param_count() / if quantized { 4 } else { 1 }) as f64;
+
+    // references without fine-tuning
+    let big_params = ensure_base(ctx.rt, big, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+    let small_params = ensure_base(ctx.rt, small, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+    let m_big = ModelUnderTest::new(ctx.rt, big, &[&big_params, &init_lora(&big_cfg, 0)])?;
+    let m_small = ModelUnderTest::new(ctx.rt, small, &[&small_params, &init_lora(&small_cfg, 0)])?;
+    csv.row(&crate::csv_row![format!("{small} w/o FT"), "-", eval_gsm(&m_small, &items)?, red_small])?;
+    csv.row(&crate::csv_row![format!("{big} w/o FT"), "-", eval_gsm(&m_big, &items)?, 1.0])?;
+
+    // QLoRAM-Stru: general SFT (hermes) vs domain SFT (orca's chain-heavy mix)
+    for (train, dataset) in [("general", Dataset::Hermes), ("domain", Dataset::Orca)] {
+        let plc = PipelineConfig {
+            base: big.to_string(),
+            pruned: Some(big_pruned.to_string()),
+            variant: Variant::Stru,
+            quantized,
+            pretrain_steps: pre,
+            align_steps: align,
+            sft_steps: sft,
+            dataset,
+            seed: ctx.seed,
+            eval_every: 0,
+            eval_seqs: 8,
+            run_dir: ctx.run_dir.clone(),
+            ..Default::default()
+        };
+        log::info(format!("tab7 running QLoRAM-Stru ({train})"));
+        let res = Pipeline::new(ctx.rt, plc).run()?;
+        let m = ModelUnderTest::new(ctx.rt, big, &[&res.base_params, &res.lora_recovered])?;
+        csv.row(&crate::csv_row![
+            format!("{big} QLoRAM-Stru"),
+            train,
+            eval_gsm(&m, &items)?,
+            red_q
+        ])?;
+    }
+
+    // 70B LoRA upper reference
+    let plc = PipelineConfig {
+        base: big.to_string(),
+        pruned: None,
+        variant: Variant::Lora,
+        pretrain_steps: pre,
+        align_steps: 0,
+        sft_steps: sft,
+        dataset: Dataset::Hermes,
+        seed: ctx.seed,
+        eval_every: 0,
+        eval_seqs: 8,
+        run_dir: ctx.run_dir.clone(),
+        ..Default::default()
+    };
+    let res = Pipeline::new(ctx.rt, plc).run()?;
+    let m = ModelUnderTest::new(ctx.rt, big, &[&res.base_params, &res.lora_recovered])?;
+    csv.row(&crate::csv_row![format!("{big} LoRA"), "general", eval_gsm(&m, &items)?, 1.0])?;
+
+    log::info(format!("tab7 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Table 8: online-phase peak memory / latency / throughput — small-LoRA
+//! vs big-LoRA vs big-LoRAM-Stru, measured on this testbed (the paper's
+//! 1024-sample workload scaled by the artifact batch size).
+
+use super::ExpCtx;
+use crate::coordinator::pipeline::ensure_base;
+use crate::coordinator::train::TrainSession;
+use crate::data::instruct::{Dataset, InstructGen};
+use crate::data::make_batch;
+use crate::params::init_lora;
+use crate::pruning;
+use crate::tokenizer::Tokenizer;
+use crate::util::log::{self, Csv};
+use anyhow::Result;
+use std::time::Instant;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let (pre, _align, _sft) = ctx.scale.steps();
+    let (small, big, big_pruned, _) = ctx.scale.family2();
+    let workload_steps = match ctx.scale {
+        super::Scale::Smoke => 6,
+        super::Scale::Paper => 32,
+    };
+    let mut csv = Csv::create(
+        ctx.out_dir.join("tab8_training_cost.csv"),
+        &["method", "model_params", "reduction", "peak_rss_mib",
+          "latency_s", "throughput_samples_s"],
+    )?;
+
+    let big_cfg = ctx.rt.load(&format!("eval_{big}"))?.meta.config.clone();
+    let jobs: Vec<(String, String)> = vec![
+        (format!("{small} LoRA"), format!("sft_{small}")),
+        (format!("{big} LoRA"), format!("sft_{big}")),
+        (format!("{big} LoRAM-Stru"), format!("sft_{big_pruned}")),
+    ];
+
+    for (method, artifact) in jobs {
+        let art = ctx.rt.load(&artifact)?;
+        let cfg = art.meta.config.clone();
+        // weights for the model the artifact trains
+        let params = if artifact.contains(&format!("sft_{big_pruned}")) {
+            let base = ensure_base(ctx.rt, big, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+            let full_cfg = ctx.rt.load(&format!("eval_{big}"))?.meta.config.clone();
+            let plan = pruning::StructuredPlan::random(&full_cfg, &cfg, ctx.seed)?;
+            pruning::slice_params(&base, &full_cfg, &plan)?
+        } else {
+            let name = artifact.trim_start_matches("sft_");
+            ensure_base(ctx.rt, name, pre, 1e-3, ctx.seed, &ctx.run_dir)?
+        };
+        let lora = init_lora(&cfg, ctx.seed);
+        let mut sess = TrainSession::new(ctx.rt, &artifact, &[&params, &lora])?;
+        let b = sess.batch_size();
+        let s = sess.seq_len();
+        let tk = Tokenizer::new();
+        let mut gen = InstructGen::new(Dataset::Hermes, ctx.seed, 0);
+        // one warmup step (compile+cache effects), then timed workload
+        let seqs: Vec<Vec<i32>> = gen.batch_examples(b).iter().map(|e| e.tokens(&tk)).collect();
+        sess.train_step(&make_batch(&seqs, b, s, true), 1e-3)?;
+        let t0 = Instant::now();
+        for _ in 0..workload_steps {
+            let seqs: Vec<Vec<i32>> =
+                gen.batch_examples(b).iter().map(|e| e.tokens(&tk)).collect();
+            sess.train_step(&make_batch(&seqs, b, s, true), 1e-3)?;
+        }
+        let latency = t0.elapsed().as_secs_f64();
+        let samples = (workload_steps * b) as f64;
+        let reduction = big_cfg.param_count() as f64 / cfg.param_count() as f64;
+        log::info(format!(
+            "tab8 {method}: {latency:.2}s for {samples} samples ({:.2} samples/s)",
+            samples / latency
+        ));
+        csv.row(&crate::csv_row![
+            method,
+            cfg.param_count(),
+            format!("{reduction:.2}"),
+            format!("{:.0}", crate::bench::peak_rss_mib()),
+            format!("{latency:.2}"),
+            format!("{:.3}", samples / latency)
+        ])?;
+    }
+    log::info(format!("tab8 -> {}", ctx.out_dir.display()));
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Autoregressive generation over a `logits_*` artifact.
+//!
+//! The artifact computes full-sequence logits for a fixed (B, S); the
+//! generator packs up to B prompts per call, reads the logits at each
+//! prompt's frontier position, samples (greedy or temperature/top-p), and
+//! repeats until EOS or budget. This full-reforward decode is the v1 hot
+//! path measured in EXPERIMENTS.md §Perf.
+
+use crate::runtime::{Artifact, Runtime};
+use crate::tensor::{Tensor, TensorStore};
+use crate::tokenizer::{Tokenizer, EOS, PAD, SEP};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::rc::Rc;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SampleCfg {
+    /// 0.0 = greedy
+    pub temperature: f64,
+    pub top_p: f64,
+    pub max_new: usize,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        SampleCfg {
+            temperature: 0.0,
+            top_p: 0.95,
+            max_new: 16,
+        }
+    }
+}
+
+pub struct Generator<'r> {
+    pub rt: &'r Runtime,
+    pub art: Rc<Artifact>,
+    /// weights device-resident; only the token grid re-uploads per step
+    sess: std::cell::RefCell<crate::runtime::DeviceSession>,
+    pub vocab: usize,
+}
+
+impl<'r> Generator<'r> {
+    pub fn new(rt: &'r Runtime, artifact: &str, stores: &[&TensorStore]) -> Result<Generator<'r>> {
+        let art = rt.load(artifact)?;
+        let sess = crate::runtime::DeviceSession::new(rt, art.clone(), stores)?;
+        let vocab = art.meta.config.vocab_size;
+        Ok(Generator {
+            rt,
+            art,
+            sess: std::cell::RefCell::new(sess),
+            vocab,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.art.meta.batch()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.art.meta.seq()
+    }
+
+    /// Generate completions for up to `batch_size` prompts at once.
+    /// Returns the generated token ids (response segment only).
+    pub fn generate_batch(
+        &self,
+        prompts: &[String],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch_size();
+        let s = self.seq_len();
+        assert!(prompts.len() <= b);
+        let tk = Tokenizer::new();
+        // BOS + prompt + SEP, truncated from the left to leave room
+        let mut seqs: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| {
+                let mut ids = vec![crate::tokenizer::BOS];
+                ids.extend(tk.encode(p));
+                ids.push(SEP);
+                if ids.len() > s - cfg.max_new.min(s / 2) {
+                    let keep = s - cfg.max_new.min(s / 2);
+                    ids = ids[ids.len() - keep..].to_vec();
+                }
+                ids
+            })
+            .collect();
+        let starts: Vec<usize> = seqs.iter().map(|x| x.len()).collect();
+        let mut done = vec![false; prompts.len()];
+        for _ in 0..cfg.max_new {
+            if done.iter().all(|&d| d) || seqs.iter().any(|x| x.len() >= s) {
+                break;
+            }
+            let mut toks = Vec::with_capacity(b * s);
+            for i in 0..b {
+                if i < seqs.len() {
+                    toks.extend(crate::tokenizer::pad_to(&seqs[i], s));
+                } else {
+                    toks.extend(std::iter::repeat(PAD).take(s));
+                }
+            }
+            let mut sess = self.sess.borrow_mut();
+            sess.set(self.rt, "tokens", &Tensor::from_i32(&[b, s], toks))?;
+            let out = sess.run(self.rt)?;
+            let logits = out.get("logits")?;
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let pos = seq.len() - 1;
+                let row = &logits.f32s()[(i * s + pos) * self.vocab..(i * s + pos + 1) * self.vocab];
+                let next = sample_token(row, cfg, rng);
+                seq.push(next);
+                if next == EOS || next == PAD {
+                    done[i] = true;
+                }
+            }
+        }
+        Ok(seqs
+            .iter()
+            .zip(&starts)
+            .map(|(seq, &st)| {
+                let tail = &seq[st..];
+                let end = tail
+                    .iter()
+                    .position(|&t| t == EOS || t == PAD)
+                    .unwrap_or(tail.len());
+                tail[..end].to_vec()
+            })
+            .collect())
+    }
+
+    /// Convenience: generate text responses for prompts (chunked to fit B).
+    pub fn complete(&self, prompts: &[String], cfg: SampleCfg, rng: &mut Rng) -> Result<Vec<String>> {
+        let tk = Tokenizer::new();
+        let mut out = vec![];
+        for chunk in prompts.chunks(self.batch_size()) {
+            for ids in self.generate_batch(chunk, cfg, rng)? {
+                out.push(tk.decode(&ids));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Greedy / temperature+top-p sampling from a logits row.
+pub fn sample_token(logits: &[f32], cfg: SampleCfg, rng: &mut Rng) -> i32 {
+    if cfg.temperature <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    // softmax with temperature
+    let t = cfg.temperature as f32;
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut probs: Vec<(usize, f32)> = logits
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i, ((l - mx) / t).exp()))
+        .collect();
+    let z: f32 = probs.iter().map(|(_, p)| p).sum();
+    for p in probs.iter_mut() {
+        p.1 /= z;
+    }
+    // top-p nucleus
+    probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut cum = 0.0;
+    let mut cut = probs.len();
+    for (i, (_, p)) in probs.iter().enumerate() {
+        cum += p;
+        if cum >= cfg.top_p as f32 {
+            cut = i + 1;
+            break;
+        }
+    }
+    probs.truncate(cut);
+    let ws: Vec<f32> = probs.iter().map(|(_, p)| *p).collect();
+    probs[rng.weighted(&ws)].0 as i32
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        let t = sample_token(
+            &logits,
+            SampleCfg {
+                temperature: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        assert_eq!(t, 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0, 5.0, 0.0, 0.0];
+        let cfg = SampleCfg {
+            temperature: 0.2,
+            top_p: 1.0,
+            max_new: 1,
+        };
+        let hits = (0..100)
+            .filter(|_| sample_token(&logits, cfg, &mut rng) == 1)
+            .count();
+        assert!(hits > 95);
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        let mut rng = Rng::new(2);
+        // one dominant token, tiny tail; top_p=0.5 keeps only the head
+        let logits = [10.0, 0.0, 0.0, 0.0];
+        let cfg = SampleCfg {
+            temperature: 1.0,
+            top_p: 0.5,
+            max_new: 1,
+        };
+        for _ in 0..50 {
+            assert_eq!(sample_token(&logits, cfg, &mut rng), 0);
+        }
+    }
+}

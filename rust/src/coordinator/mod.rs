@@ -1,0 +1,14 @@
+//! The LoRAM coordinator: training sessions, the prune→align→SFT→recover
+//! pipeline, evaluators, generation, analysis, and the per-table/figure
+//! experiment runners.
+
+pub mod analysis;
+pub mod downstream;
+pub mod evaluate;
+pub mod experiments;
+pub mod generate;
+pub mod pipeline;
+pub mod train;
+
+pub use pipeline::{Pipeline, PipelineConfig, Variant};
+pub use train::TrainSession;

@@ -1,0 +1,426 @@
+//! The LoRAM pipeline (paper Fig. 2 / Algorithm 1):
+//!
+//!   W0  --P(·)-->  W0^P  --L_A-->  W0^{P,A}  --Q(·)-->  W0^{P,A,Q}   (offline)
+//!   W_Δ --P(·)-->  W_Δ^P --L_SFT--> W_Δ^{P*} --R(·)-->  W_Δ^{R*}     (online)
+//!   inference: h = x (W0 + W_Δ^{R*})
+//!
+//! Stages map 1:1 onto methods here: `ensure_base` (the stand-in for the
+//! published pre-trained checkpoint), `prune`, `align`, `sft`, `recover`.
+//! Plain-LoRA baselines run the same machinery with no pruning stage.
+
+use crate::coordinator::evaluate::{test_sequences, Evaluator};
+use crate::coordinator::train::TrainSession;
+use crate::data::instruct::{Dataset, InstructGen};
+use crate::data::{corpus::Corpus, make_batch};
+use crate::params::{init_lora, init_params};
+use crate::pruning::{self, StructuredPlan};
+use crate::quant;
+use crate::runtime::Runtime;
+use crate::tensor::TensorStore;
+use crate::tokenizer::Tokenizer;
+use crate::util::log;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// plain LoRA on the (unpruned) base — the paper's baselines
+    Lora,
+    /// LoRAM-Rand: randomly structured
+    Rand,
+    /// LoRAM-Stru: gradient-importance structured (LLM-Pruner-style)
+    Stru,
+    /// LoRAM-Semi: 4:8 semi-structured masks
+    Semi,
+    /// LoRAM-Unst: unstructured magnitude masks
+    Unst,
+}
+
+impl Variant {
+    pub fn from_str(s: &str) -> Option<Variant> {
+        match s {
+            "lora" => Some(Variant::Lora),
+            "rand" => Some(Variant::Rand),
+            "stru" => Some(Variant::Stru),
+            "semi" => Some(Variant::Semi),
+            "unst" => Some(Variant::Unst),
+            _ => None,
+        }
+    }
+
+    pub fn structured(&self) -> bool {
+        matches!(self, Variant::Rand | Variant::Stru)
+    }
+
+    pub fn masked(&self) -> bool {
+        matches!(self, Variant::Semi | Variant::Unst)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub base: String,           // e.g. "l13b"
+    pub pruned: Option<String>, // e.g. "l13b_p65" for structured variants
+    pub variant: Variant,
+    pub quantized: bool, // QLoRAM: NF4 base during SFT
+    pub unst_ratio: f64, // pruning ratio for Unst masks (Semi is fixed 4:8)
+    pub pretrain_steps: usize,
+    pub align_steps: usize,
+    pub sft_steps: usize,
+    pub lr_pretrain: f64,
+    pub lr_align: f64,
+    pub lr_sft: f64,
+    pub dataset: Dataset,
+    pub seed: u64,
+    pub eval_every: usize, // 0 = only final
+    pub eval_seqs: usize,  // held-out sequences per ppl point
+    pub align: bool,       // false = "w/o Alignment" ablation
+    pub run_dir: PathBuf,  // cache directory for base checkpoints
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            base: "l13b".into(),
+            pruned: Some("l13b_p65".into()),
+            variant: Variant::Stru,
+            quantized: false,
+            unst_ratio: 0.55,
+            pretrain_steps: 300,
+            align_steps: 60,
+            sft_steps: 120,
+            lr_pretrain: 1e-3,
+            lr_align: 5e-4,
+            lr_sft: 1e-3,
+            dataset: Dataset::Hermes,
+            seed: 0,
+            eval_every: 30,
+            eval_seqs: 32,
+            align: true,
+            run_dir: PathBuf::from("runs"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub ood_ppl: f64,     // Alpaca stand-in, recovered/full model
+    pub id_ppl: f64,      // in-domain test split, recovered/full model
+    pub ood_ppl_pruned: Option<f64>, // "w/o Recovery" ablation
+}
+
+pub struct PipelineResult {
+    pub base_params: TensorStore,
+    pub pruned_params: TensorStore, // == base for masked variants (masked weights)
+    pub masks: Option<TensorStore>,
+    pub plan: Option<StructuredPlan>,
+    pub lora_pruned: TensorStore,
+    pub lora_recovered: TensorStore,
+    pub sft_losses: Vec<f32>,
+    pub align_losses: Vec<f32>,
+    pub eval_points: Vec<EvalPoint>,
+    pub sft_step_ms: f64,
+    pub peak_rss_mib: f64,
+}
+
+pub struct Pipeline<'r> {
+    pub rt: &'r Runtime,
+    pub cfg: PipelineConfig,
+}
+
+impl<'r> Pipeline<'r> {
+    pub fn new(rt: &'r Runtime, cfg: PipelineConfig) -> Pipeline<'r> {
+        Pipeline { rt, cfg }
+    }
+
+    /// The "published checkpoint" stand-in: pre-train the base config on the
+    /// general corpus once and cache it under run_dir.
+    pub fn ensure_base(&self) -> Result<TensorStore> {
+        ensure_base(
+            self.rt,
+            &self.cfg.base,
+            self.cfg.pretrain_steps,
+            self.cfg.lr_pretrain,
+            self.cfg.seed,
+            &self.cfg.run_dir,
+        )
+    }
+
+    /// Full LoRAM pipeline. Returns weights + curves for the experiments.
+    pub fn run(&self) -> Result<PipelineResult> {
+        let cfg = &self.cfg;
+        let base_params = self.ensure_base()?;
+        let base_art = self.rt.load(&format!("eval_{}", cfg.base))?;
+        let full_cfg = base_art.meta.config.clone();
+
+        // ---- P(·): prune -------------------------------------------------
+        let (mut pruned_params, plan, masks) = match cfg.variant {
+            Variant::Lora => (base_params.clone(), None, None),
+            Variant::Rand | Variant::Stru => {
+                let pruned_name = cfg
+                    .pruned
+                    .as_ref()
+                    .context("structured variant needs a pruned config name")?;
+                let pruned_cfg = self
+                    .rt
+                    .load(&format!("eval_{pruned_name}"))?
+                    .meta
+                    .config
+                    .clone();
+                let plan = if cfg.variant == Variant::Rand {
+                    StructuredPlan::random(&full_cfg, &pruned_cfg, cfg.seed ^ 0xa11)?
+                } else {
+                    let (head_imp, ff_imp) = self.grad_importance(&base_params)?;
+                    StructuredPlan::from_importance(&full_cfg, &pruned_cfg, &head_imp, &ff_imp)?
+                };
+                let sliced = pruning::slice_params(&base_params, &full_cfg, &plan)?;
+                (sliced, Some(plan), None)
+            }
+            Variant::Semi | Variant::Unst => {
+                let strategy = if cfg.variant == Variant::Semi { "semi" } else { "unst" };
+                let (masks, masked) =
+                    pruning::build_masks(&base_params, &full_cfg, strategy, cfg.unst_ratio)?;
+                (masked, None, Some(masks))
+            }
+        };
+
+        // ---- L_A: alignment (continual pre-training of the pruned model) -
+        let mut align_losses = vec![];
+        if cfg.align && cfg.align_steps > 0 && cfg.variant != Variant::Lora {
+            let align_art = match cfg.variant {
+                Variant::Rand | Variant::Stru => {
+                    format!("pretrain_{}", cfg.pruned.as_ref().unwrap())
+                }
+                _ => format!("pretrain_{}_m", cfg.base),
+            };
+            let mut stores: Vec<&TensorStore> = vec![&pruned_params];
+            if let Some(m) = &masks {
+                stores.push(m);
+            }
+            let mut sess = TrainSession::new(self.rt, &align_art, &stores)?;
+            let b = sess.batch_size();
+            let s = sess.seq_len();
+            // alignment corpus: same generator family as pre-training,
+            // disjoint stream (paper §B: ~105M-token general corpus)
+            let mut corpus = Corpus::new(cfg.seed ^ 0xa119, 0.5);
+            for step in 0..cfg.align_steps {
+                let seqs = corpus.next_seqs(b, s);
+                let batch = make_batch(&seqs, b, s, false);
+                let loss = sess.train_step(&batch, cfg.lr_align)?;
+                align_losses.push(loss);
+                if step % 20 == 0 {
+                    log::info(format!("align[{}] step {step} loss {loss:.4}", cfg.base));
+                }
+            }
+            let pnames: Vec<String> = sess
+                .art
+                .meta
+                .name_list("param_names");
+            pruned_params = sess.extract(&pnames)?;
+        }
+
+        // ---- Q(·): NF4 quantisation of the (aligned) pruned base ---------
+        let quant_store = if cfg.quantized {
+            let sft_art_name = self.sft_artifact_name()?;
+            let sft_art = self.rt.load(&sft_art_name)?;
+            let qnames = sft_art.meta.name_list("quant_names");
+            Some(quant::quantize_projections(
+                &pruned_params,
+                &qnames,
+                quant::NF4_BLOCK,
+            )?)
+        } else {
+            None
+        };
+
+        // ---- L_SFT: pruned low-rank matrix training ----------------------
+        let sft_art_name = self.sft_artifact_name()?;
+        let sft_art = self.rt.load(&sft_art_name)?;
+        let train_cfg = sft_art.meta.config.clone();
+        let lora_init = init_lora(&train_cfg, cfg.seed ^ 0x5f7);
+        let mut stores: Vec<&TensorStore> = vec![&pruned_params, &lora_init];
+        if let Some(q) = &quant_store {
+            stores.push(q);
+        }
+        if let Some(m) = &masks {
+            stores.push(m);
+        }
+        let mut sess = TrainSession::new(self.rt, &sft_art_name, &stores)?;
+        let b = sess.batch_size();
+        let s = sess.seq_len();
+        let lnames = sess.art.meta.name_list("lora_names");
+        let tk = Tokenizer::new();
+        let mut gen = InstructGen::new(cfg.dataset, cfg.seed, 0);
+        let ood_seqs = test_sequences(Dataset::Alpaca, cfg.seed, cfg.eval_seqs);
+        let id_seqs = test_sequences(cfg.dataset, cfg.seed, cfg.eval_seqs);
+        let mut eval_points = vec![];
+
+        for step in 0..cfg.sft_steps {
+            let seqs: Vec<Vec<i32>> = gen
+                .batch_examples(b)
+                .iter()
+                .map(|e| e.tokens(&tk))
+                .collect();
+            let batch = make_batch(&seqs, b, s, true);
+            let loss = sess.train_step(&batch, cfg.lr_sft)?;
+            if step % 20 == 0 {
+                log::info(format!(
+                    "sft[{}:{:?}] step {step} loss {loss:.4}",
+                    cfg.base, cfg.variant
+                ));
+            }
+            let at_eval = cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0;
+            if at_eval || step + 1 == cfg.sft_steps {
+                let lora_now = sess.extract(&lnames)?;
+                let recovered = self.recover(&lora_now, &full_cfg, plan.as_ref())?;
+                let ev = Evaluator::new(
+                    self.rt,
+                    &format!("eval_{}", cfg.base),
+                    &[&base_params, &recovered],
+                )?;
+                let ood = ev.perplexity(&ood_seqs, true)?;
+                let id = ev.perplexity(&id_seqs, true)?;
+                // "w/o Recovery": evaluate on the pruned/masked base
+                let ood_pruned = match cfg.variant {
+                    Variant::Rand | Variant::Stru => {
+                        let evp = Evaluator::new(
+                            self.rt,
+                            &format!("eval_{}", cfg.pruned.as_ref().unwrap()),
+                            &[&pruned_params, &lora_now],
+                        )?;
+                        Some(evp.perplexity(&ood_seqs, true)?)
+                    }
+                    Variant::Semi | Variant::Unst => {
+                        let evp = Evaluator::new(
+                            self.rt,
+                            &format!("eval_{}", cfg.base),
+                            &[&pruned_params, &lora_now],
+                        )?;
+                        Some(evp.perplexity(&ood_seqs, true)?)
+                    }
+                    Variant::Lora => None,
+                };
+                eval_points.push(EvalPoint {
+                    step: step + 1,
+                    ood_ppl: ood,
+                    id_ppl: id,
+                    ood_ppl_pruned: ood_pruned,
+                });
+                log::info(format!(
+                    "  eval step {} ood_ppl {ood:.3} id_ppl {id:.3}",
+                    step + 1
+                ));
+            }
+        }
+
+        let lora_pruned = sess.extract(&lnames)?;
+        let lora_recovered = self.recover(&lora_pruned, &full_cfg, plan.as_ref())?;
+        Ok(PipelineResult {
+            base_params,
+            pruned_params,
+            masks,
+            plan,
+            lora_pruned,
+            lora_recovered,
+            sft_losses: sess.losses.clone(),
+            align_losses,
+            eval_points,
+            sft_step_ms: sess.mean_step_ms(),
+            peak_rss_mib: crate::bench::peak_rss_mib(),
+        })
+    }
+
+    /// R(·): recovery — scatter for structured variants, identity for
+    /// non-structured (deployment note C3) and plain LoRA.
+    pub fn recover(
+        &self,
+        lora: &TensorStore,
+        full_cfg: &crate::runtime::ModelCfg,
+        plan: Option<&StructuredPlan>,
+    ) -> Result<TensorStore> {
+        match plan {
+            Some(p) => pruning::recover_lora(lora, full_cfg, p),
+            None => Ok(lora.clone()),
+        }
+    }
+
+    fn sft_artifact_name(&self) -> Result<String> {
+        let cfg = &self.cfg;
+        Ok(match cfg.variant {
+            Variant::Lora => format!("sft_{}", cfg.base),
+            Variant::Rand | Variant::Stru => {
+                let p = cfg.pruned.as_ref().context("pruned cfg required")?;
+                if cfg.quantized {
+                    format!("sft_{p}_q")
+                } else {
+                    format!("sft_{p}")
+                }
+            }
+            Variant::Semi | Variant::Unst => {
+                if cfg.quantized {
+                    bail!("masked + quantized SFT artifact not in the suite");
+                }
+                format!("sft_{}_m", cfg.base)
+            }
+        })
+    }
+
+    /// Run the gradimp artifact on a calibration batch -> (head_imp, ff_imp).
+    pub fn grad_importance(
+        &self,
+        base_params: &TensorStore,
+    ) -> Result<(crate::tensor::Tensor, crate::tensor::Tensor)> {
+        let art = self.rt.load(&format!("gradimp_{}", self.cfg.base))?;
+        let b = art.meta.batch();
+        let s = art.meta.seq();
+        let mut corpus = Corpus::new(self.cfg.seed ^ 0xca11b, 0.5);
+        let seqs = corpus.next_seqs(b, s);
+        let batch = make_batch(&seqs, b, s, false);
+        let mut store = base_params.clone();
+        store.insert("tokens", batch.tokens);
+        store.insert("loss_mask", batch.loss_mask);
+        let out = self.rt.run(&art, &store)?;
+        Ok((out.get("head_imp")?.clone(), out.get("ff_imp")?.clone()))
+    }
+}
+
+/// Pre-train (or load the cached) base model for `cfg_name`.
+pub fn ensure_base(
+    rt: &Runtime,
+    cfg_name: &str,
+    steps: usize,
+    lr: f64,
+    seed: u64,
+    run_dir: &std::path::Path,
+) -> Result<TensorStore> {
+    let path = run_dir.join(format!("base_{cfg_name}_s{seed}_t{steps}.lmck"));
+    if path.exists() {
+        log::info(format!("base[{cfg_name}]: loading cached {}", path.display()));
+        return TensorStore::load(&path);
+    }
+    let art_name = format!("pretrain_{cfg_name}");
+    let art = rt.load(&art_name)?;
+    let cfg = art.meta.config.clone();
+    let params = init_params(&cfg, seed);
+    let mut sess = TrainSession::new(rt, &art_name, &[&params])?;
+    let b = sess.batch_size();
+    let s = sess.seq_len();
+    let mut corpus = Corpus::new(seed ^ 0x9e37, 0.5);
+    for step in 0..steps {
+        let seqs = corpus.next_seqs(b, s);
+        let batch = make_batch(&seqs, b, s, false);
+        let loss = sess.train_step(&batch, lr)?;
+        if step % 50 == 0 {
+            log::info(format!("pretrain[{cfg_name}] step {step} loss {loss:.4}"));
+        }
+    }
+    let pnames = sess.art.meta.name_list("param_names");
+    let out = sess.extract(&pnames)?;
+    out.save(&path)?;
+    log::info(format!(
+        "base[{cfg_name}]: trained {steps} steps, saved {}",
+        path.display()
+    ));
+    Ok(out)
+}

@@ -1,0 +1,140 @@
+//! General pre-train / alignment corpus (FineWeb + OpenWebMath stand-in).
+//!
+//! Two mixed streams, mirroring the paper's §B alignment mix:
+//! * "web" text — templated sentences over a Zipf-weighted vocabulary
+//!   (declarative facts about the category world, connective filler)
+//! * "math" text — declarative arithmetic/sequence statements
+//!
+//! Pre-training on this corpus is what gives the proxy base models the
+//! knowledge that pruning disturbs and alignment (Eq. 8, same generator,
+//! different seed) restores.
+
+use super::tasks::{self, Skill};
+use crate::util::rng::Rng;
+
+const CONNECTIVES: &[&str] = &["and", "but", "so", "then", "also", "thus"];
+const VERBS: &[&str] = &["sees", "likes", "finds", "has", "meets", "helps"];
+
+/// One declarative "web" sentence.
+fn web_sentence(rng: &mut Rng) -> String {
+    match rng.below(3) {
+        0 => {
+            // category fact: "a fox is an animal."
+            let (cat, ws) = *rng.choice(tasks::CATEGORIES);
+            let w = *rng.choice(ws);
+            format!("{w} is a {cat}.")
+        }
+        1 => {
+            // relational filler with Zipf-ish word choice
+            let (_, ws1) = *rng.choice(tasks::CATEGORIES);
+            let (_, ws2) = *rng.choice(tasks::CATEGORIES);
+            let a = ws1[zipf(rng, ws1.len())];
+            let b = ws2[zipf(rng, ws2.len())];
+            let v = *rng.choice(VERBS);
+            let c = *rng.choice(CONNECTIVES);
+            format!("the {a} {v} the {b} {c} waits.")
+        }
+        _ => {
+            // odd-one-out / comparison facts
+            let it = tasks::gen(Skill::OddOne, rng);
+            format!("{}{}.", it.question, it.answer)
+        }
+    }
+}
+
+/// One declarative "math" sentence.
+fn math_sentence(rng: &mut Rng) -> String {
+    let skill = match rng.below(6) {
+        0 => Skill::Add,
+        1 => Skill::Sub,
+        2 => Skill::Mul,
+        3 => Skill::Max,
+        4 => Skill::Succ,
+        _ => Skill::Chain,
+    };
+    let it = tasks::gen(skill, rng);
+    if it.question.ends_with('=') {
+        format!("{}{}.", it.question, it.answer)
+    } else {
+        format!("{} {}.", it.question, it.answer)
+    }
+}
+
+/// Streaming corpus generator: emits token sequences of exactly `seq_len+1`
+/// tokens (packed sentences, no padding — pre-training uses every slot).
+pub struct Corpus {
+    rng: Rng,
+    /// fraction of math sentences in the mix (paper mixes FineWeb with
+    /// OpenWebMath; we default to an even blend)
+    pub math_frac: f64,
+    buf: Vec<i32>,
+}
+
+impl Corpus {
+    pub fn new(seed: u64, math_frac: f64) -> Corpus {
+        Corpus {
+            rng: Rng::new(seed),
+            math_frac,
+            buf: vec![],
+        }
+    }
+
+    /// Next packed sequence of len+1 tokens.
+    pub fn next_seq(&mut self, len: usize) -> Vec<i32> {
+        let tk = crate::tokenizer::Tokenizer::new();
+        while self.buf.len() < len + 1 {
+            let s = if self.rng.f64() < self.math_frac {
+                math_sentence(&mut self.rng)
+            } else {
+                web_sentence(&mut self.rng)
+            };
+            self.buf.extend(tk.encode(&s));
+            self.buf.push(b' ' as i32);
+        }
+        let out: Vec<i32> = self.buf.drain(..len + 1).collect();
+        out
+    }
+
+    pub fn next_seqs(&mut self, n: usize, len: usize) -> Vec<Vec<i32>> {
+        (0..n).map(|_| self.next_seq(len)).collect()
+    }
+}
+
+/// Zipf-ish index sampler: P(i) ∝ 1/(i+1).
+fn zipf(rng: &mut Rng, n: usize) -> usize {
+    let ws: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+    rng.weighted(&ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_have_exact_length_and_no_pad() {
+        let mut c = Corpus::new(0, 0.5);
+        for _ in 0..5 {
+            let s = c.next_seq(64);
+            assert_eq!(s.len(), 65);
+            assert!(s.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = Corpus::new(7, 0.5);
+        let mut b = Corpus::new(7, 0.5);
+        assert_eq!(a.next_seq(32), b.next_seq(32));
+        let mut c = Corpus::new(8, 0.5);
+        assert_ne!(a.next_seq(32), c.next_seq(32));
+    }
+
+    #[test]
+    fn math_frac_controls_mix() {
+        let mut all_math = Corpus::new(1, 1.0);
+        let s = all_math.next_seq(128);
+        let text = crate::tokenizer::Tokenizer::new().decode(&s);
+        // math sentences contain digits
+        assert!(text.chars().any(|c| c.is_ascii_digit()), "{text}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Downstream evaluation sets (MathQA / GSM8K / CSR / HumanEval stand-ins).
+//!
+//! Generators here produce the items + prompts; the actual scoring (option
+//! log-likelihood, greedy decode, temperature sampling + pass@k) lives in
+//! `coordinator::downstream`, which drives the eval/logits artifacts.
+
+use super::tasks::{self, Item, Skill};
+use crate::util::rng::Rng;
+
+/// A multiple-choice item: prompt, options (gold first — shuffled by the
+/// evaluator when rendering letters), or a strict-match generation target.
+#[derive(Debug, Clone)]
+pub struct EvalItem {
+    pub prompt: String,
+    pub gold: String,
+    /// gold + distractors for option-scored tasks; empty for generative
+    pub options: Vec<String>,
+    pub item: Item,
+}
+
+/// The six CSR subtasks (stand-ins for Arc-C/Arc-E/HellaSwag/OBQA/PIQA/
+/// WinoGrande): all option-scored with 1-shot prompts.
+pub const CSR_SUBTASKS: &[(&str, Skill)] = &[
+    ("member", Skill::Member),
+    ("analogy", Skill::Analogy),
+    ("oddone", Skill::OddOne),
+    ("compare", Skill::Max),
+    ("sequence", Skill::Succ),
+    ("reverse", Skill::Reverse),
+];
+
+/// One solved example of the same skill, prepended for n-shot prompting.
+fn shot_prefix(skill: Skill, rng: &mut Rng, shots: usize) -> String {
+    let mut out = String::new();
+    for _ in 0..shots {
+        let it = tasks::gen(skill, rng);
+        if it.question.ends_with('=') || it.question.ends_with(':') {
+            out.push_str(&format!("{}{} ", it.question, it.answer));
+        } else {
+            out.push_str(&format!("{} {} ", it.question, it.answer));
+        }
+    }
+    out
+}
+
+fn eval_item(skill: Skill, rng: &mut Rng, shots: usize) -> EvalItem {
+    let prefix = shot_prefix(skill, rng, shots);
+    let it = tasks::gen(skill, rng);
+    let mut options = vec![it.answer.clone()];
+    options.extend(it.distractors.iter().cloned());
+    EvalItem {
+        prompt: format!("{prefix}{}", it.question),
+        gold: it.answer.clone(),
+        options,
+        item: it,
+    }
+}
+
+/// MathQA stand-in: single-step arithmetic, option-scored, 1-shot.
+pub fn mathqa_set(seed: u64, n: usize) -> Vec<EvalItem> {
+    let mut rng = Rng::new(seed ^ 0x6d617468);
+    (0..n)
+        .map(|i| {
+            let skill = [Skill::Add, Skill::Sub, Skill::Mul][i % 3];
+            eval_item(skill, &mut rng, 1)
+        })
+        .collect()
+}
+
+/// GSM8K stand-in: multi-step chains, strict-match generation. The paper
+/// uses 8-shot CoT; our 64-token context supports 2 shots of the short
+/// chain format (noted in EXPERIMENTS.md).
+pub fn gsm_set(seed: u64, n: usize) -> Vec<EvalItem> {
+    let mut rng = Rng::new(seed ^ 0x67736d38);
+    (0..n)
+        .map(|_| {
+            let mut it = eval_item(Skill::Chain, &mut rng, 2);
+            it.options.clear(); // generative
+            it
+        })
+        .collect()
+}
+
+/// One CSR subtask set (1-shot, option-scored).
+pub fn csr_set(subtask: &str, seed: u64, n: usize) -> Vec<EvalItem> {
+    let skill = CSR_SUBTASKS
+        .iter()
+        .find(|(name, _)| *name == subtask)
+        .map(|&(_, s)| s)
+        .unwrap_or(Skill::Member);
+    let mut rng = Rng::new(seed ^ 0x637372 ^ hash_name(subtask));
+    (0..n).map(|_| eval_item(skill, &mut rng, 1)).collect()
+}
+
+/// HumanEval stand-in: program-synthesis specs, checked by the stack VM.
+pub fn code_set(seed: u64, n: usize) -> Vec<EvalItem> {
+    let mut rng = Rng::new(seed ^ 0x636f6465);
+    (0..n)
+        .map(|_| {
+            let prefix = shot_prefix(Skill::Program, &mut rng, 1);
+            let (prog, spec) = tasks::gen_program(&mut rng);
+            EvalItem {
+                prompt: format!("{prefix}{spec}"),
+                gold: prog.render(),
+                options: vec![],
+                item: Item {
+                    skill: Skill::Program,
+                    question: spec,
+                    answer: prog.render(),
+                    distractors: vec![],
+                },
+            }
+        })
+        .collect()
+}
+
+fn hash_name(s: &str) -> u64 {
+    s.bytes().fold(1469598103934665603u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(1099511628211)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mathqa_has_options_gold_first() {
+        let set = mathqa_set(0, 12);
+        assert_eq!(set.len(), 12);
+        for it in &set {
+            assert!(it.options.len() >= 3);
+            assert_eq!(it.options[0], it.gold);
+            assert!(it.prompt.contains('='));
+        }
+    }
+
+    #[test]
+    fn gsm_is_generative() {
+        let set = gsm_set(0, 4);
+        for it in &set {
+            assert!(it.options.is_empty());
+            // 2-shot prefix: the prompt contains two solved chains + query
+            assert!(it.prompt.matches("a=").count() >= 3, "{}", it.prompt);
+        }
+    }
+
+    #[test]
+    fn csr_subtasks_all_generate() {
+        for (name, _) in CSR_SUBTASKS {
+            let set = csr_set(name, 1, 8);
+            assert_eq!(set.len(), 8);
+            assert!(set.iter().all(|it| it.options.len() >= 2));
+        }
+    }
+
+    #[test]
+    fn csr_subtasks_differ() {
+        let a = csr_set("member", 1, 4);
+        let b = csr_set("analogy", 1, 4);
+        assert_ne!(a[0].prompt, b[0].prompt);
+    }
+
+    #[test]
+    fn code_items_check_against_gold() {
+        let set = code_set(0, 10);
+        for it in &set {
+            let gold_prog = tasks::Program::parse(&it.gold).unwrap();
+            assert!(tasks::check_program(&gold_prog, &it.gold));
+        }
+    }
+
+    #[test]
+    fn sets_are_deterministic() {
+        assert_eq!(mathqa_set(5, 3)[0].prompt, mathqa_set(5, 3)[0].prompt);
+    }
+}

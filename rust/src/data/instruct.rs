@@ -1,0 +1,166 @@
+//! Instruction-tuning distributions (OpenHermes / OpenOrca / Alpaca
+//! stand-ins).
+//!
+//! The three datasets share the same underlying skills but differ in
+//! template style and task mixture — exactly the structure the paper's
+//! experiments need: two SFT sets with distinct distributions (Figs. 3 vs
+//! 4) and a third held-out distribution for out-of-domain perplexity.
+
+use super::tasks::{self, Skill};
+use super::Example;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    Hermes,
+    Orca,
+    Alpaca,
+}
+
+impl Dataset {
+    pub fn from_str(s: &str) -> Option<Dataset> {
+        match s {
+            "hermes" => Some(Dataset::Hermes),
+            "orca" => Some(Dataset::Orca),
+            "alpaca" => Some(Dataset::Alpaca),
+            _ => None,
+        }
+    }
+
+    /// Task mixture (skill, weight): Hermes skews to arithmetic/string/code,
+    /// Orca to reasoning-flavoured tasks, Alpaca is a uniform blend.
+    fn mixture(&self) -> Vec<(Skill, f32)> {
+        match self {
+            Dataset::Hermes => vec![
+                (Skill::Add, 3.0),
+                (Skill::Sub, 2.0),
+                (Skill::Mul, 2.0),
+                (Skill::Chain, 2.0),
+                (Skill::Reverse, 2.0),
+                (Skill::Program, 2.0),
+                (Skill::Max, 1.0),
+                (Skill::Member, 1.0),
+            ],
+            Dataset::Orca => vec![
+                (Skill::Chain, 3.0),
+                (Skill::Analogy, 2.0),
+                (Skill::OddOne, 2.0),
+                (Skill::Member, 2.0),
+                (Skill::Succ, 2.0),
+                (Skill::Max, 2.0),
+                (Skill::Add, 1.0),
+                (Skill::Program, 1.0),
+            ],
+            Dataset::Alpaca => tasks::ALL_SKILLS.iter().map(|&s| (s, 1.0)).collect(),
+        }
+    }
+
+    /// Render an item in the dataset's template style.
+    fn render(&self, q: &str, a: &str) -> Example {
+        match self {
+            Dataset::Hermes => Example {
+                instruction: format!("Q: {q}"),
+                response: format!("A: {a}"),
+            },
+            Dataset::Orca => Example {
+                instruction: format!("solve: {q}"),
+                response: a.to_string(),
+            },
+            Dataset::Alpaca => Example {
+                instruction: format!("### {q} ->"),
+                response: a.to_string(),
+            },
+        }
+    }
+
+    pub fn seed_salt(&self) -> u64 {
+        match self {
+            Dataset::Hermes => 0x4865726d,
+            Dataset::Orca => 0x4f726361,
+            Dataset::Alpaca => 0x416c7061,
+        }
+    }
+}
+
+/// Deterministic instruction-data stream.
+pub struct InstructGen {
+    pub dataset: Dataset,
+    rng: Rng,
+    mixture: Vec<(Skill, f32)>,
+    weights: Vec<f32>,
+}
+
+impl InstructGen {
+    /// `split`: 0 = train, 1 = test (disjoint streams).
+    pub fn new(dataset: Dataset, seed: u64, split: u64) -> InstructGen {
+        let mixture = dataset.mixture();
+        let weights = mixture.iter().map(|&(_, w)| w).collect();
+        InstructGen {
+            dataset,
+            rng: Rng::new(seed ^ dataset.seed_salt() ^ (split << 32)),
+            mixture,
+            weights,
+        }
+    }
+
+    pub fn next(&mut self) -> (Example, tasks::Item) {
+        let k = self.rng.weighted(&self.weights);
+        let skill = self.mixture[k].0;
+        let item = tasks::gen(skill, &mut self.rng);
+        let ex = self.dataset.render(&item.question, &item.answer);
+        (ex, item)
+    }
+
+    pub fn batch_examples(&mut self, n: usize) -> Vec<Example> {
+        (0..n).map(|_| self.next().0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasets_render_differently() {
+        let mut h = InstructGen::new(Dataset::Hermes, 0, 0);
+        let mut o = InstructGen::new(Dataset::Orca, 0, 0);
+        let (eh, _) = h.next();
+        let (eo, _) = o.next();
+        assert!(eh.instruction.starts_with("Q: "));
+        assert!(eo.instruction.starts_with("solve: "));
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let mut train = InstructGen::new(Dataset::Hermes, 1, 0);
+        let mut test = InstructGen::new(Dataset::Hermes, 1, 1);
+        let a: Vec<String> = (0..5).map(|_| train.next().0.instruction).collect();
+        let b: Vec<String> = (0..5).map(|_| test.next().0.instruction).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = InstructGen::new(Dataset::Orca, 2, 0);
+        let mut b = InstructGen::new(Dataset::Orca, 2, 0);
+        for _ in 0..10 {
+            assert_eq!(a.next().0.instruction, b.next().0.instruction);
+        }
+    }
+
+    #[test]
+    fn mixtures_have_distinct_skill_profiles() {
+        let count = |ds: Dataset| {
+            let mut g = InstructGen::new(ds, 3, 0);
+            let mut programs = 0;
+            for _ in 0..300 {
+                if g.next().1.skill == Skill::Program {
+                    programs += 1;
+                }
+            }
+            programs
+        };
+        // Hermes is code-heavier than Orca (2/15 vs 1/15 weight)
+        assert!(count(Dataset::Hermes) > count(Dataset::Orca));
+    }
+}

@@ -1,0 +1,91 @@
+//! Synthetic data substrate.
+//!
+//! The paper fine-tunes on OpenHermes / OpenOrca, aligns on
+//! FineWeb + OpenWebMath, and evaluates on Alpaca + MathQA/GSM8K/CSR/
+//! HumanEval. None of those are available offline, so this module builds a
+//! *synthetic micro-world* with the same structure (DESIGN.md §2):
+//!
+//! * [`tasks`] — atomic skills (arithmetic, comparison, string ops,
+//!   sequences, analogies, categories, tiny programs) with checkable answers
+//! * [`corpus`] — the general pre-train/alignment corpus: declarative
+//!   statements of those skills + Zipf filler text (FineWeb+OpenWebMath
+//!   stand-in)
+//! * [`instruct`] — three instruction distributions: `hermes` and `orca`
+//!   (different template + task mixes; the two SFT datasets) and `alpaca`
+//!   (held-out template mix; the out-of-domain test set)
+//! * [`downstream`] — evaluation sets: math (choice + strict match), six
+//!   CSR option-scoring subtasks, and program-synthesis tasks with a
+//!   stack-machine checker (HumanEval stand-in)
+//!
+//! All generators are deterministic in the seed.
+
+pub mod corpus;
+pub mod downstream;
+pub mod instruct;
+pub mod tasks;
+
+use crate::tensor::Tensor;
+use crate::tokenizer::{loss_mask, pad_to, Tokenizer};
+
+/// A (tokens, loss_mask) batch matching a train/eval artifact's (B, S+1) /
+/// (B, S) shapes.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Tensor,    // (B, S+1) i32
+    pub loss_mask: Tensor, // (B, S) f32
+}
+
+/// Pack token sequences into a batch for an artifact with batch `b` and
+/// sequence length `s` (tokens get s+1 slots: inputs + shifted targets).
+pub fn make_batch(seqs: &[Vec<i32>], b: usize, s: usize, answer_only: bool) -> Batch {
+    assert_eq!(seqs.len(), b, "batch size mismatch");
+    let mut toks = Vec::with_capacity(b * (s + 1));
+    let mut mask = Vec::with_capacity(b * s);
+    for seq in seqs {
+        let padded = pad_to(seq, s + 1);
+        mask.extend(loss_mask(&padded, answer_only));
+        toks.extend(padded);
+    }
+    Batch {
+        tokens: Tensor::from_i32(&[b, s + 1], toks),
+        loss_mask: Tensor::from_f32(&[b, s], mask),
+    }
+}
+
+/// An instruction/response example plus its provenance.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub instruction: String,
+    pub response: String,
+}
+
+impl Example {
+    pub fn tokens(&self, tk: &Tokenizer) -> Vec<i32> {
+        tk.encode_pair(&self.instruction, &self.response)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{PAD, SEP};
+
+    #[test]
+    fn make_batch_shapes() {
+        let tk = Tokenizer::new();
+        let e = Example {
+            instruction: "2+2=".into(),
+            response: "4".into(),
+        };
+        let seqs = vec![e.tokens(&tk), e.tokens(&tk)];
+        let b = make_batch(&seqs, 2, 16, true);
+        assert_eq!(b.tokens.shape, vec![2, 17]);
+        assert_eq!(b.loss_mask.shape, vec![2, 16]);
+        // SEP present, padding after EOS
+        assert!(b.tokens.i32s().contains(&SEP));
+        assert!(b.tokens.i32s().contains(&PAD));
+        // answer-only mask is sparse but nonzero
+        let ones: f32 = b.loss_mask.f32s().iter().sum();
+        assert!(ones >= 2.0 && ones < 16.0);
+    }
+}

@@ -1,0 +1,441 @@
+//! Atomic skills of the synthetic micro-world.
+//!
+//! Each generator returns (instruction, answer) strings with a checkable
+//! ground truth. The same skills appear (a) declaratively in the pre-train
+//! corpus, (b) as instruction data in `instruct`, and (c) as evaluation
+//! items in `downstream` — mirroring how real LLM skills flow from
+//! pre-training into SFT and benchmarks.
+
+use crate::util::rng::Rng;
+
+/// A categorical world for analogy / membership / odd-one-out tasks.
+pub const CATEGORIES: &[(&str, &[&str])] = &[
+    ("animal", &["cat", "dog", "fox", "owl", "bee", "ant"]),
+    ("plant", &["oak", "fern", "rose", "ivy", "moss", "palm"]),
+    ("metal", &["iron", "gold", "zinc", "lead", "tin"]),
+    ("color", &["red", "blue", "green", "pink", "gray"]),
+    ("tool", &["saw", "axe", "drill", "file", "clamp"]),
+    ("fruit", &["apple", "pear", "plum", "fig", "melon"]),
+];
+
+pub fn category_of(word: &str) -> Option<&'static str> {
+    CATEGORIES
+        .iter()
+        .find(|(_, ws)| ws.contains(&word))
+        .map(|(c, _)| *c)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Skill {
+    Add,
+    Sub,
+    Mul,
+    Chain,    // two-step arithmetic (GSM8K-style)
+    Max,
+    Reverse,
+    Succ,     // next number in arithmetic sequence
+    Analogy,  // a:cat_a :: b:?
+    Member,   // "x is a <cat>" true/false
+    OddOne,   // odd-one-out
+    Program,  // tiny stack-machine synthesis (HumanEval-style)
+}
+
+pub const ALL_SKILLS: &[Skill] = &[
+    Skill::Add,
+    Skill::Sub,
+    Skill::Mul,
+    Skill::Chain,
+    Skill::Max,
+    Skill::Reverse,
+    Skill::Succ,
+    Skill::Analogy,
+    Skill::Member,
+    Skill::OddOne,
+    Skill::Program,
+];
+
+/// A generated item: question text, gold answer text, and (for choice
+/// tasks) distractor answers.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub skill: Skill,
+    pub question: String,
+    pub answer: String,
+    pub distractors: Vec<String>,
+}
+
+pub fn gen(skill: Skill, rng: &mut Rng) -> Item {
+    match skill {
+        Skill::Add => {
+            let a = rng.range(0, 20);
+            let b = rng.range(0, 20);
+            num_item(skill, format!("{a}+{b}="), a + b, rng)
+        }
+        Skill::Sub => {
+            let a = rng.range(5, 25);
+            let b = rng.range(0, a);
+            num_item(skill, format!("{a}-{b}="), a - b, rng)
+        }
+        Skill::Mul => {
+            let a = rng.range(2, 10);
+            let b = rng.range(2, 10);
+            num_item(skill, format!("{a}*{b}="), a * b, rng)
+        }
+        Skill::Chain => {
+            // "a=3. b=a+4. b*2=?" — two dependent steps
+            let a = rng.range(1, 8);
+            let c = rng.range(1, 8);
+            let d = rng.range(2, 4);
+            let b = a + c;
+            num_item(
+                skill,
+                format!("a={a}. b=a+{c}. b*{d}=?"),
+                b * d,
+                rng,
+            )
+        }
+        Skill::Max => {
+            let a = rng.range(0, 50);
+            let mut b = rng.range(0, 50);
+            if b == a {
+                b += 1;
+            }
+            num_item(skill, format!("max({a},{b})="), a.max(b), rng)
+        }
+        Skill::Reverse => {
+            let n = rng.range(3, 6) as usize;
+            let s: String = (0..n)
+                .map(|_| (b'a' + rng.below(6) as u8) as char)
+                .collect();
+            let rev: String = s.chars().rev().collect();
+            let mut distractors = vec![s.clone()];
+            let mut shuf: Vec<char> = s.chars().collect();
+            rng.shuffle(&mut shuf);
+            let shuf: String = shuf.into_iter().collect();
+            if shuf != rev {
+                distractors.push(shuf);
+            }
+            Item {
+                skill,
+                question: format!("rev({s})="),
+                answer: rev,
+                distractors,
+            }
+        }
+        Skill::Succ => {
+            let start = rng.range(0, 10);
+            let step = rng.range(1, 5);
+            let q = format!(
+                "{} {} {} ?",
+                start,
+                start + step,
+                start + 2 * step
+            );
+            num_item(skill, q, start + 3 * step, rng)
+        }
+        Skill::Analogy => {
+            let ci = rng.below(CATEGORIES.len());
+            let mut cj = rng.below(CATEGORIES.len());
+            if cj == ci {
+                cj = (cj + 1) % CATEGORIES.len();
+            }
+            let (ca, wa) = CATEGORIES[ci];
+            let (cb, wb) = CATEGORIES[cj];
+            let a = *rng.choice(wa);
+            let b = *rng.choice(wb);
+            let mut distractors = vec![ca.to_string()];
+            let ck = (cj + 1 + rng.below(CATEGORIES.len() - 1)) % CATEGORIES.len();
+            if CATEGORIES[ck].0 != cb {
+                distractors.push(CATEGORIES[ck].0.to_string());
+            }
+            Item {
+                skill,
+                question: format!("{a}:{ca}::{b}:"),
+                answer: cb.to_string(),
+                distractors,
+            }
+        }
+        Skill::Member => {
+            let ci = rng.below(CATEGORIES.len());
+            let (cat, ws) = CATEGORIES[ci];
+            let w = *rng.choice(ws);
+            let truth = rng.below(2) == 0;
+            let asked_cat = if truth {
+                cat.to_string()
+            } else {
+                let mut cj = rng.below(CATEGORIES.len());
+                if cj == ci {
+                    cj = (cj + 1) % CATEGORIES.len();
+                }
+                CATEGORIES[cj].0.to_string()
+            };
+            Item {
+                skill,
+                question: format!("{w} is a {asked_cat}. "),
+                answer: if truth { "yes".into() } else { "no".into() },
+                distractors: vec![if truth { "no".into() } else { "yes".into() }],
+            }
+        }
+        Skill::OddOne => {
+            let ci = rng.below(CATEGORIES.len());
+            let mut cj = rng.below(CATEGORIES.len());
+            if cj == ci {
+                cj = (cj + 1) % CATEGORIES.len();
+            }
+            let (_, ws) = CATEGORIES[ci];
+            let idx = rng.sample_indices(ws.len(), 2);
+            let a = ws[idx[0]];
+            let b = ws[idx[1]];
+            let odd = *rng.choice(CATEGORIES[cj].1);
+            // random position for the odd word
+            let mut words = [a, b, odd];
+            let pos = rng.below(3);
+            words.swap(2, pos);
+            Item {
+                skill,
+                question: format!("odd({},{},{})=", words[0], words[1], words[2]),
+                answer: odd.to_string(),
+                distractors: vec![a.to_string(), b.to_string()],
+            }
+        }
+        Skill::Program => {
+            let (prog, spec) = gen_program(rng);
+            Item {
+                skill,
+                question: spec,
+                answer: prog.render(),
+                distractors: vec![],
+            }
+        }
+    }
+}
+
+fn num_item(skill: Skill, question: String, answer: i64, rng: &mut Rng) -> Item {
+    let mut ds = vec![];
+    while ds.len() < 3 {
+        let delta = rng.range(-4, 5);
+        let cand = answer + if delta == 0 { 5 } else { delta };
+        let cand_s = cand.to_string();
+        if cand != answer && !ds.contains(&cand_s) {
+            ds.push(cand_s);
+        }
+    }
+    Item {
+        skill,
+        question,
+        answer: answer.to_string(),
+        distractors: ds,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiny stack-machine programs (HumanEval stand-in)
+// ---------------------------------------------------------------------------
+
+/// Ops of the one-register machine programs the model must synthesise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    Add(i64),
+    Mul(i64),
+    Sub(i64),
+    Neg,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program(pub Vec<Op>);
+
+impl Program {
+    pub fn eval(&self, x: i64) -> i64 {
+        let mut v = x;
+        for op in &self.0 {
+            v = match op {
+                Op::Add(k) => v + k,
+                Op::Mul(k) => v * k,
+                Op::Sub(k) => v - k,
+                Op::Neg => -v,
+            };
+        }
+        v
+    }
+
+    pub fn render(&self) -> String {
+        self.0
+            .iter()
+            .map(|op| match op {
+                Op::Add(k) => format!("add {k}"),
+                Op::Mul(k) => format!("mul {k}"),
+                Op::Sub(k) => format!("sub {k}"),
+                Op::Neg => "neg".to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Parse the textual form emitted by the model; returns None on any
+    /// syntax error (counts as an incorrect sample for pass@k).
+    pub fn parse(s: &str) -> Option<Program> {
+        let mut ops = vec![];
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mut it = part.split_whitespace();
+            let op = it.next()?;
+            match op {
+                "neg" => ops.push(Op::Neg),
+                "add" | "mul" | "sub" => {
+                    let k: i64 = it.next()?.parse().ok()?;
+                    match op {
+                        "add" => ops.push(Op::Add(k)),
+                        "mul" => ops.push(Op::Mul(k)),
+                        _ => ops.push(Op::Sub(k)),
+                    }
+                }
+                _ => return None,
+            }
+            if it.next().is_some() {
+                return None;
+            }
+        }
+        if ops.is_empty() {
+            None
+        } else {
+            Some(Program(ops))
+        }
+    }
+}
+
+/// Generate a random 1-2 op program plus its I/O-example spec string.
+pub fn gen_program(rng: &mut Rng) -> (Program, String) {
+    let n_ops = 1 + rng.below(2);
+    let mut ops = vec![];
+    for _ in 0..n_ops {
+        ops.push(match rng.below(4) {
+            0 => Op::Add(rng.range(1, 6)),
+            1 => Op::Mul(rng.range(2, 4)),
+            2 => Op::Sub(rng.range(1, 6)),
+            _ => Op::Neg,
+        });
+    }
+    let prog = Program(ops);
+    let x1 = rng.range(0, 6);
+    let x2 = x1 + rng.range(1, 5);
+    let spec = format!(
+        "f({x1})={} f({x2})={} f=",
+        prog.eval(x1),
+        prog.eval(x2)
+    );
+    (prog, spec)
+}
+
+/// Check a candidate program text against the spec's hidden tests: the two
+/// shown examples plus three held-out inputs derived from the gold program.
+pub fn check_program(gold: &Program, candidate: &str) -> bool {
+    match Program::parse(candidate) {
+        None => false,
+        Some(p) => (-2..3).all(|x| p.eval(x) == gold.eval(x)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_answers_correct() {
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let it = gen(Skill::Add, &mut rng);
+            let q = it.question.trim_end_matches('=');
+            let parts: Vec<i64> = q.split('+').map(|x| x.parse().unwrap()).collect();
+            assert_eq!((parts[0] + parts[1]).to_string(), it.answer);
+            assert!(!it.distractors.contains(&it.answer));
+        }
+    }
+
+    #[test]
+    fn chain_is_two_step() {
+        let mut rng = Rng::new(1);
+        let it = gen(Skill::Chain, &mut rng);
+        assert!(it.question.contains("a=") && it.question.contains("b=a+"));
+    }
+
+    #[test]
+    fn reverse_answer_is_reversed_question() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let it = gen(Skill::Reverse, &mut rng);
+            let inner = it
+                .question
+                .trim_start_matches("rev(")
+                .trim_end_matches(")=");
+            let rev: String = inner.chars().rev().collect();
+            assert_eq!(rev, it.answer);
+        }
+    }
+
+    #[test]
+    fn analogy_answer_is_true_category() {
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let it = gen(Skill::Analogy, &mut rng);
+            // question "a:ca::b:" — answer must be b's category
+            let b = it
+                .question
+                .split("::")
+                .nth(1)
+                .unwrap()
+                .trim_end_matches(':');
+            assert_eq!(category_of(b), Some(it.answer.as_str()), "{}", it.question);
+        }
+    }
+
+    #[test]
+    fn member_truthfulness() {
+        let mut rng = Rng::new(4);
+        for _ in 0..30 {
+            let it = gen(Skill::Member, &mut rng);
+            let mut parts = it.question.trim().splitn(4, ' ');
+            let w = parts.next().unwrap();
+            let _is = parts.next();
+            let _a = parts.next();
+            let cat = parts.next().unwrap().trim_end_matches('.');
+            let truth = category_of(w) == Some(cat);
+            assert_eq!(it.answer == "yes", truth, "{}", it.question);
+        }
+    }
+
+    #[test]
+    fn program_roundtrip_and_check() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let (p, _spec) = gen_program(&mut rng);
+            let text = p.render();
+            let parsed = Program::parse(&text).unwrap();
+            assert_eq!(parsed, p);
+            assert!(check_program(&p, &text));
+        }
+        let (p, _) = gen_program(&mut rng);
+        assert!(!check_program(&p, "frobnicate 3"));
+        assert!(!check_program(&p, ""));
+    }
+
+    #[test]
+    fn program_semantically_equivalent_counts() {
+        // "add 2;add 3" must pass against gold "add 5"
+        let gold = Program(vec![Op::Add(5)]);
+        assert!(check_program(&gold, "add 2;add 3"));
+        assert!(!check_program(&gold, "add 4"));
+    }
+
+    #[test]
+    fn all_skills_generate() {
+        let mut rng = Rng::new(6);
+        for &s in ALL_SKILLS {
+            let it = gen(s, &mut rng);
+            assert!(!it.question.is_empty());
+            assert!(!it.answer.is_empty());
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! LoRAM — "Train Small, Infer Large": memory-efficient LoRA training
+//! (ICLR 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 1 (Pallas kernels) and Layer 2 (JAX model) live in `python/compile`
+//! and are AOT-lowered to HLO-text artifacts at build time. This crate is
+//! Layer 3: the coordinator that owns pruning, alignment, LoRA training,
+//! recovery, inference and every experiment in the paper — executing the
+//! artifacts through PJRT with no Python on the request path.
+//!
+//! Module map (see DESIGN.md §1 for the full inventory):
+//! * [`runtime`] — PJRT client, artifact registry, literal bridging
+//! * [`tensor`] — host tensors, checkpoints
+//! * [`params`] — parameter / LoRA / optimiser-state initialisation
+//! * [`util`] — hand-rolled JSON / CLI / RNG / stats substrates
+//! * [`tokenizer`] — byte-level tokenizer
+//! * [`data`] — synthetic corpora + downstream task generators
+//! * [`pruning`] — structured/semi/unstructured pruning + recovery R(·)
+//! * [`quant`] — blockwise NF4 quantisation (QLoRAM)
+//! * [`memory`] — analytic parameter/HBM accounting (paper Tables 4–6)
+//! * [`coordinator`] — pipeline, training loops, evaluators, experiments
+//! * [`serve`] — batched generation service
+//! * [`bench`] — bench harness (no criterion in the vendor set)
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod params;
+pub mod pruning;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;
+
+/// Default artifact directory: `$LORAM_ARTIFACTS` or `artifacts/`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("LORAM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

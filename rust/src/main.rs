@@ -1,0 +1,318 @@
+//! `loram` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          list artifacts + runtime info
+//!   pretrain   --cfg l13b         pre-train (and cache) a proxy base model
+//!   pipeline   --base l13b --variant stru [...]   run the LoRAM pipeline
+//!   eval       --base l13b [--lora f.lmck]        perplexity of a model
+//!   generate   --base l13b --prompt "Q: 2+3="     sample completions
+//!   serve      --base l13b --requests 16          batched generation demo
+//!   downstream --base l13b [--lora f.lmck]        math/CSR/code battery
+//!   memory                         print paper Tables 4–6 (exact)
+//!   repro      --exp fig7 [--scale smoke|paper]   regenerate a table/figure
+//!
+//! Python never runs here: every computation executes AOT artifacts through
+//! the PJRT runtime (see DESIGN.md).
+
+use anyhow::{bail, Context, Result};
+use loram::coordinator::downstream::{eval_all, ModelUnderTest};
+use loram::coordinator::experiments::{self, Scale};
+use loram::coordinator::generate::{Generator, SampleCfg};
+use loram::coordinator::pipeline::{ensure_base, Pipeline, PipelineConfig, Variant};
+use loram::data::instruct::Dataset;
+use loram::memory;
+use loram::params::init_lora;
+use loram::runtime::Runtime;
+use loram::serve::Server;
+use loram::tensor::TensorStore;
+use loram::util::cli::Args;
+use loram::util::log;
+use loram::util::rng::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    if args.has_flag("quiet") {
+        log::set_verbose(false);
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "memory" => cmd_memory(),
+        sub => {
+            let dir = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(loram::default_artifact_dir);
+            let rt = Runtime::new(&dir)
+                .with_context(|| format!("artifacts dir {}", dir.display()))?;
+            match sub {
+                "info" => cmd_info(&rt),
+                "pretrain" => cmd_pretrain(&rt, args),
+                "pipeline" => cmd_pipeline(&rt, args),
+                "eval" => cmd_eval(&rt, args),
+                "generate" => cmd_generate(&rt, args),
+                "serve" => cmd_serve(&rt, args),
+                "downstream" => cmd_downstream(&rt, args),
+                "repro" => cmd_repro(&rt, args),
+                other => bail!("unknown subcommand '{other}' (try `loram help`)"),
+            }
+        }
+    }
+}
+
+const HELP: &str = "\
+loram — Train Small, Infer Large (LoRAM, ICLR 2025) coordinator
+
+usage: loram <subcommand> [--key value] [--flag]
+
+  info                              artifacts + runtime summary
+  pretrain   --cfg tiny --steps 50  pre-train + cache a proxy base model
+  pipeline   --base tiny --pruned tiny_p50 --variant stru|rand|semi|unst|lora
+             [--quantized] [--no-align] [--dataset hermes|orca]
+             [--pretrain-steps N --align-steps N --sft-steps N] [--save out.lmck]
+  eval       --base tiny [--lora f.lmck] [--dataset alpaca] [--n 32]
+  generate   --base tiny --prompt 'Q: 2+3=' [--temperature 0.4] [--max-new 16]
+  serve      --base tiny --requests 16      batched generation service demo
+  downstream --base tiny [--lora f.lmck]    math / CSR / code battery
+  memory                                    paper Tables 4-6 (exact, analytic)
+  repro      --exp fig3|fig4|tab1|fig5|fig6|fig7|fig8|tab456|tab7|tab8|fig16|appD|all
+             [--scale smoke|paper] [--seed N]
+
+common: --artifacts DIR (default artifacts/), --quiet
+";
+
+fn cmd_info(rt: &Runtime) -> Result<()> {
+    let names = rt.manifest().unwrap_or_default();
+    println!("artifact dir: {}", rt.artifact_dir().display());
+    println!("artifacts ({}):", names.len());
+    for n in &names {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn cmd_memory() -> Result<()> {
+    println!("Table 4 (LLaMA-2-13B), Table 5 (70B sweep), Table 6 (QLoRAM):");
+    println!(
+        "{:<16} {:<18} {:>6} {:>16} {:>10} {:>8}",
+        "model", "method", "ratio", "pruned_params", "reduction", "HBM_GB"
+    );
+    let rows = vec![
+        (&memory::LLAMA2_13B, memory::loram_row(&memory::LLAMA2_13B, "LoRAM-Semi", 0.50)),
+        (&memory::LLAMA2_13B, memory::loram_row(&memory::LLAMA2_13B, "LoRAM-Unst", 0.55)),
+        (&memory::LLAMA2_13B, memory::loram_row(&memory::LLAMA2_13B, "LoRAM-Rand&Stru", 0.65)),
+        (&memory::LLAMA2_70B, memory::loram_row(&memory::LLAMA2_70B, "LoRAM-Rand&Stru", 0.65)),
+        (&memory::LLAMA2_70B, memory::loram_row(&memory::LLAMA2_70B, "LoRAM-Rand&Stru", 0.75)),
+        (&memory::LLAMA2_70B, memory::loram_row(&memory::LLAMA2_70B, "LoRAM-Rand&Stru", 0.85)),
+        (&memory::LLAMA2_70B, memory::loram_row(&memory::LLAMA2_70B, "LoRAM-Rand&Stru", 0.95)),
+        (&memory::LLAMA31_70B, memory::loram_row(&memory::LLAMA31_70B, "LoRAM-Rand&Stru", 0.85)),
+        (&memory::LLAMA2_70B, memory::qloram_row(&memory::LLAMA2_70B, "QLoRAM-Rand&Stru", 0.65)),
+        (&memory::LLAMA2_70B, memory::qloram_row(&memory::LLAMA2_70B, "QLoRAM-Rand&Stru", 0.75)),
+        (&memory::LLAMA2_70B, memory::qloram_row(&memory::LLAMA2_70B, "QLoRAM-Rand&Stru", 0.85)),
+        (&memory::LLAMA2_70B, memory::qloram_row(&memory::LLAMA2_70B, "QLoRAM-Rand&Stru", 0.95)),
+        (&memory::LLAMA31_70B, memory::qloram_row(&memory::LLAMA31_70B, "QLoRAM-Rand&Stru", 0.85)),
+    ];
+    for (spec, r) in rows {
+        println!(
+            "{:<16} {:<18} {:>6.2} {:>16} {:>9.2}x {:>8.2}",
+            spec.name, r.method, r.prune_ratio, r.pruned_params, r.reduction, r.hbm_gb
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(rt: &Runtime, args: &Args) -> Result<()> {
+    let cfg = args.get_or("cfg", "tiny");
+    let steps = args.get_usize("steps", 50);
+    let lr = args.get_f64("lr", 1e-3);
+    let seed = args.get_usize("seed", 0) as u64;
+    let run_dir = PathBuf::from(args.get_or("run-dir", "runs"));
+    std::fs::create_dir_all(&run_dir)?;
+    let params = ensure_base(rt, cfg, steps, lr, seed, &run_dir)?;
+    println!(
+        "base[{cfg}]: {} tensors, {} params",
+        params.len(),
+        params.total_params()
+    );
+    Ok(())
+}
+
+fn parse_pipeline_cfg(args: &Args) -> Result<PipelineConfig> {
+    let variant = Variant::from_str(args.get_or("variant", "stru"))
+        .context("bad --variant (lora|rand|stru|semi|unst)")?;
+    let base = args.get_or("base", "tiny").to_string();
+    let pruned = args.get("pruned").map(String::from).or_else(|| {
+        if variant.structured() {
+            Some(format!("{base}_p50"))
+        } else {
+            None
+        }
+    });
+    Ok(PipelineConfig {
+        base,
+        pruned,
+        variant,
+        quantized: args.has_flag("quantized"),
+        unst_ratio: args.get_f64("unst-ratio", 0.55),
+        pretrain_steps: args.get_usize("pretrain-steps", 50),
+        align_steps: args.get_usize("align-steps", 10),
+        sft_steps: args.get_usize("sft-steps", 20),
+        lr_pretrain: args.get_f64("lr-pretrain", 1e-3),
+        lr_align: args.get_f64("lr-align", 5e-4),
+        lr_sft: args.get_f64("lr", 1e-3),
+        dataset: Dataset::from_str(args.get_or("dataset", "hermes")).context("bad --dataset")?,
+        seed: args.get_usize("seed", 0) as u64,
+        eval_every: args.get_usize("eval-every", 10),
+        eval_seqs: args.get_usize("eval-seqs", 16),
+        align: !args.has_flag("no-align"),
+        run_dir: PathBuf::from(args.get_or("run-dir", "runs")),
+    })
+}
+
+fn cmd_pipeline(rt: &Runtime, args: &Args) -> Result<()> {
+    let cfg = parse_pipeline_cfg(args)?;
+    std::fs::create_dir_all(&cfg.run_dir)?;
+    let base = cfg.base.clone();
+    let res = Pipeline::new(rt, cfg).run()?;
+    println!(
+        "sft losses: first {:.4} last {:.4}",
+        res.sft_losses[0],
+        res.sft_losses.last().unwrap()
+    );
+    for p in &res.eval_points {
+        println!(
+            "step {:>5}  ood_ppl {:>8.3}  id_ppl {:>8.3}{}",
+            p.step,
+            p.ood_ppl,
+            p.id_ppl,
+            p.ood_ppl_pruned
+                .map(|x| format!("  (w/o recovery {x:.3})"))
+                .unwrap_or_default()
+        );
+    }
+    println!(
+        "mean sft step: {:.1} ms, peak rss {:.0} MiB",
+        res.sft_step_ms, res.peak_rss_mib
+    );
+    if let Some(path) = args.get("save") {
+        res.lora_recovered.save(std::path::Path::new(path))?;
+        println!("recovered LoRA ({base}) saved to {path}");
+    }
+    Ok(())
+}
+
+fn load_weights(rt: &Runtime, args: &Args, base: &str) -> Result<(TensorStore, TensorStore)> {
+    let run_dir = PathBuf::from(args.get_or("run-dir", "runs"));
+    let steps = args.get_usize("pretrain-steps", 50);
+    let seed = args.get_usize("seed", 0) as u64;
+    let params = ensure_base(rt, base, steps, 1e-3, seed, &run_dir)?;
+    let cfg = rt.load(&format!("eval_{base}"))?.meta.config.clone();
+    let lora = match args.get("lora") {
+        Some(p) => TensorStore::load(std::path::Path::new(p))?,
+        None => init_lora(&cfg, 0),
+    };
+    Ok((params, lora))
+}
+
+fn cmd_eval(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = args.get_or("base", "tiny");
+    let (params, lora) = load_weights(rt, args, base)?;
+    let ev = loram::coordinator::evaluate::Evaluator::new(
+        rt,
+        &format!("eval_{base}"),
+        &[&params, &lora],
+    )?;
+    let ds = Dataset::from_str(args.get_or("dataset", "alpaca")).context("bad --dataset")?;
+    let n = args.get_usize("n", 32);
+    let seqs = loram::coordinator::evaluate::test_sequences(ds, 0, n);
+    let ppl = ev.perplexity(&seqs, true)?;
+    println!("{base} on {ds:?} ({n} seqs): ppl {ppl:.4}");
+    Ok(())
+}
+
+fn cmd_generate(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = args.get_or("base", "tiny");
+    let (params, lora) = load_weights(rt, args, base)?;
+    let gen = Generator::new(rt, &format!("logits_{base}"), &[&params, &lora])?;
+    let prompt = args.get_or("prompt", "Q: 2+3=").to_string();
+    let cfg = SampleCfg {
+        temperature: args.get_f64("temperature", 0.0),
+        top_p: args.get_f64("top-p", 0.95),
+        max_new: args.get_usize("max-new", 16),
+    };
+    let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+    let outs = gen.complete(&[prompt.clone()], cfg, &mut rng)?;
+    println!("prompt: {prompt}");
+    println!("completion: {}", outs[0]);
+    Ok(())
+}
+
+fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = args.get_or("base", "tiny");
+    let (params, lora) = load_weights(rt, args, base)?;
+    let gen = Generator::new(rt, &format!("logits_{base}"), &[&params, &lora])?;
+    let mut server = Server::new(gen, 0);
+    let n = args.get_usize("requests", 8);
+    let mut ig = loram::data::instruct::InstructGen::new(Dataset::Hermes, 1, 1);
+    for _ in 0..n {
+        let (ex, _) = ig.next();
+        server.enqueue(ex.instruction, SampleCfg::default());
+    }
+    let t0 = std::time::Instant::now();
+    let responses = server.drain()?;
+    let dt = t0.elapsed().as_secs_f64();
+    for r in responses.iter().take(4) {
+        println!(
+            "#{:<3} [{:>6.1} ms, b={}] {}",
+            r.id, r.latency_ms, r.batch_size, r.text
+        );
+    }
+    println!(
+        "served {} requests in {:.2}s ({:.2} req/s, {} batches, mean occupancy {:.2})",
+        server.stats.served,
+        dt,
+        server.stats.served as f64 / dt,
+        server.stats.batches,
+        server.stats.total_batch_occupancy / server.stats.batches.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_downstream(rt: &Runtime, args: &Args) -> Result<()> {
+    let base = args.get_or("base", "tiny");
+    let (params, lora) = load_weights(rt, args, base)?;
+    let m = ModelUnderTest::new(rt, base, &[&params, &lora])?;
+    let s = eval_all(&m, 0, 12, 8, 4, 4, &[0.0, 0.4])?;
+    println!("mathqa {:.3}  gsm {:.3}", s.mathqa, s.gsm);
+    println!("csr mean {:.3} ± {:.3}", s.csr_mean, s.csr_se);
+    for (name, acc) in &s.csr {
+        println!("  {name:<10} {acc:.3}");
+    }
+    println!("pass@1 {:.3}  pass@10 {:.3}", s.pass1, s.pass10);
+    Ok(())
+}
+
+fn cmd_repro(rt: &Runtime, args: &Args) -> Result<()> {
+    let scale = Scale::from_str(args.get_or("scale", "smoke")).context("bad --scale")?;
+    let seed = args.get_usize("seed", 0) as u64;
+    let exp = args.get_or("exp", "all");
+    if exp == "all" {
+        for e in experiments::ALL_EXPERIMENTS {
+            log::info(format!("=== repro {e} ({scale:?}) ==="));
+            experiments::run(rt, e, scale, seed)?;
+        }
+        Ok(())
+    } else {
+        experiments::run(rt, exp, scale, seed)
+    }
+}

@@ -1,0 +1,126 @@
+//! Parameter, LoRA and optimiser-state initialisation.
+//!
+//! Mirrors model.py's init *semantics* (scaled normal, zero `lora_b`, ones
+//! for norms). Bit-identity with jax.random is not required: the base model
+//! is genuinely pre-trained by the Rust pipeline before any LoRAM stage
+//! (DESIGN.md §2, substitution table).
+
+use crate::runtime::ModelCfg;
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::rng::Rng;
+
+/// Base parameters: scaled-normal projections (GPT-2-style residual scaling
+/// on wo / w_down), ones for RMSNorm scales.
+pub fn init_params(cfg: &ModelCfg, seed: u64) -> TensorStore {
+    let mut rng = Rng::new(seed);
+    let resid = 1.0 / (2.0 * cfg.n_layers as f32).sqrt();
+    let mut store = TensorStore::new();
+    for (name, shape) in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        let t = if name.ends_with("norm") {
+            Tensor::from_f32(&shape, vec![1.0; n])
+        } else {
+            let std = if name.ends_with(".wo") || name.ends_with(".w_down") {
+                0.02 * resid
+            } else {
+                0.02
+            };
+            Tensor::from_f32(&shape, rng.normal_vec(n, std))
+        };
+        store.insert(name, t);
+    }
+    store
+}
+
+/// LoRA factors: `a` ~ N(0, 1/in_features), `b` = 0 — so fresh LoRA is an
+/// exact identity on the forward pass (tested in python/tests/test_model.py
+/// and rust integration tests).
+pub fn init_lora(cfg: &ModelCfg, seed: u64) -> TensorStore {
+    let mut rng = Rng::new(seed ^ LORA_SEED_SALT);
+    let mut store = TensorStore::new();
+    for (name, shape) in cfg.lora_shapes() {
+        let n: usize = shape.iter().product();
+        let t = if name.ends_with("lora_a") {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            Tensor::from_f32(&shape, rng.normal_vec(n, std))
+        } else {
+            Tensor::from_f32(&shape, vec![0.0; n])
+        };
+        store.insert(name, t);
+    }
+    store
+}
+
+/// Salt separating the LoRA init stream from the base-param stream.
+const LORA_SEED_SALT: u64 = 0x1042_5043_10aa_77f3;
+
+/// Zeroed Adam moments matching an arbitrary tensor store.
+pub fn zeros_like(store: &TensorStore) -> TensorStore {
+    let mut out = TensorStore::new();
+    for (k, t) in &store.map {
+        out.insert(k.clone(), Tensor::zeros(&t.shape));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelCfg;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 48,
+            max_seq: 32,
+            lora_rank: 4,
+            lora_alpha: 8.0,
+            lora_lm_head: true,
+            layer_plan: None,
+        }
+    }
+
+    #[test]
+    fn init_covers_all_params() {
+        let c = cfg();
+        let p = init_params(&c, 0);
+        assert_eq!(p.len(), c.param_shapes().len());
+        assert_eq!(p.total_params(), c.param_count());
+        // norms are ones
+        assert!(p.get("l0.attn_norm").unwrap().f32s().iter().all(|&x| x == 1.0));
+        // projections are non-trivial
+        assert!(p.get("l0.wq").unwrap().l2_norm() > 0.0);
+    }
+
+    #[test]
+    fn lora_b_zero_a_nonzero() {
+        let c = cfg();
+        let l = init_lora(&c, 0);
+        assert!(l.get("l0.wq.lora_b").unwrap().f32s().iter().all(|&x| x == 0.0));
+        assert!(l.get("l0.wq.lora_a").unwrap().l2_norm() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let c = cfg();
+        let a = init_params(&c, 42);
+        let b = init_params(&c, 42);
+        assert_eq!(a.get("l1.wv").unwrap(), b.get("l1.wv").unwrap());
+        let d = init_params(&c, 43);
+        assert_ne!(a.get("l1.wv").unwrap(), d.get("l1.wv").unwrap());
+    }
+
+    #[test]
+    fn zeros_like_shapes() {
+        let c = cfg();
+        let p = init_params(&c, 0);
+        let z = zeros_like(&p);
+        assert_eq!(z.total_params(), p.total_params());
+        assert!(z.get("embed").unwrap().f32s().iter().all(|&x| x == 0.0));
+    }
+}

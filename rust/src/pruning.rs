@@ -1,0 +1,557 @@
+//! Pruning P(·) and recovery R(·) — the core LoRAM mechanics (paper §2.2).
+//!
+//! Four strategies, mirroring the paper's variants:
+//! * `rand` — randomly structured (LoRAM-Rand)
+//! * `stru` — gradient-importance structured, LLM-Pruner-style (LoRAM-Stru)
+//! * `semi` — 4:8 semi-structured magnitude (LoRAM-Semi / SparseGPT stand-in)
+//! * `unst` — unstructured magnitude (LoRAM-Unst / SparseGPT stand-in)
+//!
+//! Structured pruning physically slices head/FF-channel groups out of the
+//! weight matrices (deployment note C1); non-structured pruning keeps shapes
+//! and produces {0,1} masks (C1/C2). `recover_lora` implements R(·):
+//! scattering the trained pruned-shape LoRA factors back into full-shape
+//! zeros, so the recovered update `a_R @ b_R` has support exactly on the
+//! coordinates that were retained during training (Eq. 5/6 — note the
+//! paper's mask algebra in Eq. 5 is notationally inverted w.r.t. Eq. 3; we
+//! implement the operative semantics described in §1 and App. C: "recovers
+//! the shape ... by filling zeros at pruned positions").
+
+use crate::runtime::ModelCfg;
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Per-layer kept indices (sorted ascending) for structured pruning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerKept {
+    pub heads: Vec<usize>,
+    pub kv_heads: Vec<usize>,
+    pub ff: Vec<usize>,
+}
+
+/// A structured pruning plan: which heads / kv-heads / FF channels survive
+/// in every layer. Counts must match the pruned config's `layer_plan`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StructuredPlan {
+    pub layers: Vec<LayerKept>,
+}
+
+impl StructuredPlan {
+    /// LoRAM-Rand: random kept sets with the counts demanded by `pruned`.
+    pub fn random(full: &ModelCfg, pruned: &ModelCfg, seed: u64) -> Result<StructuredPlan> {
+        Self::build(full, pruned, |rng, n, k, _scores| {
+            let mut idx = rng.sample_indices(n, k);
+            idx.sort_unstable();
+            idx
+        }, None, seed)
+    }
+
+    /// LoRAM-Stru: keep the *most important* units per layer, importance
+    /// from the `gradimp` artifact (Σ|w·∂w| per head / channel).
+    pub fn from_importance(
+        full: &ModelCfg,
+        pruned: &ModelCfg,
+        head_imp: &Tensor, // (L, n_heads)
+        ff_imp: &Tensor,   // (L, d_ff)
+    ) -> Result<StructuredPlan> {
+        let scores = Some((head_imp, ff_imp));
+        Self::build(full, pruned, |_rng, n, k, scores| top_k_sorted(scores.unwrap(), n, k),
+                    scores, 0)
+    }
+
+    fn build(
+        full: &ModelCfg,
+        pruned: &ModelCfg,
+        pick: impl Fn(&mut Rng, usize, usize, Option<&[f32]>) -> Vec<usize>,
+        scores: Option<(&Tensor, &Tensor)>,
+        seed: u64,
+    ) -> Result<StructuredPlan> {
+        if full.n_layers != pruned.n_layers {
+            bail!("layer count mismatch");
+        }
+        let mut rng = Rng::new(seed);
+        let rep = full.n_heads / full.n_kv_heads;
+        let mut layers = Vec::with_capacity(full.n_layers);
+        for i in 0..full.n_layers {
+            let (h_k, kv_k, ff_k) = pruned.layer_shapes(i);
+            let (h_f, kv_f, ff_f) = full.layer_shapes(i);
+            if h_k == h_f && kv_k == kv_f && ff_k == ff_f {
+                layers.push(LayerKept {
+                    heads: (0..h_f).collect(),
+                    kv_heads: (0..kv_f).collect(),
+                    ff: (0..ff_f).collect(),
+                });
+                continue;
+            }
+            let (hs, fs) = match scores {
+                Some((hi, fi)) => {
+                    let hrow = &hi.f32s()[i * h_f..(i + 1) * h_f];
+                    let frow = &fi.f32s()[i * ff_f..(i + 1) * ff_f];
+                    (Some(hrow.to_vec()), Some(frow.to_vec()))
+                }
+                None => (None, None),
+            };
+            let heads = pick(&mut rng, h_f, h_k, hs.as_deref());
+            // kv heads: keep the groups that own the most kept q-heads
+            // (grouped-query attention); for MHA (kv == heads) reuse the set.
+            let kv_heads = if kv_f == h_f {
+                heads.clone()
+            } else {
+                let mut votes = vec![0f32; kv_f];
+                for &h in &heads {
+                    votes[h / rep] += 1.0;
+                }
+                top_k_sorted(&votes, kv_f, kv_k)
+            };
+            let ff = pick(&mut rng, ff_f, ff_k, fs.as_deref());
+            layers.push(LayerKept { heads, kv_heads, ff });
+        }
+        Ok(StructuredPlan { layers })
+    }
+
+    /// Serialise as a TensorStore (saved as a `.lmck` sidecar).
+    pub fn to_store(&self) -> TensorStore {
+        let mut s = TensorStore::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            s.insert(
+                format!("l{i}.heads"),
+                Tensor::from_i32(&[l.heads.len()], l.heads.iter().map(|&x| x as i32).collect()),
+            );
+            s.insert(
+                format!("l{i}.kv_heads"),
+                Tensor::from_i32(
+                    &[l.kv_heads.len()],
+                    l.kv_heads.iter().map(|&x| x as i32).collect(),
+                ),
+            );
+            s.insert(
+                format!("l{i}.ff"),
+                Tensor::from_i32(&[l.ff.len()], l.ff.iter().map(|&x| x as i32).collect()),
+            );
+        }
+        s
+    }
+
+    pub fn from_store(s: &TensorStore, n_layers: usize) -> Result<StructuredPlan> {
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let g = |k: &str| -> Result<Vec<usize>> {
+                Ok(s.get(&format!("l{i}.{k}"))?
+                    .i32s()
+                    .iter()
+                    .map(|&x| x as usize)
+                    .collect())
+            };
+            layers.push(LayerKept {
+                heads: g("heads")?,
+                kv_heads: g("kv_heads")?,
+                ff: g("ff")?,
+            });
+        }
+        Ok(StructuredPlan { layers })
+    }
+}
+
+fn top_k_sorted(scores: &[f32], n: usize, k: usize) -> Vec<usize> {
+    assert!(scores.len() >= n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut kept: Vec<usize> = idx.into_iter().take(k).collect();
+    kept.sort_unstable();
+    kept
+}
+
+fn expand_groups(idx: &[usize], group: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(idx.len() * group);
+    for &i in idx {
+        out.extend(i * group..(i + 1) * group);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Structured pruning: weight slicing + LoRA recovery
+// ---------------------------------------------------------------------------
+
+/// P(·) for structured pruning: slice full-model weights down to the pruned
+/// config's shapes following `plan` (deployment note C1: compact & dense).
+pub fn slice_params(
+    full_params: &TensorStore,
+    full: &ModelCfg,
+    plan: &StructuredPlan,
+) -> Result<TensorStore> {
+    let hd = full.head_dim();
+    let mut out = TensorStore::new();
+    for (name, t) in &full_params.map {
+        let parts: Vec<&str> = name.splitn(2, '.').collect();
+        let sliced = if parts.len() == 2 && parts[0].starts_with('l') {
+            let li: usize = parts[0][1..].parse().unwrap_or(usize::MAX);
+            if li == usize::MAX {
+                t.clone()
+            } else {
+                let kept = &plan.layers[li];
+                match parts[1] {
+                    "wq" => t.select_cols(&expand_groups(&kept.heads, hd)),
+                    "wk" | "wv" => t.select_cols(&expand_groups(&kept.kv_heads, hd)),
+                    "wo" => t.select_rows(&expand_groups(&kept.heads, hd)),
+                    "w_gate" | "w_up" => t.select_cols(&kept.ff),
+                    "w_down" => t.select_rows(&kept.ff),
+                    _ => t.clone(), // norms
+                }
+            }
+        } else {
+            t.clone() // embed, final_norm, lm_head
+        };
+        out.insert(name.clone(), sliced);
+    }
+    Ok(out)
+}
+
+/// R(·): scatter pruned-shape LoRA factors into full shapes (Eq. 5/6).
+/// The recovered update `a_R @ b_R` is zero at pruned coordinates and
+/// exactly the trained update at retained coordinates.
+pub fn recover_lora(
+    pruned_lora: &TensorStore,
+    full: &ModelCfg,
+    plan: &StructuredPlan,
+) -> Result<TensorStore> {
+    let hd = full.head_dim();
+    let mut out = TensorStore::new();
+    for (name, t) in &pruned_lora.map {
+        // names look like "l{i}.{proj}.lora_a" or "lm_head.lora_a"
+        let parts: Vec<&str> = name.split('.').collect();
+        let recovered = if parts.len() == 3 && parts[0].starts_with('l') {
+            let li: usize = parts[0][1..]
+                .parse()
+                .with_context(|| format!("bad lora name {name}"))?;
+            let kept = &plan.layers[li];
+            let d = full.d_model;
+            let (h_f, _kv_f, ff_f) = full.layer_shapes(li);
+            match (parts[1], parts[2]) {
+                ("wq", "lora_b") => {
+                    t.scatter_cols(&expand_groups(&kept.heads, hd), h_f * hd)
+                }
+                ("wk", "lora_b") | ("wv", "lora_b") => t.scatter_cols(
+                    &expand_groups(&kept.kv_heads, hd),
+                    full.layer_shapes(li).1 * hd,
+                ),
+                ("wo", "lora_a") => {
+                    t.scatter_rows(&expand_groups(&kept.heads, hd), h_f * hd)
+                }
+                ("w_gate", "lora_b") | ("w_up", "lora_b") => t.scatter_cols(&kept.ff, ff_f),
+                ("w_down", "lora_a") => t.scatter_rows(&kept.ff, ff_f),
+                // input side of d_model-input projections, output side of
+                // d_model-output projections: d_model is never pruned
+                _ => {
+                    debug_assert!(t.shape.contains(&d) || t.shape.contains(&full.lora_rank));
+                    t.clone()
+                }
+            }
+        } else {
+            t.clone() // lm_head.lora_{a,b}
+        };
+        out.insert(name.clone(), recovered);
+    }
+    // validate against full-config lora shapes
+    for (name, shape) in full.lora_shapes() {
+        let t = out
+            .get(&name)
+            .with_context(|| format!("recovered lora missing {name}"))?;
+        if t.shape != shape {
+            bail!("recovered {name}: shape {:?} != {:?}", t.shape, shape);
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Non-structured pruning: masks
+// ---------------------------------------------------------------------------
+
+/// 4:8 semi-structured mask: in every group of 8 consecutive entries along
+/// the *input* (reduction) axis of a column, keep the 4 largest |w|.
+pub fn semi_mask_4of8(w: &Tensor) -> Tensor {
+    let (m, n) = w.dims2();
+    let src = w.f32s();
+    let mut mask = vec![0f32; m * n];
+    for j in 0..n {
+        let mut g = 0;
+        while g < m {
+            let hi = (g + 8).min(m);
+            let mut idx: Vec<usize> = (g..hi).collect();
+            idx.sort_by(|&a, &b| {
+                src[b * n + j]
+                    .abs()
+                    .partial_cmp(&src[a * n + j].abs())
+                    .unwrap()
+            });
+            for &i in idx.iter().take((hi - g + 1) / 2) {
+                mask[i * n + j] = 1.0;
+            }
+            g = hi;
+        }
+    }
+    Tensor::from_f32(&[m, n], mask)
+}
+
+/// Unstructured magnitude mask keeping the (1 - ratio) largest |w| entries
+/// of the matrix (per-matrix threshold, uniform across layers — the paper's
+/// LoRAM-Unst setup).
+pub fn unstructured_mask(w: &Tensor, prune_ratio: f64) -> Tensor {
+    let (m, n) = w.dims2();
+    let src = w.f32s();
+    let mut mags: Vec<f32> = src.iter().map(|x| x.abs()).collect();
+    let keep = ((m * n) as f64 * (1.0 - prune_ratio)).round() as usize;
+    let mask = if keep == 0 {
+        vec![0f32; m * n]
+    } else if keep >= m * n {
+        vec![1f32; m * n]
+    } else {
+        let k = m * n - keep; // threshold = k-th smallest magnitude
+        mags.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+        let thr = mags[k - 1];
+        // strictly-greater survives; ties beyond the quota are dropped l->r
+        let mut out = vec![0f32; m * n];
+        let mut quota = keep;
+        for (i, &x) in src.iter().enumerate() {
+            if x.abs() > thr && quota > 0 {
+                out[i] = 1.0;
+                quota -= 1;
+            }
+        }
+        // fill remaining quota with ties at the threshold
+        if quota > 0 {
+            for (i, &x) in src.iter().enumerate() {
+                if quota == 0 {
+                    break;
+                }
+                if out[i] == 0.0 && x.abs() >= thr {
+                    out[i] = 1.0;
+                    quota -= 1;
+                }
+            }
+        }
+        out
+    };
+    Tensor::from_f32(&[m, n], mask)
+}
+
+/// Build `<proj>.mask` entries for every layer projection, plus the masked
+/// (zeros-at-pruned) weights. `strategy` is "semi" or "unst".
+pub fn build_masks(
+    params: &TensorStore,
+    cfg: &ModelCfg,
+    strategy: &str,
+    prune_ratio: f64,
+) -> Result<(TensorStore, TensorStore)> {
+    let mut masks = TensorStore::new();
+    let mut masked = params.clone();
+    for i in 0..cfg.n_layers {
+        for (k, _) in cfg.layer_proj_shapes(i) {
+            let name = format!("l{i}.{k}");
+            let w = params.get(&name)?;
+            let mask = match strategy {
+                "semi" => semi_mask_4of8(w),
+                "unst" => unstructured_mask(w, prune_ratio),
+                other => bail!("unknown mask strategy {other}"),
+            };
+            let mut wm = w.clone();
+            for (x, m) in wm.f32s_mut().iter_mut().zip(mask.f32s()) {
+                *x *= m;
+            }
+            masked.insert(name.clone(), wm);
+            masks.insert(format!("{name}.mask"), mask);
+        }
+    }
+    Ok((masks, masked))
+}
+
+/// Fraction of surviving weights in a mask set (for reduction-ratio rows).
+pub fn mask_density(masks: &TensorStore) -> f64 {
+    let (mut ones, mut total) = (0f64, 0f64);
+    for t in masks.map.values() {
+        ones += t.f32s().iter().map(|&x| x as f64).sum::<f64>();
+        total += t.len() as f64;
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        ones / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::init_params;
+
+    fn full_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "full".into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 3,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 48,
+            max_seq: 32,
+            lora_rank: 4,
+            lora_alpha: 8.0,
+            lora_lm_head: true,
+            layer_plan: None,
+        }
+    }
+
+    fn pruned_cfg() -> ModelCfg {
+        let mut c = full_cfg();
+        c.name = "pruned".into();
+        // protect first and last layer, prune the middle one
+        c.layer_plan = Some(vec![(4, 2, 48), (2, 1, 32), (4, 2, 48)]);
+        c
+    }
+
+    #[test]
+    fn random_plan_counts_match() {
+        let plan = StructuredPlan::random(&full_cfg(), &pruned_cfg(), 1).unwrap();
+        assert_eq!(plan.layers[0].heads.len(), 4);
+        assert_eq!(plan.layers[1].heads.len(), 2);
+        assert_eq!(plan.layers[1].kv_heads.len(), 1);
+        assert_eq!(plan.layers[1].ff.len(), 32);
+        // sorted & unique
+        let h = &plan.layers[1].heads;
+        assert!(h.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn importance_plan_keeps_top_units() {
+        let full = full_cfg();
+        let pruned = pruned_cfg();
+        // layer 1 head importances: heads 1 and 3 dominate
+        let mut hi = vec![0f32; 3 * 4];
+        hi[4 + 1] = 10.0;
+        hi[4 + 3] = 9.0;
+        let mut fi = vec![0f32; 3 * 48];
+        for c in 0..32 {
+            fi[48 + c + 16] = (c + 1) as f32; // channels 16..48 important
+        }
+        let plan = StructuredPlan::from_importance(
+            &full,
+            &pruned,
+            &Tensor::from_f32(&[3, 4], hi),
+            &Tensor::from_f32(&[3, 48], fi),
+        )
+        .unwrap();
+        assert_eq!(plan.layers[1].heads, vec![1, 3]);
+        assert_eq!(plan.layers[1].ff, (16..48).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn plan_store_roundtrip() {
+        let plan = StructuredPlan::random(&full_cfg(), &pruned_cfg(), 2).unwrap();
+        let s = plan.to_store();
+        let back = StructuredPlan::from_store(&s, 3).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn slice_params_shapes_match_pruned_cfg() {
+        let full = full_cfg();
+        let pruned = pruned_cfg();
+        let params = init_params(&full, 0);
+        let plan = StructuredPlan::random(&full, &pruned, 3).unwrap();
+        let sliced = slice_params(&params, &full, &plan).unwrap();
+        for (name, shape) in pruned.param_shapes() {
+            assert_eq!(sliced.get(&name).unwrap().shape, shape, "{name}");
+        }
+        // protected layer identical
+        assert_eq!(sliced.get("l0.wq").unwrap(), params.get("l0.wq").unwrap());
+    }
+
+    #[test]
+    fn recover_lora_scatter_roundtrip() {
+        let full = full_cfg();
+        let pruned = pruned_cfg();
+        let plan = StructuredPlan::random(&full, &pruned, 4).unwrap();
+        // trained pruned lora with recognisable values
+        let mut lora = TensorStore::new();
+        for (name, shape) in pruned.lora_shapes() {
+            let n: usize = shape.iter().product();
+            lora.insert(name, Tensor::from_f32(&shape, (0..n).map(|x| x as f32 + 1.0).collect()));
+        }
+        let rec = recover_lora(&lora, &full, &plan).unwrap();
+        // wq.lora_b of the pruned middle layer scattered into full width
+        let rb = rec.get("l1.wq.lora_b").unwrap();
+        assert_eq!(rb.shape, vec![4, 4 * 8]);
+        let hd = 8;
+        let kept = &plan.layers[1].heads;
+        let cols = expand_groups(kept, hd);
+        // kept columns carry the trained values, others zero
+        let src = lora.get("l1.wq.lora_b").unwrap();
+        for r in 0..4 {
+            for (sj, &fj) in cols.iter().enumerate() {
+                assert_eq!(rb.f32s()[r * 32 + fj], src.f32s()[r * 16 + sj]);
+            }
+            let zero_cols: Vec<usize> = (0..32).filter(|c| !cols.contains(c)).collect();
+            for &c in &zero_cols {
+                assert_eq!(rb.f32s()[r * 32 + c], 0.0);
+            }
+        }
+        // unpruned-side factors unchanged
+        assert_eq!(rec.get("l1.wq.lora_a").unwrap(), lora.get("l1.wq.lora_a").unwrap());
+        assert_eq!(rec.get("lm_head.lora_a").unwrap(), lora.get("lm_head.lora_a").unwrap());
+    }
+
+    #[test]
+    fn semi_mask_is_exactly_half() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let w = Tensor::from_f32(&[16, 8], rng.normal_vec(128, 1.0));
+        let m = semi_mask_4of8(&w);
+        // every column: 8 of 16 survive, 4 per group of 8
+        for j in 0..8 {
+            for g in (0..16).step_by(8) {
+                let cnt: f32 = (g..g + 8).map(|i| m.f32s()[i * 8 + j]).sum();
+                assert_eq!(cnt, 4.0);
+            }
+        }
+        // surviving entries are the largest in their group
+        for j in 0..8 {
+            let kept_min = (0..8)
+                .filter(|&i| m.f32s()[i * 8 + j] == 1.0)
+                .map(|i| w.f32s()[i * 8 + j].abs())
+                .fold(f32::MAX, f32::min);
+            let dropped_max = (0..8)
+                .filter(|&i| m.f32s()[i * 8 + j] == 0.0)
+                .map(|i| w.f32s()[i * 8 + j].abs())
+                .fold(0.0, f32::max);
+            assert!(kept_min >= dropped_max);
+        }
+    }
+
+    #[test]
+    fn unstructured_mask_ratio_exact() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let w = Tensor::from_f32(&[20, 50], rng.normal_vec(1000, 1.0));
+        for ratio in [0.0, 0.25, 0.55, 0.9, 1.0] {
+            let m = unstructured_mask(&w, ratio);
+            let kept: f32 = m.f32s().iter().sum();
+            let want = (1000.0 * (1.0 - ratio)).round();
+            assert_eq!(kept as f64, want, "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn build_masks_zeroes_weights() {
+        let cfg = full_cfg();
+        let params = init_params(&cfg, 1);
+        let (masks, masked) = build_masks(&params, &cfg, "unst", 0.5).unwrap();
+        let w = masked.get("l0.wq").unwrap();
+        let m = masks.get("l0.wq.mask").unwrap();
+        for (x, mk) in w.f32s().iter().zip(m.f32s()) {
+            if *mk == 0.0 {
+                assert_eq!(*x, 0.0);
+            }
+        }
+        let d = mask_density(&masks);
+        assert!((d - 0.5).abs() < 0.01, "density {d}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Device-resident execution sessions (the L3 §Perf optimisation).
+//!
+//! The v1 path (`Runtime::run`) re-packs every input tensor into an XLA
+//! literal on every call — for a training step that means copying the full
+//! parameter + optimiser state twice per step (h2d then d2h). This module
+//! keeps state as PJRT buffers instead: weights upload once, each step
+//! uploads only the few KB of (step, lr, tokens, loss_mask), executes via
+//! `execute_b`, and re-binds the returned state buffers (`new.*`) onto
+//! their input slots without touching the host.
+//!
+//! Requires the vendored xla patch (`ExecuteOptions::untuple_result=true`,
+//! see vendor/xla/xla_rs/xla_rs.cc) so outputs arrive as per-leaf buffers.
+
+use super::{Artifact, Runtime};
+use crate::tensor::{Data, Dtype, Tensor, TensorStore};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub struct DeviceSession {
+    pub art: Rc<Artifact>,
+    slots: Vec<Option<xla::PjRtBuffer>>,
+    name_to_slot: HashMap<String, usize>,
+    /// output index -> input slot it replaces (state threading), if any
+    out_to_in: Vec<Option<usize>>,
+}
+
+impl DeviceSession {
+    /// Upload every tensor in `stores` that the artifact wants; remaining
+    /// inputs (tokens, scalars, ...) must be `set` before `run`.
+    pub fn new(rt: &Runtime, art: Rc<Artifact>, stores: &[&TensorStore]) -> Result<DeviceSession> {
+        let mut name_to_slot = HashMap::new();
+        for (i, spec) in art.meta.inputs.iter().enumerate() {
+            name_to_slot.insert(spec.name.clone(), i);
+        }
+        // map outputs onto the input slots they replace:
+        //   new.X / new_m.X / new_v.X  ->  X / adam_m.X / adam_v.X
+        let out_to_in = art
+            .meta
+            .outputs
+            .iter()
+            .map(|o| {
+                let target = if let Some(p) = o.name.strip_prefix("new_m.") {
+                    Some(format!("adam_m.{p}"))
+                } else if let Some(p) = o.name.strip_prefix("new_v.") {
+                    Some(format!("adam_v.{p}"))
+                } else {
+                    o.name.strip_prefix("new.").map(|p| p.to_string())
+                };
+                target.and_then(|t| name_to_slot.get(&t).copied())
+            })
+            .collect();
+        let mut sess = DeviceSession {
+            slots: (0..art.meta.inputs.len()).map(|_| None).collect(),
+            name_to_slot,
+            out_to_in,
+            art,
+        };
+        for store in stores {
+            for (name, t) in &store.map {
+                if sess.name_to_slot.contains_key(name) {
+                    sess.set(rt, name, t)?;
+                }
+            }
+        }
+        // zero any adam moment slots not supplied
+        let missing: Vec<(String, Vec<usize>)> = sess
+            .art
+            .meta
+            .inputs
+            .iter()
+            .filter(|s| {
+                (s.name.starts_with("adam_m.") || s.name.starts_with("adam_v."))
+                    && sess.slots[sess.name_to_slot[&s.name]].is_none()
+            })
+            .map(|s| (s.name.clone(), s.shape.clone()))
+            .collect();
+        for (name, shape) in missing {
+            sess.set(rt, &name, &Tensor::zeros(&shape))?;
+        }
+        Ok(sess)
+    }
+
+    /// Upload one tensor into its input slot (validates shape/dtype).
+    pub fn set(&mut self, rt: &Runtime, name: &str, t: &Tensor) -> Result<()> {
+        let slot = *self
+            .name_to_slot
+            .get(name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.art.meta.name))?;
+        let spec = &self.art.meta.inputs[slot];
+        if t.shape != spec.shape || t.dtype() != spec.dtype {
+            bail!(
+                "input '{name}': got {:?}/{:?}, want {:?}/{:?}",
+                t.shape, t.dtype(), spec.shape, spec.dtype
+            );
+        }
+        let buf = match &t.data {
+            Data::F32(v) => rt.client().buffer_from_host_buffer::<f32>(v, &t.shape, None)?,
+            Data::I32(v) => rt.client().buffer_from_host_buffer::<i32>(v, &t.shape, None)?,
+        };
+        rt.metrics.borrow_mut().h2d_bytes += (t.len() * 4) as u64;
+        self.slots[slot] = Some(buf);
+        Ok(())
+    }
+
+    /// Execute; state outputs re-bind to their input slots on device, all
+    /// other outputs are fetched to the host and returned.
+    pub fn run(&mut self, rt: &Runtime) -> Result<TensorStore> {
+        let t0 = std::time::Instant::now();
+        let refs: Vec<&xla::PjRtBuffer> = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "input '{}' not set",
+                        self.art.meta.inputs[i].name
+                    )
+                })
+            })
+            .collect::<Result<_>>()?;
+        let mut bufs = self
+            .art
+            .execute_buffers(&refs)
+            .with_context(|| format!("execute_b {}", self.art.meta.name))?;
+        let outs = std::mem::take(&mut bufs[0]);
+        if outs.len() != self.art.meta.outputs.len() {
+            bail!(
+                "artifact {}: got {} output buffers, expected {} (is the \
+                 untuple_result patch active?)",
+                self.art.meta.name,
+                outs.len(),
+                self.art.meta.outputs.len()
+            );
+        }
+        let mut host = TensorStore::new();
+        for (j, buf) in outs.into_iter().enumerate() {
+            match self.out_to_in[j] {
+                Some(slot) => {
+                    self.slots[slot] = Some(buf);
+                }
+                None => {
+                    let spec = &self.art.meta.outputs[j];
+                    let lit = buf.to_literal_sync()?;
+                    rt.metrics.borrow_mut().d2h_bytes +=
+                        (spec.shape.iter().product::<usize>() * 4) as u64;
+                    host.insert(spec.name.clone(), super::literal_to_tensor(&lit, spec)?);
+                }
+            }
+        }
+        let mut m = rt.metrics.borrow_mut();
+        m.executions += 1;
+        m.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(host)
+    }
+
+    /// Download a device-resident input slot back to the host (e.g. the
+    /// trained LoRA factors after the last step).
+    pub fn fetch(&self, rt: &Runtime, name: &str) -> Result<Tensor> {
+        let slot = *self
+            .name_to_slot
+            .get(name)
+            .with_context(|| format!("no input '{name}'"))?;
+        let spec = &self.art.meta.inputs[slot];
+        let buf = self.slots[slot]
+            .as_ref()
+            .with_context(|| format!("input '{name}' not set"))?;
+        let lit = buf.to_literal_sync()?;
+        rt.metrics.borrow_mut().d2h_bytes += (spec.shape.iter().product::<usize>() * 4) as u64;
+        let t = match spec.dtype {
+            Dtype::F32 => Tensor::from_f32(&spec.shape, lit.to_vec::<f32>()?),
+            Dtype::I32 => Tensor::from_i32(&spec.shape, lit.to_vec::<i32>()?),
+        };
+        Ok(t)
+    }
+
+    pub fn fetch_all(&self, rt: &Runtime, names: &[String]) -> Result<TensorStore> {
+        let mut out = TensorStore::new();
+        for n in names {
+            out.insert(n.clone(), self.fetch(rt, n)?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,247 @@
+//! L3 runtime: load AOT artifacts (HLO text + meta JSON) and execute them
+//! on the PJRT CPU client via the `xla` crate.
+//!
+//! The interchange is HLO *text* (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 serialises protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see aot.py / the working
+//! reference at /opt/xla-example).
+//!
+//! Every artifact is described entirely by its `.meta.json` — input/output
+//! names, shapes and dtypes in *exact* positional order — so the runtime is
+//! generic: callers build a `TensorStore` and the runtime packs/unpacks by
+//! the meta's order.
+
+use crate::tensor::{Data, Dtype, Tensor, TensorStore};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+pub mod device;
+pub mod meta;
+
+pub use device::DeviceSession;
+pub use meta::{ArtifactMeta, IoSpec, ModelCfg};
+
+/// The PJRT client plus a compile cache over loaded artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+    /// cumulative counters for perf reporting (see EXPERIMENTS.md §Perf)
+    pub metrics: RefCell<RuntimeMetrics>,
+}
+
+#[derive(Default, Debug, Clone)]
+pub struct RuntimeMetrics {
+    pub compiles: usize,
+    pub compile_ms: f64,
+    pub executions: usize,
+    pub execute_ms: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Raw buffer-in/buffer-out execution (device-resident hot path).
+    pub fn execute_buffers(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> xla::Result<Vec<Vec<xla::PjRtBuffer>>> {
+        self.exe.execute_b(args)
+    }
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            metrics: RefCell::new(RuntimeMetrics::default()),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Names listed in the suite manifest (if present).
+    pub fn manifest(&self) -> Result<Vec<String>> {
+        let p = self.dir.join("manifest.json");
+        let txt = std::fs::read_to_string(&p)
+            .with_context(|| format!("read {}", p.display()))?;
+        let j = Json::parse(&txt).map_err(anyhow::Error::msg)?;
+        Ok(j.get("artifacts")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default())
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let meta_path = self.dir.join(format!("{name}.meta.json"));
+        let meta = ArtifactMeta::load(&meta_path)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        {
+            let mut m = self.metrics.borrow_mut();
+            m.compiles += 1;
+            m.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        let a = Rc::new(Artifact { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), a.clone());
+        Ok(a)
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.borrow().contains_key(name)
+    }
+
+    /// Execute with host tensors gathered from `store` by the meta's input
+    /// order; returns outputs as a TensorStore keyed by meta output names.
+    pub fn run(&self, art: &Artifact, store: &TensorStore) -> Result<TensorStore> {
+        let lits = self.pack_inputs(art, store)?;
+        let outs = self.execute_literals(art, &lits)?;
+        unpack_outputs(&art.meta, outs)
+    }
+
+    /// Pack inputs in artifact order as XLA literals, validating shapes.
+    fn pack_inputs(&self, art: &Artifact, store: &TensorStore) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(art.meta.inputs.len());
+        let mut bytes = 0u64;
+        for spec in &art.meta.inputs {
+            let t = store
+                .get(&spec.name)
+                .with_context(|| format!("artifact {} input", art.meta.name))?;
+            if t.shape != spec.shape {
+                bail!(
+                    "artifact {} input '{}': shape {:?} != expected {:?}",
+                    art.meta.name, spec.name, t.shape, spec.shape
+                );
+            }
+            if t.dtype() != spec.dtype {
+                bail!(
+                    "artifact {} input '{}': dtype {:?} != expected {:?}",
+                    art.meta.name, spec.name, t.dtype(), spec.dtype
+                );
+            }
+            bytes += (t.len() * 4) as u64;
+            lits.push(tensor_to_literal(t)?);
+        }
+        self.metrics.borrow_mut().h2d_bytes += bytes;
+        Ok(lits)
+    }
+
+    fn execute_literals(
+        &self,
+        art: &Artifact,
+        lits: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let bufs = art
+            .exe
+            .execute::<xla::Literal>(lits)
+            .with_context(|| format!("execute {}", art.meta.name))?;
+        // With the vendored untuple_result patch outputs arrive one buffer
+        // per leaf; fall back to tuple decomposition for unpatched builds.
+        let outs = if bufs[0].len() == art.meta.outputs.len() {
+            bufs[0]
+                .iter()
+                .map(|b| b.to_literal_sync())
+                .collect::<xla::Result<Vec<_>>>()
+                .context("fetch result literals")?
+        } else {
+            let root = bufs[0][0]
+                .to_literal_sync()
+                .context("fetch result literal")?;
+            root.to_tuple().context("decompose result tuple")?
+        };
+        {
+            let mut m = self.metrics.borrow_mut();
+            m.executions += 1;
+            m.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+            m.d2h_bytes += art
+                .meta
+                .outputs
+                .iter()
+                .map(|o| (o.shape.iter().product::<usize>() * 4) as u64)
+                .sum::<u64>();
+        }
+        if outs.len() != art.meta.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs, meta says {}",
+                art.meta.name,
+                outs.len(),
+                art.meta.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+fn unpack_outputs(meta: &ArtifactMeta, outs: Vec<xla::Literal>) -> Result<TensorStore> {
+    let mut store = TensorStore::new();
+    for (spec, lit) in meta.outputs.iter().zip(outs) {
+        store.insert(spec.name.clone(), literal_to_tensor(&lit, spec)?);
+    }
+    Ok(store)
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<usize> = t.shape.clone();
+    let lit = match &t.data {
+        Data::F32(v) => {
+            let bytes: &[u8] =
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &dims,
+                bytes,
+            )?
+        }
+        Data::I32(v) => {
+            let bytes: &[u8] =
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &dims,
+                bytes,
+            )?
+        }
+    };
+    Ok(lit)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+    let t = match spec.dtype {
+        Dtype::F32 => Tensor::from_f32(&spec.shape, lit.to_vec::<f32>()?),
+        Dtype::I32 => Tensor::from_i32(&spec.shape, lit.to_vec::<i32>()?),
+    };
+    Ok(t)
+}

@@ -1,0 +1,125 @@
+//! Batched generation service (Table 8's serving-side counterpart and the
+//! `serve_generate` example).
+//!
+//! A deliberately small vLLM-style loop: callers enqueue requests, the
+//! worker drains the queue into dynamic batches of up to the artifact's
+//! batch size, runs the generator, and delivers completions. Single-threaded
+//! by design (the PJRT CPU client is not Sync, and the box has one core);
+//! the queue/batcher structure is what Table 8 measures.
+
+use crate::coordinator::generate::{Generator, SampleCfg};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub cfg: SampleCfg,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub latency_ms: f64,
+    pub batch_size: usize,
+}
+
+pub struct Server<'r> {
+    gen: Generator<'r>,
+    queue: VecDeque<(Request, Instant)>,
+    next_id: u64,
+    rng: Rng,
+    pub stats: ServerStats,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub served: usize,
+    pub batches: usize,
+    pub total_latency_ms: f64,
+    pub total_batch_occupancy: f64,
+}
+
+impl<'r> Server<'r> {
+    pub fn new(gen: Generator<'r>, seed: u64) -> Server<'r> {
+        Server {
+            gen,
+            queue: VecDeque::new(),
+            next_id: 0,
+            rng: Rng::new(seed),
+            stats: ServerStats::default(),
+        }
+    }
+
+    pub fn enqueue(&mut self, prompt: impl Into<String>, cfg: SampleCfg) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((
+            Request {
+                id,
+                prompt: prompt.into(),
+                cfg,
+            },
+            Instant::now(),
+        ));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain one dynamic batch (grouped by sampling config) and serve it.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        if self.queue.is_empty() {
+            return Ok(vec![]);
+        }
+        let b = self.gen.batch_size();
+        // group the head-of-queue requests sharing the head's SampleCfg
+        let head_cfg = self.queue[0].0.cfg;
+        let mut batch = vec![];
+        let mut rest = VecDeque::new();
+        while let Some((req, t0)) = self.queue.pop_front() {
+            if batch.len() < b
+                && req.cfg.temperature == head_cfg.temperature
+                && req.cfg.max_new == head_cfg.max_new
+            {
+                batch.push((req, t0));
+            } else {
+                rest.push_back((req, t0));
+            }
+        }
+        self.queue = rest;
+        let prompts: Vec<String> = batch.iter().map(|(r, _)| r.prompt.clone()).collect();
+        let ids = self.gen.generate_batch(&prompts, head_cfg, &mut self.rng)?;
+        let tk = crate::tokenizer::Tokenizer::new();
+        let out: Vec<Response> = batch
+            .iter()
+            .zip(ids)
+            .map(|((req, t0), toks)| Response {
+                id: req.id,
+                text: tk.decode(&toks),
+                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                batch_size: batch.len(),
+            })
+            .collect();
+        self.stats.served += out.len();
+        self.stats.batches += 1;
+        self.stats.total_batch_occupancy += batch.len() as f64 / b as f64;
+        self.stats.total_latency_ms += out.iter().map(|r| r.latency_ms).sum::<f64>();
+        Ok(out)
+    }
+
+    /// Serve until the queue is empty; returns all responses.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut all = vec![];
+        while self.pending() > 0 {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+}

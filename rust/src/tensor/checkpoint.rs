@@ -1,0 +1,136 @@
+//! `.lmck` — the LoRAM binary checkpoint format.
+//!
+//! Layout (little-endian):
+//!   magic  b"LMCK"            4 bytes
+//!   version u32               currently 1
+//!   count   u32               number of tensors
+//!   per tensor:
+//!     name_len u32, name bytes (utf-8)
+//!     dtype    u8   (0 = f32, 1 = i32)
+//!     ndim     u8
+//!     dims     u64 × ndim
+//!     data     raw little-endian values
+//!
+//! Used for base model weights, LoRA state (pruned and recovered),
+//! optimiser moments and pruning metadata side-files.
+
+use super::{Data, Tensor, TensorStore};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LMCK";
+const VERSION: u32 = 1;
+
+pub fn save(store: &TensorStore, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(store.map.len() as u32).to_le_bytes())?;
+    for (name, t) in &store.map {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        let (code, bytes): (u8, Vec<u8>) = match &t.data {
+            Data::F32(v) => (0, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            Data::I32(v) => (1, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+        };
+        w.write_all(&[code, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w.write_all(&bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<TensorStore> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an LMCK checkpoint", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut store = TensorStore::new();
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("bad tensor name")?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (code, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        r.read_exact(&mut raw)?;
+        let data = match code {
+            0 => Data::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => Data::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            other => bail!("unknown dtype code {other}"),
+        };
+        store.insert(name, Tensor { shape, data });
+    }
+    Ok(store)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("loram_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.lmck");
+        let mut s = TensorStore::new();
+        s.insert("w", Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        s.insert("ids", Tensor::from_i32(&[4], vec![-1, 0, 7, 42]));
+        s.insert("scalar", Tensor::scalar_f32(3.5));
+        save(&s, &path).unwrap();
+        let l = load(&path).unwrap();
+        assert_eq!(l.map, s.map);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("loram_bad.lmck");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

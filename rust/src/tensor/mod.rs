@@ -1,0 +1,275 @@
+//! Host tensors, named tensor stores, and the `.lmck` checkpoint format.
+//!
+//! Artifacts speak f32/i32 only (see aot.py), so the host `Tensor` carries
+//! those two dtypes in row-major layout. `TensorStore` is an *ordered* map
+//! (BTreeMap on names) — but artifact packing order always comes from the
+//! meta JSON, never from map order.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub mod checkpoint;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn from_str(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" | "f32" => Ok(Dtype::F32),
+            "int32" | "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::F32(data),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(&[], vec![v])
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Data::F32(_) => Dtype::F32,
+            Data::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// (rows, cols) of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    /// Keep the given rows (axis 0) in order.
+    pub fn select_rows(&self, rows: &[usize]) -> Tensor {
+        let (r, c) = self.dims2();
+        let src = self.f32s();
+        let mut out = Vec::with_capacity(rows.len() * c);
+        for &i in rows {
+            assert!(i < r);
+            out.extend_from_slice(&src[i * c..(i + 1) * c]);
+        }
+        Tensor::from_f32(&[rows.len(), c], out)
+    }
+
+    /// Keep the given columns (axis 1) in order.
+    pub fn select_cols(&self, cols: &[usize]) -> Tensor {
+        let (r, c) = self.dims2();
+        let src = self.f32s();
+        let mut out = Vec::with_capacity(r * cols.len());
+        for i in 0..r {
+            for &j in cols {
+                assert!(j < c);
+                out.push(src[i * c + j]);
+            }
+        }
+        Tensor::from_f32(&[r, cols.len()], out)
+    }
+
+    /// Scatter this (pruned) matrix into a zero matrix of `full` shape,
+    /// placing row i at full row `rows[i]` (identity on cols). The recovery
+    /// primitive R(·) of Eq. 5 for the row-sliced case.
+    pub fn scatter_rows(&self, rows: &[usize], full_rows: usize) -> Tensor {
+        let (r, c) = self.dims2();
+        assert_eq!(r, rows.len());
+        let src = self.f32s();
+        let mut out = vec![0.0f32; full_rows * c];
+        for (i, &fi) in rows.iter().enumerate() {
+            out[fi * c..(fi + 1) * c].copy_from_slice(&src[i * c..(i + 1) * c]);
+        }
+        Tensor::from_f32(&[full_rows, c], out)
+    }
+
+    /// Column-scatter analogue of `scatter_rows`.
+    pub fn scatter_cols(&self, cols: &[usize], full_cols: usize) -> Tensor {
+        let (r, c) = self.dims2();
+        assert_eq!(c, cols.len());
+        let src = self.f32s();
+        let mut out = vec![0.0f32; r * full_cols];
+        for i in 0..r {
+            for (j, &fj) in cols.iter().enumerate() {
+                out[i * full_cols + fj] = src[i * c + j];
+            }
+        }
+        Tensor::from_f32(&[r, full_cols], out)
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.f32s().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.f32s()
+            .iter()
+            .zip(other.f32s())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Named, ordered collection of tensors — model params, LoRA state,
+/// optimiser moments, masks, quantised blobs.
+#[derive(Debug, Clone, Default)]
+pub struct TensorStore {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl TensorStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Merge another store under a name prefix (e.g. "adam_m.").
+    pub fn extend_prefixed(&mut self, prefix: &str, other: &TensorStore) {
+        for (k, v) in &other.map {
+            self.insert(format!("{prefix}{k}"), v.clone());
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        checkpoint::save(self, path)
+    }
+
+    pub fn load(path: &Path) -> Result<TensorStore> {
+        checkpoint::load(path)
+    }
+}
+
+// re-export for callers
+pub use checkpoint::{load as load_checkpoint, save as save_checkpoint};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_and_scatter_rows_roundtrip() {
+        let t = Tensor::from_f32(&[4, 3], (0..12).map(|x| x as f32).collect());
+        let rows = [0, 2];
+        let sel = t.select_rows(&rows);
+        assert_eq!(sel.shape, vec![2, 3]);
+        assert_eq!(sel.f32s(), &[0., 1., 2., 6., 7., 8.]);
+        let back = sel.scatter_rows(&rows, 4);
+        assert_eq!(back.f32s()[0..3], [0., 1., 2.]);
+        assert_eq!(back.f32s()[3..6], [0., 0., 0.]); // pruned row zeroed
+        assert_eq!(back.f32s()[6..9], [6., 7., 8.]);
+    }
+
+    #[test]
+    fn select_and_scatter_cols_roundtrip() {
+        let t = Tensor::from_f32(&[2, 4], (0..8).map(|x| x as f32).collect());
+        let cols = [1, 3];
+        let sel = t.select_cols(&cols);
+        assert_eq!(sel.f32s(), &[1., 3., 5., 7.]);
+        let back = sel.scatter_cols(&cols, 4);
+        assert_eq!(back.f32s(), &[0., 1., 0., 3., 0., 5., 0., 7.]);
+    }
+
+    #[test]
+    fn store_ordering_is_deterministic() {
+        let mut s = TensorStore::new();
+        s.insert("b", Tensor::zeros(&[1]));
+        s.insert("a", Tensor::zeros(&[2]));
+        let names: Vec<_> = s.names().cloned().collect();
+        assert_eq!(names, vec!["a", "b"]);
+        assert_eq!(s.total_params(), 3);
+    }
+}

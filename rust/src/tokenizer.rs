@@ -1,0 +1,139 @@
+//! Byte-level tokenizer with special tokens.
+//!
+//! The proxy models use vocab 512: ids 0..=255 are raw bytes, 256.. are
+//! specials, the rest is reserved headroom (kept so the vocab matches the
+//! artifact shapes). Synthetic corpora are ASCII, so byte-level tokenization
+//! is lossless and reversible.
+
+pub const VOCAB_SIZE: usize = 512;
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+/// Separates instruction from response in SFT examples; the loss mask
+/// covers only tokens after SEP (the "answer tokens", paper §2.1 L_SFT).
+pub const SEP: i32 = 259;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        Tokenizer
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// BOS + instruction + SEP + response + EOS.
+    pub fn encode_pair(&self, instruction: &str, response: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        out.extend(self.encode(instruction));
+        out.push(SEP);
+        out.extend(self.encode(response));
+        out.push(EOS);
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode only the response part (after the last SEP, before EOS/PAD).
+    pub fn decode_response(&self, ids: &[i32]) -> String {
+        let start = ids.iter().rposition(|&t| t == SEP).map(|i| i + 1).unwrap_or(0);
+        let tail = &ids[start..];
+        let end = tail
+            .iter()
+            .position(|&t| t == EOS || t == PAD)
+            .unwrap_or(tail.len());
+        self.decode(&tail[..end])
+    }
+}
+
+/// Right-pad / truncate to a fixed length.
+pub fn pad_to(ids: &[i32], len: usize) -> Vec<i32> {
+    let mut out: Vec<i32> = ids.iter().take(len).copied().collect();
+    while out.len() < len {
+        out.push(PAD);
+    }
+    out
+}
+
+/// Loss mask for next-token prediction on a (len+1)-token sequence: mask[t]
+/// covers the prediction of token t+1. `answer_only` restricts loss to the
+/// response segment (after SEP) — the SFT objective; otherwise all non-PAD
+/// transitions count — the LM/alignment objective (Eq. 8).
+pub fn loss_mask(tokens: &[i32], answer_only: bool) -> Vec<f32> {
+    let n = tokens.len() - 1;
+    let sep = tokens.iter().position(|&t| t == SEP);
+    (0..n)
+        .map(|t| {
+            let next = tokens[t + 1];
+            if next == PAD || tokens[t] == PAD {
+                return 0.0;
+            }
+            if answer_only {
+                match sep {
+                    Some(s) if t >= s => 1.0, // predicts tokens after SEP
+                    _ => 0.0,
+                }
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let tk = Tokenizer::new();
+        let s = "12 + 7 = 19";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn pair_structure() {
+        let tk = Tokenizer::new();
+        let ids = tk.encode_pair("2+2=", "4");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert!(ids.contains(&SEP));
+        assert_eq!(tk.decode_response(&ids), "4");
+    }
+
+    #[test]
+    fn pad_and_truncate() {
+        assert_eq!(pad_to(&[1, 2], 4), vec![1, 2, PAD, PAD]);
+        assert_eq!(pad_to(&[1, 2, 3, 4, 5], 3), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn answer_only_mask_covers_response() {
+        let tk = Tokenizer::new();
+        let ids = tk.encode_pair("ab", "xy"); // BOS a b SEP x y EOS
+        let m = loss_mask(&ids, true);
+        // positions: 0:BOS 1:a 2:b 3:SEP 4:x 5:y 6:EOS
+        // mask[t] predicts ids[t+1]; response starts at SEP (t=3 predicts x)
+        assert_eq!(m, vec![0., 0., 0., 1., 1., 1.]);
+        let full = loss_mask(&ids, false);
+        assert!(full.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn mask_zeroes_padding() {
+        let ids = pad_to(&[BOS, 65, SEP, 66, EOS], 8);
+        let m = loss_mask(&ids, true);
+        assert_eq!(m.len(), 7);
+        assert_eq!(&m[4..], &[0., 0., 0.]); // transitions into/from PAD
+    }
+}

@@ -1,0 +1,105 @@
+//! Hand-rolled CLI argument parser (no clap in the vendor set).
+//!
+//! Grammar: `loram <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options
+                        .insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: a bare word after `--flag` binds as its value (the grammar
+        // has no flag registry) — positionals go before flags.
+        let a = parse("train data.bin --steps 100 --lr 1e-3 --quiet");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 1e-3);
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.positional, vec!["data.bin"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("repro --exp=fig7 --scale=smoke");
+        assert_eq!(a.get("exp"), Some("fig7"));
+        assert_eq!(a.get("scale"), Some("smoke"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench --verbose");
+        assert!(a.has_flag("verbose"));
+        assert!(a.get("verbose").is_none());
+    }
+}

@@ -1,0 +1,58 @@
+//! Lightweight logging + CSV result writers.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+static VERBOSE: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(true);
+
+pub fn set_verbose(v: bool) {
+    VERBOSE.store(v, std::sync::atomic::Ordering::Relaxed);
+}
+
+pub fn info(msg: impl AsRef<str>) {
+    if VERBOSE.load(std::sync::atomic::Ordering::Relaxed) {
+        let t = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default()
+            .as_secs_f64();
+        eprintln!("[{:>12.3}] {}", t % 100_000.0, msg.as_ref());
+    }
+}
+
+/// Incrementally written CSV file (header + rows), used by every experiment
+/// to emit the data behind a paper table/figure.
+pub struct Csv {
+    w: std::io::BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Csv> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Csv { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.w, "{}", values.join(","))?;
+        self.w.flush()
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> std::io::Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// `fmt_row!` helper: stringify heterogenous cells.
+#[macro_export]
+macro_rules! csv_row {
+    ($($v:expr),* $(,)?) => {
+        vec![$(format!("{}", $v)),*]
+    };
+}

@@ -1,0 +1,7 @@
+//! Hand-rolled substrates (the vendor set has no serde/clap/rand/criterion).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,179 @@
+//! Deterministic PRNG (PCG64-DXSM family) — the vendor set has no `rand`.
+//!
+//! Used for parameter init, synthetic data generation, pruning decisions
+//! and sampling. Everything in the repo is seeded, so experiments are
+//! bit-reproducible.
+
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut r = Rng {
+            state: 0,
+            inc: ((seed as u128) << 1) | 1,
+        };
+        r.next_u64();
+        r.state = r.state.wrapping_add(0x9e3779b97f4a7c15u64 as u128 ^ (seed as u128));
+        r.next_u64();
+        r
+    }
+
+    /// Derive an independent stream (e.g. per data split / per worker).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xd1342543de82ef95))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+        // DXSM output permutation
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda942042e4dd58b5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire's nearly-divisionless method on 64 bits.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.below((hi - lo) as usize) as i64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (self.f64().max(1e-300)) as f64;
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Sample an index from unnormalised weights.
+    pub fn weighted(&mut self, ws: &[f32]) -> usize {
+        let total: f32 = ws.iter().sum();
+        let mut t = self.f32() * total;
+        for (i, w) in ws.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        ws.len() - 1
+    }
+
+    /// Sample k distinct indices from [0, n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let xs: Vec<f32> = (0..20_000).map(|_| r.normal()).collect();
+        let mean: f64 = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        let var: f64 =
+            xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(6);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(8);
+        let ws = [1.0, 0.0, 9.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..5000 {
+            counts[r.weighted(&ws)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5);
+    }
+}

@@ -1,0 +1,88 @@
+//! Small statistics helpers shared by benches, evaluators and experiments.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Unbiased pass@k estimator (Chen et al. 2021): 1 - C(n-c, k)/C(n, k).
+pub fn pass_at_k(n: usize, c: usize, k: usize) -> f64 {
+    if n < k || c == 0 {
+        return if c > 0 { 1.0 } else { 0.0 };
+    }
+    if n - c < k {
+        return 1.0;
+    }
+    // product form avoids overflow
+    let mut prod = 1.0f64;
+    for i in 0..k {
+        prod *= (n - c - i) as f64 / (n - i) as f64;
+    }
+    1.0 - prod
+}
+
+/// Standard error of a proportion (used for Table 2's mean ± std columns).
+pub fn proportion_se(p: f64, n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    (p * (1.0 - p) / n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.2909944487358056).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn pass_at_k_edges() {
+        assert_eq!(pass_at_k(10, 0, 1), 0.0);
+        assert_eq!(pass_at_k(10, 10, 1), 1.0);
+        // n=2, c=1, k=1 -> 0.5
+        assert!((pass_at_k(2, 1, 1) - 0.5).abs() < 1e-12);
+        // n=4, c=2, k=2 -> 1 - C(2,2)/C(4,2) = 1 - 1/6
+        assert!((pass_at_k(4, 2, 2) - (1.0 - 1.0 / 6.0)).abs() < 1e-12);
+    }
+}

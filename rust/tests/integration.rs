@@ -1,0 +1,314 @@
+//! Integration tests over the real artifacts + PJRT runtime.
+//!
+//! These need `make artifacts` (the smoke subset is enough). They share one
+//! Runtime (PJRT client) via a thread-local because the client is neither
+//! Send nor cheap; `cargo test` runs this binary's cases in parallel
+//! threads, so each test opens its own runtime.
+
+use loram::coordinator::evaluate::{test_sequences, Evaluator};
+use loram::coordinator::generate::{Generator, SampleCfg};
+use loram::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
+use loram::coordinator::train::TrainSession;
+use loram::data::instruct::Dataset;
+use loram::data::{corpus::Corpus, make_batch};
+use loram::params::{init_lora, init_params};
+use loram::pruning;
+use loram::runtime::Runtime;
+use loram::tensor::{Tensor, TensorStore};
+use loram::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    let dir = std::env::var("LORAM_ARTIFACTS").unwrap_or_else(|_| {
+        // tests run from the crate root
+        "artifacts".to_string()
+    });
+    Runtime::new(dir).expect("PJRT runtime (did you run `make artifacts`?)")
+}
+
+fn tmp_runs() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("loram_it_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn artifact_meta_matches_rust_shape_mirror() {
+    let rt = runtime();
+    let art = rt.load("eval_tiny").unwrap();
+    let cfg = &art.meta.config;
+    // every base-param input of the artifact matches ModelCfg::param_shapes
+    for (name, shape) in cfg.param_shapes() {
+        let spec = art.meta.input_spec(&name).unwrap();
+        assert_eq!(spec.shape, shape, "{name}");
+    }
+    for (name, shape) in cfg.lora_shapes() {
+        let spec = art.meta.input_spec(&name).unwrap();
+        assert_eq!(spec.shape, shape, "{name}");
+    }
+}
+
+#[test]
+fn pretrain_step_decreases_loss_on_fixed_batch() {
+    let rt = runtime();
+    let art = rt.load("pretrain_tiny").unwrap();
+    let cfg = art.meta.config.clone();
+    let params = init_params(&cfg, 0);
+    let mut sess = TrainSession::new(&rt, "pretrain_tiny", &[&params]).unwrap();
+    let (b, s) = (sess.batch_size(), sess.seq_len());
+    let mut corpus = Corpus::new(0, 0.5);
+    let seqs = corpus.next_seqs(b, s);
+    let batch = make_batch(&seqs, b, s, false);
+    let first = sess.train_step(&batch, 1e-2).unwrap();
+    for _ in 0..4 {
+        sess.train_step(&batch, 1e-2).unwrap();
+    }
+    let last = *sess.losses.last().unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn fresh_lora_is_identity_through_artifacts() {
+    // eval with zero-b LoRA must equal eval of the bare model: the nll of
+    // any batch must be identical whether lora is fresh or absent-by-zero.
+    let rt = runtime();
+    let cfg = rt.load("eval_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 1);
+    let lora = init_lora(&cfg, 2);
+    let mut lora_zero = lora.clone();
+    for (k, t) in lora_zero.map.iter_mut() {
+        if k.ends_with("lora_a") {
+            *t = Tensor::zeros(&t.shape); // zero a as well: both zero
+        }
+    }
+    let ev1 = Evaluator::new(&rt, "eval_tiny", &[&params, &lora]).unwrap();
+    let ev2 = Evaluator::new(&rt, "eval_tiny", &[&params, &lora_zero]).unwrap();
+    let seqs = test_sequences(Dataset::Alpaca, 0, 4);
+    let p1 = ev1.perplexity(&seqs, true).unwrap();
+    let p2 = ev2.perplexity(&seqs, true).unwrap();
+    assert!((p1 - p2).abs() < 1e-3, "{p1} vs {p2}");
+}
+
+#[test]
+fn pallas_and_jnp_logits_artifacts_agree() {
+    // the L1 kernel path (fused lora_matmul Pallas kernels, interpret mode)
+    // lowered into HLO must match the jnp path numerically
+    let rt = runtime();
+    let art_p = rt.load("logits_tiny_pallas").unwrap();
+    let art_j = rt.load("logits_tiny_jnp").unwrap();
+    let cfg = art_p.meta.config.clone();
+    let params = init_params(&cfg, 3);
+    let lora = init_lora(&cfg, 4);
+    // non-trivial lora_b so the fused path actually contributes
+    let mut store = TensorStore::new();
+    for (k, v) in params.map.iter().chain(lora.map.iter()) {
+        store.insert(k.clone(), v.clone());
+    }
+    let mut rng = Rng::new(5);
+    for (k, t) in store.map.iter_mut() {
+        if k.ends_with("lora_b") {
+            *t = Tensor::from_f32(&t.shape, rng.normal_vec(t.len(), 0.05));
+        }
+    }
+    let toks: Vec<i32> = (0..64).map(|i| (i * 7) % 256).collect();
+    store.insert("tokens", Tensor::from_i32(&[2, 32], toks));
+    let out_p = rt.run(&art_p, &store).unwrap();
+    let out_j = rt.run(&art_j, &store).unwrap();
+    let lp = out_p.get("logits").unwrap();
+    let lj = out_j.get("logits").unwrap();
+    let diff = lp.max_abs_diff(lj);
+    assert!(diff < 2e-3, "pallas vs jnp max diff {diff}");
+}
+
+#[test]
+fn sft_masked_keeps_pruned_positions_zero() {
+    let rt = runtime();
+    let cfg = rt.load("sft_tiny_m").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 6);
+    let (masks, masked) = pruning::build_masks(&params, &cfg, "unst", 0.5).unwrap();
+    let lora = init_lora(&cfg, 7);
+    let mut sess = TrainSession::new(&rt, "sft_tiny_m", &[&masked, &masks, &lora]).unwrap();
+    let (b, s) = (sess.batch_size(), sess.seq_len());
+    let mut gen = loram::data::instruct::InstructGen::new(Dataset::Hermes, 0, 0);
+    let tk = loram::tokenizer::Tokenizer::new();
+    for _ in 0..3 {
+        let seqs: Vec<Vec<i32>> = gen.batch_examples(b).iter().map(|e| e.tokens(&tk)).collect();
+        let batch = make_batch(&seqs, b, s, true);
+        sess.train_step(&batch, 1e-2).unwrap();
+    }
+    // C2 invariant: the masked low-rank product (a@b)∘M only updates kept
+    // coordinates — equivalently a fully-masked projection's lora gets no
+    // gradient. Verify via the delta of a projection whose mask we zero.
+    // Here we check the weaker artifact-level invariant: loss is finite and
+    // lora_b moved.
+    let lnames = sess.art.meta.name_list("lora_names");
+    let state = sess.extract(&lnames).unwrap();
+    let moved = lnames
+        .iter()
+        .filter(|n| n.ends_with("lora_b"))
+        .any(|n| state.get(n).unwrap().l2_norm() > 0.0);
+    assert!(moved);
+    assert!(sess.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn full_loram_pipeline_recovers_and_beats_nothing() {
+    let runs = tmp_runs();
+    let rt = runtime();
+    let plc = PipelineConfig {
+        base: "tiny".into(),
+        pruned: Some("tiny_p50".into()),
+        variant: Variant::Stru,
+        pretrain_steps: 30,
+        align_steps: 6,
+        sft_steps: 10,
+        dataset: Dataset::Hermes,
+        seed: 1,
+        eval_every: 0,
+        eval_seqs: 8,
+        run_dir: runs,
+        ..Default::default()
+    };
+    let res = Pipeline::new(&rt, plc).run().unwrap();
+    // recovered factors must have full-config shapes
+    let full_cfg = rt.load("eval_tiny").unwrap().meta.config.clone();
+    for (name, shape) in full_cfg.lora_shapes() {
+        assert_eq!(res.lora_recovered.get(&name).unwrap().shape, shape);
+    }
+    // the final eval point exists and is finite
+    let last = res.eval_points.last().unwrap();
+    assert!(last.ood_ppl.is_finite() && last.ood_ppl > 1.0);
+    // sft made progress on the training loss
+    assert!(res.sft_losses.last().unwrap() < res.sft_losses.first().unwrap());
+}
+
+#[test]
+fn quantized_sft_step_runs_and_matches_dense_loss_roughly() {
+    let rt = runtime();
+    let art = rt.load("sft_tiny_p50_q").unwrap();
+    let cfg = art.meta.config.clone();
+    let params = init_params(&cfg, 8);
+    let qnames = art.meta.name_list("quant_names");
+    let quant = loram::quant::quantize_projections(&params, &qnames, loram::quant::NF4_BLOCK)
+        .unwrap();
+    let lora = init_lora(&cfg, 9);
+    let mut qsess =
+        TrainSession::new(&rt, "sft_tiny_p50_q", &[&params, &quant, &lora]).unwrap();
+    let mut dsess = TrainSession::new(&rt, "sft_tiny_p50", &[&params, &lora]).unwrap();
+    let (b, s) = (qsess.batch_size(), qsess.seq_len());
+    let mut gen = loram::data::instruct::InstructGen::new(Dataset::Hermes, 1, 0);
+    let tk = loram::tokenizer::Tokenizer::new();
+    let seqs: Vec<Vec<i32>> = gen.batch_examples(b).iter().map(|e| e.tokens(&tk)).collect();
+    let batch = make_batch(&seqs, b, s, true);
+    let lq = qsess.train_step(&batch, 1e-3).unwrap();
+    let ld = dsess.train_step(&batch, 1e-3).unwrap();
+    assert!((lq - ld).abs() < 0.5, "quantized {lq} vs dense {ld}");
+}
+
+#[test]
+fn generation_decodes_tokens() {
+    let rt = runtime();
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 10);
+    let lora = init_lora(&cfg, 11);
+    let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora]).unwrap();
+    let mut rng = Rng::new(0);
+    let outs = gen
+        .generate_batch(
+            &["Q: 1+1=".to_string()],
+            SampleCfg {
+                temperature: 0.0,
+                top_p: 1.0,
+                max_new: 4,
+            },
+            &mut rng,
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    assert!(outs[0].len() <= 4);
+}
+
+#[test]
+fn gradimp_importance_drives_structured_plan() {
+    let rt = runtime();
+    let art = rt.load("gradimp_tiny").unwrap();
+    let cfg = art.meta.config.clone();
+    let params = init_params(&cfg, 12);
+    let mut store = params.clone();
+    let b = art.meta.batch();
+    let s = art.meta.seq();
+    let mut corpus = Corpus::new(3, 0.5);
+    let seqs = corpus.next_seqs(b, s);
+    let batch = make_batch(&seqs, b, s, false);
+    store.insert("tokens", batch.tokens);
+    store.insert("loss_mask", batch.loss_mask);
+    let out = rt.run(&art, &store).unwrap();
+    let head_imp = out.get("head_imp").unwrap();
+    let ff_imp = out.get("ff_imp").unwrap();
+    assert_eq!(head_imp.shape, vec![cfg.n_layers, cfg.n_heads]);
+    assert!(head_imp.f32s().iter().all(|&x| x >= 0.0));
+    assert!(head_imp.f32s().iter().any(|&x| x > 0.0));
+    let pruned_cfg = rt.load("eval_tiny_p50").unwrap().meta.config.clone();
+    let plan =
+        pruning::StructuredPlan::from_importance(&cfg, &pruned_cfg, head_imp, ff_imp).unwrap();
+    // kept sets have the right sizes
+    for (i, l) in plan.layers.iter().enumerate() {
+        let (h, kv, ff) = pruned_cfg.layer_shapes(i);
+        assert_eq!(l.heads.len(), h);
+        assert_eq!(l.kv_heads.len(), kv);
+        assert_eq!(l.ff.len(), ff);
+    }
+}
+
+#[test]
+fn merge_equivalence_recovered_lora_on_full_model() {
+    // Eq. 6/7: evaluating the full model with recovered LoRA must equal
+    // evaluating with factors manually merged into W0 (within f32 noise).
+    let rt = runtime();
+    let cfg = rt.load("eval_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 13);
+    let mut lora = init_lora(&cfg, 14);
+    let mut rng = Rng::new(15);
+    for (k, t) in lora.map.iter_mut() {
+        if k.ends_with("lora_b") {
+            *t = Tensor::from_f32(&t.shape, rng.normal_vec(t.len(), 0.02));
+        }
+    }
+    // manual merge: W' = W + scale * a@b
+    let scale = (cfg.lora_alpha / cfg.lora_rank as f64) as f32;
+    let mut merged = params.clone();
+    for i in 0..cfg.n_layers {
+        for (proj, _) in cfg.layer_proj_shapes(i) {
+            let nm = format!("l{i}.{proj}");
+            let a = lora.get(&format!("{nm}.lora_a")).unwrap();
+            let b = lora.get(&format!("{nm}.lora_b")).unwrap();
+            let delta = loram::coordinator::analysis::lora_delta(a, b);
+            let w = merged.map.get_mut(&nm).unwrap();
+            for (x, d) in w.f32s_mut().iter_mut().zip(delta.f32s()) {
+                *x += scale * d;
+            }
+        }
+    }
+    let a = lora.get("lm_head.lora_a").unwrap();
+    let b = lora.get("lm_head.lora_b").unwrap();
+    let delta = loram::coordinator::analysis::lora_delta(a, b);
+    {
+        let w = merged.map.get_mut("lm_head").unwrap();
+        for (x, d) in w.f32s_mut().iter_mut().zip(delta.f32s()) {
+            *x += scale * d;
+        }
+    }
+    let zero = init_lora(&cfg, 0);
+    let seqs = test_sequences(Dataset::Alpaca, 1, 4);
+    let p_fused = Evaluator::new(&rt, "eval_tiny", &[&params, &lora])
+        .unwrap()
+        .perplexity(&seqs, true)
+        .unwrap();
+    let p_merged = Evaluator::new(&rt, "eval_tiny", &[&merged, &zero])
+        .unwrap()
+        .perplexity(&seqs, true)
+        .unwrap();
+    assert!(
+        (p_fused - p_merged).abs() / p_merged < 1e-3,
+        "fused {p_fused} merged {p_merged}"
+    );
+}
