@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI gate for the rust workspace: tier-1 verify + formatting + lints.
+#
+#   ./ci.sh          # build, test, fmt --check, clippy -D warnings
+#   ./ci.sh fast     # tier-1 only (build + test)
+#
+# Needs a Rust toolchain (cargo); fmt/clippy steps are skipped with a
+# warning when the corresponding component is missing.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+run() { echo "+ $*"; "$@"; }
+
+run cargo build --release
+run cargo test -q
+
+if [ "${1:-}" = "fast" ]; then
+    exit 0
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+    run cargo fmt --all --check
+else
+    echo "WARN: rustfmt not installed; skipping cargo fmt --check" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    run cargo clippy --workspace --all-targets -- -D warnings
+else
+    echo "WARN: clippy not installed; skipping cargo clippy" >&2
+fi
+
+echo "ci.sh: all checks passed"

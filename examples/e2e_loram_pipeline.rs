@@ -6,7 +6,7 @@
 //! to an HLO artifact, executed by the L3 Rust runtime) for `steps`
 //! full-parameter steps on the synthetic corpus, logging the loss curve to
 //! results/e2e/loss_curve.csv, then reports held-out perplexity
-//! before/after. Defaults: 200 steps at ~100M params (see EXPERIMENTS.md
+//! before/after. Defaults: 200 steps at ~100M params (see DESIGN.md
 //! §E2E for the recorded run on this box).
 
 use loram::coordinator::train::TrainSession;

@@ -1,5 +1,10 @@
-//! Serving example: batched generation through the L3 service loop
-//! (request queue -> dynamic batcher -> logits artifact -> sampler).
+//! Serving example: generation through the continuous-batching scheduler
+//! (request queue -> free-row admission -> per-row sampling -> responses).
+//!
+//! Requests carry *their own* sampling configs and are admitted into batch
+//! rows mid-decode: a latecomer enqueued while the first batch is still
+//! decoding starts immediately in a freed row instead of waiting for the
+//! whole batch to finish.
 //!
 //!   cargo run --release --example serve_generate -- [n_requests]
 
@@ -9,7 +14,6 @@ use loram::data::instruct::{Dataset, InstructGen};
 use loram::params::init_lora;
 use loram::runtime::Runtime;
 use loram::serve::Server;
-use loram::util::stats;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args()
@@ -25,32 +29,52 @@ fn main() -> anyhow::Result<()> {
     let mut server = Server::new(gen, 7);
 
     let mut ig = InstructGen::new(Dataset::Hermes, 3, 1);
-    for _ in 0..n {
+    for i in 0..n {
         let (ex, _) = ig.next();
         server.enqueue(
             ex.instruction,
+            // per-request configs, mixed within a batch
             SampleCfg {
-                temperature: 0.4,
-                top_p: 0.95,
-                max_new: 12,
+                temperature: if i % 2 == 0 { 0.4 } else { 0.0 },
+                top_p: if i % 3 == 0 { 0.95 } else { 0.85 },
+                max_new: 8 + 4 * (i % 2),
             },
         );
     }
+
     let t0 = std::time::Instant::now();
-    let responses = server.drain()?;
-    let dt = t0.elapsed().as_secs_f64();
-    let lats: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
-    for r in responses.iter().take(5) {
-        println!("#{:<3} [{:>7.1} ms] {:?}", r.id, r.latency_ms, r.text);
+    // run a few scheduler ticks, then enqueue a latecomer mid-decode: it
+    // is admitted into the next freed row, not after the current batch
+    let mut responses = vec![];
+    for _ in 0..3 {
+        responses.extend(server.step()?);
     }
+    let late = server.enqueue("What is 40 + 2?", SampleCfg::default());
+    responses.extend(server.drain()?);
+    let dt = t0.elapsed().as_secs_f64();
+
+    for r in responses.iter().take(5) {
+        println!(
+            "#{:<3} [ttft {:>6.1} ms, total {:>7.1} ms, rows={}] {:?}",
+            r.id, r.ttft_ms, r.latency_ms, r.batch_rows, r.text
+        );
+    }
+    let late_pos = responses.iter().position(|r| r.id == late).unwrap_or(0);
+    let st = &server.stats;
     println!(
-        "\nserved {n} requests in {dt:.2}s — {:.2} req/s, latency p50 {:.0} ms p99 {:.0} ms, \
-         {} batches (occupancy {:.0}%)",
-        n as f64 / dt,
-        stats::percentile(&lats, 50.0),
-        stats::percentile(&lats, 99.0),
-        server.stats.batches,
-        100.0 * server.stats.total_batch_occupancy / server.stats.batches as f64
+        "\nserved {} requests in {dt:.2}s — {:.1} tok/s decode, mean ttft {:.0} ms, \
+         p-lat {:.0} ms, {} decode steps, occupancy {:.0}%",
+        st.served,
+        st.tokens_per_sec(),
+        st.mean_ttft_ms(),
+        st.mean_latency_ms(),
+        st.decode_steps,
+        100.0 * st.mean_occupancy()
+    );
+    println!(
+        "latecomer #{late} finished {} of {} (admitted mid-decode, no batch barrier)",
+        late_pos + 1,
+        st.served
     );
     Ok(())
 }

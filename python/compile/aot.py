@@ -30,7 +30,7 @@ from .configs import PRESETS, ModelConfig, pruned_config
 from . import model as M
 
 # Per-artifact static shapes (proxy scale for the single-core testbed; the
-# paper's 512-token/batch-128 setup is noted in EXPERIMENTS.md).
+# paper's 512-token/batch-128 setup is noted in DESIGN.md §Perf).
 TRAIN_B, TRAIN_S = 4, 64
 EVAL_B, EVAL_S = 8, 64
 LOGITS_B, LOGITS_S = 4, 64
@@ -125,6 +125,24 @@ def _quant_specs(cfg):
     return out
 
 
+def _state_threading(trained_names):
+    """Declared output->input donation map for an optimiser step artifact.
+
+    The Rust `Session` threads each step's state outputs back onto their
+    input slots using exactly this declaration (no name-prefix guessing on
+    the Rust side); `state_zero_init` marks the inputs the session may
+    zero-fill when the caller supplies no optimiser state.
+    """
+    bindings = {}
+    for n in trained_names:
+        bindings["new." + n] = n
+        bindings["new_m." + n] = "adam_m." + n
+        bindings["new_v." + n] = "adam_v." + n
+    zero_init = (["adam_m." + n for n in trained_names]
+                 + ["adam_v." + n for n in trained_names])
+    return {"state_bindings": bindings, "state_zero_init": zero_init}
+
+
 def pretrain_artifact(cfg, masked=False, b=TRAIN_B, s=TRAIN_S, tag=""):
     fn, pnames, mnames = M.make_pretrain_step(cfg, masked=masked)
     ins = [("step", _spec((), jnp.float32)), ("lr", _spec((), jnp.float32)),
@@ -141,7 +159,7 @@ def pretrain_artifact(cfg, masked=False, b=TRAIN_B, s=TRAIN_S, tag=""):
     return Artifact(name, fn, ins, outs, cfg,
                     {"kind": "pretrain", "batch": b, "seq": s,
                      "masked": masked, "param_names": pnames,
-                     "mask_names": mnames})
+                     "mask_names": mnames, **_state_threading(pnames)})
 
 
 def sft_artifact(cfg, masked=False, quantized=False, b=TRAIN_B, s=TRAIN_S):
@@ -165,7 +183,8 @@ def sft_artifact(cfg, masked=False, quantized=False, b=TRAIN_B, s=TRAIN_S):
                     {"kind": "sft", "batch": b, "seq": s, "masked": masked,
                      "quantized": quantized, "nf4_block": NF4_BLOCK,
                      "param_names": pnames, "quant_names": qnames,
-                     "mask_names": mnames, "lora_names": lnames})
+                     "mask_names": mnames, "lora_names": lnames,
+                     **_state_threading(lnames)})
 
 
 def eval_artifact(cfg, b=EVAL_B, s=EVAL_S):

@@ -14,7 +14,7 @@ through B and added — one extra (bs, r)x(r, bn) MXU pass per output tile,
 amortised over m/bm contraction steps.
 
 Lowered with interpret=True (CPU PJRT cannot execute Mosaic custom-calls);
-the real-TPU tile plan and VMEM budget are estimated in EXPERIMENTS.md §Perf.
+the real-TPU tile plan and VMEM budget are estimated in DESIGN.md §Perf.
 """
 
 import functools

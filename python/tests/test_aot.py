@@ -36,7 +36,7 @@ def test_std_suite_covers_experiment_configs():
 
 
 def test_sft_artifact_input_order_is_canonical():
-    """The Rust DeviceSession depends on this exact flat-input convention:
+    """The Rust runtime Session depends on this exact flat-input convention:
     step, lr, tokens, loss_mask, params, [quant], [masks], lora, m, v."""
     art = aot.sft_artifact(PRESETS["tiny"], quantized=True, b=2, s=16)
     names = [n for n, _ in art.in_specs]

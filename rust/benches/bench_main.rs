@@ -5,6 +5,8 @@
 //!   tab8_*   — training-phase step latency/throughput (Table 8)
 //!   fig3_*   — eval/perplexity path that produces the convergence curves
 //!   tab3_*   — generation/decode path behind pass@k
+//!   serve    — continuous-batching scheduler; emits BENCH_serve.json
+//!              (steady-state tokens/sec, mean TTFT, batch occupancy)
 //!   substrate benches: NF4 quant, pruning plans, recovery, tokenizer, JSON
 //!
 //! Requires `make artifacts` (tiny suite) for the runtime benches.
@@ -13,16 +15,61 @@ use loram::bench::{bench, bench_throughput};
 use loram::coordinator::evaluate::{test_sequences, Evaluator};
 use loram::coordinator::generate::{Generator, SampleCfg};
 use loram::coordinator::train::TrainSession;
-use loram::data::instruct::Dataset;
+use loram::data::instruct::{Dataset, InstructGen};
 use loram::data::{corpus::Corpus, make_batch};
 use loram::params::{init_lora, init_params};
 use loram::pruning;
 use loram::quant;
 use loram::runtime::Runtime;
+use loram::serve::{DecodeEngine, Server, ServerStats, SimEngine};
 use loram::tensor::Tensor;
 use loram::tokenizer::Tokenizer;
 use loram::util::json::Json;
 use loram::util::rng::Rng;
+
+/// Drive `n` mixed-config requests through the continuous-batching server
+/// and return its stats (tokens/sec, TTFT, occupancy).
+fn serve_workload<E: DecodeEngine>(engine: E, n: usize) -> anyhow::Result<ServerStats> {
+    let mut srv = Server::new(engine, 7);
+    let mut ig = InstructGen::new(Dataset::Hermes, 3, 1);
+    for i in 0..n {
+        let (ex, _) = ig.next();
+        srv.enqueue(
+            ex.instruction,
+            SampleCfg {
+                temperature: 0.2 * (i % 3) as f64,
+                top_p: [1.0, 0.95, 0.9][i % 3],
+                max_new: 8 + 4 * (i % 2),
+            },
+        );
+    }
+    srv.drain()?;
+    Ok(srv.stats)
+}
+
+/// Emit the serving bench trajectory point.
+fn emit_bench_serve(engine: &str, n: usize, st: &ServerStats) -> anyhow::Result<()> {
+    let j = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("engine", Json::str(engine)),
+        ("requests", Json::num(n as f64)),
+        ("tokens_per_sec", Json::num(st.tokens_per_sec())),
+        ("mean_ttft_ms", Json::num(st.mean_ttft_ms())),
+        ("mean_latency_ms", Json::num(st.mean_latency_ms())),
+        ("mean_batch_occupancy", Json::num(st.mean_occupancy())),
+        ("decode_steps", Json::num(st.decode_steps as f64)),
+        ("total_tokens", Json::num(st.total_tokens as f64)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(path, j.to_string())?;
+    println!(
+        "BENCH_serve.json [{engine}]: {:.1} tok/s, mean ttft {:.2} ms, occupancy {:.2}",
+        st.tokens_per_sec(),
+        st.mean_ttft_ms(),
+        st.mean_occupancy()
+    );
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     // cargo passes harness flags like `--bench`; only bare words filter
@@ -86,6 +133,13 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(c.next_seq(64));
         })
         .report();
+    }
+    if run("serve") {
+        // scheduler-only serving bench on the simulated engine (runs with
+        // no artifacts); overwritten by the PJRT-backed numbers below when
+        // the tiny artifact suite is present
+        let st = serve_workload(SimEngine::new(4), 64)?;
+        emit_bench_serve("sim", 64, &st)?;
     }
 
     // ---------------- runtime benches (need artifacts) --------------------
@@ -171,6 +225,13 @@ fn main() -> anyhow::Result<()> {
             );
         })
         .report();
+    }
+
+    if run("serve") {
+        let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora])?;
+        let n = 16;
+        let st = serve_workload(gen, n)?;
+        emit_bench_serve("pjrt", n, &st)?;
     }
 
     if run("pallas") {

@@ -12,15 +12,15 @@ use std::rc::Rc;
 pub struct Evaluator<'r> {
     pub rt: &'r Runtime,
     pub art: Rc<Artifact>,
-    /// weights live device-resident: uploaded once at construction, only
-    /// (tokens, loss_mask) move per batch (EXPERIMENTS.md §Perf)
-    sess: std::cell::RefCell<crate::runtime::DeviceSession>,
+    /// weights live in session slots: uploaded once at construction, only
+    /// (tokens, loss_mask) move per batch (DESIGN.md §Perf)
+    sess: std::cell::RefCell<crate::runtime::Session>,
 }
 
 impl<'r> Evaluator<'r> {
     pub fn new(rt: &'r Runtime, artifact: &str, stores: &[&TensorStore]) -> Result<Evaluator<'r>> {
         let art = rt.load(artifact)?;
-        let sess = crate::runtime::DeviceSession::new(rt, art.clone(), stores)?;
+        let sess = crate::runtime::Session::new(rt, art.clone(), stores)?;
         Ok(Evaluator {
             rt,
             art,

@@ -2,7 +2,7 @@
 //!
 //! `smoke` exercises every code path in minutes on the tiny artifacts;
 //! `paper` runs the proxy-family reproduction (hours on this single-core
-//! box — step counts noted per experiment in EXPERIMENTS.md).
+//! box — step counts noted per experiment in DESIGN.md §3).
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {

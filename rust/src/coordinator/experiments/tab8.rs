@@ -3,12 +3,14 @@
 //! 1024-sample workload scaled by the artifact batch size).
 
 use super::ExpCtx;
+use crate::coordinator::generate::{Generator, SampleCfg};
 use crate::coordinator::pipeline::ensure_base;
 use crate::coordinator::train::TrainSession;
 use crate::data::instruct::{Dataset, InstructGen};
 use crate::data::make_batch;
 use crate::params::init_lora;
 use crate::pruning;
+use crate::serve::Server;
 use crate::tokenizer::Tokenizer;
 use crate::util::log::{self, Csv};
 use anyhow::Result;
@@ -76,6 +78,51 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             format!("{:.0}", crate::bench::peak_rss_mib()),
             format!("{latency:.2}"),
             format!("{:.3}", samples / latency)
+        ])?;
+    }
+
+    // serving-side counterpart (the "infer large" hot path): decode
+    // throughput and TTFT through the continuous-batching scheduler, small
+    // LoRA target vs the big recovered-inference target
+    let mut scsv = Csv::create(
+        ctx.out_dir.join("tab8_serving.csv"),
+        &["method", "requests", "tokens_per_sec", "mean_ttft_ms",
+          "mean_latency_ms", "mean_occupancy"],
+    )?;
+    let serve_requests = workload_steps * 2;
+    for (method, base) in [(format!("{small} serve"), small), (format!("{big} serve"), big)] {
+        let params = ensure_base(ctx.rt, base, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+        let mcfg = ctx.rt.load(&format!("eval_{base}"))?.meta.config.clone();
+        let lora = init_lora(&mcfg, ctx.seed);
+        let gen = Generator::new(ctx.rt, &format!("logits_{base}"), &[&params, &lora])?;
+        let mut srv = Server::new(gen, ctx.seed);
+        let mut ig = InstructGen::new(Dataset::Hermes, ctx.seed, 2);
+        for i in 0..serve_requests {
+            let (ex, _) = ig.next();
+            srv.enqueue(
+                ex.instruction,
+                SampleCfg {
+                    temperature: 0.4,
+                    top_p: if i % 2 == 0 { 0.95 } else { 0.8 },
+                    max_new: 8,
+                },
+            );
+        }
+        srv.drain()?;
+        let st = &srv.stats;
+        log::info(format!(
+            "tab8 {method}: {:.1} tok/s, ttft {:.1} ms, occupancy {:.2}",
+            st.tokens_per_sec(),
+            st.mean_ttft_ms(),
+            st.mean_occupancy()
+        ));
+        scsv.row(&crate::csv_row![
+            method,
+            serve_requests,
+            format!("{:.2}", st.tokens_per_sec()),
+            format!("{:.2}", st.mean_ttft_ms()),
+            format!("{:.2}", st.mean_latency_ms()),
+            format!("{:.3}", st.mean_occupancy())
         ])?;
     }
     log::info(format!("tab8 -> {}", ctx.out_dir.display()));

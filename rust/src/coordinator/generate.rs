@@ -1,19 +1,30 @@
-//! Autoregressive generation over a `logits_*` artifact.
+//! Autoregressive generation over a `logits_*` artifact, structured as an
+//! explicit decode state machine.
 //!
 //! The artifact computes full-sequence logits for a fixed (B, S); the
-//! generator packs up to B prompts per call, reads the logits at each
-//! prompt's frontier position, samples (greedy or temperature/top-p), and
-//! repeats until EOS or budget. This full-reforward decode is the v1 hot
-//! path measured in EXPERIMENTS.md §Perf.
+//! generator owns one *row* of per-request decode state per batch slot:
+//! the token sequence, its frontier position, and that request's own
+//! [`SampleCfg`]. `prefill` admits a prompt into a free row; `decode_step`
+//! runs one forward over the whole grid and samples exactly one token per
+//! active row — each under its row's config, since sampling is host-side
+//! and per-row; `take` removes a finished row and frees its slot. Rows are
+//! independent, so the serving scheduler can admit new requests mid-decode
+//! (continuous batching, see `serve`). `generate_batch` / `complete` are
+//! thin all-rows-at-once wrappers over the same machine.
+//!
+//! This full-reforward decode is the v1 hot path measured in DESIGN.md
+//! §Perf; a KV-cache decode artifact drops into `decode_step` without
+//! touching the row state machine.
 
-use crate::runtime::{Artifact, Runtime};
+use crate::runtime::{Artifact, Runtime, Session};
 use crate::tensor::{Tensor, TensorStore};
-use crate::tokenizer::{Tokenizer, EOS, PAD, SEP};
+use crate::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
 use std::rc::Rc;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SampleCfg {
     /// 0.0 = greedy
     pub temperature: f64,
@@ -31,23 +42,55 @@ impl Default for SampleCfg {
     }
 }
 
+/// Per-row decode state: one in-flight request.
+#[derive(Debug, Clone)]
+struct RowState {
+    seq: Vec<i32>,
+    /// frontier: index where generation begins (prompt length after
+    /// truncation); `seq[start..]` is the generated tail
+    start: usize,
+    cfg: SampleCfg,
+    generated: usize,
+    done: bool,
+}
+
+/// One sampled token, as reported by [`Generator::decode_step`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepOut {
+    pub row: usize,
+    pub token: i32,
+    /// the row reached EOS/PAD, its `max_new` budget, or the grid edge;
+    /// it stays occupied until [`Generator::take`]
+    pub finished: bool,
+}
+
+struct DecodeState {
+    sess: Session,
+    rows: Vec<Option<RowState>>,
+}
+
 pub struct Generator<'r> {
     pub rt: &'r Runtime,
     pub art: Rc<Artifact>,
-    /// weights device-resident; only the token grid re-uploads per step
-    sess: std::cell::RefCell<crate::runtime::DeviceSession>,
+    /// session + row state behind a RefCell so scoring/eval callers can
+    /// share an immutable generator (batch-internal mutation only)
+    state: RefCell<DecodeState>,
+    /// constructed once per generator lifetime
+    tk: Tokenizer,
     pub vocab: usize,
 }
 
 impl<'r> Generator<'r> {
     pub fn new(rt: &'r Runtime, artifact: &str, stores: &[&TensorStore]) -> Result<Generator<'r>> {
         let art = rt.load(artifact)?;
-        let sess = crate::runtime::DeviceSession::new(rt, art.clone(), stores)?;
+        let sess = Session::new(rt, art.clone(), stores)?;
         let vocab = art.meta.config.vocab_size;
+        let rows = (0..art.meta.batch()).map(|_| None).collect();
         Ok(Generator {
             rt,
             art,
-            sess: std::cell::RefCell::new(sess),
+            state: RefCell::new(DecodeState { sess, rows }),
+            tk: Tokenizer::new(),
             vocab,
         })
     }
@@ -60,8 +103,116 @@ impl<'r> Generator<'r> {
         self.art.meta.seq()
     }
 
-    /// Generate completions for up to `batch_size` prompts at once.
-    /// Returns the generated token ids (response segment only).
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tk
+    }
+
+    /// Batch rows with no request in them.
+    pub fn free_rows(&self) -> usize {
+        self.state.borrow().rows.iter().filter(|r| r.is_none()).count()
+    }
+
+    /// Occupied rows still decoding (not yet finished).
+    pub fn active_rows(&self) -> usize {
+        self.state
+            .borrow()
+            .rows
+            .iter()
+            .flatten()
+            .filter(|r| !r.done)
+            .count()
+    }
+
+    /// Admit a prompt into a free row: tokenize (BOS + prompt + SEP),
+    /// left-truncate to leave generation room, and install the row state.
+    /// Returns the row index; errors when every row is occupied. Every row
+    /// emits at least one token (`max_new` is clamped to ≥ 1) so a
+    /// finished `StepOut` always reports it and the slot is reclaimable.
+    pub fn prefill(&self, prompt: &str, cfg: SampleCfg) -> Result<usize> {
+        let cfg = SampleCfg { max_new: cfg.max_new.max(1), ..cfg };
+        let mut st = self.state.borrow_mut();
+        let row = st
+            .rows
+            .iter()
+            .position(|r| r.is_none())
+            .context("prefill: no free batch row")?;
+        let s = self.seq_len();
+        let mut ids = vec![BOS];
+        ids.extend(self.tk.encode(prompt));
+        ids.push(SEP);
+        let keep = s - cfg.max_new.min(s / 2);
+        if ids.len() > keep {
+            ids = ids[ids.len() - keep..].to_vec();
+        }
+        let start = ids.len();
+        st.rows[row] = Some(RowState {
+            seq: ids,
+            start,
+            cfg,
+            generated: 0,
+            done: false,
+        });
+        Ok(row)
+    }
+
+    /// One decode step for the whole grid: forward every occupied row's
+    /// sequence, then sample one token per active row *under that row's
+    /// own config*. Returns one event per sampled token; empty when no row
+    /// is actively decoding.
+    pub fn decode_step(&self, rng: &mut Rng) -> Result<Vec<StepOut>> {
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        if !st.rows.iter().flatten().any(|r| !r.done) {
+            return Ok(vec![]);
+        }
+        let (b, s) = (self.batch_size(), self.seq_len());
+        let mut toks = Vec::with_capacity(b * s);
+        for slot in &st.rows {
+            match slot {
+                Some(r) => toks.extend(crate::tokenizer::pad_to(&r.seq, s)),
+                None => toks.extend(std::iter::repeat(PAD).take(s)),
+            }
+        }
+        st.sess.set(self.rt, "tokens", &Tensor::from_i32(&[b, s], toks))?;
+        let out = st.sess.run(self.rt)?;
+        let logits = out.get("logits")?;
+        let lf = logits.f32s();
+        let mut events = vec![];
+        for (i, slot) in st.rows.iter_mut().enumerate() {
+            let Some(r) = slot.as_mut() else { continue };
+            if r.done {
+                continue;
+            }
+            let pos = r.seq.len() - 1;
+            let row_logits = &lf[(i * s + pos) * self.vocab..(i * s + pos + 1) * self.vocab];
+            let next = sample_token(row_logits, r.cfg, rng);
+            r.seq.push(next);
+            r.generated += 1;
+            let finished = next == EOS
+                || next == PAD
+                || r.generated >= r.cfg.max_new
+                || r.seq.len() >= s;
+            r.done = finished;
+            events.push(StepOut { row: i, token: next, finished });
+        }
+        Ok(events)
+    }
+
+    /// Remove a row and return its generated token ids (response segment
+    /// only, trimmed at the first EOS/PAD). Frees the slot for admission.
+    pub fn take(&self, row: usize) -> Option<Vec<i32>> {
+        let mut st = self.state.borrow_mut();
+        let r = st.rows.get_mut(row)?.take()?;
+        let tail = &r.seq[r.start..];
+        let end = tail
+            .iter()
+            .position(|&t| t == EOS || t == PAD)
+            .unwrap_or(tail.len());
+        Some(tail[..end].to_vec())
+    }
+
+    /// Generate completions for up to `batch_size` prompts at once (all
+    /// rows must be free). Returns the generated token ids per prompt.
     pub fn generate_batch(
         &self,
         prompts: &[String],
@@ -69,75 +220,32 @@ impl<'r> Generator<'r> {
         rng: &mut Rng,
     ) -> Result<Vec<Vec<i32>>> {
         let b = self.batch_size();
-        let s = self.seq_len();
         assert!(prompts.len() <= b);
-        let tk = Tokenizer::new();
-        // BOS + prompt + SEP, truncated from the left to leave room
-        let mut seqs: Vec<Vec<i32>> = prompts
+        anyhow::ensure!(
+            self.free_rows() == b,
+            "generate_batch needs an idle generator ({} rows in flight)",
+            b - self.free_rows()
+        );
+        let rows: Vec<usize> = prompts
             .iter()
-            .map(|p| {
-                let mut ids = vec![crate::tokenizer::BOS];
-                ids.extend(tk.encode(p));
-                ids.push(SEP);
-                if ids.len() > s - cfg.max_new.min(s / 2) {
-                    let keep = s - cfg.max_new.min(s / 2);
-                    ids = ids[ids.len() - keep..].to_vec();
-                }
-                ids
-            })
-            .collect();
-        let starts: Vec<usize> = seqs.iter().map(|x| x.len()).collect();
-        let mut done = vec![false; prompts.len()];
-        for _ in 0..cfg.max_new {
-            if done.iter().all(|&d| d) || seqs.iter().any(|x| x.len() >= s) {
+            .map(|p| self.prefill(p, cfg))
+            .collect::<Result<_>>()?;
+        loop {
+            if self.decode_step(rng)?.is_empty() {
                 break;
             }
-            let mut toks = Vec::with_capacity(b * s);
-            for i in 0..b {
-                if i < seqs.len() {
-                    toks.extend(crate::tokenizer::pad_to(&seqs[i], s));
-                } else {
-                    toks.extend(std::iter::repeat(PAD).take(s));
-                }
-            }
-            let mut sess = self.sess.borrow_mut();
-            sess.set(self.rt, "tokens", &Tensor::from_i32(&[b, s], toks))?;
-            let out = sess.run(self.rt)?;
-            let logits = out.get("logits")?;
-            for (i, seq) in seqs.iter_mut().enumerate() {
-                if done[i] {
-                    continue;
-                }
-                let pos = seq.len() - 1;
-                let row = &logits.f32s()[(i * s + pos) * self.vocab..(i * s + pos + 1) * self.vocab];
-                let next = sample_token(row, cfg, rng);
-                seq.push(next);
-                if next == EOS || next == PAD {
-                    done[i] = true;
-                }
-            }
         }
-        Ok(seqs
-            .iter()
-            .zip(&starts)
-            .map(|(seq, &st)| {
-                let tail = &seq[st..];
-                let end = tail
-                    .iter()
-                    .position(|&t| t == EOS || t == PAD)
-                    .unwrap_or(tail.len());
-                tail[..end].to_vec()
-            })
-            .collect())
+        rows.into_iter()
+            .map(|r| self.take(r).context("decode row vanished"))
+            .collect()
     }
 
     /// Convenience: generate text responses for prompts (chunked to fit B).
     pub fn complete(&self, prompts: &[String], cfg: SampleCfg, rng: &mut Rng) -> Result<Vec<String>> {
-        let tk = Tokenizer::new();
         let mut out = vec![];
         for chunk in prompts.chunks(self.batch_size()) {
             for ids in self.generate_batch(chunk, cfg, rng)? {
-                out.push(tk.decode(&ids));
+                out.push(self.tk.decode(&ids));
             }
         }
         Ok(out)
@@ -232,5 +340,23 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(sample_token(&logits, cfg, &mut rng), 0);
         }
+    }
+
+    #[test]
+    fn per_row_cfg_changes_sampling_support() {
+        // the same logits row sampled under two different per-row configs:
+        // tight nucleus pins the head token, wide nucleus reaches the tail
+        let logits = [2.0, 1.9, 1.8, 1.7];
+        let tight = SampleCfg { temperature: 1.0, top_p: 0.25, max_new: 1 };
+        let wide = SampleCfg { temperature: 1.0, top_p: 1.0, max_new: 1 };
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            assert_eq!(sample_token(&logits, tight, &mut rng), 0);
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sample_token(&logits, wide, &mut rng));
+        }
+        assert!(seen.len() > 1, "wide nucleus never left the head token");
     }
 }

@@ -1,72 +1,46 @@
 //! Generic training session over a `pretrain_*` or `sft_*` artifact.
 //!
-//! The artifact's meta defines the input order; the session keeps *all*
-//! trainable and frozen state keyed by input names (`adam_m.<p>` /
-//! `adam_v.<p>` prefixes for moments) and routes outputs (`new.<p>` /
-//! `new_m.<p>` / `new_v.<p>`) back after each step. The same mechanics
-//! drive full-parameter pre-training, alignment (Eq. 8) and LoRA SFT
-//! (dense, masked, quantised).
+//! A thin loop on top of [`Session`]: the artifact's meta declares the
+//! input order and the output→input state bindings, the session keeps all
+//! trainable + frozen state in named slots and donates each step's state
+//! outputs (`new.<p>` / `new_m.<p>` / `new_v.<p>`) back onto their input
+//! slots. The same mechanics drive full-parameter pre-training, alignment
+//! (Eq. 8) and LoRA SFT (dense, masked, quantised).
 //!
-//! Two backends (EXPERIMENTS.md §Perf):
-//! * device (default): state lives in PJRT buffers, only (step, lr,
-//!   tokens, loss_mask) upload per step, outputs re-bind on device —
-//!   requires the vendored `untuple_result` patch.
-//! * host (`LORAM_HOST_PATH=1`): v1 literal-roundtrip path, kept as the
-//!   §Perf baseline and as a fallback.
+//! Backend selection is the session's (`LORAM_HOST_PATH=1` forces the
+//! host literal-roundtrip baseline; device-resident PJRT buffers are the
+//! default hot path — DESIGN.md §Perf). Both produce identical losses;
+//! the integration tests assert it.
 
 use crate::data::Batch;
-use crate::runtime::{Artifact, DeviceSession, Runtime};
+use crate::runtime::{Artifact, Runtime, Session};
 use crate::tensor::{Tensor, TensorStore};
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::rc::Rc;
 use std::time::Instant;
 
-enum Backend {
-    Host { state: TensorStore },
-    Device(DeviceSession),
-}
+pub use crate::runtime::host_path_forced;
 
 pub struct TrainSession<'r> {
     pub rt: &'r Runtime,
     pub art: Rc<Artifact>,
-    backend: Backend,
+    sess: Session,
     pub step: usize,
     pub losses: Vec<f32>,
     pub step_ms: Vec<f64>,
 }
 
-pub fn host_path_forced() -> bool {
-    std::env::var("LORAM_HOST_PATH").map(|v| v == "1").unwrap_or(false)
-}
-
 impl<'r> TrainSession<'r> {
     /// `stores`: the frozen + trainable tensors (params, quant, masks,
     /// lora). Adam moments for the trainable set are created zeroed from
-    /// the artifact meta if absent.
+    /// the artifact meta's zero-init declaration if absent.
     pub fn new(rt: &'r Runtime, artifact: &str, stores: &[&TensorStore]) -> Result<TrainSession<'r>> {
         let art = rt.load(artifact)?;
-        let backend = if host_path_forced() {
-            let mut state = TensorStore::new();
-            for s in stores {
-                for (k, v) in &s.map {
-                    state.insert(k.clone(), v.clone());
-                }
-            }
-            for spec in &art.meta.inputs {
-                if (spec.name.starts_with("adam_m.") || spec.name.starts_with("adam_v."))
-                    && !state.contains(&spec.name)
-                {
-                    state.insert(spec.name.clone(), Tensor::zeros(&spec.shape));
-                }
-            }
-            Backend::Host { state }
-        } else {
-            Backend::Device(DeviceSession::new(rt, art.clone(), stores)?)
-        };
+        let sess = Session::new(rt, art.clone(), stores)?;
         Ok(TrainSession {
             rt,
             art,
-            backend,
+            sess,
             step: 0,
             losses: vec![],
             step_ms: vec![],
@@ -77,52 +51,26 @@ impl<'r> TrainSession<'r> {
     pub fn train_step(&mut self, batch: &Batch, lr: f64) -> Result<f32> {
         self.step += 1;
         let t0 = Instant::now();
-        let loss = match &mut self.backend {
-            Backend::Host { state } => {
-                state.insert("step", Tensor::scalar_f32(self.step as f32));
-                state.insert("lr", Tensor::scalar_f32(lr as f32));
-                state.insert("tokens", batch.tokens.clone());
-                state.insert("loss_mask", batch.loss_mask.clone());
-                let out = self.rt.run(&self.art, state)?;
-                let loss = out.get("loss")?.f32s()[0];
-                for (name, t) in out.map {
-                    if let Some(p) = name.strip_prefix("new_m.") {
-                        state.insert(format!("adam_m.{p}"), t);
-                    } else if let Some(p) = name.strip_prefix("new_v.") {
-                        state.insert(format!("adam_v.{p}"), t);
-                    } else if let Some(p) = name.strip_prefix("new.") {
-                        state.insert(p.to_string(), t);
-                    }
-                }
-                loss
-            }
-            Backend::Device(sess) => {
-                sess.set(self.rt, "step", &Tensor::scalar_f32(self.step as f32))?;
-                sess.set(self.rt, "lr", &Tensor::scalar_f32(lr as f32))?;
-                sess.set(self.rt, "tokens", &batch.tokens)?;
-                sess.set(self.rt, "loss_mask", &batch.loss_mask)?;
-                let out = sess.run(self.rt)?;
-                out.get("loss")?.f32s()[0]
-            }
-        };
+        self.sess.set(self.rt, "step", &Tensor::scalar_f32(self.step as f32))?;
+        self.sess.set(self.rt, "lr", &Tensor::scalar_f32(lr as f32))?;
+        self.sess.set(self.rt, "tokens", &batch.tokens)?;
+        self.sess.set(self.rt, "loss_mask", &batch.loss_mask)?;
+        let out = self.sess.run(self.rt)?;
+        let loss = out.get("loss")?.f32s()[0];
         self.losses.push(loss);
         self.step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         Ok(loss)
     }
 
     /// Extract the tensors whose names appear in `names` (e.g. the updated
-    /// LoRA factors after SFT, or the full params after alignment).
+    /// LoRA factors after SFT, or the full params after alignment) — the
+    /// stepped state, fetched from the session's slots.
     pub fn extract(&self, names: &[String]) -> Result<TensorStore> {
-        match &self.backend {
-            Backend::Host { state } => {
-                let mut out = TensorStore::new();
-                for n in names {
-                    out.insert(n.clone(), state.get(n).context("extract")?.clone());
-                }
-                Ok(out)
-            }
-            Backend::Device(sess) => sess.fetch_all(self.rt, names),
-        }
+        self.sess.fetch_all(self.rt, names)
+    }
+
+    pub fn backend(&self) -> crate::runtime::BackendKind {
+        self.sess.backend()
     }
 
     pub fn batch_size(&self) -> usize {

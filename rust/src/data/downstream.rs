@@ -69,7 +69,7 @@ pub fn mathqa_set(seed: u64, n: usize) -> Vec<EvalItem> {
 
 /// GSM8K stand-in: multi-step chains, strict-match generation. The paper
 /// uses 8-shot CoT; our 64-token context supports 2 shots of the short
-/// chain format (noted in EXPERIMENTS.md).
+/// chain format (noted in DESIGN.md §3).
 pub fn gsm_set(seed: u64, n: usize) -> Vec<EvalItem> {
     let mut rng = Rng::new(seed ^ 0x67736d38);
     (0..n)

@@ -8,7 +8,8 @@
 //! artifacts through PJRT with no Python on the request path.
 //!
 //! Module map (see DESIGN.md §1 for the full inventory):
-//! * [`runtime`] — PJRT client, artifact registry, literal bridging
+//! * [`runtime`] — PJRT client, artifact registry, the unified `Session`
+//!   execution layer (host/device backends, meta-declared state threading)
 //! * [`tensor`] — host tensors, checkpoints
 //! * [`params`] — parameter / LoRA / optimiser-state initialisation
 //! * [`util`] — hand-rolled JSON / CLI / RNG / stats substrates
@@ -17,8 +18,9 @@
 //! * [`pruning`] — structured/semi/unstructured pruning + recovery R(·)
 //! * [`quant`] — blockwise NF4 quantisation (QLoRAM)
 //! * [`memory`] — analytic parameter/HBM accounting (paper Tables 4–6)
-//! * [`coordinator`] — pipeline, training loops, evaluators, experiments
-//! * [`serve`] — batched generation service
+//! * [`coordinator`] — pipeline, training loops, evaluators, experiments,
+//!   and the decode state machine behind generation
+//! * [`serve`] — continuous-batching generation scheduler
 //! * [`bench`] — bench harness (no criterion in the vendor set)
 
 pub mod bench;

@@ -264,26 +264,35 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
     let mut server = Server::new(gen, 0);
     let n = args.get_usize("requests", 8);
     let mut ig = loram::data::instruct::InstructGen::new(Dataset::Hermes, 1, 1);
-    for _ in 0..n {
+    for i in 0..n {
         let (ex, _) = ig.next();
-        server.enqueue(ex.instruction, SampleCfg::default());
+        // mixed per-request sampling configs: the continuous-batching
+        // scheduler decodes them in one batch anyway
+        let cfg = SampleCfg {
+            temperature: if i % 2 == 0 { 0.0 } else { 0.4 },
+            top_p: if i % 3 == 0 { 0.95 } else { 0.8 },
+            max_new: 8 + 4 * (i % 2),
+        };
+        server.enqueue(ex.instruction, cfg);
     }
     let t0 = std::time::Instant::now();
     let responses = server.drain()?;
     let dt = t0.elapsed().as_secs_f64();
     for r in responses.iter().take(4) {
         println!(
-            "#{:<3} [{:>6.1} ms, b={}] {}",
-            r.id, r.latency_ms, r.batch_size, r.text
+            "#{:<3} [ttft {:>6.1} ms, total {:>6.1} ms, rows={}] {}",
+            r.id, r.ttft_ms, r.latency_ms, r.batch_rows, r.text
         );
     }
+    let st = &server.stats;
     println!(
-        "served {} requests in {:.2}s ({:.2} req/s, {} batches, mean occupancy {:.2})",
-        server.stats.served,
-        dt,
-        server.stats.served as f64 / dt,
-        server.stats.batches,
-        server.stats.total_batch_occupancy / server.stats.batches.max(1) as f64
+        "served {} requests in {dt:.2}s — {:.1} tok/s decode, mean ttft {:.1} ms, \
+         {} decode steps (occupancy {:.2})",
+        st.served,
+        st.tokens_per_sec(),
+        st.mean_ttft_ms(),
+        st.decode_steps,
+        st.mean_occupancy()
     );
     Ok(())
 }

@@ -251,6 +251,52 @@ impl ArtifactMeta {
             .find(|s| s.name == name)
             .with_context(|| format!("artifact {}: no input '{name}'", self.name))
     }
+
+    /// Output→input state bindings: which input slot each state output
+    /// donates back into after a step (the `Session` threading contract).
+    /// The preferred source is the meta itself (`extra.state_bindings`,
+    /// emitted by aot.py); artifacts predating the declaration fall back to
+    /// the canonical naming convention `new.X -> X`, `new_m.X -> adam_m.X`,
+    /// `new_v.X -> adam_v.X`.
+    pub fn state_bindings(&self) -> Vec<(String, String)> {
+        if let Some(Json::Obj(m)) = self.extra.get("state_bindings") {
+            return m
+                .iter()
+                .filter_map(|(out, v)| v.as_str().map(|inp| (out.clone(), inp.to_string())))
+                .collect();
+        }
+        self.outputs
+            .iter()
+            .filter_map(|o| {
+                let target = if let Some(p) = o.name.strip_prefix("new_m.") {
+                    format!("adam_m.{p}")
+                } else if let Some(p) = o.name.strip_prefix("new_v.") {
+                    format!("adam_v.{p}")
+                } else if let Some(p) = o.name.strip_prefix("new.") {
+                    p.to_string()
+                } else {
+                    return None;
+                };
+                Some((o.name.clone(), target))
+            })
+            .collect()
+    }
+
+    /// Inputs a `Session` may zero-initialise when the caller does not
+    /// supply them (optimiser moments). Declared via
+    /// `extra.state_zero_init`; the adam-prefix convention is the fallback
+    /// for artifacts without the declaration.
+    pub fn zero_init_names(&self) -> Vec<String> {
+        let declared = self.name_list("state_zero_init");
+        if !declared.is_empty() {
+            return declared;
+        }
+        self.inputs
+            .iter()
+            .filter(|s| s.name.starts_with("adam_m.") || s.name.starts_with("adam_v."))
+            .map(|s| s.name.clone())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -328,5 +374,56 @@ mod tests {
         assert_eq!(m.config.layer_shapes(1), (1, 1, 80));
         assert_eq!(m.inputs[0].dtype, Dtype::I32);
         assert_eq!(m.name_list("lora_names"), vec!["l0.wq.lora_a"]);
+    }
+
+    const TRAIN_META: &str = r#"{
+      "name": "t", "config": {"name":"tiny","vocab_size":512,"d_model":64,
+        "n_layers":1,"n_heads":2,"n_kv_heads":2,"d_ff":160,"max_seq":64,
+        "lora_rank":8,"lora_alpha":16.0,"lora_lm_head":true},
+      "inputs": [
+        {"name":"step","shape":[],"dtype":"float32"},
+        {"name":"tokens","shape":[2,33],"dtype":"int32"},
+        {"name":"w","shape":[4,4],"dtype":"float32"},
+        {"name":"adam_m.w","shape":[4,4],"dtype":"float32"},
+        {"name":"adam_v.w","shape":[4,4],"dtype":"float32"}
+      ],
+      "outputs": [
+        {"name":"loss","shape":[],"dtype":"float32"},
+        {"name":"new.w","shape":[4,4],"dtype":"float32"},
+        {"name":"new_m.w","shape":[4,4],"dtype":"float32"},
+        {"name":"new_v.w","shape":[4,4],"dtype":"float32"}
+      ]EXTRA
+    }"#;
+
+    fn train_meta(extra: &str) -> ArtifactMeta {
+        let src = TRAIN_META.replace("EXTRA", extra);
+        ArtifactMeta::from_json(&Json::parse(&src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn state_bindings_derive_from_naming_convention() {
+        let m = train_meta("");
+        let binds = m.state_bindings();
+        assert_eq!(binds.len(), 3); // every new.* / new_m.* / new_v.* output
+        assert!(binds.contains(&("new.w".into(), "w".into())));
+        assert!(binds.contains(&("new_m.w".into(), "adam_m.w".into())));
+        assert!(binds.contains(&("new_v.w".into(), "adam_v.w".into())));
+        assert!(!binds.iter().any(|(o, _)| o == "loss"));
+        assert_eq!(m.zero_init_names(), vec!["adam_m.w", "adam_v.w"]);
+    }
+
+    #[test]
+    fn declared_state_bindings_take_precedence() {
+        let m = train_meta(
+            r#", "extra": {
+                "state_bindings": {"new.w": "w", "new_m.w": "adam_m.w",
+                                   "new_v.w": "adam_v.w"},
+                "state_zero_init": ["adam_m.w", "adam_v.w"]
+            }"#,
+        );
+        let binds = m.state_bindings();
+        assert_eq!(binds.len(), 3);
+        assert!(binds.contains(&("new.w".into(), "w".into())));
+        assert_eq!(m.zero_init_names(), vec!["adam_m.w", "adam_v.w"]);
     }
 }

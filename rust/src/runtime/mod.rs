@@ -9,7 +9,9 @@
 //! Every artifact is described entirely by its `.meta.json` — input/output
 //! names, shapes and dtypes in *exact* positional order — so the runtime is
 //! generic: callers build a `TensorStore` and the runtime packs/unpacks by
-//! the meta's order.
+//! the meta's order. Stateful execution (training steps, decode loops) goes
+//! through the backend-polymorphic [`Session`] in [`session`]; `Runtime::run`
+//! stays as the one-shot stateless convenience.
 
 use crate::tensor::{Data, Dtype, Tensor, TensorStore};
 use crate::util::json::Json;
@@ -20,18 +22,18 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::Instant;
 
-pub mod device;
 pub mod meta;
+pub mod session;
 
-pub use device::DeviceSession;
 pub use meta::{ArtifactMeta, IoSpec, ModelCfg};
+pub use session::{host_path_forced, BackendKind, Session};
 
 /// The PJRT client plus a compile cache over loaded artifacts.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     cache: RefCell<HashMap<String, Rc<Artifact>>>,
-    /// cumulative counters for perf reporting (see EXPERIMENTS.md §Perf)
+    /// cumulative counters for perf reporting (see DESIGN.md §Perf)
     pub metrics: RefCell<RuntimeMetrics>,
 }
 
@@ -123,8 +125,10 @@ impl Runtime {
         self.cache.borrow().contains_key(name)
     }
 
-    /// Execute with host tensors gathered from `store` by the meta's input
-    /// order; returns outputs as a TensorStore keyed by meta output names.
+    /// One-shot stateless execution: host tensors gathered from `store` by
+    /// the meta's input order, outputs returned keyed by meta output names.
+    /// Anything stateful (training steps, decode loops) goes through
+    /// [`Session`], which owns the state threading.
     pub fn run(&self, art: &Artifact, store: &TensorStore) -> Result<TensorStore> {
         let lits = self.pack_inputs(art, store)?;
         let outs = self.execute_literals(art, &lits)?;
@@ -158,7 +162,9 @@ impl Runtime {
         Ok(lits)
     }
 
-    fn execute_literals(
+    /// Execute packed literals and fetch every output back as literals
+    /// (shared by [`Runtime::run`] and the host [`Session`] backend).
+    pub(crate) fn execute_literals(
         &self,
         art: &Artifact,
         lits: &[xla::Literal],

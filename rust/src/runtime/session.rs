@@ -1,0 +1,395 @@
+//! The unified execution session: one state-threading implementation for
+//! every artifact, behind two interchangeable backends.
+//!
+//! A [`Session`] owns one *named slot* per artifact input. Callers upload
+//! tensors into slots (`set`), execute (`run`), and download slots back
+//! (`fetch`). After each run the artifact's **declared** output→input state
+//! bindings (`ArtifactMeta::state_bindings`, emitted by aot.py; the
+//! `new.X → X` naming convention is only a fallback for old metas) donate
+//! each state output back onto its input slot, so optimiser state never
+//! leaves the execution path. All remaining outputs are returned to the
+//! caller as a `TensorStore`.
+//!
+//! Backends (DESIGN.md §Perf):
+//! * [`BackendKind::Device`] (default): slots are PJRT buffers. Weights
+//!   upload once, each step uploads only the few KB of changed inputs,
+//!   executes via `execute_b`, and bound outputs re-attach on device —
+//!   requires the vendored `untuple_result` patch.
+//! * [`BackendKind::Host`] (`LORAM_HOST_PATH=1`): slots are host tensors
+//!   round-tripped through XLA literals every run — the §Perf baseline and
+//!   the fallback for unpatched builds. Identical threading semantics,
+//!   verified equivalent by the integration tests.
+//!
+//! Both backends account uniformly into [`super::RuntimeMetrics`]:
+//! executions, execute time, and the h2d/d2h bytes they actually move.
+
+use super::{literal_to_tensor, tensor_to_literal, Artifact, Runtime};
+use crate::tensor::{Data, Tensor, TensorStore};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Which backend a [`Session`] keeps its state on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Host tensors, literal round-trip per run (the v1 baseline path).
+    Host,
+    /// Device-resident PJRT buffers (the hot path).
+    Device,
+}
+
+/// `LORAM_HOST_PATH=1` forces the host backend for every new session.
+pub fn host_path_forced() -> bool {
+    std::env::var("LORAM_HOST_PATH").map(|v| v == "1").unwrap_or(false)
+}
+
+impl BackendKind {
+    pub fn from_env() -> BackendKind {
+        if host_path_forced() {
+            BackendKind::Host
+        } else {
+            BackendKind::Device
+        }
+    }
+}
+
+enum Slots {
+    Host(Vec<Option<Tensor>>),
+    Device(Vec<Option<xla::PjRtBuffer>>),
+}
+
+pub struct Session {
+    pub art: Rc<Artifact>,
+    name_to_slot: HashMap<String, usize>,
+    /// output index -> input slot it donates back into (state threading)
+    out_bind: Vec<Option<usize>>,
+    slots: Slots,
+}
+
+/// Resolve the meta's declared output→input bindings to positional form,
+/// validating that sources are outputs, targets are inputs, shapes/dtypes
+/// agree, and that no state-style output is left unbound.
+pub(crate) fn resolve_bindings(
+    meta: &super::ArtifactMeta,
+    name_to_slot: &HashMap<String, usize>,
+) -> Result<Vec<Option<usize>>> {
+    let mut out_bind: Vec<Option<usize>> = vec![None; meta.outputs.len()];
+    for (out_name, in_name) in meta.state_bindings() {
+        let j = meta
+            .outputs
+            .iter()
+            .position(|o| o.name == out_name)
+            .with_context(|| {
+                format!("artifact {}: state binding source '{out_name}' is not an output", meta.name)
+            })?;
+        let slot = *name_to_slot.get(&in_name).with_context(|| {
+            format!("artifact {}: state binding target '{in_name}' is not an input", meta.name)
+        })?;
+        let (o, i) = (&meta.outputs[j], &meta.inputs[slot]);
+        if o.shape != i.shape || o.dtype != i.dtype {
+            bail!(
+                "artifact {}: binding {out_name} -> {in_name}: {:?}/{:?} vs {:?}/{:?}",
+                meta.name, o.shape, o.dtype, i.shape, i.dtype
+            );
+        }
+        out_bind[j] = Some(slot);
+    }
+    // guard against misdeclared metas: a state-style output that resolves
+    // to nothing would silently round-trip through the host every step
+    for (j, o) in meta.outputs.iter().enumerate() {
+        let state_style = o.name.starts_with("new.")
+            || o.name.starts_with("new_m.")
+            || o.name.starts_with("new_v.");
+        if state_style && out_bind[j].is_none() {
+            bail!("artifact {}: state output '{}' has no input binding", meta.name, o.name);
+        }
+    }
+    Ok(out_bind)
+}
+
+impl Session {
+    /// Backend from `LORAM_HOST_PATH`; uploads every tensor in `stores`
+    /// that the artifact wants. Remaining inputs (tokens, scalars, ...)
+    /// must be `set` before `run`; declared zero-init inputs (optimiser
+    /// moments) are zero-filled if absent.
+    pub fn new(rt: &Runtime, art: Rc<Artifact>, stores: &[&TensorStore]) -> Result<Session> {
+        Session::with_backend(rt, art, stores, BackendKind::from_env())
+    }
+
+    pub fn with_backend(
+        rt: &Runtime,
+        art: Rc<Artifact>,
+        stores: &[&TensorStore],
+        kind: BackendKind,
+    ) -> Result<Session> {
+        let mut name_to_slot = HashMap::new();
+        for (i, spec) in art.meta.inputs.iter().enumerate() {
+            name_to_slot.insert(spec.name.clone(), i);
+        }
+        let out_bind = resolve_bindings(&art.meta, &name_to_slot)?;
+        let n = art.meta.inputs.len();
+        let slots = match kind {
+            BackendKind::Host => Slots::Host((0..n).map(|_| None).collect()),
+            BackendKind::Device => Slots::Device((0..n).map(|_| None).collect()),
+        };
+        let mut sess = Session { art, name_to_slot, out_bind, slots };
+        for store in stores {
+            for (name, t) in &store.map {
+                if sess.name_to_slot.contains_key(name) {
+                    sess.set(rt, name, t)?;
+                }
+            }
+        }
+        let missing: Vec<(String, Vec<usize>)> = sess
+            .art
+            .meta
+            .zero_init_names()
+            .into_iter()
+            .filter_map(|name| {
+                let slot = *sess.name_to_slot.get(&name)?;
+                if sess.slot_is_set(slot) {
+                    None
+                } else {
+                    Some((name, sess.art.meta.inputs[slot].shape.clone()))
+                }
+            })
+            .collect();
+        for (name, shape) in missing {
+            sess.set(rt, &name, &Tensor::zeros(&shape))?;
+        }
+        Ok(sess)
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        match self.slots {
+            Slots::Host(_) => BackendKind::Host,
+            Slots::Device(_) => BackendKind::Device,
+        }
+    }
+
+    fn slot_is_set(&self, slot: usize) -> bool {
+        match &self.slots {
+            Slots::Host(s) => s[slot].is_some(),
+            Slots::Device(s) => s[slot].is_some(),
+        }
+    }
+
+    /// Upload one tensor into its input slot (validates shape/dtype).
+    pub fn set(&mut self, rt: &Runtime, name: &str, t: &Tensor) -> Result<()> {
+        let slot = *self
+            .name_to_slot
+            .get(name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.art.meta.name))?;
+        let spec = &self.art.meta.inputs[slot];
+        if t.shape != spec.shape || t.dtype() != spec.dtype {
+            bail!(
+                "input '{name}': got {:?}/{:?}, want {:?}/{:?}",
+                t.shape, t.dtype(), spec.shape, spec.dtype
+            );
+        }
+        match &mut self.slots {
+            Slots::Host(slots) => {
+                slots[slot] = Some(t.clone());
+            }
+            Slots::Device(slots) => {
+                let buf = match &t.data {
+                    Data::F32(v) => rt.client().buffer_from_host_buffer::<f32>(v, &t.shape, None)?,
+                    Data::I32(v) => rt.client().buffer_from_host_buffer::<i32>(v, &t.shape, None)?,
+                };
+                rt.metrics.borrow_mut().h2d_bytes += (t.len() * 4) as u64;
+                slots[slot] = Some(buf);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute once. Bound state outputs donate back onto their input
+    /// slots; every other output is fetched to the host and returned.
+    pub fn run(&mut self, rt: &Runtime) -> Result<TensorStore> {
+        let art = self.art.clone();
+        let mut host = TensorStore::new();
+        match &mut self.slots {
+            Slots::Host(slots) => {
+                let mut lits = Vec::with_capacity(slots.len());
+                let mut h2d = 0u64;
+                for (i, s) in slots.iter().enumerate() {
+                    let t = s.as_ref().with_context(|| {
+                        format!("input '{}' not set", art.meta.inputs[i].name)
+                    })?;
+                    h2d += (t.len() * 4) as u64;
+                    lits.push(tensor_to_literal(t)?);
+                }
+                rt.metrics.borrow_mut().h2d_bytes += h2d;
+                let outs = rt.execute_literals(&art, &lits)?;
+                for (j, lit) in outs.into_iter().enumerate() {
+                    let spec = &art.meta.outputs[j];
+                    let t = literal_to_tensor(&lit, spec)?;
+                    match self.out_bind[j] {
+                        Some(slot) => slots[slot] = Some(t),
+                        None => host.insert(spec.name.clone(), t),
+                    }
+                }
+            }
+            Slots::Device(slots) => {
+                let t0 = Instant::now();
+                let refs: Vec<&xla::PjRtBuffer> = slots
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        s.as_ref().ok_or_else(|| {
+                            anyhow::anyhow!("input '{}' not set", art.meta.inputs[i].name)
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let mut bufs = art
+                    .execute_buffers(&refs)
+                    .with_context(|| format!("execute_b {}", art.meta.name))?;
+                let outs = std::mem::take(&mut bufs[0]);
+                if outs.len() != art.meta.outputs.len() {
+                    bail!(
+                        "artifact {}: got {} output buffers, expected {} (is the \
+                         untuple_result patch active?)",
+                        art.meta.name,
+                        outs.len(),
+                        art.meta.outputs.len()
+                    );
+                }
+                for (j, buf) in outs.into_iter().enumerate() {
+                    match self.out_bind[j] {
+                        Some(slot) => {
+                            slots[slot] = Some(buf);
+                        }
+                        None => {
+                            let spec = &art.meta.outputs[j];
+                            let lit = buf.to_literal_sync()?;
+                            rt.metrics.borrow_mut().d2h_bytes +=
+                                (spec.shape.iter().product::<usize>() * 4) as u64;
+                            host.insert(spec.name.clone(), literal_to_tensor(&lit, spec)?);
+                        }
+                    }
+                }
+                let mut m = rt.metrics.borrow_mut();
+                m.executions += 1;
+                m.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+            }
+        }
+        Ok(host)
+    }
+
+    /// Download an input slot back to the host (e.g. the trained LoRA
+    /// factors after the last step — the *stepped* state, not the initial
+    /// upload, thanks to the output bindings).
+    pub fn fetch(&self, rt: &Runtime, name: &str) -> Result<Tensor> {
+        let slot = *self
+            .name_to_slot
+            .get(name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.art.meta.name))?;
+        let spec = &self.art.meta.inputs[slot];
+        match &self.slots {
+            Slots::Host(slots) => slots[slot]
+                .clone()
+                .with_context(|| format!("input '{name}' not set")),
+            Slots::Device(slots) => {
+                let buf = slots[slot]
+                    .as_ref()
+                    .with_context(|| format!("input '{name}' not set"))?;
+                let lit = buf.to_literal_sync()?;
+                rt.metrics.borrow_mut().d2h_bytes +=
+                    (spec.shape.iter().product::<usize>() * 4) as u64;
+                literal_to_tensor(&lit, spec)
+            }
+        }
+    }
+
+    pub fn fetch_all(&self, rt: &Runtime, names: &[String]) -> Result<TensorStore> {
+        let mut out = TensorStore::new();
+        for n in names {
+            out.insert(n.clone(), self.fetch(rt, n)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactMeta;
+    use crate::util::json::Json;
+
+    fn meta(extra: &str) -> ArtifactMeta {
+        let src = format!(
+            r#"{{
+              "name": "t", "config": {{"name":"tiny","vocab_size":512,"d_model":64,
+                "n_layers":1,"n_heads":2,"n_kv_heads":2,"d_ff":160,"max_seq":64,
+                "lora_rank":8,"lora_alpha":16.0,"lora_lm_head":true}},
+              "inputs": [
+                {{"name":"step","shape":[],"dtype":"float32"}},
+                {{"name":"tokens","shape":[2,33],"dtype":"int32"}},
+                {{"name":"w","shape":[4,4],"dtype":"float32"}},
+                {{"name":"adam_m.w","shape":[4,4],"dtype":"float32"}},
+                {{"name":"adam_v.w","shape":[4,4],"dtype":"float32"}}
+              ],
+              "outputs": [
+                {{"name":"loss","shape":[],"dtype":"float32"}},
+                {{"name":"new.w","shape":[4,4],"dtype":"float32"}},
+                {{"name":"new_m.w","shape":[4,4],"dtype":"float32"}},
+                {{"name":"new_v.w","shape":[4,4],"dtype":"float32"}}
+              ]{extra}
+            }}"#
+        );
+        ArtifactMeta::from_json(&Json::parse(&src).unwrap()).unwrap()
+    }
+
+    fn slots(m: &ArtifactMeta) -> HashMap<String, usize> {
+        m.inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect()
+    }
+
+    #[test]
+    fn every_state_output_binds_to_its_input_slot() {
+        let m = meta("");
+        let binds = resolve_bindings(&m, &slots(&m)).unwrap();
+        // loss stays host-bound; new/new_m/new_v donate onto w/adam_m/adam_v
+        assert_eq!(binds, vec![None, Some(2), Some(3), Some(4)]);
+    }
+
+    #[test]
+    fn declared_bindings_resolve_positionally() {
+        let m = meta(
+            r#", "extra": {"state_bindings":
+                 {"new.w": "w", "new_m.w": "adam_m.w", "new_v.w": "adam_v.w"}}"#,
+        );
+        let binds = resolve_bindings(&m, &slots(&m)).unwrap();
+        assert_eq!(binds, vec![None, Some(2), Some(3), Some(4)]);
+    }
+
+    #[test]
+    fn unbound_state_output_is_rejected() {
+        // declaration covers only new.w: new_m.w / new_v.w left dangling
+        let m = meta(r#", "extra": {"state_bindings": {"new.w": "w"}}"#);
+        let err = resolve_bindings(&m, &slots(&m)).unwrap_err().to_string();
+        assert!(err.contains("no input binding"), "{err}");
+    }
+
+    #[test]
+    fn binding_to_unknown_input_is_rejected() {
+        let m = meta(
+            r#", "extra": {"state_bindings":
+                 {"new.w": "nope", "new_m.w": "adam_m.w", "new_v.w": "adam_v.w"}}"#,
+        );
+        assert!(resolve_bindings(&m, &slots(&m)).is_err());
+    }
+
+    #[test]
+    fn binding_shape_mismatch_is_rejected() {
+        let m = meta(
+            r#", "extra": {"state_bindings":
+                 {"new.w": "tokens", "new_m.w": "adam_m.w", "new_v.w": "adam_v.w"}}"#,
+        );
+        assert!(resolve_bindings(&m, &slots(&m)).is_err());
+    }
+}

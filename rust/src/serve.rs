@@ -1,17 +1,65 @@
-//! Batched generation service (Table 8's serving-side counterpart and the
-//! `serve_generate` example).
+//! Continuous-batching generation service (Table 8's serving-side
+//! counterpart and the `serve_generate` example).
 //!
-//! A deliberately small vLLM-style loop: callers enqueue requests, the
-//! worker drains the queue into dynamic batches of up to the artifact's
-//! batch size, runs the generator, and delivers completions. Single-threaded
-//! by design (the PJRT CPU client is not Sync, and the box has one core);
-//! the queue/batcher structure is what Table 8 measures.
+//! A deliberately small vLLM-style scheduler: callers enqueue requests,
+//! `step` admits queued requests into *free batch rows* — mid-decode, so a
+//! new request never waits for the current batch to finish — then runs one
+//! decode step across all in-flight rows. Sampling is host-side and
+//! per-row, so a batch freely mixes [`SampleCfg`]s (temperature, top-p,
+//! budget) and the FIFO queue has no head-of-line blocking: any request
+//! fits any free row. Single-threaded by design (the PJRT CPU client is
+//! not Sync, and the box has one core); the scheduler structure is what
+//! the serving benches measure.
+//!
+//! The decode backend is abstracted as [`DecodeEngine`] — the real
+//! [`Generator`] in production, the deterministic [`SimEngine`] for
+//! scheduler tests and benches that must run without artifacts.
 
-use crate::coordinator::generate::{Generator, SampleCfg};
+use crate::coordinator::generate::{Generator, SampleCfg, StepOut};
+use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Row-oriented decode backend the scheduler drives.
+pub trait DecodeEngine {
+    fn batch_size(&self) -> usize;
+    fn free_rows(&self) -> usize;
+    /// Admit a prompt into a free row; returns the row index.
+    fn prefill(&mut self, prompt: &str, cfg: SampleCfg) -> Result<usize>;
+    /// Sample one token for every active row (each under its own config).
+    fn decode_step(&mut self, rng: &mut Rng) -> Result<Vec<StepOut>>;
+    /// Remove a row, returning its generated ids and freeing the slot.
+    fn take(&mut self, row: usize) -> Option<Vec<i32>>;
+    fn decode_text(&self, ids: &[i32]) -> String;
+}
+
+impl DecodeEngine for Generator<'_> {
+    fn batch_size(&self) -> usize {
+        Generator::batch_size(self)
+    }
+
+    fn free_rows(&self) -> usize {
+        Generator::free_rows(self)
+    }
+
+    fn prefill(&mut self, prompt: &str, cfg: SampleCfg) -> Result<usize> {
+        Generator::prefill(self, prompt, cfg)
+    }
+
+    fn decode_step(&mut self, rng: &mut Rng) -> Result<Vec<StepOut>> {
+        Generator::decode_step(self, rng)
+    }
+
+    fn take(&mut self, row: usize) -> Option<Vec<i32>> {
+        Generator::take(self, row)
+    }
+
+    fn decode_text(&self, ids: &[i32]) -> String {
+        self.tokenizer().decode(ids)
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -24,13 +72,28 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub text: String,
+    /// generated tokens after EOS/PAD trimming
+    pub tokens: usize,
+    /// enqueue → first sampled token
+    pub ttft_ms: f64,
+    /// enqueue → completion
     pub latency_ms: f64,
-    pub batch_size: usize,
+    /// in-flight rows during this request's final decode step
+    pub batch_rows: usize,
 }
 
-pub struct Server<'r> {
-    gen: Generator<'r>,
+/// Per-request bookkeeping while its row decodes.
+struct InFlight {
+    id: u64,
+    enqueued: Instant,
+    ttft_ms: Option<f64>,
+}
+
+pub struct Server<E> {
+    pub engine: E,
     queue: VecDeque<(Request, Instant)>,
+    /// in-flight request per engine row
+    inflight: Vec<Option<InFlight>>,
     next_id: u64,
     rng: Rng,
     pub stats: ServerStats,
@@ -39,16 +102,46 @@ pub struct Server<'r> {
 #[derive(Debug, Default, Clone)]
 pub struct ServerStats {
     pub served: usize,
-    pub batches: usize,
+    pub admitted: usize,
+    pub decode_steps: usize,
+    /// wall time spent inside decode steps
+    pub decode_ms: f64,
+    /// tokens sampled across all decode steps
+    pub total_tokens: usize,
+    pub total_ttft_ms: f64,
     pub total_latency_ms: f64,
+    /// summed per-step (in-flight rows / batch size)
     pub total_batch_occupancy: f64,
 }
 
-impl<'r> Server<'r> {
-    pub fn new(gen: Generator<'r>, seed: u64) -> Server<'r> {
+impl ServerStats {
+    /// Mean time-to-first-token over completed requests.
+    pub fn mean_ttft_ms(&self) -> f64 {
+        self.total_ttft_ms / self.served.max(1) as f64
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.total_latency_ms / self.served.max(1) as f64
+    }
+
+    /// Steady-state decode throughput: sampled tokens per second of decode
+    /// wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.total_tokens as f64 / (self.decode_ms / 1e3).max(1e-9)
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        self.total_batch_occupancy / self.decode_steps.max(1) as f64
+    }
+}
+
+impl<E: DecodeEngine> Server<E> {
+    pub fn new(engine: E, seed: u64) -> Server<E> {
+        let b = engine.batch_size();
         Server {
-            gen,
+            engine,
             queue: VecDeque::new(),
+            inflight: (0..b).map(|_| None).collect(),
             next_id: 0,
             rng: Rng::new(seed),
             stats: ServerStats::default(),
@@ -59,11 +152,7 @@ impl<'r> Server<'r> {
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push_back((
-            Request {
-                id,
-                prompt: prompt.into(),
-                cfg,
-            },
+            Request { id, prompt: prompt.into(), cfg },
             Instant::now(),
         ));
         id
@@ -73,53 +162,267 @@ impl<'r> Server<'r> {
         self.queue.len()
     }
 
-    /// Drain one dynamic batch (grouped by sampling config) and serve it.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.iter().flatten().count()
+    }
+
+    /// Admit queued requests into free rows (FIFO; any config fits any
+    /// row, so nothing blocks behind a mismatched head request).
+    fn admit(&mut self) -> Result<()> {
+        while self.engine.free_rows() > 0 {
+            let Some((req, t0)) = self.queue.pop_front() else { break };
+            let row = self.engine.prefill(&req.prompt, req.cfg)?;
+            let slot = self
+                .inflight
+                .get_mut(row)
+                .with_context(|| format!("engine admitted into out-of-range row {row}"))?;
+            if slot.is_some() {
+                bail!("engine admitted into occupied row {row}");
+            }
+            *slot = Some(InFlight { id: req.id, enqueued: t0, ttft_ms: None });
+            self.stats.admitted += 1;
+        }
+        Ok(())
+    }
+
+    /// One scheduler tick: admit into free rows, run one decode step,
+    /// return the requests that completed this step.
     pub fn step(&mut self) -> Result<Vec<Response>> {
-        if self.queue.is_empty() {
+        self.admit()?;
+        let active = self.in_flight();
+        if active == 0 {
             return Ok(vec![]);
         }
-        let b = self.gen.batch_size();
-        // group the head-of-queue requests sharing the head's SampleCfg
-        let head_cfg = self.queue[0].0.cfg;
-        let mut batch = vec![];
-        let mut rest = VecDeque::new();
-        while let Some((req, t0)) = self.queue.pop_front() {
-            if batch.len() < b
-                && req.cfg.temperature == head_cfg.temperature
-                && req.cfg.max_new == head_cfg.max_new
-            {
-                batch.push((req, t0));
-            } else {
-                rest.push_back((req, t0));
+        let t0 = Instant::now();
+        let events = self.engine.decode_step(&mut self.rng)?;
+        self.stats.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.decode_steps += 1;
+        self.stats.total_batch_occupancy += active as f64 / self.engine.batch_size() as f64;
+        if events.is_empty() {
+            bail!("decode engine made no progress with {active} requests in flight");
+        }
+        let mut done_rows = vec![];
+        for ev in &events {
+            let f = self
+                .inflight
+                .get_mut(ev.row)
+                .and_then(|s| s.as_mut())
+                .with_context(|| format!("decode event for idle row {}", ev.row))?;
+            self.stats.total_tokens += 1;
+            if f.ttft_ms.is_none() {
+                f.ttft_ms = Some(f.enqueued.elapsed().as_secs_f64() * 1e3);
+            }
+            if ev.finished {
+                done_rows.push(ev.row);
             }
         }
-        self.queue = rest;
-        let prompts: Vec<String> = batch.iter().map(|(r, _)| r.prompt.clone()).collect();
-        let ids = self.gen.generate_batch(&prompts, head_cfg, &mut self.rng)?;
-        let tk = crate::tokenizer::Tokenizer::new();
-        let out: Vec<Response> = batch
-            .iter()
-            .zip(ids)
-            .map(|((req, t0), toks)| Response {
-                id: req.id,
-                text: tk.decode(&toks),
-                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                batch_size: batch.len(),
-            })
-            .collect();
-        self.stats.served += out.len();
-        self.stats.batches += 1;
-        self.stats.total_batch_occupancy += batch.len() as f64 / b as f64;
-        self.stats.total_latency_ms += out.iter().map(|r| r.latency_ms).sum::<f64>();
+        let mut out = vec![];
+        for row in done_rows {
+            let f = self.inflight[row].take().expect("finished row tracked");
+            let ids = self.engine.take(row).unwrap_or_default();
+            let ttft_ms = f.ttft_ms.unwrap_or_default();
+            let latency_ms = f.enqueued.elapsed().as_secs_f64() * 1e3;
+            self.stats.served += 1;
+            self.stats.total_ttft_ms += ttft_ms;
+            self.stats.total_latency_ms += latency_ms;
+            out.push(Response {
+                id: f.id,
+                text: self.engine.decode_text(&ids),
+                tokens: ids.len(),
+                ttft_ms,
+                latency_ms,
+                batch_rows: active,
+            });
+        }
         Ok(out)
     }
 
-    /// Serve until the queue is empty; returns all responses.
+    /// Serve until queue and batch are empty; returns all responses in
+    /// completion order.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut all = vec![];
-        while self.pending() > 0 {
+        while self.pending() > 0 || self.in_flight() > 0 {
             all.extend(self.step()?);
         }
         Ok(all)
+    }
+}
+
+/// Deterministic in-process decode engine for scheduler tests and benches.
+///
+/// Each admitted request emits `max_new` copies of a marker token derived
+/// from *its own* [`SampleCfg`] ([`SimEngine::marker`]), so a test can
+/// assert that a request was sampled under the config it asked for, and
+/// the scheduler can be exercised (and benched) without artifacts or the
+/// PJRT runtime.
+pub struct SimEngine {
+    batch: usize,
+    rows: Vec<Option<SimRow>>,
+    tk: Tokenizer,
+    /// (prompt, cfg) in admission order, for test assertions
+    pub admissions: Vec<(String, SampleCfg)>,
+}
+
+struct SimRow {
+    cfg: SampleCfg,
+    emitted: Vec<i32>,
+    budget: usize,
+}
+
+impl SimEngine {
+    pub fn new(batch: usize) -> SimEngine {
+        SimEngine {
+            batch,
+            rows: (0..batch).map(|_| None).collect(),
+            tk: Tokenizer::new(),
+            admissions: vec![],
+        }
+    }
+
+    /// The token every step of a request emits: its top-p as a printable
+    /// byte (e.g. `top_p = 0.9` → 90 → `'Z'`).
+    pub fn marker(cfg: &SampleCfg) -> i32 {
+        (cfg.top_p * 100.0).round() as i32 % 256
+    }
+}
+
+impl DecodeEngine for SimEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn free_rows(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_none()).count()
+    }
+
+    fn prefill(&mut self, prompt: &str, cfg: SampleCfg) -> Result<usize> {
+        let row = self
+            .rows
+            .iter()
+            .position(|r| r.is_none())
+            .context("sim prefill: no free row")?;
+        self.admissions.push((prompt.to_string(), cfg));
+        self.rows[row] = Some(SimRow { cfg, emitted: vec![], budget: cfg.max_new.max(1) });
+        Ok(row)
+    }
+
+    fn decode_step(&mut self, _rng: &mut Rng) -> Result<Vec<StepOut>> {
+        let mut events = vec![];
+        for (i, slot) in self.rows.iter_mut().enumerate() {
+            let Some(r) = slot.as_mut() else { continue };
+            if r.emitted.len() >= r.budget {
+                continue; // finished, awaiting take
+            }
+            let token = Self::marker(&r.cfg);
+            r.emitted.push(token);
+            events.push(StepOut {
+                row: i,
+                token,
+                finished: r.emitted.len() >= r.budget,
+            });
+        }
+        Ok(events)
+    }
+
+    fn take(&mut self, row: usize) -> Option<Vec<i32>> {
+        self.rows.get_mut(row)?.take().map(|r| r.emitted)
+    }
+
+    fn decode_text(&self, ids: &[i32]) -> String {
+        self.tk.decode(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(top_p: f64, max_new: usize) -> SampleCfg {
+        SampleCfg { temperature: 1.0, top_p, max_new }
+    }
+
+    /// Regression for the old `Server::step` grouping bug: requests were
+    /// batched by (temperature, max_new) only, so a request with a
+    /// different top_p was silently served under the head request's
+    /// config. With per-row SampleCfg both decode together, each under its
+    /// own config.
+    #[test]
+    fn two_requests_with_different_top_p_sample_under_their_own_cfg() {
+        let mut srv = Server::new(SimEngine::new(2), 0);
+        let a = srv.enqueue("alpha", cfg(0.90, 3)); // marker 90 = 'Z'
+        let b = srv.enqueue("beta", cfg(0.50, 3)); // marker 50 = '2'
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 2);
+        let ra = rs.iter().find(|r| r.id == a).unwrap();
+        let rb = rs.iter().find(|r| r.id == b).unwrap();
+        assert_eq!(ra.text, "ZZZ", "request a must sample under top_p=0.90");
+        assert_eq!(rb.text, "222", "request b must sample under top_p=0.50");
+        // and they shared the batch: 3 decode steps total, not 3 + 3
+        assert_eq!(srv.stats.decode_steps, 3);
+        assert_eq!(srv.engine.admissions.len(), 2);
+        assert_eq!(srv.engine.admissions[0].1.top_p, 0.90);
+        assert_eq!(srv.engine.admissions[1].1.top_p, 0.50);
+    }
+
+    /// A newly enqueued request is admitted into a freed row while an
+    /// earlier request is still mid-decode (continuous batching), and a
+    /// short request behind a long one is never head-of-line blocked.
+    #[test]
+    fn admits_mid_decode_and_short_requests_overtake_long_ones() {
+        let mut srv = Server::new(SimEngine::new(2), 0);
+        let r1 = srv.enqueue("one", cfg(0.9, 1));
+        let r2 = srv.enqueue("two", cfg(0.9, 5));
+        let r3 = srv.enqueue("three", cfg(0.9, 1));
+        // tick 1: rows full with r1+r2, r3 queued; r1 completes
+        let done1 = srv.step().unwrap();
+        assert_eq!(done1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![r1]);
+        assert_eq!(srv.in_flight(), 1, "r2 still decoding");
+        assert_eq!(srv.pending(), 1, "r3 still queued");
+        // tick 2: r3 admitted into r1's freed row *while r2 decodes*
+        let done2 = srv.step().unwrap();
+        assert_eq!(srv.engine.admissions.len(), 3, "r3 admitted mid-decode");
+        assert_eq!(done2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![r3]);
+        assert_eq!(srv.in_flight(), 1, "r2 still in flight after r3 finished");
+        // r2 finishes last: completion order r1, r3, r2
+        let rest = srv.drain().unwrap();
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![r2]);
+        assert_eq!(srv.stats.served, 3);
+    }
+
+    #[test]
+    fn stats_track_ttft_throughput_and_occupancy() {
+        let mut srv = Server::new(SimEngine::new(2), 0);
+        for i in 0..4 {
+            srv.enqueue(format!("req{i}"), cfg(0.95, 2 + i));
+        }
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 4);
+        let st = &srv.stats;
+        assert_eq!(st.served, 4);
+        assert_eq!(st.total_tokens, 2 + 3 + 4 + 5);
+        assert!(st.tokens_per_sec() > 0.0 && st.tokens_per_sec().is_finite());
+        assert!(st.mean_ttft_ms() >= 0.0 && st.mean_ttft_ms() <= st.mean_latency_ms());
+        assert!(st.mean_occupancy() > 0.0 && st.mean_occupancy() <= 1.0);
+        for r in &rs {
+            assert!(r.ttft_ms <= r.latency_ms);
+            assert!(r.tokens > 0);
+        }
+    }
+
+    #[test]
+    fn step_with_nothing_to_do_is_a_noop() {
+        let mut srv = Server::new(SimEngine::new(2), 0);
+        assert!(srv.step().unwrap().is_empty());
+        assert_eq!(srv.stats.decode_steps, 0);
+        assert!(srv.drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn zero_token_budget_is_clamped_so_requests_complete() {
+        let mut srv = Server::new(SimEngine::new(1), 0);
+        srv.enqueue("empty", cfg(0.9, 0));
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].tokens, 1);
     }
 }

@@ -13,7 +13,8 @@ use loram::data::instruct::Dataset;
 use loram::data::{corpus::Corpus, make_batch};
 use loram::params::{init_lora, init_params};
 use loram::pruning;
-use loram::runtime::Runtime;
+use loram::runtime::{BackendKind, Runtime, Session};
+use loram::serve::Server;
 use loram::tensor::{Tensor, TensorStore};
 use loram::util::rng::Rng;
 
@@ -257,6 +258,131 @@ fn gradimp_importance_drives_structured_plan() {
         assert_eq!(l.kv_heads.len(), kv);
         assert_eq!(l.ff.len(), ff);
     }
+}
+
+#[test]
+fn session_host_and_device_backends_are_equivalent() {
+    // The same Session abstraction over both backends: identical losses
+    // over a 5-step SFT run, identical stepped state afterwards.
+    let rt = runtime();
+    let art = rt.load("sft_tiny").unwrap();
+    let cfg = art.meta.config.clone();
+    let params = init_params(&cfg, 20);
+    let lora = init_lora(&cfg, 21);
+    let mut host =
+        Session::with_backend(&rt, art.clone(), &[&params, &lora], BackendKind::Host).unwrap();
+    let mut dev =
+        Session::with_backend(&rt, art.clone(), &[&params, &lora], BackendKind::Device).unwrap();
+    let (b, s) = (art.meta.batch(), art.meta.seq());
+    let mut gen = loram::data::instruct::InstructGen::new(Dataset::Hermes, 5, 0);
+    let tk = loram::tokenizer::Tokenizer::new();
+    for step in 1..=5 {
+        let seqs: Vec<Vec<i32>> = gen.batch_examples(b).iter().map(|e| e.tokens(&tk)).collect();
+        let batch = make_batch(&seqs, b, s, true);
+        let mut losses = vec![];
+        for sess in [&mut host, &mut dev] {
+            sess.set(&rt, "step", &Tensor::scalar_f32(step as f32)).unwrap();
+            sess.set(&rt, "lr", &Tensor::scalar_f32(1e-3)).unwrap();
+            sess.set(&rt, "tokens", &batch.tokens).unwrap();
+            sess.set(&rt, "loss_mask", &batch.loss_mask).unwrap();
+            let out = sess.run(&rt).unwrap();
+            losses.push(out.get("loss").unwrap().f32s()[0]);
+        }
+        assert!(
+            (losses[0] - losses[1]).abs() < 1e-5,
+            "step {step}: host {} vs device {}",
+            losses[0],
+            losses[1]
+        );
+    }
+    let lnames = art.meta.name_list("lora_names");
+    let sh = host.fetch_all(&rt, &lnames).unwrap();
+    let sd = dev.fetch_all(&rt, &lnames).unwrap();
+    for n in &lnames {
+        let d = sh.get(n).unwrap().max_abs_diff(sd.get(n).unwrap());
+        assert!(d < 1e-5, "{n}: host/device state diverged by {d}");
+    }
+}
+
+#[test]
+fn session_fetch_returns_stepped_not_initial_state() {
+    // After N steps the session's slots hold the *threaded* state: the
+    // trained factors and the adam moments every new.* / new_m.* output
+    // rebinds onto — not the tensors uploaded at construction.
+    let rt = runtime();
+    let cfg = rt.load("sft_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 22);
+    let lora = init_lora(&cfg, 23);
+    let mut sess = TrainSession::new(&rt, "sft_tiny", &[&params, &lora]).unwrap();
+    let (b, s) = (sess.batch_size(), sess.seq_len());
+    let mut gen = loram::data::instruct::InstructGen::new(Dataset::Hermes, 6, 0);
+    let tk = loram::tokenizer::Tokenizer::new();
+    for _ in 0..3 {
+        let seqs: Vec<Vec<i32>> = gen.batch_examples(b).iter().map(|e| e.tokens(&tk)).collect();
+        let batch = make_batch(&seqs, b, s, true);
+        sess.train_step(&batch, 1e-2).unwrap();
+    }
+    let lnames = sess.art.meta.name_list("lora_names");
+    let state = sess.extract(&lnames).unwrap();
+    // lora_b is initialised to zero; only stepped state can be non-zero
+    let b_moved = lnames
+        .iter()
+        .filter(|n| n.ends_with("lora_b"))
+        .any(|n| state.get(n).unwrap().l2_norm() > 0.0);
+    assert!(b_moved, "extract returned the initial upload, not stepped state");
+    // adam moments start zero-filled and only move via the new_m.* binding
+    let mnames: Vec<String> = lnames.iter().map(|n| format!("adam_m.{n}")).collect();
+    let moments = sess.extract(&mnames).unwrap();
+    assert!(
+        mnames.iter().any(|n| moments.get(n).unwrap().l2_norm() > 0.0),
+        "optimiser moments never rebound onto their slots"
+    );
+}
+
+#[test]
+fn server_admits_new_request_mid_decode() {
+    // Continuous batching with the real generator: a request enqueued
+    // behind a full batch starts decoding as soon as any row frees, while
+    // earlier requests are still in flight — and mixed sampling configs
+    // share one batch.
+    let rt = runtime();
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 24);
+    let lora = init_lora(&cfg, 25);
+    let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora]).unwrap();
+    let b = gen.batch_size();
+    let mut srv = Server::new(gen, 3);
+    for i in 0..b {
+        // staggered budgets so rows free up one at a time
+        srv.enqueue(
+            format!("Q: {i}+{i}="),
+            SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 3 * (i + 1) },
+        );
+    }
+    let late = srv.enqueue(
+        "Q: 1+1=",
+        SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 2 },
+    );
+    let mut responses = vec![];
+    let mut admitted_mid_decode = false;
+    while srv.pending() > 0 || srv.in_flight() > 0 {
+        responses.extend(srv.step().unwrap());
+        let late_done = responses.iter().any(|r| r.id == late);
+        if srv.pending() == 0 && !late_done && srv.in_flight() > 1 {
+            // the late request is decoding alongside still-running
+            // earlier requests
+            admitted_mid_decode = true;
+        }
+    }
+    assert_eq!(responses.len(), b + 1);
+    assert_eq!(srv.stats.served, b + 1);
+    let late_pos = responses.iter().position(|r| r.id == late).unwrap();
+    assert!(
+        admitted_mid_decode || late_pos < responses.len() - 1,
+        "late request waited for the whole previous batch (head-of-line blocking)"
+    );
+    assert!(srv.stats.mean_ttft_ms() >= 0.0);
+    assert!(srv.stats.tokens_per_sec() > 0.0);
 }
 
 #[test]

@@ -1,0 +1,181 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this crate implements
+//! exactly the subset the workspace uses: [`Result`], [`Error`],
+//! [`Context`] (on both `Result` and `Option`), and the `anyhow!`, `bail!`
+//! and `ensure!` macros. Error context is flattened into a single message
+//! string eagerly (`"outer: inner: root"`), which matches how the
+//! coordinator reports errors (`{e:#}` and `{e}` render identically here).
+
+use std::fmt;
+
+/// A flattened error message with its context chain pre-rendered.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Sealed conversion used by [`super::Context`]: implemented for every
+    /// std error type and for [`super::Error`] itself, so `.context()` can
+    /// chain over both (the same coherence pattern the real anyhow uses).
+    pub trait ErrLike {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E> ErrLike for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl ErrLike for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::ErrLike> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(::std::format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(::std::format!($fmt, $($arg)*)) };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return ::std::result::Result::Err($crate::anyhow!($($t)*)) };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn context_chains_on_result_and_option() {
+        let e = io_err().context("reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        let e2: Result<()> = Err(e);
+        let e2 = e2.with_context(|| "outer").unwrap_err();
+        assert_eq!(e2.to_string(), "outer: reading file: boom");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let a = anyhow!("x = {}", 3);
+        assert_eq!(a.to_string(), "x = 3");
+        let inline = 7;
+        assert_eq!(anyhow!("v {inline}").to_string(), "v 7");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+        fn g(ok: bool) -> Result<u8> {
+            ensure!(ok, "not ok");
+            Ok(1)
+        }
+        assert!(g(true).is_ok());
+        assert_eq!(g(false).unwrap_err().to_string(), "not ok");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom");
+    }
+}

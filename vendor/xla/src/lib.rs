@@ -1,0 +1,229 @@
+//! Vendored `xla` crate: the xla-rs API surface the LoRAM runtime uses.
+//!
+//! The real vendored build links the native `xla_extension` archive (PJRT
+//! CPU plugin, patched with `ExecuteOptions::untuple_result=true` — see the
+//! notes in `rust/src/runtime/`). That archive is not shipped in this
+//! source tree, so this crate provides the same API as a *stub*: host-side
+//! types ([`Literal`], [`ElementType`]) are fully functional, while every
+//! entry point that needs the native runtime ([`PjRtClient::cpu`],
+//! [`HloModuleProto::from_text_file`], execution, device transfers) returns
+//! [`Error::Unavailable`]. Callers already degrade gracefully: the
+//! coordinator reports the error, benches skip runtime sections, and the
+//! pure-host test suite runs unaffected.
+//!
+//! Dropping the real `xla_rs` FFI implementation back in place keeps every
+//! signature below unchanged.
+
+use std::fmt;
+
+const STUB: &str = "xla stub: native xla_extension runtime not present in this build \
+                    (artifact execution requires the vendored PJRT plugin)";
+
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The native runtime is not linked into this build.
+    Unavailable(&'static str),
+    /// Host-side usage error (shape/dtype mismatch, ...).
+    Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(m) => f.write_str(m),
+            Error::Msg(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Unavailable(STUB))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy + 'static {
+    const TY: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// A host-resident tensor value (fully functional in the stub).
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * 4 {
+            return Err(Error::Msg(format!(
+                "literal: {} data bytes != {elems} elements * 4",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error::Msg(format!(
+                "literal: requested {:?}, holds {:?}",
+                T::TY,
+                self.ty
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decompose a tuple literal into its leaves (runtime-produced only).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtDevice {
+    _private: (),
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Literal-in / buffer-out execution.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+
+    /// Buffer-in / buffer-out execution (device-resident hot path).
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_host_data() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_report_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_shape_mismatch_is_an_error() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+}
