@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
-# CI gate for the rust workspace: tier-1 verify + formatting + lints.
+# CI gate for the workspace: tier-1 verify + python tests + fmt + lints.
 #
-#   ./ci.sh          # build, test, fmt --check, clippy -D warnings
+#   ./ci.sh          # build, test, pytest (L1/L2), fmt --check, clippy
 #   ./ci.sh fast     # tier-1 only (build + test)
 #
-# Needs a Rust toolchain (cargo); fmt/clippy steps are skipped with a
-# warning when the corresponding component is missing.
+# Needs a Rust toolchain (cargo); the python (L1/L2) test step and the
+# fmt/clippy steps are skipped with a warning when the corresponding
+# component is missing.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -16,6 +17,19 @@ run cargo test -q
 
 if [ "${1:-}" = "fast" ]; then
     exit 0
+fi
+
+# L1/L2 python tests (model + AOT emitter contract) when a JAX env exists
+if python3 -c "import jax, pytest" >/dev/null 2>&1; then
+    PYTEST_ARGS=(-q tests)
+    if ! python3 -c "import hypothesis" >/dev/null 2>&1; then
+        echo "WARN: hypothesis not installed; skipping python/tests/test_kernels.py" >&2
+        PYTEST_ARGS+=(--ignore=tests/test_kernels.py)
+    fi
+    # pytest must run from python/ so `compile` is importable
+    (cd python && run python3 -m pytest "${PYTEST_ARGS[@]}")
+else
+    echo "WARN: python3 with jax+pytest not available; skipping python/tests" >&2
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

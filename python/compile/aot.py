@@ -208,6 +208,56 @@ def logits_artifact(cfg, b=LOGITS_B, s=LOGITS_S):
                      "param_names": pnames, "lora_names": lnames})
 
 
+def _cache_specs(cfg, b, s):
+    return [(n, _spec(shp)) for n, shp in M.kv_cache_shapes(cfg, b, s).items()]
+
+
+def _cache_threading(cnames):
+    """Cache tensors are donated state: each `new.cache_*` output rebinds
+    onto its input slot (Session state threading), and a fresh session may
+    zero-fill the caches — the decode analogue of `_state_threading`."""
+    return {"state_bindings": {"new." + n: n for n in cnames},
+            "state_zero_init": list(cnames)}
+
+
+def decode_prefill_artifact(cfg, b=LOGITS_B, s=LOGITS_S):
+    """Admission-time cache fill for one row (tokens are (1, S); the row is
+    selected by `row_onehot`, all other rows' caches pass through)."""
+    fn, pnames, lnames, cnames = M.make_decode_prefill(cfg)
+    ins = [("tokens", _spec((1, s), jnp.int32)),
+           ("last_pos", _spec((), jnp.int32)),
+           ("row_onehot", _spec((b,)))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_prefill_{cfg.name}", fn, ins, outs, cfg,
+                    {"kind": "decode_prefill", "batch": b, "seq": s,
+                     "param_names": pnames, "lora_names": lnames,
+                     "cache_names": cnames, **_cache_threading(cnames)})
+
+
+def decode_step_artifact(cfg, b=LOGITS_B, s=LOGITS_S):
+    """(B, 1) incremental decode step: per-row frontier token + position in,
+    next-token logits out; K/V caches live on device as donated state."""
+    fn, pnames, lnames, cnames = M.make_decode_step(cfg)
+    ins = [("tokens", _spec((b, 1), jnp.int32)),
+           ("pos", _spec((b,), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_step_{cfg.name}", fn, ins, outs, cfg,
+                    {"kind": "decode_step", "batch": b, "seq": s,
+                     "param_names": pnames, "lora_names": lnames,
+                     "cache_names": cnames, **_cache_threading(cnames)})
+
+
+def decode_artifacts(cfg, b=LOGITS_B, s=LOGITS_S):
+    """The decode pair always ships together (Generator needs both)."""
+    return [decode_prefill_artifact(cfg, b, s), decode_step_artifact(cfg, b, s)]
+
+
 def grad_imp_artifact(cfg, b=TRAIN_B, s=TRAIN_S):
     fn, pnames = M.make_grad_importance(cfg)
     ins = [("tokens", _spec((b, s + 1), jnp.int32)),
@@ -268,17 +318,20 @@ def build_suite(suite: str):
                  eval_artifact(pruned_config(tiny, 0.5), b=2, s=32),
                  kernel_demo_artifact(True),
                  kernel_demo_artifact(False)]
+        arts += decode_artifacts(tiny, b=2, s=32)
     if suite == "std":
         # LLaMA-2 proxy herd --------------------------------------------
         for nm in ("l7b", "l13b", "l70b"):
             cfg = P[nm]
             arts += [pretrain_artifact(cfg), sft_artifact(cfg),
                      eval_artifact(cfg), logits_artifact(cfg)]
+            arts += decode_artifacts(cfg)
         arts += [grad_imp_artifact(P["l13b"]), grad_imp_artifact(P["l70b"])]
         # 13B: structured pruned (rand/stru share shapes) + masked variants
         c13p = pruned("l13b", 0.65)
         arts += [pretrain_artifact(c13p), sft_artifact(c13p),
                  eval_artifact(c13p), logits_artifact(c13p)]
+        arts += decode_artifacts(c13p)
         arts += [sft_artifact(P["l13b"], masked=True),
                  pretrain_artifact(P["l13b"], masked=True)]
         # 70B: reduction-ratio sweep (fig7/8) + QLoRAM
@@ -291,6 +344,7 @@ def build_suite(suite: str):
             cfg = P[nm]
             arts += [pretrain_artifact(cfg), sft_artifact(cfg),
                      eval_artifact(cfg), logits_artifact(cfg)]
+            arts += decode_artifacts(cfg)
         arts += [grad_imp_artifact(P["l70b3"])]
         c703p = pruned("l70b3", 0.85)
         arts += [pretrain_artifact(c703p), sft_artifact(c703p, quantized=True),

@@ -167,6 +167,30 @@ def rope(x, theta):
     return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
 
 
+def rope_at(x, pos, theta):
+    """Rotary embedding at explicit per-row positions. x: (B, 1, H, hd),
+    pos: (B,) int32 — the grid index each row's token sits at."""
+    half = x.shape[-1] // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]      # (B, half)
+    cos = jnp.cos(ang)[:, None, None, :]
+    sin = jnp.sin(ang)[:, None, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def repeat_kv(x, h):
+    """GQA head sharing: (B, S, kv, hd) -> (B, S, h, hd). Pruned head
+    counts may not divide, in which case tile-then-trim matches the
+    full-forward convention."""
+    kv = x.shape[2]
+    if kv == h:
+        return x
+    if h % kv == 0:
+        return jnp.repeat(x, h // kv, axis=2)
+    return jnp.tile(x, (1, 1, (h + kv - 1) // kv, 1))[:, :, :h]
+
+
 class ProjCtx:
     """How a projection multiplies its input — dense, masked, or quantised.
 
@@ -218,13 +242,29 @@ class ProjCtx:
         return y.reshape(*lead, y.shape[-1])
 
 
-def forward(cfg: ModelConfig, proj: ProjCtx, tokens):
-    """tokens (B, S) int32 -> logits (B, S, V)."""
+def lm_head_logits(proj: ProjCtx, x):
+    """Final projection: (B, T, D) -> (B, T, V), with optional lm_head LoRA."""
+    b, t, d = x.shape
+    if proj.lora.get("lm_head.lora_a") is not None:
+        x2 = x.reshape(-1, d)
+        logits = lora_matmul_or_ref(
+            x2, proj.p["lm_head"], proj.lora["lm_head.lora_a"],
+            proj.lora["lm_head.lora_b"], proj.scale, proj.use_pallas)
+        return logits.reshape(b, t, -1)
+    return x @ proj.p["lm_head"]
+
+
+def forward_kv(cfg: ModelConfig, proj: ProjCtx, tokens):
+    """Full causal forward that also returns the per-layer post-RoPE K/V
+    (pre-GQA-repeat) — exactly the contents a decode cache must hold.
+    tokens (B, S) int32 -> (logits (B, S, V), [K_i (B, S, kv_i, hd)],
+    [V_i (B, S, kv_i, hd)])."""
     p = proj.p
     x = p["embed"][tokens]                          # (B, S, D)
     b, s, d = x.shape
     hd = cfg.head_dim
     causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    ks, vs = [], []
     for i in range(cfg.n_layers):
         h, kv, _ = cfg.layer_shapes(i)
         xin = rmsnorm(x, p[f"l{i}.attn_norm"], cfg.rms_eps)
@@ -233,34 +273,27 @@ def forward(cfg: ModelConfig, proj: ProjCtx, tokens):
         v = proj(xin, f"l{i}.wv").reshape(b, s, kv, hd)
         q = rope(q, cfg.rope_theta)
         k = rope(k, cfg.rope_theta)
-        if kv != h:
-            rep = h // kv if h % kv == 0 else 1
-            if kv * rep != h:
-                # pruned head counts may not divide; tile then trim
-                k = jnp.tile(k, (1, 1, (h + kv - 1) // kv, 1))[:, :, :h]
-                v = jnp.tile(v, (1, 1, (h + kv - 1) // kv, 1))[:, :, :h]
-            else:
-                k = jnp.repeat(k, rep, axis=2)
-                v = jnp.repeat(v, rep, axis=2)
-        att = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(float(hd))
+        ks.append(k)
+        vs.append(v)
+        kk = repeat_kv(k, h)
+        vv = repeat_kv(v, h)
+        att = jnp.einsum("bshd,bthd->bhst", q, kk) / jnp.sqrt(float(hd))
         att = jnp.where(causal[None, None], att, -1e30)
         att = jax.nn.softmax(att, axis=-1)
-        out = jnp.einsum("bhst,bthd->bshd", att, v).reshape(b, s, h * hd)
+        out = jnp.einsum("bhst,bthd->bshd", att, vv).reshape(b, s, h * hd)
         x = x + proj(out, f"l{i}.wo")
         xin = rmsnorm(x, p[f"l{i}.mlp_norm"], cfg.rms_eps)
         gate = proj(xin, f"l{i}.w_gate")
         up = proj(xin, f"l{i}.w_up")
         x = x + proj(jax.nn.silu(gate) * up, f"l{i}.w_down")
     x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
-    if proj.lora.get("lm_head.lora_a") is not None:
-        x2 = x.reshape(-1, d)
-        logits = lora_matmul_or_ref(
-            x2, p["lm_head"], proj.lora["lm_head.lora_a"],
-            proj.lora["lm_head.lora_b"], proj.scale, proj.use_pallas)
-        logits = logits.reshape(b, s, -1)
-    else:
-        logits = x @ p["lm_head"]
-    return logits
+    return lm_head_logits(proj, x), ks, vs
+
+
+def forward(cfg: ModelConfig, proj: ProjCtx, tokens):
+    """tokens (B, S) int32 -> logits (B, S, V). The K/V capture in
+    `forward_kv` is dead code here and DCE'd away when lowering."""
+    return forward_kv(cfg, proj, tokens)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -415,6 +448,123 @@ def make_logits(cfg: ModelConfig, with_lora=True, use_pallas=False):
         proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
         return (forward(cfg, proj, tokens),)
     return logits_fn, pnames, lnames
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode (DESIGN.md §2a: the incremental serving hot path)
+# ---------------------------------------------------------------------------
+
+def kv_cache_shapes(cfg: ModelConfig, b: int, s: int) -> Dict[str, tuple]:
+    """name -> shape for the per-layer decode caches, in canonical order.
+
+    Caches hold post-RoPE, pre-GQA-repeat keys/values — one (B, S, kv_i,
+    hd) pair per layer, so pruned layer plans shrink their caches too.
+    """
+    out: Dict[str, tuple] = {}
+    hd = cfg.head_dim
+    for i in range(cfg.n_layers):
+        _, kv, _ = cfg.layer_shapes(i)
+        out[f"cache_k.l{i}"] = (b, s, kv, hd)
+        out[f"cache_v.l{i}"] = (b, s, kv, hd)
+    return out
+
+
+def kv_cache_names(cfg: ModelConfig) -> List[str]:
+    return list(kv_cache_shapes(cfg, 1, 1).keys())
+
+
+def make_decode_prefill(cfg: ModelConfig, with_lora=True, use_pallas=False):
+    """Cache-filling prefill for one row of the decode grid.
+
+    Runs the full causal forward over a single (1, S) padded prompt, then
+    writes the computed per-layer K/V into the (B, S, ...) cache tensors
+    at the row selected by `row_onehot`; every other row's cache passes
+    through untouched, so admission never perturbs in-flight rows. Also
+    returns the logits at `last_pos` (the prompt token that predicts the
+    first generated one). The cache outputs are declared as donated state
+    (aot state_bindings), so on the device backend they stay in PJRT
+    buffers across calls — the decode analogue of optimiser-state
+    threading in training artifacts.
+    """
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg) if with_lora else []
+    cnames = kv_cache_names(cfg)
+
+    def prefill_fn(tokens, last_pos, row_onehot, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        logits, ks, vs = forward_kv(cfg, proj, tokens)
+        sel = row_onehot[:, None, None, None]            # (B, 1, 1, 1)
+        new_caches = []
+        for li in range(cfg.n_layers):
+            for name, computed in ((f"cache_k.l{li}", ks[li]),
+                                   (f"cache_v.l{li}", vs[li])):
+                new_caches.append(caches[name] * (1.0 - sel) + sel * computed)
+        row_logits = jnp.take(logits[0], last_pos, axis=0)[None]   # (1, V)
+        return (row_logits,) + tuple(new_caches)
+    return prefill_fn, pnames, lnames, cnames
+
+
+def make_decode_step(cfg: ModelConfig, with_lora=True, use_pallas=False):
+    """One (B, 1) incremental decode step over donated K/V caches.
+
+    `tokens` holds each row's frontier token and `pos` its grid index; the
+    step writes that token's K/V into the cache at `pos`, attends over
+    cache positions <= pos only, and returns next-token logits per row.
+    Rows beyond their cache frontier (free/finished) may be fed dummies —
+    their writes land at `pos` and are fully rewritten by the next
+    prefill. Cache outputs donate back onto their inputs.
+    """
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg) if with_lora else []
+    cnames = kv_cache_names(cfg)
+
+    def step_fn(tokens, pos, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        p = params
+        x = p["embed"][tokens]                       # (B, 1, D)
+        b = x.shape[0]
+        hd = cfg.head_dim
+        s = caches[cnames[0]].shape[1]
+        grid = jnp.arange(s, dtype=jnp.int32)[None, :]
+        write = (grid == pos[:, None]).astype(jnp.float32)   # (B, S)
+        valid = grid <= pos[:, None]                          # (B, S)
+        new_caches = {}
+        for li in range(cfg.n_layers):
+            h, kv, _ = cfg.layer_shapes(li)
+            xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
+            q = proj(xin, f"l{li}.wq").reshape(b, 1, h, hd)
+            k = proj(xin, f"l{li}.wk").reshape(b, 1, kv, hd)
+            v = proj(xin, f"l{li}.wv").reshape(b, 1, kv, hd)
+            q = rope_at(q, pos, cfg.rope_theta)
+            k = rope_at(k, pos, cfg.rope_theta)
+            w = write[:, :, None, None]              # (B, S, 1, 1)
+            ck = caches[f"cache_k.l{li}"] * (1.0 - w) + w * k
+            cv = caches[f"cache_v.l{li}"] * (1.0 - w) + w * v
+            new_caches[f"cache_k.l{li}"] = ck
+            new_caches[f"cache_v.l{li}"] = cv
+            kk = repeat_kv(ck, h)                    # (B, S, h, hd)
+            vv = repeat_kv(cv, h)
+            att = jnp.einsum("bohd,bshd->bhos", q, kk) / jnp.sqrt(float(hd))
+            att = jnp.where(valid[:, None, None, :], att, -1e30)
+            att = jax.nn.softmax(att, axis=-1)
+            out = jnp.einsum("bhos,bshd->bohd", att, vv).reshape(b, 1, h * hd)
+            x = x + proj(out, f"l{li}.wo")
+            xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
+            gate = proj(xin, f"l{li}.w_gate")
+            up = proj(xin, f"l{li}.w_up")
+            x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
+        x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+        logits = lm_head_logits(proj, x)[:, 0]       # (B, V)
+        return (logits,) + tuple(new_caches[n] for n in cnames)
+    return step_fn, pnames, lnames, cnames
 
 
 def make_grad_importance(cfg: ModelConfig):

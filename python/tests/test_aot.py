@@ -1,6 +1,7 @@
 """AOT suite consistency: artifact specs line up with the model's canonical
 parameter layout (the same invariants the Rust runtime relies on)."""
 
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -102,3 +103,60 @@ def test_eval_artifact_reports_per_sequence():
     art = aot.eval_artifact(PRESETS["tiny"], b=3, s=16)
     outs = {o: None for o in art.out_names}
     assert set(outs) == {"nll_sum", "tok_count"}
+
+
+def test_suites_register_decode_artifact_pair():
+    """`python -m compile.aot --list`-style smoke check: the decode pair is
+    present wherever a logits artifact serves decoding."""
+    for suite in ("smoke", "std"):
+        names = [a.name for a in aot.build_suite(suite)]
+        assert "decode_prefill_tiny" in names or suite == "std"
+        for n in names:
+            if n.startswith("decode_prefill_"):
+                assert n.replace("decode_prefill_", "decode_step_") in names
+    smoke = [a.name for a in aot.build_suite("smoke")]
+    assert "decode_prefill_tiny" in smoke and "decode_step_tiny" in smoke
+
+
+def test_decode_step_artifact_declares_cache_donation():
+    """Input order tokens, pos, params, lora, caches; every cache output
+    donates onto its own input slot and is zero-init-able."""
+    cfg = PRESETS["tiny"]
+    art = aot.decode_step_artifact(cfg, b=2, s=16)
+    names = [n for n, _ in art.in_specs]
+    assert names[:2] == ["tokens", "pos"]
+    pn, ln, cn = (art.extra["param_names"], art.extra["lora_names"],
+                  art.extra["cache_names"])
+    i = 2
+    assert names[i:i + len(pn)] == pn
+    i += len(pn)
+    assert names[i:i + len(ln)] == ln
+    i += len(ln)
+    assert names[i:] == cn
+    assert art.extra["state_bindings"] == {"new." + n: n for n in cn}
+    assert art.extra["state_zero_init"] == cn
+    assert art.out_names == ["logits"] + ["new." + n for n in cn]
+    # cache shapes: (B, S, kv_i, hd), per-layer
+    specs = dict(art.in_specs)
+    for li in range(cfg.n_layers):
+        _, kv, _ = cfg.layer_shapes(li)
+        assert list(specs[f"cache_k.l{li}"].shape) == \
+            [2, 16, kv, cfg.head_dim]
+    # abstract eval: logits (B, V), cache outputs mirror cache inputs
+    outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
+    assert list(outs[0].shape) == [2, cfg.vocab_size]
+    for o, n in zip(outs[1:], cn):
+        assert list(o.shape) == list(specs[n].shape), n
+
+
+def test_decode_prefill_artifact_is_single_row():
+    cfg = PRESETS["tiny"]
+    art = aot.decode_prefill_artifact(cfg, b=2, s=16)
+    specs = dict(art.in_specs)
+    assert list(specs["tokens"].shape) == [1, 16]
+    assert list(specs["last_pos"].shape) == []
+    assert list(specs["row_onehot"].shape) == [2]
+    assert art.extra["state_bindings"] == \
+        {"new." + n: n for n in art.extra["cache_names"]}
+    outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
+    assert list(outs[0].shape) == [1, cfg.vocab_size]

@@ -297,6 +297,97 @@ def test_grad_importance_shapes_and_positivity():
     assert float(head_imp.max()) > 0.0
 
 
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+
+def _nonzero_lora(cfg, seed=7):
+    lora = M.init_lora(cfg, jax.random.PRNGKey(1))
+    return {k: (v if k.endswith("lora_a")
+                else jax.random.normal(jax.random.PRNGKey(seed), v.shape) * 0.05)
+            for k, v in lora.items()}
+
+
+def _assert_kv_greedy_matches_reforward(cfg, prompts, steps, s):
+    """Drive prefill+step over zero caches and check every step's logits —
+    and the greedy token stream — against a full reforward of the same
+    sequences. This is the contract the Rust KV decode path relies on."""
+    b = len(prompts)
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pfn, pn, ln, cn = M.make_decode_prefill(cfg)
+    sfn, *_ = M.make_decode_step(cfg)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    caches = {n: jnp.zeros(shapes[n], jnp.float32) for n in cn}
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    for row, p in enumerate(prompts):
+        toks = jnp.asarray([list(p) + [0] * (s - len(p))], jnp.int32)
+        oh = jnp.zeros((b,), jnp.float32).at[row].set(1.0)
+        out = pfn(toks, jnp.int32(len(p) - 1), oh,
+                  *flat, *[caches[n] for n in cn])
+        caches = dict(zip(cn, out[1:]))
+    proj = M.ProjCtx(params, lora=lora, cfg=cfg)
+    seqs = [list(p) for p in prompts]
+    for _ in range(steps):
+        toks = jnp.asarray([[seq[-1]] for seq in seqs], jnp.int32)
+        pos = jnp.asarray([len(seq) - 1 for seq in seqs], jnp.int32)
+        out = sfn(toks, pos, *flat, *[caches[n] for n in cn])
+        caches = dict(zip(cn, out[1:]))
+        grid = jnp.asarray([seq + [0] * (s - len(seq)) for seq in seqs],
+                           jnp.int32)
+        ref = M.forward(cfg, proj, grid)
+        for r, seq in enumerate(seqs):
+            ref_row = ref[r, len(seq) - 1]
+            np.testing.assert_allclose(out[0][r], ref_row,
+                                       rtol=2e-3, atol=2e-3)
+            assert int(jnp.argmax(out[0][r])) == int(jnp.argmax(ref_row))
+            seq.append(int(jnp.argmax(ref_row)))
+
+
+def test_decode_cache_matches_full_reforward_greedy():
+    _assert_kv_greedy_matches_reforward(
+        CFG, prompts=[[1, 2, 3, 4, 5], [9, 8, 7]], steps=6, s=24)
+
+
+def test_decode_cache_matches_reforward_gqa_and_pruned_plan():
+    """GQA (kv < h, dividing) and a pruned layer plan whose head counts do
+    not divide (tile+trim) must both round-trip through the cache."""
+    gqa = ModelConfig(name="gqa4", d_model=64, n_layers=2, n_heads=4,
+                      n_kv_heads=2, d_ff=96, max_seq=32)
+    _assert_kv_greedy_matches_reforward(
+        gqa, prompts=[[5, 6, 7], [11, 12, 13, 14]], steps=4, s=16)
+    pruned = ModelConfig(name="pp", d_model=64, n_layers=2, n_heads=4,
+                         n_kv_heads=2, d_ff=96, max_seq=32,
+                         layer_plan=[[4, 2, 96], [3, 2, 64]])
+    _assert_kv_greedy_matches_reforward(
+        pruned, prompts=[[3, 1, 4, 1], [2, 7]], steps=4, s=16)
+
+
+def test_decode_prefill_only_touches_selected_row():
+    """Admitting into one row must leave every other row's cache bitwise
+    intact (mid-decode admission safety)."""
+    cfg = CFG
+    b, s = 3, 16
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pfn, pn, ln, cn = M.make_decode_prefill(cfg)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    rng = np.random.default_rng(0)
+    caches = {n: jnp.asarray(rng.normal(size=shapes[n]), jnp.float32)
+              for n in cn}
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    toks = jnp.asarray([[1, 2, 3] + [0] * (s - 3)], jnp.int32)
+    oh = jnp.zeros((b,), jnp.float32).at[1].set(1.0)
+    out = pfn(toks, jnp.int32(2), oh, *flat, *[caches[n] for n in cn])
+    new_caches = dict(zip(cn, out[1:]))
+    for n in cn:
+        before, after = np.asarray(caches[n]), np.asarray(new_caches[n])
+        np.testing.assert_array_equal(before[0], after[0])
+        np.testing.assert_array_equal(before[2], after[2])
+        assert not np.array_equal(before[1], after[1])
+    assert out[0].shape == (1, cfg.vocab_size)
+
+
 def test_eval_loss_matches_mean_loss():
     cfg = CFG
     fn, pnames, lnames = M.make_eval_loss(cfg)

@@ -13,7 +13,7 @@
 
 use loram::bench::{bench, bench_throughput};
 use loram::coordinator::evaluate::{test_sequences, Evaluator};
-use loram::coordinator::generate::{Generator, SampleCfg};
+use loram::coordinator::generate::{DecodePath, Generator, SampleCfg};
 use loram::coordinator::train::TrainSession;
 use loram::data::instruct::{Dataset, InstructGen};
 use loram::data::{corpus::Corpus, make_batch};
@@ -47,27 +47,53 @@ fn serve_workload<E: DecodeEngine>(engine: E, n: usize) -> anyhow::Result<Server
     Ok(srv.stats)
 }
 
-/// Emit the serving bench trajectory point.
-fn emit_bench_serve(engine: &str, n: usize, st: &ServerStats) -> anyhow::Result<()> {
-    let j = Json::obj(vec![
-        ("bench", Json::str("serve")),
-        ("engine", Json::str(engine)),
-        ("requests", Json::num(n as f64)),
-        ("tokens_per_sec", Json::num(st.tokens_per_sec())),
-        ("mean_ttft_ms", Json::num(st.mean_ttft_ms())),
-        ("mean_latency_ms", Json::num(st.mean_latency_ms())),
-        ("mean_batch_occupancy", Json::num(st.mean_occupancy())),
-        ("decode_steps", Json::num(st.decode_steps as f64)),
-        ("total_tokens", Json::num(st.total_tokens as f64)),
-    ]);
+/// One serving measurement: which decode path it exercised (`reforward` /
+/// `kvcache`) and through which engine (`pjrt`, or `sim` when the
+/// scheduler ran without artifacts).
+struct ServeEntry {
+    path: &'static str,
+    engine: &'static str,
+    requests: usize,
+    stats: ServerStats,
+}
+
+/// Emit the serving bench trajectory: one distinct entry per decode path.
+fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
+    let rows: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            let st = &e.stats;
+            Json::obj(vec![
+                ("path", Json::str(e.path)),
+                ("engine", Json::str(e.engine)),
+                ("requests", Json::num(e.requests as f64)),
+                ("tokens_per_sec", Json::num(st.tokens_per_sec())),
+                ("mean_ttft_ms", Json::num(st.mean_ttft_ms())),
+                ("mean_latency_ms", Json::num(st.mean_latency_ms())),
+                ("mean_batch_occupancy", Json::num(st.mean_occupancy())),
+                ("mean_queue_wait_ms", Json::num(st.mean_queue_wait_ms())),
+                ("peak_queue_depth", Json::num(st.peak_queue_depth as f64)),
+                ("decode_steps", Json::num(st.decode_steps as f64)),
+                ("total_tokens", Json::num(st.total_tokens as f64)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![("bench", Json::str("serve")), ("entries", Json::Arr(rows))]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
     std::fs::write(path, j.to_string())?;
-    println!(
-        "BENCH_serve.json [{engine}]: {:.1} tok/s, mean ttft {:.2} ms, occupancy {:.2}",
-        st.tokens_per_sec(),
-        st.mean_ttft_ms(),
-        st.mean_occupancy()
-    );
+    for e in entries {
+        println!(
+            "BENCH_serve.json [{}/{}]: {:.1} tok/s, mean ttft {:.2} ms, occupancy {:.2}, \
+             queue wait {:.2} ms (peak depth {})",
+            e.path,
+            e.engine,
+            e.stats.tokens_per_sec(),
+            e.stats.mean_ttft_ms(),
+            e.stats.mean_occupancy(),
+            e.stats.mean_queue_wait_ms(),
+            e.stats.peak_queue_depth
+        );
+    }
     Ok(())
 }
 
@@ -137,9 +163,14 @@ fn main() -> anyhow::Result<()> {
     if run("serve") {
         // scheduler-only serving bench on the simulated engine (runs with
         // no artifacts); overwritten by the PJRT-backed numbers below when
-        // the tiny artifact suite is present
+        // the tiny artifact suite is present. The sim engine has no decode
+        // cost model, so one measured workload stands in for both path
+        // labels (engine "sim" marks the entries as scheduler-only).
         let st = serve_workload(SimEngine::new(4), 64)?;
-        emit_bench_serve("sim", 64, &st)?;
+        emit_bench_serve(&[
+            ServeEntry { path: "reforward", engine: "sim", requests: 64, stats: st.clone() },
+            ServeEntry { path: "kvcache", engine: "sim", requests: 64, stats: st },
+        ])?;
     }
 
     // ---------------- runtime benches (need artifacts) --------------------
@@ -228,10 +259,40 @@ fn main() -> anyhow::Result<()> {
     }
 
     if run("serve") {
-        let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora])?;
+        // both decode paths through the real scheduler: the full-reforward
+        // baseline vs the (B, 1) kv-cache path (DESIGN.md §Perf)
         let n = 16;
-        let st = serve_workload(gen, n)?;
-        emit_bench_serve("pjrt", n, &st)?;
+        let gen = Generator::with_path(
+            &rt,
+            "logits_tiny",
+            &[&params, &lora],
+            Some(DecodePath::Reforward),
+        )?;
+        let mut entries = vec![ServeEntry {
+            path: "reforward",
+            engine: "pjrt",
+            requests: n,
+            stats: serve_workload(gen, n)?,
+        }];
+        match Generator::with_path(&rt, "logits_tiny", &[&params, &lora], Some(DecodePath::KvCache))
+        {
+            Ok(gen) => entries.push(ServeEntry {
+                path: "kvcache",
+                engine: "pjrt",
+                requests: n,
+                stats: serve_workload(gen, n)?,
+            }),
+            Err(e) => {
+                println!("(kvcache serve bench falling back to sim: {e})");
+                entries.push(ServeEntry {
+                    path: "kvcache",
+                    engine: "sim",
+                    requests: 64,
+                    stats: serve_workload(SimEngine::new(4), 64)?,
+                });
+            }
+        }
+        emit_bench_serve(&entries)?;
     }
 
     if run("pallas") {

@@ -86,8 +86,9 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     // LoRA target vs the big recovered-inference target
     let mut scsv = Csv::create(
         ctx.out_dir.join("tab8_serving.csv"),
-        &["method", "requests", "tokens_per_sec", "mean_ttft_ms",
-          "mean_latency_ms", "mean_occupancy"],
+        &["method", "decode_path", "requests", "tokens_per_sec", "mean_ttft_ms",
+          "mean_latency_ms", "mean_occupancy", "mean_queue_wait_ms",
+          "peak_queue_depth"],
     )?;
     let serve_requests = workload_steps * 2;
     for (method, base) in [(format!("{small} serve"), small), (format!("{big} serve"), big)] {
@@ -95,6 +96,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         let mcfg = ctx.rt.load(&format!("eval_{base}"))?.meta.config.clone();
         let lora = init_lora(&mcfg, ctx.seed);
         let gen = Generator::new(ctx.rt, &format!("logits_{base}"), &[&params, &lora])?;
+        let decode_path = gen.decode_path().name();
         let mut srv = Server::new(gen, ctx.seed);
         let mut ig = InstructGen::new(Dataset::Hermes, ctx.seed, 2);
         for i in 0..serve_requests {
@@ -111,18 +113,24 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         srv.drain()?;
         let st = &srv.stats;
         log::info(format!(
-            "tab8 {method}: {:.1} tok/s, ttft {:.1} ms, occupancy {:.2}",
+            "tab8 {method} [{decode_path}]: {:.1} tok/s, ttft {:.1} ms, occupancy {:.2}, \
+             queue wait {:.2} ms (peak depth {})",
             st.tokens_per_sec(),
             st.mean_ttft_ms(),
-            st.mean_occupancy()
+            st.mean_occupancy(),
+            st.mean_queue_wait_ms(),
+            st.peak_queue_depth
         ));
         scsv.row(&crate::csv_row![
             method,
+            decode_path,
             serve_requests,
             format!("{:.2}", st.tokens_per_sec()),
             format!("{:.2}", st.mean_ttft_ms()),
             format!("{:.2}", st.mean_latency_ms()),
-            format!("{:.3}", st.mean_occupancy())
+            format!("{:.3}", st.mean_occupancy()),
+            format!("{:.2}", st.mean_queue_wait_ms()),
+            st.peak_queue_depth
         ])?;
     }
     log::info(format!("tab8 -> {}", ctx.out_dir.display()));

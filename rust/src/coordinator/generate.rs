@@ -12,10 +12,15 @@
 //! (continuous batching, see `serve`). `generate_batch` / `complete` are
 //! thin all-rows-at-once wrappers over the same machine.
 //!
-//! This full-reforward decode is the v1 hot path measured in DESIGN.md
-//! §Perf; a KV-cache decode artifact drops into `decode_step` without
-//! touching the row state machine.
+//! Two decode paths share the row state machine (DESIGN.md §2a):
+//! *reforward* runs the full-sequence `logits_*` artifact every step (the
+//! v1 baseline), while *kv-cache* — selected automatically when the
+//! `decode_prefill_*`/`decode_step_*` artifact pair is registered — runs a
+//! (B, 1) incremental forward over device-resident K/V caches owned by
+//! [`super::kvcache::KvDecoder`]. Row state, the scheduler, and every
+//! caller are identical across both.
 
+use super::kvcache::KvDecoder;
 use crate::runtime::{Artifact, Runtime, Session};
 use crate::tensor::{Tensor, TensorStore};
 use crate::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
@@ -23,6 +28,24 @@ use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
 use std::rc::Rc;
+
+/// Which decode implementation a [`Generator`] runs each step on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodePath {
+    /// Full (B, S) reforward through the `logits_*` artifact per token.
+    Reforward,
+    /// (B, 1) incremental forward over donated K/V caches.
+    KvCache,
+}
+
+impl DecodePath {
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodePath::Reforward => "reforward",
+            DecodePath::KvCache => "kvcache",
+        }
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SampleCfg {
@@ -66,6 +89,8 @@ pub struct StepOut {
 
 struct DecodeState {
     sess: Session,
+    /// present iff the decode artifact pair is registered (the kv path)
+    kv: Option<KvDecoder>,
     rows: Vec<Option<RowState>>,
 }
 
@@ -81,18 +106,66 @@ pub struct Generator<'r> {
 }
 
 impl<'r> Generator<'r> {
+    /// Auto path selection: kv-cache when the decode artifact pair for
+    /// this model is registered (and grid-compatible), reforward otherwise.
     pub fn new(rt: &'r Runtime, artifact: &str, stores: &[&TensorStore]) -> Result<Generator<'r>> {
+        Generator::with_path(rt, artifact, stores, None)
+    }
+
+    /// `path`: `None` = auto; `Some(DecodePath::KvCache)` errors when the
+    /// decode artifacts are missing; `Some(DecodePath::Reforward)` forces
+    /// the full-reforward baseline (the §Perf comparison knob).
+    pub fn with_path(
+        rt: &'r Runtime,
+        artifact: &str,
+        stores: &[&TensorStore],
+        path: Option<DecodePath>,
+    ) -> Result<Generator<'r>> {
         let art = rt.load(artifact)?;
         let sess = Session::new(rt, art.clone(), stores)?;
         let vocab = art.meta.config.vocab_size;
-        let rows = (0..art.meta.batch()).map(|_| None).collect();
+        let (b, s) = (art.meta.batch(), art.meta.seq());
+        let model = art.meta.config.name.clone();
+        let kv = match path {
+            Some(DecodePath::Reforward) => None,
+            Some(DecodePath::KvCache) => Some(
+                KvDecoder::try_new(rt, &model, stores)?.with_context(|| {
+                    format!("decode artifact pair for '{model}' not registered")
+                })?,
+            ),
+            None => KvDecoder::try_new(rt, &model, stores)?,
+        };
+        let kv = match kv {
+            // the decode grid must match the logits artifact the Generator
+            // sizes its rows by; on auto, a mismatched pair is ignored
+            Some(kv) if kv.batch_size() != b || kv.seq_len() != s => {
+                anyhow::ensure!(
+                    path != Some(DecodePath::KvCache),
+                    "decode pair grid ({}, {}) != logits grid ({b}, {s})",
+                    kv.batch_size(),
+                    kv.seq_len()
+                );
+                None
+            }
+            other => other,
+        };
+        let rows = (0..b).map(|_| None).collect();
         Ok(Generator {
             rt,
             art,
-            state: RefCell::new(DecodeState { sess, rows }),
+            state: RefCell::new(DecodeState { sess, kv, rows }),
             tk: Tokenizer::new(),
             vocab,
         })
+    }
+
+    /// Which decode implementation `decode_step` runs.
+    pub fn decode_path(&self) -> DecodePath {
+        if self.state.borrow().kv.is_some() {
+            DecodePath::KvCache
+        } else {
+            DecodePath::Reforward
+        }
     }
 
     pub fn batch_size(&self) -> usize {
@@ -125,9 +198,12 @@ impl<'r> Generator<'r> {
 
     /// Admit a prompt into a free row: tokenize (BOS + prompt + SEP),
     /// left-truncate to leave generation room, and install the row state.
-    /// Returns the row index; errors when every row is occupied. Every row
-    /// emits at least one token (`max_new` is clamped to ≥ 1) so a
-    /// finished `StepOut` always reports it and the slot is reclaimable.
+    /// On the kv path this also runs the prefill artifact, filling the
+    /// row's cache (admission cost is the one full forward; every
+    /// subsequent step is (B, 1)). Returns the row index; errors when
+    /// every row is occupied. Every row emits at least one token
+    /// (`max_new` is clamped to ≥ 1) so a finished `StepOut` always
+    /// reports it and the slot is reclaimable.
     pub fn prefill(&self, prompt: &str, cfg: SampleCfg) -> Result<usize> {
         let cfg = SampleCfg { max_new: cfg.max_new.max(1), ..cfg };
         let mut st = self.state.borrow_mut();
@@ -136,15 +212,14 @@ impl<'r> Generator<'r> {
             .iter()
             .position(|r| r.is_none())
             .context("prefill: no free batch row")?;
-        let s = self.seq_len();
         let mut ids = vec![BOS];
         ids.extend(self.tk.encode(prompt));
         ids.push(SEP);
-        let keep = s - cfg.max_new.min(s / 2);
-        if ids.len() > keep {
-            ids = ids[ids.len() - keep..].to_vec();
+        let (ids, start) = truncate_prompt(ids, self.seq_len(), cfg.max_new);
+        if let Some(kv) = st.kv.as_mut() {
+            // fill the cache first: on failure the row stays free
+            kv.admit(self.rt, row, &ids)?;
         }
-        let start = ids.len();
         st.rows[row] = Some(RowState {
             seq: ids,
             start,
@@ -155,10 +230,11 @@ impl<'r> Generator<'r> {
         Ok(row)
     }
 
-    /// One decode step for the whole grid: forward every occupied row's
-    /// sequence, then sample one token per active row *under that row's
-    /// own config*. Returns one event per sampled token; empty when no row
-    /// is actively decoding.
+    /// One decode step for the whole grid, then one sampled token per
+    /// active row *under that row's own config*. Work per token is (B, S)
+    /// on the reforward path, (B, 1) on the kv path — the sampling,
+    /// bookkeeping and events are identical. Returns one event per
+    /// sampled token; empty when no row is actively decoding.
     pub fn decode_step(&self, rng: &mut Rng) -> Result<Vec<StepOut>> {
         let mut st = self.state.borrow_mut();
         let st = &mut *st;
@@ -166,25 +242,45 @@ impl<'r> Generator<'r> {
             return Ok(vec![]);
         }
         let (b, s) = (self.batch_size(), self.seq_len());
-        let mut toks = Vec::with_capacity(b * s);
-        for slot in &st.rows {
-            match slot {
-                Some(r) => toks.extend(crate::tokenizer::pad_to(&r.seq, s)),
-                None => toks.extend(std::iter::repeat(PAD).take(s)),
+        // the kv path yields (B, V) rows, the reforward path (B, S, V)
+        // grids sliced at each row's frontier (borrowed, not copied —
+        // this is the per-token hot path)
+        let kv_logits;
+        let re_out;
+        let (lf, full_grid): (&[f32], bool) = match st.kv.as_mut() {
+            Some(kv) => {
+                let feeds: Vec<Option<(i32, usize)>> = st
+                    .rows
+                    .iter()
+                    .map(|slot| {
+                        slot.as_ref()
+                            .map(|r| (*r.seq.last().expect("row has a frontier"), r.seq.len() - 1))
+                    })
+                    .collect();
+                kv_logits = kv.step(self.rt, &feeds)?;
+                (kv_logits.f32s(), false)
             }
-        }
-        st.sess.set(self.rt, "tokens", &Tensor::from_i32(&[b, s], toks))?;
-        let out = st.sess.run(self.rt)?;
-        let logits = out.get("logits")?;
-        let lf = logits.f32s();
+            None => {
+                let mut toks = Vec::with_capacity(b * s);
+                for slot in &st.rows {
+                    match slot {
+                        Some(r) => toks.extend(crate::tokenizer::pad_to(&r.seq, s)),
+                        None => toks.extend(std::iter::repeat(PAD).take(s)),
+                    }
+                }
+                st.sess.set(self.rt, "tokens", &Tensor::from_i32(&[b, s], toks))?;
+                re_out = st.sess.run(self.rt)?;
+                (re_out.get("logits")?.f32s(), true)
+            }
+        };
         let mut events = vec![];
         for (i, slot) in st.rows.iter_mut().enumerate() {
             let Some(r) = slot.as_mut() else { continue };
             if r.done {
                 continue;
             }
-            let pos = r.seq.len() - 1;
-            let row_logits = &lf[(i * s + pos) * self.vocab..(i * s + pos + 1) * self.vocab];
+            let at = if full_grid { i * s + (r.seq.len() - 1) } else { i };
+            let row_logits = &lf[at * self.vocab..(at + 1) * self.vocab];
             let next = sample_token(row_logits, r.cfg, rng);
             r.seq.push(next);
             r.generated += 1;
@@ -199,10 +295,15 @@ impl<'r> Generator<'r> {
     }
 
     /// Remove a row and return its generated token ids (response segment
-    /// only, trimmed at the first EOS/PAD). Frees the slot for admission.
+    /// only, trimmed at the first EOS/PAD). Frees the slot — and its cache
+    /// slot on the kv path — for admission.
     pub fn take(&self, row: usize) -> Option<Vec<i32>> {
         let mut st = self.state.borrow_mut();
+        let st = &mut *st;
         let r = st.rows.get_mut(row)?.take()?;
+        if let Some(kv) = st.kv.as_mut() {
+            kv.evict(row).expect("occupied row has a cache slot");
+        }
         let tail = &r.seq[r.start..];
         let end = tail
             .iter()
@@ -250,6 +351,24 @@ impl<'r> Generator<'r> {
         }
         Ok(out)
     }
+}
+
+/// Left-truncate an encoded prompt to fit the (S-long) decode grid while
+/// always leaving generation room: at least one slot, at most
+/// `min(max_new, S/2)`. Returns `(ids, start)` where `start` is the
+/// frontier (generation begins at `seq[start]`); the kept ids are the
+/// prompt's *suffix* (recency matters more than the head) and are never
+/// empty, so every admitted row has a frontier token to decode from.
+pub fn truncate_prompt(ids: Vec<i32>, s: usize, max_new: usize) -> (Vec<i32>, usize) {
+    let room = max_new.min(s / 2).max(1);
+    let keep = s.saturating_sub(room).max(1);
+    let ids = if ids.len() > keep {
+        ids[ids.len() - keep..].to_vec()
+    } else {
+        ids
+    };
+    let start = ids.len();
+    (ids, start)
 }
 
 /// Greedy / temperature+top-p sampling from a logits row.
@@ -339,6 +458,61 @@ mod tests {
         };
         for _ in 0..50 {
             assert_eq!(sample_token(&logits, cfg, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn truncate_prompt_exactly_filling_grid_leaves_generation_room() {
+        let s = 32;
+        let ids: Vec<i32> = (0..s as i32).collect();
+        let (kept, start) = truncate_prompt(ids.clone(), s, 8);
+        assert_eq!(start, kept.len());
+        assert_eq!(kept.len(), s - 8, "reserves the full max_new");
+        assert_eq!(kept, ids[8..].to_vec(), "keeps the prompt suffix");
+        assert!(start <= s - 1, "at least one generation slot remains");
+    }
+
+    #[test]
+    fn truncate_prompt_longer_than_grid_keeps_suffix() {
+        let s = 16;
+        let ids: Vec<i32> = (0..100).collect();
+        let (kept, start) = truncate_prompt(ids, s, 4);
+        assert_eq!(kept.len(), s - 4);
+        assert_eq!(kept, (88..100).collect::<Vec<i32>>());
+        assert!(start + 4 <= s, "full budget fits the grid");
+    }
+
+    #[test]
+    fn truncate_prompt_empty_prompt_passes_through() {
+        // an "empty" prompt still carries BOS + SEP from tokenization
+        let (kept, start) = truncate_prompt(vec![BOS, SEP], 32, 8);
+        assert_eq!(kept, vec![BOS, SEP]);
+        assert_eq!(start, 2);
+    }
+
+    #[test]
+    fn truncate_prompt_huge_budget_caps_at_half_grid() {
+        let s = 32;
+        let ids: Vec<i32> = (0..s as i32).collect();
+        let (kept, start) = truncate_prompt(ids, s, 1000);
+        assert_eq!(kept.len(), s / 2, "budget reservation caps at S/2");
+        assert_eq!(start, s / 2);
+    }
+
+    #[test]
+    fn truncate_prompt_degenerate_grids_always_keep_a_frontier_token() {
+        // the old inline logic computed keep = s - min(max_new, s/2),
+        // which for s <= 1 left keep == s (no generation slot) — the
+        // frontier invariant must survive every degenerate combination
+        for s in 1..=4 {
+            for max_new in 0..=4 {
+                let ids: Vec<i32> = (0..10).collect();
+                let (kept, start) = truncate_prompt(ids, s, max_new);
+                assert!(!kept.is_empty(), "s={s} max_new={max_new}");
+                assert_eq!(start, kept.len());
+                assert!(start <= s.saturating_sub(1).max(1),
+                        "s={s} max_new={max_new}: start {start} leaves no room");
+            }
         }
     }
 

@@ -1,0 +1,311 @@
+//! KV-cache decode: per-row cache slot lifecycle over the decode artifact
+//! pair (`decode_prefill_*` / `decode_step_*`), riding the Session
+//! state-donation layer.
+//!
+//! The caches are artifact state: aot.py declares every `new.cache_*`
+//! output bound onto its `cache_*` input (`extra.state_bindings`), so
+//! between decode steps they never leave the step session's slots — PJRT
+//! buffers on the device backend, exactly like optimiser moments in
+//! training artifacts. Admission routes the caches through the prefill
+//! session and back via [`Session::donate_slots`], which moves buffer
+//! handles, not bytes; the only per-token traffic is the (B, 1) frontier
+//! tokens up and the (B, V) logits down.
+//!
+//! Row lifecycle is tracked by [`CacheSlots`] (pure bookkeeping, unit
+//! tested): `admit` installs a row's prompt cache, `advance` records each
+//! decode-step write at the row frontier, `evict` frees the slot after
+//! `take`. A recycled row is safe by construction — its next admission
+//! rewrites the whole cache row under the prefill's `row_onehot` mask.
+
+use crate::runtime::{Runtime, Session};
+use crate::tensor::{Tensor, TensorStore};
+use crate::tokenizer::{pad_to, PAD};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Pure per-row cache bookkeeping: which rows hold a cache, and how many
+/// positions of each row are valid. Kept separate from the sessions so the
+/// lifecycle invariants are unit-testable without artifacts.
+#[derive(Debug, Clone)]
+pub struct CacheSlots {
+    /// cached-position count per row (None = free slot)
+    rows: Vec<Option<usize>>,
+    seq: usize,
+}
+
+impl CacheSlots {
+    pub fn new(batch: usize, seq: usize) -> CacheSlots {
+        CacheSlots { rows: vec![None; batch], seq }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Cached positions of an occupied row.
+    pub fn len(&self, row: usize) -> Option<usize> {
+        self.rows.get(row).copied().flatten()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.rows.iter().flatten().count()
+    }
+
+    /// Claim a free row for a prompt of `len` cached positions.
+    pub fn admit(&mut self, row: usize, len: usize) -> Result<()> {
+        let slot = self
+            .rows
+            .get_mut(row)
+            .with_context(|| format!("kvcache: row {row} out of range"))?;
+        ensure!(slot.is_none(), "kvcache: admit into occupied row {row}");
+        ensure!(len >= 1, "kvcache: admit of empty prompt into row {row}");
+        ensure!(
+            len <= self.seq,
+            "kvcache: prompt of {len} exceeds cache capacity {}",
+            self.seq
+        );
+        *slot = Some(len);
+        Ok(())
+    }
+
+    /// Record a decode-step write at `pos`. Writes must land at the row
+    /// frontier (`pos == len`, growing the cache) or rewrite the last
+    /// cached position (`pos == len - 1`, the first step after admission);
+    /// anything else would leave garbage gaps.
+    pub fn advance(&mut self, row: usize, pos: usize) -> Result<()> {
+        let len = self
+            .rows
+            .get_mut(row)
+            .with_context(|| format!("kvcache: row {row} out of range"))?
+            .as_mut()
+            .with_context(|| format!("kvcache: advance on free row {row}"))?;
+        ensure!(
+            pos + 1 == *len || pos == *len,
+            "kvcache: write at {pos} away from row {row} frontier {len}"
+        );
+        ensure!(pos < self.seq, "kvcache: write at {pos} beyond capacity {}", self.seq);
+        *len = (*len).max(pos + 1);
+        Ok(())
+    }
+
+    /// Free a row after `take`; the cache contents become garbage and are
+    /// fully rewritten by the next admission.
+    pub fn evict(&mut self, row: usize) -> Result<()> {
+        let slot = self
+            .rows
+            .get_mut(row)
+            .with_context(|| format!("kvcache: row {row} out of range"))?;
+        ensure!(slot.is_some(), "kvcache: evict of free row {row}");
+        *slot = None;
+        Ok(())
+    }
+}
+
+/// The executable decode subsystem: the prefill and step sessions plus the
+/// cache lifecycle. Constructed by [`crate::coordinator::generate::Generator`]
+/// when the decode artifact pair is registered for its model.
+pub struct KvDecoder {
+    prefill: Session,
+    step: Session,
+    cache_names: Vec<String>,
+    pub slots: CacheSlots,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl KvDecoder {
+    /// Load the decode artifact pair for `model`; `Ok(None)` when either
+    /// artifact is absent (the caller falls back to full reforward).
+    pub fn try_new(
+        rt: &Runtime,
+        model: &str,
+        stores: &[&TensorStore],
+    ) -> Result<Option<KvDecoder>> {
+        let pname = format!("decode_prefill_{model}");
+        let sname = format!("decode_step_{model}");
+        let Ok(pa) = rt.load(&pname) else { return Ok(None) };
+        let Ok(sa) = rt.load(&sname) else { return Ok(None) };
+        let (b, s) = (sa.meta.batch(), sa.meta.seq());
+        ensure!(
+            pa.meta.batch() == b && pa.meta.seq() == s,
+            "decode pair grid mismatch: {pname} ({}, {}) vs {sname} ({b}, {s})",
+            pa.meta.batch(),
+            pa.meta.seq()
+        );
+        let cache_names = sa.meta.name_list("cache_names");
+        ensure!(!cache_names.is_empty(), "{sname}: meta declares no cache_names");
+        // slot donation moves raw buffers between the sessions, so the two
+        // artifacts must declare bitwise-identical cache tensors
+        for n in &cache_names {
+            let ps = pa.meta.input_spec(n)?;
+            let ss = sa.meta.input_spec(n)?;
+            ensure!(
+                ps.shape == ss.shape && ps.dtype == ss.dtype,
+                "cache '{n}' differs between {pname} and {sname}"
+            );
+        }
+        let vocab = sa.meta.config.vocab_size;
+        let prefill = Session::new(rt, pa, stores)?;
+        let step = Session::new(rt, sa, stores)?;
+        Ok(Some(KvDecoder {
+            prefill,
+            step,
+            cache_names,
+            slots: CacheSlots::new(b, s),
+            batch: b,
+            seq: s,
+            vocab,
+        }))
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    /// Admit a row: run the prefill artifact over its sequence, writing
+    /// this row's cache while every other row's passes through untouched
+    /// (mid-decode admission never perturbs in-flight rows), then donate
+    /// the caches back into the step session.
+    pub fn admit(&mut self, rt: &Runtime, row: usize, seq: &[i32]) -> Result<()> {
+        ensure!(row < self.batch, "kvcache: admit into out-of-range row {row}");
+        ensure!(
+            !seq.is_empty() && seq.len() <= self.seq,
+            "kvcache: prompt of {} tokens does not fit the (·, {}) cache",
+            seq.len(),
+            self.seq
+        );
+        let (b, s) = (self.batch, self.seq);
+        let mut onehot = vec![0.0f32; b];
+        onehot[row] = 1.0;
+        let Self { prefill, step, cache_names, .. } = self;
+        // stage the row inputs before touching the caches, so an invalid
+        // input cannot strand them mid-handoff
+        prefill.set(rt, "tokens", &Tensor::from_i32(&[1, s], pad_to(seq, s)))?;
+        prefill.set(rt, "last_pos", &Tensor::from_i32(&[], vec![(seq.len() - 1) as i32]))?;
+        prefill.set(rt, "row_onehot", &Tensor::from_f32(&[b], onehot))?;
+        // between calls the caches live in the step session; route them
+        // through the prefill session for this admission
+        step.donate_slots(prefill, cache_names)?;
+        // on success the cache outputs rebind onto the prefill session's
+        // own input slots; on failure the slots still hold the pre-run
+        // caches — donate back either way so a failed admission leaves
+        // every in-flight row's cache intact and the decoder usable
+        let run = prefill.run(rt);
+        prefill.donate_slots(step, cache_names)?;
+        run?;
+        self.slots.admit(row, seq.len())
+    }
+
+    /// One incremental step over the whole grid: feeds each occupied row's
+    /// frontier `(token, pos)` (free rows get dummies whose cache writes
+    /// are rewritten at their next admission) and returns next-token
+    /// logits (B, V) on the host.
+    pub fn step(&mut self, rt: &Runtime, feeds: &[Option<(i32, usize)>]) -> Result<Tensor> {
+        ensure!(
+            feeds.len() == self.batch,
+            "kvcache: {} feeds for batch {}",
+            feeds.len(),
+            self.batch
+        );
+        let mut toks = Vec::with_capacity(self.batch);
+        let mut pos = Vec::with_capacity(self.batch);
+        for (row, feed) in feeds.iter().enumerate() {
+            match feed {
+                Some((t, p)) => {
+                    self.slots.advance(row, *p)?;
+                    toks.push(*t);
+                    pos.push(*p as i32);
+                }
+                None => {
+                    ensure!(
+                        self.slots.len(row).is_none(),
+                        "kvcache: occupied row {row} fed no frontier token"
+                    );
+                    toks.push(PAD);
+                    pos.push(0);
+                }
+            }
+        }
+        self.step.set(rt, "tokens", &Tensor::from_i32(&[self.batch, 1], toks))?;
+        self.step.set(rt, "pos", &Tensor::from_i32(&[self.batch], pos))?;
+        let out = self.step.run(rt)?;
+        let logits = out.get("logits")?;
+        if logits.shape != [self.batch, self.vocab] {
+            bail!(
+                "kvcache: step logits shape {:?}, want {:?}",
+                logits.shape,
+                [self.batch, self.vocab]
+            );
+        }
+        Ok(logits.clone())
+    }
+
+    /// Free a row's cache slot after `take`.
+    pub fn evict(&mut self, row: usize) -> Result<()> {
+        self.slots.evict(row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_admit_advance_evict_tracks_positions() {
+        let mut cs = CacheSlots::new(2, 8);
+        assert_eq!(cs.occupied(), 0);
+        cs.admit(0, 3).unwrap();
+        assert_eq!(cs.len(0), Some(3));
+        // first step rewrites the frontier token's position (pos = len-1)
+        cs.advance(0, 2).unwrap();
+        assert_eq!(cs.len(0), Some(3));
+        // subsequent steps grow the cache (pos = len)
+        cs.advance(0, 3).unwrap();
+        cs.advance(0, 4).unwrap();
+        assert_eq!(cs.len(0), Some(5));
+        cs.evict(0).unwrap();
+        assert_eq!(cs.len(0), None);
+        assert_eq!(cs.occupied(), 0);
+    }
+
+    #[test]
+    fn admit_rejects_occupied_row_and_oversized_prompt() {
+        let mut cs = CacheSlots::new(2, 8);
+        cs.admit(1, 4).unwrap();
+        assert!(cs.admit(1, 2).is_err(), "double admit");
+        assert!(cs.admit(0, 9).is_err(), "prompt longer than capacity");
+        assert!(cs.admit(0, 0).is_err(), "empty prompt");
+        assert!(cs.admit(2, 1).is_err(), "row out of range");
+    }
+
+    #[test]
+    fn advance_rejects_gaps_free_rows_and_overflow() {
+        let mut cs = CacheSlots::new(1, 6);
+        assert!(cs.advance(0, 0).is_err(), "free row");
+        cs.admit(0, 2).unwrap();
+        assert!(cs.advance(0, 0).is_err(), "behind the frontier");
+        assert!(cs.advance(0, 3).is_err(), "gap past the frontier");
+        cs.advance(0, 2).unwrap();
+        cs.advance(0, 3).unwrap();
+        cs.advance(0, 4).unwrap();
+        cs.advance(0, 5).unwrap();
+        assert_eq!(cs.len(0), Some(6));
+        assert!(cs.advance(0, 6).is_err(), "write beyond capacity");
+    }
+
+    #[test]
+    fn recycling_a_row_requires_evict_then_admit() {
+        let mut cs = CacheSlots::new(1, 8);
+        cs.admit(0, 5).unwrap();
+        assert!(cs.evict(0).is_ok());
+        assert!(cs.evict(0).is_err(), "double evict");
+        // the recycled row starts from the new prompt's length, not the
+        // old frontier
+        cs.admit(0, 2).unwrap();
+        assert_eq!(cs.len(0), Some(2));
+    }
+}

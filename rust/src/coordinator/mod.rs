@@ -7,6 +7,7 @@ pub mod downstream;
 pub mod evaluate;
 pub mod experiments;
 pub mod generate;
+pub mod kvcache;
 pub mod pipeline;
 pub mod train;
 

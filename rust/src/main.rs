@@ -260,7 +260,13 @@ fn cmd_generate(rt: &Runtime, args: &Args) -> Result<()> {
 fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
     let base = args.get_or("base", "tiny");
     let (params, lora) = load_weights(rt, args, base)?;
-    let gen = Generator::new(rt, &format!("logits_{base}"), &[&params, &lora])?;
+    let path = match args.get_or("decode-path", "auto") {
+        "reforward" => Some(loram::coordinator::generate::DecodePath::Reforward),
+        "kvcache" => Some(loram::coordinator::generate::DecodePath::KvCache),
+        _ => None,
+    };
+    let gen = Generator::with_path(rt, &format!("logits_{base}"), &[&params, &lora], path)?;
+    println!("decode path: {}", gen.decode_path().name());
     let mut server = Server::new(gen, 0);
     let n = args.get_usize("requests", 8);
     let mut ig = loram::data::instruct::InstructGen::new(Dataset::Hermes, 1, 1);
@@ -287,12 +293,14 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
     let st = &server.stats;
     println!(
         "served {} requests in {dt:.2}s — {:.1} tok/s decode, mean ttft {:.1} ms, \
-         {} decode steps (occupancy {:.2})",
+         {} decode steps (occupancy {:.2}, queue wait {:.1} ms, peak depth {})",
         st.served,
         st.tokens_per_sec(),
         st.mean_ttft_ms(),
         st.decode_steps,
-        st.mean_occupancy()
+        st.mean_occupancy(),
+        st.mean_queue_wait_ms(),
+        st.peak_queue_depth
     );
     Ok(())
 }

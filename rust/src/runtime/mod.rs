@@ -26,7 +26,7 @@ pub mod meta;
 pub mod session;
 
 pub use meta::{ArtifactMeta, IoSpec, ModelCfg};
-pub use session::{host_path_forced, BackendKind, Session};
+pub use session::{host_path_forced, BackendKind, Session, SlotValue};
 
 /// The PJRT client plus a compile cache over loaded artifacts.
 pub struct Runtime {

@@ -59,6 +59,16 @@ enum Slots {
     Device(Vec<Option<xla::PjRtBuffer>>),
 }
 
+/// A value taken out of a session slot for donation into another session:
+/// a host tensor or a device-resident PJRT buffer. Moving a `SlotValue`
+/// between sessions moves the handle only — on the device backend no bytes
+/// leave the device (the KV-cache handoff between the decode prefill and
+/// step sessions rides on this).
+pub enum SlotValue {
+    Host(Tensor),
+    Device(xla::PjRtBuffer),
+}
+
 pub struct Session {
     pub art: Rc<Artifact>,
     name_to_slot: HashMap<String, usize>,
@@ -308,6 +318,61 @@ impl Session {
             out.insert(n.clone(), self.fetch(rt, n)?);
         }
         Ok(out)
+    }
+
+    /// Take a slot's current value out of the session; the slot becomes
+    /// unset and must be re-`set`/`put_slot` before the next `run`.
+    /// Zero-copy on the device backend (the buffer handle moves).
+    pub fn take_slot(&mut self, name: &str) -> Result<SlotValue> {
+        let slot = *self
+            .name_to_slot
+            .get(name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.art.meta.name))?;
+        match &mut self.slots {
+            Slots::Host(s) => s[slot].take().map(SlotValue::Host),
+            Slots::Device(s) => s[slot].take().map(SlotValue::Device),
+        }
+        .with_context(|| format!("input '{name}' not set"))
+    }
+
+    /// Install a value taken from another session. Backends must match,
+    /// and (on the host backend, where the value carries its shape) the
+    /// receiving input must declare the same shape/dtype; device handoffs
+    /// are validated by the caller against the two artifacts' metas.
+    pub fn put_slot(&mut self, name: &str, v: SlotValue) -> Result<()> {
+        let slot = *self
+            .name_to_slot
+            .get(name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.art.meta.name))?;
+        let spec = &self.art.meta.inputs[slot];
+        match (&mut self.slots, v) {
+            (Slots::Host(s), SlotValue::Host(t)) => {
+                if t.shape != spec.shape || t.dtype() != spec.dtype {
+                    bail!(
+                        "put_slot '{name}': got {:?}/{:?}, want {:?}/{:?}",
+                        t.shape, t.dtype(), spec.shape, spec.dtype
+                    );
+                }
+                s[slot] = Some(t);
+            }
+            (Slots::Device(s), SlotValue::Device(b)) => {
+                s[slot] = Some(b);
+            }
+            _ => bail!("put_slot '{name}': host/device backend mismatch"),
+        }
+        Ok(())
+    }
+
+    /// Donate named slots into `dst` — the state handoff between the two
+    /// artifacts of one subsystem (e.g. decode prefill -> decode step
+    /// caches). No transfer metrics accrue: nothing crosses the host
+    /// boundary on the device backend.
+    pub fn donate_slots(&mut self, dst: &mut Session, names: &[String]) -> Result<()> {
+        for n in names {
+            let v = self.take_slot(n)?;
+            dst.put_slot(n, v)?;
+        }
+        Ok(())
     }
 }
 

@@ -112,6 +112,10 @@ pub struct ServerStats {
     pub total_latency_ms: f64,
     /// summed per-step (in-flight rows / batch size)
     pub total_batch_occupancy: f64,
+    /// summed enqueue → admission wait over admitted requests
+    pub total_queue_wait_ms: f64,
+    /// most requests ever waiting in the queue at once
+    pub peak_queue_depth: usize,
 }
 
 impl ServerStats {
@@ -132,6 +136,12 @@ impl ServerStats {
 
     pub fn mean_occupancy(&self) -> f64 {
         self.total_batch_occupancy / self.decode_steps.max(1) as f64
+    }
+
+    /// Mean enqueue → admission wait (queue pressure; 0 when every request
+    /// found a free row immediately).
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        self.total_queue_wait_ms / self.admitted.max(1) as f64
     }
 }
 
@@ -155,6 +165,7 @@ impl<E: DecodeEngine> Server<E> {
             Request { id, prompt: prompt.into(), cfg },
             Instant::now(),
         ));
+        self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
         id
     }
 
@@ -181,6 +192,7 @@ impl<E: DecodeEngine> Server<E> {
             }
             *slot = Some(InFlight { id: req.id, enqueued: t0, ttft_ms: None });
             self.stats.admitted += 1;
+            self.stats.total_queue_wait_ms += t0.elapsed().as_secs_f64() * 1e3;
         }
         Ok(())
     }
@@ -407,6 +419,31 @@ mod tests {
             assert!(r.ttft_ms <= r.latency_ms);
             assert!(r.tokens > 0);
         }
+    }
+
+    #[test]
+    fn queue_pressure_stats_track_wait_and_peak_depth() {
+        let mut srv = Server::new(SimEngine::new(2), 0);
+        for i in 0..5 {
+            srv.enqueue(format!("req{i}"), cfg(0.9, 2));
+        }
+        // nothing admitted yet: all five are waiting at once
+        assert_eq!(srv.stats.peak_queue_depth, 5);
+        assert_eq!(srv.stats.total_queue_wait_ms, 0.0);
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 5);
+        assert_eq!(srv.stats.admitted, 5);
+        // every admission recorded a (non-negative) wait; the peak is a
+        // high-water mark, not reset by the drain
+        assert!(srv.stats.mean_queue_wait_ms() >= 0.0);
+        assert!(srv.stats.total_queue_wait_ms >= 0.0);
+        assert_eq!(srv.stats.peak_queue_depth, 5);
+        // an unloaded server records no queue pressure
+        let mut idle = Server::new(SimEngine::new(2), 0);
+        idle.enqueue("solo", cfg(0.9, 1));
+        assert_eq!(idle.stats.peak_queue_depth, 1);
+        idle.drain().unwrap();
+        assert_eq!(idle.stats.admitted, 1);
     }
 
     #[test]

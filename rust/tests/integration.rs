@@ -6,7 +6,7 @@
 //! threads, so each test opens its own runtime.
 
 use loram::coordinator::evaluate::{test_sequences, Evaluator};
-use loram::coordinator::generate::{Generator, SampleCfg};
+use loram::coordinator::generate::{DecodePath, Generator, SampleCfg};
 use loram::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
 use loram::coordinator::train::TrainSession;
 use loram::data::instruct::Dataset;
@@ -24,6 +24,26 @@ fn runtime() -> Runtime {
         "artifacts".to_string()
     });
     Runtime::new(dir).expect("PJRT runtime (did you run `make artifacts`?)")
+}
+
+/// Like [`runtime`] but for tests that *skip* (rather than fail) when the
+/// runtime or the artifacts they need are unavailable.
+fn try_runtime(needed: &[&str]) -> Option<Runtime> {
+    let dir = std::env::var("LORAM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let rt = match Runtime::new(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: no PJRT runtime ({e})");
+            return None;
+        }
+    };
+    for name in needed {
+        if let Err(e) = rt.load(name) {
+            eprintln!("skipping: artifact '{name}' unavailable ({e})");
+            return None;
+        }
+    }
+    Some(rt)
 }
 
 fn tmp_runs() -> std::path::PathBuf {
@@ -383,6 +403,94 @@ fn server_admits_new_request_mid_decode() {
     );
     assert!(srv.stats.mean_ttft_ms() >= 0.0);
     assert!(srv.stats.tokens_per_sec() > 0.0);
+}
+
+const DECODE_ARTS: &[&str] = &["logits_tiny", "decode_prefill_tiny", "decode_step_tiny"];
+
+#[test]
+fn kvcache_and_reforward_greedy_streams_match() {
+    // The acceptance contract of the kv decode subsystem: greedy decode
+    // over the same prompts yields the *identical* token stream whether
+    // each step reforwards the full (B, S) grid or runs the (B, 1)
+    // incremental step over donated caches.
+    let Some(rt) = try_runtime(DECODE_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 30);
+    let lora = init_lora(&cfg, 31);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6 };
+    let prompts = vec!["Q: 2+3=".to_string(), "The quick brown fox".to_string()];
+    let mut outs = vec![];
+    for path in [DecodePath::Reforward, DecodePath::KvCache] {
+        let gen =
+            Generator::with_path(&rt, "logits_tiny", &[&params, &lora], Some(path)).unwrap();
+        assert_eq!(gen.decode_path(), path);
+        let mut rng = Rng::new(0);
+        outs.push(gen.generate_batch(&prompts, greedy, &mut rng).unwrap());
+    }
+    assert_eq!(
+        outs[0], outs[1],
+        "kv-cache decode diverged from the full-reforward stream"
+    );
+}
+
+#[test]
+fn kvcache_row_recycling_does_not_leak_stale_cache() {
+    // `take` then `prefill` reuses the same batch row; the recycled row's
+    // output must match a fresh generator's output for the same prompt —
+    // i.e. no K/V from the previous occupant may survive admission.
+    let Some(rt) = try_runtime(DECODE_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 32);
+    let lora = init_lora(&cfg, 33);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 5 };
+    let kv = Some(DecodePath::KvCache);
+    let gen = Generator::with_path(&rt, "logits_tiny", &[&params, &lora], kv).unwrap();
+    let mut rng = Rng::new(1);
+    // first occupant of row 0: a long, distinctive prompt
+    let first = gen
+        .generate_batch(&["AAAAAAAA BBBB CCCC DDDD".to_string()], greedy, &mut rng)
+        .unwrap();
+    // recycle row 0 for a different prompt
+    let reused = gen
+        .generate_batch(&["Q: 2+3=".to_string()], greedy, &mut rng)
+        .unwrap();
+    // reference: the same prompt through a never-used generator
+    let fresh_gen = Generator::with_path(&rt, "logits_tiny", &[&params, &lora], kv).unwrap();
+    let fresh = fresh_gen
+        .generate_batch(&["Q: 2+3=".to_string()], greedy, &mut rng)
+        .unwrap();
+    assert_eq!(reused, fresh, "stale cache leaked into the recycled row");
+    let _ = first;
+}
+
+#[test]
+fn kvcache_serves_mixed_configs_through_scheduler() {
+    // continuous batching over the kv path: mid-decode admission triggers
+    // a prefill into a freed row while other rows keep their caches
+    let Some(rt) = try_runtime(DECODE_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 34);
+    let lora = init_lora(&cfg, 35);
+    let gen = Generator::with_path(
+        &rt,
+        "logits_tiny",
+        &[&params, &lora],
+        Some(DecodePath::KvCache),
+    )
+    .unwrap();
+    let b = gen.batch_size();
+    let mut srv = Server::new(gen, 3);
+    for i in 0..b + 2 {
+        srv.enqueue(
+            format!("Q: {i}+{i}="),
+            SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 2 + i % 3 },
+        );
+    }
+    let rs = srv.drain().unwrap();
+    assert_eq!(rs.len(), b + 2);
+    assert_eq!(srv.stats.served, b + 2);
+    assert!(srv.stats.peak_queue_depth >= 2, "overflow requests queued");
+    assert!(srv.stats.mean_queue_wait_ms() >= 0.0);
 }
 
 #[test]
