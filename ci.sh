@@ -28,6 +28,15 @@ if python3 -c "import jax, pytest" >/dev/null 2>&1; then
     fi
     # pytest must run from python/ so `compile` is importable
     (cd python && run python3 -m pytest "${PYTEST_ARGS[@]}")
+    # meta-schema validation: every suite meta (and any emitted artifact
+    # metas) must parse under runtime::meta's python mirror — adapter slot
+    # groups included
+    META_ARGS=()
+    if [ -d artifacts ]; then
+        META_ARGS=(--dir ../artifacts)
+    fi
+    # ${arr[@]+...} keeps `set -u` happy on bash < 4.4 when the array is empty
+    (cd python && run python3 -m compile.meta_check ${META_ARGS[@]+"${META_ARGS[@]}"})
 else
     echo "WARN: python3 with jax+pytest not available; skipping python/tests" >&2
 fi

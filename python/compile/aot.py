@@ -64,23 +64,29 @@ class Artifact:
         self.cfg = cfg
         self.extra = extra or {}
 
-    def emit(self, out_dir):
-        t0 = time.time()
+    def meta_dict(self):
+        """The `.meta.json` content, computed by abstract evaluation only —
+        no HLO lowering. Shared by `emit` and the meta_check validator."""
         specs = [s for _, s in self.in_specs]
-        lowered = jax.jit(self.fn).lower(*specs)
-        text = to_hlo_text(lowered)
         outs = jax.eval_shape(self.fn, *specs)
         if not isinstance(outs, (tuple, list)):
             outs = (outs,)
         assert len(outs) == len(self.out_names), \
             (self.name, len(outs), len(self.out_names))
-        meta = {
+        return {
             "name": self.name,
             "config": self.cfg.to_dict(),
             "inputs": [_io_entry(n, s) for n, s in self.in_specs],
             "outputs": [_io_entry(n, s) for n, s in zip(self.out_names, outs)],
             "extra": self.extra,
         }
+
+    def emit(self, out_dir):
+        t0 = time.time()
+        meta = self.meta_dict()
+        specs = [s for _, s in self.in_specs]
+        lowered = jax.jit(self.fn).lower(*specs)
+        text = to_hlo_text(lowered)
         with open(os.path.join(out_dir, f"{self.name}.hlo.txt"), "w") as f:
             f.write(text)
         with open(os.path.join(out_dir, f"{self.name}.meta.json"), "w") as f:
@@ -258,6 +264,88 @@ def decode_artifacts(cfg, b=LOGITS_B, s=LOGITS_S):
     return [decode_prefill_artifact(cfg, b, s), decode_step_artifact(cfg, b, s)]
 
 
+# ---------------------------------------------------------------------------
+# Multi-adapter serving artifacts (DESIGN.md §2c)
+# ---------------------------------------------------------------------------
+
+def _stacked_lora_specs(cfg, n_adapters):
+    return [(k, _spec(shp))
+            for k, shp in M.stacked_lora_shapes(cfg, n_adapters).items()]
+
+
+def _adapter_group(n_adapters, lnames):
+    """The adapter slot-group declaration: `adapter_ix` gathers along the
+    leading axis of every member tensor; the Session's `put_group` uploads
+    one member row per registered adapter and re-uploads only dirty slots.
+    Members are zero-init-able (a zero adapter is the identity), so a
+    session with no registered adapters still serves the base model."""
+    return {"slot_groups": {"adapter": {
+        "input": "adapter_ix", "size": n_adapters, "members": lnames}}}
+
+
+def logits_adapters_artifact(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S):
+    fn, pnames, lnames = M.make_logits_adapters(cfg, n_adapters)
+    ins = [("tokens", _spec((b, s), jnp.int32)),
+           ("adapter_ix", _spec((b,), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _stacked_lora_specs(cfg, n_adapters)
+    return Artifact(f"logits_{cfg.name}_a{n_adapters}", fn, ins, ["logits"],
+                    cfg, {"kind": "logits", "batch": b, "seq": s,
+                          "param_names": pnames, "lora_names": lnames,
+                          "state_zero_init": lnames,
+                          **_adapter_group(n_adapters, lnames)})
+
+
+def decode_prefill_adapters_artifact(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S):
+    """Adapter-stacked admission: scalar `adapter_ix` names the slot the
+    admitted row decodes under; caches stay donated state."""
+    fn, pnames, lnames, cnames = M.make_decode_prefill_adapters(cfg, n_adapters)
+    ins = [("tokens", _spec((1, s), jnp.int32)),
+           ("last_pos", _spec((), jnp.int32)),
+           ("row_onehot", _spec((b,))),
+           ("adapter_ix", _spec((), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _stacked_lora_specs(cfg, n_adapters)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    extra = {"kind": "decode_prefill", "batch": b, "seq": s,
+             "param_names": pnames, "lora_names": lnames,
+             "cache_names": cnames, **_cache_threading(cnames),
+             **_adapter_group(n_adapters, lnames)}
+    extra["state_zero_init"] = list(cnames) + list(lnames)
+    return Artifact(f"decode_prefill_{cfg.name}_a{n_adapters}", fn, ins, outs,
+                    cfg, extra)
+
+
+def decode_step_adapters_artifact(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S):
+    """Adapter-stacked decode step: per-row `adapter_ix (B,)` routes each
+    row's LoRA contribution through its own slot every step."""
+    fn, pnames, lnames, cnames = M.make_decode_step_adapters(cfg, n_adapters)
+    ins = [("tokens", _spec((b, 1), jnp.int32)),
+           ("pos", _spec((b,), jnp.int32)),
+           ("adapter_ix", _spec((b,), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _stacked_lora_specs(cfg, n_adapters)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    extra = {"kind": "decode_step", "batch": b, "seq": s,
+             "param_names": pnames, "lora_names": lnames,
+             "cache_names": cnames, **_cache_threading(cnames),
+             **_adapter_group(n_adapters, lnames)}
+    extra["state_zero_init"] = list(cnames) + list(lnames)
+    return Artifact(f"decode_step_{cfg.name}_a{n_adapters}", fn, ins, outs,
+                    cfg, extra)
+
+
+def adapter_artifacts(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S):
+    """The multi-adapter serving trio: stacked logits + stacked decode pair,
+    all sharing one adapter slot group so the scheduler can mix adapters in
+    a single batch on either decode path."""
+    return [logits_adapters_artifact(cfg, n_adapters, b, s),
+            decode_prefill_adapters_artifact(cfg, n_adapters, b, s),
+            decode_step_adapters_artifact(cfg, n_adapters, b, s)]
+
+
 def grad_imp_artifact(cfg, b=TRAIN_B, s=TRAIN_S):
     fn, pnames = M.make_grad_importance(cfg)
     ins = [("tokens", _spec((b, s + 1), jnp.int32)),
@@ -319,6 +407,9 @@ def build_suite(suite: str):
                  kernel_demo_artifact(True),
                  kernel_demo_artifact(False)]
         arts += decode_artifacts(tiny, b=2, s=32)
+        # multi-adapter serving trio: batch 4 so a single mixed batch can
+        # hold >= 3 distinct adapters (the acceptance scenario)
+        arts += adapter_artifacts(tiny, n_adapters=3, b=4, s=32)
     if suite == "std":
         # LLaMA-2 proxy herd --------------------------------------------
         for nm in ("l7b", "l13b", "l70b"):
@@ -326,6 +417,8 @@ def build_suite(suite: str):
             arts += [pretrain_artifact(cfg), sft_artifact(cfg),
                      eval_artifact(cfg), logits_artifact(cfg)]
             arts += decode_artifacts(cfg)
+        # production serving shape: one frozen base, many task adapters
+        arts += adapter_artifacts(P["l13b"], n_adapters=4)
         arts += [grad_imp_artifact(P["l13b"]), grad_imp_artifact(P["l70b"])]
         # 13B: structured pruned (rand/stru share shapes) + masked variants
         c13p = pruned("l13b", 0.65)

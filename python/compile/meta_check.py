@@ -1,0 +1,197 @@
+"""Meta-schema validation: the python mirror of `rust/src/runtime/meta.rs`
+(+ the Session binding/slot-group resolution rules in `session.rs`).
+
+The Rust runtime is driven entirely by each artifact's `.meta.json`; this
+module re-states the rules the Rust side enforces so CI can reject a
+misdeclared meta *before* any Rust build exists (this container has no
+cargo) and without lowering HLO:
+
+* required fields: name, config (ModelCfg numeric fields), inputs, outputs
+* every io entry carries name / shape / dtype in {float32, int32}
+* `extra.state_bindings`: source is an output, target is an input,
+  shapes/dtypes identical; every `new.*`/`new_m.*`/`new_v.*` output bound
+* `extra.state_zero_init`: every name is an input
+* `extra.slot_groups` (the adapter group): the declared gather input
+  exists (int32), every member is an input whose leading dim == size,
+  and members do not repeat across groups
+
+Usage:
+    python -m compile.meta_check              # validate smoke+std suites
+    python -m compile.meta_check --dir DIR    # + every *.meta.json in DIR
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# mirror of meta.rs::ModelCfg::from_json required numeric fields
+CONFIG_FIELDS = ("vocab_size", "d_model", "n_layers", "n_heads",
+                 "n_kv_heads", "d_ff", "max_seq", "lora_rank", "lora_alpha")
+DTYPES = ("float32", "int32")
+STATE_PREFIXES = ("new.", "new_m.", "new_v.")
+
+
+def _io_map(entries, what, errs):
+    out = {}
+    for e in entries:
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            errs.append(f"{what} entry without a name: {e!r}")
+            continue
+        if name in out:
+            errs.append(f"duplicate {what} '{name}'")
+        shape = e.get("shape")
+        if not isinstance(shape, list) or \
+                not all(isinstance(d, int) and d >= 0 for d in shape):
+            errs.append(f"{what} '{name}': bad shape {shape!r}")
+            shape = []
+        dtype = e.get("dtype", "float32")
+        if dtype not in DTYPES:
+            errs.append(f"{what} '{name}': unsupported dtype {dtype!r}")
+        out[name] = (tuple(shape), dtype)
+    return out
+
+
+def check_meta(meta: dict) -> list:
+    """Return a list of schema violations (empty = valid under the Rust
+    runtime's rules)."""
+    errs = []
+    if not isinstance(meta.get("name"), str) or not meta["name"]:
+        errs.append("missing meta name")
+    cfg = meta.get("config")
+    if not isinstance(cfg, dict):
+        errs.append("missing config")
+    else:
+        for k in CONFIG_FIELDS:
+            if not isinstance(cfg.get(k), (int, float)):
+                errs.append(f"config field {k} missing or non-numeric")
+        plan = cfg.get("layer_plan")
+        if plan is not None:
+            if not isinstance(plan, list) or any(
+                    not isinstance(r, list) or len(r) != 3 for r in plan):
+                errs.append("layer_plan rows must be [h, kv, ff] triples")
+            elif isinstance(cfg.get("n_layers"), (int, float)) and \
+                    len(plan) != int(cfg["n_layers"]):
+                errs.append(f"layer_plan has {len(plan)} rows for "
+                            f"{int(cfg['n_layers'])} layers")
+    for key in ("inputs", "outputs"):
+        if not isinstance(meta.get(key), list):
+            errs.append(f"missing {key}")
+            return errs
+    inputs = _io_map(meta["inputs"], "input", errs)
+    outputs = _io_map(meta["outputs"], "output", errs)
+    extra = meta.get("extra") or {}
+    if not isinstance(extra, dict):
+        errs.append("extra must be an object")
+        return errs
+
+    # ---- state bindings (session.rs::resolve_bindings) -------------------
+    bindings = extra.get("state_bindings", {})
+    if not isinstance(bindings, dict):
+        errs.append("state_bindings must be an object")
+        bindings = {}
+    for out_name, in_name in bindings.items():
+        if out_name not in outputs:
+            errs.append(f"state binding source '{out_name}' is not an output")
+            continue
+        if in_name not in inputs:
+            errs.append(f"state binding target '{in_name}' is not an input")
+            continue
+        if outputs[out_name] != inputs[in_name]:
+            errs.append(f"binding {out_name} -> {in_name}: "
+                        f"{outputs[out_name]} vs {inputs[in_name]}")
+    for out_name in outputs:
+        if out_name.startswith(STATE_PREFIXES):
+            # the naming-convention fallback only fires when the meta
+            # declares no bindings at all (old metas); a declared map must
+            # cover every state-style output
+            if bindings and out_name not in bindings:
+                errs.append(f"state output '{out_name}' has no input binding")
+
+    # ---- zero-init (session.rs zero-fill) --------------------------------
+    for name in extra.get("state_zero_init", []):
+        if name not in inputs:
+            errs.append(f"state_zero_init '{name}' is not an input")
+
+    # ---- slot groups (the adapter group; session.rs::resolve_groups) -----
+    groups = extra.get("slot_groups", {})
+    if not isinstance(groups, dict):
+        errs.append("slot_groups must be an object")
+        groups = {}
+    seen_members = set()
+    for gname, g in groups.items():
+        if not isinstance(g, dict):
+            errs.append(f"slot group '{gname}' must be an object")
+            continue
+        size = g.get("size")
+        if not isinstance(size, int) or size < 1:
+            errs.append(f"slot group '{gname}': bad size {size!r}")
+            continue
+        gather = g.get("input")
+        if gather not in inputs:
+            errs.append(f"slot group '{gname}': gather input {gather!r} "
+                        "is not an input")
+        elif inputs[gather][1] != "int32":
+            errs.append(f"slot group '{gname}': gather input '{gather}' "
+                        "must be int32")
+        members = g.get("members", [])
+        if not isinstance(members, list) or not members:
+            errs.append(f"slot group '{gname}': empty member list")
+            members = []
+        for m in members:
+            if m in seen_members:
+                errs.append(f"slot group member '{m}' repeats across groups")
+            seen_members.add(m)
+            if m not in inputs:
+                errs.append(f"slot group '{gname}': member '{m}' is not "
+                            "an input")
+            elif not inputs[m][0] or inputs[m][0][0] != size:
+                errs.append(f"slot group '{gname}': member '{m}' shape "
+                            f"{inputs[m][0]} does not stack {size} slots")
+    return errs
+
+
+def _report(label, errs, bad):
+    if errs:
+        bad.append(label)
+        for e in errs:
+            print(f"  FAIL {label}: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=None,
+                    help="also validate every *.meta.json in this directory")
+    ap.add_argument("--suites", default="smoke,std")
+    args = ap.parse_args()
+    bad = []
+    checked = 0
+
+    suites = [s for s in args.suites.split(",") if s]
+    if suites:
+        # import lazily: suite validation needs jax (eval_shape), on-disk
+        # validation does not
+        from . import aot
+        for suite in suites:
+            for art in aot.build_suite(suite):
+                _report(f"{suite}:{art.name}", check_meta(art.meta_dict()), bad)
+                checked += 1
+
+    if args.dir:
+        metas = sorted(glob.glob(os.path.join(args.dir, "*.meta.json")))
+        for path in metas:
+            with open(path) as f:
+                meta = json.load(f)
+            _report(path, check_meta(meta), bad)
+            checked += 1
+
+    if bad:
+        print(f"meta_check: {len(bad)}/{checked} metas FAILED")
+        sys.exit(1)
+    print(f"meta_check: {checked} metas OK")
+
+
+if __name__ == "__main__":
+    main()

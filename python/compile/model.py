@@ -89,6 +89,13 @@ def lora_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
     return out
 
 
+def stacked_lora_shapes(cfg: ModelConfig, n_adapters: int) -> Dict[str, tuple]:
+    """LoRA shapes with a leading adapter axis: the multi-adapter serving
+    artifacts take every factor stacked as (n_adapters, ...) and gather one
+    adapter per batch row (see AdapterProjCtx)."""
+    return {k: (n_adapters,) + s for k, s in lora_shapes(cfg).items()}
+
+
 def param_names(cfg: ModelConfig) -> List[str]:
     return list(param_shapes(cfg).keys())
 
@@ -210,6 +217,17 @@ class ProjCtx:
         self.nf4_block = nf4_block
         self.scale = cfg.lora_alpha / cfg.lora_rank
 
+    def lm_head(self, x):
+        """Final projection: (B, T, D) -> (B, T, V), optional lm_head LoRA."""
+        b, t, d = x.shape
+        if self.lora.get("lm_head.lora_a") is not None:
+            x2 = x.reshape(-1, d)
+            logits = lora_matmul_or_ref(
+                x2, self.p["lm_head"], self.lora["lm_head.lora_a"],
+                self.lora["lm_head.lora_b"], self.scale, self.use_pallas)
+            return logits.reshape(b, t, -1)
+        return x @ self.p["lm_head"]
+
     def __call__(self, x, name):
         """x: (..., in) -> (..., out) for projection `name` (e.g. 'l3.wq')."""
         lead = x.shape[:-1]
@@ -242,16 +260,51 @@ class ProjCtx:
         return y.reshape(*lead, y.shape[-1])
 
 
-def lm_head_logits(proj: ProjCtx, x):
-    """Final projection: (B, T, D) -> (B, T, V), with optional lm_head LoRA."""
-    b, t, d = x.shape
-    if proj.lora.get("lm_head.lora_a") is not None:
-        x2 = x.reshape(-1, d)
-        logits = lora_matmul_or_ref(
-            x2, proj.p["lm_head"], proj.lora["lm_head.lora_a"],
-            proj.lora["lm_head.lora_b"], proj.scale, proj.use_pallas)
-        return logits.reshape(b, t, -1)
-    return x @ proj.p["lm_head"]
+class AdapterProjCtx:
+    """Projection context over a *stack* of adapters (punica-style).
+
+    LoRA factors arrive stacked along a leading adapter axis —
+    `a (n_adapters, in, r)`, `b (n_adapters, r, out)` — and `adapter_ix
+    (B,)` selects one adapter per batch row, so a single compiled artifact
+    serves a heterogeneous-adapter batch: y[i] = x[i] @ W + s·(x[i] @
+    a[ix[i]]) @ b[ix[i]]. Inputs must keep their batch axis ((B, T, in),
+    never flattened); the base path is dense only (serving-side context:
+    masks/quant never meet the stacked inference artifacts).
+    """
+
+    def __init__(self, params, lora, adapter_ix, cfg: ModelConfig):
+        self.p = params
+        self.lora = lora
+        self.ix = adapter_ix
+        self.cfg = cfg
+        self.scale = cfg.lora_alpha / cfg.lora_rank
+
+    def _delta(self, x, a, b):
+        a_sel = a[self.ix]                            # (B, in, r)
+        b_sel = b[self.ix]                            # (B, r, out)
+        xa = jnp.einsum("bti,bir->btr", x, a_sel)
+        return jnp.einsum("btr,bro->bto", xa, b_sel)
+
+    def lm_head(self, x):
+        y = x @ self.p["lm_head"]
+        a = self.lora.get("lm_head.lora_a")
+        if a is not None:
+            y = y + self.scale * self._delta(x, a, self.lora["lm_head.lora_b"])
+        return y
+
+    def __call__(self, x, name):
+        """x: (B, T, in) -> (B, T, out) for projection `name`."""
+        y = x @ self.p[name]
+        a = self.lora.get(f"{name}.lora_a")
+        if a is not None:
+            y = y + self.scale * self._delta(x, a, self.lora[f"{name}.lora_b"])
+        return y
+
+
+def lm_head_logits(proj, x):
+    """Final projection: (B, T, D) -> (B, T, V) under the context's own
+    LoRA handling (plain fused path or stacked-adapter gather)."""
+    return proj.lm_head(x)
 
 
 def forward_kv(cfg: ModelConfig, proj: ProjCtx, tokens):
@@ -496,16 +549,24 @@ def make_decode_prefill(cfg: ModelConfig, with_lora=True, use_pallas=False):
         lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
         caches = dict(zip(cnames, flat[i:i + len(cnames)]))
         proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
-        logits, ks, vs = forward_kv(cfg, proj, tokens)
-        sel = row_onehot[:, None, None, None]            # (B, 1, 1, 1)
-        new_caches = []
-        for li in range(cfg.n_layers):
-            for name, computed in ((f"cache_k.l{li}", ks[li]),
-                                   (f"cache_v.l{li}", vs[li])):
-                new_caches.append(caches[name] * (1.0 - sel) + sel * computed)
-        row_logits = jnp.take(logits[0], last_pos, axis=0)[None]   # (1, V)
-        return (row_logits,) + tuple(new_caches)
+        return prefill_scatter(cfg, proj, tokens, last_pos, row_onehot, caches)
     return prefill_fn, pnames, lnames, cnames
+
+
+def prefill_scatter(cfg: ModelConfig, proj, tokens, last_pos, row_onehot,
+                    caches):
+    """Shared prefill tail: forward one (1, S) row, scatter its K/V into the
+    `row_onehot`-selected cache row (all other rows pass through), return
+    the row's `last_pos` logits followed by the new caches in name order."""
+    logits, ks, vs = forward_kv(cfg, proj, tokens)
+    sel = row_onehot[:, None, None, None]            # (B, 1, 1, 1)
+    new_caches = []
+    for li in range(cfg.n_layers):
+        for cached, computed in ((caches[f"cache_k.l{li}"], ks[li]),
+                                 (caches[f"cache_v.l{li}"], vs[li])):
+            new_caches.append(cached * (1.0 - sel) + sel * computed)
+    row_logits = jnp.take(logits[0], last_pos, axis=0)[None]   # (1, V)
+    return (row_logits,) + tuple(new_caches)
 
 
 def make_decode_step(cfg: ModelConfig, with_lora=True, use_pallas=False):
@@ -528,41 +589,104 @@ def make_decode_step(cfg: ModelConfig, with_lora=True, use_pallas=False):
         lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
         caches = dict(zip(cnames, flat[i:i + len(cnames)]))
         proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
-        p = params
-        x = p["embed"][tokens]                       # (B, 1, D)
-        b = x.shape[0]
-        hd = cfg.head_dim
-        s = caches[cnames[0]].shape[1]
-        grid = jnp.arange(s, dtype=jnp.int32)[None, :]
-        write = (grid == pos[:, None]).astype(jnp.float32)   # (B, S)
-        valid = grid <= pos[:, None]                          # (B, S)
-        new_caches = {}
-        for li in range(cfg.n_layers):
-            h, kv, _ = cfg.layer_shapes(li)
-            xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
-            q = proj(xin, f"l{li}.wq").reshape(b, 1, h, hd)
-            k = proj(xin, f"l{li}.wk").reshape(b, 1, kv, hd)
-            v = proj(xin, f"l{li}.wv").reshape(b, 1, kv, hd)
-            q = rope_at(q, pos, cfg.rope_theta)
-            k = rope_at(k, pos, cfg.rope_theta)
-            w = write[:, :, None, None]              # (B, S, 1, 1)
-            ck = caches[f"cache_k.l{li}"] * (1.0 - w) + w * k
-            cv = caches[f"cache_v.l{li}"] * (1.0 - w) + w * v
-            new_caches[f"cache_k.l{li}"] = ck
-            new_caches[f"cache_v.l{li}"] = cv
-            kk = repeat_kv(ck, h)                    # (B, S, h, hd)
-            vv = repeat_kv(cv, h)
-            att = jnp.einsum("bohd,bshd->bhos", q, kk) / jnp.sqrt(float(hd))
-            att = jnp.where(valid[:, None, None, :], att, -1e30)
-            att = jax.nn.softmax(att, axis=-1)
-            out = jnp.einsum("bhos,bshd->bohd", att, vv).reshape(b, 1, h * hd)
-            x = x + proj(out, f"l{li}.wo")
-            xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
-            gate = proj(xin, f"l{li}.w_gate")
-            up = proj(xin, f"l{li}.w_up")
-            x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
-        x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
-        logits = lm_head_logits(proj, x)[:, 0]       # (B, V)
+        logits, new_caches = decode_step_forward(cfg, proj, tokens, pos, caches)
+        return (logits,) + tuple(new_caches[n] for n in cnames)
+    return step_fn, pnames, lnames, cnames
+
+
+def decode_step_forward(cfg: ModelConfig, proj, tokens, pos, caches):
+    """Shared (B, 1) incremental forward: writes each row's frontier K/V at
+    `pos`, attends over cache positions <= pos, returns ((B, V) logits,
+    {name: new cache})."""
+    p = proj.p
+    x = p["embed"][tokens]                       # (B, 1, D)
+    b = x.shape[0]
+    hd = cfg.head_dim
+    s = next(iter(caches.values())).shape[1]
+    grid = jnp.arange(s, dtype=jnp.int32)[None, :]
+    write = (grid == pos[:, None]).astype(jnp.float32)   # (B, S)
+    valid = grid <= pos[:, None]                          # (B, S)
+    new_caches = {}
+    for li in range(cfg.n_layers):
+        h, kv, _ = cfg.layer_shapes(li)
+        xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
+        q = proj(xin, f"l{li}.wq").reshape(b, 1, h, hd)
+        k = proj(xin, f"l{li}.wk").reshape(b, 1, kv, hd)
+        v = proj(xin, f"l{li}.wv").reshape(b, 1, kv, hd)
+        q = rope_at(q, pos, cfg.rope_theta)
+        k = rope_at(k, pos, cfg.rope_theta)
+        w = write[:, :, None, None]              # (B, S, 1, 1)
+        ck = caches[f"cache_k.l{li}"] * (1.0 - w) + w * k
+        cv = caches[f"cache_v.l{li}"] * (1.0 - w) + w * v
+        new_caches[f"cache_k.l{li}"] = ck
+        new_caches[f"cache_v.l{li}"] = cv
+        kk = repeat_kv(ck, h)                    # (B, S, h, hd)
+        vv = repeat_kv(cv, h)
+        att = jnp.einsum("bohd,bshd->bhos", q, kk) / jnp.sqrt(float(hd))
+        att = jnp.where(valid[:, None, None, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhos,bshd->bohd", att, vv).reshape(b, 1, h * hd)
+        x = x + proj(out, f"l{li}.wo")
+        xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
+        gate = proj(xin, f"l{li}.w_gate")
+        up = proj(xin, f"l{li}.w_up")
+        x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
+    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+    logits = lm_head_logits(proj, x)[:, 0]       # (B, V)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Multi-adapter serving (DESIGN.md §2c: the adapter slot group)
+# ---------------------------------------------------------------------------
+
+def make_logits_adapters(cfg: ModelConfig, n_adapters: int):
+    """Full-sequence logits over a stack of adapters: LoRA factors arrive
+    stacked (n_adapters, ...) and `adapter_ix (B,)` selects one adapter per
+    batch row, so one compiled artifact serves heterogeneous batches."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg)
+
+    def logits_fn(tokens, adapter_ix, *flat):
+        params = dict(zip(pnames, flat[:len(pnames)]))
+        lora = dict(zip(lnames, flat[len(pnames):]))
+        proj = AdapterProjCtx(params, lora, adapter_ix, cfg)
+        return (forward(cfg, proj, tokens),)
+    return logits_fn, pnames, lnames
+
+
+def make_decode_prefill_adapters(cfg: ModelConfig, n_adapters: int):
+    """Adapter-stacked prefill: like `make_decode_prefill` plus a scalar
+    `adapter_ix` naming the adapter slot the admitted row decodes under."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg)
+    cnames = kv_cache_names(cfg)
+
+    def prefill_fn(tokens, last_pos, row_onehot, adapter_ix, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        # the forward runs one (1, S) row: broadcast the scalar to (1,)
+        proj = AdapterProjCtx(params, lora, adapter_ix[None], cfg)
+        return prefill_scatter(cfg, proj, tokens, last_pos, row_onehot, caches)
+    return prefill_fn, pnames, lnames, cnames
+
+
+def make_decode_step_adapters(cfg: ModelConfig, n_adapters: int):
+    """Adapter-stacked decode step: `adapter_ix (B,)` routes every row's
+    LoRA contribution through its own adapter slot each step."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg)
+    cnames = kv_cache_names(cfg)
+
+    def step_fn(tokens, pos, adapter_ix, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        proj = AdapterProjCtx(params, lora, adapter_ix, cfg)
+        logits, new_caches = decode_step_forward(cfg, proj, tokens, pos, caches)
         return (logits,) + tuple(new_caches[n] for n in cnames)
     return step_fn, pnames, lnames, cnames
 

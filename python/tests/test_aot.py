@@ -149,6 +149,87 @@ def test_decode_step_artifact_declares_cache_donation():
         assert list(o.shape) == list(specs[n].shape), n
 
 
+def test_adapter_trio_in_suites():
+    """Multi-adapter serving trio ships with the suites; every member of
+    the trio shares one grid and one adapter group size."""
+    smoke = {a.name: a for a in aot.build_suite("smoke")}
+    for n in ("logits_tiny_a3", "decode_prefill_tiny_a3",
+              "decode_step_tiny_a3"):
+        assert n in smoke, n
+    grids = {(smoke[n].extra["batch"], smoke[n].extra["seq"])
+             for n in ("logits_tiny_a3", "decode_prefill_tiny_a3",
+                       "decode_step_tiny_a3")}
+    assert len(grids) == 1
+    std = [a.name for a in aot.build_suite("std")]
+    assert "logits_l13b_a4" in std and "decode_step_l13b_a4" in std
+
+
+def test_adapter_artifacts_declare_slot_group():
+    """Input order and the adapter slot-group meta contract: adapter_ix
+    gathers along the stacked leading axis of every lora member; members
+    are zero-init-able so an empty session serves the base model."""
+    cfg = PRESETS["tiny"]
+    n = 3
+    for art, head in [
+        (aot.logits_adapters_artifact(cfg, n, b=4, s=16),
+         ["tokens", "adapter_ix"]),
+        (aot.decode_prefill_adapters_artifact(cfg, n, b=4, s=16),
+         ["tokens", "last_pos", "row_onehot", "adapter_ix"]),
+        (aot.decode_step_adapters_artifact(cfg, n, b=4, s=16),
+         ["tokens", "pos", "adapter_ix"]),
+    ]:
+        names = [nm for nm, _ in art.in_specs]
+        assert names[:len(head)] == head, art.name
+        g = art.extra["slot_groups"]["adapter"]
+        assert g["input"] == "adapter_ix"
+        assert g["size"] == n
+        ln = art.extra["lora_names"]
+        assert g["members"] == ln
+        specs = dict(art.in_specs)
+        base = M.lora_shapes(cfg)
+        for m in ln:
+            assert list(specs[m].shape) == [n] + list(base[m]), (art.name, m)
+            assert m in art.extra["state_zero_init"], (art.name, m)
+        # decode members keep cache donation intact alongside the group
+        if art.name.startswith("decode_"):
+            cn = art.extra["cache_names"]
+            assert art.extra["state_bindings"] == {"new." + c: c for c in cn}
+            for c in cn:
+                assert c in art.extra["state_zero_init"]
+        # abstract eval round-trips
+        outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
+        assert list(outs[0].shape)[-1] == cfg.vocab_size
+
+
+def test_meta_check_mirror_accepts_suite_and_rejects_violations():
+    """The ci.sh meta validator accepts a real adapter meta and flags the
+    violations the Rust runtime would reject."""
+    from compile.meta_check import check_meta
+    art = aot.decode_step_adapters_artifact(PRESETS["tiny"], 3, b=2, s=16)
+    meta = art.meta_dict()
+    assert check_meta(meta) == []
+
+    import copy
+    broken = copy.deepcopy(meta)
+    broken["extra"]["state_bindings"]["new.cache_k.l0"] = "nope"
+    assert any("nope" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    first = broken["extra"]["slot_groups"]["adapter"]["members"][0]
+    for e in broken["inputs"]:
+        if e["name"] == first:
+            e["shape"][0] += 1  # member no longer stacks `size` slots
+    assert any("stack" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    broken["extra"]["slot_groups"]["adapter"]["input"] = "missing_ix"
+    assert any("missing_ix" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    del broken["config"]["d_model"]
+    assert any("d_model" in e for e in check_meta(broken))
+
+
 def test_decode_prefill_artifact_is_single_row():
     cfg = PRESETS["tiny"]
     art = aot.decode_prefill_artifact(cfg, b=2, s=16)

@@ -12,6 +12,7 @@
 //! Requires `make artifacts` (tiny suite) for the runtime benches.
 
 use loram::bench::{bench, bench_throughput};
+use loram::coordinator::adapters::AdapterId;
 use loram::coordinator::evaluate::{test_sequences, Evaluator};
 use loram::coordinator::generate::{DecodePath, Generator, SampleCfg};
 use loram::coordinator::train::TrainSession;
@@ -28,18 +29,28 @@ use loram::util::json::Json;
 use loram::util::rng::Rng;
 
 /// Drive `n` mixed-config requests through the continuous-batching server
-/// and return its stats (tokens/sec, TTFT, occupancy).
-fn serve_workload<E: DecodeEngine>(engine: E, n: usize) -> anyhow::Result<ServerStats> {
+/// and return its stats (tokens/sec, TTFT, occupancy). `adapters` routes
+/// request i through `adapters[i % len]` (empty = adapter-less requests).
+fn serve_workload<E: DecodeEngine>(
+    engine: E,
+    n: usize,
+    adapters: &[AdapterId],
+) -> anyhow::Result<ServerStats> {
     let mut srv = Server::new(engine, 7);
     let mut ig = InstructGen::new(Dataset::Hermes, 3, 1);
     for i in 0..n {
         let (ex, _) = ig.next();
-        srv.enqueue(
+        srv.enqueue_adapter(
             ex.instruction,
             SampleCfg {
                 temperature: 0.2 * (i % 3) as f64,
                 top_p: [1.0, 0.95, 0.9][i % 3],
                 max_new: 8 + 4 * (i % 2),
+            },
+            if adapters.is_empty() {
+                None
+            } else {
+                Some(adapters[i % adapters.len()])
             },
         );
     }
@@ -63,6 +74,19 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
         .iter()
         .map(|e| {
             let st = &e.stats;
+            let lanes: Vec<Json> = st
+                .per_adapter
+                .iter()
+                .map(|(adapter, lane)| {
+                    Json::obj(vec![
+                        ("adapter", Json::str(&loram::serve::adapter_label(*adapter))),
+                        ("requests", Json::num(lane.requests as f64)),
+                        ("tokens", Json::num(lane.tokens as f64)),
+                        ("tokens_per_sec", Json::num(lane.tokens_per_sec(st.decode_ms))),
+                        ("mean_ttft_ms", Json::num(lane.mean_ttft_ms())),
+                    ])
+                })
+                .collect();
             Json::obj(vec![
                 ("path", Json::str(e.path)),
                 ("engine", Json::str(e.engine)),
@@ -75,6 +99,7 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
                 ("peak_queue_depth", Json::num(st.peak_queue_depth as f64)),
                 ("decode_steps", Json::num(st.decode_steps as f64)),
                 ("total_tokens", Json::num(st.total_tokens as f64)),
+                ("adapters", Json::Arr(lanes)),
             ])
         })
         .collect();
@@ -165,11 +190,15 @@ fn main() -> anyhow::Result<()> {
         // no artifacts); overwritten by the PJRT-backed numbers below when
         // the tiny artifact suite is present. The sim engine has no decode
         // cost model, so one measured workload stands in for both path
-        // labels (engine "sim" marks the entries as scheduler-only).
-        let st = serve_workload(SimEngine::new(4), 64)?;
+        // labels (engine "sim" marks the entries as scheduler-only). The
+        // mixed-adapter scenario routes requests across three adapters.
+        let st = serve_workload(SimEngine::new(4), 64, &[])?;
+        let ids: Vec<AdapterId> = (0..3).map(AdapterId::for_slot).collect();
+        let mixed = serve_workload(SimEngine::new(4), 64, &ids)?;
         emit_bench_serve(&[
             ServeEntry { path: "reforward", engine: "sim", requests: 64, stats: st.clone() },
             ServeEntry { path: "kvcache", engine: "sim", requests: 64, stats: st },
+            ServeEntry { path: "mixed-adapter", engine: "sim", requests: 64, stats: mixed },
         ])?;
     }
 
@@ -260,7 +289,8 @@ fn main() -> anyhow::Result<()> {
 
     if run("serve") {
         // both decode paths through the real scheduler: the full-reforward
-        // baseline vs the (B, 1) kv-cache path (DESIGN.md §Perf)
+        // baseline vs the (B, 1) kv-cache path (DESIGN.md §Perf), plus the
+        // mixed-adapter scenario over the stacked artifact (§2c)
         let n = 16;
         let gen = Generator::with_path(
             &rt,
@@ -272,7 +302,7 @@ fn main() -> anyhow::Result<()> {
             path: "reforward",
             engine: "pjrt",
             requests: n,
-            stats: serve_workload(gen, n)?,
+            stats: serve_workload(gen, n, &[])?,
         }];
         match Generator::with_path(&rt, "logits_tiny", &[&params, &lora], Some(DecodePath::KvCache))
         {
@@ -280,7 +310,7 @@ fn main() -> anyhow::Result<()> {
                 path: "kvcache",
                 engine: "pjrt",
                 requests: n,
-                stats: serve_workload(gen, n)?,
+                stats: serve_workload(gen, n, &[])?,
             }),
             Err(e) => {
                 println!("(kvcache serve bench falling back to sim: {e})");
@@ -288,7 +318,35 @@ fn main() -> anyhow::Result<()> {
                     path: "kvcache",
                     engine: "sim",
                     requests: 64,
-                    stats: serve_workload(SimEngine::new(4), 64)?,
+                    stats: serve_workload(SimEngine::new(4), 64, &[])?,
+                });
+            }
+        }
+        let mixed = Generator::with_adapters(&rt, "logits_tiny_a3", &[&params], None, None)
+            .and_then(|gen| {
+                let cap = gen.adapter_capacity().unwrap_or(1);
+                let ids: Vec<AdapterId> = (0..cap)
+                    .map(|i| {
+                        gen.register_adapter(&format!("task{i}"), init_lora(&cfg, i as u64 + 1))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                serve_workload(gen, n, &ids)
+            });
+        match mixed {
+            Ok(stats) => entries.push(ServeEntry {
+                path: "mixed-adapter",
+                engine: "pjrt",
+                requests: n,
+                stats,
+            }),
+            Err(e) => {
+                println!("(mixed-adapter serve bench falling back to sim: {e})");
+                let ids: Vec<AdapterId> = (0..3).map(AdapterId::for_slot).collect();
+                entries.push(ServeEntry {
+                    path: "mixed-adapter",
+                    engine: "sim",
+                    requests: 64,
+                    stats: serve_workload(SimEngine::new(4), 64, &ids)?,
                 });
             }
         }

@@ -1,0 +1,396 @@
+//! First-class adapter lifecycle: the `AdapterStore`.
+//!
+//! LoRAM's product is a *recovered* low-rank adapter applied to the frozen
+//! large model at inference (paper §3, R(·)). In the canonical deployment
+//! one frozen base serves many cheap task adapters — each produced by a
+//! LoRAM run over a different pruning strategy or task — selectable per
+//! request. The store owns that lifecycle end to end:
+//!
+//! * **disk**: recovered adapters persist as `.lmck` checkpoints in an
+//!   adapter directory (`pipeline` exports into it right after recovery);
+//! * **slots**: the compiled stacked artifact has a fixed adapter
+//!   capacity (its meta's adapter slot group, DESIGN.md §2c); `register`
+//!   claims a slot and yields the [`AdapterId`] requests route by;
+//! * **ref-counting**: every in-flight row holds a reference
+//!   (`acquire`/`release`), and `evict` refuses to free a pinned slot —
+//!   swapping an adapter out never yanks it from under a decoding row;
+//! * **dirty tracking**: freshly registered slots queue for upload;
+//!   `drain_dirty` hands them to the engine, which stages them into its
+//!   sessions via `Session::put_group` (re-uploading only what changed).
+//!
+//! Pure bookkeeping + file I/O: no sessions, no PJRT — fully unit-tested
+//! without artifacts.
+
+use crate::tensor::TensorStore;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Handle to a registered adapter: its slot index in the stacked
+/// artifact's adapter group plus a per-slot generation. Requests carry
+/// this; the engine feeds the slot index as the artifact's `adapter_ix`
+/// gather input. The generation defeats ABA reuse: a handle issued before
+/// a slot was evicted and re-registered no longer resolves, so a stale id
+/// (e.g. in a queued request) errors instead of silently decoding under
+/// the replacement adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AdapterId {
+    slot: usize,
+    gen: u32,
+}
+
+impl AdapterId {
+    /// Slot index in the stacked artifact (the `adapter_ix` gather value).
+    pub fn ix(self) -> usize {
+        self.slot
+    }
+
+    /// First-generation handle for a slot — for simulators and scheduler
+    /// tests that route without a store. Store-issued handles come from
+    /// [`AdapterStore::register`] and match this only for a slot's first
+    /// occupant.
+    pub fn for_slot(slot: usize) -> AdapterId {
+        AdapterId { slot, gen: 0 }
+    }
+}
+
+impl fmt::Display for AdapterId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a{}", self.slot)
+    }
+}
+
+/// The `logits_<base>_a<N>` entry with the *largest* capacity N in an
+/// artifact name list — the stacked multi-adapter serving artifact for a
+/// base model (the one naming rule, shared by the CLI and the experiment
+/// runners; largest-N keeps the choice deterministic when several
+/// capacities are registered, instead of depending on manifest order).
+pub fn stacked_logits_artifact(names: &[String], base: &str) -> Option<String> {
+    let prefix = format!("logits_{base}_a");
+    names
+        .iter()
+        .filter_map(|n| {
+            let cap: usize = n.strip_prefix(&prefix)?.parse().ok()?;
+            Some((cap, n))
+        })
+        .max_by_key(|(cap, _)| *cap)
+        .map(|(_, n)| n.clone())
+}
+
+struct Entry {
+    name: String,
+    weights: TensorStore,
+    refs: usize,
+}
+
+/// Registry of live adapters for one serving deployment (see module docs).
+pub struct AdapterStore {
+    dir: Option<PathBuf>,
+    slots: Vec<Option<Entry>>,
+    /// per-slot generation, bumped on evict so recycled slots issue fresh
+    /// handles and stale ones stop resolving
+    gens: Vec<u32>,
+    dirty: BTreeSet<usize>,
+}
+
+impl AdapterStore {
+    /// In-memory store with `capacity` slots (the stacked artifact's
+    /// adapter-group size).
+    pub fn new(capacity: usize) -> AdapterStore {
+        AdapterStore {
+            dir: None,
+            slots: (0..capacity).map(|_| None).collect(),
+            gens: vec![0; capacity],
+            dirty: BTreeSet::new(),
+        }
+    }
+
+    /// Store backed by an adapter directory of `.lmck` checkpoints.
+    pub fn with_dir(dir: impl Into<PathBuf>, capacity: usize) -> AdapterStore {
+        AdapterStore { dir: Some(dir.into()), ..AdapterStore::new(capacity) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Occupied slots.
+    pub fn registered(&self) -> usize {
+        self.slots.iter().flatten().count()
+    }
+
+    /// Checkpoint path of adapter `name` under `dir`.
+    pub fn path(dir: &Path, name: &str) -> PathBuf {
+        dir.join(format!("{name}.lmck"))
+    }
+
+    /// Persist a recovered adapter — the export the pipeline runs right
+    /// after R(·). Returns the written path.
+    pub fn save(dir: &Path, name: &str, weights: &TensorStore) -> Result<PathBuf> {
+        ensure!(!name.is_empty(), "adapter name must not be empty");
+        let p = Self::path(dir, name);
+        weights.save(&p).with_context(|| format!("save adapter '{name}'"))?;
+        Ok(p)
+    }
+
+    /// Adapter names available in a directory, sorted.
+    pub fn list(dir: &Path) -> Result<Vec<String>> {
+        let mut names = vec![];
+        for e in std::fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))? {
+            let p = e?.path();
+            if p.extension().and_then(|x| x.to_str()) == Some("lmck") {
+                if let Some(stem) = p.file_stem().and_then(|x| x.to_str()) {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Claim a free slot for `weights`. Errors when the name is already
+    /// registered or every slot is occupied (evict one first — occupied
+    /// slots are never silently recycled, a pinned adapter must keep
+    /// serving its in-flight rows).
+    pub fn register(&mut self, name: &str, weights: TensorStore) -> Result<AdapterId> {
+        ensure!(!name.is_empty(), "adapter name must not be empty");
+        if let Some(id) = self.lookup(name) {
+            bail!("adapter '{name}' already registered as {id}");
+        }
+        let Some(ix) = self.slots.iter().position(|s| s.is_none()) else {
+            bail!(
+                "no free adapter slot ({} of {} in use); evict one first",
+                self.registered(),
+                self.capacity()
+            );
+        };
+        self.slots[ix] = Some(Entry { name: name.to_string(), weights, refs: 0 });
+        self.dirty.insert(ix);
+        Ok(self.id_at(ix))
+    }
+
+    /// Register an adapter from this store's directory.
+    pub fn register_from_disk(&mut self, name: &str) -> Result<AdapterId> {
+        let dir = self.dir.clone().context("adapter store has no directory")?;
+        let weights = TensorStore::load(&Self::path(&dir, name))
+            .with_context(|| format!("load adapter '{name}'"))?;
+        self.register(name, weights)
+    }
+
+    /// Free a slot. Refuses while any in-flight row still references it.
+    /// The slot's generation bumps, so every outstanding handle to the
+    /// evicted adapter — including ones sitting in a request queue — goes
+    /// stale instead of resolving to the slot's next occupant.
+    pub fn evict(&mut self, id: AdapterId) -> Result<()> {
+        let slot = self.entry_mut(id)?;
+        ensure!(
+            slot.refs == 0,
+            "adapter {id} ('{}') has {} in-flight rows",
+            slot.name,
+            slot.refs
+        );
+        self.slots[id.slot] = None;
+        self.gens[id.slot] += 1;
+        // the stale stack row needs no re-upload: nothing routes to it
+        // until the next register, which re-marks the slot dirty
+        self.dirty.remove(&id.slot);
+        Ok(())
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<AdapterId> {
+        self.slots
+            .iter()
+            .position(|s| s.as_ref().map_or(false, |e| e.name == name))
+            .map(|ix| self.id_at(ix))
+    }
+
+    /// Registered ids, in slot order.
+    pub fn ids(&self) -> Vec<AdapterId> {
+        (0..self.slots.len())
+            .filter(|&i| self.slots[i].is_some())
+            .map(|ix| self.id_at(ix))
+            .collect()
+    }
+
+    pub fn name(&self, id: AdapterId) -> Option<&str> {
+        self.entry(id).map(|e| e.name.as_str())
+    }
+
+    pub fn weights(&self, id: AdapterId) -> Result<&TensorStore> {
+        self.entry(id)
+            .map(|e| &e.weights)
+            .with_context(|| format!("adapter {id} is not registered (stale or evicted handle)"))
+    }
+
+    pub fn refs(&self, id: AdapterId) -> usize {
+        self.entry(id).map_or(0, |e| e.refs)
+    }
+
+    /// Pin an adapter for one in-flight row (admission).
+    pub fn acquire(&mut self, id: AdapterId) -> Result<()> {
+        self.entry_mut(id)?.refs += 1;
+        Ok(())
+    }
+
+    /// Drop one row's pin (row taken/evicted).
+    pub fn release(&mut self, id: AdapterId) -> Result<()> {
+        let e = self.entry_mut(id)?;
+        ensure!(e.refs > 0, "adapter {id} released more times than acquired");
+        e.refs -= 1;
+        Ok(())
+    }
+
+    /// Slots registered since the last drain, i.e. whose stacked rows the
+    /// engine must re-upload (`Session::put_group`).
+    pub fn drain_dirty(&mut self) -> Vec<AdapterId> {
+        let dirty = std::mem::take(&mut self.dirty);
+        dirty.into_iter().map(|ix| self.id_at(ix)).collect()
+    }
+
+    /// Current-generation handle for an occupied-or-free slot index.
+    fn id_at(&self, ix: usize) -> AdapterId {
+        AdapterId { slot: ix, gen: self.gens[ix] }
+    }
+
+    /// Gen-checked entry lookup: `None` for free slots AND stale handles.
+    fn entry(&self, id: AdapterId) -> Option<&Entry> {
+        if self.gens.get(id.slot) != Some(&id.gen) {
+            return None;
+        }
+        self.slots.get(id.slot)?.as_ref()
+    }
+
+    fn entry_mut(&mut self, id: AdapterId) -> Result<&mut Entry> {
+        if self.gens.get(id.slot) != Some(&id.gen) {
+            bail!("adapter {id} is not registered (stale or evicted handle)");
+        }
+        self.slots
+            .get_mut(id.slot)
+            .and_then(|s| s.as_mut())
+            .with_context(|| format!("adapter {id} is not registered"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn weights(v: f32) -> TensorStore {
+        let mut s = TensorStore::new();
+        s.insert("l0.wq.lora_a", Tensor::from_f32(&[2, 2], vec![v; 4]));
+        s
+    }
+
+    #[test]
+    fn register_evict_lifecycle_with_refcounts() {
+        let mut st = AdapterStore::new(2);
+        let a = st.register("math", weights(1.0)).unwrap();
+        let b = st.register("code", weights(2.0)).unwrap();
+        assert_eq!((a.ix(), b.ix()), (0, 1));
+        assert_eq!((a, b), (AdapterId::for_slot(0), AdapterId::for_slot(1)));
+        assert_eq!(st.lookup("code"), Some(b));
+        assert_eq!(st.registered(), 2);
+        // full store refuses a third registration
+        assert!(st.register("chat", weights(3.0)).is_err());
+        // pinned slots survive eviction attempts
+        st.acquire(a).unwrap();
+        st.acquire(a).unwrap();
+        assert_eq!(st.refs(a), 2);
+        assert!(st.evict(a).is_err(), "evict of pinned adapter");
+        st.release(a).unwrap();
+        st.release(a).unwrap();
+        assert!(st.release(a).is_err(), "release below zero");
+        st.evict(a).unwrap();
+        assert_eq!(st.registered(), 1);
+        // the freed slot is reused under a fresh generation
+        let c = st.register("math2", weights(4.0)).unwrap();
+        assert_eq!(c.ix(), 0);
+        assert_ne!(c, a, "recycled slot must issue a new handle");
+    }
+
+    #[test]
+    fn stale_handle_after_recycle_is_rejected() {
+        let mut st = AdapterStore::new(1);
+        let a = st.register("x", weights(1.0)).unwrap();
+        st.evict(a).unwrap();
+        let b = st.register("y", weights(2.0)).unwrap();
+        assert_eq!(a.ix(), b.ix());
+        // the pre-eviction handle must not resolve to the new occupant
+        assert!(st.acquire(a).is_err(), "stale handle pinned the replacement");
+        assert!(st.weights(a).is_err());
+        assert!(st.evict(a).is_err());
+        assert_eq!(st.name(a), None);
+        assert_eq!(st.refs(a), 0);
+        st.acquire(b).unwrap();
+        assert_eq!(st.lookup("y"), Some(b));
+    }
+
+    #[test]
+    fn duplicate_names_are_rejected() {
+        let mut st = AdapterStore::new(2);
+        st.register("math", weights(1.0)).unwrap();
+        assert!(st.register("math", weights(2.0)).is_err());
+    }
+
+    #[test]
+    fn dirty_tracks_fresh_registrations_only() {
+        let mut st = AdapterStore::new(3);
+        let a = st.register("x", weights(1.0)).unwrap();
+        let b = st.register("y", weights(2.0)).unwrap();
+        assert_eq!(st.drain_dirty(), vec![a, b]);
+        assert!(st.drain_dirty().is_empty(), "drain clears the set");
+        st.evict(b).unwrap();
+        assert!(st.drain_dirty().is_empty(), "eviction alone needs no upload");
+        let c = st.register("z", weights(3.0)).unwrap();
+        assert_eq!(c.ix(), b.ix(), "slot recycled");
+        assert_eq!(st.drain_dirty(), vec![c]);
+    }
+
+    #[test]
+    fn save_list_and_register_from_disk_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("loram_ad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        AdapterStore::save(&dir, "math", &weights(1.5)).unwrap();
+        AdapterStore::save(&dir, "code", &weights(2.5)).unwrap();
+        assert_eq!(AdapterStore::list(&dir).unwrap(), vec!["code", "math"]);
+        let mut st = AdapterStore::with_dir(&dir, 2);
+        let id = st.register_from_disk("math").unwrap();
+        let w = st.weights(id).unwrap();
+        assert_eq!(w.get("l0.wq.lora_a").unwrap().f32s(), &[1.5; 4]);
+        assert!(st.register_from_disk("missing").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stacked_artifact_discovery_matches_naming_rule() {
+        let names: Vec<String> = ["logits_tiny", "logits_tiny_abc", "logits_tiny_a3",
+                                  "decode_step_tiny_a3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(
+            stacked_logits_artifact(&names, "tiny").as_deref(),
+            Some("logits_tiny_a3")
+        );
+        assert_eq!(stacked_logits_artifact(&names, "l13b"), None);
+        // several capacities: the largest wins, regardless of list order
+        let multi: Vec<String> = ["logits_tiny_a3", "logits_tiny_a8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(
+            stacked_logits_artifact(&multi, "tiny").as_deref(),
+            Some("logits_tiny_a8")
+        );
+    }
+
+    #[test]
+    fn acquire_unregistered_adapter_errors() {
+        let mut st = AdapterStore::new(1);
+        assert!(st.acquire(AdapterId::for_slot(0)).is_err());
+        assert!(st.acquire(AdapterId::for_slot(5)).is_err());
+        assert!(st.weights(AdapterId::for_slot(0)).is_err());
+    }
+}

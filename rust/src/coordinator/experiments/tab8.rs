@@ -3,6 +3,7 @@
 //! 1024-sample workload scaled by the artifact batch size).
 
 use super::ExpCtx;
+use crate::coordinator::adapters::AdapterId;
 use crate::coordinator::generate::{Generator, SampleCfg};
 use crate::coordinator::pipeline::ensure_base;
 use crate::coordinator::train::TrainSession;
@@ -15,6 +16,30 @@ use crate::tokenizer::Tokenizer;
 use crate::util::log::{self, Csv};
 use anyhow::Result;
 use std::time::Instant;
+
+/// The shared serving workload: one seed, one config mix, so the baseline
+/// rows and the mixed-adapter row of `tab8_serving.csv` stay comparable.
+/// `ids` routes request i through `ids[i % len]` (empty = adapter-less).
+fn enqueue_serve_workload(
+    srv: &mut Server<Generator<'_>>,
+    n: usize,
+    seed: u64,
+    ids: &[AdapterId],
+) {
+    let mut ig = InstructGen::new(Dataset::Hermes, seed, 2);
+    for i in 0..n {
+        let (ex, _) = ig.next();
+        srv.enqueue_adapter(
+            ex.instruction,
+            SampleCfg {
+                temperature: 0.4,
+                top_p: if i % 2 == 0 { 0.95 } else { 0.8 },
+                max_new: 8,
+            },
+            if ids.is_empty() { None } else { Some(ids[i % ids.len()]) },
+        );
+    }
+}
 
 pub fn run(ctx: &ExpCtx) -> Result<()> {
     let (pre, _align, _sft) = ctx.scale.steps();
@@ -83,34 +108,19 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
 
     // serving-side counterpart (the "infer large" hot path): decode
     // throughput and TTFT through the continuous-batching scheduler, small
-    // LoRA target vs the big recovered-inference target
+    // LoRA target vs the big recovered-inference target; the `adapter`
+    // column breaks every method down per adapter lane ("all" = aggregate)
     let mut scsv = Csv::create(
         ctx.out_dir.join("tab8_serving.csv"),
-        &["method", "decode_path", "requests", "tokens_per_sec", "mean_ttft_ms",
-          "mean_latency_ms", "mean_occupancy", "mean_queue_wait_ms",
-          "peak_queue_depth"],
+        &["method", "decode_path", "adapter", "requests", "tokens_per_sec",
+          "mean_ttft_ms", "mean_latency_ms", "mean_occupancy",
+          "mean_queue_wait_ms", "peak_queue_depth"],
     )?;
     let serve_requests = workload_steps * 2;
-    for (method, base) in [(format!("{small} serve"), small), (format!("{big} serve"), big)] {
-        let params = ensure_base(ctx.rt, base, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
-        let mcfg = ctx.rt.load(&format!("eval_{base}"))?.meta.config.clone();
-        let lora = init_lora(&mcfg, ctx.seed);
-        let gen = Generator::new(ctx.rt, &format!("logits_{base}"), &[&params, &lora])?;
-        let decode_path = gen.decode_path().name();
-        let mut srv = Server::new(gen, ctx.seed);
-        let mut ig = InstructGen::new(Dataset::Hermes, ctx.seed, 2);
-        for i in 0..serve_requests {
-            let (ex, _) = ig.next();
-            srv.enqueue(
-                ex.instruction,
-                SampleCfg {
-                    temperature: 0.4,
-                    top_p: if i % 2 == 0 { 0.95 } else { 0.8 },
-                    max_new: 8,
-                },
-            );
-        }
-        srv.drain()?;
+    let mut serve_rows = |method: &str,
+                          decode_path: &str,
+                          srv: &Server<Generator<'_>>|
+     -> Result<()> {
         let st = &srv.stats;
         log::info(format!(
             "tab8 {method} [{decode_path}]: {:.1} tok/s, ttft {:.1} ms, occupancy {:.2}, \
@@ -124,7 +134,8 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         scsv.row(&crate::csv_row![
             method,
             decode_path,
-            serve_requests,
+            "all",
+            st.admitted,
             format!("{:.2}", st.tokens_per_sec()),
             format!("{:.2}", st.mean_ttft_ms()),
             format!("{:.2}", st.mean_latency_ms()),
@@ -132,6 +143,71 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             format!("{:.2}", st.mean_queue_wait_ms()),
             st.peak_queue_depth
         ])?;
+        for (adapter, lane) in &st.per_adapter {
+            scsv.row(&crate::csv_row![
+                method,
+                decode_path,
+                crate::serve::adapter_label(*adapter),
+                lane.requests,
+                format!("{:.2}", lane.tokens_per_sec(st.decode_ms)),
+                format!("{:.2}", lane.mean_ttft_ms()),
+                format!("{:.2}", lane.mean_latency_ms()),
+                "",
+                "",
+                ""
+            ])?;
+        }
+        Ok(())
+    };
+    for (method, base) in [(format!("{small} serve"), small), (format!("{big} serve"), big)] {
+        let params = ensure_base(ctx.rt, base, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+        let mcfg = ctx.rt.load(&format!("eval_{base}"))?.meta.config.clone();
+        let lora = init_lora(&mcfg, ctx.seed);
+        let gen = Generator::new(ctx.rt, &format!("logits_{base}"), &[&params, &lora])?;
+        let decode_path = gen.decode_path().name().to_string();
+        let mut srv = Server::new(gen, ctx.seed);
+        enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[]);
+        srv.drain()?;
+        serve_rows(&method, &decode_path, &srv)?;
+    }
+
+    // mixed-adapter serving: one frozen base, every request routed through
+    // its own adapter slot of the stacked artifact (DESIGN.md §2c)
+    // a dir without manifest.json is legitimate here (artifacts loaded by
+    // name), but the skip must name the real cause, not claim absence
+    let manifest = match ctx.rt.manifest() {
+        Ok(m) => m,
+        Err(e) => {
+            log::info(format!("tab8: artifact manifest unavailable ({e:#})"));
+            vec![]
+        }
+    };
+    let stacked = crate::coordinator::adapters::stacked_logits_artifact(&manifest, big);
+    match stacked {
+        Some(art_name) => {
+            let params = ensure_base(ctx.rt, big, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+            let gen = Generator::with_adapters(ctx.rt, &art_name, &[&params], None, None)?;
+            let cap = gen.adapter_capacity().unwrap_or(1);
+            let mcfg = ctx.rt.load(&art_name)?.meta.config.clone();
+            let ids: Vec<_> = (0..cap)
+                .map(|i| {
+                    gen.register_adapter(
+                        &format!("task{i}"),
+                        init_lora(&mcfg, ctx.seed ^ (i as u64 + 1)),
+                    )
+                })
+                .collect::<Result<_>>()?;
+            let method = format!("{big} serve x{cap} adapters");
+            let decode_path = gen.decode_path().name().to_string();
+            let mut srv = Server::new(gen, ctx.seed);
+            enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &ids);
+            srv.drain()?;
+            serve_rows(&method, &decode_path, &srv)?;
+        }
+        None => log::info(format!(
+            "tab8: no stacked logits_{big}_a<N> artifact; skipping the \
+             mixed-adapter serving row"
+        )),
     }
     log::info(format!("tab8 -> {}", ctx.out_dir.display()));
     Ok(())

@@ -20,13 +20,15 @@
 //! [`super::kvcache::KvDecoder`]. Row state, the scheduler, and every
 //! caller are identical across both.
 
+use super::adapters::{AdapterId, AdapterStore};
 use super::kvcache::KvDecoder;
-use crate::runtime::{Artifact, Runtime, Session};
+use crate::runtime::{Artifact, Runtime, Session, SlotGroup};
 use crate::tensor::{Tensor, TensorStore};
 use crate::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
 use crate::util::rng::Rng;
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::cell::RefCell;
+use std::path::PathBuf;
 use std::rc::Rc;
 
 /// Which decode implementation a [`Generator`] runs each step on.
@@ -75,6 +77,9 @@ struct RowState {
     cfg: SampleCfg,
     generated: usize,
     done: bool,
+    /// adapter slot this row decodes under (stacked-adapter artifacts);
+    /// holds one `AdapterStore` reference until `take`
+    adapter: Option<AdapterId>,
 }
 
 /// One sampled token, as reported by [`Generator::decode_step`].
@@ -92,6 +97,9 @@ struct DecodeState {
     /// present iff the decode artifact pair is registered (the kv path)
     kv: Option<KvDecoder>,
     rows: Vec<Option<RowState>>,
+    /// adapter registry when serving a stacked-adapter artifact through
+    /// `with_adapters`; rows then route by their `AdapterId`
+    adapters: Option<AdapterStore>,
 }
 
 pub struct Generator<'r> {
@@ -100,6 +108,8 @@ pub struct Generator<'r> {
     /// session + row state behind a RefCell so scoring/eval callers can
     /// share an immutable generator (batch-internal mutation only)
     state: RefCell<DecodeState>,
+    /// the artifact's adapter slot group, when it serves stacked adapters
+    adapter_group: Option<SlotGroup>,
     /// constructed once per generator lifetime
     tk: Tokenizer,
     pub vocab: usize,
@@ -125,7 +135,13 @@ impl<'r> Generator<'r> {
         let sess = Session::new(rt, art.clone(), stores)?;
         let vocab = art.meta.config.vocab_size;
         let (b, s) = (art.meta.batch(), art.meta.seq());
-        let model = art.meta.config.name.clone();
+        // the decode pair shares the logits artifact's name suffix, so an
+        // adapter-stacked `logits_tiny_a3` pairs with
+        // `decode_{prefill,step}_tiny_a3`, never the plain pair
+        let model = artifact
+            .strip_prefix("logits_")
+            .map(String::from)
+            .unwrap_or_else(|| art.meta.config.name.clone());
         let kv = match path {
             Some(DecodePath::Reforward) => None,
             Some(DecodePath::KvCache) => Some(
@@ -139,7 +155,7 @@ impl<'r> Generator<'r> {
             // the decode grid must match the logits artifact the Generator
             // sizes its rows by; on auto, a mismatched pair is ignored
             Some(kv) if kv.batch_size() != b || kv.seq_len() != s => {
-                anyhow::ensure!(
+                ensure!(
                     path != Some(DecodePath::KvCache),
                     "decode pair grid ({}, {}) != logits grid ({b}, {s})",
                     kv.batch_size(),
@@ -149,14 +165,116 @@ impl<'r> Generator<'r> {
             }
             other => other,
         };
+        let adapter_group = art.meta.adapter_group()?;
+        let kv = match (&adapter_group, kv) {
+            // a pair whose adapter capacity disagrees with the logits
+            // artifact (stale mixed-version dir) is defective: on auto it
+            // falls back to reforward — loudly — like every other pair
+            // defect; only an explicit kv request hard-fails
+            (Some(g), Some(kv)) if kv.adapter_capacity() != Some(g.size) => {
+                ensure!(
+                    path != Some(DecodePath::KvCache),
+                    "decode pair adapter capacity {:?} != logits capacity {}",
+                    kv.adapter_capacity(),
+                    g.size
+                );
+                crate::util::log::warn(format!(
+                    "decode pair for '{model}' stacks {:?} adapter slots but \
+                     '{artifact}' stacks {} — falling back to full reforward",
+                    kv.adapter_capacity(),
+                    g.size
+                ));
+                None
+            }
+            (_, kv) => kv,
+        };
         let rows = (0..b).map(|_| None).collect();
         Ok(Generator {
             rt,
             art,
-            state: RefCell::new(DecodeState { sess, kv, rows }),
+            state: RefCell::new(DecodeState { sess, kv, rows, adapters: None }),
+            adapter_group,
             tk: Tokenizer::new(),
             vocab,
         })
+    }
+
+    /// A generator over a stacked-adapter artifact with a live
+    /// [`AdapterStore`] sized by the artifact's adapter group. Registered
+    /// adapters become routable per request (`prefill_adapter`); `dir`
+    /// backs the store with an `.lmck` adapter directory.
+    pub fn with_adapters(
+        rt: &'r Runtime,
+        artifact: &str,
+        stores: &[&TensorStore],
+        path: Option<DecodePath>,
+        dir: Option<PathBuf>,
+    ) -> Result<Generator<'r>> {
+        let gen = Generator::with_path(rt, artifact, stores, path)?;
+        let group = gen.adapter_group.as_ref().with_context(|| {
+            format!("artifact '{artifact}' declares no adapter slot group")
+        })?;
+        let store = match dir {
+            Some(d) => AdapterStore::with_dir(d, group.size),
+            None => AdapterStore::new(group.size),
+        };
+        gen.state.borrow_mut().adapters = Some(store);
+        Ok(gen)
+    }
+
+    /// Adapter slots the artifact stacks (adapter-group size), if any.
+    pub fn adapter_capacity(&self) -> Option<usize> {
+        self.adapter_group.as_ref().map(|g| g.size)
+    }
+
+    /// Register an adapter's recovered factors into a free slot and stage
+    /// them into every session (uploaded lazily at each session's next
+    /// run — only the changed stacked tensors move).
+    pub fn register_adapter(&self, name: &str, weights: TensorStore) -> Result<AdapterId> {
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        let ad = st
+            .adapters
+            .as_mut()
+            .context("generator has no adapter store (use with_adapters)")?;
+        let id = ad.register(name, weights)?;
+        finish_registration(ad, id, &mut st.sess, st.kv.as_mut())
+    }
+
+    /// Register an adapter from the store's backing directory.
+    pub fn register_adapter_from_disk(&self, name: &str) -> Result<AdapterId> {
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        let ad = st
+            .adapters
+            .as_mut()
+            .context("generator has no adapter store (use with_adapters)")?;
+        let id = ad.register_from_disk(name)?;
+        finish_registration(ad, id, &mut st.sess, st.kv.as_mut())
+    }
+
+    /// Evict a registered adapter (fails while rows still decode it).
+    pub fn evict_adapter(&self, id: AdapterId) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        st.adapters
+            .as_mut()
+            .context("generator has no adapter store")?
+            .evict(id)
+    }
+
+    /// Id of a registered adapter by name.
+    pub fn adapter_id(&self, name: &str) -> Option<AdapterId> {
+        self.state.borrow().adapters.as_ref()?.lookup(name)
+    }
+
+    /// Name of a registered adapter.
+    pub fn adapter_name(&self, id: AdapterId) -> Option<String> {
+        self.state
+            .borrow()
+            .adapters
+            .as_ref()?
+            .name(id)
+            .map(String::from)
     }
 
     /// Which decode implementation `decode_step` runs.
@@ -205,20 +323,58 @@ impl<'r> Generator<'r> {
     /// (`max_new` is clamped to ≥ 1) so a finished `StepOut` always
     /// reports it and the slot is reclaimable.
     pub fn prefill(&self, prompt: &str, cfg: SampleCfg) -> Result<usize> {
+        self.prefill_adapter(prompt, cfg, None)
+    }
+
+    /// Like [`Generator::prefill`], routed through a registered adapter:
+    /// the row decodes under that adapter's slot for its whole lifetime
+    /// and pins it (ref-count) until `take`. With an adapter store
+    /// attached, every request must name an adapter — slot 0 is a real
+    /// adapter, not a base-model default; without one, `adapter` must be
+    /// `None` (plain single-LoRA artifacts).
+    pub fn prefill_adapter(
+        &self,
+        prompt: &str,
+        cfg: SampleCfg,
+        adapter: Option<AdapterId>,
+    ) -> Result<usize> {
         let cfg = SampleCfg { max_new: cfg.max_new.max(1), ..cfg };
         let mut st = self.state.borrow_mut();
+        let st = &mut *st;
         let row = st
             .rows
             .iter()
             .position(|r| r.is_none())
             .context("prefill: no free batch row")?;
+        match (st.adapters.as_mut(), adapter) {
+            (Some(ad), Some(id)) => {
+                // pin before the admission forward; released on failure
+                ad.acquire(id)
+                    .with_context(|| format!("prefill: adapter {id} not registered"))?;
+            }
+            (Some(_), None) => {
+                bail!("prefill: this generator serves per-request adapters; \
+                       the request names none")
+            }
+            (None, Some(id)) => {
+                bail!("prefill: adapter {id} requested but the generator has \
+                       no adapter store")
+            }
+            (None, None) => {}
+        }
         let mut ids = vec![BOS];
         ids.extend(self.tk.encode(prompt));
         ids.push(SEP);
         let (ids, start) = truncate_prompt(ids, self.seq_len(), cfg.max_new);
         if let Some(kv) = st.kv.as_mut() {
             // fill the cache first: on failure the row stays free
-            kv.admit(self.rt, row, &ids)?;
+            let kv_adapter = adapter.map(|id| id.ix() as i32);
+            if let Err(e) = kv.admit(self.rt, row, &ids, kv_adapter) {
+                if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
+                    ad.release(id).expect("acquired above");
+                }
+                return Err(e);
+            }
         }
         st.rows[row] = Some(RowState {
             seq: ids,
@@ -226,6 +382,7 @@ impl<'r> Generator<'r> {
             cfg,
             generated: 0,
             done: false,
+            adapter,
         });
         Ok(row)
     }
@@ -245,6 +402,19 @@ impl<'r> Generator<'r> {
         // the kv path yields (B, V) rows, the reforward path (B, S, V)
         // grids sliced at each row's frontier (borrowed, not copied —
         // this is the per-token hot path)
+        // per-row adapter routing: each row gathers its own adapter slot;
+        // free / adapter-less rows gather slot 0 (harmless: their samples
+        // are discarded or, with no store attached, slot 0 is zero-init)
+        let adapter_ix: Option<Vec<i32>> = self.adapter_group.as_ref().map(|_| {
+            st.rows
+                .iter()
+                .map(|slot| {
+                    slot.as_ref()
+                        .and_then(|r| r.adapter)
+                        .map_or(0, |id| id.ix() as i32)
+                })
+                .collect()
+        });
         let kv_logits;
         let re_out;
         let (lf, full_grid): (&[f32], bool) = match st.kv.as_mut() {
@@ -257,7 +427,7 @@ impl<'r> Generator<'r> {
                             .map(|r| (*r.seq.last().expect("row has a frontier"), r.seq.len() - 1))
                     })
                     .collect();
-                kv_logits = kv.step(self.rt, &feeds)?;
+                kv_logits = kv.step(self.rt, &feeds, adapter_ix.as_deref())?;
                 (kv_logits.f32s(), false)
             }
             None => {
@@ -269,6 +439,10 @@ impl<'r> Generator<'r> {
                     }
                 }
                 st.sess.set(self.rt, "tokens", &Tensor::from_i32(&[b, s], toks))?;
+                if let (Some(g), Some(ix)) = (self.adapter_group.as_ref(), &adapter_ix) {
+                    st.sess
+                        .set(self.rt, &g.input, &Tensor::from_i32(&[b], ix.clone()))?;
+                }
                 re_out = st.sess.run(self.rt)?;
                 (re_out.get("logits")?.f32s(), true)
             }
@@ -304,6 +478,9 @@ impl<'r> Generator<'r> {
         if let Some(kv) = st.kv.as_mut() {
             kv.evict(row).expect("occupied row has a cache slot");
         }
+        if let (Some(ad), Some(id)) = (st.adapters.as_mut(), r.adapter) {
+            ad.release(id).expect("row held an adapter reference");
+        }
         let tail = &r.seq[r.start..];
         let end = tail
             .iter()
@@ -327,10 +504,59 @@ impl<'r> Generator<'r> {
             "generate_batch needs an idle generator ({} rows in flight)",
             b - self.free_rows()
         );
-        let rows: Vec<usize> = prompts
-            .iter()
-            .map(|p| self.prefill(p, cfg))
-            .collect::<Result<_>>()?;
+        let rows = self.admit_all(prompts.iter().map(|p| (p.as_str(), None)), cfg)?;
+        loop {
+            if self.decode_step(rng)?.is_empty() {
+                break;
+            }
+        }
+        rows.into_iter()
+            .map(|r| self.take(r).context("decode row vanished"))
+            .collect()
+    }
+
+    /// Admit a sequence of (prompt, adapter) requests; on any failure the
+    /// already-admitted rows are taken back (freeing their slots, cache
+    /// rows and adapter pins) before the error propagates, so a partial
+    /// batch never strands the generator non-idle.
+    fn admit_all<'a>(
+        &self,
+        reqs: impl Iterator<Item = (&'a str, Option<AdapterId>)>,
+        cfg: SampleCfg,
+    ) -> Result<Vec<usize>> {
+        let mut rows = vec![];
+        for (prompt, adapter) in reqs {
+            match self.prefill_adapter(prompt, cfg, adapter) {
+                Ok(row) => rows.push(row),
+                Err(e) => {
+                    for row in rows {
+                        let _ = self.take(row);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Like [`Generator::generate_batch`] but each prompt routes through
+    /// its own registered adapter — a heterogeneous-adapter batch through
+    /// one compiled artifact.
+    pub fn generate_adapter_batch(
+        &self,
+        reqs: &[(String, AdapterId)],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch_size();
+        assert!(reqs.len() <= b);
+        ensure!(
+            self.free_rows() == b,
+            "generate_adapter_batch needs an idle generator ({} rows in flight)",
+            b - self.free_rows()
+        );
+        let rows =
+            self.admit_all(reqs.iter().map(|(p, id)| (p.as_str(), Some(*id))), cfg)?;
         loop {
             if self.decode_step(rng)?.is_empty() {
                 break;
@@ -350,6 +576,43 @@ impl<'r> Generator<'r> {
             }
         }
         Ok(out)
+    }
+}
+
+/// Stage every freshly registered adapter slot into the given sessions;
+/// the device upload happens at each session's next run (Session-level
+/// dirty tracking), so back-to-back registrations upload once.
+fn stage_dirty_adapters(
+    ad: &mut AdapterStore,
+    sess: &mut Session,
+    mut kv: Option<&mut KvDecoder>,
+) -> Result<()> {
+    for id in ad.drain_dirty() {
+        let w = ad.weights(id)?;
+        sess.put_group("adapter", id.ix(), w)?;
+        if let Some(kv) = kv.as_deref_mut() {
+            kv.put_adapter(id.ix(), w)?;
+        }
+    }
+    Ok(())
+}
+
+/// Stage a just-registered adapter; on failure (e.g. an `.lmck` trained
+/// for a different config whose factor shapes don't fit the stack), the
+/// registration is rolled back so the store never resolves a name to a
+/// half-staged slot — the slot stays free for a corrected retry.
+fn finish_registration(
+    ad: &mut AdapterStore,
+    id: AdapterId,
+    sess: &mut Session,
+    kv: Option<&mut KvDecoder>,
+) -> Result<AdapterId> {
+    match stage_dirty_adapters(ad, sess, kv) {
+        Ok(()) => Ok(id),
+        Err(e) => {
+            ad.evict(id).expect("just-registered adapter has no refs");
+            Err(e)
+        }
     }
 }
 

@@ -20,6 +20,7 @@
 use crate::runtime::{Runtime, Session};
 use crate::tensor::{Tensor, TensorStore};
 use crate::tokenizer::{pad_to, PAD};
+use crate::util::log;
 use anyhow::{bail, ensure, Context, Result};
 
 /// Pure per-row cache bookkeeping: which rows hold a cache, and how many
@@ -111,11 +112,15 @@ pub struct KvDecoder {
     batch: usize,
     seq: usize,
     vocab: usize,
+    /// gather input name when the pair serves a stacked adapter group
+    adapter_in: Option<String>,
 }
 
 impl KvDecoder {
-    /// Load the decode artifact pair for `model`; `Ok(None)` when either
-    /// artifact is absent (the caller falls back to full reforward).
+    /// Load the decode artifact pair for `model`; `Ok(None)` when the pair
+    /// is absent (the caller falls back to full reforward). A *half*
+    /// -registered pair is almost certainly an emission mistake — it also
+    /// falls back, but loudly, naming the missing artifact.
     pub fn try_new(
         rt: &Runtime,
         model: &str,
@@ -123,8 +128,26 @@ impl KvDecoder {
     ) -> Result<Option<KvDecoder>> {
         let pname = format!("decode_prefill_{model}");
         let sname = format!("decode_step_{model}");
-        let Ok(pa) = rt.load(&pname) else { return Ok(None) };
-        let Ok(sa) = rt.load(&sname) else { return Ok(None) };
+        let (pa, sa) = match (rt.load(&pname), rt.load(&sname)) {
+            (Ok(pa), Ok(sa)) => (pa, sa),
+            (Ok(_), Err(_)) => {
+                log::warn(format!(
+                    "decode pair for '{model}' incomplete: '{pname}' is \
+                     registered but '{sname}' is missing — falling back to \
+                     full reforward"
+                ));
+                return Ok(None);
+            }
+            (Err(_), Ok(_)) => {
+                log::warn(format!(
+                    "decode pair for '{model}' incomplete: '{sname}' is \
+                     registered but '{pname}' is missing — falling back to \
+                     full reforward"
+                ));
+                return Ok(None);
+            }
+            (Err(_), Err(_)) => return Ok(None),
+        };
         let (b, s) = (sa.meta.batch(), sa.meta.seq());
         ensure!(
             pa.meta.batch() == b && pa.meta.seq() == s,
@@ -145,6 +168,21 @@ impl KvDecoder {
             );
         }
         let vocab = sa.meta.config.vocab_size;
+        // an adapter group must be declared by both halves identically:
+        // the same registered slot serves admission and every step
+        let pg = pa.meta.adapter_group()?;
+        let sg = sa.meta.adapter_group()?;
+        let adapter_in = match (&pg, &sg) {
+            (Some(p), Some(s)) => {
+                ensure!(
+                    p.size == s.size && p.members == s.members && p.input == s.input,
+                    "adapter group differs between {pname} and {sname}"
+                );
+                Some(s.input.clone())
+            }
+            (None, None) => None,
+            _ => bail!("adapter group declared by only one of {pname}/{sname}"),
+        };
         let prefill = Session::new(rt, pa, stores)?;
         let step = Session::new(rt, sa, stores)?;
         Ok(Some(KvDecoder {
@@ -155,7 +193,20 @@ impl KvDecoder {
             batch: b,
             seq: s,
             vocab,
+            adapter_in,
         }))
+    }
+
+    /// Adapter slots the pair's artifacts stack (group size), if any.
+    pub fn adapter_capacity(&self) -> Option<usize> {
+        self.step.group_size("adapter")
+    }
+
+    /// Stage one adapter slot's factors into both sessions (uploaded at
+    /// each session's next run; see `Session::put_group`).
+    pub fn put_adapter(&mut self, ix: usize, weights: &TensorStore) -> Result<()> {
+        self.prefill.put_group("adapter", ix, weights)?;
+        self.step.put_group("adapter", ix, weights)
     }
 
     pub fn batch_size(&self) -> usize {
@@ -169,8 +220,15 @@ impl KvDecoder {
     /// Admit a row: run the prefill artifact over its sequence, writing
     /// this row's cache while every other row's passes through untouched
     /// (mid-decode admission never perturbs in-flight rows), then donate
-    /// the caches back into the step session.
-    pub fn admit(&mut self, rt: &Runtime, row: usize, seq: &[i32]) -> Result<()> {
+    /// the caches back into the step session. On a stacked-adapter pair,
+    /// `adapter_ix` names the slot the row decodes under for its lifetime.
+    pub fn admit(
+        &mut self,
+        rt: &Runtime,
+        row: usize,
+        seq: &[i32],
+        adapter_ix: Option<i32>,
+    ) -> Result<()> {
         ensure!(row < self.batch, "kvcache: admit into out-of-range row {row}");
         ensure!(
             !seq.is_empty() && seq.len() <= self.seq,
@@ -181,12 +239,25 @@ impl KvDecoder {
         let (b, s) = (self.batch, self.seq);
         let mut onehot = vec![0.0f32; b];
         onehot[row] = 1.0;
-        let Self { prefill, step, cache_names, .. } = self;
+        let Self { prefill, step, cache_names, adapter_in, .. } = self;
         // stage the row inputs before touching the caches, so an invalid
         // input cannot strand them mid-handoff
         prefill.set(rt, "tokens", &Tensor::from_i32(&[1, s], pad_to(seq, s)))?;
         prefill.set(rt, "last_pos", &Tensor::from_i32(&[], vec![(seq.len() - 1) as i32]))?;
         prefill.set(rt, "row_onehot", &Tensor::from_f32(&[b], onehot))?;
+        match (adapter_in.as_deref(), adapter_ix) {
+            (Some(name), ix) => {
+                // an adapter-less admission on a stacked pair decodes
+                // under slot 0's zero-init identity only if the caller
+                // routes every row that way; the Generator enforces the
+                // policy — here slot 0 is simply the default gather
+                prefill.set(rt, name, &Tensor::from_i32(&[], vec![ix.unwrap_or(0)]))?;
+            }
+            (None, Some(_)) => {
+                bail!("kvcache: adapter admission on a pair with no adapter group")
+            }
+            (None, None) => {}
+        }
         // between calls the caches live in the step session; route them
         // through the prefill session for this admission
         step.donate_slots(prefill, cache_names)?;
@@ -203,8 +274,14 @@ impl KvDecoder {
     /// One incremental step over the whole grid: feeds each occupied row's
     /// frontier `(token, pos)` (free rows get dummies whose cache writes
     /// are rewritten at their next admission) and returns next-token
-    /// logits (B, V) on the host.
-    pub fn step(&mut self, rt: &Runtime, feeds: &[Option<(i32, usize)>]) -> Result<Tensor> {
+    /// logits (B, V) on the host. On a stacked-adapter pair `adapter_ix`
+    /// carries each row's slot (free rows gather slot 0, harmlessly).
+    pub fn step(
+        &mut self,
+        rt: &Runtime,
+        feeds: &[Option<(i32, usize)>],
+        adapter_ix: Option<&[i32]>,
+    ) -> Result<Tensor> {
         ensure!(
             feeds.len() == self.batch,
             "kvcache: {} feeds for batch {}",
@@ -230,9 +307,33 @@ impl KvDecoder {
                 }
             }
         }
-        self.step.set(rt, "tokens", &Tensor::from_i32(&[self.batch, 1], toks))?;
-        self.step.set(rt, "pos", &Tensor::from_i32(&[self.batch], pos))?;
-        let out = self.step.run(rt)?;
+        let batch = self.batch;
+        // split-borrow so the gather-input name needn't be cloned on the
+        // per-token hot path
+        let Self { step, adapter_in, .. } = self;
+        step.set(rt, "tokens", &Tensor::from_i32(&[batch, 1], toks))?;
+        step.set(rt, "pos", &Tensor::from_i32(&[batch], pos))?;
+        match (adapter_in.as_deref(), adapter_ix) {
+            (Some(name), ix) => {
+                let ix = match ix {
+                    Some(v) => {
+                        ensure!(
+                            v.len() == batch,
+                            "kvcache: {} adapter feeds for batch {batch}",
+                            v.len()
+                        );
+                        v.to_vec()
+                    }
+                    None => vec![0; batch],
+                };
+                step.set(rt, name, &Tensor::from_i32(&[batch], ix))?;
+            }
+            (None, Some(_)) => {
+                bail!("kvcache: adapter feeds on a pair with no adapter group")
+            }
+            (None, None) => {}
+        }
+        let out = step.run(rt)?;
         let logits = out.get("logits")?;
         if logits.shape != [self.batch, self.vocab] {
             bail!(

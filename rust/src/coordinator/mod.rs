@@ -2,6 +2,7 @@
 //! pipeline, evaluators, generation, analysis, and the per-table/figure
 //! experiment runners.
 
+pub mod adapters;
 pub mod analysis;
 pub mod downstream;
 pub mod evaluate;
@@ -11,5 +12,6 @@ pub mod kvcache;
 pub mod pipeline;
 pub mod train;
 
+pub use adapters::{AdapterId, AdapterStore};
 pub use pipeline::{Pipeline, PipelineConfig, Variant};
 pub use train::TrainSession;

@@ -76,6 +76,11 @@ pub struct PipelineConfig {
     pub eval_seqs: usize,  // held-out sequences per ppl point
     pub align: bool,       // false = "w/o Alignment" ablation
     pub run_dir: PathBuf,  // cache directory for base checkpoints
+    /// export the recovered adapter into this `AdapterStore` directory
+    /// right after R(·) — the training→serving handoff (DESIGN.md §2c)
+    pub adapter_dir: Option<PathBuf>,
+    /// adapter name for the export (default: `<base>_<variant>`)
+    pub adapter_name: Option<String>,
 }
 
 impl Default for PipelineConfig {
@@ -98,6 +103,8 @@ impl Default for PipelineConfig {
             eval_seqs: 32,
             align: true,
             run_dir: PathBuf::from("runs"),
+            adapter_dir: None,
+            adapter_name: None,
         }
     }
 }
@@ -316,6 +323,19 @@ impl<'r> Pipeline<'r> {
 
         let lora_pruned = sess.extract(&lnames)?;
         let lora_recovered = self.recover(&lora_pruned, &full_cfg, plan.as_ref())?;
+        // the training→serving handoff: recovered factors land in the
+        // adapter store as a first-class, servable adapter
+        if let Some(dir) = &cfg.adapter_dir {
+            let name = cfg.adapter_name.clone().unwrap_or_else(|| {
+                format!("{}_{}", cfg.base, format!("{:?}", cfg.variant).to_lowercase())
+            });
+            let path = crate::coordinator::adapters::AdapterStore::save(
+                dir,
+                &name,
+                &lora_recovered,
+            )?;
+            log::info(format!("adapter '{name}' exported to {}", path.display()));
+        }
         Ok(PipelineResult {
             base_params,
             pruned_params,

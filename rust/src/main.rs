@@ -28,7 +28,7 @@ use loram::tensor::TensorStore;
 use loram::util::cli::Args;
 use loram::util::log;
 use loram::util::rng::Rng;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::from_env();
@@ -80,9 +80,13 @@ usage: loram <subcommand> [--key value] [--flag]
   pipeline   --base tiny --pruned tiny_p50 --variant stru|rand|semi|unst|lora
              [--quantized] [--no-align] [--dataset hermes|orca]
              [--pretrain-steps N --align-steps N --sft-steps N] [--save out.lmck]
+             [--adapter-dir adapters/ [--adapter-name math]]  export after R(·)
   eval       --base tiny [--lora f.lmck] [--dataset alpaca] [--n 32]
   generate   --base tiny --prompt 'Q: 2+3=' [--temperature 0.4] [--max-new 16]
   serve      --base tiny --requests 16      batched generation service demo
+             [--adapters dir/]  multi-adapter serving: route each request
+                                through one of the dir's .lmck adapters
+             [--decode-path auto|reforward|kvcache]
   downstream --base tiny [--lora f.lmck]    math / CSR / code battery
   memory                                    paper Tables 4-6 (exact, analytic)
   repro      --exp fig3|fig4|tab1|fig5|fig6|fig7|fig8|tab456|tab7|tab8|fig16|appD|all
@@ -176,6 +180,8 @@ fn parse_pipeline_cfg(args: &Args) -> Result<PipelineConfig> {
         eval_seqs: args.get_usize("eval-seqs", 16),
         align: !args.has_flag("no-align"),
         run_dir: PathBuf::from(args.get_or("run-dir", "runs")),
+        adapter_dir: args.get("adapter-dir").map(PathBuf::from),
+        adapter_name: args.get("adapter-name").map(String::from),
     })
 }
 
@@ -265,29 +271,79 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
         "kvcache" => Some(loram::coordinator::generate::DecodePath::KvCache),
         _ => None,
     };
-    let gen = Generator::with_path(rt, &format!("logits_{base}"), &[&params, &lora], path)?;
-    println!("decode path: {}", gen.decode_path().name());
-    let mut server = Server::new(gen, 0);
     let n = args.get_usize("requests", 8);
     let mut ig = loram::data::instruct::InstructGen::new(Dataset::Hermes, 1, 1);
-    for i in 0..n {
-        let (ex, _) = ig.next();
-        // mixed per-request sampling configs: the continuous-batching
-        // scheduler decodes them in one batch anyway
-        let cfg = SampleCfg {
-            temperature: if i % 2 == 0 { 0.0 } else { 0.4 },
-            top_p: if i % 3 == 0 { 0.95 } else { 0.8 },
-            max_new: 8 + 4 * (i % 2),
-        };
-        server.enqueue(ex.instruction, cfg);
-    }
+
+    // --adapters dir/: serve the stacked-adapter artifact, one frozen base
+    // + every .lmck adapter in the directory, routed per request
+    let mut server = if let Some(dir) = args.get("adapters") {
+        if args.get("lora").is_some() {
+            loram::util::log::warn(
+                "--lora is ignored under --adapters: the stacked artifact \
+                 serves the base model plus the directory's adapters only",
+            );
+        }
+        let art_name = stacked_artifact_name(rt, base)?
+            .with_context(|| format!("no stacked logits_{base}_a<N> artifact registered"))?;
+        let gen = Generator::with_adapters(
+            rt,
+            &art_name,
+            &[&params],
+            path,
+            Some(PathBuf::from(dir)),
+        )?;
+        let cap = gen.adapter_capacity().unwrap_or(0);
+        let names = loram::coordinator::adapters::AdapterStore::list(Path::new(dir))?;
+        anyhow::ensure!(!names.is_empty(), "no .lmck adapters in {dir}");
+        if names.len() > cap {
+            loram::util::log::warn(format!(
+                "{} adapters in {dir} but '{art_name}' stacks only {cap} \
+                 slots; serving the first {cap}",
+                names.len()
+            ));
+        }
+        let mut ids = vec![];
+        for name in names.iter().take(cap) {
+            let id = gen.register_adapter_from_disk(name)?;
+            println!("adapter {id}: {name}");
+            ids.push(id);
+        }
+        println!("decode path: {} ({art_name}, {} adapters)", gen.decode_path().name(), ids.len());
+        let mut server = Server::new(gen, 0);
+        for i in 0..n {
+            let (ex, _) = ig.next();
+            server.enqueue_adapter(
+                ex.instruction,
+                serve_cfg(i),
+                Some(ids[i % ids.len()]),
+            );
+        }
+        server
+    } else {
+        let gen = Generator::with_path(rt, &format!("logits_{base}"), &[&params, &lora], path)?;
+        println!("decode path: {}", gen.decode_path().name());
+        let mut server = Server::new(gen, 0);
+        for i in 0..n {
+            let (ex, _) = ig.next();
+            // mixed per-request sampling configs: the continuous-batching
+            // scheduler decodes them in one batch anyway
+            server.enqueue(ex.instruction, serve_cfg(i));
+        }
+        server
+    };
+
     let t0 = std::time::Instant::now();
     let responses = server.drain()?;
     let dt = t0.elapsed().as_secs_f64();
     for r in responses.iter().take(4) {
         println!(
-            "#{:<3} [ttft {:>6.1} ms, total {:>6.1} ms, rows={}] {}",
-            r.id, r.ttft_ms, r.latency_ms, r.batch_rows, r.text
+            "#{:<3} [{} ttft {:>6.1} ms, total {:>6.1} ms, rows={}] {}",
+            r.id,
+            loram::serve::adapter_label(r.adapter),
+            r.ttft_ms,
+            r.latency_ms,
+            r.batch_rows,
+            r.text
         );
     }
     let st = &server.stats;
@@ -302,7 +358,36 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
         st.mean_queue_wait_ms(),
         st.peak_queue_depth
     );
+    for (adapter, lane) in &st.per_adapter {
+        let name = adapter
+            .and_then(|id| server.engine.adapter_name(id))
+            .unwrap_or_default();
+        println!(
+            "  [{}] {name}: {} req, {:.1} tok/s, mean ttft {:.1} ms",
+            loram::serve::adapter_label(*adapter),
+            lane.requests,
+            lane.tokens_per_sec(st.decode_ms),
+            lane.mean_ttft_ms()
+        );
+    }
     Ok(())
+}
+
+/// Mixed per-request sampling configs for the serve demo workload.
+fn serve_cfg(i: usize) -> SampleCfg {
+    SampleCfg {
+        temperature: if i % 2 == 0 { 0.0 } else { 0.4 },
+        top_p: if i % 3 == 0 { 0.95 } else { 0.8 },
+        max_new: 8 + 4 * (i % 2),
+    }
+}
+
+/// First `logits_<base>_a<N>` artifact in the manifest (the stacked
+/// multi-adapter serving artifact for this base model). A manifest read
+/// failure propagates — it must not masquerade as "no such artifact".
+fn stacked_artifact_name(rt: &Runtime, base: &str) -> Result<Option<String>> {
+    let manifest = rt.manifest().context("read artifact manifest")?;
+    Ok(loram::coordinator::adapters::stacked_logits_artifact(&manifest, base))
 }
 
 fn cmd_downstream(rt: &Runtime, args: &Args) -> Result<()> {

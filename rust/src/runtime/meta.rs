@@ -3,7 +3,7 @@
 
 use crate::tensor::Dtype;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 #[derive(Debug, Clone)]
@@ -164,6 +164,21 @@ impl ModelCfg {
     }
 }
 
+/// A named *slot group*: a family of stacked inputs whose leading axis
+/// holds `size` interchangeable slots, gathered per batch row by the
+/// `input` tensor (e.g. the adapter group: every LoRA factor stacked
+/// `(n_adapters, ...)`, selected by `adapter_ix`). Declared by aot.py in
+/// `extra.slot_groups`; `Session::put_group` uploads one slot's worth of
+/// member rows and re-uploads only dirty members.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotGroup {
+    pub name: String,
+    /// the int32 input that selects a slot per row (e.g. `adapter_ix`)
+    pub input: String,
+    pub size: usize,
+    pub members: Vec<String>,
+}
+
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
     pub name: String,
@@ -280,6 +295,54 @@ impl ArtifactMeta {
                 Some((o.name.clone(), target))
             })
             .collect()
+    }
+
+    /// Declared slot groups (`extra.slot_groups`), e.g. the adapter group
+    /// of the multi-adapter serving artifacts. A malformed declaration is
+    /// an error, never silently an adapter-less artifact — the python
+    /// mirror (`compile.meta_check`) rejects the same shapes.
+    pub fn slot_groups(&self) -> Result<Vec<SlotGroup>> {
+        let m = match self.extra.get("slot_groups") {
+            None => return Ok(vec![]),
+            Some(Json::Obj(m)) => m,
+            Some(_) => bail!(
+                "artifact {}: extra.slot_groups must be an object",
+                self.name
+            ),
+        };
+        m.iter()
+            .map(|(name, g)| {
+                let err = |what: &str| {
+                    format!("artifact {}: slot group '{name}' {what}", self.name)
+                };
+                let input = g
+                    .get("input")
+                    .and_then(|v| v.as_str())
+                    .with_context(|| err("has no gather input"))?
+                    .to_string();
+                let size = g
+                    .get("size")
+                    .and_then(|v| v.as_usize())
+                    .with_context(|| err("has no integer size"))?;
+                let members = g
+                    .get("members")
+                    .and_then(|v| v.as_arr())
+                    .with_context(|| err("has no member list"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(String::from)
+                            .with_context(|| err("has a non-string member"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(SlotGroup { name: name.clone(), input, size, members })
+            })
+            .collect()
+    }
+
+    /// The adapter slot group, when this artifact serves stacked adapters.
+    pub fn adapter_group(&self) -> Result<Option<SlotGroup>> {
+        Ok(self.slot_groups()?.into_iter().find(|g| g.name == "adapter"))
     }
 
     /// Inputs a `Session` may zero-initialise when the caller does not
@@ -410,6 +473,35 @@ mod tests {
         assert!(binds.contains(&("new_v.w".into(), "adam_v.w".into())));
         assert!(!binds.iter().any(|(o, _)| o == "loss"));
         assert_eq!(m.zero_init_names(), vec!["adam_m.w", "adam_v.w"]);
+    }
+
+    #[test]
+    fn slot_groups_parse_from_extra() {
+        let m = train_meta(
+            r#", "extra": {"slot_groups": {"adapter": {
+                "input": "adapter_ix", "size": 3,
+                "members": ["l0.wq.lora_a", "l0.wq.lora_b"]}}}"#,
+        );
+        let gs = m.slot_groups().unwrap();
+        assert_eq!(gs.len(), 1);
+        let g = m.adapter_group().unwrap().unwrap();
+        assert_eq!(g.input, "adapter_ix");
+        assert_eq!(g.size, 3);
+        assert_eq!(g.members, vec!["l0.wq.lora_a", "l0.wq.lora_b"]);
+        // artifacts without the declaration have no groups
+        assert!(train_meta("").adapter_group().unwrap().is_none());
+        // a malformed declaration is an error, not an adapter-less meta
+        let bad = train_meta(
+            r#", "extra": {"slot_groups": {"adapter": {"input": "x",
+                 "members": ["l0.wq.lora_a"]}}}"#,
+        );
+        let err = bad.slot_groups().unwrap_err().to_string();
+        assert!(err.contains("integer size"), "{err}");
+        assert!(bad.adapter_group().is_err());
+        // non-object slot_groups is malformed too, never adapter-less
+        let arr = train_meta(r#", "extra": {"slot_groups": []}"#);
+        let err = arr.slot_groups().unwrap_err().to_string();
+        assert!(err.contains("must be an object"), "{err}");
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::time::Instant;
 pub mod meta;
 pub mod session;
 
-pub use meta::{ArtifactMeta, IoSpec, ModelCfg};
+pub use meta::{ArtifactMeta, IoSpec, ModelCfg, SlotGroup};
 pub use session::{host_path_forced, BackendKind, Session, SlotValue};
 
 /// The PJRT client plus a compile cache over loaded artifacts.

@@ -24,9 +24,9 @@
 //! executions, execute time, and the h2d/d2h bytes they actually move.
 
 use super::{literal_to_tensor, tensor_to_literal, Artifact, Runtime};
-use crate::tensor::{Data, Tensor, TensorStore};
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use crate::tensor::{Data, Dtype, Tensor, TensorStore};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeSet, HashMap};
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -69,12 +69,27 @@ pub enum SlotValue {
     Device(xla::PjRtBuffer),
 }
 
+/// A resolved slot group: member input slots whose stacked leading axis
+/// holds `size` interchangeable rows (see `ArtifactMeta::slot_groups`).
+pub(crate) struct GroupState {
+    pub(crate) size: usize,
+    pub(crate) member_slots: Vec<usize>,
+}
+
 pub struct Session {
     pub art: Rc<Artifact>,
     name_to_slot: HashMap<String, usize>,
     /// output index -> input slot it donates back into (state threading)
     out_bind: Vec<Option<usize>>,
     slots: Slots,
+    /// declared slot groups (e.g. the adapter group), by name
+    groups: HashMap<String, GroupState>,
+    /// every slot that belongs to some group (staging sync in `set`)
+    group_member_slots: BTreeSet<usize>,
+    /// host staging for group member slots: `put_group` writes rows here,
+    /// `run` re-uploads only the members something actually changed in
+    stage: HashMap<usize, Tensor>,
+    dirty: BTreeSet<usize>,
 }
 
 /// Resolve the meta's declared output→input bindings to positional form,
@@ -118,6 +133,90 @@ pub(crate) fn resolve_bindings(
     Ok(out_bind)
 }
 
+/// Resolve the meta's declared slot groups: the gather input must exist
+/// (int32), every member must be an input whose leading dim equals the
+/// group size. Mirrored in python by `compile.meta_check`.
+pub(crate) fn resolve_groups(
+    meta: &super::ArtifactMeta,
+    name_to_slot: &HashMap<String, usize>,
+) -> Result<HashMap<String, GroupState>> {
+    let mut out = HashMap::new();
+    let mut seen_members: HashMap<usize, String> = HashMap::new();
+    for g in meta.slot_groups()? {
+        ensure!(g.size >= 1, "artifact {}: slot group '{}' has size 0", meta.name, g.name);
+        let gather = name_to_slot.get(&g.input).with_context(|| {
+            format!(
+                "artifact {}: slot group '{}' gather input '{}' is not an input",
+                meta.name, g.name, g.input
+            )
+        })?;
+        ensure!(
+            meta.inputs[*gather].dtype == Dtype::I32,
+            "artifact {}: slot group '{}' gather input '{}' must be int32",
+            meta.name,
+            g.name,
+            g.input
+        );
+        let mut member_slots = Vec::with_capacity(g.members.len());
+        for m in &g.members {
+            let slot = *name_to_slot.get(m).with_context(|| {
+                format!(
+                    "artifact {}: slot group '{}' member '{m}' is not an input",
+                    meta.name, g.name
+                )
+            })?;
+            let shape = &meta.inputs[slot].shape;
+            ensure!(
+                shape.first() == Some(&g.size),
+                "artifact {}: slot group '{}' member '{m}' shape {shape:?} \
+                 does not stack {} slots",
+                meta.name,
+                g.name,
+                g.size
+            );
+            // a member shared across groups would let one group's flush
+            // clobber rows the other staged (the python mirror rejects
+            // the same meta)
+            if let Some(other) = seen_members.insert(slot, g.name.clone()) {
+                bail!(
+                    "artifact {}: slot group member '{m}' repeats across \
+                     groups '{other}' and '{}'",
+                    meta.name,
+                    g.name
+                );
+            }
+            member_slots.push(slot);
+        }
+        ensure!(
+            !member_slots.is_empty(),
+            "artifact {}: slot group '{}' has no members",
+            meta.name,
+            g.name
+        );
+        out.insert(g.name.clone(), GroupState { size: g.size, member_slots });
+    }
+    Ok(out)
+}
+
+/// Copy one slot's worth of data (`row`) into position `ix` of a stacked
+/// staging tensor. Pure so the row math is unit-testable.
+pub(crate) fn write_group_row(staged: &mut Tensor, ix: usize, row: &Tensor) -> Result<()> {
+    ensure!(
+        staged.shape.len() == row.shape.len() + 1 && staged.shape[1..] == row.shape[..],
+        "group row shape {:?} does not fit stacked {:?}",
+        row.shape,
+        staged.shape
+    );
+    ensure!(ix < staged.shape[0], "group row {ix} out of {} slots", staged.shape[0]);
+    let n = row.len();
+    match (&mut staged.data, &row.data) {
+        (Data::F32(dst), Data::F32(src)) => dst[ix * n..(ix + 1) * n].copy_from_slice(src),
+        (Data::I32(dst), Data::I32(src)) => dst[ix * n..(ix + 1) * n].copy_from_slice(src),
+        _ => bail!("group row dtype mismatch"),
+    }
+    Ok(())
+}
+
 impl Session {
     /// Backend from `LORAM_HOST_PATH`; uploads every tensor in `stores`
     /// that the artifact wants. Remaining inputs (tokens, scalars, ...)
@@ -138,12 +237,26 @@ impl Session {
             name_to_slot.insert(spec.name.clone(), i);
         }
         let out_bind = resolve_bindings(&art.meta, &name_to_slot)?;
+        let groups = resolve_groups(&art.meta, &name_to_slot)?;
         let n = art.meta.inputs.len();
         let slots = match kind {
             BackendKind::Host => Slots::Host((0..n).map(|_| None).collect()),
             BackendKind::Device => Slots::Device((0..n).map(|_| None).collect()),
         };
-        let mut sess = Session { art, name_to_slot, out_bind, slots };
+        let group_member_slots = groups
+            .values()
+            .flat_map(|g| g.member_slots.iter().copied())
+            .collect();
+        let mut sess = Session {
+            art,
+            name_to_slot,
+            out_bind,
+            slots,
+            groups,
+            group_member_slots,
+            stage: HashMap::new(),
+            dirty: BTreeSet::new(),
+        };
         for store in stores {
             for (name, t) in &store.map {
                 if sess.name_to_slot.contains_key(name) {
@@ -191,11 +304,27 @@ impl Session {
             .name_to_slot
             .get(name)
             .with_context(|| format!("artifact {} has no input '{name}'", self.art.meta.name))?;
+        self.upload_slot(rt, slot, t)?;
+        // a group member set whole keeps its staging copy in sync, so a
+        // later put_group row-write starts from the uploaded stack, never
+        // from zeros (which would wipe the other slots at the next flush).
+        // Sync strictly after the upload succeeded: a failed set must not
+        // mark a stale member clean.
+        if self.group_member_slots.contains(&slot) {
+            self.stage.insert(slot, t.clone());
+            self.dirty.remove(&slot);
+        }
+        Ok(())
+    }
+
+    /// Validate and upload into a slot, with no group-staging bookkeeping
+    /// (shared by `set` and `flush_groups`).
+    fn upload_slot(&mut self, rt: &Runtime, slot: usize, t: &Tensor) -> Result<()> {
         let spec = &self.art.meta.inputs[slot];
         if t.shape != spec.shape || t.dtype() != spec.dtype {
             bail!(
-                "input '{name}': got {:?}/{:?}, want {:?}/{:?}",
-                t.shape, t.dtype(), spec.shape, spec.dtype
+                "input '{}': got {:?}/{:?}, want {:?}/{:?}",
+                spec.name, t.shape, t.dtype(), spec.shape, spec.dtype
             );
         }
         match &mut self.slots {
@@ -214,9 +343,70 @@ impl Session {
         Ok(())
     }
 
+    /// Stage one slot of a named group: write `store`'s member tensors
+    /// (keyed by their *un-stacked* member names) into row `ix` of the
+    /// stacked staging copies and mark those members dirty. The device
+    /// upload is deferred to the next `run`, so swapping several slots
+    /// back-to-back re-uploads each member tensor once, not once per slot
+    /// — and a run with no group churn uploads nothing.
+    pub fn put_group(&mut self, group: &str, ix: usize, store: &TensorStore) -> Result<()> {
+        let (size, member_slots) = {
+            let g = self.groups.get(group).with_context(|| {
+                format!("artifact {} declares no slot group '{group}'", self.art.meta.name)
+            })?;
+            (g.size, g.member_slots.clone())
+        };
+        ensure!(
+            ix < size,
+            "slot group '{group}': slot {ix} out of {size} slots"
+        );
+        for slot in member_slots {
+            let spec = &self.art.meta.inputs[slot];
+            let row = store.get(&spec.name).with_context(|| {
+                format!("put_group '{group}' slot {ix}: missing member")
+            })?;
+            let staged = self.stage.entry(slot).or_insert_with(|| match spec.dtype {
+                Dtype::F32 => Tensor::zeros(&spec.shape),
+                Dtype::I32 => Tensor::from_i32(
+                    &spec.shape,
+                    vec![0; spec.shape.iter().product()],
+                ),
+            });
+            write_group_row(staged, ix, row)
+                .with_context(|| format!("put_group '{group}' member '{}'", spec.name))?;
+            self.dirty.insert(slot);
+        }
+        Ok(())
+    }
+
+    /// Size of a declared slot group (e.g. adapter capacity).
+    pub fn group_size(&self, group: &str) -> Option<usize> {
+        self.groups.get(group).map(|g| g.size)
+    }
+
+    /// Upload every dirty group member's staged stack into its slot. A
+    /// member's dirty flag clears only after its upload succeeds, so a
+    /// transient failure leaves the remaining members (and the failed one)
+    /// queued for the next attempt — a retried run can never silently
+    /// serve a stale member.
+    fn flush_groups(&mut self, rt: &Runtime) -> Result<()> {
+        while let Some(&slot) = self.dirty.iter().next() {
+            let t = self.stage.remove(&slot).expect("dirty slot has staging");
+            // raw upload: staging already holds the truth, and `set`'s
+            // group sync would both clone redundantly and clear the dirty
+            // flag before the upload is known to have succeeded
+            let res = self.upload_slot(rt, slot, &t);
+            self.stage.insert(slot, t);
+            res?;
+            self.dirty.remove(&slot);
+        }
+        Ok(())
+    }
+
     /// Execute once. Bound state outputs donate back onto their input
     /// slots; every other output is fetched to the host and returned.
     pub fn run(&mut self, rt: &Runtime) -> Result<TensorStore> {
+        self.flush_groups(rt)?;
         let art = self.art.clone();
         let mut host = TensorStore::new();
         match &mut self.slots {
@@ -456,5 +646,83 @@ mod tests {
                  {"new.w": "tokens", "new_m.w": "adam_m.w", "new_v.w": "adam_v.w"}}"#,
         );
         assert!(resolve_bindings(&m, &slots(&m)).is_err());
+    }
+
+    const ADAPTER_META: &str = r#"{
+      "name": "t", "config": {"name":"tiny","vocab_size":512,"d_model":64,
+        "n_layers":1,"n_heads":2,"n_kv_heads":2,"d_ff":160,"max_seq":64,
+        "lora_rank":8,"lora_alpha":16.0,"lora_lm_head":true},
+      "inputs": [
+        {"name":"tokens","shape":[2,8],"dtype":"int32"},
+        {"name":"adapter_ix","shape":[2],"dtype":"int32"},
+        {"name":"l0.wq.lora_a","shape":[3,4,2],"dtype":"float32"},
+        {"name":"l0.wq.lora_b","shape":[3,2,4],"dtype":"float32"}
+      ],
+      "outputs": [{"name":"logits","shape":[2,8],"dtype":"float32"}],
+      "extra": {"slot_groups": {"adapter": {
+        "input": "adapter_ix", "size": 3,
+        "members": ["l0.wq.lora_a", "l0.wq.lora_b"]}}}
+    }"#;
+
+    fn adapter_meta() -> ArtifactMeta {
+        ArtifactMeta::from_json(&Json::parse(ADAPTER_META).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn groups_resolve_members_and_validate_stacking() {
+        let m = adapter_meta();
+        let gs = resolve_groups(&m, &slots(&m)).unwrap();
+        let g = &gs["adapter"];
+        assert_eq!(g.size, 3);
+        assert_eq!(g.member_slots, vec![2, 3]);
+    }
+
+    #[test]
+    fn group_with_unstacked_member_is_rejected() {
+        // size 5 no longer matches the members' leading dim of 3
+        let mut m = adapter_meta();
+        m.extra = Json::parse(
+            r#"{"slot_groups": {"adapter": {"input": "adapter_ix",
+                "size": 5, "members": ["l0.wq.lora_a"]}}}"#,
+        )
+        .unwrap();
+        let err = resolve_groups(&m, &slots(&m)).unwrap_err().to_string();
+        assert!(err.contains("does not stack"), "{err}");
+    }
+
+    #[test]
+    fn group_gather_input_must_exist_and_be_i32() {
+        let mut m = adapter_meta();
+        m.extra = Json::parse(
+            r#"{"slot_groups": {"adapter": {"input": "missing",
+                "size": 3, "members": ["l0.wq.lora_a"]}}}"#,
+        )
+        .unwrap();
+        assert!(resolve_groups(&m, &slots(&m)).is_err());
+        let mut m = adapter_meta();
+        m.extra = Json::parse(
+            r#"{"slot_groups": {"adapter": {"input": "l0.wq.lora_a",
+                "size": 3, "members": ["l0.wq.lora_b"]}}}"#,
+        )
+        .unwrap();
+        let err = resolve_groups(&m, &slots(&m)).unwrap_err().to_string();
+        assert!(err.contains("int32"), "{err}");
+    }
+
+    #[test]
+    fn write_group_row_lands_in_the_selected_slot_only() {
+        let mut staged = Tensor::zeros(&[3, 2, 2]);
+        let row = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        write_group_row(&mut staged, 1, &row).unwrap();
+        assert_eq!(staged.f32s()[0..4], [0.0; 4]);
+        assert_eq!(staged.f32s()[4..8], [1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(staged.f32s()[8..12], [0.0; 4]);
+        // overwrite the same slot: no accumulation
+        let row2 = Tensor::from_f32(&[2, 2], vec![9.0; 4]);
+        write_group_row(&mut staged, 1, &row2).unwrap();
+        assert_eq!(staged.f32s()[4..8], [9.0; 4]);
+        // out-of-range slot and wrong row shape are rejected
+        assert!(write_group_row(&mut staged, 3, &row).is_err());
+        assert!(write_group_row(&mut staged, 0, &Tensor::zeros(&[2, 3])).is_err());
     }
 }

@@ -14,20 +14,30 @@
 //! The decode backend is abstracted as [`DecodeEngine`] — the real
 //! [`Generator`] in production, the deterministic [`SimEngine`] for
 //! scheduler tests and benches that must run without artifacts.
+//!
+//! Requests may name an [`AdapterId`] (DESIGN.md §2c): the scheduler is
+//! adapter-oblivious by construction — any adapter fits any free row
+//! because the stacked artifact gathers per row — so a mixed-adapter
+//! queue has no head-of-line blocking either. [`ServerStats`] keeps a
+//! per-adapter lane breakdown on top of the aggregate counters.
 
+use crate::coordinator::adapters::AdapterId;
 use crate::coordinator::generate::{Generator, SampleCfg, StepOut};
 use crate::tokenizer::Tokenizer;
+use crate::util::log;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 /// Row-oriented decode backend the scheduler drives.
 pub trait DecodeEngine {
     fn batch_size(&self) -> usize;
     fn free_rows(&self) -> usize;
-    /// Admit a prompt into a free row; returns the row index.
-    fn prefill(&mut self, prompt: &str, cfg: SampleCfg) -> Result<usize>;
+    /// Admit a prompt into a free row (routed through `adapter` when the
+    /// request names one); returns the row index.
+    fn prefill(&mut self, prompt: &str, cfg: SampleCfg, adapter: Option<AdapterId>)
+        -> Result<usize>;
     /// Sample one token for every active row (each under its own config).
     fn decode_step(&mut self, rng: &mut Rng) -> Result<Vec<StepOut>>;
     /// Remove a row, returning its generated ids and freeing the slot.
@@ -44,8 +54,13 @@ impl DecodeEngine for Generator<'_> {
         Generator::free_rows(self)
     }
 
-    fn prefill(&mut self, prompt: &str, cfg: SampleCfg) -> Result<usize> {
-        Generator::prefill(self, prompt, cfg)
+    fn prefill(
+        &mut self,
+        prompt: &str,
+        cfg: SampleCfg,
+        adapter: Option<AdapterId>,
+    ) -> Result<usize> {
+        Generator::prefill_adapter(self, prompt, cfg, adapter)
     }
 
     fn decode_step(&mut self, rng: &mut Rng) -> Result<Vec<StepOut>> {
@@ -66,6 +81,14 @@ pub struct Request {
     pub id: u64,
     pub prompt: String,
     pub cfg: SampleCfg,
+    /// adapter the request decodes under (None = the engine's single
+    /// baked-in weights; required by adapter-store engines)
+    pub adapter: Option<AdapterId>,
+}
+
+/// Stats label for an adapter lane ("base" for adapter-less requests).
+pub fn adapter_label(adapter: Option<AdapterId>) -> String {
+    adapter.map_or_else(|| "base".to_string(), |id| id.to_string())
 }
 
 #[derive(Debug, Clone)]
@@ -80,6 +103,8 @@ pub struct Response {
     pub latency_ms: f64,
     /// in-flight rows during this request's final decode step
     pub batch_rows: usize,
+    /// adapter the request decoded under
+    pub adapter: Option<AdapterId>,
 }
 
 /// Per-request bookkeeping while its row decodes.
@@ -87,6 +112,7 @@ struct InFlight {
     id: u64,
     enqueued: Instant,
     ttft_ms: Option<f64>,
+    adapter: Option<AdapterId>,
 }
 
 pub struct Server<E> {
@@ -97,6 +123,37 @@ pub struct Server<E> {
     next_id: u64,
     rng: Rng,
     pub stats: ServerStats,
+}
+
+/// Per-adapter slice of the serving stats (keyed by [`AdapterId`]; the
+/// `None` lane holds adapter-less requests).
+#[derive(Debug, Default, Clone)]
+pub struct AdapterLane {
+    /// requests admitted into a row
+    pub requests: usize,
+    /// requests completed
+    pub served: usize,
+    /// tokens sampled for this adapter's rows
+    pub tokens: usize,
+    pub total_ttft_ms: f64,
+    pub total_latency_ms: f64,
+}
+
+impl AdapterLane {
+    pub fn mean_ttft_ms(&self) -> f64 {
+        self.total_ttft_ms / self.served.max(1) as f64
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.total_latency_ms / self.served.max(1) as f64
+    }
+
+    /// This adapter's share of decode throughput: its sampled tokens over
+    /// the server's total decode wall time (lanes share every batch, so
+    /// per-lane wall time is not separable — shares sum to the aggregate).
+    pub fn tokens_per_sec(&self, decode_ms: f64) -> f64 {
+        self.tokens as f64 / (decode_ms / 1e3).max(1e-9)
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -116,9 +173,18 @@ pub struct ServerStats {
     pub total_queue_wait_ms: f64,
     /// most requests ever waiting in the queue at once
     pub peak_queue_depth: usize,
+    /// requests dropped at admission (e.g. naming an unregistered
+    /// adapter) — a bad request never takes the server down
+    pub rejected: usize,
+    /// per-adapter breakdown, keyed by the request's adapter
+    pub per_adapter: BTreeMap<Option<AdapterId>, AdapterLane>,
 }
 
 impl ServerStats {
+    fn lane(&mut self, adapter: Option<AdapterId>) -> &mut AdapterLane {
+        self.per_adapter.entry(adapter).or_default()
+    }
+
     /// Mean time-to-first-token over completed requests.
     pub fn mean_ttft_ms(&self) -> f64 {
         self.total_ttft_ms / self.served.max(1) as f64
@@ -159,10 +225,22 @@ impl<E: DecodeEngine> Server<E> {
     }
 
     pub fn enqueue(&mut self, prompt: impl Into<String>, cfg: SampleCfg) -> u64 {
+        self.enqueue_adapter(prompt, cfg, None)
+    }
+
+    /// Enqueue a request decoding under a registered adapter. FIFO with
+    /// free-row admission as ever: adapters never partition the batch, so
+    /// a mixed-adapter queue keeps zero head-of-line blocking.
+    pub fn enqueue_adapter(
+        &mut self,
+        prompt: impl Into<String>,
+        cfg: SampleCfg,
+        adapter: Option<AdapterId>,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push_back((
-            Request { id, prompt: prompt.into(), cfg },
+            Request { id, prompt: prompt.into(), cfg, adapter },
             Instant::now(),
         ));
         self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
@@ -178,11 +256,28 @@ impl<E: DecodeEngine> Server<E> {
     }
 
     /// Admit queued requests into free rows (FIFO; any config fits any
-    /// row, so nothing blocks behind a mismatched head request).
+    /// row, so nothing blocks behind a mismatched head request). A
+    /// request whose admission fails — an unregistered adapter, a prefill
+    /// error — is rejected and dropped rather than aborting the batch the
+    /// other requests are decoding in; but when *every* admission failed
+    /// and nothing is in flight, the server cannot make progress and the
+    /// last error propagates (a broken engine must not silently drain the
+    /// queue into `rejected`).
     fn admit(&mut self) -> Result<()> {
+        let mut admitted_now = 0usize;
+        let mut last_err = None;
         while self.engine.free_rows() > 0 {
             let Some((req, t0)) = self.queue.pop_front() else { break };
-            let row = self.engine.prefill(&req.prompt, req.cfg)?;
+            let row = match self.engine.prefill(&req.prompt, req.cfg, req.adapter) {
+                Ok(row) => row,
+                Err(e) => {
+                    log::warn(format!("request {} rejected at admission: {e:#}", req.id));
+                    self.stats.rejected += 1;
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            admitted_now += 1;
             let slot = self
                 .inflight
                 .get_mut(row)
@@ -190,9 +285,20 @@ impl<E: DecodeEngine> Server<E> {
             if slot.is_some() {
                 bail!("engine admitted into occupied row {row}");
             }
-            *slot = Some(InFlight { id: req.id, enqueued: t0, ttft_ms: None });
+            *slot = Some(InFlight {
+                id: req.id,
+                enqueued: t0,
+                ttft_ms: None,
+                adapter: req.adapter,
+            });
             self.stats.admitted += 1;
+            self.stats.lane(req.adapter).requests += 1;
             self.stats.total_queue_wait_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        if let Some(e) = last_err {
+            if admitted_now == 0 && self.in_flight() == 0 {
+                return Err(e.context("every admission failed with no requests in flight"));
+            }
         }
         Ok(())
     }
@@ -221,9 +327,11 @@ impl<E: DecodeEngine> Server<E> {
                 .and_then(|s| s.as_mut())
                 .with_context(|| format!("decode event for idle row {}", ev.row))?;
             self.stats.total_tokens += 1;
+            let adapter = f.adapter;
             if f.ttft_ms.is_none() {
                 f.ttft_ms = Some(f.enqueued.elapsed().as_secs_f64() * 1e3);
             }
+            self.stats.lane(adapter).tokens += 1;
             if ev.finished {
                 done_rows.push(ev.row);
             }
@@ -237,6 +345,10 @@ impl<E: DecodeEngine> Server<E> {
             self.stats.served += 1;
             self.stats.total_ttft_ms += ttft_ms;
             self.stats.total_latency_ms += latency_ms;
+            let lane = self.stats.lane(f.adapter);
+            lane.served += 1;
+            lane.total_ttft_ms += ttft_ms;
+            lane.total_latency_ms += latency_ms;
             out.push(Response {
                 id: f.id,
                 text: self.engine.decode_text(&ids),
@@ -244,6 +356,7 @@ impl<E: DecodeEngine> Server<E> {
                 ttft_ms,
                 latency_ms,
                 batch_rows: active,
+                adapter: f.adapter,
             });
         }
         Ok(out)
@@ -263,20 +376,23 @@ impl<E: DecodeEngine> Server<E> {
 /// Deterministic in-process decode engine for scheduler tests and benches.
 ///
 /// Each admitted request emits `max_new` copies of a marker token derived
-/// from *its own* [`SampleCfg`] ([`SimEngine::marker`]), so a test can
-/// assert that a request was sampled under the config it asked for, and
-/// the scheduler can be exercised (and benched) without artifacts or the
-/// PJRT runtime.
+/// from *its own* [`SampleCfg`] ([`SimEngine::marker`]) — or, when the
+/// request routes an adapter, from that [`AdapterId`]
+/// ([`SimEngine::adapter_marker`]: adapter slot i emits `'A' + i`). A test
+/// can therefore assert both that a request was sampled under the config
+/// it asked for *and* that the scheduler routed it through the adapter it
+/// named, without artifacts or the PJRT runtime.
 pub struct SimEngine {
     batch: usize,
     rows: Vec<Option<SimRow>>,
     tk: Tokenizer,
-    /// (prompt, cfg) in admission order, for test assertions
-    pub admissions: Vec<(String, SampleCfg)>,
+    /// (prompt, cfg, adapter) in admission order, for test assertions
+    pub admissions: Vec<(String, SampleCfg, Option<AdapterId>)>,
 }
 
 struct SimRow {
     cfg: SampleCfg,
+    adapter: Option<AdapterId>,
     emitted: Vec<i32>,
     budget: usize,
 }
@@ -291,10 +407,20 @@ impl SimEngine {
         }
     }
 
-    /// The token every step of a request emits: its top-p as a printable
-    /// byte (e.g. `top_p = 0.9` → 90 → `'Z'`).
+    /// The token every step of an adapter-less request emits: its top-p as
+    /// a printable byte (e.g. `top_p = 0.9` → 90 → `'Z'`).
     pub fn marker(cfg: &SampleCfg) -> i32 {
         (cfg.top_p * 100.0).round() as i32 % 256
+    }
+
+    /// The token an adapter-routed request emits: the adapter id as a
+    /// capital letter (`a0` → `'A'`, `a1` → `'B'`, ...), so the emitted
+    /// text *is* the routing record.
+    pub fn adapter_marker(adapter: Option<AdapterId>, cfg: &SampleCfg) -> i32 {
+        match adapter {
+            Some(id) => b'A' as i32 + (id.ix() as i32 % 26),
+            None => Self::marker(cfg),
+        }
     }
 }
 
@@ -307,14 +433,24 @@ impl DecodeEngine for SimEngine {
         self.rows.iter().filter(|r| r.is_none()).count()
     }
 
-    fn prefill(&mut self, prompt: &str, cfg: SampleCfg) -> Result<usize> {
+    fn prefill(
+        &mut self,
+        prompt: &str,
+        cfg: SampleCfg,
+        adapter: Option<AdapterId>,
+    ) -> Result<usize> {
         let row = self
             .rows
             .iter()
             .position(|r| r.is_none())
             .context("sim prefill: no free row")?;
-        self.admissions.push((prompt.to_string(), cfg));
-        self.rows[row] = Some(SimRow { cfg, emitted: vec![], budget: cfg.max_new.max(1) });
+        self.admissions.push((prompt.to_string(), cfg, adapter));
+        self.rows[row] = Some(SimRow {
+            cfg,
+            adapter,
+            emitted: vec![],
+            budget: cfg.max_new.max(1),
+        });
         Ok(row)
     }
 
@@ -325,7 +461,7 @@ impl DecodeEngine for SimEngine {
             if r.emitted.len() >= r.budget {
                 continue; // finished, awaiting take
             }
-            let token = Self::marker(&r.cfg);
+            let token = Self::adapter_marker(r.adapter, &r.cfg);
             r.emitted.push(token);
             events.push(StepOut {
                 row: i,
@@ -444,6 +580,147 @@ mod tests {
         assert_eq!(idle.stats.peak_queue_depth, 1);
         idle.drain().unwrap();
         assert_eq!(idle.stats.admitted, 1);
+    }
+
+    /// The tentpole's scheduler contract: a mixed batch with >= 3 distinct
+    /// adapters decodes *simultaneously* (no adapter partitions the batch)
+    /// and every request's emitted stream proves it was routed through the
+    /// adapter it named.
+    #[test]
+    fn mixed_adapter_batch_routes_each_request_through_its_own_adapter() {
+        let mut srv = Server::new(SimEngine::new(4), 0);
+        let a = srv.enqueue_adapter("alpha", cfg(0.9, 3), Some(AdapterId::for_slot(0)));
+        let b = srv.enqueue_adapter("beta", cfg(0.9, 3), Some(AdapterId::for_slot(1)));
+        let c = srv.enqueue_adapter("gamma", cfg(0.9, 3), Some(AdapterId::for_slot(2)));
+        let d = srv.enqueue("delta", cfg(0.5, 3)); // adapter-less, marker '2'
+        // all four decode in one batch: 3 steps total, not 4 x 3
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 4);
+        assert_eq!(srv.stats.decode_steps, 3);
+        let text = |id| rs.iter().find(|r| r.id == id).unwrap().text.clone();
+        assert_eq!(text(a), "AAA", "request a must decode under adapter a0");
+        assert_eq!(text(b), "BBB", "request b must decode under adapter a1");
+        assert_eq!(text(c), "CCC", "request c must decode under adapter a2");
+        assert_eq!(text(d), "222", "adapter-less request keeps its cfg marker");
+        // the engine saw the adapters the requests named, in order
+        let routed: Vec<_> = srv.engine.admissions.iter().map(|(_, _, ad)| *ad).collect();
+        assert_eq!(
+            routed,
+            vec![Some(AdapterId::for_slot(0)), Some(AdapterId::for_slot(1)), Some(AdapterId::for_slot(2)), None]
+        );
+        // responses carry their adapter
+        assert_eq!(rs.iter().find(|r| r.id == a).unwrap().adapter, Some(AdapterId::for_slot(0)));
+    }
+
+    /// Mixed-adapter queues keep free-row admission: an adapter never
+    /// waits for same-adapter rows to free up.
+    #[test]
+    fn adapters_do_not_head_of_line_block_each_other() {
+        let mut srv = Server::new(SimEngine::new(2), 0);
+        let long = srv.enqueue_adapter("long", cfg(0.9, 5), Some(AdapterId::for_slot(0)));
+        let _long2 = srv.enqueue_adapter("long2", cfg(0.9, 1), Some(AdapterId::for_slot(0)));
+        let late = srv.enqueue_adapter("late", cfg(0.9, 1), Some(AdapterId::for_slot(1)));
+        // tick 1: rows hold long+long2; late (different adapter) queued
+        let done1 = srv.step().unwrap();
+        assert_eq!(done1.len(), 1);
+        // tick 2: late admitted into the freed row while long decodes
+        let done2 = srv.step().unwrap();
+        assert_eq!(done2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![late]);
+        assert!(srv.stats.served >= 2);
+        let rest = srv.drain().unwrap();
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![long]);
+    }
+
+    #[test]
+    fn per_adapter_stats_break_down_requests_tokens_and_ttft() {
+        let mut srv = Server::new(SimEngine::new(4), 0);
+        for _ in 0..2 {
+            srv.enqueue_adapter("x", cfg(0.9, 4), Some(AdapterId::for_slot(0)));
+        }
+        srv.enqueue_adapter("y", cfg(0.9, 2), Some(AdapterId::for_slot(1)));
+        srv.enqueue("z", cfg(0.9, 3));
+        srv.drain().unwrap();
+        let st = &srv.stats;
+        assert_eq!(st.per_adapter.len(), 3);
+        let a0 = &st.per_adapter[&Some(AdapterId::for_slot(0))];
+        let a1 = &st.per_adapter[&Some(AdapterId::for_slot(1))];
+        let base = &st.per_adapter[&None];
+        assert_eq!((a0.requests, a0.served, a0.tokens), (2, 2, 8));
+        assert_eq!((a1.requests, a1.served, a1.tokens), (1, 1, 2));
+        assert_eq!((base.requests, base.served, base.tokens), (1, 1, 3));
+        // lanes partition the aggregate token count and throughput
+        let lane_tokens: usize = st.per_adapter.values().map(|l| l.tokens).sum();
+        assert_eq!(lane_tokens, st.total_tokens);
+        let lane_tps: f64 = st
+            .per_adapter
+            .values()
+            .map(|l| l.tokens_per_sec(st.decode_ms))
+            .sum();
+        assert!((lane_tps - st.tokens_per_sec()).abs() / st.tokens_per_sec() < 1e-6);
+        for lane in st.per_adapter.values() {
+            assert!(lane.mean_ttft_ms() >= 0.0);
+            assert!(lane.mean_ttft_ms() <= lane.mean_latency_ms());
+        }
+        assert_eq!(adapter_label(Some(AdapterId::for_slot(2))), "a2");
+        assert_eq!(adapter_label(None), "base");
+    }
+
+    /// An engine that refuses admission for a marker prompt — stands in
+    /// for "request names an unregistered adapter".
+    struct PickyEngine(SimEngine);
+
+    impl DecodeEngine for PickyEngine {
+        fn batch_size(&self) -> usize {
+            self.0.batch_size()
+        }
+        fn free_rows(&self) -> usize {
+            self.0.free_rows()
+        }
+        fn prefill(
+            &mut self,
+            prompt: &str,
+            cfg: SampleCfg,
+            adapter: Option<AdapterId>,
+        ) -> Result<usize> {
+            anyhow::ensure!(prompt != "bad", "adapter not registered");
+            self.0.prefill(prompt, cfg, adapter)
+        }
+        fn decode_step(&mut self, rng: &mut Rng) -> Result<Vec<StepOut>> {
+            self.0.decode_step(rng)
+        }
+        fn take(&mut self, row: usize) -> Option<Vec<i32>> {
+            self.0.take(row)
+        }
+        fn decode_text(&self, ids: &[i32]) -> String {
+            self.0.decode_text(ids)
+        }
+    }
+
+    #[test]
+    fn bad_request_is_rejected_without_taking_the_server_down() {
+        let mut srv = Server::new(PickyEngine(SimEngine::new(2)), 0);
+        let ok1 = srv.enqueue_adapter("fine", cfg(0.9, 2), Some(AdapterId::for_slot(0)));
+        srv.enqueue("bad", cfg(0.9, 2));
+        let ok2 = srv.enqueue_adapter("also fine", cfg(0.9, 2), Some(AdapterId::for_slot(1)));
+        let rs = srv.drain().unwrap();
+        let mut served: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        served.sort_unstable();
+        assert_eq!(served, vec![ok1, ok2], "good requests survive the bad one");
+        assert_eq!(srv.stats.rejected, 1);
+        assert_eq!(srv.stats.served, 2);
+        assert_eq!(srv.stats.admitted, 2);
+    }
+
+    #[test]
+    fn engine_fault_with_no_progress_propagates() {
+        // nothing in flight and every admission failing = the server
+        // cannot make progress; that must surface, not drain into stats
+        let mut srv = Server::new(PickyEngine(SimEngine::new(2)), 0);
+        srv.enqueue("bad", cfg(0.9, 2));
+        let err = srv.drain().unwrap_err().to_string();
+        assert!(err.contains("no requests in flight"), "{err}");
+        assert_eq!(srv.stats.rejected, 1);
+        assert_eq!(srv.stats.served, 0);
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub fn info(msg: impl AsRef<str>) {
     }
 }
 
+/// Warnings print even under `--quiet`: they flag silent-degradation
+/// hazards (e.g. a decode artifact pair with one half missing).
+pub fn warn(msg: impl AsRef<str>) {
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_secs_f64();
+    eprintln!("[{:>12.3}] WARN {}", t % 100_000.0, msg.as_ref());
+}
+
 /// Incrementally written CSV file (header + rows), used by every experiment
 /// to emit the data behind a paper table/figure.
 pub struct Csv {

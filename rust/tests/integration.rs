@@ -5,6 +5,7 @@
 //! Send nor cheap; `cargo test` runs this binary's cases in parallel
 //! threads, so each test opens its own runtime.
 
+use loram::coordinator::adapters::{AdapterId, AdapterStore};
 use loram::coordinator::evaluate::{test_sequences, Evaluator};
 use loram::coordinator::generate::{DecodePath, Generator, SampleCfg};
 use loram::coordinator::pipeline::{Pipeline, PipelineConfig, Variant};
@@ -491,6 +492,214 @@ fn kvcache_serves_mixed_configs_through_scheduler() {
     assert_eq!(srv.stats.served, b + 2);
     assert!(srv.stats.peak_queue_depth >= 2, "overflow requests queued");
     assert!(srv.stats.mean_queue_wait_ms() >= 0.0);
+}
+
+const ADAPTER_ARTS: &[&str] = &[
+    "logits_tiny",
+    "logits_tiny_a3",
+    "decode_prefill_tiny_a3",
+    "decode_step_tiny_a3",
+];
+
+/// `n` distinct adapters with non-trivial `b` factors (zero-b adapters
+/// would all collapse onto the base model and prove nothing).
+fn distinct_adapters(cfg: &loram::runtime::ModelCfg, n: usize) -> Vec<TensorStore> {
+    (0..n)
+        .map(|i| {
+            let mut l = init_lora(cfg, 50 + i as u64);
+            let mut rng = Rng::new(70 + i as u64);
+            for (k, t) in l.map.iter_mut() {
+                if k.ends_with("lora_b") {
+                    *t = Tensor::from_f32(&t.shape, rng.normal_vec(t.len(), 0.05));
+                }
+            }
+            l
+        })
+        .collect()
+}
+
+/// Offline merge W' = W + s·a@b — the per-adapter deployment reference.
+fn merge_adapter(
+    cfg: &loram::runtime::ModelCfg,
+    params: &TensorStore,
+    lora: &TensorStore,
+) -> TensorStore {
+    let scale = (cfg.lora_alpha / cfg.lora_rank as f64) as f32;
+    let mut merged = params.clone();
+    let mut names: Vec<String> = (0..cfg.n_layers)
+        .flat_map(|i| {
+            cfg.layer_proj_shapes(i)
+                .into_iter()
+                .map(move |(p, _)| format!("l{i}.{p}"))
+        })
+        .collect();
+    names.push("lm_head".to_string());
+    for nm in names {
+        let a = lora.get(&format!("{nm}.lora_a")).unwrap();
+        let b = lora.get(&format!("{nm}.lora_b")).unwrap();
+        let delta = loram::coordinator::analysis::lora_delta(a, b);
+        let w = merged.map.get_mut(&nm).unwrap();
+        for (x, d) in w.f32s_mut().iter_mut().zip(delta.f32s()) {
+            *x += scale * d;
+        }
+    }
+    merged
+}
+
+/// The tentpole acceptance: a mixed batch with 3 distinct adapters serves
+/// through ONE compiled artifact on BOTH decode paths, and each request's
+/// greedy stream equals the offline per-adapter merge of its adapter.
+#[test]
+fn stacked_adapter_mixed_batch_matches_offline_merge_on_both_paths() {
+    let Some(rt) = try_runtime(ADAPTER_ARTS) else { return };
+    let cfg = rt.load("logits_tiny_a3").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 40);
+    let adapters = distinct_adapters(&cfg, 3);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 5 };
+    let prompts = ["Q: 2+3=", "The quick brown fox", "Once upon a time"];
+    // per-adapter reference: merge adapter i into the base, decode prompt
+    // i through the plain (single-LoRA) artifact with zero LoRA
+    let zero = init_lora(&cfg, 0);
+    let refs: Vec<Vec<i32>> = prompts
+        .iter()
+        .zip(&adapters)
+        .map(|(p, ad)| {
+            let merged = merge_adapter(&cfg, &params, ad);
+            let gen = Generator::with_path(
+                &rt,
+                "logits_tiny",
+                &[&merged, &zero],
+                Some(DecodePath::Reforward),
+            )
+            .unwrap();
+            let mut rng = Rng::new(0);
+            gen.generate_batch(&[p.to_string()], greedy, &mut rng)
+                .unwrap()
+                .remove(0)
+        })
+        .collect();
+    assert!(
+        refs.iter().collect::<std::collections::HashSet<_>>().len() > 1,
+        "adapters too weak to steer the streams apart — the test is vacuous"
+    );
+    for path in [DecodePath::Reforward, DecodePath::KvCache] {
+        let gen =
+            Generator::with_adapters(&rt, "logits_tiny_a3", &[&params], Some(path), None)
+                .unwrap();
+        assert_eq!(gen.decode_path(), path);
+        assert_eq!(gen.adapter_capacity(), Some(3));
+        let ids: Vec<AdapterId> = adapters
+            .iter()
+            .enumerate()
+            .map(|(i, w)| gen.register_adapter(&format!("task{i}"), w.clone()).unwrap())
+            .collect();
+        let reqs: Vec<(String, AdapterId)> = prompts
+            .iter()
+            .zip(&ids)
+            .map(|(p, id)| (p.to_string(), *id))
+            .collect();
+        let mut rng = Rng::new(0);
+        let outs = gen.generate_adapter_batch(&reqs, greedy, &mut rng).unwrap();
+        assert_eq!(
+            outs, refs,
+            "{path:?}: stacked-adapter streams diverged from offline merges"
+        );
+    }
+}
+
+/// Adapter lifecycle through the scheduler: per-request routing, lanes in
+/// the stats, and ref-counted eviction (never under an in-flight row).
+#[test]
+fn adapter_server_routes_refcounts_and_evicts() {
+    let Some(rt) = try_runtime(ADAPTER_ARTS) else { return };
+    let cfg = rt.load("logits_tiny_a3").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 44);
+    let adapters = distinct_adapters(&cfg, 3);
+    let gen =
+        Generator::with_adapters(&rt, "logits_tiny_a3", &[&params], None, None).unwrap();
+    let ids: Vec<AdapterId> = adapters
+        .iter()
+        .enumerate()
+        .map(|(i, w)| gen.register_adapter(&format!("task{i}"), w.clone()).unwrap())
+        .collect();
+    // a registered name resolves; a fourth registration exceeds capacity
+    assert_eq!(gen.adapter_id("task1"), Some(ids[1]));
+    assert!(gen
+        .register_adapter("overflow", adapters[0].clone())
+        .is_err());
+    // rows in flight pin their adapter: evict must fail mid-decode
+    let row = gen
+        .prefill_adapter("Q: 1+1=", SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 3 }, Some(ids[0]))
+        .unwrap();
+    assert!(gen.evict_adapter(ids[0]).is_err(), "evicted a pinned adapter");
+    let mut rng = Rng::new(0);
+    while !gen.decode_step(&mut rng).unwrap().is_empty() {}
+    gen.take(row).unwrap();
+    gen.evict_adapter(ids[0]).unwrap();
+    // the freed slot admits a replacement, servable immediately — under a
+    // fresh handle, so the evicted id cannot route to the newcomer
+    let repl = gen.register_adapter("task0b", adapters[0].clone()).unwrap();
+    assert_eq!(repl.ix(), ids[0].ix());
+    assert_ne!(repl, ids[0]);
+    // mixed-adapter traffic through the continuous-batching scheduler
+    let mut srv = Server::new(gen, 5);
+    let route = [repl, ids[1], ids[2]];
+    for i in 0..6 {
+        srv.enqueue_adapter(
+            format!("Q: {i}+{i}="),
+            SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 2 + i % 2 },
+            Some(route[i % 3]),
+        );
+    }
+    let rs = srv.drain().unwrap();
+    assert_eq!(rs.len(), 6);
+    assert_eq!(srv.stats.per_adapter.len(), 3);
+    for id in route {
+        let lane = &srv.stats.per_adapter[&Some(id)];
+        assert_eq!(lane.requests, 2);
+        assert_eq!(lane.served, 2);
+        assert!(lane.tokens >= 2);
+    }
+    let lane_tokens: usize = srv.stats.per_adapter.values().map(|l| l.tokens).sum();
+    assert_eq!(lane_tokens, srv.stats.total_tokens);
+}
+
+/// The training→serving handoff: a pipeline-exported adapter loads from
+/// its `.lmck` through the AdapterStore and serves through the stacked
+/// artifact exactly like its in-memory twin.
+#[test]
+fn adapter_export_roundtrips_through_disk_store() {
+    let Some(rt) = try_runtime(ADAPTER_ARTS) else { return };
+    let cfg = rt.load("logits_tiny_a3").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 46);
+    let adapters = distinct_adapters(&cfg, 1);
+    let dir = tmp_runs().join("adapters");
+    std::fs::create_dir_all(&dir).unwrap();
+    AdapterStore::save(&dir, "exported", &adapters[0]).unwrap();
+    assert_eq!(AdapterStore::list(&dir).unwrap(), vec!["exported"]);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 4 };
+    let mut outs = vec![];
+    for from_disk in [false, true] {
+        let gen = Generator::with_adapters(
+            &rt,
+            "logits_tiny_a3",
+            &[&params],
+            Some(DecodePath::Reforward),
+            Some(dir.clone()),
+        )
+        .unwrap();
+        let id = if from_disk {
+            gen.register_adapter_from_disk("exported").unwrap()
+        } else {
+            gen.register_adapter("exported", adapters[0].clone()).unwrap()
+        };
+        let mut rng = Rng::new(0);
+        outs.push(
+            gen.generate_adapter_batch(&[("Q: 2+3=".to_string(), id)], greedy, &mut rng)
+                .unwrap(),
+        );
+    }
+    assert_eq!(outs[0], outs[1], "disk-loaded adapter diverged from in-memory");
 }
 
 #[test]
