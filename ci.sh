@@ -19,6 +19,21 @@ if [ "${1:-}" = "fast" ]; then
     exit 0
 fi
 
+# test-inventory audit: the skip-clean integration tests print a
+# standardized "skipping: artifact '<name>' unavailable" line; when the
+# artifacts directory exists, none of those skips may name an artifact
+# that IS on disk (a silently-hollowed test is a CI bug, not a skip).
+# Same (debug) profile as the tier-1 run above, so nothing recompiles —
+# only the integration binary re-runs, un-captured, for the audit log.
+if [ -d artifacts ] && python3 -c "import sys" >/dev/null 2>&1; then
+    echo "+ cargo test --test integration -- --nocapture | skip_audit"
+    INTEG_LOG=$(cargo test --test integration -- --nocapture 2>&1) || {
+        echo "$INTEG_LOG"
+        exit 1
+    }
+    echo "$INTEG_LOG" | python3 tools/skip_audit.py artifacts
+fi
+
 # L1/L2 python tests (model + AOT emitter contract) when a JAX env exists
 if python3 -c "import jax, pytest" >/dev/null 2>&1; then
     PYTEST_ARGS=(-q tests)

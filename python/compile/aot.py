@@ -37,6 +37,9 @@ LOGITS_B, LOGITS_S = 4, 64
 # Block 16 divides every projection dim across the preset family (the paper
 # uses QLoRA's 64; storage accounting in rust/src/quant covers both).
 NF4_BLOCK = 16
+# Draft window for speculative decoding: the decode_verify artifacts score
+# K drafted tokens (+ the frontier) per call (DESIGN.md §2d).
+DRAFT_K = 4
 
 
 def to_hlo_text(lowered) -> str:
@@ -259,9 +262,30 @@ def decode_step_artifact(cfg, b=LOGITS_B, s=LOGITS_S):
                      "cache_names": cnames, **_cache_threading(cnames)})
 
 
-def decode_artifacts(cfg, b=LOGITS_B, s=LOGITS_S):
-    """The decode pair always ships together (Generator needs both)."""
-    return [decode_prefill_artifact(cfg, b, s), decode_step_artifact(cfg, b, s)]
+def decode_verify_artifact(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
+    """(B, K+1) speculative verification window: each row feeds its frontier
+    token + K draft candidates starting at `pos`; logits come back at every
+    window position so one call scores a whole draft run. Caches stay
+    donated state, bitwise-identical to the prefill/step pair's."""
+    fn, pnames, lnames, cnames = M.make_decode_verify(cfg)
+    ins = [("tokens", _spec((b, k + 1), jnp.int32)),
+           ("pos", _spec((b,), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_verify_{cfg.name}", fn, ins, outs, cfg,
+                    {"kind": "decode_verify", "batch": b, "seq": s,
+                     "draft_k": k, "param_names": pnames,
+                     "lora_names": lnames, "cache_names": cnames,
+                     **_cache_threading(cnames)})
+
+
+def decode_artifacts(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
+    """The decode trio always ships together: prefill + step (the Generator
+    pair) + the speculative verify window."""
+    return [decode_prefill_artifact(cfg, b, s), decode_step_artifact(cfg, b, s),
+            decode_verify_artifact(cfg, b, s, k)]
 
 
 # ---------------------------------------------------------------------------
@@ -337,13 +361,35 @@ def decode_step_adapters_artifact(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S):
                     cfg, extra)
 
 
-def adapter_artifacts(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S):
-    """The multi-adapter serving trio: stacked logits + stacked decode pair,
-    all sharing one adapter slot group so the scheduler can mix adapters in
-    a single batch on either decode path."""
+def decode_verify_adapters_artifact(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S,
+                                    k=DRAFT_K):
+    """Adapter-stacked verify window: per-row `adapter_ix (B,)` routes each
+    draft window through its own slot, like the stacked decode step."""
+    fn, pnames, lnames, cnames = M.make_decode_verify_adapters(cfg, n_adapters)
+    ins = [("tokens", _spec((b, k + 1), jnp.int32)),
+           ("pos", _spec((b,), jnp.int32)),
+           ("adapter_ix", _spec((b,), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _stacked_lora_specs(cfg, n_adapters)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    extra = {"kind": "decode_verify", "batch": b, "seq": s, "draft_k": k,
+             "param_names": pnames, "lora_names": lnames,
+             "cache_names": cnames, **_cache_threading(cnames),
+             **_adapter_group(n_adapters, lnames)}
+    extra["state_zero_init"] = list(cnames) + list(lnames)
+    return Artifact(f"decode_verify_{cfg.name}_a{n_adapters}", fn, ins, outs,
+                    cfg, extra)
+
+
+def adapter_artifacts(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
+    """The multi-adapter serving quartet: stacked logits + the stacked
+    decode trio, all sharing one adapter slot group so the scheduler can
+    mix adapters in a single batch on any decode path."""
     return [logits_adapters_artifact(cfg, n_adapters, b, s),
             decode_prefill_adapters_artifact(cfg, n_adapters, b, s),
-            decode_step_adapters_artifact(cfg, n_adapters, b, s)]
+            decode_step_adapters_artifact(cfg, n_adapters, b, s),
+            decode_verify_adapters_artifact(cfg, n_adapters, b, s, k)]
 
 
 def grad_imp_artifact(cfg, b=TRAIN_B, s=TRAIN_S):
@@ -407,7 +453,12 @@ def build_suite(suite: str):
                  kernel_demo_artifact(True),
                  kernel_demo_artifact(False)]
         arts += decode_artifacts(tiny, b=2, s=32)
-        # multi-adapter serving trio: batch 4 so a single mixed batch can
+        # the pruned proxy's own decode trio (+ its logits artifact): the
+        # drafter side of "draft small, verify large" — and a target in its
+        # own right for the self-speculative equivalence matrix
+        arts += [logits_artifact(pruned_config(tiny, 0.5), b=2, s=32)]
+        arts += decode_artifacts(pruned_config(tiny, 0.5), b=2, s=32)
+        # multi-adapter serving quartet: batch 4 so a single mixed batch can
         # hold >= 3 distinct adapters (the acceptance scenario)
         arts += adapter_artifacts(tiny, n_adapters=3, b=4, s=32)
     if suite == "std":

@@ -14,6 +14,8 @@ cargo) and without lowering HLO:
 * `extra.slot_groups` (the adapter group): the declared gather input
   exists (int32), every member is an input whose leading dim == size,
   and members do not repeat across groups
+* `extra.kind == "decode_verify"`: `draft_k` >= 1 and the tokens input
+  is a (B, draft_k + 1) window (the speculative verify contract)
 
 Usage:
     python -m compile.meta_check              # validate smoke+std suites
@@ -114,6 +116,19 @@ def check_meta(meta: dict) -> list:
     for name in extra.get("state_zero_init", []):
         if name not in inputs:
             errs.append(f"state_zero_init '{name}' is not an input")
+
+    # ---- decode_verify window (meta.rs::draft_k) -------------------------
+    if extra.get("kind") == "decode_verify":
+        k = extra.get("draft_k")
+        if not isinstance(k, int) or k < 1:
+            errs.append(f"decode_verify: bad draft_k {k!r}")
+        elif "tokens" not in inputs:
+            errs.append("decode_verify: no tokens input")
+        else:
+            shape = inputs["tokens"][0]
+            if len(shape) != 2 or shape[1] != k + 1:
+                errs.append(f"decode_verify: tokens shape {shape} does not "
+                            f"hold the draft_k+1 = {k + 1} window")
 
     # ---- slot groups (the adapter group; session.rs::resolve_groups) -----
     groups = extra.get("slot_groups", {})

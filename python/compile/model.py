@@ -177,11 +177,17 @@ def rope(x, theta):
 def rope_at(x, pos, theta):
     """Rotary embedding at explicit per-row positions. x: (B, 1, H, hd),
     pos: (B,) int32 — the grid index each row's token sits at."""
+    return rope_at_many(x, pos[:, None], theta)
+
+
+def rope_at_many(x, pos, theta):
+    """Rotary embedding at explicit per-token positions. x: (B, T, H, hd),
+    pos: (B, T) int32 — the grid index each token sits at."""
     half = x.shape[-1] // 2
     freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
-    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]      # (B, half)
-    cos = jnp.cos(ang)[:, None, None, :]
-    sin = jnp.sin(ang)[:, None, None, :]
+    ang = pos.astype(jnp.float32)[..., None] * freqs[None, None, :]  # (B,T,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
 
@@ -636,6 +642,89 @@ def decode_step_forward(cfg: ModelConfig, proj, tokens, pos, caches):
     return logits, new_caches
 
 
+def make_decode_verify(cfg: ModelConfig, with_lora=True, use_pallas=False):
+    """One (B, K+1) verification forward over donated K/V caches — the
+    K-position generalization of `make_decode_step` (speculative decoding,
+    DESIGN.md §2d).
+
+    Each row feeds its frontier token followed by K draft candidates;
+    token t of row b sits at grid position `pos[b] + t`. The forward
+    writes all K+1 tokens' K/V at their positions, attends causally
+    within the window (position p attends over cache entries <= p), and
+    returns logits at *every* window position — logits[:, t] predicts the
+    token after candidate t, so one call scores a whole draft run. Rows
+    past their frontier feed `pos >= S`: such windows write nothing (the
+    scatter one-hot is empty off-grid) and their logits are garbage the
+    caller discards. Cache outputs donate back onto their inputs exactly
+    like the decode step's.
+    """
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg) if with_lora else []
+    cnames = kv_cache_names(cfg)
+
+    def verify_fn(tokens, pos, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        logits, new_caches = decode_verify_forward(cfg, proj, tokens, pos,
+                                                  caches)
+        return (logits,) + tuple(new_caches[n] for n in cnames)
+    return verify_fn, pnames, lnames, cnames
+
+
+def decode_verify_forward(cfg: ModelConfig, proj, tokens, pos, caches):
+    """Shared (B, T) windowed incremental forward (T = K+1): writes token t
+    of row b at grid position pos[b]+t, attends over cache positions <=
+    pos[b]+t, returns ((B, T, V) logits, {name: new cache}).
+
+    `decode_step_forward` is the T = 1 special case; the verify window is
+    kept separate so the single-token hot path's lowering stays untouched.
+    """
+    p = proj.p
+    x = p["embed"][tokens]                       # (B, T, D)
+    b, t = tokens.shape
+    hd = cfg.head_dim
+    s = next(iter(caches.values())).shape[1]
+    grid = jnp.arange(s, dtype=jnp.int32)
+    abspos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B, T)
+    # scatter one-hot: token t lands at grid slot pos+t; off-grid windows
+    # (pos >= S, the caller's dummy rows) produce no write at all
+    write = (abspos[:, :, None] == grid[None, None, :]).astype(jnp.float32)
+    taken = write.sum(axis=1)                    # (B, S): rewritten slots
+    valid = grid[None, None, :] <= abspos[:, :, None]  # (B, T, S)
+    new_caches = {}
+    for li in range(cfg.n_layers):
+        h, kv, _ = cfg.layer_shapes(li)
+        xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
+        q = proj(xin, f"l{li}.wq").reshape(b, t, h, hd)
+        k = proj(xin, f"l{li}.wk").reshape(b, t, kv, hd)
+        v = proj(xin, f"l{li}.wv").reshape(b, t, kv, hd)
+        q = rope_at_many(q, abspos, cfg.rope_theta)
+        k = rope_at_many(k, abspos, cfg.rope_theta)
+        keep = (1.0 - taken)[:, :, None, None]   # (B, S, 1, 1)
+        ck = caches[f"cache_k.l{li}"] * keep + jnp.einsum("bts,btnh->bsnh",
+                                                          write, k)
+        cv = caches[f"cache_v.l{li}"] * keep + jnp.einsum("bts,btnh->bsnh",
+                                                          write, v)
+        new_caches[f"cache_k.l{li}"] = ck
+        new_caches[f"cache_v.l{li}"] = cv
+        kk = repeat_kv(ck, h)                    # (B, S, h, hd)
+        vv = repeat_kv(cv, h)
+        att = jnp.einsum("bthd,bshd->bhts", q, kk) / jnp.sqrt(float(hd))
+        att = jnp.where(valid[:, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", att, vv).reshape(b, t, h * hd)
+        x = x + proj(out, f"l{li}.wo")
+        xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
+        gate = proj(xin, f"l{li}.w_gate")
+        up = proj(xin, f"l{li}.w_up")
+        x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
+    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+    return lm_head_logits(proj, x), new_caches   # (B, T, V)
+
+
 # ---------------------------------------------------------------------------
 # Multi-adapter serving (DESIGN.md §2c: the adapter slot group)
 # ---------------------------------------------------------------------------
@@ -689,6 +778,26 @@ def make_decode_step_adapters(cfg: ModelConfig, n_adapters: int):
         logits, new_caches = decode_step_forward(cfg, proj, tokens, pos, caches)
         return (logits,) + tuple(new_caches[n] for n in cnames)
     return step_fn, pnames, lnames, cnames
+
+
+def make_decode_verify_adapters(cfg: ModelConfig, n_adapters: int):
+    """Adapter-stacked verify window: `adapter_ix (B,)` routes every row's
+    draft window through its own adapter slot, completing the stacked
+    decode pair into a trio."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg)
+    cnames = kv_cache_names(cfg)
+
+    def verify_fn(tokens, pos, adapter_ix, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        proj = AdapterProjCtx(params, lora, adapter_ix, cfg)
+        logits, new_caches = decode_verify_forward(cfg, proj, tokens, pos,
+                                                  caches)
+        return (logits,) + tuple(new_caches[n] for n in cnames)
+    return verify_fn, pnames, lnames, cnames
 
 
 def make_grad_importance(cfg: ModelConfig):

@@ -105,17 +105,23 @@ def test_eval_artifact_reports_per_sequence():
     assert set(outs) == {"nll_sum", "tok_count"}
 
 
-def test_suites_register_decode_artifact_pair():
-    """`python -m compile.aot --list`-style smoke check: the decode pair is
-    present wherever a logits artifact serves decoding."""
+def test_suites_register_decode_artifact_trio():
+    """`python -m compile.aot --list`-style smoke check: the decode trio
+    (prefill + step + speculative verify) is present wherever a logits
+    artifact serves decoding."""
     for suite in ("smoke", "std"):
         names = [a.name for a in aot.build_suite(suite)]
-        assert "decode_prefill_tiny" in names or suite == "std"
         for n in names:
             if n.startswith("decode_prefill_"):
                 assert n.replace("decode_prefill_", "decode_step_") in names
+                assert n.replace("decode_prefill_", "decode_verify_") in names
     smoke = [a.name for a in aot.build_suite("smoke")]
-    assert "decode_prefill_tiny" in smoke and "decode_step_tiny" in smoke
+    for n in ["decode_prefill_tiny", "decode_step_tiny", "decode_verify_tiny",
+              # the pruned proxy's own trio: the drafter side of
+              # "draft small, verify large"
+              "logits_tiny_p50", "decode_prefill_tiny_p50",
+              "decode_step_tiny_p50", "decode_verify_tiny_p50"]:
+        assert n in smoke, n
 
 
 def test_decode_step_artifact_declares_cache_donation():
@@ -149,19 +155,44 @@ def test_decode_step_artifact_declares_cache_donation():
         assert list(o.shape) == list(specs[n].shape), n
 
 
-def test_adapter_trio_in_suites():
-    """Multi-adapter serving trio ships with the suites; every member of
-    the trio shares one grid and one adapter group size."""
+def test_adapter_quartet_in_suites():
+    """Multi-adapter serving quartet ships with the suites; every member
+    shares one grid and one adapter group size."""
     smoke = {a.name: a for a in aot.build_suite("smoke")}
-    for n in ("logits_tiny_a3", "decode_prefill_tiny_a3",
-              "decode_step_tiny_a3"):
+    members = ("logits_tiny_a3", "decode_prefill_tiny_a3",
+               "decode_step_tiny_a3", "decode_verify_tiny_a3")
+    for n in members:
         assert n in smoke, n
     grids = {(smoke[n].extra["batch"], smoke[n].extra["seq"])
-             for n in ("logits_tiny_a3", "decode_prefill_tiny_a3",
-                       "decode_step_tiny_a3")}
+             for n in members}
     assert len(grids) == 1
     std = [a.name for a in aot.build_suite("std")]
     assert "logits_l13b_a4" in std and "decode_step_l13b_a4" in std
+    assert "decode_verify_l13b_a4" in std
+
+
+def test_decode_verify_artifact_declares_window_and_donation():
+    """Input order tokens, pos, params, lora, caches; the tokens input is a
+    (B, draft_k+1) window; cache donation matches the decode step's."""
+    cfg = PRESETS["tiny"]
+    art = aot.decode_verify_artifact(cfg, b=2, s=16, k=3)
+    names = [n for n, _ in art.in_specs]
+    assert names[:2] == ["tokens", "pos"]
+    assert art.extra["kind"] == "decode_verify"
+    assert art.extra["draft_k"] == 3
+    specs = dict(art.in_specs)
+    assert list(specs["tokens"].shape) == [2, 4]
+    cn = art.extra["cache_names"]
+    assert art.extra["state_bindings"] == {"new." + n: n for n in cn}
+    assert art.extra["state_zero_init"] == cn
+    step = aot.decode_step_artifact(cfg, b=2, s=16)
+    for n in cn:  # bitwise-identical cache tensors across the trio
+        assert list(specs[n].shape) == list(dict(step.in_specs)[n].shape), n
+    # abstract eval: logits at every window position
+    outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
+    assert list(outs[0].shape) == [2, 4, cfg.vocab_size]
+    for o, n in zip(outs[1:], cn):
+        assert list(o.shape) == list(specs[n].shape), n
 
 
 def test_adapter_artifacts_declare_slot_group():

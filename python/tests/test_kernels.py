@@ -171,3 +171,32 @@ def test_nf4_quant_codes_in_range():
     c = np.asarray(codes)
     assert c.min() >= 0 and c.max() <= 15
     assert np.all(np.asarray(absmax) >= 0)
+
+
+@given(m=st.integers(1, 8), nb=st.integers(1, 6),
+       block=st.sampled_from([8, 16, 32]),
+       scale=st.floats(1e-3, 10.0),
+       zero_block=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_nf4_quantize_roundtrip_invariants(m, nb, block, scale, zero_block,
+                                           seed):
+    """Property sweep mirroring rust/src/quant.rs's invariants, so the
+    QLoRAM path is pinned by laws, not only golden values:
+    codes always index the 16-entry codebook, absmax is exactly the
+    blockwise max |w|, and quantize∘dequantize is idempotent (requantising
+    the dequantised matrix reproduces codes and absmax bit-for-bit)."""
+    rng = np.random.default_rng(seed)
+    w = np.asarray(rng.normal(size=(m, nb * block)) * scale, np.float32)
+    if zero_block:
+        w[0, :block] = 0.0  # all-zero blocks must round-trip too
+    w = jnp.asarray(w)
+    codes, absmax = ref.nf4_quantize_ref(w, block)
+    assert codes.dtype == jnp.int32
+    assert int(codes.min()) >= 0 and int(codes.max()) < 16
+    want = np.abs(np.asarray(w).reshape(m, nb, block)).max(-1)
+    np.testing.assert_array_equal(np.asarray(absmax), want)
+    wd = ref.nf4_dequant_ref(codes, absmax, block)
+    codes2, absmax2 = ref.nf4_quantize_ref(wd, block)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes2))
+    np.testing.assert_array_equal(np.asarray(absmax), np.asarray(absmax2))

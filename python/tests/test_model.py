@@ -389,6 +389,251 @@ def test_decode_prefill_only_touches_selected_row():
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: the (B, K+1) verify window (DESIGN.md §2d)
+# ---------------------------------------------------------------------------
+
+def _prefill_caches(cfg, flat, cn, prompts, b, s):
+    pfn, *_ = M.make_decode_prefill(cfg)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    caches = {n: jnp.zeros(shapes[n], jnp.float32) for n in cn}
+    for row, p in enumerate(prompts):
+        toks = jnp.asarray([list(p) + [0] * (s - len(p))], jnp.int32)
+        oh = jnp.zeros((b,), jnp.float32).at[row].set(1.0)
+        out = pfn(toks, jnp.int32(len(p) - 1), oh,
+                  *flat, *[caches[n] for n in cn])
+        caches = dict(zip(cn, out[1:]))
+    return caches
+
+
+def _step_greedy_streams(cfg, flat, cn, prompts, steps, s):
+    """Reference: the pure `make_decode_step` greedy stream per row."""
+    b = len(prompts)
+    sfn, *_ = M.make_decode_step(cfg)
+    caches = _prefill_caches(cfg, flat, cn, prompts, b, s)
+    seqs = [list(p) for p in prompts]
+    streams = [[] for _ in range(b)]
+    for _ in range(steps):
+        toks = jnp.asarray([[seq[-1]] for seq in seqs], jnp.int32)
+        pos = jnp.asarray([len(seq) - 1 for seq in seqs], jnp.int32)
+        out = sfn(toks, pos, *flat, *[caches[n] for n in cn])
+        caches = dict(zip(cn, out[1:]))
+        for r, seq in enumerate(seqs):
+            t = int(jnp.argmax(out[0][r]))
+            streams[r].append(t)
+            seq.append(t)
+    return streams
+
+
+def _spec_greedy_streams(cfg, tflat, dflat, cn, prompts, steps, s, K):
+    """Draft/verify/rewind loop — the python mirror of the Rust
+    `SpecDecoder` round. `dflat` is the drafter's weight stack (a different
+    model, so drafts are imperfect and rejections actually happen).
+
+    "Rewind" is logical, exactly as on the Rust side: rejected drafts'
+    K/V stay in the cache tensors beyond each row's frontier, and
+    correctness relies on later writes/attention masking them out."""
+    b = len(prompts)
+    sfn, *_ = M.make_decode_step(cfg)
+    vfn, *_ = M.make_decode_verify(cfg)
+    tcaches = _prefill_caches(cfg, tflat, cn, prompts, b, s)
+    dcaches = _prefill_caches(cfg, dflat, cn, prompts, b, s)
+    seqs = [list(p) for p in prompts]
+    streams = [[] for _ in range(b)]
+    rounds = accepted_total = 0
+    while any(len(st) < steps for st in streams):
+        rounds += 1
+        assert rounds <= b * steps + 8, "spec loop failed to make progress"
+        active = [r for r in range(b) if len(streams[r]) < steps]
+        k_eff = {r: min(K, steps - len(streams[r]) - 1, s - len(seqs[r]))
+                 for r in active}
+        # ---- draft k_eff tokens greedily + one write-only sync step ------
+        drafts = {r: [] for r in active}
+        for t in range(max(k_eff.values()) + 1):
+            toks, pos = [], []
+            for r in range(b):
+                if r in active and t <= k_eff[r]:
+                    toks.append([seqs[r][-1] if t == 0 else drafts[r][t - 1]])
+                    pos.append(len(seqs[r]) - 1 + t)
+                else:
+                    toks.append([0])
+                    pos.append(s)  # off-grid: writes nothing
+            out = sfn(jnp.asarray(toks, jnp.int32),
+                      jnp.asarray(pos, jnp.int32),
+                      *dflat, *[dcaches[n] for n in cn])
+            dcaches = dict(zip(cn, out[1:]))
+            for r in active:
+                if t < k_eff[r]:
+                    drafts[r].append(int(jnp.argmax(out[0][r])))
+        # ---- one batched verification of every row's window --------------
+        toks, pos = [], []
+        for r in range(b):
+            if r in active:
+                toks.append([seqs[r][-1]] + drafts[r]
+                            + [0] * (K - k_eff[r]))
+                pos.append(len(seqs[r]) - 1)
+            else:
+                toks.append([0] * (K + 1))
+                pos.append(s)
+        out = vfn(jnp.asarray(toks, jnp.int32), jnp.asarray(pos, jnp.int32),
+                  *tflat, *[tcaches[n] for n in cn])
+        tcaches = dict(zip(cn, out[1:]))
+        # ---- accept the longest matching prefix + 1 correction token -----
+        for r in active:
+            tgt = [int(jnp.argmax(out[0][r, t])) for t in range(k_eff[r] + 1)]
+            a = 0
+            while a < k_eff[r] and drafts[r][a] == tgt[a]:
+                a += 1
+            accepted_total += a
+            for t in tgt[:min(a + 1, steps - len(streams[r]))]:
+                streams[r].append(t)
+                seqs[r].append(t)
+    return streams, rounds, accepted_total
+
+
+def _assert_spec_matches_step_greedy(cfg, prompts, steps, s, K=3):
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn = M.param_names(cfg)
+    ln = M.lora_names(cfg)
+    cn = M.kv_cache_names(cfg)
+    tflat = [params[k] for k in pn] + [lora[k] for k in ln]
+    # drafter = the target slightly perturbed: a proxy close enough to get
+    # drafts accepted, imperfect enough that rejections actually happen
+    key = jax.random.PRNGKey(99)
+    dl = {k: (v + 0.01 * jax.random.normal(jax.random.fold_in(key, i),
+                                           v.shape)
+              if k.endswith("lora_b") else v)
+          for i, (k, v) in enumerate(lora.items())}
+    dflat = [params[k] for k in pn] + [dl[k] for k in ln]
+    ref = _step_greedy_streams(cfg, tflat, cn, prompts, steps, s)
+    spec, rounds, accepted = _spec_greedy_streams(
+        cfg, tflat, dflat, cn, prompts, steps, s, K)
+    assert spec == ref, f"speculative stream diverged: {spec} vs {ref}"
+    return rounds, accepted
+
+
+def test_spec_verify_loop_reproduces_step_greedy_stream():
+    """Greedy speculative decoding is lossless: the draft/verify/rewind
+    loop over `make_decode_verify` emits byte-identical streams to the
+    pure `make_decode_step` decode, rejections and all."""
+    steps, K = 8, 3
+    rounds, accepted = _assert_spec_matches_step_greedy(
+        CFG, prompts=[[1, 2, 3, 4, 5], [9, 8, 7]], steps=steps, s=28, K=K)
+    # the run must exercise BOTH outcome paths, or the matrix is vacuous:
+    # some drafts accepted (multi-token rounds) ...
+    assert accepted > 0, "no draft was ever accepted across the run"
+    # ... and some rejected (more rounds than the all-accepted minimum)
+    assert rounds > -(-steps // (K + 1)), "no draft was ever rejected"
+
+
+def test_spec_verify_loop_gqa_and_pruned_plan():
+    """GQA (kv < h) and a pruned layer plan with non-dividing head counts
+    must round-trip through the verify window too."""
+    gqa = ModelConfig(name="gqa4", d_model=64, n_layers=2, n_heads=4,
+                      n_kv_heads=2, d_ff=96, max_seq=32)
+    _assert_spec_matches_step_greedy(
+        gqa, prompts=[[5, 6, 7], [11, 12, 13, 14]], steps=6, s=24)
+    pruned = ModelConfig(name="pp", d_model=64, n_layers=2, n_heads=4,
+                         n_kv_heads=2, d_ff=96, max_seq=32,
+                         layer_plan=[[4, 2, 96], [3, 2, 64]])
+    _assert_spec_matches_step_greedy(
+        pruned, prompts=[[3, 1, 4, 1], [2, 7]], steps=6, s=24)
+
+
+def test_decode_verify_window_matches_reforward_positions():
+    """Every verify-window position's logits must match the full reforward
+    at that position (the per-position analogue of the kv step test)."""
+    cfg = CFG
+    b, s, K = 2, 24, 4
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    vfn, *_ = M.make_decode_verify(cfg)
+    prompts = [[1, 2, 3, 4, 5], [9, 8, 7]]
+    caches = _prefill_caches(cfg, flat, cn, prompts, b, s)
+    rng = np.random.default_rng(3)
+    windows = [[p[-1]] + list(rng.integers(1, cfg.vocab_size, K))
+               for p in prompts]
+    out = vfn(jnp.asarray(windows, jnp.int32),
+              jnp.asarray([len(p) - 1 for p in prompts], jnp.int32),
+              *flat, *[caches[n] for n in cn])
+    proj = M.ProjCtx(params, lora=lora, cfg=cfg)
+    for r, p in enumerate(prompts):
+        full = list(p) + windows[r][1:]
+        grid = jnp.asarray([full + [0] * (s - len(full))], jnp.int32)
+        ref = M.forward(cfg, proj, grid)[0]
+        for t in range(K + 1):
+            ref_row = ref[len(p) - 1 + t]
+            np.testing.assert_allclose(out[0][r, t], ref_row,
+                                       rtol=2e-3, atol=2e-3)
+            assert int(jnp.argmax(out[0][r, t])) == int(jnp.argmax(ref_row))
+
+
+def test_decode_verify_offgrid_window_writes_nothing():
+    """A dummy row (pos >= S) must leave every cache bitwise intact — the
+    contract that lets free/finished rows ride the batched verify call."""
+    cfg = CFG
+    b, s, K = 2, 16, 3
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    vfn, *_ = M.make_decode_verify(cfg)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    rng = np.random.default_rng(0)
+    caches = {n: jnp.asarray(rng.normal(size=shapes[n]), jnp.float32)
+              for n in cn}
+    out = vfn(jnp.asarray([[0] * (K + 1)] * b, jnp.int32),
+              jnp.asarray([s, s + 5], jnp.int32),
+              *flat, *[caches[n] for n in cn])
+    new = dict(zip(cn, out[1:]))
+    for n in cn:
+        np.testing.assert_array_equal(np.asarray(caches[n]),
+                                      np.asarray(new[n]))
+
+
+def test_decode_verify_adapters_matches_stacked_reforward():
+    """The adapter-stacked verify window scores each row's drafts under
+    that row's own adapter slot."""
+    cfg = CFG
+    b, s, K, n = 3, 20, 3, 3
+    params = _params(cfg)
+    _, stacked = _adapter_stack(cfg, n)
+    prompts = [[1, 2, 3, 4], [9, 8, 7], [5, 6]]
+    row_ix = [0, 1, 2]
+    pfn, pn, ln, cn = M.make_decode_prefill_adapters(cfg, n)
+    vfn, *_ = M.make_decode_verify_adapters(cfg, n)
+    lfn, *_ = M.make_logits_adapters(cfg, n)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    caches = {nm: jnp.zeros(shapes[nm], jnp.float32) for nm in cn}
+    flat = [params[k] for k in pn] + [stacked[k] for k in ln]
+    for row, p in enumerate(prompts):
+        toks = jnp.asarray([list(p) + [0] * (s - len(p))], jnp.int32)
+        oh = jnp.zeros((b,), jnp.float32).at[row].set(1.0)
+        out = pfn(toks, jnp.int32(len(p) - 1), oh, jnp.int32(row_ix[row]),
+                  *flat, *[caches[nm] for nm in cn])
+        caches = dict(zip(cn, out[1:]))
+    rng = np.random.default_rng(5)
+    windows = [[p[-1]] + list(rng.integers(1, cfg.vocab_size, K))
+               for p in prompts]
+    ix = jnp.asarray(row_ix, jnp.int32)
+    out = vfn(jnp.asarray(windows, jnp.int32),
+              jnp.asarray([len(p) - 1 for p in prompts], jnp.int32),
+              ix, *flat, *[caches[nm] for nm in cn])
+    for r, p in enumerate(prompts):
+        full = list(p) + windows[r][1:]
+        grid = jnp.asarray([f + [0] * (s - len(f))
+                            for f in [full] * b], jnp.int32)
+        ref = lfn(grid, ix, *flat)[0][r]
+        for t in range(K + 1):
+            ref_row = ref[len(p) - 1 + t]
+            np.testing.assert_allclose(out[0][r, t], ref_row,
+                                       rtol=2e-3, atol=2e-3)
+            assert int(jnp.argmax(out[0][r, t])) == int(jnp.argmax(ref_row))
+
+
+# ---------------------------------------------------------------------------
 # Multi-adapter serving (stacked LoRA + per-row adapter_ix gather)
 # ---------------------------------------------------------------------------
 

@@ -6,7 +6,9 @@
 //!   fig3_*   — eval/perplexity path that produces the convergence curves
 //!   tab3_*   — generation/decode path behind pass@k
 //!   serve    — continuous-batching scheduler; emits BENCH_serve.json
-//!              (steady-state tokens/sec, mean TTFT, batch occupancy)
+//!              (steady-state tokens/sec, mean TTFT, batch occupancy;
+//!              speculative scenarios keyed by draft length K and
+//!              acceptance rate, sim fallback without artifacts)
 //!   substrate benches: NF4 quant, pruning plans, recovery, tokenizer, JSON
 //!
 //! Requires `make artifacts` (tiny suite) for the runtime benches.
@@ -36,6 +38,17 @@ fn serve_workload<E: DecodeEngine>(
     n: usize,
     adapters: &[AdapterId],
 ) -> anyhow::Result<ServerStats> {
+    serve_workload_t(engine, n, adapters, false)
+}
+
+/// `greedy` pins every request to temperature 0 — the speculative
+/// scenarios measure acceptance, which is a greedy-path concept.
+fn serve_workload_t<E: DecodeEngine>(
+    engine: E,
+    n: usize,
+    adapters: &[AdapterId],
+    greedy: bool,
+) -> anyhow::Result<ServerStats> {
     let mut srv = Server::new(engine, 7);
     let mut ig = InstructGen::new(Dataset::Hermes, 3, 1);
     for i in 0..n {
@@ -43,7 +56,7 @@ fn serve_workload<E: DecodeEngine>(
         srv.enqueue_adapter(
             ex.instruction,
             SampleCfg {
-                temperature: 0.2 * (i % 3) as f64,
+                temperature: if greedy { 0.0 } else { 0.2 * (i % 3) as f64 },
                 top_p: [1.0, 0.95, 0.9][i % 3],
                 max_new: 8 + 4 * (i % 2),
             },
@@ -59,12 +72,14 @@ fn serve_workload<E: DecodeEngine>(
 }
 
 /// One serving measurement: which decode path it exercised (`reforward` /
-/// `kvcache`) and through which engine (`pjrt`, or `sim` when the
-/// scheduler ran without artifacts).
+/// `kvcache` / `speculative`) and through which engine (`pjrt`, or `sim`
+/// when the scheduler ran without artifacts).
 struct ServeEntry {
     path: &'static str,
     engine: &'static str,
     requests: usize,
+    /// speculative scenario knobs: (draft length K, sim acceptance prob)
+    spec_cfg: Option<(usize, f64)>,
     stats: ServerStats,
 }
 
@@ -87,7 +102,7 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
                     ])
                 })
                 .collect();
-            Json::obj(vec![
+            let mut fields = vec![
                 ("path", Json::str(e.path)),
                 ("engine", Json::str(e.engine)),
                 ("requests", Json::num(e.requests as f64)),
@@ -99,8 +114,23 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
                 ("peak_queue_depth", Json::num(st.peak_queue_depth as f64)),
                 ("decode_steps", Json::num(st.decode_steps as f64)),
                 ("total_tokens", Json::num(st.total_tokens as f64)),
-                ("adapters", Json::Arr(lanes)),
-            ])
+            ];
+            if let Some((k, p)) = e.spec_cfg {
+                fields.push(("draft_k", Json::num(k as f64)));
+                if p.is_finite() {
+                    // sim scenarios only; pjrt entries carry the *real*
+                    // acceptance_rate below instead
+                    fields.push(("sim_accept_prob", Json::num(p)));
+                }
+            }
+            if let Some(sp) = &st.spec {
+                fields.push(("acceptance_rate", Json::num(sp.acceptance_rate())));
+                fields.push(("tokens_per_verify", Json::num(sp.tokens_per_verify())));
+                fields.push(("draft_steps", Json::num(sp.draft_steps as f64)));
+                fields.push(("verify_steps", Json::num(sp.verify_steps as f64)));
+            }
+            fields.push(("adapters", Json::Arr(lanes)));
+            Json::obj(fields)
         })
         .collect();
     let j = Json::obj(vec![("bench", Json::str("serve")), ("entries", Json::Arr(rows))]);
@@ -191,15 +221,28 @@ fn main() -> anyhow::Result<()> {
         // the tiny artifact suite is present. The sim engine has no decode
         // cost model, so one measured workload stands in for both path
         // labels (engine "sim" marks the entries as scheduler-only). The
-        // mixed-adapter scenario routes requests across three adapters.
+        // mixed-adapter scenario routes requests across three adapters;
+        // the speculative scenarios sweep draft length K x acceptance
+        // probability through the SimEngine drafter mode.
         let st = serve_workload(SimEngine::new(4), 64, &[])?;
         let ids: Vec<AdapterId> = (0..3).map(AdapterId::for_slot).collect();
         let mixed = serve_workload(SimEngine::new(4), 64, &ids)?;
-        emit_bench_serve(&[
-            ServeEntry { path: "reforward", engine: "sim", requests: 64, stats: st.clone() },
-            ServeEntry { path: "kvcache", engine: "sim", requests: 64, stats: st },
-            ServeEntry { path: "mixed-adapter", engine: "sim", requests: 64, stats: mixed },
-        ])?;
+        let mut entries = vec![
+            ServeEntry { path: "reforward", engine: "sim", requests: 64, spec_cfg: None, stats: st.clone() },
+            ServeEntry { path: "kvcache", engine: "sim", requests: 64, spec_cfg: None, stats: st },
+            ServeEntry { path: "mixed-adapter", engine: "sim", requests: 64, spec_cfg: None, stats: mixed },
+        ];
+        for (k, p) in [(2, 0.5), (4, 0.0), (4, 0.5), (4, 0.9), (8, 0.9)] {
+            let st = serve_workload_t(SimEngine::with_spec(4, k, p, 7), 64, &[], true)?;
+            entries.push(ServeEntry {
+                path: "speculative",
+                engine: "sim",
+                requests: 64,
+                spec_cfg: Some((k, p)),
+                stats: st,
+            });
+        }
+        emit_bench_serve(&entries)?;
     }
 
     // ---------------- runtime benches (need artifacts) --------------------
@@ -302,6 +345,7 @@ fn main() -> anyhow::Result<()> {
             path: "reforward",
             engine: "pjrt",
             requests: n,
+            spec_cfg: None,
             stats: serve_workload(gen, n, &[])?,
         }];
         match Generator::with_path(&rt, "logits_tiny", &[&params, &lora], Some(DecodePath::KvCache))
@@ -310,6 +354,7 @@ fn main() -> anyhow::Result<()> {
                 path: "kvcache",
                 engine: "pjrt",
                 requests: n,
+                spec_cfg: None,
                 stats: serve_workload(gen, n, &[])?,
             }),
             Err(e) => {
@@ -318,8 +363,47 @@ fn main() -> anyhow::Result<()> {
                     path: "kvcache",
                     engine: "sim",
                     requests: 64,
+                    spec_cfg: None,
                     stats: serve_workload(SimEngine::new(4), 64, &[])?,
                 });
+            }
+        }
+        // draft small, verify large through the real scheduler: the
+        // pruned proxy (sliced base, zero factors) drafts for the target;
+        // sim K-sweep fallback when the trio/drafter artifacts are absent
+        let spec = (|| -> anyhow::Result<(usize, ServerStats)> {
+            let (dparams, dlora) = loram::coordinator::speculative::sliced_drafter_standin(
+                &rt, &cfg, &params, "tiny_p50", 0,
+            )?;
+            let gen = Generator::with_speculative(
+                &rt,
+                "logits_tiny",
+                &[&params, &lora],
+                "tiny_p50",
+                &[&dparams, &dlora],
+            )?;
+            let k = gen.draft_k().expect("speculative generator has a window");
+            Ok((k, serve_workload_t(gen, n, &[], true)?))
+        })();
+        match spec {
+            Ok((k, stats)) => entries.push(ServeEntry {
+                path: "speculative",
+                engine: "pjrt",
+                requests: n,
+                spec_cfg: Some((k, f64::NAN)),
+                stats,
+            }),
+            Err(e) => {
+                println!("(speculative serve bench falling back to sim: {e})");
+                for (k, p) in [(4, 0.5), (4, 0.9)] {
+                    entries.push(ServeEntry {
+                        path: "speculative",
+                        engine: "sim",
+                        requests: 64,
+                        spec_cfg: Some((k, p)),
+                        stats: serve_workload_t(SimEngine::with_spec(4, k, p, 7), 64, &[], true)?,
+                    });
+                }
             }
         }
         let mixed = Generator::with_adapters(&rt, "logits_tiny_a3", &[&params], None, None)
@@ -337,6 +421,7 @@ fn main() -> anyhow::Result<()> {
                 path: "mixed-adapter",
                 engine: "pjrt",
                 requests: n,
+                spec_cfg: None,
                 stats,
             }),
             Err(e) => {
@@ -346,6 +431,7 @@ fn main() -> anyhow::Result<()> {
                     path: "mixed-adapter",
                     engine: "sim",
                     requests: 64,
+                    spec_cfg: None,
                     stats: serve_workload(SimEngine::new(4), 64, &ids)?,
                 });
             }

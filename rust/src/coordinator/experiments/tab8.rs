@@ -25,6 +25,7 @@ fn enqueue_serve_workload(
     n: usize,
     seed: u64,
     ids: &[AdapterId],
+    temperature: f64,
 ) {
     let mut ig = InstructGen::new(Dataset::Hermes, seed, 2);
     for i in 0..n {
@@ -32,7 +33,7 @@ fn enqueue_serve_workload(
         srv.enqueue_adapter(
             ex.instruction,
             SampleCfg {
-                temperature: 0.4,
+                temperature,
                 top_p: if i % 2 == 0 { 0.95 } else { 0.8 },
                 max_new: 8,
             },
@@ -110,11 +111,16 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     // throughput and TTFT through the continuous-batching scheduler, small
     // LoRA target vs the big recovered-inference target; the `adapter`
     // column breaks every method down per adapter lane ("all" = aggregate)
+    // acceptance_rate: engine-level drafts-accepted/drafts-proposed on
+    // aggregate rows; per-lane rows report that lane's accepted-token
+    // share instead (per-lane proposals are not separable — lanes share
+    // every draft round). Blank off the speculative path.
     let mut scsv = Csv::create(
         ctx.out_dir.join("tab8_serving.csv"),
         &["method", "decode_path", "adapter", "requests", "tokens_per_sec",
           "mean_ttft_ms", "mean_latency_ms", "mean_occupancy",
-          "mean_queue_wait_ms", "peak_queue_depth"],
+          "mean_queue_wait_ms", "peak_queue_depth", "acceptance_rate",
+          "draft_steps", "verify_steps"],
     )?;
     let serve_requests = workload_steps * 2;
     let mut serve_rows = |method: &str,
@@ -131,6 +137,14 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             st.mean_queue_wait_ms(),
             st.peak_queue_depth
         ));
+        let (rate, dsteps, vsteps) = match &st.spec {
+            Some(sp) => (
+                format!("{:.3}", sp.acceptance_rate()),
+                sp.draft_steps.to_string(),
+                sp.verify_steps.to_string(),
+            ),
+            None => (String::new(), String::new(), String::new()),
+        };
         scsv.row(&crate::csv_row![
             method,
             decode_path,
@@ -141,9 +155,17 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             format!("{:.2}", st.mean_latency_ms()),
             format!("{:.3}", st.mean_occupancy()),
             format!("{:.2}", st.mean_queue_wait_ms()),
-            st.peak_queue_depth
+            st.peak_queue_depth,
+            rate,
+            dsteps,
+            vsteps
         ])?;
         for (adapter, lane) in &st.per_adapter {
+            let lane_rate = if st.spec.is_some() {
+                format!("{:.3}", lane.draft_accept_share())
+            } else {
+                String::new()
+            };
             scsv.row(&crate::csv_row![
                 method,
                 decode_path,
@@ -153,6 +175,9 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 format!("{:.2}", lane.mean_ttft_ms()),
                 format!("{:.2}", lane.mean_latency_ms()),
                 "",
+                "",
+                "",
+                lane_rate,
                 "",
                 ""
             ])?;
@@ -166,7 +191,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         let gen = Generator::new(ctx.rt, &format!("logits_{base}"), &[&params, &lora])?;
         let decode_path = gen.decode_path().name().to_string();
         let mut srv = Server::new(gen, ctx.seed);
-        enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[]);
+        enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
         srv.drain()?;
         serve_rows(&method, &decode_path, &srv)?;
     }
@@ -200,7 +225,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             let method = format!("{big} serve x{cap} adapters");
             let decode_path = gen.decode_path().name().to_string();
             let mut srv = Server::new(gen, ctx.seed);
-            enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &ids);
+            enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &ids, 0.4);
             srv.drain()?;
             serve_rows(&method, &decode_path, &srv)?;
         }
@@ -208,6 +233,39 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             "tab8: no stacked logits_{big}_a<N> artifact; skipping the \
              mixed-adapter serving row"
         )),
+    }
+
+    // draft small, verify large: the pruned proxy drafts, the big model
+    // verifies (DESIGN.md §2d) — skipped with a log line when the verify
+    // or drafter artifacts are not in the suite
+    let spec_ready = ctx.rt.load(&format!("decode_verify_{big}")).is_ok()
+        && ctx.rt.load(&format!("decode_prefill_{big_pruned}")).is_ok()
+        && ctx.rt.load(&format!("decode_step_{big_pruned}")).is_ok();
+    if spec_ready {
+        let params = ensure_base(ctx.rt, big, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+        let full_cfg = ctx.rt.load(&format!("eval_{big}"))?.meta.config.clone();
+        let lora = init_lora(&full_cfg, ctx.seed);
+        let (dparams, dlora) = crate::coordinator::speculative::sliced_drafter_standin(
+            ctx.rt, &full_cfg, &params, big_pruned, ctx.seed,
+        )?;
+        let gen = Generator::with_speculative(
+            ctx.rt,
+            &format!("logits_{big}"),
+            &[&params, &lora],
+            big_pruned,
+            &[&dparams, &dlora],
+        )?;
+        let mut srv = Server::new(gen, ctx.seed);
+        // greedy workload: speculative acceptance is a greedy-path
+        // concept (sampled rows degrade to 1-token verify windows)
+        enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.0);
+        srv.drain()?;
+        serve_rows(&format!("{big} serve (drafter {big_pruned})"), "speculative", &srv)?;
+    } else {
+        log::info(format!(
+            "tab8: decode_verify_{big} or the {big_pruned} drafter pair \
+             missing; skipping the speculative serving row"
+        ));
     }
     log::info(format!("tab8 -> {}", ctx.out_dir.display()));
     Ok(())

@@ -12,16 +12,21 @@
 //! (continuous batching, see `serve`). `generate_batch` / `complete` are
 //! thin all-rows-at-once wrappers over the same machine.
 //!
-//! Two decode paths share the row state machine (DESIGN.md §2a):
+//! Three decode paths share the row state machine (DESIGN.md §2a/§2d):
 //! *reforward* runs the full-sequence `logits_*` artifact every step (the
-//! v1 baseline), while *kv-cache* — selected automatically when the
+//! v1 baseline); *kv-cache* — selected automatically when the
 //! `decode_prefill_*`/`decode_step_*` artifact pair is registered — runs a
 //! (B, 1) incremental forward over device-resident K/V caches owned by
-//! [`super::kvcache::KvDecoder`]. Row state, the scheduler, and every
-//! caller are identical across both.
+//! [`super::kvcache::KvDecoder`]; *speculative*
+//! ([`Generator::with_speculative`]) drafts K tokens on the pruned proxy
+//! and verifies them in one (B, K+1) target window
+//! ([`super::speculative::SpecDecoder`]), emitting several tokens per
+//! step with byte-identical greedy streams. Row state, the scheduler, and
+//! every caller are identical across all of them.
 
 use super::adapters::{AdapterId, AdapterStore};
 use super::kvcache::KvDecoder;
+use super::speculative::{SpecDecoder, SpecFeed, SpecRowOut, SpecStats};
 use crate::runtime::{Artifact, Runtime, Session, SlotGroup};
 use crate::tensor::{Tensor, TensorStore};
 use crate::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
@@ -38,6 +43,10 @@ pub enum DecodePath {
     Reforward,
     /// (B, 1) incremental forward over donated K/V caches.
     KvCache,
+    /// Draft small, verify large: the pruned proxy drafts K tokens, the
+    /// target verifies them in one (B, K+1) window (DESIGN.md §2d).
+    /// Greedy streams are byte-identical to the other two paths.
+    Speculative,
 }
 
 impl DecodePath {
@@ -45,6 +54,7 @@ impl DecodePath {
         match self {
             DecodePath::Reforward => "reforward",
             DecodePath::KvCache => "kvcache",
+            DecodePath::Speculative => "speculative",
         }
     }
 }
@@ -82,7 +92,8 @@ struct RowState {
     adapter: Option<AdapterId>,
 }
 
-/// One sampled token, as reported by [`Generator::decode_step`].
+/// One sampled token, as reported by [`Generator::decode_step`]. On the
+/// speculative path one step may report *several* tokens per row.
 #[derive(Debug, Clone, Copy)]
 pub struct StepOut {
     pub row: usize,
@@ -90,12 +101,18 @@ pub struct StepOut {
     /// the row reached EOS/PAD, its `max_new` budget, or the grid edge;
     /// it stays occupied until [`Generator::take`]
     pub finished: bool,
+    /// the token came from an accepted speculative draft (always false on
+    /// the reforward/kvcache paths and for verify-correction tokens)
+    pub accepted: bool,
 }
 
 struct DecodeState {
     sess: Session,
     /// present iff the decode artifact pair is registered (the kv path)
     kv: Option<KvDecoder>,
+    /// present iff constructed via `with_speculative` (the spec path;
+    /// `kv` is then None — the target caches live inside the SpecDecoder)
+    spec: Option<SpecDecoder>,
     rows: Vec<Option<RowState>>,
     /// adapter registry when serving a stacked-adapter artifact through
     /// `with_adapters`; rows then route by their `AdapterId`
@@ -144,6 +161,10 @@ impl<'r> Generator<'r> {
             .unwrap_or_else(|| art.meta.config.name.clone());
         let kv = match path {
             Some(DecodePath::Reforward) => None,
+            Some(DecodePath::Speculative) => bail!(
+                "the speculative path needs the drafter's weights — \
+                 construct via Generator::with_speculative"
+            ),
             Some(DecodePath::KvCache) => Some(
                 KvDecoder::try_new(rt, &model, stores)?.with_context(|| {
                     format!("decode artifact pair for '{model}' not registered")
@@ -192,11 +213,61 @@ impl<'r> Generator<'r> {
         Ok(Generator {
             rt,
             art,
-            state: RefCell::new(DecodeState { sess, kv, rows, adapters: None }),
+            state: RefCell::new(DecodeState { sess, kv, spec: None, rows, adapters: None }),
             adapter_group,
             tk: Tokenizer::new(),
             vocab,
         })
+    }
+
+    /// A generator on the speculative path: the pruned proxy named by
+    /// `drafter_model` (its `decode_{prefill,step}_*` pair, running
+    /// `drafter_stores` — pruned base + pruned-side pre-R(·) LoRA factors)
+    /// drafts; this artifact's model (its decode *trio*, running `stores`)
+    /// verifies. Greedy rows emit streams byte-identical to the other
+    /// decode paths; rows sampling at temperature > 0 degrade to
+    /// per-token decode through the same batched verify call.
+    pub fn with_speculative(
+        rt: &'r Runtime,
+        artifact: &str,
+        stores: &[&TensorStore],
+        drafter_model: &str,
+        drafter_stores: &[&TensorStore],
+    ) -> Result<Generator<'r>> {
+        let gen = Generator::with_path(rt, artifact, stores, Some(DecodePath::Reforward))?;
+        let model = artifact
+            .strip_prefix("logits_")
+            .map(String::from)
+            .unwrap_or_else(|| gen.art.meta.config.name.clone());
+        let spec = SpecDecoder::try_new(rt, &model, stores, drafter_model, drafter_stores)?;
+        ensure!(
+            spec.batch_size() == gen.batch_size() && spec.seq_len() == gen.seq_len(),
+            "speculative grid ({}, {}) != logits grid ({}, {})",
+            spec.batch_size(),
+            spec.seq_len(),
+            gen.batch_size(),
+            gen.seq_len()
+        );
+        if let Some(g) = &gen.adapter_group {
+            ensure!(
+                spec.adapter_capacity() == Some(g.size),
+                "target trio adapter capacity {:?} != logits capacity {}",
+                spec.adapter_capacity(),
+                g.size
+            );
+        }
+        gen.state.borrow_mut().spec = Some(spec);
+        Ok(gen)
+    }
+
+    /// Speculative-decoding counters (None off the speculative path).
+    pub fn spec_stats(&self) -> Option<SpecStats> {
+        self.state.borrow().spec.as_ref().map(|s| s.stats)
+    }
+
+    /// Verify-window draft length K (None off the speculative path).
+    pub fn draft_k(&self) -> Option<usize> {
+        self.state.borrow().spec.as_ref().map(|s| s.draft_k())
     }
 
     /// A generator over a stacked-adapter artifact with a live
@@ -238,7 +309,7 @@ impl<'r> Generator<'r> {
             .as_mut()
             .context("generator has no adapter store (use with_adapters)")?;
         let id = ad.register(name, weights)?;
-        finish_registration(ad, id, &mut st.sess, st.kv.as_mut())
+        finish_registration(ad, id, &mut st.sess, st.kv.as_mut(), st.spec.as_mut())
     }
 
     /// Register an adapter from the store's backing directory.
@@ -250,7 +321,7 @@ impl<'r> Generator<'r> {
             .as_mut()
             .context("generator has no adapter store (use with_adapters)")?;
         let id = ad.register_from_disk(name)?;
-        finish_registration(ad, id, &mut st.sess, st.kv.as_mut())
+        finish_registration(ad, id, &mut st.sess, st.kv.as_mut(), st.spec.as_mut())
     }
 
     /// Evict a registered adapter (fails while rows still decode it).
@@ -279,7 +350,10 @@ impl<'r> Generator<'r> {
 
     /// Which decode implementation `decode_step` runs.
     pub fn decode_path(&self) -> DecodePath {
-        if self.state.borrow().kv.is_some() {
+        let st = self.state.borrow();
+        if st.spec.is_some() {
+            DecodePath::Speculative
+        } else if st.kv.is_some() {
             DecodePath::KvCache
         } else {
             DecodePath::Reforward
@@ -366,15 +440,22 @@ impl<'r> Generator<'r> {
         ids.extend(self.tk.encode(prompt));
         ids.push(SEP);
         let (ids, start) = truncate_prompt(ids, self.seq_len(), cfg.max_new);
-        if let Some(kv) = st.kv.as_mut() {
-            // fill the cache first: on failure the row stays free
-            let kv_adapter = adapter.map(|id| id.ix() as i32);
-            if let Err(e) = kv.admit(self.rt, row, &ids, kv_adapter) {
-                if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
-                    ad.release(id).expect("acquired above");
-                }
-                return Err(e);
+        // fill the caches first: on failure the row stays free
+        let kv_adapter = adapter.map(|id| id.ix() as i32);
+        let admitted = if let Some(spec) = st.spec.as_mut() {
+            // greedy rows also admit into the drafter; sampled rows only
+            // ever ride the 1-token verify window
+            spec.admit(self.rt, row, &ids, kv_adapter, cfg.temperature <= 0.0)
+        } else if let Some(kv) = st.kv.as_mut() {
+            kv.admit(self.rt, row, &ids, kv_adapter)
+        } else {
+            Ok(())
+        };
+        if let Err(e) = admitted {
+            if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
+                ad.release(id).expect("acquired above");
             }
+            return Err(e);
         }
         st.rows[row] = Some(RowState {
             seq: ids,
@@ -415,6 +496,9 @@ impl<'r> Generator<'r> {
                 })
                 .collect()
         });
+        if st.spec.is_some() {
+            return self.spec_decode_step(st, adapter_ix, rng);
+        }
         let kv_logits;
         let re_out;
         let (lf, full_grid): (&[f32], bool) = match st.kv.as_mut() {
@@ -463,7 +547,69 @@ impl<'r> Generator<'r> {
                 || r.generated >= r.cfg.max_new
                 || r.seq.len() >= s;
             r.done = finished;
-            events.push(StepOut { row: i, token: next, finished });
+            events.push(StepOut { row: i, token: next, finished, accepted: false });
+        }
+        Ok(events)
+    }
+
+    /// The speculative decode step: one [`SpecDecoder::round`] over the
+    /// grid, then per-row bookkeeping. Greedy rows may emit several
+    /// tokens per call (accepted drafts + the correction token); sampled
+    /// rows emit exactly one, host-sampled from their verify logits.
+    fn spec_decode_step(
+        &self,
+        st: &mut DecodeState,
+        adapter_ix: Option<Vec<i32>>,
+        rng: &mut Rng,
+    ) -> Result<Vec<StepOut>> {
+        let s = self.seq_len();
+        let feeds: Vec<Option<SpecFeed>> = st
+            .rows
+            .iter()
+            .map(|slot| {
+                slot.as_ref().filter(|r| !r.done).map(|r| SpecFeed {
+                    token: *r.seq.last().expect("row has a frontier"),
+                    pos: r.seq.len() - 1,
+                    greedy: r.cfg.temperature <= 0.0,
+                    max_emit: (r.cfg.max_new - r.generated)
+                        .min(s - r.seq.len())
+                        .max(1),
+                })
+            })
+            .collect();
+        let spec = st.spec.as_mut().expect("spec_decode_step needs a SpecDecoder");
+        let outs = spec.round(self.rt, &feeds, adapter_ix.as_deref())?;
+        let mut events = vec![];
+        for (i, (slot, out)) in st.rows.iter_mut().zip(outs).enumerate() {
+            let Some(r) = slot.as_mut() else { continue };
+            let Some(out) = out else { continue };
+            let mut push = |r: &mut RowState, next: i32, accepted: bool| {
+                r.seq.push(next);
+                r.generated += 1;
+                let finished = next == EOS
+                    || next == PAD
+                    || r.generated >= r.cfg.max_new
+                    || r.seq.len() >= s;
+                r.done = finished;
+                events.push(StepOut { row: i, token: next, finished, accepted });
+            };
+            match out {
+                SpecRowOut::Greedy { tokens, accepted } => {
+                    for (j, next) in tokens.into_iter().enumerate() {
+                        push(r, next, j < accepted);
+                        if r.done {
+                            // EOS/PAD inside the window: the rest of the
+                            // verified run does not exist on the other
+                            // paths either — drop it
+                            break;
+                        }
+                    }
+                }
+                SpecRowOut::Logits(lg) => {
+                    let next = sample_token(&lg, r.cfg, rng);
+                    push(r, next, false);
+                }
+            }
         }
         Ok(events)
     }
@@ -477,6 +623,9 @@ impl<'r> Generator<'r> {
         let r = st.rows.get_mut(row)?.take()?;
         if let Some(kv) = st.kv.as_mut() {
             kv.evict(row).expect("occupied row has a cache slot");
+        }
+        if let Some(spec) = st.spec.as_mut() {
+            spec.evict(row).expect("occupied row has cache slots");
         }
         if let (Some(ad), Some(id)) = (st.adapters.as_mut(), r.adapter) {
             ad.release(id).expect("row held an adapter reference");
@@ -579,19 +728,25 @@ impl<'r> Generator<'r> {
     }
 }
 
-/// Stage every freshly registered adapter slot into the given sessions;
-/// the device upload happens at each session's next run (Session-level
-/// dirty tracking), so back-to-back registrations upload once.
+/// Stage every freshly registered adapter slot into the given sessions
+/// (the plain session, the kv pair's, and/or the speculative target
+/// trio's); the device upload happens at each session's next run
+/// (Session-level dirty tracking), so back-to-back registrations upload
+/// once.
 fn stage_dirty_adapters(
     ad: &mut AdapterStore,
     sess: &mut Session,
     mut kv: Option<&mut KvDecoder>,
+    mut spec: Option<&mut SpecDecoder>,
 ) -> Result<()> {
     for id in ad.drain_dirty() {
         let w = ad.weights(id)?;
         sess.put_group("adapter", id.ix(), w)?;
         if let Some(kv) = kv.as_deref_mut() {
             kv.put_adapter(id.ix(), w)?;
+        }
+        if let Some(spec) = spec.as_deref_mut() {
+            spec.put_adapter(id.ix(), w)?;
         }
     }
     Ok(())
@@ -606,8 +761,9 @@ fn finish_registration(
     id: AdapterId,
     sess: &mut Session,
     kv: Option<&mut KvDecoder>,
+    spec: Option<&mut SpecDecoder>,
 ) -> Result<AdapterId> {
-    match stage_dirty_adapters(ad, sess, kv) {
+    match stage_dirty_adapters(ad, sess, kv, spec) {
         Ok(()) => Ok(id),
         Err(e) => {
             ad.evict(id).expect("just-registered adapter has no refs");
@@ -667,7 +823,10 @@ pub fn sample_token(logits: &[f32], cfg: SampleCfg, rng: &mut Rng) -> i32 {
     probs[rng.weighted(&ws)].0 as i32
 }
 
-fn argmax(xs: &[f32]) -> usize {
+/// Greedy argmax (`max_by`'s last-wins tie-break); shared with the
+/// speculative verifier so accepted drafts and sampled tokens agree
+/// bit-for-bit on ties.
+pub(crate) fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())

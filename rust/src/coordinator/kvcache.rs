@@ -1,6 +1,6 @@
 //! KV-cache decode: per-row cache slot lifecycle over the decode artifact
-//! pair (`decode_prefill_*` / `decode_step_*`), riding the Session
-//! state-donation layer.
+//! trio (`decode_prefill_*` / `decode_step_*` / `decode_verify_*`), riding
+//! the Session state-donation layer.
 //!
 //! The caches are artifact state: aot.py declares every `new.cache_*`
 //! output bound onto its `cache_*` input (`extra.state_bindings`), so
@@ -13,9 +13,15 @@
 //!
 //! Row lifecycle is tracked by [`CacheSlots`] (pure bookkeeping, unit
 //! tested): `admit` installs a row's prompt cache, `advance` records each
-//! decode-step write at the row frontier, `evict` frees the slot after
-//! `take`. A recycled row is safe by construction — its next admission
-//! rewrites the whole cache row under the prefill's `row_onehot` mask.
+//! decode-step write at the row frontier, `rewind` rolls the frontier back
+//! past rejected speculative drafts (never below the admission prefill),
+//! `evict` frees the slot after `take`. A recycled row is safe by
+//! construction — its next admission rewrites the whole cache row under
+//! the prefill's `row_onehot` mask.
+//!
+//! The optional verify session (DESIGN.md §2d) is the third artifact of
+//! the trio: a (B, K+1) window that scores a whole draft run in one
+//! batched forward, sharing the pair's donated cache tensors bitwise.
 
 use crate::runtime::{Runtime, Session};
 use crate::tensor::{Tensor, TensorStore};
@@ -23,13 +29,22 @@ use crate::tokenizer::{pad_to, PAD};
 use crate::util::log;
 use anyhow::{bail, ensure, Context, Result};
 
+/// One occupied row's cache extent: `len` valid positions, of which the
+/// first `admit` came from the admission prefill (the prompt — never
+/// rewindable, a draft can only reject *generated* positions).
+#[derive(Debug, Clone, Copy)]
+struct RowSlot {
+    len: usize,
+    admit: usize,
+}
+
 /// Pure per-row cache bookkeeping: which rows hold a cache, and how many
 /// positions of each row are valid. Kept separate from the sessions so the
 /// lifecycle invariants are unit-testable without artifacts.
 #[derive(Debug, Clone)]
 pub struct CacheSlots {
-    /// cached-position count per row (None = free slot)
-    rows: Vec<Option<usize>>,
+    /// cached-position extent per row (None = free slot)
+    rows: Vec<Option<RowSlot>>,
     seq: usize,
 }
 
@@ -44,7 +59,7 @@ impl CacheSlots {
 
     /// Cached positions of an occupied row.
     pub fn len(&self, row: usize) -> Option<usize> {
-        self.rows.get(row).copied().flatten()
+        self.rows.get(row).copied().flatten().map(|r| r.len)
     }
 
     pub fn occupied(&self) -> usize {
@@ -64,7 +79,7 @@ impl CacheSlots {
             "kvcache: prompt of {len} exceeds cache capacity {}",
             self.seq
         );
-        *slot = Some(len);
+        *slot = Some(RowSlot { len, admit: len });
         Ok(())
     }
 
@@ -73,18 +88,43 @@ impl CacheSlots {
     /// cached position (`pos == len - 1`, the first step after admission);
     /// anything else would leave garbage gaps.
     pub fn advance(&mut self, row: usize, pos: usize) -> Result<()> {
-        let len = self
+        let slot = self
             .rows
             .get_mut(row)
             .with_context(|| format!("kvcache: row {row} out of range"))?
             .as_mut()
             .with_context(|| format!("kvcache: advance on free row {row}"))?;
         ensure!(
-            pos + 1 == *len || pos == *len,
-            "kvcache: write at {pos} away from row {row} frontier {len}"
+            pos + 1 == slot.len || pos == slot.len,
+            "kvcache: write at {pos} away from row {row} frontier {}",
+            slot.len
         );
         ensure!(pos < self.seq, "kvcache: write at {pos} beyond capacity {}", self.seq);
-        *len = (*len).max(pos + 1);
+        slot.len = slot.len.max(pos + 1);
+        Ok(())
+    }
+
+    /// Roll the row frontier back `n` positions — the rejected-draft path
+    /// of speculative decoding. Purely logical, like `evict`: the K/V
+    /// beyond the new frontier stay in the tensors as garbage, protected
+    /// by the step/verify position masks (writes land at the frontier,
+    /// attention never looks past the query position). Rewinding past the
+    /// admission prefill is refused: prompt positions are never drafts.
+    pub fn rewind(&mut self, row: usize, n: usize) -> Result<()> {
+        let slot = self
+            .rows
+            .get_mut(row)
+            .with_context(|| format!("kvcache: row {row} out of range"))?
+            .as_mut()
+            .with_context(|| format!("kvcache: rewind on free row {row}"))?;
+        ensure!(
+            slot.len - slot.admit >= n,
+            "kvcache: rewind of {n} from row {row} frontier {} crosses its \
+             admit length {}",
+            slot.len,
+            slot.admit
+        );
+        slot.len -= n;
         Ok(())
     }
 
@@ -101,12 +141,28 @@ impl CacheSlots {
     }
 }
 
+/// One row's feed into a [`KvDecoder::verify`] call: the frontier token
+/// followed by the draft candidates (padded to the artifact's K+1 window),
+/// the grid position of the frontier, and how many window tokens are
+/// `live` — actually written and tracked (frontier + drafts that fit).
+#[derive(Debug, Clone)]
+pub struct VerifyFeed {
+    pub tokens: Vec<i32>,
+    pub pos: usize,
+    pub live: usize,
+}
+
 /// The executable decode subsystem: the prefill and step sessions plus the
 /// cache lifecycle. Constructed by [`crate::coordinator::generate::Generator`]
 /// when the decode artifact pair is registered for its model.
 pub struct KvDecoder {
     prefill: Session,
     step: Session,
+    /// the speculative verification window (`decode_verify_*`), when that
+    /// third artifact of the decode trio is registered
+    verify: Option<Session>,
+    /// draft window size K of the verify artifact (tokens are (B, K+1))
+    draft_k: Option<usize>,
     cache_names: Vec<String>,
     pub slots: CacheSlots,
     batch: usize,
@@ -183,11 +239,73 @@ impl KvDecoder {
             (None, None) => None,
             _ => bail!("adapter group declared by only one of {pname}/{sname}"),
         };
+        // the optional third artifact of the trio: the speculative verify
+        // window. Its absence is fine (no spec path); a *defective* one —
+        // wrong grid, caches or adapter group — falls back loudly, like
+        // every other pair defect.
+        let vname = format!("decode_verify_{model}");
+        let (verify_art, draft_k) = match rt.load(&vname) {
+            Err(_) => (None, None),
+            Ok(va) => {
+                let check = || -> Result<usize> {
+                    ensure!(
+                        va.meta.batch() == b && va.meta.seq() == s,
+                        "verify grid ({}, {}) != decode grid ({b}, {s})",
+                        va.meta.batch(),
+                        va.meta.seq()
+                    );
+                    for n in &cache_names {
+                        let vs = va.meta.input_spec(n)?;
+                        let ss = sa.meta.input_spec(n)?;
+                        ensure!(
+                            vs.shape == ss.shape && vs.dtype == ss.dtype,
+                            "cache '{n}' differs between {vname} and {sname}"
+                        );
+                    }
+                    let vg = va.meta.adapter_group()?;
+                    ensure!(
+                        vg.as_ref().map(|g| (&g.input, g.size))
+                            == sg.as_ref().map(|g| (&g.input, g.size)),
+                        "adapter group differs between {vname} and {sname}"
+                    );
+                    let k = va
+                        .meta
+                        .draft_k()
+                        .context("verify meta declares no draft_k")?;
+                    ensure!(k >= 1, "draft_k must be >= 1");
+                    let ts = va.meta.input_spec("tokens")?;
+                    ensure!(
+                        ts.shape == [b, k + 1],
+                        "verify tokens shape {:?} is not (B, draft_k+1) = \
+                         ({b}, {})",
+                        ts.shape,
+                        k + 1
+                    );
+                    Ok(k)
+                };
+                match check() {
+                    Ok(k) => (Some(va), Some(k)),
+                    Err(e) => {
+                        log::warn(format!(
+                            "decode trio for '{model}': '{vname}' is \
+                             registered but defective ({e:#}) — serving \
+                             without the speculative verify window"
+                        ));
+                        (None, None)
+                    }
+                }
+            }
+        };
         let prefill = Session::new(rt, pa, stores)?;
         let step = Session::new(rt, sa, stores)?;
+        let verify = verify_art
+            .map(|va| Session::new(rt, va, stores))
+            .transpose()?;
         Ok(Some(KvDecoder {
             prefill,
             step,
+            verify,
+            draft_k,
             cache_names,
             slots: CacheSlots::new(b, s),
             batch: b,
@@ -202,11 +320,20 @@ impl KvDecoder {
         self.step.group_size("adapter")
     }
 
-    /// Stage one adapter slot's factors into both sessions (uploaded at
-    /// each session's next run; see `Session::put_group`).
+    /// Stage one adapter slot's factors into every session of the trio
+    /// (uploaded at each session's next run; see `Session::put_group`).
     pub fn put_adapter(&mut self, ix: usize, weights: &TensorStore) -> Result<()> {
         self.prefill.put_group("adapter", ix, weights)?;
+        if let Some(v) = self.verify.as_mut() {
+            v.put_group("adapter", ix, weights)?;
+        }
         self.step.put_group("adapter", ix, weights)
+    }
+
+    /// Draft window size of the registered verify artifact, if the decode
+    /// trio is complete (`None` = prefill/step pair only, no spec path).
+    pub fn verify_k(&self) -> Option<usize> {
+        self.draft_k
     }
 
     pub fn batch_size(&self) -> usize {
@@ -215,6 +342,10 @@ impl KvDecoder {
 
     pub fn seq_len(&self) -> usize {
         self.seq
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab
     }
 
     /// Admit a row: run the prefill artifact over its sequence, writing
@@ -345,6 +476,112 @@ impl KvDecoder {
         Ok(logits.clone())
     }
 
+    /// One speculative verification pass over the whole grid: each `Some`
+    /// row feeds its frontier token + drafts (a (K+1)-token window starting
+    /// at `pos`, of which `live` are real) and gets logits at *every*
+    /// window position back, (B, K+1, V) on the host. `None` rows ride
+    /// along as off-grid dummies (`pos = S`): the artifact writes nothing
+    /// for them, so even an occupied-but-idle row's cache stays intact.
+    ///
+    /// The caches hop step session → verify session → back, exactly like
+    /// admission routes them through prefill; only `live` positions are
+    /// recorded in the slots, so the caller rewinds rejected drafts with
+    /// [`KvDecoder::rewind`] afterwards.
+    pub fn verify(
+        &mut self,
+        rt: &Runtime,
+        feeds: &[Option<VerifyFeed>],
+        adapter_ix: Option<&[i32]>,
+    ) -> Result<Tensor> {
+        let k = self
+            .draft_k
+            .context("kvcache: verify on a decoder without the verify artifact")?;
+        ensure!(
+            feeds.len() == self.batch,
+            "kvcache: {} verify feeds for batch {}",
+            feeds.len(),
+            self.batch
+        );
+        let mut toks = Vec::with_capacity(self.batch * (k + 1));
+        let mut pos = Vec::with_capacity(self.batch);
+        for (row, feed) in feeds.iter().enumerate() {
+            match feed {
+                Some(f) => {
+                    ensure!(
+                        f.tokens.len() == k + 1,
+                        "kvcache: verify window of {} tokens, want {}",
+                        f.tokens.len(),
+                        k + 1
+                    );
+                    ensure!(
+                        1 <= f.live && f.live <= k + 1,
+                        "kvcache: verify live count {} outside 1..={}",
+                        f.live,
+                        k + 1
+                    );
+                    for t in 0..f.live {
+                        self.slots.advance(row, f.pos + t)?;
+                    }
+                    toks.extend_from_slice(&f.tokens);
+                    pos.push(f.pos as i32);
+                }
+                None => {
+                    toks.extend(std::iter::repeat(PAD).take(k + 1));
+                    pos.push(self.seq as i32); // off-grid: writes nothing
+                }
+            }
+        }
+        let batch = self.batch;
+        let Self { step, verify, cache_names, adapter_in, .. } = self;
+        let sess = verify.as_mut().expect("draft_k implies a verify session");
+        sess.set(rt, "tokens", &Tensor::from_i32(&[batch, k + 1], toks))?;
+        sess.set(rt, "pos", &Tensor::from_i32(&[batch], pos))?;
+        match (adapter_in.as_deref(), adapter_ix) {
+            (Some(name), ix) => {
+                let ix = match ix {
+                    Some(v) => {
+                        ensure!(
+                            v.len() == batch,
+                            "kvcache: {} adapter feeds for batch {batch}",
+                            v.len()
+                        );
+                        v.to_vec()
+                    }
+                    None => vec![0; batch],
+                };
+                sess.set(rt, name, &Tensor::from_i32(&[batch], ix))?;
+            }
+            (None, Some(_)) => {
+                bail!("kvcache: adapter feeds on a trio with no adapter group")
+            }
+            (None, None) => {}
+        }
+        // between calls the caches live in the step session; route them
+        // through the verify session for this pass — donate back whether
+        // the run succeeded or not, so a failed verify leaves the decoder
+        // usable (the slots above may have advanced; callers treat a
+        // verify error as fatal for the affected generator anyway)
+        step.donate_slots(sess, cache_names)?;
+        let run = sess.run(rt);
+        sess.donate_slots(step, cache_names)?;
+        let out = run?;
+        let logits = out.get("logits")?;
+        if logits.shape != [batch, k + 1, self.vocab] {
+            bail!(
+                "kvcache: verify logits shape {:?}, want {:?}",
+                logits.shape,
+                [batch, k + 1, self.vocab]
+            );
+        }
+        Ok(logits.clone())
+    }
+
+    /// Roll a row's frontier back `n` positions (rejected drafts). Logical
+    /// only — see [`CacheSlots::rewind`] for the safety rules.
+    pub fn rewind(&mut self, row: usize, n: usize) -> Result<()> {
+        self.slots.rewind(row, n)
+    }
+
     /// Free a row's cache slot after `take`.
     pub fn evict(&mut self, row: usize) -> Result<()> {
         self.slots.evict(row)
@@ -396,6 +633,73 @@ mod tests {
         cs.advance(0, 5).unwrap();
         assert_eq!(cs.len(0), Some(6));
         assert!(cs.advance(0, 6).is_err(), "write beyond capacity");
+    }
+
+    #[test]
+    fn rewind_boundaries() {
+        let mut cs = CacheSlots::new(2, 16);
+        cs.admit(0, 4).unwrap();
+        // grow the frontier by 3 generated positions: 4 -> 7
+        cs.advance(0, 3).unwrap();
+        for p in 4..7 {
+            cs.advance(0, p).unwrap();
+        }
+        assert_eq!(cs.len(0), Some(7));
+        // rewind 0 is a no-op
+        cs.rewind(0, 0).unwrap();
+        assert_eq!(cs.len(0), Some(7));
+        // rewind within the generated tail
+        cs.rewind(0, 2).unwrap();
+        assert_eq!(cs.len(0), Some(5));
+        // rewind exactly to the admit length is allowed
+        cs.rewind(0, 1).unwrap();
+        assert_eq!(cs.len(0), Some(4));
+        // rewind past the admit length (into the prompt) is refused
+        assert!(cs.rewind(0, 1).is_err(), "crossed the admit length");
+        assert_eq!(cs.len(0), Some(4), "failed rewind must not move the frontier");
+        // rewind on a free row / out-of-range row is refused
+        assert!(cs.rewind(1, 0).is_err(), "free row");
+        assert!(cs.rewind(2, 0).is_err(), "row out of range");
+        // rewind on an evicted row is refused
+        cs.evict(0).unwrap();
+        assert!(cs.rewind(0, 0).is_err(), "evicted row");
+    }
+
+    #[test]
+    fn rewind_then_advance_rewrites_the_new_frontier() {
+        // after a rejection the next write lands at the rolled-back
+        // frontier (pos == len), exactly like a normal growth step
+        let mut cs = CacheSlots::new(1, 16);
+        cs.admit(0, 3).unwrap();
+        for p in 3..8 {
+            cs.advance(0, p).unwrap();
+        }
+        cs.rewind(0, 4).unwrap();
+        assert_eq!(cs.len(0), Some(4));
+        assert!(cs.advance(0, 6).is_err(), "gap past the rolled-back frontier");
+        cs.advance(0, 4).unwrap();
+        cs.advance(0, 5).unwrap();
+        assert_eq!(cs.len(0), Some(6));
+    }
+
+    #[test]
+    fn recycling_after_mid_stream_rejection_starts_from_the_new_prompt() {
+        // a row evicted right after a rewind (mid-stream rejection, then
+        // the request finished) re-admits cleanly: the new occupant's
+        // admit length, not the old frontier, bounds future rewinds
+        let mut cs = CacheSlots::new(1, 16);
+        cs.admit(0, 6).unwrap();
+        for p in 6..10 {
+            cs.advance(0, p).unwrap();
+        }
+        cs.rewind(0, 3).unwrap();
+        cs.evict(0).unwrap();
+        cs.admit(0, 2).unwrap();
+        assert_eq!(cs.len(0), Some(2));
+        cs.advance(0, 2).unwrap();
+        cs.rewind(0, 1).unwrap();
+        assert_eq!(cs.len(0), Some(2));
+        assert!(cs.rewind(0, 1).is_err(), "old admit length leaked into the row");
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod experiments;
 pub mod generate;
 pub mod kvcache;
 pub mod pipeline;
+pub mod speculative;
 pub mod train;
 
 pub use adapters::{AdapterId, AdapterStore};

@@ -81,6 +81,11 @@ pub struct PipelineConfig {
     pub adapter_dir: Option<PathBuf>,
     /// adapter name for the export (default: `<base>_<variant>`)
     pub adapter_name: Option<String>,
+    /// export the drafter half of "draft small, verify large" into this
+    /// directory: the (aligned) pruned base params and the *pre-R(·)*
+    /// pruned LoRA factors, the exact weights the speculative drafter
+    /// decodes with (DESIGN.md §2d)
+    pub drafter_dir: Option<PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -105,6 +110,7 @@ impl Default for PipelineConfig {
             run_dir: PathBuf::from("runs"),
             adapter_dir: None,
             adapter_name: None,
+            drafter_dir: None,
         }
     }
 }
@@ -335,6 +341,18 @@ impl<'r> Pipeline<'r> {
                 &lora_recovered,
             )?;
             log::info(format!("adapter '{name}' exported to {}", path.display()));
+        }
+        // the drafter handoff: the pruned model + its pre-recovery factors
+        // are exactly what the speculative drafter decodes with
+        if let Some(dir) = &cfg.drafter_dir {
+            std::fs::create_dir_all(dir)?;
+            let (ppath, lpath) = crate::coordinator::speculative::drafter_paths(dir);
+            pruned_params.save(&ppath)?;
+            lora_pruned.save(&lpath)?;
+            log::info(format!(
+                "drafter (pruned base + pre-R(·) factors) exported to {}",
+                dir.display()
+            ));
         }
         Ok(PipelineResult {
             base_params,

@@ -1,0 +1,463 @@
+//! Speculative decoding: draft small, verify large (DESIGN.md §2d).
+//!
+//! LoRAM's training trick — the pruned model is a faithful cheap proxy of
+//! the large one — is exactly the drafter/target pairing speculative
+//! decoding needs at serving time. [`SpecDecoder`] runs two
+//! [`KvDecoder`]s in lockstep over the same batch grid:
+//!
+//! * the **drafter**: the pruned proxy's decode pair
+//!   (`decode_{prefill,step}_<pruned>`) with the *pruned-side* LoRA
+//!   factors (pre-R(·), straight out of the pipeline's SFT stage);
+//! * the **target**: the full model's decode trio, whose third artifact
+//!   (`decode_verify_*`, a (B, K+1) window) scores a whole draft run in
+//!   one batched forward.
+//!
+//! Each round drafts up to K tokens greedily on the drafter, verifies
+//! them in ONE target call, accepts the longest matching prefix plus the
+//! target's own correction token, and rewinds both caches past the first
+//! mismatch ([`CacheSlots::rewind`] — logical only; rejected K/V stay in
+//! the tensors beyond the frontier, masked out by construction). Greedy
+//! acceptance is *provably lossless*: every emitted token is the argmax
+//! of target logits, so the stream is byte-identical to the kv-cache (and
+//! reforward) paths — asserted at the JAX level in `test_model.py` and
+//! end-to-end in `tests/integration.rs`.
+//!
+//! Rows sampling at temperature > 0 ride the same batched verify call as
+//! a 1-token window (no drafts): lossless sampling would need rejection
+//! resampling, so they simply degrade to per-token decode while greedy
+//! rows around them speculate freely.
+
+use super::generate::argmax;
+use super::kvcache::{KvDecoder, VerifyFeed};
+use crate::runtime::Runtime;
+use crate::tensor::TensorStore;
+use crate::tokenizer::PAD;
+use anyhow::{ensure, Context, Result};
+
+/// Cumulative speculative-decoding counters (surfaced per server in
+/// [`crate::serve::ServerStats`] and per bench entry in BENCH_serve.json).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct SpecStats {
+    /// draft/verify rounds run
+    pub rounds: usize,
+    /// (B, 1) drafter forwards (incl. the write-only sync step per round)
+    pub draft_steps: usize,
+    /// (B, K+1) target verify forwards
+    pub verify_steps: usize,
+    /// draft tokens proposed across all rows
+    pub drafted_tokens: usize,
+    /// draft tokens accepted (emitted from an accepted draft position)
+    pub accepted_tokens: usize,
+    /// tokens emitted in total (accepted drafts + correction tokens)
+    pub emitted_tokens: usize,
+}
+
+impl SpecStats {
+    /// Fraction of proposed drafts the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        self.accepted_tokens as f64 / self.drafted_tokens.max(1) as f64
+    }
+
+    /// Mean tokens emitted per verify call (the speed-up lever: one
+    /// target forward amortises over this many tokens).
+    pub fn tokens_per_verify(&self) -> f64 {
+        self.emitted_tokens as f64 / self.verify_steps.max(1) as f64
+    }
+}
+
+/// Expected tokens emitted per round at per-draft acceptance probability
+/// `alpha` and draft length `k`: `(1 - alpha^(k+1)) / (1 - alpha)` — the
+/// §Perf speed-up model (Leviathan et al. 2023, greedy case).
+pub fn expected_emitted(alpha: f64, k: usize) -> f64 {
+    if (alpha - 1.0).abs() < 1e-12 {
+        return (k + 1) as f64;
+    }
+    (1.0 - alpha.powi(k as i32 + 1)) / (1.0 - alpha)
+}
+
+/// The drafter checkpoint convention shared by the pipeline's
+/// `--drafter-dir` export and `loram serve --decode-path speculative`:
+/// one drafter per directory, as (pruned base params, pruned pre-R(·)
+/// LoRA factors).
+pub fn drafter_paths(dir: &std::path::Path) -> (std::path::PathBuf, std::path::PathBuf) {
+    (dir.join("drafter_params.lmck"), dir.join("drafter_lora.lmck"))
+}
+
+/// Stand-in drafter weights when no pipeline-trained checkpoint exists:
+/// the target's own params sliced under a random structured plan for
+/// `drafter_model`'s config, plus fresh (zero-`b`, identity) factors —
+/// close enough to the target for drafts to land, different enough for
+/// rejections. Drafter fidelity only moves the acceptance rate, never
+/// correctness. The single definition behind the serve CLI, `repro tab8`,
+/// `cargo bench serve` and the integration tests.
+pub fn sliced_drafter_standin(
+    rt: &Runtime,
+    full_cfg: &crate::runtime::ModelCfg,
+    params: &TensorStore,
+    drafter_model: &str,
+    seed: u64,
+) -> Result<(TensorStore, TensorStore)> {
+    let pruned_cfg = rt
+        .load(&format!("eval_{drafter_model}"))?
+        .meta
+        .config
+        .clone();
+    let plan = crate::pruning::StructuredPlan::random(full_cfg, &pruned_cfg, seed)?;
+    let dparams = crate::pruning::slice_params(params, full_cfg, &plan)?;
+    let dlora = crate::params::init_lora(&pruned_cfg, seed);
+    Ok((dparams, dlora))
+}
+
+/// One active row's input to a [`SpecDecoder::round`].
+#[derive(Debug, Clone, Copy)]
+pub struct SpecFeed {
+    /// the row's frontier token (last of its sequence)
+    pub token: i32,
+    /// grid position of the frontier (sequence length - 1)
+    pub pos: usize,
+    /// greedy rows draft + verify; sampled rows take a 1-token window
+    pub greedy: bool,
+    /// most tokens the row may emit this round (budget and grid room);
+    /// must be >= 1 for an active row
+    pub max_emit: usize,
+}
+
+/// One row's outcome from a [`SpecDecoder::round`].
+#[derive(Debug, Clone)]
+pub enum SpecRowOut {
+    /// Greedy row: the verified tokens to append, in stream order. The
+    /// first `accepted` of them came from accepted drafts; the rest (at
+    /// most one) is the target's correction token.
+    Greedy { tokens: Vec<i32>, accepted: usize },
+    /// Sampled row: the target's next-token logits — the caller samples
+    /// host-side under the row's own config, as on every other path.
+    Logits(Vec<f32>),
+}
+
+/// Longest accepted prefix: how many leading drafts the target agreed
+/// with. Pure, unit-tested — the whole lossless-ness argument sits here.
+pub(crate) fn accept_prefix(drafts: &[i32], target: &[i32]) -> usize {
+    drafts
+        .iter()
+        .zip(target)
+        .take_while(|(d, t)| d == t)
+        .count()
+}
+
+/// Draft budget for one row this round: never past the verify window K,
+/// never more than `max_emit - 1` (the +1 correction token must fit), and
+/// never past the cache grid (`seq - 1 - pos` slots remain after `pos`).
+pub(crate) fn draft_budget(k: usize, max_emit: usize, seq: usize, pos: usize) -> usize {
+    k.min(max_emit.saturating_sub(1)).min(seq - 1 - pos)
+}
+
+/// The speculative decode subsystem: drafter and target decoders in
+/// lockstep over one shared batch grid.
+pub struct SpecDecoder {
+    target: KvDecoder,
+    drafter: KvDecoder,
+    k: usize,
+    pub stats: SpecStats,
+}
+
+impl SpecDecoder {
+    /// Load the target's decode trio and the drafter's decode pair. The
+    /// target *must* have the `decode_verify_*` artifact registered; the
+    /// two grids must match exactly (rows are shared 1:1).
+    pub fn try_new(
+        rt: &Runtime,
+        target_model: &str,
+        target_stores: &[&TensorStore],
+        drafter_model: &str,
+        drafter_stores: &[&TensorStore],
+    ) -> Result<SpecDecoder> {
+        let target = KvDecoder::try_new(rt, target_model, target_stores)?
+            .with_context(|| {
+                format!("decode artifact pair for '{target_model}' not registered")
+            })?;
+        let k = target.verify_k().with_context(|| {
+            format!(
+                "speculative decoding needs 'decode_verify_{target_model}' \
+                 registered alongside the decode pair"
+            )
+        })?;
+        let drafter = KvDecoder::try_new(rt, drafter_model, drafter_stores)?
+            .with_context(|| {
+                format!("drafter decode pair for '{drafter_model}' not registered")
+            })?;
+        ensure!(
+            drafter.batch_size() == target.batch_size()
+                && drafter.seq_len() == target.seq_len(),
+            "drafter grid ({}, {}) != target grid ({}, {})",
+            drafter.batch_size(),
+            drafter.seq_len(),
+            target.batch_size(),
+            target.seq_len()
+        );
+        ensure!(
+            drafter.vocab_size() == target.vocab_size(),
+            "drafter vocab {} != target vocab {} — drafts would not be \
+             token-compatible",
+            drafter.vocab_size(),
+            target.vocab_size()
+        );
+        Ok(SpecDecoder { target, drafter, k, stats: SpecStats::default() })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.target.batch_size()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.target.seq_len()
+    }
+
+    /// Verify-window draft length K.
+    pub fn draft_k(&self) -> usize {
+        self.k
+    }
+
+    /// Adapter slots the *target* trio stacks, if any (the drafter always
+    /// decodes its single baked-in pruned factors).
+    pub fn adapter_capacity(&self) -> Option<usize> {
+        self.target.adapter_capacity()
+    }
+
+    /// Stage one adapter slot into the target trio's sessions.
+    pub fn put_adapter(&mut self, ix: usize, weights: &TensorStore) -> Result<()> {
+        self.target.put_adapter(ix, weights)
+    }
+
+    /// Admit a row into the target cache — and, for greedy rows, into the
+    /// drafter too (sampled rows never draft, so their drafter slot stays
+    /// free). On drafter failure the target admission is rolled back.
+    pub fn admit(
+        &mut self,
+        rt: &Runtime,
+        row: usize,
+        seq: &[i32],
+        adapter_ix: Option<i32>,
+        greedy: bool,
+    ) -> Result<()> {
+        self.target.admit(rt, row, seq, adapter_ix)?;
+        if greedy {
+            if let Err(e) = self.drafter.admit(rt, row, seq, None) {
+                self.target.evict(row).expect("target row admitted above");
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Free a row in both decoders.
+    pub fn evict(&mut self, row: usize) -> Result<()> {
+        self.target.evict(row)?;
+        if self.drafter.slots.len(row).is_some() {
+            self.drafter.evict(row)?;
+        }
+        Ok(())
+    }
+
+    /// One draft → verify → accept → rewind round over the whole grid.
+    ///
+    /// Greedy rows draft up to K tokens on the drafter (one extra
+    /// write-only step syncs the last draft's K/V so the drafter cache
+    /// always covers the accepted prefix), verify them in one target
+    /// call, and emit the longest matching prefix + 1 correction token.
+    /// Sampled rows ride the same verify call as a 1-token window and get
+    /// their logits back. `adapter_ix` routes target rows through their
+    /// adapter slots, as on the plain kv path.
+    pub fn round(
+        &mut self,
+        rt: &Runtime,
+        feeds: &[Option<SpecFeed>],
+        adapter_ix: Option<&[i32]>,
+    ) -> Result<Vec<Option<SpecRowOut>>> {
+        let b = self.batch_size();
+        let s = self.seq_len();
+        let k = self.k;
+        ensure!(feeds.len() == b, "spec: {} feeds for batch {b}", feeds.len());
+        // per-row draft budget: 0 for sampled rows and rows whose drafter
+        // slot is free (admitted sampled, or budget already exhausted)
+        let k_eff: Vec<usize> = feeds
+            .iter()
+            .enumerate()
+            .map(|(row, f)| match f {
+                Some(f) if f.greedy && self.drafter.slots.len(row).is_some() => {
+                    ensure!(f.max_emit >= 1, "spec: row {row} with max_emit 0");
+                    ensure!(f.pos < s, "spec: row {row} frontier {} off-grid", f.pos);
+                    Ok(draft_budget(k, f.max_emit, s, f.pos))
+                }
+                _ => Ok(0),
+            })
+            .collect::<Result<_>>()?;
+        let max_k = k_eff.iter().copied().max().unwrap_or(0);
+
+        // ---- draft max_k tokens greedily (+ the write-only sync step) ----
+        let mut drafts: Vec<Vec<i32>> = vec![vec![]; b];
+        if max_k > 0 {
+            for t in 0..=max_k {
+                let dfeeds: Vec<Option<(i32, usize)>> = (0..b)
+                    .map(|row| {
+                        let ke = k_eff[row];
+                        if ke > 0 && t <= ke {
+                            let f = feeds[row].as_ref().expect("ke > 0 implies a feed");
+                            let tok = if t == 0 { f.token } else { drafts[row][t - 1] };
+                            Some((tok, f.pos + t))
+                        } else if ke > 0 {
+                            // done drafting this round: re-write the sync
+                            // position with the same token (idempotent)
+                            let f = feeds[row].as_ref().expect("ke > 0 implies a feed");
+                            Some((drafts[row][ke - 1], f.pos + ke))
+                        } else if let Some(f) =
+                            feeds[row].as_ref().filter(|_| self.drafter.slots.len(row).is_some())
+                        {
+                            // active row not drafting this round (budget or
+                            // grid leaves no draft room): feed its *real*
+                            // frontier, which both writes correct K/V and
+                            // keeps the drafter frontier in lockstep with
+                            // the one token the row emits per such round —
+                            // the drafter cache stays valid without any
+                            // assumption about future rounds
+                            Some((f.token, f.pos))
+                        } else {
+                            // done/free occupied drafter row (feed is
+                            // None): harmless PAD rewrite — a done row
+                            // never decodes again before take + re-admit,
+                            // which rewrites the whole cache row
+                            self.drafter.slots.len(row).map(|len| (PAD, len - 1))
+                        }
+                    })
+                    .collect();
+                let logits = self.drafter.step(rt, &dfeeds, None)?;
+                self.stats.draft_steps += 1;
+                let lf = logits.f32s();
+                let v = lf.len() / b;
+                for row in 0..b {
+                    if t < k_eff[row] {
+                        drafts[row].push(argmax(&lf[row * v..(row + 1) * v]) as i32);
+                        self.stats.drafted_tokens += 1;
+                    }
+                }
+            }
+        }
+
+        // ---- one batched verification of every row's window --------------
+        let vfeeds: Vec<Option<VerifyFeed>> = feeds
+            .iter()
+            .enumerate()
+            .map(|(row, f)| {
+                f.as_ref().map(|f| {
+                    let mut tokens = Vec::with_capacity(k + 1);
+                    tokens.push(f.token);
+                    tokens.extend_from_slice(&drafts[row]);
+                    tokens.resize(k + 1, PAD);
+                    VerifyFeed { tokens, pos: f.pos, live: k_eff[row] + 1 }
+                })
+            })
+            .collect();
+        let logits = self.target.verify(rt, &vfeeds, adapter_ix)?;
+        self.stats.verify_steps += 1;
+        self.stats.rounds += 1;
+        let lf = logits.f32s();
+        let v = lf.len() / (b * (k + 1));
+
+        // ---- accept the longest matching prefix + 1 correction token -----
+        let mut out: Vec<Option<SpecRowOut>> = Vec::with_capacity(b);
+        for (row, f) in feeds.iter().enumerate() {
+            let Some(f) = f else {
+                out.push(None);
+                continue;
+            };
+            let ke = k_eff[row];
+            let window = |j: usize| {
+                let at = (row * (k + 1) + j) * v;
+                &lf[at..at + v]
+            };
+            if !f.greedy {
+                out.push(Some(SpecRowOut::Logits(window(0).to_vec())));
+                continue;
+            }
+            let target_tok: Vec<i32> =
+                (0..=ke).map(|j| argmax(window(j)) as i32).collect();
+            let a = accept_prefix(&drafts[row], &target_tok);
+            let p = (a + 1).min(f.max_emit);
+            // the caches advanced to pos + ke + 1 during draft/verify;
+            // the new frontier (the last emitted token) must stay
+            // *uncached*, so both roll back to pos + p
+            let n = ke + 1 - p;
+            self.target.rewind(row, n)?;
+            if ke > 0 {
+                self.drafter.rewind(row, n)?;
+            }
+            self.stats.accepted_tokens += a.min(p);
+            self.stats.emitted_tokens += p;
+            out.push(Some(SpecRowOut::Greedy {
+                tokens: target_tok[..p].to_vec(),
+                accepted: a.min(p),
+            }));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_prefix_stops_at_first_mismatch() {
+        assert_eq!(accept_prefix(&[], &[7]), 0);
+        assert_eq!(accept_prefix(&[1, 2, 3], &[1, 2, 3, 9]), 3);
+        assert_eq!(accept_prefix(&[1, 2, 3], &[1, 5, 3, 9]), 1);
+        assert_eq!(accept_prefix(&[4, 2], &[1, 2, 3]), 0);
+        // a later re-match after a mismatch must NOT count: positions
+        // after the first divergence condition on a different prefix
+        assert_eq!(accept_prefix(&[1, 9, 3], &[1, 2, 3, 0]), 1);
+    }
+
+    #[test]
+    fn draft_budget_respects_window_budget_and_grid() {
+        // plain: the verify window K bounds the drafts
+        assert_eq!(draft_budget(4, 100, 32, 5), 4);
+        // the +1 correction token must fit max_emit
+        assert_eq!(draft_budget(4, 3, 32, 5), 2);
+        assert_eq!(draft_budget(4, 1, 32, 5), 0);
+        // the window must fit the cache grid after pos
+        assert_eq!(draft_budget(4, 100, 8, 5), 2);
+        assert_eq!(draft_budget(4, 100, 8, 7), 0);
+    }
+
+    #[test]
+    fn expected_emitted_matches_closed_form_extremes() {
+        // alpha = 0: every round emits exactly the 1 correction token
+        assert!((expected_emitted(0.0, 4) - 1.0).abs() < 1e-12);
+        // alpha = 1: every round emits the full window
+        assert!((expected_emitted(1.0, 4) - 5.0).abs() < 1e-12);
+        // monotone in alpha and bounded by K+1
+        let mut last = 0.0;
+        for i in 0..=10 {
+            let e = expected_emitted(i as f64 / 10.0, 4);
+            assert!(e >= last && e <= 5.0 + 1e-12);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn spec_stats_rates() {
+        let st = SpecStats {
+            rounds: 4,
+            draft_steps: 10,
+            verify_steps: 4,
+            drafted_tokens: 12,
+            accepted_tokens: 9,
+            emitted_tokens: 13,
+        };
+        assert!((st.acceptance_rate() - 0.75).abs() < 1e-12);
+        assert!((st.tokens_per_verify() - 3.25).abs() < 1e-12);
+        // empty stats divide by nothing
+        let z = SpecStats::default();
+        assert_eq!(z.acceptance_rate(), 0.0);
+        assert_eq!(z.tokens_per_verify(), 0.0);
+    }
+}

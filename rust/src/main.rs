@@ -81,12 +81,18 @@ usage: loram <subcommand> [--key value] [--flag]
              [--quantized] [--no-align] [--dataset hermes|orca]
              [--pretrain-steps N --align-steps N --sft-steps N] [--save out.lmck]
              [--adapter-dir adapters/ [--adapter-name math]]  export after R(·)
+             [--drafter-dir drafter/]  export the pruned base + pre-R(·)
+                                       factors for speculative serving
   eval       --base tiny [--lora f.lmck] [--dataset alpaca] [--n 32]
   generate   --base tiny --prompt 'Q: 2+3=' [--temperature 0.4] [--max-new 16]
   serve      --base tiny --requests 16      batched generation service demo
              [--adapters dir/]  multi-adapter serving: route each request
                                 through one of the dir's .lmck adapters
-             [--decode-path auto|reforward|kvcache]
+             [--decode-path auto|reforward|kvcache|speculative]
+             [--drafter tiny_p50]      drafter model for the speculative
+                                       path (default <base>_p50)
+             [--drafter-dir drafter/]  pipeline-exported drafter weights
+                                       (else: sliced base + zero factors)
   downstream --base tiny [--lora f.lmck]    math / CSR / code battery
   memory                                    paper Tables 4-6 (exact, analytic)
   repro      --exp fig3|fig4|tab1|fig5|fig6|fig7|fig8|tab456|tab7|tab8|fig16|appD|all
@@ -182,6 +188,7 @@ fn parse_pipeline_cfg(args: &Args) -> Result<PipelineConfig> {
         run_dir: PathBuf::from(args.get_or("run-dir", "runs")),
         adapter_dir: args.get("adapter-dir").map(PathBuf::from),
         adapter_name: args.get("adapter-name").map(String::from),
+        drafter_dir: args.get("drafter-dir").map(PathBuf::from),
     })
 }
 
@@ -263,20 +270,61 @@ fn cmd_generate(rt: &Runtime, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Drafter weights for `--decode-path speculative`: pipeline-exported
+/// checkpoints when `--drafter-dir` points at them, else a stand-in built
+/// by slicing the base params under a random structured plan (drafter
+/// fidelity only moves the acceptance rate, never correctness).
+fn drafter_weights(
+    rt: &Runtime,
+    args: &Args,
+    base: &str,
+    drafter: &str,
+    params: &TensorStore,
+    lora: &TensorStore,
+) -> Result<(TensorStore, TensorStore)> {
+    if let Some(dir) = args.get("drafter-dir") {
+        let (ppath, lpath) =
+            loram::coordinator::speculative::drafter_paths(Path::new(dir));
+        anyhow::ensure!(
+            ppath.exists() && lpath.exists(),
+            "--drafter-dir {dir} holds no drafter checkpoints (run \
+             `loram pipeline --drafter-dir {dir}` first)"
+        );
+        return Ok((TensorStore::load(&ppath)?, TensorStore::load(&lpath)?));
+    }
+    if drafter == base {
+        // self-speculative: the model drafts for itself
+        return Ok((params.clone(), lora.clone()));
+    }
+    let full_cfg = rt.load(&format!("eval_{base}"))?.meta.config.clone();
+    let seed = args.get_usize("seed", 0) as u64;
+    loram::coordinator::speculative::sliced_drafter_standin(
+        rt, &full_cfg, params, drafter, seed,
+    )
+}
+
 fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
     let base = args.get_or("base", "tiny");
     let (params, lora) = load_weights(rt, args, base)?;
     let path = match args.get_or("decode-path", "auto") {
         "reforward" => Some(loram::coordinator::generate::DecodePath::Reforward),
         "kvcache" => Some(loram::coordinator::generate::DecodePath::KvCache),
+        "speculative" => Some(loram::coordinator::generate::DecodePath::Speculative),
         _ => None,
     };
+    let speculative = path == Some(loram::coordinator::generate::DecodePath::Speculative);
     let n = args.get_usize("requests", 8);
     let mut ig = loram::data::instruct::InstructGen::new(Dataset::Hermes, 1, 1);
 
     // --adapters dir/: serve the stacked-adapter artifact, one frozen base
     // + every .lmck adapter in the directory, routed per request
     let mut server = if let Some(dir) = args.get("adapters") {
+        if speculative {
+            bail!(
+                "--decode-path speculative under --adapters is not wired up \
+                 yet: drop one of the two flags"
+            );
+        }
         if args.get("lora").is_some() {
             loram::util::log::warn(
                 "--lora is ignored under --adapters: the stacked artifact \
@@ -320,8 +368,26 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
         }
         server
     } else {
-        let gen = Generator::with_path(rt, &format!("logits_{base}"), &[&params, &lora], path)?;
-        println!("decode path: {}", gen.decode_path().name());
+        let gen = if speculative {
+            let drafter_default = format!("{base}_p50");
+            let drafter = args.get_or("drafter", &drafter_default);
+            let (dparams, dlora) =
+                drafter_weights(rt, args, base, drafter, &params, &lora)?;
+            let gen = Generator::with_speculative(
+                rt,
+                &format!("logits_{base}"),
+                &[&params, &lora],
+                drafter,
+                &[&dparams, &dlora],
+            )?;
+            println!("decode path: speculative (drafter {drafter})");
+            gen
+        } else {
+            let gen =
+                Generator::with_path(rt, &format!("logits_{base}"), &[&params, &lora], path)?;
+            println!("decode path: {}", gen.decode_path().name());
+            gen
+        };
         let mut server = Server::new(gen, 0);
         for i in 0..n {
             let (ex, _) = ig.next();
@@ -358,6 +424,18 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
         st.mean_queue_wait_ms(),
         st.peak_queue_depth
     );
+    if let Some(spec) = &st.spec {
+        println!(
+            "speculative: acceptance {:.2} ({}/{} drafts), {:.2} tokens/verify \
+             ({} draft steps, {} verify steps)",
+            spec.acceptance_rate(),
+            spec.accepted_tokens,
+            spec.drafted_tokens,
+            spec.tokens_per_verify(),
+            spec.draft_steps,
+            spec.verify_steps
+        );
+    }
     for (adapter, lane) in &st.per_adapter {
         let name = adapter
             .and_then(|id| server.engine.adapter_name(id))

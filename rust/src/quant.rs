@@ -208,6 +208,47 @@ mod tests {
         assert!((wd.f32s()[16] + 3.0).abs() < 1e-6);
     }
 
+    /// Property sweep (mirrored by the hypothesis test over
+    /// `kernels/nf4.py`): the QLoRAM quantiser is pinned by laws, not
+    /// only golden values. Randomized shapes/scales, 200 trials.
+    #[test]
+    fn roundtrip_invariants_hold_over_random_matrices() {
+        let mut rng = Rng::new(42);
+        for trial in 0..200 {
+            let m = 1 + rng.below(8);
+            let nb = 1 + rng.below(6);
+            let block = [8, 16, 32][rng.below(3)];
+            let scale = 10f32.powf(rng.f32() * 4.0 - 3.0); // 1e-3 .. 10
+            let n = nb * block;
+            let mut w = rand_mat(m, n, 1000 + trial);
+            for x in w.f32s_mut() {
+                *x *= scale;
+            }
+            if trial % 3 == 0 {
+                // all-zero blocks must round-trip too
+                w.f32s_mut()[..block].fill(0.0);
+            }
+            let q = quantize(&w, block);
+            // codes always index the 16-entry codebook
+            assert!(q.codes.i32s().iter().all(|&c| (0..16).contains(&c)));
+            // absmax is exactly the blockwise max |w|
+            let src = w.f32s();
+            for i in 0..m {
+                for b in 0..nb {
+                    let blk = &src[i * n + b * block..i * n + (b + 1) * block];
+                    let want = blk.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                    assert_eq!(q.absmax.f32s()[i * nb + b], want, "trial {trial}");
+                }
+            }
+            // quantize∘dequantize is idempotent: requantising the
+            // dequantised matrix reproduces codes and absmax exactly
+            let wd = dequantize(&q);
+            let q2 = quantize(&wd, block);
+            assert_eq!(q.codes.i32s(), q2.codes.i32s(), "trial {trial}");
+            assert_eq!(q.absmax.f32s(), q2.absmax.f32s(), "trial {trial}");
+        }
+    }
+
     #[test]
     fn storage_accounting() {
         // 13B params at block 64: 6.5 GB codes + 0.81 GB absmax

@@ -251,6 +251,13 @@ impl ArtifactMeta {
         self.extra.get("seq").and_then(|v| v.as_usize()).unwrap_or(1)
     }
 
+    /// Draft window size of a `decode_verify` artifact: the tokens input is
+    /// a (B, draft_k + 1) window (frontier + K draft candidates). `None`
+    /// for every other artifact kind.
+    pub fn draft_k(&self) -> Option<usize> {
+        self.extra.get("draft_k").and_then(|v| v.as_usize())
+    }
+
     /// Ordered name list from extra (param_names / lora_names / ...).
     pub fn name_list(&self, key: &str) -> Vec<String> {
         self.extra

@@ -23,6 +23,7 @@
 
 use crate::coordinator::adapters::AdapterId;
 use crate::coordinator::generate::{Generator, SampleCfg, StepOut};
+use crate::coordinator::speculative::SpecStats;
 use crate::tokenizer::Tokenizer;
 use crate::util::log;
 use crate::util::rng::Rng;
@@ -43,6 +44,11 @@ pub trait DecodeEngine {
     /// Remove a row, returning its generated ids and freeing the slot.
     fn take(&mut self, row: usize) -> Option<Vec<i32>>;
     fn decode_text(&self, ids: &[i32]) -> String;
+    /// Cumulative speculative-decoding counters, when the engine decodes
+    /// on the speculative path (None everywhere else).
+    fn spec_stats(&self) -> Option<SpecStats> {
+        None
+    }
 }
 
 impl DecodeEngine for Generator<'_> {
@@ -73,6 +79,10 @@ impl DecodeEngine for Generator<'_> {
 
     fn decode_text(&self, ids: &[i32]) -> String {
         self.tokenizer().decode(ids)
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        Generator::spec_stats(self)
     }
 }
 
@@ -135,11 +145,21 @@ pub struct AdapterLane {
     pub served: usize,
     /// tokens sampled for this adapter's rows
     pub tokens: usize,
+    /// of those, tokens that came from an accepted speculative draft
+    /// (0 off the speculative path)
+    pub accepted_tokens: usize,
     pub total_ttft_ms: f64,
     pub total_latency_ms: f64,
 }
 
 impl AdapterLane {
+    /// Fraction of this lane's served tokens that came from accepted
+    /// drafts (the per-lane acceptance signal; the engine-wide rate over
+    /// *proposed* drafts lives in [`ServerStats::spec`]).
+    pub fn draft_accept_share(&self) -> f64 {
+        self.accepted_tokens as f64 / self.tokens.max(1) as f64
+    }
+
     pub fn mean_ttft_ms(&self) -> f64 {
         self.total_ttft_ms / self.served.max(1) as f64
     }
@@ -176,6 +196,13 @@ pub struct ServerStats {
     /// requests dropped at admission (e.g. naming an unregistered
     /// adapter) — a bad request never takes the server down
     pub rejected: usize,
+    /// tokens that came from accepted speculative drafts (0 off the
+    /// speculative path)
+    pub accepted_tokens: usize,
+    /// the engine's speculative counters (draft/verify step counts,
+    /// acceptance rate over proposed drafts), snapshotted each step;
+    /// None when the engine does not decode speculatively
+    pub spec: Option<SpecStats>,
     /// per-adapter breakdown, keyed by the request's adapter
     pub per_adapter: BTreeMap<Option<AdapterId>, AdapterLane>,
 }
@@ -208,6 +235,17 @@ impl ServerStats {
     /// found a free row immediately).
     pub fn mean_queue_wait_ms(&self) -> f64 {
         self.total_queue_wait_ms / self.admitted.max(1) as f64
+    }
+
+    /// Fraction of served tokens that came from accepted drafts.
+    pub fn draft_accept_share(&self) -> f64 {
+        self.accepted_tokens as f64 / self.total_tokens.max(1) as f64
+    }
+
+    /// Acceptance rate over *proposed* drafts, when the engine reported
+    /// speculative counters.
+    pub fn acceptance_rate(&self) -> Option<f64> {
+        self.spec.map(|s| s.acceptance_rate())
     }
 }
 
@@ -331,11 +369,19 @@ impl<E: DecodeEngine> Server<E> {
             if f.ttft_ms.is_none() {
                 f.ttft_ms = Some(f.enqueued.elapsed().as_secs_f64() * 1e3);
             }
-            self.stats.lane(adapter).tokens += 1;
+            if ev.accepted {
+                self.stats.accepted_tokens += 1;
+            }
+            let lane = self.stats.lane(adapter);
+            lane.tokens += 1;
+            if ev.accepted {
+                lane.accepted_tokens += 1;
+            }
             if ev.finished {
                 done_rows.push(ev.row);
             }
         }
+        self.stats.spec = self.engine.spec_stats();
         let mut out = vec![];
         for row in done_rows {
             let f = self.inflight[row].take().expect("finished row tracked");
@@ -382,12 +428,33 @@ impl<E: DecodeEngine> Server<E> {
 /// can therefore assert both that a request was sampled under the config
 /// it asked for *and* that the scheduler routed it through the adapter it
 /// named, without artifacts or the PJRT runtime.
+///
+/// [`SimEngine::with_spec`] turns on *drafter mode*: each decode step
+/// runs one simulated draft/verify round per row (draft length K,
+/// configurable per-draft acceptance probability), emitting multi-token
+/// bursts — so scheduler behaviour under speculative decoding, including
+/// a 0%-acceptance rejection storm, is testable artifact-free too.
 pub struct SimEngine {
     batch: usize,
     rows: Vec<Option<SimRow>>,
     tk: Tokenizer,
+    /// drafter simulation: each decode step runs one draft/verify round
+    /// per active row instead of emitting a single token
+    spec: Option<SimSpec>,
     /// (prompt, cfg, adapter) in admission order, for test assertions
     pub admissions: Vec<(String, SampleCfg, Option<AdapterId>)>,
+}
+
+/// Simulated drafter: every draft is accepted independently with
+/// probability `accept_prob`, so a round emits `accepted-prefix + 1`
+/// tokens — the scheduler sees exactly the multi-token event bursts (and,
+/// at 0%, the rejection storm) a real [`SpecDecoder`] produces, without
+/// artifacts.
+struct SimSpec {
+    k: usize,
+    accept_prob: f64,
+    rng: Rng,
+    stats: SpecStats,
 }
 
 struct SimRow {
@@ -403,8 +470,22 @@ impl SimEngine {
             batch,
             rows: (0..batch).map(|_| None).collect(),
             tk: Tokenizer::new(),
+            spec: None,
             admissions: vec![],
         }
+    }
+
+    /// A [`SimEngine`] in drafter mode: draft length `k`, per-draft
+    /// acceptance probability `accept_prob` in [0, 1].
+    pub fn with_spec(batch: usize, k: usize, accept_prob: f64, seed: u64) -> SimEngine {
+        let mut e = SimEngine::new(batch);
+        e.spec = Some(SimSpec {
+            k: k.max(1),
+            accept_prob: accept_prob.clamp(0.0, 1.0),
+            rng: Rng::new(seed),
+            stats: SpecStats::default(),
+        });
+        e
     }
 
     /// The token every step of an adapter-less request emits: its top-p as
@@ -462,12 +543,42 @@ impl DecodeEngine for SimEngine {
                 continue; // finished, awaiting take
             }
             let token = Self::adapter_marker(r.adapter, &r.cfg);
-            r.emitted.push(token);
-            events.push(StepOut {
-                row: i,
-                token,
-                finished: r.emitted.len() >= r.budget,
-            });
+            match self.spec.as_mut() {
+                None => {
+                    r.emitted.push(token);
+                    events.push(StepOut {
+                        row: i,
+                        token,
+                        finished: r.emitted.len() >= r.budget,
+                        accepted: false,
+                    });
+                }
+                Some(sp) => {
+                    // one draft/verify round: k_eff drafts, accept the
+                    // prefix that survives the coin flips, +1 correction
+                    // the +1 correction token must fit the row's budget
+                    let k_eff = sp.k.min(r.budget - r.emitted.len() - 1);
+                    let mut accepted = 0;
+                    while accepted < k_eff && sp.rng.f64() < sp.accept_prob {
+                        accepted += 1;
+                    }
+                    sp.stats.rounds += 1;
+                    sp.stats.draft_steps += if k_eff > 0 { k_eff + 1 } else { 0 };
+                    sp.stats.verify_steps += 1;
+                    sp.stats.drafted_tokens += k_eff;
+                    sp.stats.accepted_tokens += accepted;
+                    sp.stats.emitted_tokens += accepted + 1;
+                    for j in 0..accepted + 1 {
+                        r.emitted.push(token);
+                        events.push(StepOut {
+                            row: i,
+                            token,
+                            finished: r.emitted.len() >= r.budget,
+                            accepted: j < accepted,
+                        });
+                    }
+                }
+            }
         }
         Ok(events)
     }
@@ -478,6 +589,10 @@ impl DecodeEngine for SimEngine {
 
     fn decode_text(&self, ids: &[i32]) -> String {
         self.tk.decode(ids)
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        self.spec.as_ref().map(|s| s.stats)
     }
 }
 
@@ -721,6 +836,86 @@ mod tests {
         assert!(err.contains("no requests in flight"), "{err}");
         assert_eq!(srv.stats.rejected, 1);
         assert_eq!(srv.stats.served, 0);
+    }
+
+    /// The rejection-storm acceptance scenario: a drafter whose every
+    /// draft is rejected degenerates to per-token decode. The scheduler
+    /// must survive it — every request served, every row reclaimed, no
+    /// token double-counted — with an acceptance rate of exactly 0.
+    #[test]
+    fn zero_acceptance_storm_leaks_no_rows() {
+        let mut srv = Server::new(SimEngine::with_spec(2, 4, 0.0, 7), 0);
+        for i in 0..6 {
+            srv.enqueue(format!("req{i}"), cfg(0.9, 3 + i % 3));
+        }
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 6);
+        assert_eq!(srv.stats.served, 6);
+        assert_eq!(srv.engine.free_rows(), 2, "rows leaked after the storm");
+        assert_eq!(srv.in_flight(), 0);
+        // 0% acceptance: every round emitted exactly the correction token
+        let spec = srv.stats.spec.expect("spec engine reports counters");
+        assert_eq!(spec.accepted_tokens, 0);
+        assert_eq!(spec.emitted_tokens, srv.stats.total_tokens);
+        assert_eq!(spec.verify_steps, srv.stats.total_tokens);
+        assert_eq!(srv.stats.acceptance_rate(), Some(0.0));
+        assert_eq!(srv.stats.accepted_tokens, 0);
+        assert_eq!(srv.stats.draft_accept_share(), 0.0);
+        // drafts were genuinely proposed (and all rejected)
+        assert!(spec.drafted_tokens > 0);
+    }
+
+    /// Full acceptance: whole windows land per step; the scheduler must
+    /// credit multiple tokens per row per tick and finish requests early.
+    #[test]
+    fn full_acceptance_emits_whole_windows_per_step() {
+        let k = 3;
+        let mut srv = Server::new(SimEngine::with_spec(2, k, 1.0, 7), 0);
+        let a = srv.enqueue("a", cfg(0.9, 8)); // 8 tokens = 2 rounds of k+1
+        let b = srv.enqueue("b", cfg(0.5, 8));
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 2);
+        let text = |id| rs.iter().find(|r| r.id == id).unwrap().text.clone();
+        assert_eq!(text(a), "Z".repeat(8), "burst tokens kept their row cfg");
+        assert_eq!(text(b), "2".repeat(8));
+        assert_eq!(srv.stats.decode_steps, 2, "k+1 tokens per row per step");
+        assert_eq!(srv.stats.total_tokens, 16);
+        let spec = srv.stats.spec.unwrap();
+        assert_eq!(spec.accepted_tokens, spec.drafted_tokens);
+        assert!((srv.stats.acceptance_rate().unwrap() - 1.0).abs() < 1e-12);
+        // per-lane accepted tokens: k of every k+1 emitted
+        let lane = &srv.stats.per_adapter[&None];
+        assert_eq!(lane.tokens, 16);
+        assert_eq!(lane.accepted_tokens, 12);
+        assert!((lane.draft_accept_share() - 0.75).abs() < 1e-12);
+    }
+
+    /// Mid-acceptance drafter mixed with continuous batching: stats stay
+    /// consistent (accepted <= drafted, emitted == served tokens) and
+    /// rows keep recycling mid-decode.
+    #[test]
+    fn partial_acceptance_keeps_stats_consistent_under_churn() {
+        let mut srv = Server::new(SimEngine::with_spec(2, 4, 0.6, 11), 3);
+        for i in 0..8 {
+            srv.enqueue(format!("req{i}"), cfg(0.9, 2 + i % 5));
+        }
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 8);
+        let spec = srv.stats.spec.unwrap();
+        assert!(spec.accepted_tokens <= spec.drafted_tokens);
+        assert_eq!(spec.emitted_tokens, srv.stats.total_tokens);
+        assert_eq!(srv.stats.accepted_tokens, spec.accepted_tokens);
+        let rate = srv.stats.acceptance_rate().unwrap();
+        assert!((0.0..=1.0).contains(&rate));
+        assert!(spec.tokens_per_verify() >= 1.0);
+        // lanes still partition the totals under multi-token events
+        let lane_tokens: usize =
+            srv.stats.per_adapter.values().map(|l| l.tokens).sum();
+        assert_eq!(lane_tokens, srv.stats.total_tokens);
+        let lane_accepted: usize =
+            srv.stats.per_adapter.values().map(|l| l.accepted_tokens).sum();
+        assert_eq!(lane_accepted, srv.stats.accepted_tokens);
+        assert_eq!(srv.engine.free_rows(), 2);
     }
 
     #[test]

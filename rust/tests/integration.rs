@@ -494,6 +494,196 @@ fn kvcache_serves_mixed_configs_through_scheduler() {
     assert!(srv.stats.mean_queue_wait_ms() >= 0.0);
 }
 
+const SPEC_ARTS: &[&str] = &[
+    "logits_tiny",
+    "decode_prefill_tiny",
+    "decode_step_tiny",
+    "decode_verify_tiny",
+    "eval_tiny_p50",
+    "decode_prefill_tiny_p50",
+    "decode_step_tiny_p50",
+];
+
+const SPEC_PRUNED_ARTS: &[&str] = &[
+    "logits_tiny_p50",
+    "decode_prefill_tiny_p50",
+    "decode_step_tiny_p50",
+    "decode_verify_tiny_p50",
+];
+
+/// Drafter weights for speculative tests: the shared stand-in (base
+/// params sliced under a random plan + fresh factors) — close enough to
+/// the target for some drafts to be accepted, different enough for
+/// rejections.
+fn sliced_drafter(
+    rt: &Runtime,
+    full_cfg: &loram::runtime::ModelCfg,
+    params: &TensorStore,
+) -> (TensorStore, TensorStore) {
+    loram::coordinator::speculative::sliced_drafter_standin(
+        rt, full_cfg, params, "tiny_p50", 0,
+    )
+    .unwrap()
+}
+
+/// The headline equivalence matrix (ISSUE 4): greedy decoding emits
+/// byte-identical token streams on ALL THREE paths — full reforward,
+/// kv-cache, and speculative with the pruned proxy drafting.
+#[test]
+fn reforward_kvcache_and_speculative_greedy_streams_match() {
+    let Some(rt) = try_runtime(SPEC_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 36);
+    let lora = init_lora(&cfg, 37);
+    let (dparams, dlora) = sliced_drafter(&rt, &cfg, &params);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8 };
+    let prompts = vec!["Q: 2+3=".to_string(), "The quick brown fox".to_string()];
+    let mut outs = vec![];
+    for path in [DecodePath::Reforward, DecodePath::KvCache, DecodePath::Speculative] {
+        let gen = match path {
+            DecodePath::Speculative => Generator::with_speculative(
+                &rt,
+                "logits_tiny",
+                &[&params, &lora],
+                "tiny_p50",
+                &[&dparams, &dlora],
+            )
+            .unwrap(),
+            other => {
+                Generator::with_path(&rt, "logits_tiny", &[&params, &lora], Some(other)).unwrap()
+            }
+        };
+        assert_eq!(gen.decode_path(), path);
+        let mut rng = Rng::new(0);
+        outs.push((path, gen.generate_batch(&prompts, greedy, &mut rng).unwrap()));
+    }
+    for (path, out) in &outs[1..] {
+        assert_eq!(
+            out, &outs[0].1,
+            "{path:?} greedy stream diverged from the reforward stream"
+        );
+    }
+}
+
+/// The pruned-tiny pair as *target*: the pruned proxy self-drafts, and
+/// all three paths again agree byte-for-byte.
+#[test]
+fn speculative_self_drafting_on_pruned_target_matches_other_paths() {
+    let Some(rt) = try_runtime(SPEC_PRUNED_ARTS) else { return };
+    let cfg = rt.load("logits_tiny_p50").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 38);
+    let lora = init_lora(&cfg, 39);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 7 };
+    let prompts = vec!["Once upon a time".to_string(), "Q: 4+4=".to_string()];
+    let mut outs = vec![];
+    for spec in [false, true] {
+        let gen = if spec {
+            // self-speculative: the same weights draft and verify, so
+            // every draft is accepted — the maximal-acceptance corner
+            Generator::with_speculative(
+                &rt,
+                "logits_tiny_p50",
+                &[&params, &lora],
+                "tiny_p50",
+                &[&params, &lora],
+            )
+            .unwrap()
+        } else {
+            Generator::with_path(&rt, "logits_tiny_p50", &[&params, &lora], Some(DecodePath::KvCache))
+                .unwrap()
+        };
+        let mut rng = Rng::new(0);
+        outs.push(gen.generate_batch(&prompts, greedy, &mut rng).unwrap());
+        if spec {
+            let st = gen.spec_stats().unwrap();
+            assert!(st.drafted_tokens > 0, "self-drafting proposed nothing");
+            assert!(
+                st.accepted_tokens > 0,
+                "self-drafting must accept its own drafts"
+            );
+        }
+    }
+    assert_eq!(outs[0], outs[1], "self-speculative stream diverged");
+}
+
+/// Row recycling on the speculative path: rejected drafts leave garbage
+/// K/V beyond the frontier; a recycled row must decode exactly like a
+/// fresh generator's row (the e2e rewind-safety test).
+#[test]
+fn speculative_row_recycling_after_rejections_leaks_nothing() {
+    let Some(rt) = try_runtime(SPEC_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 40);
+    let lora = init_lora(&cfg, 41);
+    let (dparams, dlora) = sliced_drafter(&rt, &cfg, &params);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6 };
+    let mk = || {
+        Generator::with_speculative(
+            &rt,
+            "logits_tiny",
+            &[&params, &lora],
+            "tiny_p50",
+            &[&dparams, &dlora],
+        )
+        .unwrap()
+    };
+    let gen = mk();
+    let mut rng = Rng::new(1);
+    let _first = gen
+        .generate_batch(&["AAAAAAAA BBBB CCCC DDDD".to_string()], greedy, &mut rng)
+        .unwrap();
+    let reused = gen
+        .generate_batch(&["Q: 2+3=".to_string()], greedy, &mut rng)
+        .unwrap();
+    let fresh = mk()
+        .generate_batch(&["Q: 2+3=".to_string()], greedy, &mut rng)
+        .unwrap();
+    assert_eq!(reused, fresh, "stale speculative cache leaked into the recycled row");
+}
+
+/// The scheduler over the real speculative engine: mixed greedy/sampled
+/// configs share the batch, stats surface acceptance, nothing leaks.
+#[test]
+fn speculative_serves_mixed_configs_through_scheduler() {
+    let Some(rt) = try_runtime(SPEC_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 42);
+    let lora = init_lora(&cfg, 43);
+    let (dparams, dlora) = sliced_drafter(&rt, &cfg, &params);
+    let gen = Generator::with_speculative(
+        &rt,
+        "logits_tiny",
+        &[&params, &lora],
+        "tiny_p50",
+        &[&dparams, &dlora],
+    )
+    .unwrap();
+    let b = gen.batch_size();
+    let mut srv = Server::new(gen, 3);
+    for i in 0..b + 2 {
+        // alternate greedy and sampled rows: sampled rows must degrade to
+        // per-token decode inside the same batched verify call
+        srv.enqueue(
+            format!("Q: {i}+{i}="),
+            SampleCfg {
+                temperature: if i % 2 == 0 { 0.0 } else { 0.7 },
+                top_p: 0.9,
+                max_new: 2 + i % 3,
+            },
+        );
+    }
+    let rs = srv.drain().unwrap();
+    assert_eq!(rs.len(), b + 2);
+    assert_eq!(srv.stats.served, b + 2);
+    let spec = srv.stats.spec.expect("speculative engine reports counters");
+    assert!(spec.verify_steps > 0);
+    // the server's event-level accepted count can only trail the
+    // engine's (an EOS inside a verified window truncates the events)
+    assert!(srv.stats.accepted_tokens <= spec.accepted_tokens);
+    assert!(srv.stats.accepted_tokens <= srv.stats.total_tokens);
+    assert_eq!(srv.in_flight(), 0);
+}
+
 const ADAPTER_ARTS: &[&str] = &[
     "logits_tiny",
     "logits_tiny_a3",

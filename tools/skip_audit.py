@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Test-inventory audit for the skip-clean integration tests.
+
+`rust/tests/integration.rs` tests that need optional artifacts skip with a
+standardized stderr line ("skipping: artifact '<name>' unavailable (...)")
+instead of failing — which is right for artifact-less checkouts but can
+silently hollow CI out: a typo'd artifact name, or a suite that stopped
+emitting something, makes the test *always* skip and nobody notices.
+
+This audit closes the hole: fed the `--nocapture` test output on stdin and
+the artifacts directory as argv[1], it fails when any test skipped over an
+artifact that IS present on disk (both halves: .hlo.txt + .meta.json).
+Runtime-level skips ("skipping: no PJRT runtime") stay legitimate — a
+missing native xla runtime is an environment property, not an inventory
+bug.
+
+Usage (see ci.sh):
+    cargo test --test integration -- --nocapture 2>&1 \
+        | python3 tools/skip_audit.py artifacts
+"""
+
+import os
+import re
+import sys
+
+
+def audit(log: str, art_dir: str):
+    """Return (bad, artifact_skips, runtime_skips): `bad` is the sorted set
+    of artifacts a test skipped over although both halves are on disk."""
+    skipped = re.findall(r"skipping: artifact '([^']+)' unavailable", log)
+    bad = sorted({
+        name for name in skipped
+        if os.path.exists(os.path.join(art_dir, f"{name}.meta.json"))
+        and os.path.exists(os.path.join(art_dir, f"{name}.hlo.txt"))
+    })
+    runtime_skips = len(re.findall(r"skipping: no PJRT runtime", log))
+    return bad, len(skipped), runtime_skips
+
+
+def main():
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts"
+    log = sys.stdin.read()
+    bad, n_skips, n_runtime = audit(log, art_dir)
+    if bad:
+        print("skip_audit: tests skipped although their artifacts are "
+              "present on disk (stale suite or typo'd artifact name?):")
+        for name in bad:
+            print(f"  {name}")
+        sys.exit(1)
+    print(f"skip_audit: OK — {n_skips} artifact skips (none with artifacts "
+          f"present), {n_runtime} runtime skips")
+
+
+if __name__ == "__main__":
+    main()
