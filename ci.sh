@@ -45,7 +45,8 @@ if python3 -c "import jax, pytest" >/dev/null 2>&1; then
     (cd python && run python3 -m pytest "${PYTEST_ARGS[@]}")
     # meta-schema validation: every suite meta (and any emitted artifact
     # metas) must parse under runtime::meta's python mirror — adapter slot
-    # groups included
+    # groups and the decode_prefill_chunk window rule included, so a
+    # misdeclared chunk artifact on disk fails CI here
     META_ARGS=()
     if [ -d artifacts ]; then
         META_ARGS=(--dir ../artifacts)

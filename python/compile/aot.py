@@ -262,6 +262,38 @@ def decode_step_artifact(cfg, b=LOGITS_B, s=LOGITS_S):
                      "cache_names": cnames, **_cache_threading(cnames)})
 
 
+def chunk_ladder(s):
+    """Chunked-prefill bucket ladder for an S-long decode grid: a short
+    bucket for quick prompts, a medium one, and the full grid. The formula
+    — not the manifest — is the discovery contract: the Rust
+    `kvcache::chunk_ladder` mirror probes exactly these bucket names."""
+    return sorted({min(16, s), min(64, s), s})
+
+
+def decode_prefill_chunk_artifact(cfg, chunk, b=LOGITS_B, s=LOGITS_S):
+    """Chunked admission (DESIGN.md §2e): one (1, C) prompt window
+    forwarded at `start_pos`, its K/V scattered into the
+    `row_onehot`-selected cache row at start_pos..start_pos+C; logits come
+    back at window index `last_pos` (only the final chunk's are
+    meaningful). Caches stay donated state, bitwise-identical to the
+    decode trio's."""
+    fn, pnames, lnames, cnames = M.make_decode_prefill_chunk(cfg)
+    ins = [("tokens", _spec((1, chunk), jnp.int32)),
+           ("start_pos", _spec((), jnp.int32)),
+           ("last_pos", _spec((), jnp.int32)),
+           ("row_onehot", _spec((b,)))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_prefill_chunk_{cfg.name}_c{chunk}", fn, ins,
+                    outs, cfg,
+                    {"kind": "decode_prefill_chunk", "batch": b, "seq": s,
+                     "chunk": chunk, "param_names": pnames,
+                     "lora_names": lnames, "cache_names": cnames,
+                     **_cache_threading(cnames)})
+
+
 def decode_verify_artifact(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
     """(B, K+1) speculative verification window: each row feeds its frontier
     token + K draft candidates starting at `pos`; logits come back at every
@@ -282,10 +314,13 @@ def decode_verify_artifact(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
 
 
 def decode_artifacts(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
-    """The decode trio always ships together: prefill + step (the Generator
-    pair) + the speculative verify window."""
-    return [decode_prefill_artifact(cfg, b, s), decode_step_artifact(cfg, b, s),
-            decode_verify_artifact(cfg, b, s, k)]
+    """The decode family always ships together: prefill + step (the
+    Generator pair), the speculative verify window, and the chunked-prefill
+    bucket ladder (one (1, C) window artifact per `chunk_ladder` entry)."""
+    return ([decode_prefill_artifact(cfg, b, s), decode_step_artifact(cfg, b, s),
+             decode_verify_artifact(cfg, b, s, k)]
+            + [decode_prefill_chunk_artifact(cfg, c, b, s)
+               for c in chunk_ladder(s)])
 
 
 # ---------------------------------------------------------------------------
@@ -382,14 +417,42 @@ def decode_verify_adapters_artifact(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S,
                     cfg, extra)
 
 
+def decode_prefill_chunk_adapters_artifact(cfg, n_adapters, chunk,
+                                           b=LOGITS_B, s=LOGITS_S):
+    """Adapter-stacked chunked admission: scalar `adapter_ix` names the
+    slot every window of the admitted row forwards under."""
+    fn, pnames, lnames, cnames = M.make_decode_prefill_chunk_adapters(
+        cfg, n_adapters)
+    ins = [("tokens", _spec((1, chunk), jnp.int32)),
+           ("start_pos", _spec((), jnp.int32)),
+           ("last_pos", _spec((), jnp.int32)),
+           ("row_onehot", _spec((b,))),
+           ("adapter_ix", _spec((), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _stacked_lora_specs(cfg, n_adapters)
+    ins += _cache_specs(cfg, b, s)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    extra = {"kind": "decode_prefill_chunk", "batch": b, "seq": s,
+             "chunk": chunk, "param_names": pnames, "lora_names": lnames,
+             "cache_names": cnames, **_cache_threading(cnames),
+             **_adapter_group(n_adapters, lnames)}
+    extra["state_zero_init"] = list(cnames) + list(lnames)
+    return Artifact(
+        f"decode_prefill_chunk_{cfg.name}_a{n_adapters}_c{chunk}", fn, ins,
+        outs, cfg, extra)
+
+
 def adapter_artifacts(cfg, n_adapters, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
-    """The multi-adapter serving quartet: stacked logits + the stacked
-    decode trio, all sharing one adapter slot group so the scheduler can
-    mix adapters in a single batch on any decode path."""
-    return [logits_adapters_artifact(cfg, n_adapters, b, s),
-            decode_prefill_adapters_artifact(cfg, n_adapters, b, s),
-            decode_step_adapters_artifact(cfg, n_adapters, b, s),
-            decode_verify_adapters_artifact(cfg, n_adapters, b, s, k)]
+    """The multi-adapter serving family: stacked logits + the stacked
+    decode trio + the stacked chunk ladder, all sharing one adapter slot
+    group so the scheduler can mix adapters in a single batch on any
+    decode path."""
+    return ([logits_adapters_artifact(cfg, n_adapters, b, s),
+             decode_prefill_adapters_artifact(cfg, n_adapters, b, s),
+             decode_step_adapters_artifact(cfg, n_adapters, b, s),
+             decode_verify_adapters_artifact(cfg, n_adapters, b, s, k)]
+            + [decode_prefill_chunk_adapters_artifact(cfg, n_adapters, c, b, s)
+               for c in chunk_ladder(s)])
 
 
 def grad_imp_artifact(cfg, b=TRAIN_B, s=TRAIN_S):

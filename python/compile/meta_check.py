@@ -16,6 +16,10 @@ cargo) and without lowering HLO:
   and members do not repeat across groups
 * `extra.kind == "decode_verify"`: `draft_k` >= 1 and the tokens input
   is a (B, draft_k + 1) window (the speculative verify contract)
+* `extra.kind == "decode_prefill_chunk"`: `chunk` >= 1 and <= seq, the
+  tokens input is a (1, chunk) window, `start_pos`/`last_pos` are scalar
+  int32 inputs and `row_onehot` selects the cache row (the chunked
+  admission contract, DESIGN.md §2e)
 
 Usage:
     python -m compile.meta_check              # validate smoke+std suites
@@ -120,7 +124,9 @@ def check_meta(meta: dict) -> list:
     # ---- decode_verify window (meta.rs::draft_k) -------------------------
     if extra.get("kind") == "decode_verify":
         k = extra.get("draft_k")
-        if not isinstance(k, int) or k < 1:
+        # bool is an int subclass in python but not a JSON integer to the
+        # Rust mirror (as_usize() rejects it) — keep the gates in lockstep
+        if not isinstance(k, int) or isinstance(k, bool) or k < 1:
             errs.append(f"decode_verify: bad draft_k {k!r}")
         elif "tokens" not in inputs:
             errs.append("decode_verify: no tokens input")
@@ -129,6 +135,31 @@ def check_meta(meta: dict) -> list:
             if len(shape) != 2 or shape[1] != k + 1:
                 errs.append(f"decode_verify: tokens shape {shape} does not "
                             f"hold the draft_k+1 = {k + 1} window")
+
+    # ---- decode_prefill_chunk window (meta.rs::chunk) --------------------
+    if extra.get("kind") == "decode_prefill_chunk":
+        c = extra.get("chunk")
+        if not isinstance(c, int) or isinstance(c, bool) or c < 1:
+            errs.append(f"decode_prefill_chunk: bad chunk {c!r}")
+        elif "tokens" not in inputs:
+            errs.append("decode_prefill_chunk: no tokens input")
+        else:
+            shape = inputs["tokens"][0]
+            if len(shape) != 2 or shape[0] != 1 or shape[1] != c:
+                errs.append(f"decode_prefill_chunk: tokens shape {shape} is "
+                            f"not the (1, chunk) = (1, {c}) window")
+            seq = extra.get("seq")
+            if isinstance(seq, int) and c > seq:
+                errs.append(f"decode_prefill_chunk: chunk {c} exceeds the "
+                            f"{seq}-long cache grid")
+        for scalar in ("start_pos", "last_pos"):
+            if scalar not in inputs:
+                errs.append(f"decode_prefill_chunk: no {scalar} input")
+            elif inputs[scalar] != ((), "int32"):
+                errs.append(f"decode_prefill_chunk: {scalar} must be a "
+                            "scalar int32")
+        if "row_onehot" not in inputs:
+            errs.append("decode_prefill_chunk: no row_onehot input")
 
     # ---- slot groups (the adapter group; session.rs::resolve_groups) -----
     groups = extra.get("slot_groups", {})

@@ -581,9 +581,12 @@ def make_decode_step(cfg: ModelConfig, with_lora=True, use_pallas=False):
     `tokens` holds each row's frontier token and `pos` its grid index; the
     step writes that token's K/V into the cache at `pos`, attends over
     cache positions <= pos only, and returns next-token logits per row.
-    Rows beyond their cache frontier (free/finished) may be fed dummies —
-    their writes land at `pos` and are fully rewritten by the next
-    prefill. Cache outputs donate back onto their inputs.
+    Rows beyond their cache frontier (free, finished, or mid-chunked-
+    admission) ride along as dummies fed `pos >= S`: the (grid == pos)
+    scatter is empty off-grid, so a dummy writes nothing. (An on-grid
+    dummy pos would corrupt a partially chunk-admitted row — chunked
+    re-admission rewrites only prompt positions, never the whole row.)
+    Cache outputs donate back onto their inputs.
     """
     pnames = param_names(cfg)
     lnames = lora_names(cfg) if with_lora else []
@@ -726,6 +729,103 @@ def decode_verify_forward(cfg: ModelConfig, proj, tokens, pos, caches):
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill (DESIGN.md §2e: admission without the full-grid stall)
+# ---------------------------------------------------------------------------
+
+def make_decode_prefill_chunk(cfg: ModelConfig, with_lora=True,
+                              use_pallas=False):
+    """Cache-filling prefill for one (1, C) *window* of a prompt.
+
+    The chunked generalization of `make_decode_prefill`: instead of one
+    monolithic (1, S) forward padded to the full grid, admission feeds the
+    prompt as windows of C tokens. Window token t sits at grid position
+    `start_pos + t`; its K/V is scattered into the `row_onehot`-selected
+    cache row at start_pos..start_pos+C (off-grid tails write nothing,
+    like the verify window), attention sees that row's cached positions
+    <= the query position (earlier chunks + the causal window), and the
+    logits at window index `last_pos` come back — only the final chunk's
+    are meaningful; intermediate chunks are pure cache fills. Caches stay
+    donated state exactly as in the monolithic prefill.
+    """
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg) if with_lora else []
+    cnames = kv_cache_names(cfg)
+
+    def chunk_fn(tokens, start_pos, last_pos, row_onehot, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        return prefill_chunk_scatter(cfg, proj, tokens, start_pos, last_pos,
+                                     row_onehot, caches)
+    return chunk_fn, pnames, lnames, cnames
+
+
+def prefill_chunk_scatter(cfg: ModelConfig, proj, tokens, start_pos, last_pos,
+                          row_onehot, caches):
+    """Shared chunked-prefill tail: forward one (1, C) prompt window whose
+    token t sits at grid position start_pos + t, scatter its K/V into the
+    `row_onehot`-selected cache row at those positions (every other row —
+    and every untouched slot of the selected row — passes through), and
+    return the logits at window index `last_pos` followed by the new
+    caches in name order."""
+    p = proj.p
+    x = p["embed"][tokens]                        # (1, C, D)
+    _, c = tokens.shape
+    hd = cfg.head_dim
+    s = next(iter(caches.values())).shape[1]
+    grid = jnp.arange(s, dtype=jnp.int32)
+    abspos = start_pos + jnp.arange(c, dtype=jnp.int32)            # (C,)
+    # scatter one-hot: window token t lands at grid slot start_pos+t;
+    # off-grid tails (start_pos + t >= S) produce no write at all
+    write = (abspos[:, None] == grid[None, :]).astype(jnp.float32)  # (C, S)
+    taken = write.sum(axis=0)                     # (S,): rewritten slots
+    valid = grid[None, :] <= abspos[:, None]      # (C, S)
+    sel = row_onehot[:, None, None, None]         # (B, 1, 1, 1)
+    hit = taken[None, :, None, None]              # (1, S, 1, 1)
+    new_caches = []
+    for li in range(cfg.n_layers):
+        h, kv, _ = cfg.layer_shapes(li)
+        xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
+        q = proj(xin, f"l{li}.wq").reshape(1, c, h, hd)
+        k = proj(xin, f"l{li}.wk").reshape(1, c, kv, hd)
+        v = proj(xin, f"l{li}.wv").reshape(1, c, kv, hd)
+        q = rope_at_many(q, abspos[None], cfg.rope_theta)
+        k = rope_at_many(k, abspos[None], cfg.rope_theta)
+        ck = caches[f"cache_k.l{li}"]
+        cv = caches[f"cache_v.l{li}"]
+        win_k = jnp.einsum("cs,cnh->snh", write, k[0])[None]  # (1, S, kv, hd)
+        win_v = jnp.einsum("cs,cnh->snh", write, v[0])[None]
+        nk = ck * (1.0 - sel * hit) + sel * win_k
+        nv = cv * (1.0 - sel * hit) + sel * win_v
+        new_caches.append(nk)
+        new_caches.append(nv)
+        # attention runs over the selected row *after* this chunk's write:
+        # earlier chunks' cached K/V plus the causal window, masked by pos
+        row_k = jnp.einsum("b,bsnh->snh", row_onehot, nk)[None]
+        row_v = jnp.einsum("b,bsnh->snh", row_onehot, nv)[None]
+        kk = repeat_kv(row_k, h)                  # (1, S, h, hd)
+        vv = repeat_kv(row_v, h)
+        att = jnp.einsum("bthd,bshd->bhts", q, kk) / jnp.sqrt(float(hd))
+        att = jnp.where(valid[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", att, vv).reshape(1, c, h * hd)
+        x = x + proj(out, f"l{li}.wo")
+        xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
+        gate = proj(xin, f"l{li}.w_gate")
+        up = proj(xin, f"l{li}.w_up")
+        x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
+    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+    # only the `last_pos` position's logits are ever read (and only on the
+    # final chunk): gather before the LM head so intermediate cache-fill
+    # chunks skip the (C, V) projection — the window's largest matmul
+    row_x = jnp.take(x[0], last_pos, axis=0)[None, None]           # (1, 1, D)
+    row_logits = lm_head_logits(proj, row_x)[:, 0]                 # (1, V)
+    return (row_logits,) + tuple(new_caches)
+
+
+# ---------------------------------------------------------------------------
 # Multi-adapter serving (DESIGN.md §2c: the adapter slot group)
 # ---------------------------------------------------------------------------
 
@@ -798,6 +898,26 @@ def make_decode_verify_adapters(cfg: ModelConfig, n_adapters: int):
                                                   caches)
         return (logits,) + tuple(new_caches[n] for n in cnames)
     return verify_fn, pnames, lnames, cnames
+
+
+def make_decode_prefill_chunk_adapters(cfg: ModelConfig, n_adapters: int):
+    """Adapter-stacked chunked prefill: like `make_decode_prefill_chunk`
+    plus a scalar `adapter_ix` naming the slot every window of the
+    admitted row forwards under."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg)
+    cnames = kv_cache_names(cfg)
+
+    def chunk_fn(tokens, start_pos, last_pos, row_onehot, adapter_ix, *flat):
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        # the forward runs one (1, C) window: broadcast the scalar to (1,)
+        proj = AdapterProjCtx(params, lora, adapter_ix[None], cfg)
+        return prefill_chunk_scatter(cfg, proj, tokens, start_pos, last_pos,
+                                     row_onehot, caches)
+    return chunk_fn, pnames, lnames, cnames
 
 
 def make_grad_importance(cfg: ModelConfig):

@@ -112,7 +112,8 @@ def test_suites_register_decode_artifact_trio():
     for suite in ("smoke", "std"):
         names = [a.name for a in aot.build_suite(suite)]
         for n in names:
-            if n.startswith("decode_prefill_"):
+            if n.startswith("decode_prefill_") and \
+                    not n.startswith("decode_prefill_chunk_"):
                 assert n.replace("decode_prefill_", "decode_step_") in names
                 assert n.replace("decode_prefill_", "decode_verify_") in names
     smoke = [a.name for a in aot.build_suite("smoke")]
@@ -193,6 +194,110 @@ def test_decode_verify_artifact_declares_window_and_donation():
     assert list(outs[0].shape) == [2, 4, cfg.vocab_size]
     for o, n in zip(outs[1:], cn):
         assert list(o.shape) == list(specs[n].shape), n
+
+
+def test_chunk_ladder_formula():
+    """The ladder formula is the Rust discovery contract
+    (kvcache::chunk_ladder) — keep both sides in lockstep."""
+    assert aot.chunk_ladder(8) == [8]
+    assert aot.chunk_ladder(16) == [16]
+    assert aot.chunk_ladder(32) == [16, 32]
+    assert aot.chunk_ladder(64) == [16, 64]
+    assert aot.chunk_ladder(128) == [16, 64, 128]
+
+
+def test_suites_register_chunk_ladder():
+    """Every decode family ships its chunked-prefill bucket ladder, the
+    adapter quartet included."""
+    smoke = [a.name for a in aot.build_suite("smoke")]
+    for n in ["decode_prefill_chunk_tiny_c16", "decode_prefill_chunk_tiny_c32",
+              "decode_prefill_chunk_tiny_p50_c16",
+              "decode_prefill_chunk_tiny_p50_c32",
+              "decode_prefill_chunk_tiny_a3_c16",
+              "decode_prefill_chunk_tiny_a3_c32"]:
+        assert n in smoke, n
+    std = [a.name for a in aot.build_suite("std")]
+    for n in ["decode_prefill_chunk_l13b_c16", "decode_prefill_chunk_l13b_c64",
+              "decode_prefill_chunk_l13b_a4_c16"]:
+        assert n in std, n
+
+
+def test_decode_prefill_chunk_artifact_declares_window_and_donation():
+    """Input order tokens, start_pos, last_pos, row_onehot, params, lora,
+    caches; the tokens input is a (1, chunk) window; cache donation matches
+    the decode step's."""
+    cfg = PRESETS["tiny"]
+    art = aot.decode_prefill_chunk_artifact(cfg, 8, b=2, s=16)
+    names = [n for n, _ in art.in_specs]
+    assert names[:4] == ["tokens", "start_pos", "last_pos", "row_onehot"]
+    assert art.extra["kind"] == "decode_prefill_chunk"
+    assert art.extra["chunk"] == 8
+    specs = dict(art.in_specs)
+    assert list(specs["tokens"].shape) == [1, 8]
+    assert list(specs["start_pos"].shape) == []
+    assert list(specs["last_pos"].shape) == []
+    assert list(specs["row_onehot"].shape) == [2]
+    cn = art.extra["cache_names"]
+    assert art.extra["state_bindings"] == {"new." + n: n for n in cn}
+    assert art.extra["state_zero_init"] == cn
+    step = aot.decode_step_artifact(cfg, b=2, s=16)
+    for n in cn:  # bitwise-identical cache tensors across the family
+        assert list(specs[n].shape) == list(dict(step.in_specs)[n].shape), n
+    outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
+    assert list(outs[0].shape) == [1, cfg.vocab_size]
+    for o, n in zip(outs[1:], cn):
+        assert list(o.shape) == list(specs[n].shape), n
+    # the stacked variant keeps the adapter group + scalar gather
+    a = aot.decode_prefill_chunk_adapters_artifact(cfg, 3, 8, b=4, s=16)
+    anames = [n for n, _ in a.in_specs]
+    assert anames[:5] == ["tokens", "start_pos", "last_pos", "row_onehot",
+                          "adapter_ix"]
+    g = a.extra["slot_groups"]["adapter"]
+    assert g["input"] == "adapter_ix" and g["size"] == 3
+    aouts = jax.eval_shape(a.fn, *[s for _, s in a.in_specs])
+    assert list(aouts[0].shape) == [1, cfg.vocab_size]
+
+
+def test_meta_check_flags_chunk_window_violations():
+    """The ci.sh meta validator accepts a real chunk meta and rejects the
+    violations runtime::meta / KvDecoder would reject."""
+    from compile.meta_check import check_meta
+    import copy
+    art = aot.decode_prefill_chunk_artifact(PRESETS["tiny"], 8, b=2, s=16)
+    meta = art.meta_dict()
+    assert check_meta(meta) == []
+
+    broken = copy.deepcopy(meta)
+    broken["extra"]["chunk"] = 0
+    assert any("bad chunk" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    # bool passes isinstance(int) in python but the Rust mirror's
+    # as_usize() rejects it — the validator must too
+    broken["extra"]["chunk"] = True
+    assert any("bad chunk" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    broken["extra"]["chunk"] = 12  # tokens window no longer matches
+    assert any("(1, 12)" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    broken["extra"]["chunk"] = 32  # window longer than the cache grid
+    broken["inputs"] = [
+        {**e, "shape": [1, 32]} if e["name"] == "tokens" else e
+        for e in broken["inputs"]]
+    assert any("exceeds" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    broken["inputs"] = [e for e in broken["inputs"]
+                        if e["name"] != "start_pos"]
+    assert any("start_pos" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    for e in broken["inputs"]:
+        if e["name"] == "last_pos":
+            e["dtype"] = "float32"
+    assert any("last_pos" in e for e in check_meta(broken))
 
 
 def test_adapter_artifacts_declare_slot_group():

@@ -389,6 +389,210 @@ def test_decode_prefill_only_touches_selected_row():
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: the (1, C) admission window (DESIGN.md §2e)
+# ---------------------------------------------------------------------------
+
+def _chunk_admit(cfg, chunk_fn, flat, cn, caches, row, prompt, b, ladder,
+                 adapter_ix=None):
+    """Admit one prompt through the bucket ladder — the python mirror of
+    kvcache::chunk_plan: a covering bucket only when its padding beats
+    the smallest bucket, else full windows of the largest bucket that
+    fits the remainder. Returns (caches, final-chunk logits)."""
+    start, logits = 0, None
+    oh = jnp.zeros((b,), jnp.float32).at[row].set(1.0)
+    while start < len(prompt):
+        remaining = len(prompt) - start
+        fit = next((c for c in ladder if c >= remaining), None)
+        if fit is not None and fit - remaining >= ladder[0]:
+            fit = None  # covering pad beats the ladder: split instead
+        bucket = fit if fit is not None else max(
+            (c for c in ladder if c <= remaining), default=ladder[-1])
+        take = min(bucket, remaining)
+        window = list(prompt[start:start + take]) + [0] * (bucket - take)
+        args = [jnp.asarray([window], jnp.int32), jnp.int32(start),
+                jnp.int32(take - 1), oh]
+        if adapter_ix is not None:
+            args.append(jnp.int32(adapter_ix))
+        out = chunk_fn(*args, *flat, *[caches[n] for n in cn])
+        caches = dict(zip(cn, out[1:]))
+        logits = out[0]
+        start += take
+    return caches, logits
+
+
+def _assert_chunked_matches_monolithic(cfg, prompts, s, ladder, steps=4):
+    """The §2e acceptance contract: admission through (1, C) windows must
+    leave the same prompt-position K/V, the same last-token logits, and
+    the same greedy continuation stream as the monolithic (1, S) prefill."""
+    b = len(prompts)
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    mono = _prefill_caches(cfg, flat, cn, prompts, b, s)
+    cfn, *_ = M.make_decode_prefill_chunk(cfg)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    chunked = {n: jnp.zeros(shapes[n], jnp.float32) for n in cn}
+    proj = M.ProjCtx(params, lora=lora, cfg=cfg)
+    for row, p in enumerate(prompts):
+        chunked, logits = _chunk_admit(cfg, cfn, flat, cn, chunked, row, p,
+                                       b, ladder)
+        # final-chunk logits == the full forward at the prompt's last token
+        grid = jnp.asarray([list(p) + [0] * (s - len(p))], jnp.int32)
+        ref = M.forward(cfg, proj, grid)[0, len(p) - 1]
+        np.testing.assert_allclose(logits[0], ref, rtol=2e-3, atol=2e-3)
+        assert int(jnp.argmax(logits[0])) == int(jnp.argmax(ref))
+    # prompt-position K/V identical to the monolithic prefill's (positions
+    # beyond the prompt are garbage on both paths and masked by position)
+    for n in cn:
+        for row, p in enumerate(prompts):
+            np.testing.assert_allclose(
+                np.asarray(chunked[n])[row, :len(p)],
+                np.asarray(mono[n])[row, :len(p)], rtol=2e-3, atol=2e-3)
+    # greedy continuation: both cache sets step to identical streams
+    sfn, *_ = M.make_decode_step(cfg)
+    seqs = {"mono": [list(p) for p in prompts],
+            "chunk": [list(p) for p in prompts]}
+    caches = {"mono": mono, "chunk": chunked}
+    streams = {k: [[] for _ in prompts] for k in seqs}
+    for _ in range(steps):
+        for kind in ("mono", "chunk"):
+            sq = seqs[kind]
+            toks = jnp.asarray([[q[-1]] for q in sq], jnp.int32)
+            pos = jnp.asarray([len(q) - 1 for q in sq], jnp.int32)
+            out = sfn(toks, pos, *flat, *[caches[kind][n] for n in cn])
+            caches[kind] = dict(zip(cn, out[1:]))
+            for r, q in enumerate(sq):
+                if len(q) >= s:
+                    continue  # a full-grid prompt has no generation room
+                t = int(jnp.argmax(out[0][r]))
+                streams[kind][r].append(t)
+                q.append(t)
+    assert streams["mono"] == streams["chunk"], \
+        f"chunked admission diverged: {streams}"
+
+
+def test_chunked_prefill_matches_monolithic_across_bucket_shapes():
+    """Prompt < one chunk, an exact bucket multiple, a bucket+remainder
+    split, and an S-length prompt all admit identically to pad-to-S."""
+    s = 24
+    # single-bucket ladder forces genuine multi-chunk admissions
+    _assert_chunked_matches_monolithic(
+        CFG, prompts=[[1, 2, 3], [5, 6, 7, 8, 9, 10, 11, 12],
+                      [9, 8, 7, 6, 5, 4, 3, 2, 1, 9, 8]],
+        s=s, ladder=[8])
+    # ladder with the full grid: short prompts take the small bucket, the
+    # S-length prompt takes the full grid in one window, and a prompt
+    # whose covering bucket would pad >= ladder[0] splits into full
+    # windows instead (the low-padding rule)
+    _assert_chunked_matches_monolithic(
+        CFG, prompts=[[2, 4, 6], list(range(1, 11)), list(range(1, s + 1))],
+        s=s, ladder=[8, s], steps=3)
+
+
+def test_chunked_prefill_gqa_and_pruned_plan():
+    """GQA (kv < h) and a pruned layer plan with non-dividing head counts
+    must round-trip through the chunk window too."""
+    gqa = ModelConfig(name="gqa4", d_model=64, n_layers=2, n_heads=4,
+                      n_kv_heads=2, d_ff=96, max_seq=32)
+    _assert_chunked_matches_monolithic(
+        gqa, prompts=[[5, 6, 7], [11, 12, 13, 14, 15, 16, 17, 18, 19]],
+        s=16, ladder=[8])
+    pruned = ModelConfig(name="pp", d_model=64, n_layers=2, n_heads=4,
+                         n_kv_heads=2, d_ff=96, max_seq=32,
+                         layer_plan=[[4, 2, 96], [3, 2, 64]])
+    _assert_chunked_matches_monolithic(
+        pruned, prompts=[[3, 1, 4, 1], [2, 7, 1, 8, 2, 8, 1, 8, 2]],
+        s=16, ladder=[8])
+
+
+def test_chunked_prefill_only_touches_selected_row_and_window():
+    """A chunk write must leave every other row bitwise intact AND every
+    untouched slot of the selected row intact — mid-decode admission and
+    mid-admission decode are both safe."""
+    cfg = CFG
+    b, s = 3, 16
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    cfn, *_ = M.make_decode_prefill_chunk(cfg)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    rng = np.random.default_rng(0)
+    caches = {n: jnp.asarray(rng.normal(size=shapes[n]), jnp.float32)
+              for n in cn}
+    # window of 4 real tokens at start 8 in row 1
+    window = [1, 2, 3, 4]
+    oh = jnp.zeros((b,), jnp.float32).at[1].set(1.0)
+    out = cfn(jnp.asarray([window], jnp.int32), jnp.int32(8), jnp.int32(3),
+              oh, *flat, *[caches[n] for n in cn])
+    new = dict(zip(cn, out[1:]))
+    for n in cn:
+        before, after = np.asarray(caches[n]), np.asarray(new[n])
+        np.testing.assert_array_equal(before[0], after[0])
+        np.testing.assert_array_equal(before[2], after[2])
+        # selected row: slots outside 8..12 pass through untouched
+        np.testing.assert_array_equal(before[1, :8], after[1, :8])
+        np.testing.assert_array_equal(before[1, 12:], after[1, 12:])
+        assert not np.array_equal(before[1, 8:12], after[1, 8:12])
+    assert out[0].shape == (1, cfg.vocab_size)
+    # an off-grid tail (start_pos + t >= S) writes nothing at all
+    out = cfn(jnp.asarray([window], jnp.int32), jnp.int32(s), jnp.int32(0),
+              oh, *flat, *[caches[n] for n in cn])
+    for n, t in zip(cn, out[1:]):
+        np.testing.assert_array_equal(np.asarray(caches[n]), np.asarray(t))
+
+
+def test_chunked_prefill_adapters_matches_monolithic_stacked():
+    """The adapter-stacked chunk window admits each row under its own
+    adapter slot, identically to the stacked monolithic prefill."""
+    cfg = CFG
+    b, s, n = 3, 20, 3
+    params = _params(cfg)
+    _, stacked = _adapter_stack(cfg, n)
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8, 9], [9, 8, 7], [5, 6, 4, 3]]
+    row_ix = [0, 1, 2]
+    pfn, pn, ln, cn = M.make_decode_prefill_adapters(cfg, n)
+    cfn, *_ = M.make_decode_prefill_chunk_adapters(cfg, n)
+    sfn, *_ = M.make_decode_step_adapters(cfg, n)
+    shapes = M.kv_cache_shapes(cfg, b, s)
+    flat = [params[k] for k in pn] + [stacked[k] for k in ln]
+    mono = {nm: jnp.zeros(shapes[nm], jnp.float32) for nm in cn}
+    for row, p in enumerate(prompts):
+        toks = jnp.asarray([list(p) + [0] * (s - len(p))], jnp.int32)
+        oh = jnp.zeros((b,), jnp.float32).at[row].set(1.0)
+        out = pfn(toks, jnp.int32(len(p) - 1), oh, jnp.int32(row_ix[row]),
+                  *flat, *[mono[nm] for nm in cn])
+        mono = dict(zip(cn, out[1:]))
+    chunked = {nm: jnp.zeros(shapes[nm], jnp.float32) for nm in cn}
+    for row, p in enumerate(prompts):
+        chunked, logits = _chunk_admit(cfg, cfn, flat, cn, chunked, row, p,
+                                       b, ladder=[4], adapter_ix=row_ix[row])
+    for nm in cn:
+        for row, p in enumerate(prompts):
+            np.testing.assert_allclose(
+                np.asarray(chunked[nm])[row, :len(p)],
+                np.asarray(mono[nm])[row, :len(p)], rtol=2e-3, atol=2e-3)
+    # greedy continuation under per-row adapters matches across admissions
+    ix = jnp.asarray(row_ix, jnp.int32)
+    seqs = {"mono": [list(p) for p in prompts],
+            "chunk": [list(p) for p in prompts]}
+    caches = {"mono": mono, "chunk": chunked}
+    for _ in range(4):
+        outs = {}
+        for kind in ("mono", "chunk"):
+            sq = seqs[kind]
+            toks = jnp.asarray([[q[-1]] for q in sq], jnp.int32)
+            pos = jnp.asarray([len(q) - 1 for q in sq], jnp.int32)
+            out = sfn(toks, pos, ix, *flat, *[caches[kind][nm] for nm in cn])
+            caches[kind] = dict(zip(cn, out[1:]))
+            outs[kind] = [int(jnp.argmax(out[0][r])) for r in range(b)]
+            for r, q in enumerate(sq):
+                q.append(outs[kind][r])
+        assert outs["mono"] == outs["chunk"]
+
+
+# ---------------------------------------------------------------------------
 # Speculative decoding: the (B, K+1) verify window (DESIGN.md §2d)
 # ---------------------------------------------------------------------------
 

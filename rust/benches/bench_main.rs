@@ -71,6 +71,37 @@ fn serve_workload_t<E: DecodeEngine>(
     Ok(srv.stats)
 }
 
+/// Bursty mixed-length workload through the token-budget scheduler
+/// (ISSUE 5): bursts of prompts — every third near-grid-long, the rest
+/// short — arrive mid-decode, with `budget` prefill window tokens per
+/// tick. Paired monolithic/chunked engines measure the admission stall
+/// and its removal in sim ticks (TTFT/ITL percentiles).
+fn serve_bursty_workload<E: DecodeEngine>(
+    engine: E,
+    n: usize,
+    budget: usize,
+) -> anyhow::Result<ServerStats> {
+    let mut srv = Server::new(engine, 7);
+    srv.set_prefill_budget(Some(budget));
+    let mut sent = 0;
+    while sent < n {
+        for _ in 0..6.min(n - sent) {
+            let prompt = if sent % 3 == 0 {
+                "long prompt ".repeat(5)
+            } else {
+                format!("q{sent}")
+            };
+            srv.enqueue(prompt, SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6 });
+            sent += 1;
+        }
+        for _ in 0..6 {
+            srv.step()?;
+        }
+    }
+    srv.drain()?;
+    Ok(srv.stats)
+}
+
 /// One serving measurement: which decode path it exercised (`reforward` /
 /// `kvcache` / `speculative`) and through which engine (`pjrt`, or `sim`
 /// when the scheduler ran without artifacts).
@@ -114,6 +145,17 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
                 ("peak_queue_depth", Json::num(st.peak_queue_depth as f64)),
                 ("decode_steps", Json::num(st.decode_steps as f64)),
                 ("total_tokens", Json::num(st.total_tokens as f64)),
+                // sim-time latency distributions + the §2e waste counter
+                ("ticks", Json::num(st.ticks as f64)),
+                ("ttft_p50_ticks", Json::num(st.ttft_tick_p(50.0))),
+                ("ttft_p95_ticks", Json::num(st.ttft_tick_p(95.0))),
+                ("itl_p50_ticks", Json::num(st.itl_tick_p(50.0))),
+                ("itl_p95_ticks", Json::num(st.itl_tick_p(95.0))),
+                ("prefill_tokens", Json::num(st.prefill.prefill_tokens as f64)),
+                (
+                    "padded_prefill_tokens",
+                    Json::num(st.prefill.padded_prefill_tokens as f64),
+                ),
             ];
             if let Some((k, p)) = e.spec_cfg {
                 fields.push(("draft_k", Json::num(k as f64)));
@@ -242,6 +284,18 @@ fn main() -> anyhow::Result<()> {
                 stats: st,
             });
         }
+        // the admission-stall A/B (ISSUE 5): the same bursty mixed-length
+        // load and per-tick token capacity through the monolithic
+        // pad-to-S baseline (decode stalls while admissions drain) vs the
+        // chunked bucket ladder (prefill interleaves with decode); the
+        // chunked row must show lower sim TTFT p95 and bounded ITL
+        for (path, ladder, stall) in [
+            ("prefill-monolithic", vec![64], true),
+            ("prefill-chunked", vec![16, 64], false),
+        ] {
+            let st = serve_bursty_workload(SimEngine::with_prefill(4, ladder, stall), 48, 16)?;
+            entries.push(ServeEntry { path, engine: "sim", requests: 48, spec_cfg: None, stats: st });
+        }
         emit_bench_serve(&entries)?;
     }
 
@@ -350,13 +404,36 @@ fn main() -> anyhow::Result<()> {
         }];
         match Generator::with_path(&rt, "logits_tiny", &[&params, &lora], Some(DecodePath::KvCache))
         {
-            Ok(gen) => entries.push(ServeEntry {
-                path: "kvcache",
-                engine: "pjrt",
-                requests: n,
-                spec_cfg: None,
-                stats: serve_workload(gen, n, &[])?,
-            }),
+            Ok(gen) => {
+                // the historical baseline row stays monolithic so the
+                // chunked row below is a like-for-like A/B
+                let had_ladder = gen.chunked_prefill();
+                if had_ladder {
+                    gen.set_chunked_prefill(false)?;
+                }
+                entries.push(ServeEntry {
+                    path: "kvcache",
+                    engine: "pjrt",
+                    requests: n,
+                    spec_cfg: None,
+                    stats: serve_workload(gen, n, &[])?,
+                });
+                if had_ladder {
+                    let gen = Generator::with_path(
+                        &rt,
+                        "logits_tiny",
+                        &[&params, &lora],
+                        Some(DecodePath::KvCache),
+                    )?;
+                    entries.push(ServeEntry {
+                        path: "kvcache-chunked",
+                        engine: "pjrt",
+                        requests: n,
+                        spec_cfg: None,
+                        stats: serve_workload(gen, n, &[])?,
+                    });
+                }
+            }
             Err(e) => {
                 println!("(kvcache serve bench falling back to sim: {e})");
                 entries.push(ServeEntry {

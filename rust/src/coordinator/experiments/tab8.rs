@@ -115,27 +115,34 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     // aggregate rows; per-lane rows report that lane's accepted-token
     // share instead (per-lane proposals are not separable — lanes share
     // every draft round). Blank off the speculative path.
+    // prefill column: monolithic pad-to-S vs the §2e chunked bucket
+    // ladder; padded_prefill_tokens is the admission waste counter and
+    // the tick percentiles are the sim-time TTFT/ITL distributions
     let mut scsv = Csv::create(
         ctx.out_dir.join("tab8_serving.csv"),
-        &["method", "decode_path", "adapter", "requests", "tokens_per_sec",
-          "mean_ttft_ms", "mean_latency_ms", "mean_occupancy",
-          "mean_queue_wait_ms", "peak_queue_depth", "acceptance_rate",
-          "draft_steps", "verify_steps"],
+        &["method", "decode_path", "prefill", "adapter", "requests",
+          "tokens_per_sec", "mean_ttft_ms", "mean_latency_ms",
+          "mean_occupancy", "mean_queue_wait_ms", "peak_queue_depth",
+          "padded_prefill_tokens", "ttft_p95_ticks", "itl_p95_ticks",
+          "acceptance_rate", "draft_steps", "verify_steps"],
     )?;
     let serve_requests = workload_steps * 2;
     let mut serve_rows = |method: &str,
                           decode_path: &str,
+                          prefill: &str,
                           srv: &Server<Generator<'_>>|
      -> Result<()> {
         let st = &srv.stats;
         log::info(format!(
-            "tab8 {method} [{decode_path}]: {:.1} tok/s, ttft {:.1} ms, occupancy {:.2}, \
-             queue wait {:.2} ms (peak depth {})",
+            "tab8 {method} [{decode_path}/{prefill}]: {:.1} tok/s, ttft {:.1} ms, \
+             occupancy {:.2}, queue wait {:.2} ms (peak depth {}, {} padded \
+             prefill tokens)",
             st.tokens_per_sec(),
             st.mean_ttft_ms(),
             st.mean_occupancy(),
             st.mean_queue_wait_ms(),
-            st.peak_queue_depth
+            st.peak_queue_depth,
+            st.prefill.padded_prefill_tokens
         ));
         let (rate, dsteps, vsteps) = match &st.spec {
             Some(sp) => (
@@ -148,6 +155,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         scsv.row(&crate::csv_row![
             method,
             decode_path,
+            prefill,
             "all",
             st.admitted,
             format!("{:.2}", st.tokens_per_sec()),
@@ -156,6 +164,9 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             format!("{:.3}", st.mean_occupancy()),
             format!("{:.2}", st.mean_queue_wait_ms()),
             st.peak_queue_depth,
+            st.prefill.padded_prefill_tokens,
+            format!("{:.0}", st.ttft_tick_p(95.0)),
+            format!("{:.0}", st.itl_tick_p(95.0)),
             rate,
             dsteps,
             vsteps
@@ -169,11 +180,15 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             scsv.row(&crate::csv_row![
                 method,
                 decode_path,
+                prefill,
                 crate::serve::adapter_label(*adapter),
                 lane.requests,
                 format!("{:.2}", lane.tokens_per_sec(st.decode_ms)),
                 format!("{:.2}", lane.mean_ttft_ms()),
                 format!("{:.2}", lane.mean_latency_ms()),
+                "",
+                "",
+                "",
                 "",
                 "",
                 "",
@@ -190,10 +205,25 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         let lora = init_lora(&mcfg, ctx.seed);
         let gen = Generator::new(ctx.rt, &format!("logits_{base}"), &[&params, &lora])?;
         let decode_path = gen.decode_path().name().to_string();
+        let chunked = gen.chunked_prefill();
+        let prefill = if chunked { "chunked" } else { "monolithic" };
         let mut srv = Server::new(gen, ctx.seed);
         enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
         srv.drain()?;
-        serve_rows(&method, &decode_path, &srv)?;
+        serve_rows(&method, &decode_path, prefill, &srv)?;
+        if chunked {
+            // the §2e A/B: the same workload through the monolithic
+            // pad-to-S admission, so the padded-token and latency deltas
+            // are read off adjacent rows
+            let gen =
+                Generator::new(ctx.rt, &format!("logits_{base}"), &[&params, &lora])?;
+            gen.set_chunked_prefill(false)?;
+            let decode_path = gen.decode_path().name().to_string();
+            let mut srv = Server::new(gen, ctx.seed);
+            enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
+            srv.drain()?;
+            serve_rows(&format!("{method} (pad-to-S)"), &decode_path, "monolithic", &srv)?;
+        }
     }
 
     // mixed-adapter serving: one frozen base, every request routed through
@@ -224,10 +254,11 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 .collect::<Result<_>>()?;
             let method = format!("{big} serve x{cap} adapters");
             let decode_path = gen.decode_path().name().to_string();
+            let prefill = if gen.chunked_prefill() { "chunked" } else { "monolithic" };
             let mut srv = Server::new(gen, ctx.seed);
             enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &ids, 0.4);
             srv.drain()?;
-            serve_rows(&method, &decode_path, &srv)?;
+            serve_rows(&method, &decode_path, prefill, &srv)?;
         }
         None => log::info(format!(
             "tab8: no stacked logits_{big}_a<N> artifact; skipping the \
@@ -255,12 +286,18 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             big_pruned,
             &[&dparams, &dlora],
         )?;
+        let prefill = if gen.chunked_prefill() { "chunked" } else { "monolithic" };
         let mut srv = Server::new(gen, ctx.seed);
         // greedy workload: speculative acceptance is a greedy-path
         // concept (sampled rows degrade to 1-token verify windows)
         enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.0);
         srv.drain()?;
-        serve_rows(&format!("{big} serve (drafter {big_pruned})"), "speculative", &srv)?;
+        serve_rows(
+            &format!("{big} serve (drafter {big_pruned})"),
+            "speculative",
+            prefill,
+            &srv,
+        )?;
     } else {
         log::info(format!(
             "tab8: decode_verify_{big} or the {big_pruned} drafter pair \

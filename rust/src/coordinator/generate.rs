@@ -25,7 +25,7 @@
 //! every caller are identical across all of them.
 
 use super::adapters::{AdapterId, AdapterStore};
-use super::kvcache::KvDecoder;
+use super::kvcache::{next_bucket, KvDecoder, PrefillStats};
 use super::speculative::{SpecDecoder, SpecFeed, SpecRowOut, SpecStats};
 use crate::runtime::{Artifact, Runtime, Session, SlotGroup};
 use crate::tensor::{Tensor, TensorStore};
@@ -90,6 +90,26 @@ struct RowState {
     /// adapter slot this row decodes under (stacked-adapter artifacts);
     /// holds one `AdapterStore` reference until `take`
     adapter: Option<AdapterId>,
+    /// admission complete — the row decodes. False only while a chunked
+    /// prefill is being paced across scheduler ticks (`prefill_begin`
+    /// with `defer` + `prefill_tick`); un-admitted rows are skipped by
+    /// decode steps and hold no cache-slot ledger entry yet.
+    admitted: bool,
+    /// prompt tokens already fed through the chunk ladder (== start once
+    /// admitted)
+    fed: usize,
+}
+
+/// Outcome of one [`Generator::prefill_tick`]: prefill window tokens
+/// spent (padding included), rows whose deferred admission completed
+/// this tick, and rows whose admission failed mid-chunk — those are
+/// already released (slot freed, adapter pin dropped), the caller only
+/// accounts the rejection.
+#[derive(Debug, Default, Clone)]
+pub struct PrefillTickOut {
+    pub spent: usize,
+    pub completed: Vec<usize>,
+    pub failed: Vec<usize>,
 }
 
 /// One sampled token, as reported by [`Generator::decode_step`]. On the
@@ -360,6 +380,48 @@ impl<'r> Generator<'r> {
         }
     }
 
+    /// Whether admissions run through the chunked-prefill bucket ladder
+    /// (DESIGN.md §2e). Always false on the reforward path.
+    pub fn chunked_prefill(&self) -> bool {
+        let st = self.state.borrow();
+        if let Some(kv) = st.kv.as_ref() {
+            kv.chunked()
+        } else if let Some(spec) = st.spec.as_ref() {
+            spec.chunked()
+        } else {
+            false
+        }
+    }
+
+    /// Force chunked admission on/off — the §Perf A/B knob and
+    /// `serve --prefill-chunk`. Turning it on needs the kv (or
+    /// speculative) path with a registered bucket ladder.
+    pub fn set_chunked_prefill(&self, on: bool) -> Result<()> {
+        let mut st = self.state.borrow_mut();
+        match (st.kv.as_mut(), st.spec.as_mut()) {
+            (Some(kv), _) => kv.set_chunked(on),
+            (None, Some(spec)) => spec.set_chunked(on),
+            (None, None) => {
+                ensure!(!on, "chunked prefill needs the kv or speculative decode path");
+                Ok(())
+            }
+        }
+    }
+
+    /// Cumulative admission accounting from the cache subsystem (window
+    /// tokens processed, padding waste). Zero on the reforward path,
+    /// whose admission runs no prefill at all.
+    pub fn prefill_stats(&self) -> PrefillStats {
+        let st = self.state.borrow();
+        if let Some(kv) = st.kv.as_ref() {
+            kv.pstats
+        } else if let Some(spec) = st.spec.as_ref() {
+            spec.prefill_stats()
+        } else {
+            PrefillStats::default()
+        }
+    }
+
     pub fn batch_size(&self) -> usize {
         self.art.meta.batch()
     }
@@ -412,6 +474,23 @@ impl<'r> Generator<'r> {
         cfg: SampleCfg,
         adapter: Option<AdapterId>,
     ) -> Result<usize> {
+        self.prefill_begin(prompt, cfg, adapter, false).map(|(row, _)| row)
+    }
+
+    /// Begin admitting a prompt. With `defer` and a chunked kv ladder the
+    /// row is only *reserved* — its prompt is fed later, window by
+    /// window, by [`Generator::prefill_tick`] (the scheduler's
+    /// token-budget pacing) — and this returns `(row, false)`. In every
+    /// other configuration (reforward, monolithic kv, the speculative
+    /// path, or `defer = false`) admission completes here and this
+    /// returns `(row, true)`.
+    pub fn prefill_begin(
+        &self,
+        prompt: &str,
+        cfg: SampleCfg,
+        adapter: Option<AdapterId>,
+        defer: bool,
+    ) -> Result<(usize, bool)> {
         let cfg = SampleCfg { max_new: cfg.max_new.max(1), ..cfg };
         let mut st = self.state.borrow_mut();
         let st = &mut *st;
@@ -440,23 +519,32 @@ impl<'r> Generator<'r> {
         ids.extend(self.tk.encode(prompt));
         ids.push(SEP);
         let (ids, start) = truncate_prompt(ids, self.seq_len(), cfg.max_new);
-        // fill the caches first: on failure the row stays free
-        let kv_adapter = adapter.map(|id| id.ix() as i32);
-        let admitted = if let Some(spec) = st.spec.as_mut() {
-            // greedy rows also admit into the drafter; sampled rows only
-            // ever ride the 1-token verify window
-            spec.admit(self.rt, row, &ids, kv_adapter, cfg.temperature <= 0.0)
-        } else if let Some(kv) = st.kv.as_mut() {
-            kv.admit(self.rt, row, &ids, kv_adapter)
-        } else {
-            Ok(())
-        };
-        if let Err(e) = admitted {
-            if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
-                ad.release(id).expect("acquired above");
+        // deferred chunked admission: only the plain kv path paces its
+        // prefill across ticks; reforward admission is free and the spec
+        // path admits both decoders at once
+        let deferred = defer
+            && st.spec.is_none()
+            && st.kv.as_ref().map_or(false, |kv| kv.chunked());
+        if !deferred {
+            // fill the caches first: on failure the row stays free
+            let kv_adapter = adapter.map(|id| id.ix() as i32);
+            let admitted = if let Some(spec) = st.spec.as_mut() {
+                // greedy rows also admit into the drafter; sampled rows
+                // only ever ride the 1-token verify window
+                spec.admit(self.rt, row, &ids, kv_adapter, cfg.temperature <= 0.0)
+            } else if let Some(kv) = st.kv.as_mut() {
+                kv.admit_auto(self.rt, row, &ids, kv_adapter)
+            } else {
+                Ok(())
+            };
+            if let Err(e) = admitted {
+                if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
+                    ad.release(id).expect("acquired above");
+                }
+                return Err(e);
             }
-            return Err(e);
         }
+        let fed = if deferred { 0 } else { start };
         st.rows[row] = Some(RowState {
             seq: ids,
             start,
@@ -464,8 +552,85 @@ impl<'r> Generator<'r> {
             generated: 0,
             done: false,
             adapter,
+            admitted: !deferred,
+            fed,
         });
-        Ok(row)
+        Ok((row, !deferred))
+    }
+
+    /// Spend up to `budget` prefill window tokens on rows reserved by a
+    /// deferred [`Generator::prefill_begin`], in row order. While any row
+    /// is pending at least one window is always fed (progress guarantee),
+    /// so a budget below the smallest bucket still converges. A window
+    /// failure releases that row (and its adapter pin) and reports it in
+    /// `failed` instead of aborting the rows behind it.
+    pub fn prefill_tick(&self, budget: usize) -> Result<PrefillTickOut> {
+        let mut st = self.state.borrow_mut();
+        let st = &mut *st;
+        let mut out = PrefillTickOut::default();
+        let Some(kv) = st.kv.as_mut() else { return Ok(out) };
+        let ladder = kv.ladder();
+        if ladder.is_empty() {
+            return Ok(out);
+        }
+        let mut budget_left = budget;
+        for row in 0..st.rows.len() {
+            if !matches!(&st.rows[row], Some(r) if !r.admitted) {
+                continue;
+            }
+            loop {
+                let r = st.rows[row].as_mut().expect("pending row checked above");
+                let len = r.seq.len();
+                if r.fed == len {
+                    break;
+                }
+                let Some(bucket) =
+                    next_bucket(&ladder, len - r.fed, budget_left, out.spent == 0)
+                else {
+                    return Ok(out); // tick budget exhausted
+                };
+                let take = bucket.min(len - r.fed);
+                let window: Vec<i32> = r.seq[r.fed..r.fed + take].to_vec();
+                let (fed, adapter) = (r.fed, r.adapter);
+                match kv.prefill_chunk(
+                    self.rt,
+                    row,
+                    &window,
+                    fed,
+                    bucket,
+                    adapter.map(|id| id.ix() as i32),
+                ) {
+                    Ok(()) => {
+                        out.spent += bucket;
+                        budget_left = budget_left.saturating_sub(bucket);
+                        st.rows[row].as_mut().expect("pending row").fed += take;
+                    }
+                    Err(e) => {
+                        // mid-chunk rejection (e.g. a defective window):
+                        // release the row — garbage K/V from the fed
+                        // windows is masked by position, like any
+                        // recycled row's — and the adapter pin with it
+                        crate::util::log::warn(format!(
+                            "chunked admission of row {row} failed mid-window: {e:#}"
+                        ));
+                        st.rows[row] = None;
+                        if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
+                            ad.release(id).expect("pending row held a pin");
+                        }
+                        out.failed.push(row);
+                        break;
+                    }
+                }
+            }
+            if let Some(r) = st.rows[row].as_mut() {
+                if !r.admitted && r.fed == r.seq.len() {
+                    kv.slots.admit(row, r.seq.len())?;
+                    r.admitted = true;
+                    out.completed.push(row);
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// One decode step for the whole grid, then one sampled token per
@@ -476,7 +641,7 @@ impl<'r> Generator<'r> {
     pub fn decode_step(&self, rng: &mut Rng) -> Result<Vec<StepOut>> {
         let mut st = self.state.borrow_mut();
         let st = &mut *st;
-        if !st.rows.iter().flatten().any(|r| !r.done) {
+        if !st.rows.iter().flatten().any(|r| r.admitted && !r.done) {
             return Ok(vec![]);
         }
         let (b, s) = (self.batch_size(), self.seq_len());
@@ -507,7 +672,10 @@ impl<'r> Generator<'r> {
                     .rows
                     .iter()
                     .map(|slot| {
+                        // rows mid-chunked-admission ride as off-grid
+                        // dummies: no slots entry, no cache write
                         slot.as_ref()
+                            .filter(|r| r.admitted)
                             .map(|r| (*r.seq.last().expect("row has a frontier"), r.seq.len() - 1))
                     })
                     .collect();
@@ -534,7 +702,7 @@ impl<'r> Generator<'r> {
         let mut events = vec![];
         for (i, slot) in st.rows.iter_mut().enumerate() {
             let Some(r) = slot.as_mut() else { continue };
-            if r.done {
+            if r.done || !r.admitted {
                 continue;
             }
             let at = if full_grid { i * s + (r.seq.len() - 1) } else { i };
@@ -567,7 +735,7 @@ impl<'r> Generator<'r> {
             .rows
             .iter()
             .map(|slot| {
-                slot.as_ref().filter(|r| !r.done).map(|r| SpecFeed {
+                slot.as_ref().filter(|r| r.admitted && !r.done).map(|r| SpecFeed {
                     token: *r.seq.last().expect("row has a frontier"),
                     pos: r.seq.len() - 1,
                     greedy: r.cfg.temperature <= 0.0,
@@ -621,11 +789,16 @@ impl<'r> Generator<'r> {
         let mut st = self.state.borrow_mut();
         let st = &mut *st;
         let r = st.rows.get_mut(row)?.take()?;
-        if let Some(kv) = st.kv.as_mut() {
-            kv.evict(row).expect("occupied row has a cache slot");
-        }
-        if let Some(spec) = st.spec.as_mut() {
-            spec.evict(row).expect("occupied row has cache slots");
+        // a row taken mid-chunked-admission has no slots ledger entry yet;
+        // its partially filled cache is garbage masked by position, like
+        // any recycled row's
+        if r.admitted {
+            if let Some(kv) = st.kv.as_mut() {
+                kv.evict(row).expect("occupied row has a cache slot");
+            }
+            if let Some(spec) = st.spec.as_mut() {
+                spec.evict(row).expect("occupied row has cache slots");
+            }
         }
         if let (Some(ad), Some(id)) = (st.adapters.as_mut(), r.adapter) {
             ad.release(id).expect("row held an adapter reference");

@@ -22,12 +22,118 @@
 //! The optional verify session (DESIGN.md §2d) is the third artifact of
 //! the trio: a (B, K+1) window that scores a whole draft run in one
 //! batched forward, sharing the pair's donated cache tensors bitwise.
+//!
+//! The optional chunked-prefill ladder (DESIGN.md §2e) generalizes
+//! admission the same way: `decode_prefill_chunk_<model>_c<C>` artifacts
+//! forward one (1, C) prompt *window* at `start_pos` instead of a
+//! monolithic pad-to-S grid, so a short prompt costs its covering bucket
+//! and a long one can be paced across scheduler ticks
+//! (`Generator::prefill_tick`) without ever freezing the decoding batch.
 
 use crate::runtime::{Runtime, Session};
-use crate::tensor::{Tensor, TensorStore};
+use crate::tensor::{Dtype, Tensor, TensorStore};
 use crate::tokenizer::{pad_to, PAD};
 use crate::util::log;
 use anyhow::{bail, ensure, Context, Result};
+
+/// Chunked-prefill bucket ladder for an S-long decode grid — the Rust
+/// mirror of aot.py's `chunk_ladder`. The shared formula IS the discovery
+/// contract: [`KvDecoder::try_new`] probes exactly the bucket names
+/// `decode_prefill_chunk_<model>_c<C>` for C in this ladder, so no
+/// manifest is needed to find the chunk artifacts.
+pub fn chunk_ladder(seq: usize) -> Vec<usize> {
+    let mut v = vec![16.min(seq), 64.min(seq), seq];
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Pick the bucket for the next prefill window of a prompt with
+/// `remaining` unfed tokens, under the tick's unspent token `budget`.
+/// A covering window (smallest bucket >= remaining) finishes the prompt
+/// in one call, but is only taken when its padding beats the worst-case
+/// tail pad of splitting (< ladder[0]) — a 17-token remainder under a
+/// [16, 64] ladder takes a 16 + 16 split (<= 15 padded), never a
+/// 64-window (47 padded). Otherwise the largest budget-funded bucket
+/// that fits *inside* the remainder runs as a zero-padding full window.
+/// `None` when the budget funds nothing — unless `force` (nothing spent
+/// yet this tick) demands progress, so a budget below the smallest
+/// bucket still converges.
+pub(crate) fn next_bucket(
+    ladder: &[usize],
+    remaining: usize,
+    budget: usize,
+    force: bool,
+) -> Option<usize> {
+    debug_assert!(remaining > 0 && !ladder.is_empty());
+    let fit = ladder
+        .iter()
+        .copied()
+        .find(|&c| c >= remaining)
+        .filter(|&c| c - remaining < ladder[0]);
+    if let Some(c) = fit {
+        if c <= budget || force {
+            return Some(c);
+        }
+    }
+    // full mid-prompt window (zero padding); when even the smallest
+    // bucket is unfunded, `force` takes it anyway — it always fits the
+    // remainder here, since a rejected/absent `fit` implies
+    // remaining > ladder[0]
+    match ladder
+        .iter()
+        .copied()
+        .filter(|&c| c <= remaining && c <= budget)
+        .last()
+    {
+        Some(c) => Some(c),
+        None if force => Some(ladder[0]),
+        None => None,
+    }
+}
+
+/// The window plan for admitting a whole `len`-token prompt with an
+/// unbounded budget: `(start, take, bucket)` per chunk. With a ladder
+/// containing the full grid this is a single right-sized window; the
+/// budget-paced multi-tick variant lives in `Generator::prefill_tick`.
+pub(crate) fn chunk_plan(ladder: &[usize], len: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = vec![];
+    let mut start = 0;
+    while start < len {
+        let bucket = next_bucket(ladder, len - start, usize::MAX, true)
+            .expect("unbounded budget always funds a bucket");
+        let take = bucket.min(len - start);
+        out.push((start, take, bucket));
+        start += take;
+    }
+    out
+}
+
+/// Cumulative prefill accounting (surfaced through
+/// [`crate::serve::ServerStats`] and the serving benches): how many
+/// window tokens admissions processed and how many of those were padding
+/// — the wasted FLOPs the bucket ladder exists to shrink (monolithic
+/// admission pays S - len per prompt).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PrefillStats {
+    /// prefill window tokens processed (bucket sizes, padding included)
+    pub prefill_tokens: usize,
+    /// of those, padding beyond the prompt tokens
+    pub padded_prefill_tokens: usize,
+    /// admission windows run (a monolithic admission counts as one)
+    pub chunks: usize,
+}
+
+impl PrefillStats {
+    pub fn merge(self, other: PrefillStats) -> PrefillStats {
+        PrefillStats {
+            prefill_tokens: self.prefill_tokens + other.prefill_tokens,
+            padded_prefill_tokens: self.padded_prefill_tokens
+                + other.padded_prefill_tokens,
+            chunks: self.chunks + other.chunks,
+        }
+    }
+}
 
 /// One occupied row's cache extent: `len` valid positions, of which the
 /// first `admit` came from the admission prefill (the prompt — never
@@ -161,10 +267,18 @@ pub struct KvDecoder {
     /// the speculative verification window (`decode_verify_*`), when that
     /// third artifact of the decode trio is registered
     verify: Option<Session>,
+    /// chunked-prefill bucket sessions, ascending window length C, when
+    /// the `decode_prefill_chunk_<model>_c<C>` ladder is registered
+    chunks: Vec<(usize, Session)>,
+    /// admissions route through the bucket ladder instead of the
+    /// monolithic (1, S) prefill (on by default when a ladder loaded)
+    chunked: bool,
     /// draft window size K of the verify artifact (tokens are (B, K+1))
     draft_k: Option<usize>,
     cache_names: Vec<String>,
     pub slots: CacheSlots,
+    /// cumulative admission accounting (window tokens, padding waste)
+    pub pstats: PrefillStats,
     batch: usize,
     seq: usize,
     vocab: usize,
@@ -296,18 +410,106 @@ impl KvDecoder {
                 }
             }
         };
+        // the chunked-prefill ladder (DESIGN.md §2e): one (1, C) window
+        // artifact per `chunk_ladder(s)` bucket, probed by the shared
+        // formula. A missing bucket is fine (that size just isn't
+        // served); a *defective* one is skipped loudly, like every other
+        // family defect.
+        let mut chunk_arts = vec![];
+        for c in chunk_ladder(s) {
+            let cname = format!("decode_prefill_chunk_{model}_c{c}");
+            let Ok(ca) = rt.load(&cname) else { continue };
+            let check = || -> Result<()> {
+                ensure!(
+                    ca.meta.batch() == b && ca.meta.seq() == s,
+                    "chunk grid ({}, {}) != decode grid ({b}, {s})",
+                    ca.meta.batch(),
+                    ca.meta.seq()
+                );
+                let declared = ca
+                    .meta
+                    .chunk()
+                    .context("chunk meta declares no extra.chunk")?;
+                ensure!(
+                    declared == c,
+                    "extra.chunk {declared} != bucket {c} in the artifact name"
+                );
+                let ts = ca.meta.input_spec("tokens")?;
+                ensure!(
+                    ts.shape == [1, c],
+                    "chunk tokens shape {:?} is not (1, {c})",
+                    ts.shape
+                );
+                // the window-addressing inputs, mirroring the
+                // compile.meta_check chunk rule — a bucket that would
+                // only fail later at Session::set must be skipped now
+                for scalar in ["start_pos", "last_pos"] {
+                    let sp = ca.meta.input_spec(scalar)?;
+                    ensure!(
+                        sp.shape.is_empty() && sp.dtype == Dtype::I32,
+                        "{scalar} is not a scalar int32 input"
+                    );
+                }
+                let oh = ca.meta.input_spec("row_onehot")?;
+                ensure!(
+                    oh.shape == [b] && oh.dtype == Dtype::F32,
+                    "row_onehot shape {:?} is not ({b},)",
+                    oh.shape
+                );
+                for n in &cache_names {
+                    let cs = ca.meta.input_spec(n)?;
+                    let ss = sa.meta.input_spec(n)?;
+                    ensure!(
+                        cs.shape == ss.shape && cs.dtype == ss.dtype,
+                        "cache '{n}' differs between {cname} and {sname}"
+                    );
+                }
+                let cg = ca.meta.adapter_group()?;
+                ensure!(
+                    cg.as_ref().map(|g| (&g.input, g.size))
+                        == sg.as_ref().map(|g| (&g.input, g.size)),
+                    "adapter group differs between {cname} and {sname}"
+                );
+                Ok(())
+            };
+            match check() {
+                Ok(()) => chunk_arts.push((c, ca)),
+                Err(e) => log::warn(format!(
+                    "decode ladder for '{model}': '{cname}' is registered \
+                     but defective ({e:#}) — skipping that bucket"
+                )),
+            }
+        }
         let prefill = Session::new(rt, pa, stores)?;
         let step = Session::new(rt, sa, stores)?;
         let verify = verify_art
             .map(|va| Session::new(rt, va, stores))
             .transpose()?;
+        let mut chunks = vec![];
+        for (c, ca) in chunk_arts {
+            // a bucket that probes clean but fails session construction
+            // (e.g. misdeclared bindings) is skipped like any other
+            // ladder defect — it must never take the healthy pair down
+            match Session::new(rt, ca, stores) {
+                Ok(sess) => chunks.push((c, sess)),
+                Err(e) => log::warn(format!(
+                    "decode ladder for '{model}': \
+                     'decode_prefill_chunk_{model}_c{c}' failed to load \
+                     ({e:#}) — skipping that bucket"
+                )),
+            }
+        }
+        let chunked = !chunks.is_empty();
         Ok(Some(KvDecoder {
             prefill,
             step,
             verify,
+            chunks,
+            chunked,
             draft_k,
             cache_names,
             slots: CacheSlots::new(b, s),
+            pstats: PrefillStats::default(),
             batch: b,
             seq: s,
             vocab,
@@ -320,14 +522,39 @@ impl KvDecoder {
         self.step.group_size("adapter")
     }
 
-    /// Stage one adapter slot's factors into every session of the trio
+    /// Stage one adapter slot's factors into every session of the family
     /// (uploaded at each session's next run; see `Session::put_group`).
     pub fn put_adapter(&mut self, ix: usize, weights: &TensorStore) -> Result<()> {
         self.prefill.put_group("adapter", ix, weights)?;
         if let Some(v) = self.verify.as_mut() {
             v.put_group("adapter", ix, weights)?;
         }
+        for (_, sess) in self.chunks.iter_mut() {
+            sess.put_group("adapter", ix, weights)?;
+        }
         self.step.put_group("adapter", ix, weights)
+    }
+
+    /// Bucket lengths of the registered chunked-prefill ladder, ascending
+    /// (empty = no chunk artifacts, monolithic admission only).
+    pub fn ladder(&self) -> Vec<usize> {
+        self.chunks.iter().map(|(c, _)| *c).collect()
+    }
+
+    /// Whether admissions route through the bucket ladder.
+    pub fn chunked(&self) -> bool {
+        self.chunked
+    }
+
+    /// Force admissions onto/off the bucket ladder (the §Perf A/B knob);
+    /// turning it on without a registered ladder is refused.
+    pub fn set_chunked(&mut self, on: bool) -> Result<()> {
+        ensure!(
+            !on || !self.chunks.is_empty(),
+            "kvcache: no chunked-prefill ladder registered for this pair"
+        );
+        self.chunked = on;
+        Ok(())
     }
 
     /// Draft window size of the registered verify artifact, if the decode
@@ -399,14 +626,131 @@ impl KvDecoder {
         let run = prefill.run(rt);
         prefill.donate_slots(step, cache_names)?;
         run?;
+        self.pstats.prefill_tokens += s;
+        self.pstats.padded_prefill_tokens += s - seq.len();
+        self.pstats.chunks += 1;
         self.slots.admit(row, seq.len())
     }
 
+    /// Run one prompt window through the `bucket` chunk session: `window`
+    /// tokens land at grid positions start..start+window.len(), scattered
+    /// into `row`'s cache while every other row — and every untouched
+    /// slot of the row itself — passes through. Pure cache filling: the
+    /// slots ledger only records the admission once the final window has
+    /// been fed (see [`KvDecoder::admit_chunked`] and the budget-paced
+    /// `Generator::prefill_tick`).
+    pub fn prefill_chunk(
+        &mut self,
+        rt: &Runtime,
+        row: usize,
+        window: &[i32],
+        start: usize,
+        bucket: usize,
+        adapter_ix: Option<i32>,
+    ) -> Result<()> {
+        ensure!(row < self.batch, "kvcache: chunk into out-of-range row {row}");
+        ensure!(
+            self.slots.len(row).is_none(),
+            "kvcache: chunk into already-admitted row {row}"
+        );
+        ensure!(
+            !window.is_empty() && window.len() <= bucket,
+            "kvcache: window of {} tokens does not fit the {bucket}-token bucket",
+            window.len()
+        );
+        ensure!(
+            start + window.len() <= self.seq,
+            "kvcache: window at {start}..{} overruns the (·, {}) cache",
+            start + window.len(),
+            self.seq
+        );
+        let b = self.batch;
+        let mut onehot = vec![0.0f32; b];
+        onehot[row] = 1.0;
+        let Self { step, chunks, cache_names, adapter_in, pstats, .. } = self;
+        let sess = chunks
+            .iter_mut()
+            .find(|(c, _)| *c == bucket)
+            .map(|(_, s)| s)
+            .with_context(|| {
+                format!("kvcache: no {bucket}-token chunk bucket registered")
+            })?;
+        // stage the window inputs before touching the caches, so an
+        // invalid input cannot strand them mid-handoff
+        sess.set(rt, "tokens", &Tensor::from_i32(&[1, bucket], pad_to(window, bucket)))?;
+        sess.set(rt, "start_pos", &Tensor::from_i32(&[], vec![start as i32]))?;
+        sess.set(rt, "last_pos", &Tensor::from_i32(&[], vec![(window.len() - 1) as i32]))?;
+        sess.set(rt, "row_onehot", &Tensor::from_f32(&[b], onehot))?;
+        match (adapter_in.as_deref(), adapter_ix) {
+            (Some(name), ix) => {
+                sess.set(rt, name, &Tensor::from_i32(&[], vec![ix.unwrap_or(0)]))?;
+            }
+            (None, Some(_)) => {
+                bail!("kvcache: adapter admission on a pair with no adapter group")
+            }
+            (None, None) => {}
+        }
+        // caches hop step session -> chunk session -> back, exactly like
+        // the monolithic admission routes them through prefill
+        step.donate_slots(sess, cache_names)?;
+        let run = sess.run(rt);
+        sess.donate_slots(step, cache_names)?;
+        run?;
+        pstats.prefill_tokens += bucket;
+        pstats.padded_prefill_tokens += bucket - window.len();
+        pstats.chunks += 1;
+        Ok(())
+    }
+
+    /// Admit a row through the bucket ladder in one call: the prompt is
+    /// fed as `chunk_plan` windows (see [`next_bucket`] — no more
+    /// pad-to-S, per-prompt padding < the smallest bucket), then the
+    /// slots ledger records the admission. The tick-paced variant that
+    /// spreads the windows across scheduler ticks lives in
+    /// `Generator::prefill_tick`.
+    pub fn admit_chunked(
+        &mut self,
+        rt: &Runtime,
+        row: usize,
+        seq: &[i32],
+        adapter_ix: Option<i32>,
+    ) -> Result<()> {
+        ensure!(
+            !seq.is_empty() && seq.len() <= self.seq,
+            "kvcache: prompt of {} tokens does not fit the (·, {}) cache",
+            seq.len(),
+            self.seq
+        );
+        let ladder = self.ladder();
+        ensure!(!ladder.is_empty(), "kvcache: no chunked-prefill ladder registered");
+        for (start, take, bucket) in chunk_plan(&ladder, seq.len()) {
+            self.prefill_chunk(rt, row, &seq[start..start + take], start, bucket, adapter_ix)?;
+        }
+        self.slots.admit(row, seq.len())
+    }
+
+    /// Admission through the bucket ladder when enabled, the monolithic
+    /// (1, S) prefill otherwise.
+    pub fn admit_auto(
+        &mut self,
+        rt: &Runtime,
+        row: usize,
+        seq: &[i32],
+        adapter_ix: Option<i32>,
+    ) -> Result<()> {
+        if self.chunked {
+            self.admit_chunked(rt, row, seq, adapter_ix)
+        } else {
+            self.admit(rt, row, seq, adapter_ix)
+        }
+    }
+
     /// One incremental step over the whole grid: feeds each occupied row's
-    /// frontier `(token, pos)` (free rows get dummies whose cache writes
-    /// are rewritten at their next admission) and returns next-token
-    /// logits (B, V) on the host. On a stacked-adapter pair `adapter_ix`
-    /// carries each row's slot (free rows gather slot 0, harmlessly).
+    /// frontier `(token, pos)` (free — or mid-chunked-admission — rows
+    /// ride along as off-grid dummies that write nothing) and returns
+    /// next-token logits (B, V) on the host. On a stacked-adapter pair
+    /// `adapter_ix` carries each row's slot (free rows gather slot 0,
+    /// harmlessly).
     pub fn step(
         &mut self,
         rt: &Runtime,
@@ -434,7 +778,14 @@ impl KvDecoder {
                         "kvcache: occupied row {row} fed no frontier token"
                     );
                     toks.push(PAD);
-                    pos.push(0);
+                    // off-grid: the (grid == pos) scatter is empty at
+                    // pos == S, so a dummy row writes nothing. (The old
+                    // pos-0 dummy relied on monolithic prefill rewriting
+                    // the whole row at the next admission; a chunked
+                    // admission only rewrites prompt positions, and a
+                    // row mid-chunked-admission rides decode steps as a
+                    // dummy — a pos-0 write would corrupt it.)
+                    pos.push(self.seq as i32);
                 }
             }
         }
@@ -700,6 +1051,79 @@ mod tests {
         cs.rewind(0, 1).unwrap();
         assert_eq!(cs.len(0), Some(2));
         assert!(cs.rewind(0, 1).is_err(), "old admit length leaked into the row");
+    }
+
+    #[test]
+    fn chunk_ladder_mirrors_the_aot_formula() {
+        // keep in lockstep with aot.chunk_ladder (test_aot.py asserts the
+        // same table on the python side)
+        assert_eq!(chunk_ladder(8), vec![8]);
+        assert_eq!(chunk_ladder(16), vec![16]);
+        assert_eq!(chunk_ladder(32), vec![16, 32]);
+        assert_eq!(chunk_ladder(64), vec![16, 64]);
+        assert_eq!(chunk_ladder(128), vec![16, 64, 128]);
+    }
+
+    #[test]
+    fn next_bucket_prefers_low_padding_then_funded_then_forced() {
+        let ladder = [16, 64, 128];
+        // the covering bucket when its padding beats the smallest bucket
+        assert_eq!(next_bucket(&ladder, 10, 1000, false), Some(16));
+        assert_eq!(next_bucket(&ladder, 16, 1000, false), Some(16));
+        assert_eq!(next_bucket(&ladder, 60, 1000, false), Some(64));
+        assert_eq!(next_bucket(&ladder, 128, 1000, false), Some(128));
+        // a covering bucket that would pad >= ladder[0] loses to a full
+        // window split (17 -> 16 + 16, padded 15, not a 64/47-pad window)
+        assert_eq!(next_bucket(&ladder, 17, 1000, false), Some(16));
+        assert_eq!(next_bucket(&ladder, 70, 1000, false), Some(64));
+        // covering bucket over budget: the largest funded full window
+        assert_eq!(next_bucket(&ladder, 100, 64, false), Some(64));
+        assert_eq!(next_bucket(&ladder, 100, 63, false), Some(16));
+        assert_eq!(next_bucket(&ladder, 20, 16, false), Some(16));
+        // nothing funded: None, unless forced (the per-tick progress
+        // guarantee), which takes the covering (or smallest) bucket
+        assert_eq!(next_bucket(&ladder, 100, 8, false), None);
+        assert_eq!(next_bucket(&ladder, 100, 8, true), Some(16));
+        assert_eq!(next_bucket(&ladder, 10, 0, true), Some(16));
+    }
+
+    #[test]
+    fn chunk_plan_covers_the_prompt_without_pad_to_grid() {
+        // short prompt: one right-sized window
+        assert_eq!(chunk_plan(&[16, 64], 5), vec![(0, 5, 16)]);
+        // exact bucket fit
+        assert_eq!(chunk_plan(&[16, 64], 16), vec![(0, 16, 16)]);
+        // between buckets: full windows + a small tail, never a
+        // pad-heavy covering window
+        assert_eq!(chunk_plan(&[16, 64], 20), vec![(0, 16, 16), (16, 4, 16)]);
+        assert_eq!(chunk_plan(&[16, 64], 60), vec![(0, 60, 64)]);
+        assert_eq!(chunk_plan(&[16, 64], 64), vec![(0, 64, 64)]);
+        // a ladder without a covering bucket splits into windows
+        assert_eq!(chunk_plan(&[8], 20), vec![(0, 8, 8), (8, 8, 8), (16, 4, 8)]);
+        // plans tile the prompt exactly, padding < the smallest bucket
+        for len in 1..40 {
+            let plan = chunk_plan(&[8, 32], len);
+            let mut at = 0;
+            let mut windows = 0;
+            for &(start, take, bucket) in &plan {
+                assert_eq!(start, at);
+                assert!(take <= bucket);
+                at += take;
+                windows += bucket;
+            }
+            assert_eq!(at, len);
+            assert!(windows - len < 8, "len {len} padded {}", windows - len);
+        }
+    }
+
+    #[test]
+    fn prefill_stats_merge_sums_counters() {
+        let a = PrefillStats { prefill_tokens: 64, padded_prefill_tokens: 10, chunks: 2 };
+        let b = PrefillStats { prefill_tokens: 16, padded_prefill_tokens: 3, chunks: 1 };
+        assert_eq!(
+            a.merge(b),
+            PrefillStats { prefill_tokens: 80, padded_prefill_tokens: 13, chunks: 3 }
+        );
     }
 
     #[test]

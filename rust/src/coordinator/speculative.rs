@@ -228,6 +228,30 @@ impl SpecDecoder {
         self.target.put_adapter(ix, weights)
     }
 
+    /// Whether admissions run through the chunked-prefill ladder
+    /// (DESIGN.md §2e; the target's setting is authoritative).
+    pub fn chunked(&self) -> bool {
+        self.target.chunked()
+    }
+
+    /// Force chunked admission on/off for the pairing. The target must
+    /// have a registered ladder; the drafter follows when it has one of
+    /// its own and stays monolithic otherwise (correctness is untouched
+    /// either way — only the admission FLOPs differ).
+    pub fn set_chunked(&mut self, on: bool) -> Result<()> {
+        self.target.set_chunked(on)?;
+        self.drafter
+            .set_chunked(on && !self.drafter.ladder().is_empty())
+            .expect("guarded by the ladder check");
+        Ok(())
+    }
+
+    /// Combined admission accounting of both decoders (greedy rows admit
+    /// into target *and* drafter, so both sides' window tokens count).
+    pub fn prefill_stats(&self) -> crate::coordinator::kvcache::PrefillStats {
+        self.target.pstats.merge(self.drafter.pstats)
+    }
+
     /// Admit a row into the target cache — and, for greedy rows, into the
     /// drafter too (sampled rows never draft, so their drafter slot stays
     /// free). On drafter failure the target admission is rolled back.
@@ -239,9 +263,9 @@ impl SpecDecoder {
         adapter_ix: Option<i32>,
         greedy: bool,
     ) -> Result<()> {
-        self.target.admit(rt, row, seq, adapter_ix)?;
+        self.target.admit_auto(rt, row, seq, adapter_ix)?;
         if greedy {
-            if let Err(e) = self.drafter.admit(rt, row, seq, None) {
+            if let Err(e) = self.drafter.admit_auto(rt, row, seq, None) {
                 self.target.evict(row).expect("target row admitted above");
                 return Err(e);
             }

@@ -93,6 +93,13 @@ usage: loram <subcommand> [--key value] [--flag]
                                        path (default <base>_p50)
              [--drafter-dir drafter/]  pipeline-exported drafter weights
                                        (else: sliced base + zero factors)
+             [--prefill-chunk on|off]  chunked admission through the bucket
+                                       ladder (default: on when the chunk
+                                       artifacts are registered)
+             [--prefill-budget N]      prefill window tokens per scheduler
+                                       tick (Sarathi-style pacing; default
+                                       unbounded — admissions finish the
+                                       tick they begin)
   downstream --base tiny [--lora f.lmck]    math / CSR / code battery
   memory                                    paper Tables 4-6 (exact, analytic)
   repro      --exp fig3|fig4|tab1|fig5|fig6|fig7|fig8|tab456|tab7|tab8|fig16|appD|all
@@ -398,6 +405,21 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
         server
     };
 
+    // §2e knobs: chunked admission + the scheduler's prefill token budget
+    match args.get("prefill-chunk") {
+        Some("on") => server.engine.set_chunked_prefill(true)?,
+        Some("off") => server.engine.set_chunked_prefill(false)?,
+        Some(other) => bail!("bad --prefill-chunk '{other}' (on|off)"),
+        None => {}
+    }
+    if args.get("prefill-budget").is_some() {
+        server.set_prefill_budget(Some(args.get_usize("prefill-budget", 64)));
+    }
+    println!(
+        "prefill: {}",
+        if server.engine.chunked_prefill() { "chunked" } else { "monolithic" }
+    );
+
     let t0 = std::time::Instant::now();
     let responses = server.drain()?;
     let dt = t0.elapsed().as_secs_f64();
@@ -424,6 +446,17 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
         st.mean_queue_wait_ms(),
         st.peak_queue_depth
     );
+    if st.prefill.prefill_tokens > 0 {
+        println!(
+            "prefill: {} window tokens over {} chunks ({} padded); \
+             ttft p95 {:.0} ticks, itl p95 {:.0} ticks",
+            st.prefill.prefill_tokens,
+            st.prefill.chunks,
+            st.prefill.padded_prefill_tokens,
+            st.ttft_tick_p(95.0),
+            st.itl_tick_p(95.0)
+        );
+    }
     if let Some(spec) = &st.spec {
         println!(
             "speculative: acceptance {:.2} ({}/{} drafts), {:.2} tokens/verify \

@@ -258,6 +258,15 @@ impl ArtifactMeta {
         self.extra.get("draft_k").and_then(|v| v.as_usize())
     }
 
+    /// Prompt-window length of a `decode_prefill_chunk` artifact: the
+    /// tokens input is a (1, chunk) window forwarded at `start_pos` and
+    /// scattered into the `row_onehot`-selected cache row (the chunked
+    /// admission contract, DESIGN.md §2e; mirrored by
+    /// `compile.meta_check`). `None` for every other artifact kind.
+    pub fn chunk(&self) -> Option<usize> {
+        self.extra.get("chunk").and_then(|v| v.as_usize())
+    }
+
     /// Ordered name list from extra (param_names / lora_names / ...).
     pub fn name_list(&self, key: &str) -> Vec<String> {
         self.extra
@@ -509,6 +518,20 @@ mod tests {
         let arr = train_meta(r#", "extra": {"slot_groups": []}"#);
         let err = arr.slot_groups().unwrap_err().to_string();
         assert!(err.contains("must be an object"), "{err}");
+    }
+
+    #[test]
+    fn chunk_window_parses_from_extra() {
+        // the chunked-admission contract: extra.chunk names the (1, C)
+        // window length; absent on every other artifact kind
+        let m = train_meta(r#", "extra": {"kind": "decode_prefill_chunk", "chunk": 16}"#);
+        assert_eq!(m.chunk(), Some(16));
+        assert_eq!(m.kind(), "decode_prefill_chunk");
+        assert_eq!(train_meta("").chunk(), None);
+        // a non-integer chunk is absent, which KvDecoder rejects loudly
+        // when probing the ladder (the python mirror rejects it in CI)
+        let bad = train_meta(r#", "extra": {"chunk": "sixteen"}"#);
+        assert_eq!(bad.chunk(), None);
     }
 
     #[test]

@@ -494,6 +494,132 @@ fn kvcache_serves_mixed_configs_through_scheduler() {
     assert!(srv.stats.mean_queue_wait_ms() >= 0.0);
 }
 
+const CHUNK_ARTS: &[&str] = &[
+    "logits_tiny",
+    "decode_prefill_tiny",
+    "decode_step_tiny",
+    "decode_prefill_chunk_tiny_c16",
+    "decode_prefill_chunk_tiny_c32",
+];
+
+/// The §2e acceptance contract, end to end: admission through the chunk
+/// ladder produces greedy streams byte-identical to the monolithic
+/// pad-to-S prefill — across short (sub-bucket), bucket-exact and
+/// near-grid prompts — while processing fewer padded window tokens.
+#[test]
+fn chunked_and_monolithic_admission_greedy_streams_match() {
+    let Some(rt) = try_runtime(CHUNK_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 50);
+    let lora = init_lora(&cfg, 51);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 5 };
+    let prompts = vec![
+        "Q: 2+3=".to_string(),                       // sub-bucket
+        "ABCDEFGHIJKLMN".to_string(),                // bucket-exact (16 ids)
+        "The quick brown fox jumps over".to_string(), // near-grid
+    ];
+    let mut outs = vec![];
+    let mut padded = vec![];
+    for chunked in [false, true] {
+        let gen = Generator::with_path(
+            &rt,
+            "logits_tiny",
+            &[&params, &lora],
+            Some(DecodePath::KvCache),
+        )
+        .unwrap();
+        gen.set_chunked_prefill(chunked).unwrap();
+        assert_eq!(gen.chunked_prefill(), chunked);
+        let mut rng = Rng::new(0);
+        // one prompt per call so each admission exercises its own shape
+        let mut streams = vec![];
+        for p in &prompts {
+            streams.push(
+                gen.generate_batch(&[p.clone()], greedy, &mut rng).unwrap().remove(0),
+            );
+        }
+        outs.push(streams);
+        padded.push(gen.prefill_stats().padded_prefill_tokens);
+    }
+    assert_eq!(outs[0], outs[1], "chunked admission diverged from pad-to-S");
+    assert!(
+        padded[1] < padded[0],
+        "chunked admission padded {} tokens, monolithic {}",
+        padded[1],
+        padded[0]
+    );
+}
+
+/// Recycling a row under chunked admission: only prompt positions are
+/// rewritten (unlike the monolithic full-row scatter), so stale K/V
+/// beyond the new prompt must be provably masked out.
+#[test]
+fn chunked_admission_recycled_row_leaks_nothing() {
+    let Some(rt) = try_runtime(CHUNK_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 52);
+    let lora = init_lora(&cfg, 53);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 5 };
+    let kv = Some(DecodePath::KvCache);
+    let gen = Generator::with_path(&rt, "logits_tiny", &[&params, &lora], kv).unwrap();
+    gen.set_chunked_prefill(true).unwrap();
+    let mut rng = Rng::new(1);
+    // first occupant: a long prompt filling most of the row
+    let _long = gen
+        .generate_batch(&["AAAAAAAA BBBB CCCC DDDD".to_string()], greedy, &mut rng)
+        .unwrap();
+    // recycle with a *short* prompt: positions past it keep stale K/V
+    let reused = gen
+        .generate_batch(&["Q: 2+3=".to_string()], greedy, &mut rng)
+        .unwrap();
+    let fresh_gen = Generator::with_path(&rt, "logits_tiny", &[&params, &lora], kv).unwrap();
+    fresh_gen.set_chunked_prefill(true).unwrap();
+    let fresh = fresh_gen
+        .generate_batch(&["Q: 2+3=".to_string()], greedy, &mut rng)
+        .unwrap();
+    assert_eq!(reused, fresh, "stale cache leaked into the chunk-admitted row");
+}
+
+/// Token-budget pacing through the real scheduler: budgeted chunked
+/// admission serves the same greedy responses as instant admission, and
+/// the accounting stays consistent.
+#[test]
+fn token_budget_scheduler_matches_unpaced_serving_on_kv_path() {
+    let Some(rt) = try_runtime(CHUNK_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 54);
+    let lora = init_lora(&cfg, 55);
+    let mut texts = vec![];
+    for budget in [None, Some(8)] {
+        let gen = Generator::with_path(
+            &rt,
+            "logits_tiny",
+            &[&params, &lora],
+            Some(DecodePath::KvCache),
+        )
+        .unwrap();
+        gen.set_chunked_prefill(true).unwrap();
+        let b = gen.batch_size();
+        let mut srv = Server::new(gen, 3);
+        srv.set_prefill_budget(budget);
+        for i in 0..b + 2 {
+            srv.enqueue(
+                format!("Q: {i}+{i}="),
+                SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 2 + i % 3 },
+            );
+        }
+        let mut rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), b + 2);
+        assert_eq!(srv.stats.served, b + 2);
+        assert_eq!(srv.stats.admitted, b + 2);
+        assert_eq!(srv.in_flight(), 0);
+        assert!(srv.stats.ticks >= srv.stats.decode_steps);
+        rs.sort_by_key(|r| r.id);
+        texts.push(rs.into_iter().map(|r| r.text).collect::<Vec<_>>());
+    }
+    assert_eq!(texts[0], texts[1], "budget pacing changed a served stream");
+}
+
 const SPEC_ARTS: &[&str] = &[
     "logits_tiny",
     "decode_prefill_tiny",
@@ -561,6 +687,56 @@ fn reforward_kvcache_and_speculative_greedy_streams_match() {
         assert_eq!(
             out, &outs[0].1,
             "{path:?} greedy stream diverged from the reforward stream"
+        );
+    }
+}
+
+/// The chunked-admission equivalence matrix (ISSUE 5): with admissions
+/// routed through the bucket ladder, greedy streams stay byte-identical
+/// across ALL THREE decode paths — reforward (no caches, the reference),
+/// kv-cache and speculative (target *and* drafter admit chunked).
+#[test]
+fn chunked_admission_matches_across_reforward_kvcache_and_speculative() {
+    let mut needed: Vec<&str> = SPEC_ARTS.to_vec();
+    needed.extend_from_slice(&[
+        "decode_prefill_chunk_tiny_c16",
+        "decode_prefill_chunk_tiny_c32",
+        "decode_prefill_chunk_tiny_p50_c16",
+        "decode_prefill_chunk_tiny_p50_c32",
+    ]);
+    let Some(rt) = try_runtime(&needed) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 56);
+    let lora = init_lora(&cfg, 57);
+    let (dparams, dlora) = sliced_drafter(&rt, &cfg, &params);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8 };
+    let prompts = vec!["Q: 2+3=".to_string(), "The quick brown fox".to_string()];
+    let mut outs = vec![];
+    for path in [DecodePath::Reforward, DecodePath::KvCache, DecodePath::Speculative] {
+        let gen = match path {
+            DecodePath::Speculative => Generator::with_speculative(
+                &rt,
+                "logits_tiny",
+                &[&params, &lora],
+                "tiny_p50",
+                &[&dparams, &dlora],
+            )
+            .unwrap(),
+            other => {
+                Generator::with_path(&rt, "logits_tiny", &[&params, &lora], Some(other)).unwrap()
+            }
+        };
+        if path != DecodePath::Reforward {
+            gen.set_chunked_prefill(true).unwrap();
+            assert!(gen.chunked_prefill());
+        }
+        let mut rng = Rng::new(0);
+        outs.push((path, gen.generate_batch(&prompts, greedy, &mut rng).unwrap()));
+    }
+    for (path, out) in &outs[1..] {
+        assert_eq!(
+            out, &outs[0].1,
+            "{path:?} with chunked admission diverged from the reforward stream"
         );
     }
 }
