@@ -559,20 +559,97 @@ def make_decode_prefill(cfg: ModelConfig, with_lora=True, use_pallas=False):
     return prefill_fn, pnames, lnames, cnames
 
 
+def cached_window_forward(cfg: ModelConfig, proj, tokens, abspos, caches,
+                          row_onehot=None):
+    """THE cached layer loop: every decode-family forward is one call here.
+
+    `tokens (B_f, T)` int32 and `abspos (B_f, T)` int32 give each token's
+    grid position; `caches` maps name -> (B, S, kv_i, hd). Token t of row b
+    writes its post-RoPE K/V at grid slot `abspos[b, t]` and attends over
+    cache positions <= abspos[b, t] *after* the window's write (causal
+    within the window, earlier cache before it). Off-grid positions
+    (abspos >= S) write nothing — the scatter one-hot is empty — which is
+    the dummy-row/padded-tail convention every caller relies on.
+
+    Two scatter regimes:
+    * `row_onehot=None` — batched (B_f == B): step (T=1) and the verify
+      window (T=K+1); each row writes into its own cache row.
+    * `row_onehot (B,)` — single-row window (B_f == 1): chunked prefill,
+      of which the monolithic prefill is the start_pos=0, C=S special
+      case; the window scatters into the selected cache row only (every
+      other row — and every untouched slot of the selected row — passes
+      through bitwise) and attends over that row's post-write cache.
+
+    Returns `(x (B_f, T, D) post-final-norm, {name: new cache})`; callers
+    pick their own lm_head slice (full window, frontier, or `last_pos`).
+    """
+    p = proj.p
+    x = p["embed"][tokens]                       # (B_f, T, D)
+    b_f, t = tokens.shape
+    hd = cfg.head_dim
+    s = next(iter(caches.values())).shape[1]
+    grid = jnp.arange(s, dtype=jnp.int32)
+    # scatter one-hot: token t lands at grid slot abspos[:, t]; off-grid
+    # tokens produce no write at all
+    write = (abspos[:, :, None] == grid[None, None, :]).astype(jnp.float32)
+    taken = write.sum(axis=1)                    # (B_f, S): rewritten slots
+    valid = grid[None, None, :] <= abspos[:, :, None]  # (B_f, T, S)
+    if row_onehot is not None:
+        sel = row_onehot[:, None, None, None]    # (B, 1, 1, 1)
+        hit = taken[:, :, None, None]            # (1, S, 1, 1)
+    new_caches = {}
+    for li in range(cfg.n_layers):
+        h, kv, _ = cfg.layer_shapes(li)
+        xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
+        q = proj(xin, f"l{li}.wq").reshape(b_f, t, h, hd)
+        k = proj(xin, f"l{li}.wk").reshape(b_f, t, kv, hd)
+        v = proj(xin, f"l{li}.wv").reshape(b_f, t, kv, hd)
+        q = rope_at_many(q, abspos, cfg.rope_theta)
+        k = rope_at_many(k, abspos, cfg.rope_theta)
+        ck = caches[f"cache_k.l{li}"]
+        cv = caches[f"cache_v.l{li}"]
+        if row_onehot is None:
+            keep = (1.0 - taken)[:, :, None, None]       # (B, S, 1, 1)
+            nk = ck * keep + jnp.einsum("bts,btnh->bsnh", write, k)
+            nv = cv * keep + jnp.einsum("bts,btnh->bsnh", write, v)
+            row_k, row_v = nk, nv
+        else:
+            win_k = jnp.einsum("ts,tnh->snh", write[0], k[0])[None]
+            win_v = jnp.einsum("ts,tnh->snh", write[0], v[0])[None]
+            nk = ck * (1.0 - sel * hit) + sel * win_k
+            nv = cv * (1.0 - sel * hit) + sel * win_v
+            # attention runs over the selected row *after* this window's
+            # write: earlier chunks' cached K/V plus the causal window
+            row_k = jnp.einsum("b,bsnh->snh", row_onehot, nk)[None]
+            row_v = jnp.einsum("b,bsnh->snh", row_onehot, nv)[None]
+        new_caches[f"cache_k.l{li}"] = nk
+        new_caches[f"cache_v.l{li}"] = nv
+        kk = repeat_kv(row_k, h)                 # (B_f, S, h, hd)
+        vv = repeat_kv(row_v, h)
+        att = jnp.einsum("bthd,bshd->bhts", q, kk) / jnp.sqrt(float(hd))
+        att = jnp.where(valid[:, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhts,bshd->bthd", att, vv).reshape(b_f, t, h * hd)
+        x = x + proj(out, f"l{li}.wo")
+        xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
+        gate = proj(xin, f"l{li}.w_gate")
+        up = proj(xin, f"l{li}.w_up")
+        x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
+    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+    return x, new_caches
+
+
 def prefill_scatter(cfg: ModelConfig, proj, tokens, last_pos, row_onehot,
                     caches):
     """Shared prefill tail: forward one (1, S) row, scatter its K/V into the
     `row_onehot`-selected cache row (all other rows pass through), return
-    the row's `last_pos` logits followed by the new caches in name order."""
-    logits, ks, vs = forward_kv(cfg, proj, tokens)
-    sel = row_onehot[:, None, None, None]            # (B, 1, 1, 1)
-    new_caches = []
-    for li in range(cfg.n_layers):
-        for cached, computed in ((caches[f"cache_k.l{li}"], ks[li]),
-                                 (caches[f"cache_v.l{li}"], vs[li])):
-            new_caches.append(cached * (1.0 - sel) + sel * computed)
-    row_logits = jnp.take(logits[0], last_pos, axis=0)[None]   # (1, V)
-    return (row_logits,) + tuple(new_caches)
+    the row's `last_pos` logits followed by the new caches in name order.
+
+    The monolithic prefill IS the chunk window at start_pos = 0, C = S —
+    one body, two artifact shapes."""
+    return prefill_chunk_scatter(cfg, proj, tokens,
+                                 jnp.asarray(0, jnp.int32), last_pos,
+                                 row_onehot, caches)
 
 
 def make_decode_step(cfg: ModelConfig, with_lora=True, use_pallas=False):
@@ -606,43 +683,10 @@ def make_decode_step(cfg: ModelConfig, with_lora=True, use_pallas=False):
 def decode_step_forward(cfg: ModelConfig, proj, tokens, pos, caches):
     """Shared (B, 1) incremental forward: writes each row's frontier K/V at
     `pos`, attends over cache positions <= pos, returns ((B, V) logits,
-    {name: new cache})."""
-    p = proj.p
-    x = p["embed"][tokens]                       # (B, 1, D)
-    b = x.shape[0]
-    hd = cfg.head_dim
-    s = next(iter(caches.values())).shape[1]
-    grid = jnp.arange(s, dtype=jnp.int32)[None, :]
-    write = (grid == pos[:, None]).astype(jnp.float32)   # (B, S)
-    valid = grid <= pos[:, None]                          # (B, S)
-    new_caches = {}
-    for li in range(cfg.n_layers):
-        h, kv, _ = cfg.layer_shapes(li)
-        xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
-        q = proj(xin, f"l{li}.wq").reshape(b, 1, h, hd)
-        k = proj(xin, f"l{li}.wk").reshape(b, 1, kv, hd)
-        v = proj(xin, f"l{li}.wv").reshape(b, 1, kv, hd)
-        q = rope_at(q, pos, cfg.rope_theta)
-        k = rope_at(k, pos, cfg.rope_theta)
-        w = write[:, :, None, None]              # (B, S, 1, 1)
-        ck = caches[f"cache_k.l{li}"] * (1.0 - w) + w * k
-        cv = caches[f"cache_v.l{li}"] * (1.0 - w) + w * v
-        new_caches[f"cache_k.l{li}"] = ck
-        new_caches[f"cache_v.l{li}"] = cv
-        kk = repeat_kv(ck, h)                    # (B, S, h, hd)
-        vv = repeat_kv(cv, h)
-        att = jnp.einsum("bohd,bshd->bhos", q, kk) / jnp.sqrt(float(hd))
-        att = jnp.where(valid[:, None, None, :], att, -1e30)
-        att = jax.nn.softmax(att, axis=-1)
-        out = jnp.einsum("bhos,bshd->bohd", att, vv).reshape(b, 1, h * hd)
-        x = x + proj(out, f"l{li}.wo")
-        xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
-        gate = proj(xin, f"l{li}.w_gate")
-        up = proj(xin, f"l{li}.w_up")
-        x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
-    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
-    logits = lm_head_logits(proj, x)[:, 0]       # (B, V)
-    return logits, new_caches
+    {name: new cache}). The T = 1 case of `cached_window_forward`."""
+    x, new_caches = cached_window_forward(cfg, proj, tokens, pos[:, None],
+                                          caches)
+    return lm_head_logits(proj, x)[:, 0], new_caches
 
 
 def make_decode_verify(cfg: ModelConfig, with_lora=True, use_pallas=False):
@@ -682,49 +726,11 @@ def decode_verify_forward(cfg: ModelConfig, proj, tokens, pos, caches):
     of row b at grid position pos[b]+t, attends over cache positions <=
     pos[b]+t, returns ((B, T, V) logits, {name: new cache}).
 
-    `decode_step_forward` is the T = 1 special case; the verify window is
-    kept separate so the single-token hot path's lowering stays untouched.
+    The T = K+1 case of `cached_window_forward`.
     """
-    p = proj.p
-    x = p["embed"][tokens]                       # (B, T, D)
-    b, t = tokens.shape
-    hd = cfg.head_dim
-    s = next(iter(caches.values())).shape[1]
-    grid = jnp.arange(s, dtype=jnp.int32)
+    t = tokens.shape[1]
     abspos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B, T)
-    # scatter one-hot: token t lands at grid slot pos+t; off-grid windows
-    # (pos >= S, the caller's dummy rows) produce no write at all
-    write = (abspos[:, :, None] == grid[None, None, :]).astype(jnp.float32)
-    taken = write.sum(axis=1)                    # (B, S): rewritten slots
-    valid = grid[None, None, :] <= abspos[:, :, None]  # (B, T, S)
-    new_caches = {}
-    for li in range(cfg.n_layers):
-        h, kv, _ = cfg.layer_shapes(li)
-        xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
-        q = proj(xin, f"l{li}.wq").reshape(b, t, h, hd)
-        k = proj(xin, f"l{li}.wk").reshape(b, t, kv, hd)
-        v = proj(xin, f"l{li}.wv").reshape(b, t, kv, hd)
-        q = rope_at_many(q, abspos, cfg.rope_theta)
-        k = rope_at_many(k, abspos, cfg.rope_theta)
-        keep = (1.0 - taken)[:, :, None, None]   # (B, S, 1, 1)
-        ck = caches[f"cache_k.l{li}"] * keep + jnp.einsum("bts,btnh->bsnh",
-                                                          write, k)
-        cv = caches[f"cache_v.l{li}"] * keep + jnp.einsum("bts,btnh->bsnh",
-                                                          write, v)
-        new_caches[f"cache_k.l{li}"] = ck
-        new_caches[f"cache_v.l{li}"] = cv
-        kk = repeat_kv(ck, h)                    # (B, S, h, hd)
-        vv = repeat_kv(cv, h)
-        att = jnp.einsum("bthd,bshd->bhts", q, kk) / jnp.sqrt(float(hd))
-        att = jnp.where(valid[:, None], att, -1e30)
-        att = jax.nn.softmax(att, axis=-1)
-        out = jnp.einsum("bhts,bshd->bthd", att, vv).reshape(b, t, h * hd)
-        x = x + proj(out, f"l{li}.wo")
-        xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
-        gate = proj(xin, f"l{li}.w_gate")
-        up = proj(xin, f"l{li}.w_up")
-        x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
-    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+    x, new_caches = cached_window_forward(cfg, proj, tokens, abspos, caches)
     return lm_head_logits(proj, x), new_caches   # (B, T, V)
 
 
@@ -769,60 +775,17 @@ def prefill_chunk_scatter(cfg: ModelConfig, proj, tokens, start_pos, last_pos,
     `row_onehot`-selected cache row at those positions (every other row —
     and every untouched slot of the selected row — passes through), and
     return the logits at window index `last_pos` followed by the new
-    caches in name order."""
-    p = proj.p
-    x = p["embed"][tokens]                        # (1, C, D)
-    _, c = tokens.shape
-    hd = cfg.head_dim
-    s = next(iter(caches.values())).shape[1]
-    grid = jnp.arange(s, dtype=jnp.int32)
-    abspos = start_pos + jnp.arange(c, dtype=jnp.int32)            # (C,)
-    # scatter one-hot: window token t lands at grid slot start_pos+t;
-    # off-grid tails (start_pos + t >= S) produce no write at all
-    write = (abspos[:, None] == grid[None, :]).astype(jnp.float32)  # (C, S)
-    taken = write.sum(axis=0)                     # (S,): rewritten slots
-    valid = grid[None, :] <= abspos[:, None]      # (C, S)
-    sel = row_onehot[:, None, None, None]         # (B, 1, 1, 1)
-    hit = taken[None, :, None, None]              # (1, S, 1, 1)
-    new_caches = []
-    for li in range(cfg.n_layers):
-        h, kv, _ = cfg.layer_shapes(li)
-        xin = rmsnorm(x, p[f"l{li}.attn_norm"], cfg.rms_eps)
-        q = proj(xin, f"l{li}.wq").reshape(1, c, h, hd)
-        k = proj(xin, f"l{li}.wk").reshape(1, c, kv, hd)
-        v = proj(xin, f"l{li}.wv").reshape(1, c, kv, hd)
-        q = rope_at_many(q, abspos[None], cfg.rope_theta)
-        k = rope_at_many(k, abspos[None], cfg.rope_theta)
-        ck = caches[f"cache_k.l{li}"]
-        cv = caches[f"cache_v.l{li}"]
-        win_k = jnp.einsum("cs,cnh->snh", write, k[0])[None]  # (1, S, kv, hd)
-        win_v = jnp.einsum("cs,cnh->snh", write, v[0])[None]
-        nk = ck * (1.0 - sel * hit) + sel * win_k
-        nv = cv * (1.0 - sel * hit) + sel * win_v
-        new_caches.append(nk)
-        new_caches.append(nv)
-        # attention runs over the selected row *after* this chunk's write:
-        # earlier chunks' cached K/V plus the causal window, masked by pos
-        row_k = jnp.einsum("b,bsnh->snh", row_onehot, nk)[None]
-        row_v = jnp.einsum("b,bsnh->snh", row_onehot, nv)[None]
-        kk = repeat_kv(row_k, h)                  # (1, S, h, hd)
-        vv = repeat_kv(row_v, h)
-        att = jnp.einsum("bthd,bshd->bhts", q, kk) / jnp.sqrt(float(hd))
-        att = jnp.where(valid[None, None], att, -1e30)
-        att = jax.nn.softmax(att, axis=-1)
-        out = jnp.einsum("bhts,bshd->bthd", att, vv).reshape(1, c, h * hd)
-        x = x + proj(out, f"l{li}.wo")
-        xin = rmsnorm(x, p[f"l{li}.mlp_norm"], cfg.rms_eps)
-        gate = proj(xin, f"l{li}.w_gate")
-        up = proj(xin, f"l{li}.w_up")
-        x = x + proj(jax.nn.silu(gate) * up, f"l{li}.w_down")
-    x = rmsnorm(x, p["final_norm"], cfg.rms_eps)
+    caches in name order. The `row_onehot` case of `cached_window_forward`."""
+    c = tokens.shape[1]
+    abspos = (start_pos + jnp.arange(c, dtype=jnp.int32))[None]    # (1, C)
+    x, new_caches = cached_window_forward(cfg, proj, tokens, abspos, caches,
+                                          row_onehot=row_onehot)
     # only the `last_pos` position's logits are ever read (and only on the
     # final chunk): gather before the LM head so intermediate cache-fill
     # chunks skip the (C, V) projection — the window's largest matmul
     row_x = jnp.take(x[0], last_pos, axis=0)[None, None]           # (1, 1, D)
     row_logits = lm_head_logits(proj, row_x)[:, 0]                 # (1, V)
-    return (row_logits,) + tuple(new_caches)
+    return (row_logits,) + tuple(new_caches[n] for n in kv_cache_names(cfg))
 
 
 # ---------------------------------------------------------------------------
