@@ -43,6 +43,11 @@ if python3 -c "import jax, pytest" >/dev/null 2>&1; then
     fi
     # pytest must run from python/ so `compile` is importable
     (cd python && run python3 -m pytest "${PYTEST_ARGS[@]}")
+    # §2f paged-equivalence lane, named explicitly so a collection change
+    # (rename, accidental deselection) that hollows the dense-vs-paged
+    # byte-identity contract out of the suite fails CI instead of
+    # passing quietly; `-k paged` must select a non-empty set
+    (cd python && run python3 -m pytest -q -k paged tests/test_model.py tests/test_aot.py)
     # meta-schema validation: every suite meta (and any emitted artifact
     # metas) must parse under runtime::meta's python mirror — adapter slot
     # groups and the decode_prefill_chunk window rule included, so a

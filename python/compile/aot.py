@@ -324,6 +324,131 @@ def decode_artifacts(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode artifacts (DESIGN.md §2f: block pool + per-row block tables)
+# ---------------------------------------------------------------------------
+
+PAGED_BLOCK = 8
+
+
+def paged_pool_blocks(b, s, block=PAGED_BLOCK):
+    """Default artifact pool size: exactly the bytes of the dense (B, S)
+    grid — B rows' worth of full-length tables — so paged-vs-dense A/Bs
+    hold pool bytes fixed and the capacity win comes purely from packing.
+    Like `chunk_ladder`, the formula is the discovery contract: the Rust
+    paged decoder derives n_blocks the same way when sizing its pool."""
+    return b * (s // block)
+
+
+def _paged_cache_specs(cfg, n_blocks, block):
+    return [(n, _spec(shp))
+            for n, shp in M.paged_cache_shapes(cfg, n_blocks, block).items()]
+
+
+def _paged_extra(block, n_blocks):
+    """The `extra.paged` contract (meta_check + runtime::meta mirror)."""
+    return {"paged": {"block_size": block, "n_blocks": n_blocks}}
+
+
+def decode_prefill_paged_artifact(cfg, b=LOGITS_B, s=LOGITS_S,
+                                  block=PAGED_BLOCK, n_blocks=None):
+    """Paged `decode_prefill`: the admitted row's `(S/block,)` block table
+    replaces `row_onehot` — it names the row's physical pool blocks, so
+    selection and isolation are the same fact."""
+    n_blocks = paged_pool_blocks(b, s, block) if n_blocks is None else n_blocks
+    fn, pnames, lnames, cnames = M.make_decode_prefill_paged(cfg)
+    ins = [("tokens", _spec((1, s), jnp.int32)),
+           ("last_pos", _spec((), jnp.int32)),
+           ("block_table", _spec((s // block,), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _paged_cache_specs(cfg, n_blocks, block)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_prefill_paged_{cfg.name}", fn, ins, outs, cfg,
+                    {"kind": "decode_prefill", "batch": b, "seq": s,
+                     "param_names": pnames, "lora_names": lnames,
+                     "cache_names": cnames, **_paged_extra(block, n_blocks),
+                     **_cache_threading(cnames)})
+
+
+def decode_step_paged_artifact(cfg, b=LOGITS_B, s=LOGITS_S,
+                               block=PAGED_BLOCK, n_blocks=None):
+    """Paged `decode_step`: per-row (B, S/block) tables resolve each row's
+    logical positions into the shared (n_blocks, block, kv, hd) pool."""
+    n_blocks = paged_pool_blocks(b, s, block) if n_blocks is None else n_blocks
+    fn, pnames, lnames, cnames = M.make_decode_step_paged(cfg)
+    ins = [("tokens", _spec((b, 1), jnp.int32)),
+           ("pos", _spec((b,), jnp.int32)),
+           ("block_table", _spec((b, s // block), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _paged_cache_specs(cfg, n_blocks, block)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_step_paged_{cfg.name}", fn, ins, outs, cfg,
+                    {"kind": "decode_step", "batch": b, "seq": s,
+                     "param_names": pnames, "lora_names": lnames,
+                     "cache_names": cnames, **_paged_extra(block, n_blocks),
+                     **_cache_threading(cnames)})
+
+
+def decode_verify_paged_artifact(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K,
+                                 block=PAGED_BLOCK, n_blocks=None):
+    """Paged `decode_verify`: the (B, K+1) speculative window over
+    pool-resolved cache slots."""
+    n_blocks = paged_pool_blocks(b, s, block) if n_blocks is None else n_blocks
+    fn, pnames, lnames, cnames = M.make_decode_verify_paged(cfg)
+    ins = [("tokens", _spec((b, k + 1), jnp.int32)),
+           ("pos", _spec((b,), jnp.int32)),
+           ("block_table", _spec((b, s // block), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _paged_cache_specs(cfg, n_blocks, block)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_verify_paged_{cfg.name}", fn, ins, outs, cfg,
+                    {"kind": "decode_verify", "batch": b, "seq": s,
+                     "draft_k": k, "param_names": pnames,
+                     "lora_names": lnames, "cache_names": cnames,
+                     **_paged_extra(block, n_blocks),
+                     **_cache_threading(cnames)})
+
+
+def decode_prefill_chunk_paged_artifact(cfg, chunk, b=LOGITS_B, s=LOGITS_S,
+                                        block=PAGED_BLOCK, n_blocks=None):
+    """Paged chunked admission: one (1, C) window scattered through the
+    admitted row's `(S/block,)` table. This is the artifact shared-prefix
+    reuse rides on — chunks whose blocks are already resident are simply
+    never fed."""
+    n_blocks = paged_pool_blocks(b, s, block) if n_blocks is None else n_blocks
+    fn, pnames, lnames, cnames = M.make_decode_prefill_chunk_paged(cfg)
+    ins = [("tokens", _spec((1, chunk), jnp.int32)),
+           ("start_pos", _spec((), jnp.int32)),
+           ("last_pos", _spec((), jnp.int32)),
+           ("block_table", _spec((s // block,), jnp.int32))]
+    ins += _param_specs(cfg, pnames)
+    ins += _lora_specs(cfg)
+    ins += _paged_cache_specs(cfg, n_blocks, block)
+    outs = ["logits"] + ["new." + n for n in cnames]
+    return Artifact(f"decode_prefill_chunk_paged_{cfg.name}_c{chunk}", fn,
+                    ins, outs, cfg,
+                    {"kind": "decode_prefill_chunk", "batch": b, "seq": s,
+                     "chunk": chunk, "param_names": pnames,
+                     "lora_names": lnames, "cache_names": cnames,
+                     **_paged_extra(block, n_blocks),
+                     **_cache_threading(cnames)})
+
+
+def decode_paged_artifacts(cfg, b=LOGITS_B, s=LOGITS_S, k=DRAFT_K,
+                           block=PAGED_BLOCK):
+    """The paged decode family mirrors `decode_artifacts` one-for-one:
+    prefill + step + verify + the chunk ladder, all over one pooled cache
+    sized by `paged_pool_blocks`."""
+    return ([decode_prefill_paged_artifact(cfg, b, s, block),
+             decode_step_paged_artifact(cfg, b, s, block),
+             decode_verify_paged_artifact(cfg, b, s, k, block)]
+            + [decode_prefill_chunk_paged_artifact(cfg, c, b, s, block)
+               for c in chunk_ladder(s)])
+
+
+# ---------------------------------------------------------------------------
 # Multi-adapter serving artifacts (DESIGN.md §2c)
 # ---------------------------------------------------------------------------
 
@@ -516,6 +641,9 @@ def build_suite(suite: str):
                  kernel_demo_artifact(True),
                  kernel_demo_artifact(False)]
         arts += decode_artifacts(tiny, b=2, s=32)
+        # paged mirror of the tiny decode family (block pool + per-row
+        # tables, DESIGN.md §2f) — same pool bytes as the dense grid
+        arts += decode_paged_artifacts(tiny, b=2, s=32)
         # the pruned proxy's own decode trio (+ its logits artifact): the
         # drafter side of "draft small, verify large" — and a target in its
         # own right for the self-speculative equivalence matrix
@@ -533,6 +661,7 @@ def build_suite(suite: str):
             arts += decode_artifacts(cfg)
         # production serving shape: one frozen base, many task adapters
         arts += adapter_artifacts(P["l13b"], n_adapters=4)
+        arts += decode_paged_artifacts(P["l13b"])
         arts += [grad_imp_artifact(P["l13b"]), grad_imp_artifact(P["l70b"])]
         # 13B: structured pruned (rand/stru share shapes) + masked variants
         c13p = pruned("l13b", 0.65)

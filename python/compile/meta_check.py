@@ -19,7 +19,13 @@ cargo) and without lowering HLO:
 * `extra.kind == "decode_prefill_chunk"`: `chunk` >= 1 and <= seq, the
   tokens input is a (1, chunk) window, `start_pos`/`last_pos` are scalar
   int32 inputs and `row_onehot` selects the cache row (the chunked
-  admission contract, DESIGN.md §2e)
+  admission contract, DESIGN.md §2e) — unless the artifact is paged, in
+  which case the block table is the row selection
+* `extra.paged`: `block_size`/`n_blocks` >= 1, `seq` divides evenly into
+  blocks, a `block_table` int32 input of shape (B, seq/block) for
+  step/verify or (seq/block,) for the prefill kinds, and every declared
+  cache input pooled as (n_blocks, block_size, ...) (the paged decode
+  contract, DESIGN.md §2f)
 
 Usage:
     python -m compile.meta_check              # validate smoke+std suites
@@ -158,8 +164,52 @@ def check_meta(meta: dict) -> list:
             elif inputs[scalar] != ((), "int32"):
                 errs.append(f"decode_prefill_chunk: {scalar} must be a "
                             "scalar int32")
-        if "row_onehot" not in inputs:
+        if "row_onehot" not in inputs and "paged" not in extra:
             errs.append("decode_prefill_chunk: no row_onehot input")
+
+    # ---- paged decode (meta.rs::paged; DESIGN.md §2f) --------------------
+    paged = extra.get("paged")
+    if paged is not None:
+        if not isinstance(paged, dict):
+            errs.append("paged must be an object")
+            paged = {}
+        bs, nb = paged.get("block_size"), paged.get("n_blocks")
+        ok = True
+        for label, v in (("block_size", bs), ("n_blocks", nb)):
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                errs.append(f"paged: bad {label} {v!r}")
+                ok = False
+        seq = extra.get("seq")
+        batch = extra.get("batch")
+        kind = extra.get("kind")
+        if ok and isinstance(seq, int) and seq % bs != 0:
+            errs.append(f"paged: seq {seq} is not a whole number of "
+                        f"{bs}-slot blocks")
+            ok = False
+        if "block_table" not in inputs:
+            errs.append("paged: no block_table input")
+        elif ok and isinstance(seq, int):
+            shape, dtype = inputs["block_table"]
+            if dtype != "int32":
+                errs.append("paged: block_table must be int32")
+            rows = seq // bs
+            want = None
+            if kind in ("decode_step", "decode_verify"):
+                if isinstance(batch, int):
+                    want = (batch, rows)
+            elif kind in ("decode_prefill", "decode_prefill_chunk"):
+                want = (rows,)
+            if want is not None and shape != want:
+                errs.append(f"paged: block_table shape {list(shape)} != "
+                            f"{list(want)} for kind {kind}")
+        if ok:
+            for cname in extra.get("cache_names", []):
+                if cname in inputs:
+                    shp = inputs[cname][0]
+                    if len(shp) < 2 or shp[0] != nb or shp[1] != bs:
+                        errs.append(f"paged: cache '{cname}' shape "
+                                    f"{list(shp)} is not pooled "
+                                    f"({nb}, {bs}, ...)")
 
     # ---- slot groups (the adapter group; session.rs::resolve_groups) -----
     groups = extra.get("slot_groups", {})

@@ -560,7 +560,7 @@ def make_decode_prefill(cfg: ModelConfig, with_lora=True, use_pallas=False):
 
 
 def cached_window_forward(cfg: ModelConfig, proj, tokens, abspos, caches,
-                          row_onehot=None):
+                          row_onehot=None, block_table=None):
     """THE cached layer loop: every decode-family forward is one call here.
 
     `tokens (B_f, T)` int32 and `abspos (B_f, T)` int32 give each token's
@@ -571,7 +571,7 @@ def cached_window_forward(cfg: ModelConfig, proj, tokens, abspos, caches,
     (abspos >= S) write nothing — the scatter one-hot is empty — which is
     the dummy-row/padded-tail convention every caller relies on.
 
-    Two scatter regimes:
+    Three scatter regimes:
     * `row_onehot=None` — batched (B_f == B): step (T=1) and the verify
       window (T=K+1); each row writes into its own cache row.
     * `row_onehot (B,)` — single-row window (B_f == 1): chunked prefill,
@@ -579,21 +579,53 @@ def cached_window_forward(cfg: ModelConfig, proj, tokens, abspos, caches,
       case; the window scatters into the selected cache row only (every
       other row — and every untouched slot of the selected row — passes
       through bitwise) and attends over that row's post-write cache.
+    * `block_table (B_f, S/block)` int32 — paged (DESIGN.md §2f): caches
+      are one pooled `(n_blocks, block, kv_i, hd)` tensor shared by all
+      rows; logical position p of row b lives at physical slot
+      `block_table[b, p // block] * block + p % block`. The scatter is
+      physical-slot-indexed, the attention gathers the row's logical
+      (S, kv, hd) view from the post-write pool, and everything after the
+      gather is the dense code path — which is why paged and dense greedy
+      streams are byte-identical. Host contract: distinct rows' write
+      positions map to distinct physical blocks (the BlockPool CoW-forks
+      shared blocks before any write), and table entries beyond a row's
+      frontier may be garbage — they are only ever read under the `valid`
+      mask (reads clamp, writes past the logical grid scatter nowhere).
+      `row_onehot` does not combine with paging: the table *is* the row
+      selection.
 
     Returns `(x (B_f, T, D) post-final-norm, {name: new cache})`; callers
     pick their own lm_head slice (full window, frontier, or `last_pos`).
     """
+    assert row_onehot is None or block_table is None
     p = proj.p
     x = p["embed"][tokens]                       # (B_f, T, D)
     b_f, t = tokens.shape
     hd = cfg.head_dim
-    s = next(iter(caches.values())).shape[1]
+    if block_table is None:
+        s = next(iter(caches.values())).shape[1]
+    else:
+        nb, blk = next(iter(caches.values())).shape[:2]
+        nslots = nb * blk
+        s = block_table.shape[1] * blk
     grid = jnp.arange(s, dtype=jnp.int32)
-    # scatter one-hot: token t lands at grid slot abspos[:, t]; off-grid
-    # tokens produce no write at all
-    write = (abspos[:, :, None] == grid[None, None, :]).astype(jnp.float32)
-    taken = write.sum(axis=1)                    # (B_f, S): rewritten slots
     valid = grid[None, None, :] <= abspos[:, :, None]  # (B_f, T, S)
+    if block_table is None:
+        # scatter one-hot: token t lands at grid slot abspos[:, t];
+        # off-grid tokens produce no write at all
+        write = (abspos[:, :, None] == grid[None, None, :]).astype(jnp.float32)
+        taken = write.sum(axis=1)                # (B_f, S): rewritten slots
+    else:
+        # physical-slot one-hot: abspos -> table-mapped pool slot; tokens
+        # past the logical grid map to slot `nslots`, i.e. nowhere
+        blk_ix = jnp.clip(abspos // blk, 0, block_table.shape[1] - 1)
+        phys_blk = jnp.take_along_axis(block_table, blk_ix, axis=1)
+        phys = phys_blk * blk + abspos % blk              # (B_f, T)
+        phys = jnp.where(abspos < s, phys, nslots)
+        slots = jnp.arange(nslots, dtype=jnp.int32)
+        write = (phys[:, :, None] == slots[None, None, :]).astype(jnp.float32)
+        taken = write.sum(axis=(0, 1))           # (N,): disjoint across rows
+        tbl = jnp.clip(block_table, 0, nb - 1)   # reads clamp garbage tails
     if row_onehot is not None:
         sel = row_onehot[:, None, None, None]    # (B, 1, 1, 1)
         hit = taken[:, :, None, None]            # (1, S, 1, 1)
@@ -608,7 +640,18 @@ def cached_window_forward(cfg: ModelConfig, proj, tokens, abspos, caches,
         k = rope_at_many(k, abspos, cfg.rope_theta)
         ck = caches[f"cache_k.l{li}"]
         cv = caches[f"cache_v.l{li}"]
-        if row_onehot is None:
+        if block_table is not None:
+            pool_k = ck.reshape(nslots, kv, hd)
+            pool_v = cv.reshape(nslots, kv, hd)
+            keep = (1.0 - taken)[:, None, None]          # (N, 1, 1)
+            npk = pool_k * keep + jnp.einsum("btn,btch->nch", write, k)
+            npv = pool_v * keep + jnp.einsum("btn,btch->nch", write, v)
+            nk = npk.reshape(nb, blk, kv, hd)
+            nv = npv.reshape(nb, blk, kv, hd)
+            # each row's logical (S, kv, hd) view, gathered post-write
+            row_k = nk[tbl].reshape(b_f, s, kv, hd)
+            row_v = nv[tbl].reshape(b_f, s, kv, hd)
+        elif row_onehot is None:
             keep = (1.0 - taken)[:, :, None, None]       # (B, S, 1, 1)
             nk = ck * keep + jnp.einsum("bts,btnh->bsnh", write, k)
             nv = cv * keep + jnp.einsum("bts,btnh->bsnh", write, v)
@@ -786,6 +829,142 @@ def prefill_chunk_scatter(cfg: ModelConfig, proj, tokens, start_pos, last_pos,
     row_x = jnp.take(x[0], last_pos, axis=0)[None, None]           # (1, 1, D)
     row_logits = lm_head_logits(proj, row_x)[:, 0]                 # (1, V)
     return (row_logits,) + tuple(new_caches[n] for n in kv_cache_names(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (DESIGN.md §2f: block pool + per-row block tables)
+# ---------------------------------------------------------------------------
+
+def paged_cache_shapes(cfg: ModelConfig, n_blocks: int,
+                       block: int) -> Dict[str, tuple]:
+    """name -> shape for the pooled per-layer decode caches.
+
+    The paged analogue of `kv_cache_shapes`: instead of one dense
+    (B, S, kv_i, hd) slab per layer, all rows share one
+    (n_blocks, block, kv_i, hd) pool; a per-row block table maps logical
+    positions onto pool blocks, so concurrent-row capacity is bounded by
+    pool bytes over *actual* sequence lengths, not batch x max-S.
+    """
+    out: Dict[str, tuple] = {}
+    hd = cfg.head_dim
+    for i in range(cfg.n_layers):
+        _, kv, _ = cfg.layer_shapes(i)
+        out[f"cache_k.l{i}"] = (n_blocks, block, kv, hd)
+        out[f"cache_v.l{i}"] = (n_blocks, block, kv, hd)
+    return out
+
+
+def decode_step_paged_forward(cfg: ModelConfig, proj, tokens, pos,
+                              block_table, caches):
+    """Paged (B, 1) incremental forward: identical to `decode_step_forward`
+    except each row's cache slots are resolved through its `block_table`
+    row into the shared pool. Off-grid dummies (`pos >= S`) still write
+    nothing."""
+    x, new_caches = cached_window_forward(cfg, proj, tokens, pos[:, None],
+                                          caches, block_table=block_table)
+    return lm_head_logits(proj, x)[:, 0], new_caches
+
+
+def decode_verify_paged_forward(cfg: ModelConfig, proj, tokens, pos,
+                                block_table, caches):
+    """Paged (B, T) verify window (T = K+1): `decode_verify_forward` with
+    pool-resolved cache slots."""
+    t = tokens.shape[1]
+    abspos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B, T)
+    x, new_caches = cached_window_forward(cfg, proj, tokens, abspos, caches,
+                                          block_table=block_table)
+    return lm_head_logits(proj, x), new_caches   # (B, T, V)
+
+
+def prefill_chunk_paged_scatter(cfg: ModelConfig, proj, tokens, start_pos,
+                                last_pos, block_table, caches):
+    """Paged chunked-prefill tail: one (1, C) window whose K/V lands in the
+    pool blocks named by the admitted row's `(S/block,)` table. Unlike the
+    dense chunk there is no `row_onehot` — the table IS the row selection
+    (it names that row's physical blocks and nobody else's), so admission
+    can never perturb in-flight rows by construction."""
+    c = tokens.shape[1]
+    abspos = (start_pos + jnp.arange(c, dtype=jnp.int32))[None]    # (1, C)
+    x, new_caches = cached_window_forward(cfg, proj, tokens, abspos, caches,
+                                          block_table=block_table[None])
+    row_x = jnp.take(x[0], last_pos, axis=0)[None, None]           # (1, 1, D)
+    row_logits = lm_head_logits(proj, row_x)[:, 0]                 # (1, V)
+    return (row_logits,) + tuple(new_caches[n] for n in kv_cache_names(cfg))
+
+
+def prefill_paged_scatter(cfg: ModelConfig, proj, tokens, last_pos,
+                          block_table, caches):
+    """Paged monolithic prefill: the start_pos = 0, C = S special case of
+    `prefill_chunk_paged_scatter` — same unification as the dense pair."""
+    return prefill_chunk_paged_scatter(cfg, proj, tokens,
+                                       jnp.asarray(0, jnp.int32), last_pos,
+                                       block_table, caches)
+
+
+def _make_paged(cfg: ModelConfig, with_lora, use_pallas, head, tail_fn):
+    """Shared factory plumbing for the paged decode family: unflatten
+    params/lora/pooled-caches and dispatch to `tail_fn` with the `head`
+    positional inputs in front."""
+    pnames = param_names(cfg)
+    lnames = lora_names(cfg) if with_lora else []
+    cnames = kv_cache_names(cfg)
+
+    def fn(*args):
+        lead, flat = args[:head], args[head:]
+        i = 0
+        params = dict(zip(pnames, flat[i:i + len(pnames)])); i += len(pnames)
+        lora = dict(zip(lnames, flat[i:i + len(lnames)])); i += len(lnames)
+        caches = dict(zip(cnames, flat[i:i + len(cnames)]))
+        proj = ProjCtx(params, lora=lora, cfg=cfg, use_pallas=use_pallas)
+        return tail_fn(proj, lead, caches, cnames)
+    return fn, pnames, lnames, cnames
+
+
+def make_decode_prefill_paged(cfg: ModelConfig, with_lora=True,
+                              use_pallas=False):
+    """Paged `make_decode_prefill`: (tokens (1, S), last_pos, block_table
+    (S/block,), params..., lora..., pooled caches...)."""
+    def tail(proj, lead, caches, cnames):
+        tokens, last_pos, block_table = lead
+        return prefill_paged_scatter(cfg, proj, tokens, last_pos,
+                                     block_table, caches)
+    return _make_paged(cfg, with_lora, use_pallas, 3, tail)
+
+
+def make_decode_step_paged(cfg: ModelConfig, with_lora=True,
+                           use_pallas=False):
+    """Paged `make_decode_step`: (tokens (B, 1), pos (B,), block_table
+    (B, S/block), params..., lora..., pooled caches...)."""
+    def tail(proj, lead, caches, cnames):
+        tokens, pos, block_table = lead
+        logits, new_caches = decode_step_paged_forward(
+            cfg, proj, tokens, pos, block_table, caches)
+        return (logits,) + tuple(new_caches[n] for n in cnames)
+    return _make_paged(cfg, with_lora, use_pallas, 3, tail)
+
+
+def make_decode_verify_paged(cfg: ModelConfig, with_lora=True,
+                             use_pallas=False):
+    """Paged `make_decode_verify`: (tokens (B, K+1), pos (B,), block_table
+    (B, S/block), params..., lora..., pooled caches...)."""
+    def tail(proj, lead, caches, cnames):
+        tokens, pos, block_table = lead
+        logits, new_caches = decode_verify_paged_forward(
+            cfg, proj, tokens, pos, block_table, caches)
+        return (logits,) + tuple(new_caches[n] for n in cnames)
+    return _make_paged(cfg, with_lora, use_pallas, 3, tail)
+
+
+def make_decode_prefill_chunk_paged(cfg: ModelConfig, with_lora=True,
+                                    use_pallas=False):
+    """Paged `make_decode_prefill_chunk`: (tokens (1, C), start_pos,
+    last_pos, block_table (S/block,), params..., lora..., pooled
+    caches...)."""
+    def tail(proj, lead, caches, cnames):
+        tokens, start_pos, last_pos, block_table = lead
+        return prefill_chunk_paged_scatter(cfg, proj, tokens, start_pos,
+                                           last_pos, block_table, caches)
+    return _make_paged(cfg, with_lora, use_pallas, 4, tail)
 
 
 # ---------------------------------------------------------------------------

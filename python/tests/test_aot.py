@@ -377,3 +377,120 @@ def test_decode_prefill_artifact_is_single_row():
         {"new." + n: n for n in art.extra["cache_names"]}
     outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
     assert list(outs[0].shape) == [1, cfg.vocab_size]
+
+
+# ---------------------------------------------------------------------------
+# Paged decode artifacts (DESIGN.md §2f)
+# ---------------------------------------------------------------------------
+
+def test_suites_register_paged_decode_family():
+    """The paged family mirrors the dense decode family one-for-one —
+    prefill + step + verify + the chunk ladder — wherever it ships."""
+    smoke = [a.name for a in aot.build_suite("smoke")]
+    for n in ["decode_prefill_paged_tiny", "decode_step_paged_tiny",
+              "decode_verify_paged_tiny",
+              "decode_prefill_chunk_paged_tiny_c16",
+              "decode_prefill_chunk_paged_tiny_c32"]:
+        assert n in smoke, n
+    std = [a.name for a in aot.build_suite("std")]
+    for n in ["decode_prefill_paged_l13b", "decode_step_paged_l13b",
+              "decode_verify_paged_l13b",
+              "decode_prefill_chunk_paged_l13b_c16",
+              "decode_prefill_chunk_paged_l13b_c64"]:
+        assert n in std, n
+
+
+def test_paged_pool_blocks_formula():
+    """Like `chunk_ladder`, the default pool size is a discovery contract
+    with the Rust paged decoder: the pool holds exactly the dense grid's
+    bytes, so the capacity win is pure packing."""
+    assert aot.paged_pool_blocks(2, 32, 8) == 8
+    assert aot.paged_pool_blocks(4, 64, 8) == 32
+    assert aot.paged_pool_blocks(4, 64, 16) == 16
+
+
+def test_decode_step_paged_artifact_declares_pool_and_donation():
+    """Input order tokens, pos, block_table, params, lora, pooled caches;
+    `extra.paged` carries the block geometry; donation matches dense."""
+    cfg = PRESETS["tiny"]
+    art = aot.decode_step_paged_artifact(cfg, b=2, s=16, block=4)
+    names = [n for n, _ in art.in_specs]
+    assert names[:3] == ["tokens", "pos", "block_table"]
+    pn, ln, cn = (art.extra["param_names"], art.extra["lora_names"],
+                  art.extra["cache_names"])
+    i = 3
+    assert names[i:i + len(pn)] == pn
+    i += len(pn)
+    assert names[i:i + len(ln)] == ln
+    i += len(ln)
+    assert names[i:] == cn
+    assert art.extra["paged"] == {"block_size": 4, "n_blocks": 8}
+    assert art.extra["state_bindings"] == {"new." + n: n for n in cn}
+    assert art.extra["state_zero_init"] == cn
+    specs = dict(art.in_specs)
+    assert list(specs["block_table"].shape) == [2, 4]
+    assert specs["block_table"].dtype == jnp.int32
+    for li in range(cfg.n_layers):
+        _, kv, _ = cfg.layer_shapes(li)
+        assert list(specs[f"cache_k.l{li}"].shape) == [8, 4, kv, cfg.head_dim]
+    outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
+    assert list(outs[0].shape) == [2, cfg.vocab_size]
+    for o, n in zip(outs[1:], cn):
+        assert list(o.shape) == list(specs[n].shape), n
+
+
+def test_decode_prefill_chunk_paged_artifact_has_table_not_onehot():
+    """The paged chunk window drops row_onehot — the (S/block,) table is
+    the row selection — and keeps the window scalars."""
+    cfg = PRESETS["tiny"]
+    art = aot.decode_prefill_chunk_paged_artifact(cfg, 8, b=2, s=16, block=4)
+    names = [n for n, _ in art.in_specs]
+    assert names[:4] == ["tokens", "start_pos", "last_pos", "block_table"]
+    assert "row_onehot" not in names
+    assert art.extra["kind"] == "decode_prefill_chunk"
+    assert art.extra["chunk"] == 8
+    assert art.extra["paged"] == {"block_size": 4, "n_blocks": 8}
+    specs = dict(art.in_specs)
+    assert list(specs["block_table"].shape) == [4]
+    outs = jax.eval_shape(art.fn, *[s for _, s in art.in_specs])
+    assert list(outs[0].shape) == [1, cfg.vocab_size]
+
+
+def test_meta_check_flags_paged_violations():
+    """The ci.sh meta validator accepts real paged metas and rejects the
+    contract breaks runtime::meta's paged mirror would reject."""
+    from compile.meta_check import check_meta
+    import copy
+    for art in aot.decode_paged_artifacts(PRESETS["tiny"], b=2, s=32):
+        assert check_meta(art.meta_dict()) == [], art.name
+
+    meta = aot.decode_step_paged_artifact(PRESETS["tiny"], b=2, s=16,
+                                          block=4).meta_dict()
+    broken = copy.deepcopy(meta)
+    broken["extra"]["paged"]["block_size"] = 0
+    assert any("bad block_size" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    broken["extra"]["paged"]["n_blocks"] = True  # bool is not a JSON int
+    assert any("bad n_blocks" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    broken["extra"]["paged"]["block_size"] = 5  # 16 % 5 != 0
+    assert any("whole number" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    broken["inputs"] = [e for e in broken["inputs"]
+                        if e["name"] != "block_table"]
+    assert any("no block_table" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    for e in broken["inputs"]:
+        if e["name"] == "block_table":
+            e["shape"] = [4]  # step needs the batched (B, S/block) table
+    assert any("block_table shape" in e for e in check_meta(broken))
+
+    broken = copy.deepcopy(meta)
+    for e in broken["inputs"]:
+        if e["name"] == "cache_k.l0":
+            e["shape"] = [2, 16, 2, 32]  # dense grid fed to a paged meta
+    assert any("not pooled" in e for e in check_meta(broken))

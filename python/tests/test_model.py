@@ -628,19 +628,36 @@ def _step_greedy_streams(cfg, flat, cn, prompts, steps, s):
     return streams
 
 
-def _spec_greedy_streams(cfg, tflat, dflat, cn, prompts, steps, s, K):
+def _spec_greedy_streams(cfg, tflat, dflat, cn, prompts, steps, s, K,
+                         tables=None, blk=None):
     """Draft/verify/rewind loop — the python mirror of the Rust
     `SpecDecoder` round. `dflat` is the drafter's weight stack (a different
     model, so drafts are imperfect and rejections actually happen).
 
     "Rewind" is logical, exactly as on the Rust side: rejected drafts'
     K/V stay in the cache tensors beyond each row's frontier, and
-    correctness relies on later writes/attention masking them out."""
+    correctness relies on later writes/attention masking them out.
+
+    With `tables`/`blk` set, the same loop runs through the paged decode
+    family instead (both models sharing the trivial block allocation) —
+    logical rewind then means rejected drafts' K/V stay in the row's own
+    pool blocks past the frontier, masked out exactly like dense."""
     b = len(prompts)
-    sfn, *_ = M.make_decode_step(cfg)
-    vfn, *_ = M.make_decode_verify(cfg)
-    tcaches = _prefill_caches(cfg, tflat, cn, prompts, b, s)
-    dcaches = _prefill_caches(cfg, dflat, cn, prompts, b, s)
+    if tables is None:
+        sfn, *_ = M.make_decode_step(cfg)
+        vfn, *_ = M.make_decode_verify(cfg)
+        tcaches = _prefill_caches(cfg, tflat, cn, prompts, b, s)
+        dcaches = _prefill_caches(cfg, dflat, cn, prompts, b, s)
+    else:
+        n_blocks = b * (s // blk)
+        sfn_p, *_ = M.make_decode_step_paged(cfg)
+        vfn_p, *_ = M.make_decode_verify_paged(cfg)
+        sfn = lambda toks, pos, *rest: sfn_p(toks, pos, tables, *rest)
+        vfn = lambda toks, pos, *rest: vfn_p(toks, pos, tables, *rest)
+        tcaches = _paged_prefill_caches(cfg, tflat, cn, prompts, tables,
+                                        n_blocks, blk, s)
+        dcaches = _paged_prefill_caches(cfg, dflat, cn, prompts, tables,
+                                        n_blocks, blk, s)
     seqs = [list(p) for p in prompts]
     streams = [[] for _ in range(b)]
     rounds = accepted_total = 0
@@ -963,3 +980,281 @@ def test_eval_loss_matches_mean_loss():
     want = M.mean_loss(logits, toks[:, 1:], mask)
     np.testing.assert_allclose(float(s.sum() / c.sum()), float(want),
                                rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (DESIGN.md §2f: block pool + per-row block tables)
+# ---------------------------------------------------------------------------
+
+def _seq_tables(b, s, blk):
+    """Trivial allocation: row r owns pool blocks [r*S/blk, (r+1)*S/blk)."""
+    npr = s // blk
+    return jnp.arange(b * npr, dtype=jnp.int32).reshape(b, npr)
+
+
+def _paged_prefill_caches(cfg, flat, cn, prompts, tables, n_blocks, blk, s):
+    """Monolithic paged admission of every prompt into a zeroed pool."""
+    pfn, *_ = M.make_decode_prefill_paged(cfg)
+    shapes = M.paged_cache_shapes(cfg, n_blocks, blk)
+    caches = {n: jnp.zeros(shapes[n], jnp.float32) for n in cn}
+    for row, p in enumerate(prompts):
+        toks = jnp.asarray([list(p) + [0] * (s - len(p))], jnp.int32)
+        out = pfn(toks, jnp.int32(len(p) - 1), tables[row],
+                  *flat, *[caches[n] for n in cn])
+        caches = dict(zip(cn, out[1:]))
+    return caches
+
+
+def _assert_paged_matches_dense(cfg, prompts, steps, s, blk, k=3):
+    """The §2f acceptance contract: prefill logits, every greedy step's
+    logits, and a trailing (B, K+1) verify window must all be BITWISE
+    identical between the dense grid and the block pool — paging permutes
+    storage, never values."""
+    b = len(prompts)
+    n_blocks = b * (s // blk)
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k2] for k2 in pn] + [lora[k2] for k2 in ln]
+    tables = _seq_tables(b, s, blk)
+
+    pfn_d, *_ = M.make_decode_prefill(cfg)
+    pfn_p, *_ = M.make_decode_prefill_paged(cfg)
+    dense = {n: jnp.zeros(shp, jnp.float32)
+             for n, shp in M.kv_cache_shapes(cfg, b, s).items()}
+    pool = {n: jnp.zeros(shp, jnp.float32)
+            for n, shp in M.paged_cache_shapes(cfg, n_blocks, blk).items()}
+    for row, p in enumerate(prompts):
+        toks = jnp.asarray([list(p) + [0] * (s - len(p))], jnp.int32)
+        oh = jnp.zeros((b,), jnp.float32).at[row].set(1.0)
+        out_d = pfn_d(toks, jnp.int32(len(p) - 1), oh,
+                      *flat, *[dense[n] for n in cn])
+        out_p = pfn_p(toks, jnp.int32(len(p) - 1), tables[row],
+                      *flat, *[pool[n] for n in cn])
+        dense = dict(zip(cn, out_d[1:]))
+        pool = dict(zip(cn, out_p[1:]))
+        np.testing.assert_array_equal(np.asarray(out_d[0]),
+                                      np.asarray(out_p[0]))
+
+    sfn_d, *_ = M.make_decode_step(cfg)
+    sfn_p, *_ = M.make_decode_step_paged(cfg)
+    seqs = [list(p) for p in prompts]
+    for _ in range(steps):
+        toks = jnp.asarray([[seq[-1]] for seq in seqs], jnp.int32)
+        pos = jnp.asarray([len(seq) - 1 for seq in seqs], jnp.int32)
+        out_d = sfn_d(toks, pos, *flat, *[dense[n] for n in cn])
+        out_p = sfn_p(toks, pos, tables, *flat, *[pool[n] for n in cn])
+        dense = dict(zip(cn, out_d[1:]))
+        pool = dict(zip(cn, out_p[1:]))
+        np.testing.assert_array_equal(np.asarray(out_d[0]),
+                                      np.asarray(out_p[0]))
+        for seq, row in zip(seqs, np.asarray(out_d[0])):
+            seq.append(int(row.argmax()))
+
+    vfn_d, *_ = M.make_decode_verify(cfg)
+    vfn_p, *_ = M.make_decode_verify_paged(cfg)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, k + 1)), jnp.int32)
+    pos = jnp.asarray([len(seq) - 1 for seq in seqs], jnp.int32)
+    out_d = vfn_d(toks, pos, *flat, *[dense[n] for n in cn])
+    out_p = vfn_p(toks, pos, tables, *flat, *[pool[n] for n in cn])
+    np.testing.assert_array_equal(np.asarray(out_d[0]), np.asarray(out_p[0]))
+
+
+def test_paged_decode_matrix_bitwise_matches_dense():
+    _assert_paged_matches_dense(
+        CFG, prompts=[[1, 2, 3, 4, 5], [9, 8, 7]], steps=6, s=24, blk=8)
+
+
+def test_paged_decode_gqa_and_pruned_plan_bitwise():
+    gqa = ModelConfig(name="gqa4", d_model=64, n_layers=2, n_heads=4,
+                      n_kv_heads=2, d_ff=96, max_seq=32)
+    _assert_paged_matches_dense(
+        gqa, prompts=[[5, 6, 7], [11, 12, 13, 14]], steps=4, s=16, blk=4)
+    pruned = ModelConfig(name="pp", d_model=64, n_layers=2, n_heads=4,
+                         n_kv_heads=2, d_ff=96, max_seq=32,
+                         layer_plan=[[4, 2, 96], [3, 2, 64]])
+    _assert_paged_matches_dense(
+        pruned, prompts=[[3, 1, 4, 1], [2, 7]], steps=4, s=16, blk=4)
+
+
+def test_paged_prefill_writes_only_owned_blocks():
+    """A paged admission must leave every pool block outside the admitted
+    row's table bitwise intact — the paged statement of mid-decode
+    admission safety (the table IS the isolation boundary)."""
+    cfg = CFG
+    b, s, blk = 3, 16, 4
+    n_blocks = b * (s // blk)
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    pfn, *_ = M.make_decode_prefill_paged(cfg)
+    shapes = M.paged_cache_shapes(cfg, n_blocks, blk)
+    rng = np.random.default_rng(0)
+    caches = {n: jnp.asarray(rng.normal(size=shapes[n]), jnp.float32)
+              for n in cn}
+    tables = _seq_tables(b, s, blk)
+    toks = jnp.asarray([[1, 2, 3] + [0] * (s - 3)], jnp.int32)
+    out = pfn(toks, jnp.int32(2), tables[1], *flat, *[caches[n] for n in cn])
+    new_caches = dict(zip(cn, out[1:]))
+    owned = set(np.asarray(tables[1]).tolist())
+    for n in cn:
+        before, after = np.asarray(caches[n]), np.asarray(new_caches[n])
+        for blk_id in range(n_blocks):
+            if blk_id in owned:
+                continue
+            np.testing.assert_array_equal(before[blk_id], after[blk_id])
+        assert not np.array_equal(before, after)
+    assert out[0].shape == (1, cfg.vocab_size)
+
+
+def test_paged_chunked_prefill_matches_monolithic_paged():
+    """Chunked paged admission (windows through the row's table) lands the
+    same pool bits and logits as the monolithic paged prefill."""
+    cfg = CFG
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11], [4, 4, 2, 1]]
+    b, s, blk, c = len(prompts), 16, 4, 8
+    n_blocks = b * (s // blk)
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+    tables = _seq_tables(b, s, blk)
+    mono = _paged_prefill_caches(cfg, flat, cn, prompts, tables,
+                                 n_blocks, blk, s)
+    cfn, *_ = M.make_decode_prefill_chunk_paged(cfg)
+    shapes = M.paged_cache_shapes(cfg, n_blocks, blk)
+    caches = {n: jnp.zeros(shapes[n], jnp.float32) for n in cn}
+    for row, p in enumerate(prompts):
+        start, logits = 0, None
+        while start < len(p):
+            take = min(c, len(p) - start)
+            window = list(p[start:start + take]) + [0] * (c - take)
+            out = cfn(jnp.asarray([window], jnp.int32), jnp.int32(start),
+                      jnp.int32(take - 1), tables[row],
+                      *flat, *[caches[n] for n in cn])
+            caches = dict(zip(cn, out[1:]))
+            logits = out[0]
+            start += take
+        assert logits is not None
+    # chunked == monolithic on the prompt positions of every owned block
+    # (pad positions past a short final window differ by construction —
+    # the monolithic prefill writes the full grid; both are dead slots)
+    for row, p in enumerate(prompts):
+        for n in cn:
+            got, want = np.asarray(caches[n]), np.asarray(mono[n])
+            for j in range(-(-len(p) // blk)):
+                blk_id = int(tables[row, j])
+                lo = j * blk
+                hi = min(len(p) - lo, blk)
+                np.testing.assert_array_equal(got[blk_id][:hi],
+                                              want[blk_id][:hi])
+    # and the continuation stream matches the monolithic pool's
+    sfn, *_ = M.make_decode_step_paged(cfg)
+    seqs_a = [list(p) for p in prompts]
+    seqs_b = [list(p) for p in prompts]
+    pool_a, pool_b = caches, mono
+    for _ in range(4):
+        toks_a = jnp.asarray([[sq[-1]] for sq in seqs_a], jnp.int32)
+        toks_b = jnp.asarray([[sq[-1]] for sq in seqs_b], jnp.int32)
+        pos = jnp.asarray([len(sq) - 1 for sq in seqs_a], jnp.int32)
+        out_a = sfn(toks_a, pos, tables, *flat, *[pool_a[n] for n in cn])
+        out_b = sfn(toks_b, pos, tables, *flat, *[pool_b[n] for n in cn])
+        pool_a = dict(zip(cn, out_a[1:]))
+        pool_b = dict(zip(cn, out_b[1:]))
+        for r in range(b):
+            ta = int(jnp.argmax(out_a[0][r]))
+            tb = int(jnp.argmax(out_b[0][r]))
+            assert ta == tb
+            seqs_a[r].append(ta)
+            seqs_b[r].append(tb)
+
+
+def test_paged_shared_prefix_reuse_skips_resident_chunks():
+    """The prefix-cache read path: a second row whose table aliases the
+    first row's full prefix blocks is admitted by prefilling ONLY its
+    non-resident suffix, and must decode exactly like a dense row that
+    prefilled the whole prompt. Shared blocks stay bitwise intact through
+    the alias row's admission and decode (reads never write; suffix and
+    generated tokens land in private blocks only)."""
+    cfg = CFG
+    blk, s = 4, 16
+    prefix = [7, 3, 9, 1, 5, 2, 8, 6]            # 2 full blocks
+    tail_a, tail_b = [11, 12, 13], [4, 10]
+    pa, pb = prefix + tail_a, prefix + tail_b
+    b = 2
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn, ln, cn = (M.param_names(cfg), M.lora_names(cfg), M.kv_cache_names(cfg))
+    flat = [params[k] for k in pn] + [lora[k] for k in ln]
+
+    # dense reference: both rows fully admitted
+    ref = _step_greedy_streams(cfg, flat, cn, [pa, pb], steps=5, s=s)
+
+    # paged: row 0 owns blocks 0..3; row 1 aliases the prefix blocks 0..1
+    # and owns private blocks 4..5 for its suffix + generated tokens
+    n_blocks = 6
+    tables = jnp.asarray([[0, 1, 2, 3], [0, 1, 4, 5]], jnp.int32)
+    pool = _paged_prefill_caches(cfg, flat, cn, [pa], tables[:1],
+                                 n_blocks, blk, s)
+    shared_before = {n: np.asarray(pool[n])[:2].copy() for n in cn}
+    # admit row 1: feed only the suffix window at start_pos = len(prefix)
+    cfn, *_ = M.make_decode_prefill_chunk_paged(cfg)
+    c = 8
+    window = tail_b + [0] * (c - len(tail_b))
+    out = cfn(jnp.asarray([window], jnp.int32), jnp.int32(len(prefix)),
+              jnp.int32(len(tail_b) - 1), tables[1],
+              *flat, *[pool[n] for n in cn])
+    pool = dict(zip(cn, out[1:]))
+    first_b = np.asarray(out[0][0])
+
+    sfn, *_ = M.make_decode_step_paged(cfg)
+    seqs = [list(pa), list(pb)]
+    streams = [[], []]
+    # row 1's first generated token comes from the suffix chunk's logits
+    streams[1].append(int(first_b.argmax()))
+    seqs[1].append(streams[1][0])
+    for _ in range(5):
+        toks = jnp.asarray([[sq[-1]] for sq in seqs], jnp.int32)
+        pos = jnp.asarray([len(sq) - 1 for sq in seqs], jnp.int32)
+        out = sfn(toks, pos, tables, *flat, *[pool[n] for n in cn])
+        pool = dict(zip(cn, out[1:]))
+        for r in range(b):
+            t = int(jnp.argmax(out[0][r]))
+            streams[r].append(t)
+            seqs[r].append(t)
+    assert streams[0][:5] == ref[0], "prefix-owner stream diverged"
+    assert streams[1][:5] == ref[1], "prefix-alias stream diverged"
+    for n in cn:
+        np.testing.assert_array_equal(np.asarray(pool[n])[:2],
+                                      shared_before[n])
+
+
+def test_paged_spec_verify_loop_matches_dense_stream():
+    """Greedy speculative decoding through the block pool — drafts,
+    rejections, logical rewind and all — reproduces the dense spec loop's
+    stream exactly (both equal the pure step-greedy reference)."""
+    cfg = CFG
+    prompts = [[1, 2, 3, 4, 5], [9, 8, 7]]
+    steps, K, s, blk = 8, 3, 28, 4
+    params = _params(cfg)
+    lora = _nonzero_lora(cfg)
+    pn = M.param_names(cfg)
+    ln = M.lora_names(cfg)
+    cn = M.kv_cache_names(cfg)
+    tflat = [params[k] for k in pn] + [lora[k] for k in ln]
+    key = jax.random.PRNGKey(99)
+    dl = {k: (v + 0.01 * jax.random.normal(jax.random.fold_in(key, i),
+                                           v.shape)
+              if k.endswith("lora_b") else v)
+          for i, (k, v) in enumerate(lora.items())}
+    dflat = [params[k] for k in pn] + [dl[k] for k in ln]
+    dense, _, _ = _spec_greedy_streams(cfg, tflat, dflat, cn, prompts,
+                                       steps, s, K)
+    tables = _seq_tables(len(prompts), s, blk)
+    paged, _, accepted = _spec_greedy_streams(cfg, tflat, dflat, cn, prompts,
+                                              steps, s, K,
+                                              tables=tables, blk=blk)
+    assert paged == dense, f"paged spec stream diverged: {paged} vs {dense}"
+    assert accepted > 0, "no draft was ever accepted across the paged run"

@@ -102,6 +102,42 @@ fn serve_bursty_workload<E: DecodeEngine>(
     Ok(srv.stats)
 }
 
+/// Shared-system-prompt workload (DESIGN.md §2f): bursts of requests that
+/// share one long system prefix (suffix differs per user), through either
+/// the dense-grid engine (4 rows × 64 slots) or the paged block-pool
+/// engine (32 × 8-slot blocks — identical cache bytes). The paged entry
+/// must show prefix hits, more concurrent rows, and zero copy-on-write
+/// forks; the dense entry re-prefills the shared prefix every admission.
+fn serve_shared_prefix_workload(
+    paged: bool,
+    sys: &str,
+    n: usize,
+    budget: usize,
+) -> anyhow::Result<ServerStats> {
+    let engine = if paged {
+        SimEngine::with_paged(32, 8, 32, vec![16, 64])?
+    } else {
+        SimEngine::with_prefill(4, vec![16, 64], false)
+    };
+    let mut srv = Server::new(engine, 7);
+    srv.set_prefill_budget(Some(budget));
+    let mut sent = 0;
+    while sent < n {
+        for u in 0..8.min(n - sent) {
+            srv.enqueue(
+                format!("{sys}user {u}"),
+                SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 4 },
+            );
+            sent += 1;
+        }
+        for _ in 0..6 {
+            srv.step()?;
+        }
+    }
+    srv.drain()?;
+    Ok(srv.stats)
+}
+
 /// One serving measurement: which decode path it exercised (`reforward` /
 /// `kvcache` / `speculative`) and through which engine (`pjrt`, or `sim`
 /// when the scheduler ran without artifacts).
@@ -156,7 +192,16 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
                     "padded_prefill_tokens",
                     Json::num(st.prefill.padded_prefill_tokens as f64),
                 ),
+                ("peak_in_flight", Json::num(st.peak_in_flight as f64)),
             ];
+            // §2f block-pool counters, present only on the paged path
+            if let Some(pg) = &st.paged {
+                fields.push(("prefix_hit_rate", Json::num(pg.prefix_hit_rate())));
+                fields.push(("prefix_hit_tokens", Json::num(pg.prefix_hit_tokens as f64)));
+                fields.push(("blocks_in_use", Json::num(pg.blocks_in_use as f64)));
+                fields.push(("pool_blocks", Json::num(pg.pool_blocks as f64)));
+                fields.push(("cow_copies", Json::num(pg.cow_copies as f64)));
+            }
             if let Some((k, p)) = e.spec_cfg {
                 fields.push(("draft_k", Json::num(k as f64)));
                 if p.is_finite() {
@@ -295,6 +340,15 @@ fn main() -> anyhow::Result<()> {
         ] {
             let st = serve_bursty_workload(SimEngine::with_prefill(4, ladder, stall), 48, 16)?;
             entries.push(ServeEntry { path, engine: "sim", requests: 48, spec_cfg: None, stats: st });
+        }
+        // the shared-prefix A/B (§2f): N users × one system prompt, dense
+        // grid vs paged block pool at identical cache bytes — the paged
+        // entry carries the prefix_hit_rate / blocks_in_use / cow_copies
+        // counters and a higher peak_in_flight
+        let sysp = "system: you are a terse helpful assistant. ";
+        for (path, paged) in [("prefix-dense", false), ("prefix-paged", true)] {
+            let st = serve_shared_prefix_workload(paged, sysp, 32, 16)?;
+            entries.push(ServeEntry { path, engine: "sim", requests: 32, spec_cfg: None, stats: st });
         }
         emit_bench_serve(&entries)?;
     }
@@ -444,6 +498,24 @@ fn main() -> anyhow::Result<()> {
                     stats: serve_workload(SimEngine::new(4), 64, &[])?,
                 });
             }
+        }
+        // pooled block caches through the real scheduler (§2f), when the
+        // decode_*_paged_tiny family is in the artifact dir
+        match Generator::with_path_paged(
+            &rt,
+            "logits_tiny",
+            &[&params, &lora],
+            Some(DecodePath::KvCache),
+            true,
+        ) {
+            Ok(gen) => entries.push(ServeEntry {
+                path: "kvcache-paged",
+                engine: "pjrt",
+                requests: n,
+                spec_cfg: None,
+                stats: serve_workload(gen, n, &[])?,
+            }),
+            Err(e) => println!("(paged serve bench skipped: {e})"),
         }
         // draft small, verify large through the real scheduler: the
         // pruned proxy (sliced base, zero factors) drafts for the target;

@@ -4,7 +4,7 @@
 
 use super::ExpCtx;
 use crate::coordinator::adapters::AdapterId;
-use crate::coordinator::generate::{Generator, SampleCfg};
+use crate::coordinator::generate::{DecodePath, Generator, SampleCfg};
 use crate::coordinator::pipeline::ensure_base;
 use crate::coordinator::train::TrainSession;
 use crate::data::instruct::{Dataset, InstructGen};
@@ -118,13 +118,17 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     // prefill column: monolithic pad-to-S vs the §2e chunked bucket
     // ladder; padded_prefill_tokens is the admission waste counter and
     // the tick percentiles are the sim-time TTFT/ITL distributions
+    // prefix_hit_rate/blocks_in_use/cow_copies: the §2f block-pool
+    // counters, blank off the paged path (cow_copies must read 0 — the
+    // serving flow shares only full immutable prefix blocks)
     let mut scsv = Csv::create(
         ctx.out_dir.join("tab8_serving.csv"),
         &["method", "decode_path", "prefill", "adapter", "requests",
           "tokens_per_sec", "mean_ttft_ms", "mean_latency_ms",
           "mean_occupancy", "mean_queue_wait_ms", "peak_queue_depth",
           "padded_prefill_tokens", "ttft_p95_ticks", "itl_p95_ticks",
-          "acceptance_rate", "draft_steps", "verify_steps"],
+          "acceptance_rate", "draft_steps", "verify_steps",
+          "prefix_hit_rate", "blocks_in_use", "cow_copies"],
     )?;
     let serve_requests = workload_steps * 2;
     let mut serve_rows = |method: &str,
@@ -152,6 +156,14 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             ),
             None => (String::new(), String::new(), String::new()),
         };
+        let (hit_rate, blocks, cow) = match &st.paged {
+            Some(p) => (
+                format!("{:.3}", p.prefix_hit_rate()),
+                p.blocks_in_use.to_string(),
+                p.cow_copies.to_string(),
+            ),
+            None => (String::new(), String::new(), String::new()),
+        };
         scsv.row(&crate::csv_row![
             method,
             decode_path,
@@ -169,7 +181,10 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             format!("{:.0}", st.itl_tick_p(95.0)),
             rate,
             dsteps,
-            vsteps
+            vsteps,
+            hit_rate,
+            blocks,
+            cow
         ])?;
         for (adapter, lane) in &st.per_adapter {
             let lane_rate = if st.spec.is_some() {
@@ -193,6 +208,9 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 "",
                 "",
                 lane_rate,
+                "",
+                "",
+                "",
                 "",
                 ""
             ])?;
@@ -223,6 +241,31 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
             srv.drain()?;
             serve_rows(&format!("{method} (pad-to-S)"), &decode_path, "monolithic", &srv)?;
+        }
+        // the §2f A/B: the same workload through the paged decode family
+        // (pooled block caches + shared-prefix reuse) when it is in the
+        // suite, adjacent to the dense rows so the pool counters and
+        // latency deltas read off directly
+        let paged_ready = ctx.rt.load(&format!("decode_prefill_paged_{base}")).is_ok()
+            && ctx.rt.load(&format!("decode_step_paged_{base}")).is_ok();
+        if paged_ready {
+            let gen = Generator::with_path_paged(
+                ctx.rt,
+                &format!("logits_{base}"),
+                &[&params, &lora],
+                Some(DecodePath::KvCache),
+                true,
+            )?;
+            let prefill = if gen.chunked_prefill() { "chunked" } else { "monolithic" };
+            let mut srv = Server::new(gen, ctx.seed);
+            enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
+            srv.drain()?;
+            serve_rows(&format!("{method} (paged)"), "kvcache-paged", prefill, &srv)?;
+        } else {
+            log::info(format!(
+                "tab8: no decode_*_paged_{base} family registered; skipping \
+                 the paged serving row"
+            ));
         }
     }
 

@@ -25,7 +25,7 @@
 //! every caller are identical across all of them.
 
 use super::adapters::{AdapterId, AdapterStore};
-use super::kvcache::{next_bucket, KvDecoder, PrefillStats};
+use super::kvcache::{next_bucket, KvDecoder, PagedStats, PrefillStats};
 use super::speculative::{SpecDecoder, SpecFeed, SpecRowOut, SpecStats};
 use crate::runtime::{Artifact, Runtime, Session, SlotGroup};
 use crate::tensor::{Tensor, TensorStore};
@@ -168,6 +168,22 @@ impl<'r> Generator<'r> {
         stores: &[&TensorStore],
         path: Option<DecodePath>,
     ) -> Result<Generator<'r>> {
+        Generator::with_path_paged(rt, artifact, stores, path, false)
+    }
+
+    /// Like [`Generator::with_path`] with the paged-cache toggle
+    /// (DESIGN.md §2f): `paged` loads the `decode_*_paged_<model>`
+    /// family — pooled block caches behind a per-row block table, with
+    /// shared-prefix reuse on chunked admission. On auto path selection
+    /// a missing paged family falls back to reforward, exactly like a
+    /// missing dense pair; `Some(DecodePath::KvCache)` hard-fails.
+    pub fn with_path_paged(
+        rt: &'r Runtime,
+        artifact: &str,
+        stores: &[&TensorStore],
+        path: Option<DecodePath>,
+        paged: bool,
+    ) -> Result<Generator<'r>> {
         let art = rt.load(artifact)?;
         let sess = Session::new(rt, art.clone(), stores)?;
         let vocab = art.meta.config.vocab_size;
@@ -179,6 +195,13 @@ impl<'r> Generator<'r> {
             .strip_prefix("logits_")
             .map(String::from)
             .unwrap_or_else(|| art.meta.config.name.clone());
+        let load = |rt, model: &str, stores| {
+            if paged {
+                KvDecoder::try_new_paged(rt, model, stores)
+            } else {
+                KvDecoder::try_new(rt, model, stores)
+            }
+        };
         let kv = match path {
             Some(DecodePath::Reforward) => None,
             Some(DecodePath::Speculative) => bail!(
@@ -186,11 +209,12 @@ impl<'r> Generator<'r> {
                  construct via Generator::with_speculative"
             ),
             Some(DecodePath::KvCache) => Some(
-                KvDecoder::try_new(rt, &model, stores)?.with_context(|| {
-                    format!("decode artifact pair for '{model}' not registered")
+                load(rt, &model, stores)?.with_context(|| {
+                    let family = if paged { "paged decode family" } else { "decode artifact pair" };
+                    format!("{family} for '{model}' not registered")
                 })?,
             ),
-            None => KvDecoder::try_new(rt, &model, stores)?,
+            None => load(rt, &model, stores)?,
         };
         let kv = match kv {
             // the decode grid must match the logits artifact the Generator
@@ -254,12 +278,32 @@ impl<'r> Generator<'r> {
         drafter_model: &str,
         drafter_stores: &[&TensorStore],
     ) -> Result<Generator<'r>> {
+        Generator::with_speculative_paged(rt, artifact, stores, drafter_model, drafter_stores, false)
+    }
+
+    /// [`Generator::with_speculative`] with the paged-cache toggle: the
+    /// target trio loads its `decode_*_paged_*` family; the drafter pages
+    /// too when its own family is registered and stays dense otherwise
+    /// (the grids match either way — paging changes cache layout, not
+    /// the decode contract).
+    pub fn with_speculative_paged(
+        rt: &'r Runtime,
+        artifact: &str,
+        stores: &[&TensorStore],
+        drafter_model: &str,
+        drafter_stores: &[&TensorStore],
+        paged: bool,
+    ) -> Result<Generator<'r>> {
         let gen = Generator::with_path(rt, artifact, stores, Some(DecodePath::Reforward))?;
         let model = artifact
             .strip_prefix("logits_")
             .map(String::from)
             .unwrap_or_else(|| gen.art.meta.config.name.clone());
-        let spec = SpecDecoder::try_new(rt, &model, stores, drafter_model, drafter_stores)?;
+        let spec = if paged {
+            SpecDecoder::try_new_paged(rt, &model, stores, drafter_model, drafter_stores)?
+        } else {
+            SpecDecoder::try_new(rt, &model, stores, drafter_model, drafter_stores)?
+        };
         ensure!(
             spec.batch_size() == gen.batch_size() && spec.seq_len() == gen.seq_len(),
             "speculative grid ({}, {}) != logits grid ({}, {})",
@@ -422,6 +466,25 @@ impl<'r> Generator<'r> {
         }
     }
 
+    /// Whether this generator decodes through pooled block caches
+    /// (DESIGN.md §2f). False on the dense kv and reforward paths.
+    pub fn paged(&self) -> bool {
+        self.paged_stats().is_some()
+    }
+
+    /// Block-pool counters (prefix hits, copy-on-write forks, pool
+    /// utilisation) — `None` off the paged path.
+    pub fn paged_stats(&self) -> Option<PagedStats> {
+        let st = self.state.borrow();
+        if let Some(kv) = st.kv.as_ref() {
+            kv.paged_stats()
+        } else if let Some(spec) = st.spec.as_ref() {
+            spec.paged_stats()
+        } else {
+            None
+        }
+    }
+
     pub fn batch_size(&self) -> usize {
         self.art.meta.batch()
     }
@@ -525,7 +588,23 @@ impl<'r> Generator<'r> {
         let deferred = defer
             && st.spec.is_none()
             && st.kv.as_ref().map_or(false, |kv| kv.chunked());
-        if !deferred {
+        let mut resident = 0;
+        if deferred {
+            // reserve the row's cache geometry up front: on the paged path
+            // this plans the block table (consulting the prefix index, so
+            // resident shared-prefix tokens are never re-fed) and holds the
+            // blocks until admission_finish/abort; dense planning is free
+            let kv = st.kv.as_mut().expect("deferred implies a kv decoder");
+            match kv.admission_start(row, &ids) {
+                Ok(r) => resident = r,
+                Err(e) => {
+                    if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
+                        ad.release(id).expect("acquired above");
+                    }
+                    return Err(e);
+                }
+            }
+        } else {
             // fill the caches first: on failure the row stays free
             let kv_adapter = adapter.map(|id| id.ix() as i32);
             let admitted = if let Some(spec) = st.spec.as_mut() {
@@ -544,7 +623,7 @@ impl<'r> Generator<'r> {
                 return Err(e);
             }
         }
-        let fed = if deferred { 0 } else { start };
+        let fed = if deferred { resident } else { start };
         st.rows[row] = Some(RowState {
             seq: ids,
             start,
@@ -614,6 +693,7 @@ impl<'r> Generator<'r> {
                             "chunked admission of row {row} failed mid-window: {e:#}"
                         ));
                         st.rows[row] = None;
+                        kv.abort_admission(row);
                         if let (Some(ad), Some(id)) = (st.adapters.as_mut(), adapter) {
                             ad.release(id).expect("pending row held a pin");
                         }
@@ -624,7 +704,7 @@ impl<'r> Generator<'r> {
             }
             if let Some(r) = st.rows[row].as_mut() {
                 if !r.admitted && r.fed == r.seq.len() {
-                    kv.slots.admit(row, r.seq.len())?;
+                    kv.admission_finish(row, &r.seq)?;
                     r.admitted = true;
                     out.completed.push(row);
                 }
@@ -799,6 +879,10 @@ impl<'r> Generator<'r> {
             if let Some(spec) = st.spec.as_mut() {
                 spec.evict(row).expect("occupied row has cache slots");
             }
+        } else if let Some(kv) = st.kv.as_mut() {
+            // taken mid-chunked-admission: no slots ledger entry, but a
+            // paged row already holds planned blocks — release them
+            kv.abort_admission(row);
         }
         if let (Some(ad), Some(id)) = (st.adapters.as_mut(), r.adapter) {
             ad.release(id).expect("row held an adapter reference");

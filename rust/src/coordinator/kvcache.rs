@@ -29,12 +29,21 @@
 //! monolithic pad-to-S grid, so a short prompt costs its covering bucket
 //! and a long one can be paced across scheduler ticks
 //! (`Generator::prefill_tick`) without ever freezing the decoding batch.
+//!
+//! The paged family (DESIGN.md §2f) replaces the dense `(B, S, ...)` cache
+//! rows with a fixed pool of `(n_blocks, block, ...)` blocks behind
+//! per-row block tables: [`BlockPool`] refcounts the physical blocks,
+//! [`PrefixIndex`] maps chain-hashed full-block prompt prefixes to
+//! resident blocks so `admit_chunked` skips windows whose prefix another
+//! row already computed, and [`PagedKv`] carries each row's table. Same
+//! `KvDecoder` surface, probing `decode_*_paged_<model>` artifact names.
 
 use crate::runtime::{Runtime, Session};
 use crate::tensor::{Dtype, Tensor, TensorStore};
 use crate::tokenizer::{pad_to, PAD};
 use crate::util::log;
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
 
 /// Chunked-prefill bucket ladder for an S-long decode grid — the Rust
 /// mirror of aot.py's `chunk_ladder`. The shared formula IS the discovery
@@ -132,6 +141,616 @@ impl PrefillStats {
                 + other.padded_prefill_tokens,
             chunks: self.chunks + other.chunks,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV cache (DESIGN.md §2f): a fixed pool of `block`-slot cache blocks
+// behind a per-row block table, with shared-prefix reuse keyed by
+// prompt-chunk hash. Pure host bookkeeping — the device side is the
+// `decode_*_paged` artifact family, whose pooled `(n_blocks, block, ...)`
+// caches are addressed through the int32 block-table input these
+// structures maintain.
+// ---------------------------------------------------------------------------
+
+/// Chained FNV-1a 64 over a token run: `prev == 0` starts a fresh hash,
+/// otherwise the digest continues from the preceding prefix's hash, so
+/// each full block's key commits to the *entire* token prefix ending at
+/// it. Shared with the prefix index and its tests; collisions are real
+/// (64-bit) but harmless — [`PrefixIndex::lookup`] compares the stored
+/// tokens and falls back to a full prefill on mismatch.
+pub fn prefix_chunk_hash(prev: u64, tokens: &[i32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = if prev == 0 { OFFSET } else { prev };
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// The physical block allocator: refcounted fixed-size cache blocks. A
+/// block is *in use* while any row or the prefix index holds a reference;
+/// at refcount zero it returns to the free list. `pinned` blocks survive
+/// cache-pressure eviction ([`BlockPool::evict`] refuses them) — the
+/// operator knob for hot shared prefixes. Copy-on-write ([`BlockPool::cow`])
+/// forks a shared block into a fresh private one; in the serving flow
+/// writes never target shared blocks (see [`PagedKv`]), so `cow_copies`
+/// staying at zero is itself a checked invariant.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    block: usize,
+    refcnt: Vec<u32>,
+    pinned: Vec<bool>,
+    free: Vec<usize>,
+    cow_copies: usize,
+}
+
+impl BlockPool {
+    pub fn new(n_blocks: usize, block: usize) -> Result<BlockPool> {
+        ensure!(n_blocks >= 1 && block >= 1, "kvcache: degenerate block pool");
+        Ok(BlockPool {
+            block,
+            refcnt: vec![0; n_blocks],
+            pinned: vec![false; n_blocks],
+            // pop from the back: low ids first, deterministic for tests
+            free: (0..n_blocks).rev().collect(),
+            cow_copies: 0,
+        })
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.refcnt.len()
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks() - self.free.len()
+    }
+
+    pub fn cow_copies(&self) -> usize {
+        self.cow_copies
+    }
+
+    pub fn refcount(&self, id: usize) -> u32 {
+        self.refcnt.get(id).copied().unwrap_or(0)
+    }
+
+    pub fn is_pinned(&self, id: usize) -> bool {
+        self.pinned.get(id).copied().unwrap_or(false)
+    }
+
+    /// Claim a free block (refcount 1), `None` when the pool is exhausted
+    /// — the caller decides between reclaiming index-only blocks and
+    /// failing the admission.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refcnt[id], 0);
+        self.refcnt[id] = 1;
+        self.pinned[id] = false;
+        Some(id)
+    }
+
+    /// Take an additional reference on an allocated block (a row reusing
+    /// a resident prefix block, or the index retaining a registered one).
+    pub fn retain(&mut self, id: usize) -> Result<()> {
+        ensure!(self.refcount(id) > 0, "kvcache: retain of free block {id}");
+        self.refcnt[id] += 1;
+        Ok(())
+    }
+
+    /// Drop one reference; at zero the block returns to the free list
+    /// (and loses its pin — an unreferenced block is nobody's to pin).
+    pub fn release(&mut self, id: usize) -> Result<()> {
+        ensure!(self.refcount(id) > 0, "kvcache: release of free block {id}");
+        self.refcnt[id] -= 1;
+        if self.refcnt[id] == 0 {
+            self.pinned[id] = false;
+            self.free.push(id);
+        }
+        Ok(())
+    }
+
+    /// Shield an allocated block from cache-pressure [`BlockPool::evict`].
+    pub fn pin(&mut self, id: usize) -> Result<()> {
+        ensure!(self.refcount(id) > 0, "kvcache: pin of free block {id}");
+        self.pinned[id] = true;
+        Ok(())
+    }
+
+    pub fn unpin(&mut self, id: usize) -> Result<()> {
+        ensure!(self.refcount(id) > 0, "kvcache: unpin of free block {id}");
+        self.pinned[id] = false;
+        Ok(())
+    }
+
+    /// Cache-pressure reclaim: force an allocated block back to the free
+    /// list regardless of its refcount. Refuses pinned blocks — eviction
+    /// policy must never take a prefix the operator marked hot. Callers
+    /// ([`PrefixIndex::reclaim`]) only evict blocks whose sole reference
+    /// is their own, so no row ever loses a live block underneath it.
+    pub fn evict(&mut self, id: usize) -> Result<()> {
+        ensure!(self.refcount(id) > 0, "kvcache: evict of free block {id}");
+        ensure!(!self.pinned[id], "kvcache: refusing to evict pinned block {id}");
+        self.refcnt[id] = 0;
+        self.free.push(id);
+        Ok(())
+    }
+
+    /// Copy-on-write: make the caller's reference to `id` exclusively
+    /// writable. An already-exclusive block is returned as-is; a shared
+    /// one loses this caller's reference and a fresh block is allocated
+    /// in its place (`cow_copies` counts the forks). Errors when the fork
+    /// needs a block the pool cannot supply.
+    pub fn cow(&mut self, id: usize) -> Result<usize> {
+        ensure!(self.refcount(id) > 0, "kvcache: cow of free block {id}");
+        if self.refcnt[id] == 1 {
+            return Ok(id);
+        }
+        let fresh = self
+            .alloc()
+            .with_context(|| format!("kvcache: pool exhausted forking shared block {id}"))?;
+        self.refcnt[id] -= 1;
+        self.cow_copies += 1;
+        Ok(fresh)
+    }
+}
+
+/// One registered full-block prefix: the chain hash of `tokens` maps to
+/// the physical `block` holding its last `block_size` positions. Tokens
+/// are stored so a hash collision is detected by comparison, never
+/// trusted.
+#[derive(Debug, Clone)]
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    block: usize,
+    stamp: u64,
+}
+
+/// The shared-prefix index: chain-hash of every registered full-block
+/// prompt prefix → the resident physical block, so admission can map the
+/// longest already-computed prefix of a new prompt onto existing blocks
+/// instead of re-prefilling it. The index holds its own reference on
+/// every registered block, keeping prefixes resident across row eviction;
+/// [`PrefixIndex::reclaim`] releases cold index-only blocks under pool
+/// pressure (LRU by lookup stamp).
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    map: HashMap<u64, PrefixEntry>,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Register the full blocks of `tokens` as resident in `blocks` (the
+    /// owning row's leading table entries). Each *newly* inserted entry
+    /// retains its block; a hash already present keeps its existing entry
+    /// — when the stored tokens match, the content is identical by
+    /// construction, and when they differ it is a collision the lookup
+    /// side detects.
+    pub fn insert(
+        &mut self,
+        pool: &mut BlockPool,
+        tokens: &[i32],
+        blocks: &[usize],
+    ) -> Result<()> {
+        let bs = pool.block_size();
+        let full = (tokens.len() / bs).min(blocks.len());
+        let mut h = 0u64;
+        for j in 0..full {
+            h = prefix_chunk_hash(h, &tokens[j * bs..(j + 1) * bs]);
+            if self.map.contains_key(&h) {
+                continue;
+            }
+            pool.retain(blocks[j])?;
+            self.clock += 1;
+            self.map.insert(
+                h,
+                PrefixEntry {
+                    tokens: tokens[..(j + 1) * bs].to_vec(),
+                    block: blocks[j],
+                    stamp: self.clock,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// The longest resident full-block prefix of `tokens`: the physical
+    /// block run, longest-first-match walking one block at a time. A hash
+    /// hit whose stored tokens differ — a collision — stops the walk, so
+    /// the caller prefills from there (never trusting the hash alone).
+    /// Bumps the LRU stamp of every entry on the run.
+    pub fn lookup(&mut self, block_size: usize, tokens: &[i32]) -> Vec<usize> {
+        let mut run = vec![];
+        let mut h = 0u64;
+        for j in 0..tokens.len() / block_size {
+            h = prefix_chunk_hash(h, &tokens[j * block_size..(j + 1) * block_size]);
+            match self.map.get_mut(&h) {
+                Some(e) if e.tokens == tokens[..(j + 1) * block_size] => {
+                    self.clock += 1;
+                    e.stamp = self.clock;
+                    run.push(e.block);
+                }
+                _ => break,
+            }
+        }
+        run
+    }
+
+    /// Release cold index-only entries (their block's sole reference is
+    /// the index's own, and the block is not pinned) until `need` blocks
+    /// have been freed; returns how many were. Dropping a mid-chain entry
+    /// can orphan its suffix entries — they become unreachable, never get
+    /// their stamps bumped, and age into the next reclaim's coldest
+    /// candidates, so the index is self-cleaning under sustained pressure.
+    pub fn reclaim(&mut self, pool: &mut BlockPool, need: usize) -> usize {
+        let mut cold: Vec<(u64, u64, usize)> = self
+            .map
+            .iter()
+            .filter(|(_, e)| pool.refcount(e.block) == 1 && !pool.is_pinned(e.block))
+            .map(|(h, e)| (e.stamp, *h, e.block))
+            .collect();
+        cold.sort_unstable();
+        let mut freed = 0;
+        for (_, h, block) in cold {
+            if freed >= need {
+                break;
+            }
+            self.map.remove(&h);
+            if pool.release(block).is_ok() {
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Drop every entry, releasing the index's references.
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        for (_, e) in self.map.drain() {
+            let _ = pool.release(e.block);
+        }
+    }
+
+    #[cfg(test)]
+    /// Test hook: plant an entry whose stored tokens need not hash to
+    /// `hash` — the only way to exercise the collision path without
+    /// forging a real 64-bit FNV collision.
+    fn inject(&mut self, hash: u64, tokens: Vec<i32>, block: usize) {
+        self.clock += 1;
+        self.map.insert(hash, PrefixEntry { tokens, block, stamp: self.clock });
+    }
+}
+
+/// Paged-decode counters, surfaced through `ServerStats` / the serving
+/// benches / `tab8_serving.csv`.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PagedStats {
+    /// prefix-index lookups (one per prefix-eligible admission)
+    pub lookups: usize,
+    /// of those, lookups that mapped >= 1 resident block
+    pub prefix_hits: usize,
+    /// prompt tokens admitted from resident blocks instead of prefill
+    pub prefix_hit_tokens: usize,
+    /// copy-on-write forks (zero in the serving flow — writes never
+    /// target shared blocks; see [`PagedKv`])
+    pub cow_copies: usize,
+    /// pool blocks currently referenced by rows or the prefix index
+    pub blocks_in_use: usize,
+    pub pool_blocks: usize,
+}
+
+impl PagedStats {
+    /// Fraction of prefix-eligible admissions that reused resident blocks.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        self.prefix_hits as f64 / self.lookups.max(1) as f64
+    }
+
+    /// Fraction of the pool currently in use.
+    pub fn utilization(&self) -> f64 {
+        self.blocks_in_use as f64 / self.pool_blocks.max(1) as f64
+    }
+}
+
+/// One admitted row's view of the pool: its physical block run, of which
+/// the first `shared` were taken resident from the prefix index at
+/// admission (the row holds its own reference on those too).
+#[derive(Debug, Clone)]
+struct PagedRow {
+    blocks: Vec<usize>,
+    shared: usize,
+}
+
+/// Per-row block tables over a [`BlockPool`] + [`PrefixIndex`]: the host
+/// side of the paged decode contract. Key invariant (why `cow_copies`
+/// stays zero in the serving flow): a block is shared only while it is
+/// *full* and covers positions `< len - 1` of every row referencing it —
+/// [`PagedKv::plan_admit`] caps the resident run at `(len-1)/block`
+/// blocks so the final prefill window (which produces the frontier
+/// logits) always runs privately, and [`PagedKv::register`] only indexes
+/// blocks fully below the frontier. Every subsequent write (chunk windows
+/// from the resident boundary, decode/verify steps at `pos >= len - 1`)
+/// therefore lands in privately-allocated blocks. [`PagedKv::ensure_writable`]
+/// enforces the invariant anyway — a write aimed at a shared block forks
+/// it copy-on-write and counts it, so a violation is visible, not silent.
+#[derive(Debug)]
+pub struct PagedKv {
+    pool: BlockPool,
+    index: PrefixIndex,
+    rows: Vec<Option<PagedRow>>,
+    blocks_per_row: usize,
+    seq: usize,
+    lookups: usize,
+    prefix_hits: usize,
+    prefix_hit_tokens: usize,
+}
+
+impl PagedKv {
+    pub fn new(n_blocks: usize, block: usize, batch: usize, seq: usize) -> Result<PagedKv> {
+        ensure!(
+            block >= 1 && seq >= block && seq % block == 0,
+            "kvcache: seq {seq} is not a whole number of {block}-slot blocks"
+        );
+        Ok(PagedKv {
+            pool: BlockPool::new(n_blocks, block)?,
+            index: PrefixIndex::new(),
+            rows: vec![None; batch],
+            blocks_per_row: seq / block,
+            seq,
+            lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+        })
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    pub fn blocks_per_row(&self) -> usize {
+        self.blocks_per_row
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    pub fn batch_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    /// Non-binding admission probe: how many *private* blocks a prompt of
+    /// `tokens` growing to `need_len` positions would still need after
+    /// shared-prefix credit — the scheduler's keep-queued-vs-admit signal
+    /// (conservative: reclaimable index-only blocks are not counted as
+    /// free). Bumps the prefix index's LRU stamps; allocates and retains
+    /// nothing.
+    pub fn probe(&mut self, tokens: &[i32], need_len: usize) -> usize {
+        if tokens.is_empty() {
+            return 0;
+        }
+        let bs = self.pool.block_size();
+        let len = tokens.len().min(self.seq);
+        let need = need_len.clamp(len, self.seq);
+        let want = (need + bs - 1) / bs;
+        let resident = self
+            .index
+            .lookup(bs, &tokens[..len])
+            .len()
+            .min((len - 1) / bs);
+        want - resident
+    }
+
+    /// Plan a row's block table for a `tokens`-long prompt that will grow
+    /// to at most `need_len` positions (clamped to the grid; the real
+    /// decoder passes the full grid, the serving simulator passes
+    /// prompt + max_new to model capacity). With `use_prefix`, the
+    /// longest resident full-block prefix — capped at `(len-1)/block`
+    /// blocks so the final window always runs — is mapped in by
+    /// reference; the remainder is privately allocated, reclaiming cold
+    /// index-only blocks under pool pressure. Returns the resident token
+    /// count (0 = full prefill needed); on exhaustion the row is left
+    /// unplanned and every taken reference released.
+    pub fn plan_admit(
+        &mut self,
+        row: usize,
+        tokens: &[i32],
+        need_len: usize,
+        use_prefix: bool,
+    ) -> Result<usize> {
+        let slot = self
+            .rows
+            .get(row)
+            .with_context(|| format!("kvcache: paged row {row} out of range"))?;
+        ensure!(slot.is_none(), "kvcache: paged plan for occupied row {row}");
+        ensure!(
+            !tokens.is_empty() && tokens.len() <= self.seq,
+            "kvcache: prompt of {} tokens does not fit the {}-slot paged grid",
+            tokens.len(),
+            self.seq
+        );
+        let bs = self.pool.block_size();
+        let need = need_len.clamp(tokens.len(), self.seq);
+        let want = (need + bs - 1) / bs;
+        let mut blocks = vec![];
+        let mut shared = 0;
+        if use_prefix {
+            self.lookups += 1;
+            blocks = self.index.lookup(bs, tokens);
+            // the final prefill window must always run — it carries the
+            // frontier logits and the first decode step rewrites pos
+            // len-1 — so the frontier block is never taken resident
+            blocks.truncate((tokens.len() - 1) / bs);
+            shared = blocks.len();
+            if shared > 0 {
+                self.prefix_hits += 1;
+                self.prefix_hit_tokens += shared * bs;
+            }
+            for &id in &blocks {
+                self.pool.retain(id)?;
+            }
+        }
+        while blocks.len() < want {
+            match self.pool.alloc() {
+                Some(id) => blocks.push(id),
+                None => {
+                    if self.index.reclaim(&mut self.pool, want - blocks.len()) == 0 {
+                        for &id in &blocks {
+                            let _ = self.pool.release(id);
+                        }
+                        bail!(
+                            "kvcache: block pool exhausted (row {row} needs {want} \
+                             blocks, 0 free, nothing reclaimable)"
+                        );
+                    }
+                }
+            }
+        }
+        self.rows[row] = Some(PagedRow { blocks, shared });
+        Ok(shared * bs)
+    }
+
+    /// Register a freshly-prefilled row's prompt in the prefix index:
+    /// every full block strictly below the frontier (`(len-1)/block` of
+    /// them) becomes resident for future admissions. The frontier block
+    /// is deliberately excluded — the first decode step rewrites position
+    /// len-1, and shared blocks must never be written.
+    pub fn register(&mut self, row: usize, tokens: &[i32]) -> Result<()> {
+        let r = self
+            .rows
+            .get(row)
+            .and_then(|r| r.as_ref())
+            .with_context(|| format!("kvcache: register of unplanned paged row {row}"))?;
+        let bs = self.pool.block_size();
+        let full = tokens.len().saturating_sub(1) / bs;
+        let blocks = r.blocks[..full.min(r.blocks.len())].to_vec();
+        self.index.insert(&mut self.pool, &tokens[..full * bs], &blocks)
+    }
+
+    /// The row's block table padded to the full table width with block 0
+    /// (positions beyond the planned extent are never written, and reads
+    /// are clamped + masked device-side).
+    pub fn table_i32(&self, row: usize) -> Option<Vec<i32>> {
+        self.rows.get(row)?.as_ref().map(|r| {
+            let mut t: Vec<i32> = r.blocks.iter().map(|&b| b as i32).collect();
+            t.resize(self.blocks_per_row, 0);
+            t
+        })
+    }
+
+    /// The whole-grid `(B, S/block)` table for step/verify calls; rows
+    /// without a planned table feed zeros (off-grid dummies write nothing).
+    pub fn grid_table_i32(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.rows.len() * self.blocks_per_row);
+        for row in 0..self.rows.len() {
+            match self.table_i32(row) {
+                Some(t) => out.extend(t),
+                None => out.extend(std::iter::repeat(0).take(self.blocks_per_row)),
+            }
+        }
+        out
+    }
+
+    /// Make the block holding `pos` exclusively writable for `row`,
+    /// forking it copy-on-write if shared. In the serving flow this never
+    /// forks (the invariant above); it exists so a violation surfaces as
+    /// a counted fork — and as the rewind-safety mechanism for callers
+    /// (the serving simulator, tests) that share blocks more aggressively.
+    pub fn ensure_writable(&mut self, row: usize, pos: usize) -> Result<bool> {
+        let bs = self.pool.block_size();
+        let r = self
+            .rows
+            .get_mut(row)
+            .and_then(|r| r.as_mut())
+            .with_context(|| format!("kvcache: paged row {row} has no block table"))?;
+        let j = pos / bs;
+        ensure!(
+            j < r.blocks.len(),
+            "kvcache: position {pos} beyond row {row}'s {}-block table",
+            r.blocks.len()
+        );
+        let id = r.blocks[j];
+        if self.pool.refcount(id) <= 1 {
+            return Ok(false);
+        }
+        r.blocks[j] = self.pool.cow(id)?;
+        Ok(true)
+    }
+
+    /// Pin the resident full-block prefix of `tokens` (a hot system
+    /// prompt) against cache-pressure reclaim; returns how many blocks.
+    pub fn pin_prefix(&mut self, tokens: &[i32]) -> usize {
+        let bs = self.pool.block_size();
+        let run = self.index.lookup(bs, tokens);
+        for &id in &run {
+            let _ = self.pool.pin(id);
+        }
+        run.len()
+    }
+
+    /// Release every block reference the row holds (shared prefix blocks
+    /// stay resident through the index's own reference). A row with no
+    /// planned table is a no-op — abort paths call this unconditionally.
+    pub fn evict_row(&mut self, row: usize) -> Result<()> {
+        let Some(slot) = self.rows.get_mut(row) else {
+            bail!("kvcache: paged row {row} out of range");
+        };
+        if let Some(r) = slot.take() {
+            for id in r.blocks {
+                self.pool.release(id)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> PagedStats {
+        PagedStats {
+            lookups: self.lookups,
+            prefix_hits: self.prefix_hits,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            cow_copies: self.pool.cow_copies(),
+            blocks_in_use: self.pool.blocks_in_use(),
+            pool_blocks: self.pool.n_blocks(),
+        }
+    }
+
+    #[cfg(test)]
+    fn row_blocks(&self, row: usize) -> Option<Vec<usize>> {
+        self.rows.get(row)?.as_ref().map(|r| r.blocks.clone())
+    }
+
+    #[cfg(test)]
+    fn row_shared(&self, row: usize) -> Option<usize> {
+        self.rows.get(row)?.as_ref().map(|r| r.shared)
     }
 }
 
@@ -279,6 +898,9 @@ pub struct KvDecoder {
     pub slots: CacheSlots,
     /// cumulative admission accounting (window tokens, padding waste)
     pub pstats: PrefillStats,
+    /// block-pool + prefix-index bookkeeping when the decoder serves the
+    /// paged artifact family (`decode_*_paged_*`, DESIGN.md §2f)
+    paged: Option<PagedKv>,
     batch: usize,
     seq: usize,
     vocab: usize,
@@ -296,8 +918,31 @@ impl KvDecoder {
         model: &str,
         stores: &[&TensorStore],
     ) -> Result<Option<KvDecoder>> {
-        let pname = format!("decode_prefill_{model}");
-        let sname = format!("decode_step_{model}");
+        Self::try_new_inner(rt, model, stores, false)
+    }
+
+    /// Load the *paged* decode family (`decode_prefill_paged_*` /
+    /// `decode_step_paged_*` + optional verify/chunk siblings): pooled
+    /// `(n_blocks, block, ...)` caches behind per-row block tables, with
+    /// shared-prefix reuse across admissions. Same fallback contract as
+    /// [`KvDecoder::try_new`].
+    pub fn try_new_paged(
+        rt: &Runtime,
+        model: &str,
+        stores: &[&TensorStore],
+    ) -> Result<Option<KvDecoder>> {
+        Self::try_new_inner(rt, model, stores, true)
+    }
+
+    fn try_new_inner(
+        rt: &Runtime,
+        model: &str,
+        stores: &[&TensorStore],
+        paged: bool,
+    ) -> Result<Option<KvDecoder>> {
+        let infix = if paged { "_paged" } else { "" };
+        let pname = format!("decode_prefill{infix}_{model}");
+        let sname = format!("decode_step{infix}_{model}");
         let (pa, sa) = match (rt.load(&pname), rt.load(&sname)) {
             (Ok(pa), Ok(sa)) => (pa, sa),
             (Ok(_), Err(_)) => {
@@ -337,6 +982,53 @@ impl KvDecoder {
                 "cache '{n}' differs between {pname} and {sname}"
             );
         }
+        // the paged family declares its pool geometry in extra.paged and a
+        // block_table input per artifact (the §2f contract, mirrored by
+        // compile.meta_check); a family that fails the contract is an
+        // emission bug — error out, never half-load
+        let geom = if paged {
+            let g = sa
+                .meta
+                .paged()
+                .with_context(|| format!("{sname}: paged family declares no extra.paged"))?;
+            ensure!(
+                pa.meta.paged() == Some(g),
+                "extra.paged differs between {pname} and {sname}"
+            );
+            ensure!(
+                g.block_size >= 1 && s % g.block_size == 0,
+                "{sname}: seq {s} is not a whole number of {}-slot blocks",
+                g.block_size
+            );
+            let bpr = s / g.block_size;
+            let st = sa.meta.input_spec("block_table")?;
+            ensure!(
+                st.shape == [b, bpr] && st.dtype == Dtype::I32,
+                "{sname}: block_table {:?} is not int32 ({b}, {bpr})",
+                st.shape
+            );
+            let pt = pa.meta.input_spec("block_table")?;
+            ensure!(
+                pt.shape == [bpr] && pt.dtype == Dtype::I32,
+                "{pname}: block_table {:?} is not int32 ({bpr},)",
+                pt.shape
+            );
+            for n in &cache_names {
+                let ss = sa.meta.input_spec(n)?;
+                ensure!(
+                    ss.shape.len() >= 2
+                        && ss.shape[0] == g.n_blocks
+                        && ss.shape[1] == g.block_size,
+                    "{sname}: cache '{n}' shape {:?} is not pooled ({}, {}, ...)",
+                    ss.shape,
+                    g.n_blocks,
+                    g.block_size
+                );
+            }
+            Some(g)
+        } else {
+            None
+        };
         let vocab = sa.meta.config.vocab_size;
         // an adapter group must be declared by both halves identically:
         // the same registered slot serves admission and every step
@@ -357,7 +1049,7 @@ impl KvDecoder {
         // window. Its absence is fine (no spec path); a *defective* one —
         // wrong grid, caches or adapter group — falls back loudly, like
         // every other pair defect.
-        let vname = format!("decode_verify_{model}");
+        let vname = format!("decode_verify{infix}_{model}");
         let (verify_art, draft_k) = match rt.load(&vname) {
             Err(_) => (None, None),
             Ok(va) => {
@@ -368,6 +1060,19 @@ impl KvDecoder {
                         va.meta.batch(),
                         va.meta.seq()
                     );
+                    if let Some(g) = geom {
+                        ensure!(
+                            va.meta.paged() == Some(g),
+                            "extra.paged differs between {vname} and {sname}"
+                        );
+                        let bt = va.meta.input_spec("block_table")?;
+                        ensure!(
+                            bt.shape == [b, s / g.block_size] && bt.dtype == Dtype::I32,
+                            "{vname}: block_table {:?} is not int32 ({b}, {})",
+                            bt.shape,
+                            s / g.block_size
+                        );
+                    }
                     for n in &cache_names {
                         let vs = va.meta.input_spec(n)?;
                         let ss = sa.meta.input_spec(n)?;
@@ -417,7 +1122,7 @@ impl KvDecoder {
         // family defect.
         let mut chunk_arts = vec![];
         for c in chunk_ladder(s) {
-            let cname = format!("decode_prefill_chunk_{model}_c{c}");
+            let cname = format!("decode_prefill_chunk{infix}_{model}_c{c}");
             let Ok(ca) = rt.load(&cname) else { continue };
             let check = || -> Result<()> {
                 ensure!(
@@ -450,12 +1155,32 @@ impl KvDecoder {
                         "{scalar} is not a scalar int32 input"
                     );
                 }
-                let oh = ca.meta.input_spec("row_onehot")?;
-                ensure!(
-                    oh.shape == [b] && oh.dtype == Dtype::F32,
-                    "row_onehot shape {:?} is not ({b},)",
-                    oh.shape
-                );
+                // the row selection: dense windows scatter under a
+                // row_onehot mask; paged windows address the row's own
+                // blocks through a (S/block,) table instead
+                match geom {
+                    Some(g) => {
+                        ensure!(
+                            ca.meta.paged() == Some(g),
+                            "extra.paged differs between {cname} and {sname}"
+                        );
+                        let bt = ca.meta.input_spec("block_table")?;
+                        ensure!(
+                            bt.shape == [s / g.block_size] && bt.dtype == Dtype::I32,
+                            "block_table shape {:?} is not ({},)",
+                            bt.shape,
+                            s / g.block_size
+                        );
+                    }
+                    None => {
+                        let oh = ca.meta.input_spec("row_onehot")?;
+                        ensure!(
+                            oh.shape == [b] && oh.dtype == Dtype::F32,
+                            "row_onehot shape {:?} is not ({b},)",
+                            oh.shape
+                        );
+                    }
+                }
                 for n in &cache_names {
                     let cs = ca.meta.input_spec(n)?;
                     let ss = sa.meta.input_spec(n)?;
@@ -494,12 +1219,15 @@ impl KvDecoder {
                 Ok(sess) => chunks.push((c, sess)),
                 Err(e) => log::warn(format!(
                     "decode ladder for '{model}': \
-                     'decode_prefill_chunk_{model}_c{c}' failed to load \
-                     ({e:#}) — skipping that bucket"
+                     'decode_prefill_chunk{infix}_{model}_c{c}' failed to \
+                     load ({e:#}) — skipping that bucket"
                 )),
             }
         }
         let chunked = !chunks.is_empty();
+        let paged_kv = geom
+            .map(|g| PagedKv::new(g.n_blocks, g.block_size, b, s))
+            .transpose()?;
         Ok(Some(KvDecoder {
             prefill,
             step,
@@ -510,11 +1238,23 @@ impl KvDecoder {
             cache_names,
             slots: CacheSlots::new(b, s),
             pstats: PrefillStats::default(),
+            paged: paged_kv,
             batch: b,
             seq: s,
             vocab,
             adapter_in,
         }))
+    }
+
+    /// Whether this decoder serves the paged artifact family.
+    pub fn is_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// Paged-decode counters (prefix hits, block utilization, CoW forks);
+    /// `None` on a dense decoder.
+    pub fn paged_stats(&self) -> Option<PagedStats> {
+        self.paged.as_ref().map(|p| p.stats())
     }
 
     /// Adapter slots the pair's artifacts stack (group size), if any.
@@ -595,14 +1335,28 @@ impl KvDecoder {
             self.seq
         );
         let (b, s) = (self.batch, self.seq);
-        let mut onehot = vec![0.0f32; b];
-        onehot[row] = 1.0;
-        let Self { prefill, step, cache_names, adapter_in, .. } = self;
+        // paged: plan a fully *private* table before staging — the
+        // monolithic window rewrites every grid position of the row, so
+        // resident prefix blocks must never be aliased into it
+        if let Some(pk) = self.paged.as_mut() {
+            pk.plan_admit(row, seq, s, false)?;
+        }
+        let Self { prefill, step, cache_names, adapter_in, paged, .. } = self;
         // stage the row inputs before touching the caches, so an invalid
         // input cannot strand them mid-handoff
         prefill.set(rt, "tokens", &Tensor::from_i32(&[1, s], pad_to(seq, s)))?;
         prefill.set(rt, "last_pos", &Tensor::from_i32(&[], vec![(seq.len() - 1) as i32]))?;
-        prefill.set(rt, "row_onehot", &Tensor::from_f32(&[b], onehot))?;
+        match paged.as_ref() {
+            Some(pk) => {
+                let table = pk.table_i32(row).expect("planned above");
+                prefill.set(rt, "block_table", &Tensor::from_i32(&[table.len()], table))?;
+            }
+            None => {
+                let mut onehot = vec![0.0f32; b];
+                onehot[row] = 1.0;
+                prefill.set(rt, "row_onehot", &Tensor::from_f32(&[b], onehot))?;
+            }
+        }
         match (adapter_in.as_deref(), adapter_ix) {
             (Some(name), ix) => {
                 // an adapter-less admission on a stacked pair decodes
@@ -625,11 +1379,21 @@ impl KvDecoder {
         // every in-flight row's cache intact and the decoder usable
         let run = prefill.run(rt);
         prefill.donate_slots(step, cache_names)?;
-        run?;
+        if let Err(e) = run {
+            // a failed paged admission must not leak the planned blocks
+            if let Some(pk) = self.paged.as_mut() {
+                let _ = pk.evict_row(row);
+            }
+            return Err(e);
+        }
         self.pstats.prefill_tokens += s;
         self.pstats.padded_prefill_tokens += s - seq.len();
         self.pstats.chunks += 1;
-        self.slots.admit(row, seq.len())
+        self.slots.admit(row, seq.len())?;
+        if let Some(pk) = self.paged.as_mut() {
+            pk.register(row, seq)?;
+        }
+        Ok(())
     }
 
     /// Run one prompt window through the `bucket` chunk session: `window`
@@ -665,9 +1429,7 @@ impl KvDecoder {
             self.seq
         );
         let b = self.batch;
-        let mut onehot = vec![0.0f32; b];
-        onehot[row] = 1.0;
-        let Self { step, chunks, cache_names, adapter_in, pstats, .. } = self;
+        let Self { step, chunks, cache_names, adapter_in, pstats, paged, .. } = self;
         let sess = chunks
             .iter_mut()
             .find(|(c, _)| *c == bucket)
@@ -680,7 +1442,22 @@ impl KvDecoder {
         sess.set(rt, "tokens", &Tensor::from_i32(&[1, bucket], pad_to(window, bucket)))?;
         sess.set(rt, "start_pos", &Tensor::from_i32(&[], vec![start as i32]))?;
         sess.set(rt, "last_pos", &Tensor::from_i32(&[], vec![(window.len() - 1) as i32]))?;
-        sess.set(rt, "row_onehot", &Tensor::from_f32(&[b], onehot))?;
+        match paged.as_ref() {
+            Some(pk) => {
+                let table = pk.table_i32(row).with_context(|| {
+                    format!(
+                        "kvcache: chunk into paged row {row} with no planned \
+                         block table — admission_start must run first"
+                    )
+                })?;
+                sess.set(rt, "block_table", &Tensor::from_i32(&[table.len()], table))?;
+            }
+            None => {
+                let mut onehot = vec![0.0f32; b];
+                onehot[row] = 1.0;
+                sess.set(rt, "row_onehot", &Tensor::from_f32(&[b], onehot))?;
+            }
+        }
         match (adapter_in.as_deref(), adapter_ix) {
             (Some(name), ix) => {
                 sess.set(rt, name, &Tensor::from_i32(&[], vec![ix.unwrap_or(0)]))?;
@@ -723,10 +1500,70 @@ impl KvDecoder {
         );
         let ladder = self.ladder();
         ensure!(!ladder.is_empty(), "kvcache: no chunked-prefill ladder registered");
-        for (start, take, bucket) in chunk_plan(&ladder, seq.len()) {
-            self.prefill_chunk(rt, row, &seq[start..start + take], start, bucket, adapter_ix)?;
+        // paged: map the longest resident full-block prefix in by
+        // reference and only window the remainder — the prefix-reuse win
+        let resident = self.admission_start(row, seq)?;
+        let mut failed = None;
+        for (start, take, bucket) in chunk_plan(&ladder, seq.len() - resident) {
+            let at = resident + start;
+            if let Err(e) =
+                self.prefill_chunk(rt, row, &seq[at..at + take], at, bucket, adapter_ix)
+            {
+                failed = Some(e);
+                break;
+            }
         }
-        self.slots.admit(row, seq.len())
+        if let Some(e) = failed {
+            self.abort_admission(row);
+            return Err(e);
+        }
+        self.admission_finish(row, seq)
+    }
+
+    /// Begin an admission: on a paged decoder, plan the row's block table
+    /// — reusing the longest resident shared prefix — and return how many
+    /// prompt tokens are already cached (prefill windows start there). On
+    /// a dense decoder this is a no-op returning 0. The tick-paced
+    /// `Generator::prefill_tick` calls this before a row's first window;
+    /// [`KvDecoder::admit_chunked`] wraps the whole lifecycle in one call.
+    pub fn admission_start(&mut self, row: usize, seq: &[i32]) -> Result<usize> {
+        ensure!(row < self.batch, "kvcache: admit into out-of-range row {row}");
+        ensure!(
+            !seq.is_empty() && seq.len() <= self.seq,
+            "kvcache: prompt of {} tokens does not fit the (·, {}) cache",
+            seq.len(),
+            self.seq
+        );
+        match self.paged.as_mut() {
+            // always-resident prefix capped below the final window, so
+            // every admission runs at least one chunk (frontier logits)
+            Some(pk) => pk.plan_admit(row, seq, self.seq, true),
+            None => Ok(0),
+        }
+    }
+
+    /// Complete an admission after its final window: record the row in
+    /// the slots ledger and (paged) register its prompt's full blocks in
+    /// the prefix index for future admissions to reuse.
+    pub fn admission_finish(&mut self, row: usize, seq: &[i32]) -> Result<()> {
+        self.slots.admit(row, seq.len())?;
+        if let Some(pk) = self.paged.as_mut() {
+            pk.register(row, seq)?;
+        }
+        Ok(())
+    }
+
+    /// Abandon a part-fed admission (a failed window): release the paged
+    /// row's planned blocks so nothing leaks. A no-op for dense decoders,
+    /// unplanned rows, and rows already recorded in the slots ledger
+    /// (those are released through [`KvDecoder::evict`]).
+    pub fn abort_admission(&mut self, row: usize) {
+        if self.slots.len(row).is_some() {
+            return;
+        }
+        if let Some(pk) = self.paged.as_mut() {
+            let _ = pk.evict_row(row);
+        }
     }
 
     /// Admission through the bucket ladder when enabled, the monolithic
@@ -792,9 +1629,17 @@ impl KvDecoder {
         let batch = self.batch;
         // split-borrow so the gather-input name needn't be cloned on the
         // per-token hot path
-        let Self { step, adapter_in, .. } = self;
+        let Self { step, adapter_in, paged, .. } = self;
         step.set(rt, "tokens", &Tensor::from_i32(&[batch, 1], toks))?;
         step.set(rt, "pos", &Tensor::from_i32(&[batch], pos))?;
+        if let Some(pk) = paged.as_ref() {
+            let table = pk.grid_table_i32();
+            step.set(
+                rt,
+                "block_table",
+                &Tensor::from_i32(&[batch, pk.blocks_per_row()], table),
+            )?;
+        }
         match (adapter_in.as_deref(), adapter_ix) {
             (Some(name), ix) => {
                 let ix = match ix {
@@ -883,10 +1728,18 @@ impl KvDecoder {
             }
         }
         let batch = self.batch;
-        let Self { step, verify, cache_names, adapter_in, .. } = self;
+        let Self { step, verify, cache_names, adapter_in, paged, .. } = self;
         let sess = verify.as_mut().expect("draft_k implies a verify session");
         sess.set(rt, "tokens", &Tensor::from_i32(&[batch, k + 1], toks))?;
         sess.set(rt, "pos", &Tensor::from_i32(&[batch], pos))?;
+        if let Some(pk) = paged.as_ref() {
+            let table = pk.grid_table_i32();
+            sess.set(
+                rt,
+                "block_table",
+                &Tensor::from_i32(&[batch, pk.blocks_per_row()], table),
+            )?;
+        }
         match (adapter_in.as_deref(), adapter_ix) {
             (Some(name), ix) => {
                 let ix = match ix {
@@ -928,14 +1781,24 @@ impl KvDecoder {
     }
 
     /// Roll a row's frontier back `n` positions (rejected drafts). Logical
-    /// only — see [`CacheSlots::rewind`] for the safety rules.
+    /// only — see [`CacheSlots::rewind`] for the safety rules. On a paged
+    /// decoder the row's blocks stay allocated (rewinds never cross the
+    /// admission prefill, so the shared prefix is untouched, and the
+    /// rolled-back positions live in the row's own private blocks — the
+    /// re-decode overwrites them there, never needing a fork).
     pub fn rewind(&mut self, row: usize, n: usize) -> Result<()> {
         self.slots.rewind(row, n)
     }
 
-    /// Free a row's cache slot after `take`.
+    /// Free a row's cache slot after `take`; a paged decoder also releases
+    /// the row's block references (shared prefix blocks stay resident
+    /// through the prefix index for future admissions to reuse).
     pub fn evict(&mut self, row: usize) -> Result<()> {
-        self.slots.evict(row)
+        self.slots.evict(row)?;
+        if let Some(pk) = self.paged.as_mut() {
+            pk.evict_row(row)?;
+        }
+        Ok(())
     }
 }
 
@@ -1136,5 +1999,255 @@ mod tests {
         // old frontier
         cs.admit(0, 2).unwrap();
         assert_eq!(cs.len(0), Some(2));
+    }
+
+    // ---- paged KV: block pool / prefix index / per-row tables (§2f) ----
+
+    #[test]
+    fn block_pool_refcounted_alloc_release() {
+        let mut p = BlockPool::new(3, 8).unwrap();
+        assert_eq!((p.n_blocks(), p.block_size(), p.free_blocks()), (3, 8, 3));
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.blocks_in_use(), 2);
+        assert_eq!(p.refcount(a), 1);
+        // a second reference keeps the block allocated across one release
+        p.retain(a).unwrap();
+        assert_eq!(p.refcount(a), 2);
+        p.release(a).unwrap();
+        assert_eq!((p.refcount(a), p.blocks_in_use()), (1, 2));
+        // the final release returns it to the free list
+        p.release(a).unwrap();
+        assert_eq!((p.refcount(a), p.blocks_in_use()), (0, 1));
+        assert!(p.release(a).is_err(), "release of a free block");
+        assert!(p.retain(a).is_err(), "retain of a free block");
+        // exhaustion: 2 remaining (one freed + one never taken), then None
+        assert!(p.alloc().is_some() && p.alloc().is_some());
+        assert_eq!(p.alloc(), None);
+    }
+
+    #[test]
+    fn block_pool_eviction_refuses_pinned_blocks() {
+        let mut p = BlockPool::new(2, 4).unwrap();
+        let a = p.alloc().unwrap();
+        p.pin(a).unwrap();
+        assert!(p.is_pinned(a));
+        assert!(p.evict(a).is_err(), "pinned block must survive eviction");
+        assert_eq!(p.refcount(a), 1, "failed eviction must not drop the block");
+        p.unpin(a).unwrap();
+        p.evict(a).unwrap();
+        assert_eq!(p.refcount(a), 0);
+        // an evicted block is reallocatable, and the pin never leaks into
+        // the next owner
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        assert!(!p.is_pinned(b) && !p.is_pinned(c));
+        assert!(p.evict(2).is_err(), "out-of-range block");
+    }
+
+    #[test]
+    fn block_pool_cow_forks_only_shared_blocks() {
+        let mut p = BlockPool::new(2, 4).unwrap();
+        let a = p.alloc().unwrap();
+        // exclusive: writable in place, no fork
+        assert_eq!(p.cow(a).unwrap(), a);
+        assert_eq!(p.cow_copies(), 0);
+        // shared: the caller's reference moves to a fresh block
+        p.retain(a).unwrap();
+        let forked = p.cow(a).unwrap();
+        assert_ne!(forked, a);
+        assert_eq!(p.refcount(a), 1, "the other holder keeps the original");
+        assert_eq!(p.refcount(forked), 1);
+        assert_eq!(p.cow_copies(), 1);
+        // a fork that needs a block the pool cannot supply errors and
+        // leaves the share intact
+        p.retain(a).unwrap();
+        assert!(p.cow(a).is_err(), "pool exhausted");
+        assert_eq!(p.refcount(a), 2);
+    }
+
+    #[test]
+    fn prefix_index_maps_longest_resident_run() {
+        let mut pool = BlockPool::new(8, 4).unwrap();
+        let mut ix = PrefixIndex::new();
+        let toks: Vec<i32> = (0..12).collect();
+        let blocks = vec![
+            pool.alloc().unwrap(),
+            pool.alloc().unwrap(),
+            pool.alloc().unwrap(),
+        ];
+        ix.insert(&mut pool, &toks, &blocks).unwrap();
+        assert_eq!(ix.len(), 3);
+        // the index holds its own reference on every registered block
+        assert!(blocks.iter().all(|&b| pool.refcount(b) == 2));
+        assert_eq!(ix.lookup(4, &toks), blocks);
+        // a shorter prompt maps its own full blocks only
+        assert_eq!(ix.lookup(4, &toks[..8]), blocks[..2].to_vec());
+        // a partial tail never matches (full blocks only)
+        assert_eq!(ix.lookup(4, &toks[..11]), blocks[..2].to_vec());
+        // divergence after the first block maps just that block
+        let mut fork = toks.clone();
+        fork[5] = 99;
+        assert_eq!(ix.lookup(4, &fork), blocks[..1].to_vec());
+        // totally different prompt: no resident prefix
+        assert!(ix.lookup(4, &[7, 7, 7, 7]).is_empty());
+    }
+
+    #[test]
+    fn prefix_hash_collision_falls_back_to_full_prefill() {
+        // same hash, different tokens: the stored-token comparison stops
+        // the walk, so admission prefills from position 0 instead of
+        // trusting an aliased block
+        let mut pool = BlockPool::new(4, 4).unwrap();
+        let mut ix = PrefixIndex::new();
+        let toks: Vec<i32> = vec![1, 2, 3, 4];
+        let planted = pool.alloc().unwrap();
+        let h = prefix_chunk_hash(0, &toks);
+        ix.inject(h, vec![9, 9, 9, 9], planted);
+        assert!(
+            ix.lookup(4, &toks).is_empty(),
+            "colliding entry must never be taken as resident"
+        );
+        // the planted tokens hash differently, so they miss too — the
+        // aliased block is unreachable rather than mis-served
+        assert!(ix.lookup(4, &[9, 9, 9, 9]).is_empty());
+    }
+
+    #[test]
+    fn prefix_index_reclaims_cold_index_only_blocks() {
+        let mut pool = BlockPool::new(2, 4).unwrap();
+        let mut ix = PrefixIndex::new();
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        ix.insert(&mut pool, &[1, 2, 3, 4], &[a]).unwrap();
+        ix.insert(&mut pool, &[5, 6, 7, 8], &[b]).unwrap();
+        // both blocks still row-held: nothing is index-only, nothing frees
+        assert_eq!(ix.reclaim(&mut pool, 1), 0);
+        // drop the row references; `a` is older (colder) than `b`
+        pool.release(a).unwrap();
+        pool.release(b).unwrap();
+        // a lookup bumps `a`, making `b` the LRU victim
+        assert_eq!(ix.lookup(4, &[1, 2, 3, 4]), vec![a]);
+        assert_eq!(ix.reclaim(&mut pool, 1), 1);
+        assert_eq!(ix.len(), 1);
+        assert_eq!(pool.refcount(b), 0, "cold entry released its block");
+        assert_eq!(pool.refcount(a), 1, "hot entry survived");
+        // pinned index-only blocks are not reclaim candidates
+        pool.pin(a).unwrap();
+        assert_eq!(ix.reclaim(&mut pool, 1), 0);
+    }
+
+    #[test]
+    fn paged_admission_shares_resident_prefix_blocks() {
+        // pool of 16 × 4-slot blocks over a 32-slot grid, 2 rows; the sim
+        // capacity model passes need-based lengths, exercised here
+        let mut pk = PagedKv::new(16, 4, 2, 32).unwrap();
+        let toks: Vec<i32> = (100..112).collect(); // 12 tokens = 3 blocks
+        assert_eq!(pk.plan_admit(0, &toks, 12, true).unwrap(), 0, "cold start");
+        pk.register(0, &toks).unwrap();
+        // only blocks strictly below the frontier are indexed: 12 tokens
+        // → (12-1)/4 = 2 full blocks, never the frontier block
+        assert_eq!(pk.index.len(), 2);
+        // an identical prompt maps both resident blocks (8 tokens skipped)
+        assert_eq!(pk.plan_admit(1, &toks, 12, true).unwrap(), 8);
+        assert_eq!(pk.row_shared(1), Some(2));
+        let (r0, r1) = (pk.row_blocks(0).unwrap(), pk.row_blocks(1).unwrap());
+        assert_eq!(r0[..2], r1[..2], "shared physical prefix");
+        assert_ne!(r0[2], r1[2], "private frontier block");
+        // shared blocks: row0 + row1 + index = 3 references
+        assert_eq!(pk.pool().refcount(r0[0]), 3);
+        let st = pk.stats();
+        assert_eq!((st.lookups, st.prefix_hits, st.prefix_hit_tokens), (2, 1, 8));
+        assert_eq!(st.blocks_in_use, 4); // 3 (row0) + 1 private (row1)
+        assert_eq!(st.cow_copies, 0);
+        // eviction keeps the prefix resident through the index reference
+        pk.evict_row(0).unwrap();
+        assert_eq!(pk.pool().refcount(r0[0]), 2);
+        pk.evict_row(1).unwrap();
+        assert_eq!(pk.pool().refcount(r0[0]), 1, "index keeps the prefix warm");
+        assert_eq!(pk.stats().blocks_in_use, 2);
+    }
+
+    #[test]
+    fn paged_tables_pad_to_grid_and_feed_zero_for_free_rows() {
+        let mut pk = PagedKv::new(8, 4, 2, 16).unwrap(); // 4 blocks/row
+        let toks: Vec<i32> = (0..6).collect();
+        pk.plan_admit(0, &toks, 6, true).unwrap(); // 2 blocks planned
+        let t = pk.table_i32(0).unwrap();
+        assert_eq!(t.len(), 4, "padded to S/block");
+        let grid = pk.grid_table_i32();
+        assert_eq!(grid.len(), 8);
+        assert_eq!(&grid[..4], &t[..]);
+        assert_eq!(&grid[4..], &[0, 0, 0, 0], "free row feeds zeros");
+    }
+
+    #[test]
+    fn paged_cow_under_speculative_rewind_forks_shared_block() {
+        // Two rows share prefix blocks; one rewinds past rejected drafts
+        // and a (hypothetical) write lands inside the shared run. The
+        // serving flow never does this — ensure_writable is the enforced
+        // escape hatch: the block forks, the write stays private, and the
+        // fork is counted instead of silently corrupting the other row.
+        let mut pk = PagedKv::new(16, 4, 2, 32).unwrap();
+        let toks: Vec<i32> = (0..9).collect(); // 2 full blocks + frontier
+        pk.plan_admit(0, &toks, 32, true).unwrap();
+        pk.register(0, &toks).unwrap();
+        pk.plan_admit(1, &toks, 32, true).unwrap(); // shares blocks 0..2
+        let before = pk.row_blocks(1).unwrap();
+        assert_eq!(pk.row_shared(1), Some(2));
+        // a write into the private tail never forks
+        assert!(!pk.ensure_writable(1, 8).unwrap());
+        // a write into the shared prefix forks exactly that block
+        assert!(pk.ensure_writable(1, 2).unwrap());
+        let after = pk.row_blocks(1).unwrap();
+        assert_ne!(after[0], before[0], "row 1 moved onto a private fork");
+        assert_eq!(
+            pk.row_blocks(0).unwrap()[0],
+            before[0],
+            "row 0 keeps the original block"
+        );
+        assert_eq!(pk.stats().cow_copies, 1);
+        // now exclusive: a second write is in place
+        assert!(!pk.ensure_writable(1, 2).unwrap());
+        assert_eq!(pk.stats().cow_copies, 1);
+    }
+
+    #[test]
+    fn paged_pool_pressure_reclaims_then_errors_clean() {
+        // 4-block pool, 4-slot blocks, 16-slot grid: one full-grid row
+        // uses the whole pool
+        let mut pk = PagedKv::new(4, 4, 2, 16).unwrap();
+        let t0: Vec<i32> = (0..16).collect();
+        pk.plan_admit(0, &t0, 16, true).unwrap();
+        pk.register(0, &t0).unwrap();
+        pk.evict_row(0).unwrap();
+        // 3 blocks are index-held, 1 free; a cold-prompt admission must
+        // reclaim the index blocks to fit
+        let t1: Vec<i32> = (100..116).collect();
+        assert_eq!(pk.plan_admit(1, &t1, 16, true).unwrap(), 0);
+        assert_eq!(pk.stats().blocks_in_use, 4);
+        // and with the pool fully row-held, a further admission fails
+        // without leaking its partial allocation
+        let used = pk.stats().blocks_in_use;
+        assert!(pk.plan_admit(0, &t0, 16, true).is_err());
+        assert_eq!(pk.stats().blocks_in_use, used, "failed plan released refs");
+        assert!(pk.table_i32(0).is_none(), "failed plan leaves the row free");
+    }
+
+    #[test]
+    fn paged_pin_prefix_shields_hot_blocks_from_reclaim() {
+        let mut pk = PagedKv::new(4, 4, 2, 16).unwrap();
+        let sys: Vec<i32> = (0..12).collect();
+        pk.plan_admit(0, &sys, 12, true).unwrap();
+        pk.register(0, &sys).unwrap();
+        pk.evict_row(0).unwrap();
+        assert_eq!(pk.pin_prefix(&sys), 2, "both indexed blocks pinned");
+        // a full-grid admission cannot reclaim the pinned prefix: only
+        // 2 free blocks remain for a 4-block need
+        let cold: Vec<i32> = (50..66).collect();
+        assert!(pk.plan_admit(1, &cold, 16, true).is_err());
+        // the pinned prefix is still resident and mappable
+        assert_eq!(pk.plan_admit(1, &sys, 12, true).unwrap(), 8);
     }
 }

@@ -171,20 +171,63 @@ impl SpecDecoder {
         drafter_model: &str,
         drafter_stores: &[&TensorStore],
     ) -> Result<SpecDecoder> {
-        let target = KvDecoder::try_new(rt, target_model, target_stores)?
-            .with_context(|| {
-                format!("decode artifact pair for '{target_model}' not registered")
-            })?;
+        SpecDecoder::try_new_inner(rt, target_model, target_stores, drafter_model, drafter_stores, false)
+    }
+
+    /// [`SpecDecoder::try_new`] over pooled block caches (DESIGN.md §2f):
+    /// the target loads its `decode_*_paged_*` trio; the drafter pages
+    /// too when its own paged family is registered and falls back to its
+    /// dense pair otherwise — paging changes cache layout, not the
+    /// draft/verify token contract, so mixed pairings stay byte-exact.
+    /// Rewinds after rejected drafts stay logical on both sides: block
+    /// tables are untouched and re-decode overwrites the row's private
+    /// frontier blocks (shared prefix blocks sit strictly below the
+    /// rewind floor).
+    pub fn try_new_paged(
+        rt: &Runtime,
+        target_model: &str,
+        target_stores: &[&TensorStore],
+        drafter_model: &str,
+        drafter_stores: &[&TensorStore],
+    ) -> Result<SpecDecoder> {
+        SpecDecoder::try_new_inner(rt, target_model, target_stores, drafter_model, drafter_stores, true)
+    }
+
+    fn try_new_inner(
+        rt: &Runtime,
+        target_model: &str,
+        target_stores: &[&TensorStore],
+        drafter_model: &str,
+        drafter_stores: &[&TensorStore],
+        paged: bool,
+    ) -> Result<SpecDecoder> {
+        let target = if paged {
+            KvDecoder::try_new_paged(rt, target_model, target_stores)?
+        } else {
+            KvDecoder::try_new(rt, target_model, target_stores)?
+        }
+        .with_context(|| {
+            let family = if paged { "paged decode family" } else { "decode artifact pair" };
+            format!("{family} for '{target_model}' not registered")
+        })?;
         let k = target.verify_k().with_context(|| {
+            let infix = if paged { "_paged" } else { "" };
             format!(
-                "speculative decoding needs 'decode_verify_{target_model}' \
+                "speculative decoding needs 'decode_verify{infix}_{target_model}' \
                  registered alongside the decode pair"
             )
         })?;
-        let drafter = KvDecoder::try_new(rt, drafter_model, drafter_stores)?
-            .with_context(|| {
-                format!("drafter decode pair for '{drafter_model}' not registered")
-            })?;
+        let drafter = match if paged {
+            KvDecoder::try_new_paged(rt, drafter_model, drafter_stores)?
+        } else {
+            None
+        } {
+            Some(d) => d,
+            None => KvDecoder::try_new(rt, drafter_model, drafter_stores)?
+                .with_context(|| {
+                    format!("drafter decode pair for '{drafter_model}' not registered")
+                })?,
+        };
         ensure!(
             drafter.batch_size() == target.batch_size()
                 && drafter.seq_len() == target.seq_len(),
@@ -250,6 +293,13 @@ impl SpecDecoder {
     /// into target *and* drafter, so both sides' window tokens count).
     pub fn prefill_stats(&self) -> crate::coordinator::kvcache::PrefillStats {
         self.target.pstats.merge(self.drafter.pstats)
+    }
+
+    /// Block-pool counters from the *target* trio (the capacity-bearing
+    /// side; the drafter's pool, when paged, is its own private economy).
+    /// `None` when the target decodes dense.
+    pub fn paged_stats(&self) -> Option<crate::coordinator::kvcache::PagedStats> {
+        self.target.paged_stats()
     }
 
     /// Admit a row into the target cache — and, for greedy rows, into the

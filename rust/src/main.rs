@@ -100,6 +100,12 @@ usage: loram <subcommand> [--key value] [--flag]
                                        tick (Sarathi-style pacing; default
                                        unbounded — admissions finish the
                                        tick they begin)
+             [--paged on|off]          block-pooled KV cache with shared-
+                                       prefix reuse (needs the decode_*_paged
+                                       artifact family; default off)
+             [--block-size N]          assert the paged family's KV block
+                                       size is N (sanity check only; the
+                                       size is baked into the artifacts)
   downstream --base tiny [--lora f.lmck]    math / CSR / code battery
   memory                                    paper Tables 4-6 (exact, analytic)
   repro      --exp fig3|fig4|tab1|fig5|fig6|fig7|fig8|tab456|tab7|tab8|fig16|appD|all
@@ -320,12 +326,51 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
         _ => None,
     };
     let speculative = path == Some(loram::coordinator::generate::DecodePath::Speculative);
+    // §2f: block-pooled KV cache behind per-row block tables, with
+    // shared-prefix reuse. The block size is baked into the emitted
+    // decode_*_paged artifacts; --block-size only asserts it.
+    let paged = match args.get("paged") {
+        Some("on") => true,
+        Some("off") | None => false,
+        Some(other) => bail!("bad --paged '{other}' (on|off)"),
+    };
+    if paged && path == Some(loram::coordinator::generate::DecodePath::Reforward) {
+        bail!("--paged on needs a cached decode path (reforward keeps no KV)");
+    }
+    if let Some(bs) = args.get("block-size") {
+        if !paged {
+            bail!("--block-size only applies with --paged on");
+        }
+        let want: usize = bs.parse().with_context(|| format!("bad --block-size '{bs}'"))?;
+        let art = rt.load(&format!("decode_step_paged_{base}")).with_context(|| {
+            format!("--paged on needs the decode_*_paged family for '{base}'")
+        })?;
+        let spec = art.meta.paged().with_context(|| {
+            format!("'decode_step_paged_{base}' carries no extra.paged declaration")
+        })?;
+        if spec.block_size != want {
+            bail!(
+                "--block-size {want} but 'decode_step_paged_{base}' was emitted \
+                 with block_size {} ({} pool blocks); re-emit the paged family \
+                 to change it",
+                spec.block_size,
+                spec.n_blocks
+            );
+        }
+    }
     let n = args.get_usize("requests", 8);
     let mut ig = loram::data::instruct::InstructGen::new(Dataset::Hermes, 1, 1);
 
     // --adapters dir/: serve the stacked-adapter artifact, one frozen base
     // + every .lmck adapter in the directory, routed per request
     let mut server = if let Some(dir) = args.get("adapters") {
+        if paged {
+            bail!(
+                "--paged on under --adapters is not wired up yet: the stacked \
+                 logits_*_a<N> artifacts have no paged decode family; drop one \
+                 of the two flags"
+            );
+        }
         if speculative {
             bail!(
                 "--decode-path speculative under --adapters is not wired up \
@@ -380,19 +425,32 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
             let drafter = args.get_or("drafter", &drafter_default);
             let (dparams, dlora) =
                 drafter_weights(rt, args, base, drafter, &params, &lora)?;
-            let gen = Generator::with_speculative(
+            let gen = Generator::with_speculative_paged(
                 rt,
                 &format!("logits_{base}"),
                 &[&params, &lora],
                 drafter,
                 &[&dparams, &dlora],
+                paged,
             )?;
-            println!("decode path: speculative (drafter {drafter})");
+            println!(
+                "decode path: speculative (drafter {drafter}{})",
+                if gen.paged() { ", paged" } else { "" }
+            );
             gen
         } else {
-            let gen =
-                Generator::with_path(rt, &format!("logits_{base}"), &[&params, &lora], path)?;
-            println!("decode path: {}", gen.decode_path().name());
+            let gen = Generator::with_path_paged(
+                rt,
+                &format!("logits_{base}"),
+                &[&params, &lora],
+                path,
+                paged,
+            )?;
+            println!(
+                "decode path: {}{}",
+                gen.decode_path().name(),
+                if gen.paged() { " (paged)" } else { "" }
+            );
             gen
         };
         let mut server = Server::new(gen, 0);
@@ -455,6 +513,20 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
             st.prefill.padded_prefill_tokens,
             st.ttft_tick_p(95.0),
             st.itl_tick_p(95.0)
+        );
+    }
+    if let Some(pg) = &st.paged {
+        println!(
+            "paged kv: prefix hit rate {:.2} ({} hits / {} lookups, {} tokens \
+             reused), {}/{} pool blocks in use, {} cow copies, peak {} rows",
+            pg.prefix_hit_rate(),
+            pg.prefix_hits,
+            pg.lookups,
+            pg.prefix_hit_tokens,
+            pg.blocks_in_use,
+            pg.pool_blocks,
+            pg.cow_copies,
+            st.peak_in_flight
         );
     }
     if let Some(spec) = &st.spec {

@@ -179,6 +179,15 @@ pub struct SlotGroup {
     pub members: Vec<String>,
 }
 
+/// Pool geometry of a paged decode artifact (`extra.paged`): caches are
+/// `(n_blocks, block_size, ...)` tensors addressed through a per-row block
+/// table instead of dense `(B, S, ...)` rows (DESIGN.md §2f).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagedSpec {
+    pub block_size: usize,
+    pub n_blocks: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
     pub name: String,
@@ -265,6 +274,21 @@ impl ArtifactMeta {
     /// `compile.meta_check`). `None` for every other artifact kind.
     pub fn chunk(&self) -> Option<usize> {
         self.extra.get("chunk").and_then(|v| v.as_usize())
+    }
+
+    /// Paged-decode geometry of a `decode_*_paged` artifact: its caches
+    /// are pooled `(n_blocks, block_size, ...)` tensors and every forward
+    /// takes an int32 `block_table` input mapping logical block slots to
+    /// physical pool blocks (the paged contract, DESIGN.md §2f; mirrored
+    /// by `compile.meta_check`). `None` on dense artifacts; a declaration
+    /// missing either field is treated as absent, which `KvDecoder`
+    /// rejects loudly when probing the paged family.
+    pub fn paged(&self) -> Option<PagedSpec> {
+        let p = self.extra.get("paged")?;
+        Some(PagedSpec {
+            block_size: p.get("block_size").and_then(|v| v.as_usize())?,
+            n_blocks: p.get("n_blocks").and_then(|v| v.as_usize())?,
+        })
     }
 
     /// Ordered name list from extra (param_names / lora_names / ...).
@@ -532,6 +556,26 @@ mod tests {
         // when probing the ladder (the python mirror rejects it in CI)
         let bad = train_meta(r#", "extra": {"chunk": "sixteen"}"#);
         assert_eq!(bad.chunk(), None);
+    }
+
+    #[test]
+    fn paged_geometry_parses_from_extra() {
+        // the paged-decode contract: extra.paged carries the pool geometry
+        // of a pooled (n_blocks, block_size, ...) cache family
+        let m = train_meta(
+            r#", "extra": {"kind": "decode_step",
+                           "paged": {"block_size": 8, "n_blocks": 64}}"#,
+        );
+        assert_eq!(m.paged(), Some(PagedSpec { block_size: 8, n_blocks: 64 }));
+        // dense artifacts carry no extra.paged
+        assert_eq!(train_meta("").paged(), None);
+        // a declaration missing either field (or non-integer) is treated
+        // as absent, which KvDecoder rejects loudly when probing the
+        // paged family (the python mirror rejects it in CI)
+        let half = train_meta(r#", "extra": {"paged": {"block_size": 8}}"#);
+        assert_eq!(half.paged(), None);
+        let bad = train_meta(r#", "extra": {"paged": {"block_size": "eight", "n_blocks": 64}}"#);
+        assert_eq!(bad.paged(), None);
     }
 
     #[test]

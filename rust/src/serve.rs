@@ -23,7 +23,7 @@
 
 use crate::coordinator::adapters::AdapterId;
 use crate::coordinator::generate::{Generator, PrefillTickOut, SampleCfg, StepOut};
-use crate::coordinator::kvcache::{chunk_plan, PrefillStats};
+use crate::coordinator::kvcache::{chunk_plan, PagedKv, PagedStats, PrefillStats};
 use crate::coordinator::speculative::SpecStats;
 use crate::tokenizer::Tokenizer;
 use crate::util::log;
@@ -74,6 +74,21 @@ pub trait DecodeEngine {
     /// Cumulative speculative-decoding counters, when the engine decodes
     /// on the speculative path (None everywhere else).
     fn spec_stats(&self) -> Option<SpecStats> {
+        None
+    }
+    /// Whether the engine has cache capacity for this request *right
+    /// now* — block-pool headroom on the paged path (DESIGN.md §2f),
+    /// where free rows alone no longer imply a free cache. `false` keeps
+    /// the request queued instead of rejecting it; engines whose rows
+    /// are the only capacity always say yes.
+    fn can_admit(&mut self, prompt: &str, cfg: &SampleCfg) -> bool {
+        let _ = (prompt, cfg);
+        true
+    }
+    /// Block-pool counters (prefix hits, copy-on-write forks, pool
+    /// utilisation) when the engine decodes through pooled paged caches;
+    /// None everywhere else.
+    fn paged_stats(&self) -> Option<PagedStats> {
         None
     }
 }
@@ -128,6 +143,10 @@ impl DecodeEngine for Generator<'_> {
 
     fn spec_stats(&self) -> Option<SpecStats> {
         Generator::spec_stats(self)
+    }
+
+    fn paged_stats(&self) -> Option<PagedStats> {
+        Generator::paged_stats(self)
     }
 }
 
@@ -264,6 +283,14 @@ pub struct ServerStats {
     /// acceptance rate over proposed drafts), snapshotted each step;
     /// None when the engine does not decode speculatively
     pub spec: Option<SpecStats>,
+    /// the engine's block-pool counters (prefix hits, copy-on-write
+    /// forks, pool utilisation), snapshotted each step; None off the
+    /// paged path (DESIGN.md §2f)
+    pub paged: Option<PagedStats>,
+    /// most requests ever holding rows at once (decoding or pending
+    /// admission) — on the paged path this exceeds a dense grid's batch
+    /// at equal cache bytes, the §2f capacity decoupling
+    pub peak_in_flight: usize,
     /// per-adapter breakdown, keyed by the request's adapter
     pub per_adapter: BTreeMap<Option<AdapterId>, AdapterLane>,
     /// scheduler ticks run (every `step` that found work — decode,
@@ -417,6 +444,17 @@ impl<E: DecodeEngine> Server<E> {
         let mut last_err = None;
         while self.engine.free_rows() > 0 {
             let Some((req, t0, enq_tick)) = self.queue.pop_front() else { break };
+            // a paged engine may have free rows but no block-pool
+            // headroom: keep the request queued (FIFO) while anything
+            // else makes progress; with nothing in flight, attempt the
+            // admission anyway so a genuinely oversized request surfaces
+            // as a rejection instead of a wedged queue
+            if !self.engine.can_admit(&req.prompt, &req.cfg)
+                && (admitted_now > 0 || self.in_flight() > 0)
+            {
+                self.queue.push_front((req, t0, enq_tick));
+                break;
+            }
             let (row, done) =
                 match self.engine.prefill_begin(&req.prompt, req.cfg, req.adapter, defer) {
                     Ok(x) => x,
@@ -469,6 +507,7 @@ impl<E: DecodeEngine> Server<E> {
     /// instead of decode + S·c_tok).
     pub fn step(&mut self) -> Result<Vec<Response>> {
         self.admit()?;
+        self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
         let tick = self
             .engine
             .prefill_tick(self.prefill_budget.unwrap_or(usize::MAX))?;
@@ -496,6 +535,7 @@ impl<E: DecodeEngine> Server<E> {
             self.stats.rejected += 1;
         }
         self.stats.prefill = self.engine.prefill_stats();
+        self.stats.paged = self.engine.paged_stats();
         let active = self.inflight.iter().flatten().filter(|f| !f.pending).count();
         let pending = self.in_flight() - active;
         // termination backstop: both real engines force at least one
@@ -628,6 +668,10 @@ pub struct SimEngine {
     /// admission cost model (None = admissions are free and instant, the
     /// historical scheduler-only behaviour)
     prefill_model: Option<SimPrefill>,
+    /// paged block-pool capacity model (DESIGN.md §2f): admissions plan
+    /// real [`PagedKv`] block tables, share resident prefixes, and are
+    /// gated on pool headroom instead of row count
+    paged: Option<PagedKv>,
     /// planned window tokens still to process per mid-admission row
     pending: Vec<Option<usize>>,
     pstats: PrefillStats,
@@ -679,6 +723,7 @@ impl SimEngine {
             tk: Tokenizer::new(),
             spec: None,
             prefill_model: None,
+            paged: None,
             pending: (0..batch).map(|_| None).collect(),
             pstats: PrefillStats::default(),
             admissions: vec![],
@@ -694,6 +739,31 @@ impl SimEngine {
         let mut e = SimEngine::new(batch);
         e.prefill_model = Some(SimPrefill { ladder, stall });
         e
+    }
+
+    /// A [`SimEngine`] over the paged block-pool capacity model
+    /// (DESIGN.md §2f): `batch_rows` row slots — deliberately plentiful,
+    /// decoupled from any dense grid — with admission capacity carried by
+    /// a pool of `pool_blocks` × `block`-slot blocks, driven by the real
+    /// [`PagedKv`] bookkeeping. Admission plans a block table through the
+    /// shared-prefix index, so a prompt whose prefix is already resident
+    /// charges prefill cost only for its non-resident suffix, and
+    /// [`DecodeEngine::can_admit`] keeps requests queued while the pool
+    /// lacks headroom. `ladder` prices the prefill windows as in
+    /// [`SimEngine::with_prefill`] (its last bucket is the grid), never
+    /// stalling — paged serving exists to kill the stall.
+    pub fn with_paged(
+        pool_blocks: usize,
+        block: usize,
+        batch_rows: usize,
+        ladder: Vec<usize>,
+    ) -> Result<SimEngine> {
+        assert!(!ladder.is_empty() && ladder.windows(2).all(|w| w[0] < w[1]));
+        let grid = *ladder.last().expect("non-empty ladder");
+        let mut e = SimEngine::new(batch_rows);
+        e.prefill_model = Some(SimPrefill { ladder, stall: false });
+        e.paged = Some(PagedKv::new(pool_blocks, block, batch_rows, grid)?);
+        Ok(e)
     }
 
     /// A [`SimEngine`] in drafter mode: draft length `k`, per-draft
@@ -764,9 +834,39 @@ impl DecodeEngine for SimEngine {
         defer: bool,
     ) -> Result<(usize, bool)> {
         let row = self.prefill(prompt, cfg, adapter)?;
+        // paged capacity model: plan the row's block table before any
+        // prefill cost is charged — the resident shared-prefix tokens
+        // (always a whole number of blocks below the frontier) are
+        // skipped by the cost model below, and registration makes this
+        // prompt's full blocks resident for the admissions behind it
+        let mut resident = 0;
+        if let Some(kv) = self.paged.as_mut() {
+            let ids = {
+                let mut ids = self.tk.encode(prompt);
+                ids.truncate(kv.seq_len());
+                if ids.is_empty() {
+                    ids.push(1);
+                }
+                ids
+            };
+            let need = (ids.len() + cfg.max_new.max(1)).min(kv.seq_len());
+            let planned = kv
+                .plan_admit(row, &ids, need, true)
+                .and_then(|r| kv.register(row, &ids).map(|_| r));
+            match planned {
+                Ok(r) => resident = r,
+                Err(e) => {
+                    let _ = kv.evict_row(row);
+                    self.rows[row] = None;
+                    self.admissions.pop();
+                    return Err(e);
+                }
+            }
+        }
         if let Some(pm) = &self.prefill_model {
             let grid = *pm.ladder.last().expect("non-empty ladder");
             let len = self.tk.encode(prompt).len().clamp(1, grid);
+            let len = len.saturating_sub(resident).max(1);
             let plan = chunk_plan(&pm.ladder, len);
             let planned: usize = plan.iter().map(|(_, _, b)| *b).sum();
             self.pstats.prefill_tokens += planned;
@@ -877,6 +977,9 @@ impl DecodeEngine for SimEngine {
 
     fn take(&mut self, row: usize) -> Option<Vec<i32>> {
         self.pending.get_mut(row)?.take();
+        if let Some(kv) = self.paged.as_mut() {
+            let _ = kv.evict_row(row);
+        }
         self.rows.get_mut(row)?.take().map(|r| r.emitted)
     }
 
@@ -886,6 +989,21 @@ impl DecodeEngine for SimEngine {
 
     fn spec_stats(&self) -> Option<SpecStats> {
         self.spec.as_ref().map(|s| s.stats)
+    }
+
+    fn can_admit(&mut self, prompt: &str, cfg: &SampleCfg) -> bool {
+        let Some(kv) = self.paged.as_mut() else { return true };
+        let mut ids = self.tk.encode(prompt);
+        ids.truncate(kv.seq_len());
+        if ids.is_empty() {
+            ids.push(1);
+        }
+        let need = ids.len() + cfg.max_new.max(1);
+        kv.probe(&ids, need) <= kv.free_blocks()
+    }
+
+    fn paged_stats(&self) -> Option<PagedStats> {
+        self.paged.as_ref().map(|kv| kv.stats())
     }
 }
 
@@ -1392,6 +1510,89 @@ mod tests {
         // its row was released and is reusable
         assert_eq!(srv.engine.free_rows(), 2);
         assert_eq!(srv.in_flight(), 0);
+    }
+
+    /// §2f acceptance: at identical pool bytes (dense 4 rows × 64 slots
+    /// == paged 32 blocks × 8 slots), a shared-system-prompt workload on
+    /// the paged engine beats the dense grid on sim TTFT p95 and holds
+    /// strictly more concurrent rows — with zero copy-on-write forks
+    /// (the share-only-full-blocks invariant) and less prefill work
+    /// (resident prefixes skip their windows).
+    #[test]
+    fn paged_shared_prefix_beats_dense_on_ttft_and_capacity() {
+        let sys = "system: you are a terse helpful assistant. ";
+        let run = |paged: bool| {
+            let mut srv = if paged {
+                Server::new(SimEngine::with_paged(32, 8, 32, vec![16, 64]).unwrap(), 0)
+            } else {
+                Server::new(SimEngine::with_prefill(4, vec![16, 64], false), 0)
+            };
+            srv.set_prefill_budget(Some(16));
+            let mut sent = 0;
+            let mut rs = vec![];
+            for _burst in 0..4 {
+                for u in 0..8 {
+                    // N users share the system prompt; suffixes differ
+                    srv.enqueue(format!("{sys}user {u}"), cfg(0.9, 4));
+                    sent += 1;
+                }
+                for _ in 0..6 {
+                    rs.extend(srv.step().unwrap()); // next burst lands mid-decode
+                }
+            }
+            rs.extend(srv.drain().unwrap());
+            assert_eq!(rs.len(), sent, "paged={paged}: requests lost");
+            srv.stats
+        };
+        let dense = run(false);
+        let paged = run(true);
+        assert_eq!(dense.served, paged.served);
+        assert!(
+            paged.ttft_tick_p(95.0) < dense.ttft_tick_p(95.0),
+            "paged ttft p95 {} !< dense {}",
+            paged.ttft_tick_p(95.0),
+            dense.ttft_tick_p(95.0)
+        );
+        // capacity decoupling: the dense grid pins concurrency at its 4
+        // rows; the paged pool holds strictly more at the same bytes
+        assert_eq!(dense.peak_in_flight, 4, "dense capacity is the grid");
+        assert!(
+            paged.peak_in_flight > dense.peak_in_flight,
+            "paged peak in-flight {} !> dense {}",
+            paged.peak_in_flight,
+            dense.peak_in_flight
+        );
+        let ps = paged.paged.expect("paged engine reports pool counters");
+        assert!(ps.prefix_hits > 0, "shared system prompt never hit");
+        assert!(ps.prefix_hit_rate() > 0.0);
+        assert_eq!(ps.cow_copies, 0, "the serving flow never forks a block");
+        assert!(dense.paged.is_none(), "dense engine reports no pool");
+        // resident prefixes skipped their windows: strictly less
+        // admission work for the same served set
+        assert!(paged.prefill.prefill_tokens < dense.prefill.prefill_tokens);
+    }
+
+    /// Pool-pressure scheduling: when the block pool lacks headroom,
+    /// requests wait in the queue (never rejected) and admit as
+    /// completions free blocks — every request is eventually served.
+    #[test]
+    fn paged_pool_pressure_queues_instead_of_rejecting() {
+        // 8 blocks of 4 slots; long distinct prompts (~5 blocks each with
+        // decode room) mean only one fits at a time
+        let mut srv = Server::new(SimEngine::with_paged(8, 4, 8, vec![4, 16]).unwrap(), 0);
+        srv.set_prefill_budget(Some(16));
+        for i in 0..4 {
+            srv.enqueue(format!("request number {i} padded out"), cfg(0.9, 3));
+        }
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 4, "pool pressure must delay, not drop");
+        assert_eq!(srv.stats.rejected, 0);
+        assert_eq!(srv.stats.served, 4);
+        assert!(srv.stats.peak_in_flight < 4, "pool cannot hold all four");
+        // all blocks released once drained (index-resident blocks aside)
+        let ps = srv.stats.paged.expect("paged stats");
+        assert!(ps.blocks_in_use <= ps.pool_blocks);
+        assert_eq!(srv.engine.free_rows(), 8);
     }
 
     #[test]

@@ -620,6 +620,110 @@ fn token_budget_scheduler_matches_unpaced_serving_on_kv_path() {
     assert_eq!(texts[0], texts[1], "budget pacing changed a served stream");
 }
 
+const PAGED_ARTS: &[&str] = &[
+    "logits_tiny",
+    "decode_prefill_paged_tiny",
+    "decode_step_paged_tiny",
+    "decode_prefill_chunk_paged_tiny_c16",
+    "decode_prefill_chunk_paged_tiny_c32",
+];
+
+/// The §2f acceptance contract, end to end: greedy decode over the real
+/// PJRT runtime is byte-identical whether the caches are the dense
+/// (B, S) grid or the pooled block tensors behind per-row block tables —
+/// under both monolithic and chunk-ladder admission.
+#[test]
+fn paged_and_dense_greedy_streams_match_on_kv_path() {
+    let mut needed: Vec<&str> = DECODE_ARTS.to_vec();
+    needed.extend_from_slice(&PAGED_ARTS[1..]);
+    needed.extend_from_slice(&["decode_prefill_chunk_tiny_c16", "decode_prefill_chunk_tiny_c32"]);
+    let Some(rt) = try_runtime(&needed) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 60);
+    let lora = init_lora(&cfg, 61);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6 };
+    let prompts = vec!["Q: 2+3=".to_string(), "The quick brown fox".to_string()];
+    let mut outs = vec![];
+    for paged in [false, true] {
+        for chunked in [false, true] {
+            let gen = Generator::with_path_paged(
+                &rt,
+                "logits_tiny",
+                &[&params, &lora],
+                Some(DecodePath::KvCache),
+                paged,
+            )
+            .unwrap();
+            assert_eq!(gen.paged(), paged);
+            gen.set_chunked_prefill(chunked).unwrap();
+            let mut rng = Rng::new(0);
+            outs.push((paged, chunked, gen.generate_batch(&prompts, greedy, &mut rng).unwrap()));
+        }
+    }
+    for (paged, chunked, out) in &outs[1..] {
+        assert_eq!(
+            out, &outs[0].2,
+            "paged={paged} chunked={chunked} diverged from the dense monolithic stream"
+        );
+    }
+}
+
+/// Shared-prefix reuse through the real artifacts: the second admission
+/// of a prompt sharing a long prefix maps the resident blocks in by
+/// reference (prefix-index hit, fewer prefill window tokens) and still
+/// emits the same greedy stream as a dense decoder.
+#[test]
+fn paged_shared_prefix_reuse_skips_prefill_and_matches_dense() {
+    let mut needed: Vec<&str> = DECODE_ARTS.to_vec();
+    needed.extend_from_slice(&PAGED_ARTS[1..]);
+    needed.extend_from_slice(&["decode_prefill_chunk_tiny_c16", "decode_prefill_chunk_tiny_c32"]);
+    let Some(rt) = try_runtime(&needed) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 62);
+    let lora = init_lora(&cfg, 63);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 5 };
+    // >= 2 full 8-token blocks of shared prefix, distinct tails
+    let prompts =
+        vec!["The quick brown fox jumps".to_string(), "The quick brown fox sleeps".to_string()];
+    let mut streams = vec![];
+    let mut window_tokens = vec![];
+    for paged in [false, true] {
+        let gen = Generator::with_path_paged(
+            &rt,
+            "logits_tiny",
+            &[&params, &lora],
+            Some(DecodePath::KvCache),
+            paged,
+        )
+        .unwrap();
+        gen.set_chunked_prefill(true).unwrap();
+        let mut rng = Rng::new(0);
+        // sequential single-row admissions, so the second can hit the
+        // prefix the first registered
+        let mut out = vec![];
+        for p in &prompts {
+            out.push(gen.generate_batch(&[p.clone()], greedy, &mut rng).unwrap().remove(0));
+        }
+        streams.push(out);
+        window_tokens.push(gen.prefill_stats().prefill_tokens);
+        if paged {
+            let pg = gen.paged_stats().expect("paged generator exposes stats");
+            assert!(pg.prefix_hits >= 1, "second admission missed the resident prefix");
+            assert!(pg.prefix_hit_tokens >= 16, "hit reused {} tokens", pg.prefix_hit_tokens);
+            assert_eq!(pg.cow_copies, 0, "serving flow must never fork a shared block");
+        } else {
+            assert!(gen.paged_stats().is_none());
+        }
+    }
+    assert_eq!(streams[0], streams[1], "prefix reuse changed a greedy stream");
+    assert!(
+        window_tokens[1] < window_tokens[0],
+        "paged prefill fed {} window tokens, dense {}",
+        window_tokens[1],
+        window_tokens[0]
+    );
+}
+
 const SPEC_ARTS: &[&str] = &[
     "logits_tiny",
     "decode_prefill_tiny",
@@ -739,6 +843,46 @@ fn chunked_admission_matches_across_reforward_kvcache_and_speculative() {
             "{path:?} with chunked admission diverged from the reforward stream"
         );
     }
+}
+
+/// Speculative decoding over pooled block caches: the target verifies
+/// through the paged trio (rejection rewinds stay logical — block tables
+/// untouched), the drafter falls back to its dense pair (no paged family
+/// is emitted for tiny_p50), and the greedy stream still matches the
+/// dense speculative stream byte-for-byte.
+#[test]
+fn paged_speculative_greedy_stream_matches_dense() {
+    let mut needed: Vec<&str> = SPEC_ARTS.to_vec();
+    needed.extend_from_slice(&PAGED_ARTS[1..]);
+    needed.push("decode_verify_paged_tiny");
+    let Some(rt) = try_runtime(&needed) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 64);
+    let lora = init_lora(&cfg, 65);
+    let (dparams, dlora) = sliced_drafter(&rt, &cfg, &params);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8 };
+    let prompts = vec!["Q: 2+3=".to_string(), "The quick brown fox".to_string()];
+    let mut outs = vec![];
+    for paged in [false, true] {
+        let gen = Generator::with_speculative_paged(
+            &rt,
+            "logits_tiny",
+            &[&params, &lora],
+            "tiny_p50",
+            &[&dparams, &dlora],
+            paged,
+        )
+        .unwrap();
+        assert_eq!(gen.decode_path(), DecodePath::Speculative);
+        assert_eq!(gen.paged(), paged);
+        let mut rng = Rng::new(0);
+        outs.push(gen.generate_batch(&prompts, greedy, &mut rng).unwrap());
+        if paged {
+            let pg = gen.paged_stats().expect("paged target exposes stats");
+            assert_eq!(pg.cow_copies, 0, "rewinds must stay logical, never fork");
+        }
+    }
+    assert_eq!(outs[0], outs[1], "paged speculative diverged from the dense stream");
 }
 
 /// The pruned-tiny pair as *target*: the pruned proxy self-drafts, and

@@ -14,6 +14,12 @@ Runtime-level skips ("skipping: no PJRT runtime") stay legitimate — a
 missing native xla runtime is an environment property, not an inventory
 bug.
 
+It also rejects a *torn* paged decode family (§2f): a
+`decode_prefill_paged_<m>` on disk without its `decode_step_paged_<m>`
+(or vice versa) means every paged test skips with a perfectly legitimate
+looking line forever — the family is all-or-nothing at emission, so a
+half-present one is a stale artifacts directory, not a choice.
+
 Usage (see ci.sh):
     cargo test --test integration -- --nocapture 2>&1 \
         | python3 tools/skip_audit.py artifacts
@@ -37,14 +43,42 @@ def audit(log: str, art_dir: str):
     return bad, len(skipped), runtime_skips
 
 
+def torn_paged_families(art_dir: str):
+    """Models whose paged decode family is half-emitted: prefill without
+    step or step without prefill (both halves of each artifact counted,
+    like `audit`). The emitter writes the family atomically, so a torn
+    one on disk is a stale/corrupt artifacts directory."""
+    def on_disk(name):
+        return (os.path.exists(os.path.join(art_dir, f"{name}.meta.json"))
+                and os.path.exists(os.path.join(art_dir, f"{name}.hlo.txt")))
+
+    models = set()
+    if os.path.isdir(art_dir):
+        for f in os.listdir(art_dir):
+            m = re.match(r"decode_(?:prefill|step)_paged_(.+)\.meta\.json$", f)
+            if m:
+                models.add(m.group(1))
+    return sorted(
+        m for m in models
+        if on_disk(f"decode_prefill_paged_{m}") != on_disk(f"decode_step_paged_{m}")
+    )
+
+
 def main():
     art_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts"
     log = sys.stdin.read()
     bad, n_skips, n_runtime = audit(log, art_dir)
+    torn = torn_paged_families(art_dir)
     if bad:
         print("skip_audit: tests skipped although their artifacts are "
               "present on disk (stale suite or typo'd artifact name?):")
         for name in bad:
+            print(f"  {name}")
+        sys.exit(1)
+    if torn:
+        print("skip_audit: torn paged decode families (prefill/step "
+              "halves disagree — stale artifacts directory?):")
+        for name in torn:
             print(f"  {name}")
         sys.exit(1)
     print(f"skip_audit: OK — {n_skips} artifact skips (none with artifacts "
