@@ -34,6 +34,28 @@ if [ -d artifacts ] && python3 -c "import sys" >/dev/null 2>&1; then
     echo "$INTEG_LOG" | python3 tools/skip_audit.py artifacts
 fi
 
+# §2g observability lanes: (a) the Rust `Event` enum and the Python trace
+# auditor must agree on the event vocabulary (schema-drift gate); (b) a
+# sim serve run must emit a Perfetto trace whose offline replay conserves
+# requests/tokens/blocks and whose TTFT/ITL percentiles match the exported
+# serverStats bit-for-bit. Pure-stdlib python; the sim engine needs no
+# artifacts or accelerator, so this lane always runs.
+if python3 -c "import sys" >/dev/null 2>&1; then
+    run python3 tools/event_sync_check.py
+    TRACE_OUT=$(mktemp /tmp/loram_trace_XXXXXX.json)
+    run cargo run --release -q -p loram -- serve --engine sim \
+        --requests 24 --sim-mode spec --trace "$TRACE_OUT"
+    run python3 tools/trace_report.py --check "$TRACE_OUT"
+    rm -f "$TRACE_OUT" "${TRACE_OUT%.json}.jsonl"
+    # the auditor's own unit tests are stdlib-only — run them even when
+    # the jax-gated pytest lane below is skipped
+    if python3 -c "import pytest" >/dev/null 2>&1; then
+        (cd python && run python3 -m pytest -q tests/test_trace_report.py)
+    fi
+else
+    echo "WARN: python3 not available; skipping trace audit lanes" >&2
+fi
+
 # L1/L2 python tests (model + AOT emitter contract) when a JAX env exists
 if python3 -c "import jax, pytest" >/dev/null 2>&1; then
     PYTEST_ARGS=(-q tests)

@@ -1,0 +1,236 @@
+"""Offline trace-audit tooling tests (stdlib only — no jax, no cargo).
+
+Exercises `tools/trace_report.py` against synthetic event streams: the
+clean-lifecycle replay must reconstruct the exact TTFT/ITL tick vectors
+(mirroring the `rust/src/obs/audit.rs` unit tests), each conservation law
+must fire on a violating stream, and the percentile interpolation must
+match `util::stats::percentile`'s spot values so the bit-for-bit `--check`
+against an exported `serverStats` block is meaningful.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+
+
+def _load(name, rel):
+    spec = importlib.util.spec_from_file_location(name, REPO / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+tr = _load("trace_report", "tools/trace_report.py")
+sync = _load("event_sync_check", "tools/event_sync_check.py")
+
+
+def ev(kind, tick, **fields):
+    return {"kind": kind, "tick": tick, "wall_ms": 0.0, **fields}
+
+
+def clean_lifecycle():
+    """One request: enqueue@0, admit@1, tokens @2/@3/@5, finish@5.
+    Same shape as audit.rs's `clean_lifecycle_passes` test."""
+    return [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("PrefillWindow", 1, row=0, start=0, bucket=16),
+        ev("DecodeStep", 2, row=0),
+        ev("DecodeStep", 3, row=0),
+        ev("DecodeStep", 5, row=0),
+        ev("Finish", 5, req=0, row=0, tokens=3),
+        ev("Evict", 5, row=0),
+    ]
+
+
+# ---------------------------------------------------------------- replay
+
+
+def test_clean_lifecycle_passes_and_reconstructs_latency_vectors():
+    r = tr.audit(clean_lifecycle())
+    assert r["violations"] == []
+    assert (r["enqueued"], r["admitted"], r["finished"]) == (1, 1, 1)
+    assert r["tokens"] == 3
+    # TTFT = first token tick - enqueue tick; ITL = successive gaps
+    assert r["ttft_ticks"] == [2]
+    assert r["itl_ticks"] == [1, 2]
+
+
+def test_token_conservation_violation_is_caught():
+    events = clean_lifecycle()
+    events[6] = ev("Finish", 5, req=0, row=0, tokens=7)  # lies about count
+    r = tr.audit(events)
+    assert any("Finish says 7" in v for v in r["violations"])
+
+
+def test_token_on_unoccupied_row_is_caught():
+    r = tr.audit([ev("DecodeStep", 3, row=4)])
+    assert any("unoccupied row 4" in v for v in r["violations"])
+
+
+def test_admit_over_live_row_is_caught():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Enqueue", 0, req=1),
+        ev("Admit", 1, req=0, row=0),
+        ev("Admit", 1, req=1, row=0),  # row 0 still occupied by req 0
+    ]
+    r = tr.audit(events)
+    assert any("admit req 1 over live req 0" in v for v in r["violations"])
+
+
+def test_admitted_but_never_finished_is_caught():
+    r = tr.audit([ev("Enqueue", 0, req=0), ev("Admit", 1, req=0, row=0)])
+    assert any("never finished" in v for v in r["violations"])
+    assert any("still occupied" in v for v in r["violations"])
+
+
+def test_block_ledger_discipline():
+    ok = tr.audit([
+        ev("BlockAlloc", 0, block=3),
+        ev("BlockFree", 1, block=3),
+        ev("BlockAlloc", 2, block=3),
+    ])
+    assert ok["violations"] == []
+    assert ok["live_blocks"] == 1
+
+    double = tr.audit([ev("BlockAlloc", 0, block=3), ev("BlockAlloc", 1, block=3)])
+    assert any("allocated while live" in v for v in double["violations"])
+
+    stray = tr.audit([ev("BlockFree", 0, block=9)])
+    assert any("freed while free" in v for v in stray["violations"])
+
+
+def test_verify_round_cannot_accept_more_than_drafted():
+    r = tr.audit([ev("VerifyRound", 2, row=0, k=4, accepted=5)])
+    assert any("accepted 5 > drafted 4" in v for v in r["violations"])
+
+
+def test_unknown_kind_and_missing_fields_are_violations():
+    r = tr.audit([ev("Teleport", 0), {"kind": "Admit", "tick": 1, "req": 0}])
+    assert any("unknown kind 'Teleport'" in v for v in r["violations"])
+    assert any("missing fields ['row']" in v for v in r["violations"])
+
+
+# ------------------------------------------------------------ percentile
+
+
+@pytest.mark.parametrize(
+    "xs, p, want",
+    [
+        ([], 50.0, 0.0),
+        ([7.0], 99.0, 7.0),
+        ([1.0, 2.0, 3.0, 4.0, 5.0], 0.0, 1.0),
+        ([1.0, 2.0, 3.0, 4.0, 5.0], 25.0, 2.0),
+        ([1.0, 2.0, 3.0, 4.0, 5.0], 50.0, 3.0),
+        ([1.0, 2.0, 3.0, 4.0, 5.0], 100.0, 5.0),
+        ([1.0, 2.0], 50.0, 1.5),  # lerp between straddling samples
+        ([1.0, 2.0, 3.0, 4.0], 50.0, 2.5),
+    ],
+)
+def test_percentile_matches_rust_stats_spot_values(xs, p, want):
+    # same spot values as util::stats' unit tests — the formula must be
+    # the rank = (p/100)*(n-1) lerp, not nearest-rank
+    assert tr.percentile(xs, p) == want
+
+
+# ----------------------------------------------------------- check gate
+
+
+def _stats_for(report):
+    return {
+        "served": report["finished"],
+        "rejected": report["rejected"],
+        "total_tokens": report["tokens"],
+        "ttft_tick_p50": tr.percentile(report["ttft_ticks"], 50.0),
+        "ttft_tick_p95": tr.percentile(report["ttft_ticks"], 95.0),
+        "itl_tick_p50": tr.percentile(report["itl_ticks"], 50.0),
+        "itl_tick_p95": tr.percentile(report["itl_ticks"], 95.0),
+    }
+
+
+def test_check_passes_on_consistent_trace():
+    r = tr.audit(clean_lifecycle())
+    assert tr.check(r, _stats_for(r), {"dropped": 0}) == []
+
+
+def test_check_fails_on_percentile_mismatch_dropped_events_and_cow():
+    r = tr.audit(clean_lifecycle())
+    stats = _stats_for(r)
+    stats["ttft_tick_p50"] = stats["ttft_tick_p50"] + 0.25
+    errs = tr.check(r, stats, {})
+    assert any("ttft p50" in e for e in errs)
+
+    errs = tr.check(r, _stats_for(r), {"dropped": 3})
+    assert any("dropped 3 events" in e for e in errs)
+
+    cow = tr.audit(clean_lifecycle() + [ev("CowCopy", 4, block=2)])
+    errs = tr.check(cow, _stats_for(cow), {})
+    assert any("copy-on-write" in e for e in errs)
+
+
+def test_check_requires_serverstats():
+    r = tr.audit(clean_lifecycle())
+    assert any("serverStats" in e for e in tr.check(r, None, {}))
+
+
+# ------------------------------------------------------------- file I/O
+
+
+def test_load_reads_chrome_trace_and_jsonl(tmp_path):
+    events = clean_lifecycle()
+    chrome = tmp_path / "t.json"
+    chrome.write_text(json.dumps({
+        "displayTimeUnit": "ms",
+        "traceEvents": [],
+        "loramEvents": events,
+        "otherData": {"clock": "tick", "dropped": 0},
+        "serverStats": {"served": 1},
+    }))
+    got, stats, other = tr.load(str(chrome))
+    assert got == events and stats == {"served": 1} and other["clock"] == "tick"
+
+    jsonl = tmp_path / "t.jsonl"
+    jsonl.write_text("".join(json.dumps(e) + "\n" for e in events))
+    got, stats, other = tr.load(str(jsonl))
+    assert got == events and stats is None
+
+
+def test_cli_check_mode_on_disk_roundtrip(tmp_path, capsys):
+    r = tr.audit(clean_lifecycle())
+    path = tmp_path / "ok.json"
+    path.write_text(json.dumps({
+        "loramEvents": clean_lifecycle(),
+        "otherData": {"clock": "tick", "dropped": 0},
+        "serverStats": _stats_for(r),
+    }))
+    assert tr.main(["trace_report.py", "--check", str(path)]) == 0
+    assert "bit-for-bit" in capsys.readouterr().out
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({
+        "loramEvents": [ev("DecodeStep", 0, row=0)],
+        "otherData": {"dropped": 0},
+        "serverStats": {},
+    }))
+    assert tr.main(["trace_report.py", "--check", str(bad)]) == 1
+
+
+# ------------------------------------------------------------ schema sync
+
+
+def test_event_schema_is_in_sync_between_rust_and_python():
+    # the real gate CI runs: parse trace.rs + trace_report.py, diff kinds
+    assert sync.main(["event_sync_check.py", str(REPO)]) == 0
+
+
+def test_schema_parsers_see_all_sixteen_kinds_with_fields():
+    variants = sync.parse_rust_enum(str(REPO / "rust/src/obs/trace.rs"))
+    assert [n for n, _ in variants] == list(tr.KINDS)
+    by_name = dict(variants)
+    assert by_name["Finish"] == ["req", "row", "tokens"]
+    assert by_name["SessionRun"] == ["artifact", "h2d_ms", "exec_ms", "d2h_ms"]

@@ -150,22 +150,46 @@ struct ServeEntry {
     stats: ServerStats,
 }
 
+/// `git rev-parse --short HEAD`, or "unknown" outside a git checkout —
+/// every emitted measurement names the code that produced it.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Emit the serving bench trajectory: one distinct entry per decode path.
-fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
+/// Every scalar is read back out of the unified metrics registry
+/// ([`ServerStats::to_metrics`], DESIGN.md §2g) — the registry is the
+/// single export path, so a renamed or dropped counter breaks this bench
+/// instead of silently forking the schema. The file is stamped with the
+/// schema version, git revision, and the run's wall clock.
+fn emit_bench_serve(entries: &[ServeEntry], run_wall_s: f64) -> anyhow::Result<()> {
     let rows: Vec<Json> = entries
         .iter()
         .map(|e| {
             let st = &e.stats;
+            let m = st.to_metrics();
+            let c = |k: &str| Json::num(m.counter(k));
+            let g = |k: &str| Json::num(m.gauge(k));
             let lanes: Vec<Json> = st
                 .per_adapter
-                .iter()
-                .map(|(adapter, lane)| {
+                .keys()
+                .map(|adapter| {
+                    let label = loram::serve::adapter_label(*adapter);
+                    let k = |field: &str| format!("adapter.{label}.{field}");
                     Json::obj(vec![
-                        ("adapter", Json::str(&loram::serve::adapter_label(*adapter))),
-                        ("requests", Json::num(lane.requests as f64)),
-                        ("tokens", Json::num(lane.tokens as f64)),
-                        ("tokens_per_sec", Json::num(lane.tokens_per_sec(st.decode_ms))),
-                        ("mean_ttft_ms", Json::num(lane.mean_ttft_ms())),
+                        ("adapter", Json::str(&label)),
+                        ("requests", c(&k("requests"))),
+                        ("tokens", c(&k("tokens"))),
+                        ("tokens_per_sec", g(&k("tokens_per_sec"))),
+                        ("mean_ttft_ms", g(&k("mean_ttft_ms"))),
                     ])
                 })
                 .collect();
@@ -173,34 +197,31 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
                 ("path", Json::str(e.path)),
                 ("engine", Json::str(e.engine)),
                 ("requests", Json::num(e.requests as f64)),
-                ("tokens_per_sec", Json::num(st.tokens_per_sec())),
-                ("mean_ttft_ms", Json::num(st.mean_ttft_ms())),
-                ("mean_latency_ms", Json::num(st.mean_latency_ms())),
-                ("mean_batch_occupancy", Json::num(st.mean_occupancy())),
-                ("mean_queue_wait_ms", Json::num(st.mean_queue_wait_ms())),
-                ("peak_queue_depth", Json::num(st.peak_queue_depth as f64)),
-                ("decode_steps", Json::num(st.decode_steps as f64)),
-                ("total_tokens", Json::num(st.total_tokens as f64)),
+                ("tokens_per_sec", g("serve.tokens_per_sec")),
+                ("mean_ttft_ms", g("serve.mean_ttft_ms")),
+                ("mean_latency_ms", g("serve.mean_latency_ms")),
+                ("mean_batch_occupancy", g("serve.mean_occupancy")),
+                ("mean_queue_wait_ms", g("serve.mean_queue_wait_ms")),
+                ("peak_queue_depth", g("serve.peak_queue_depth")),
+                ("decode_steps", c("serve.decode_steps")),
+                ("total_tokens", c("serve.total_tokens")),
                 // sim-time latency distributions + the §2e waste counter
-                ("ticks", Json::num(st.ticks as f64)),
-                ("ttft_p50_ticks", Json::num(st.ttft_tick_p(50.0))),
-                ("ttft_p95_ticks", Json::num(st.ttft_tick_p(95.0))),
-                ("itl_p50_ticks", Json::num(st.itl_tick_p(50.0))),
-                ("itl_p95_ticks", Json::num(st.itl_tick_p(95.0))),
-                ("prefill_tokens", Json::num(st.prefill.prefill_tokens as f64)),
-                (
-                    "padded_prefill_tokens",
-                    Json::num(st.prefill.padded_prefill_tokens as f64),
-                ),
-                ("peak_in_flight", Json::num(st.peak_in_flight as f64)),
+                ("ticks", c("serve.ticks")),
+                ("ttft_p50_ticks", g("serve.ttft_tick_p50")),
+                ("ttft_p95_ticks", g("serve.ttft_tick_p95")),
+                ("itl_p50_ticks", g("serve.itl_tick_p50")),
+                ("itl_p95_ticks", g("serve.itl_tick_p95")),
+                ("prefill_tokens", c("prefill.tokens")),
+                ("padded_prefill_tokens", c("prefill.padded_tokens")),
+                ("peak_in_flight", g("serve.peak_in_flight")),
             ];
             // §2f block-pool counters, present only on the paged path
-            if let Some(pg) = &st.paged {
-                fields.push(("prefix_hit_rate", Json::num(pg.prefix_hit_rate())));
-                fields.push(("prefix_hit_tokens", Json::num(pg.prefix_hit_tokens as f64)));
-                fields.push(("blocks_in_use", Json::num(pg.blocks_in_use as f64)));
-                fields.push(("pool_blocks", Json::num(pg.pool_blocks as f64)));
-                fields.push(("cow_copies", Json::num(pg.cow_copies as f64)));
+            if m.has_gauge("paged.prefix_hit_rate") {
+                fields.push(("prefix_hit_rate", g("paged.prefix_hit_rate")));
+                fields.push(("prefix_hit_tokens", c("paged.prefix_hit_tokens")));
+                fields.push(("blocks_in_use", g("paged.blocks_in_use")));
+                fields.push(("pool_blocks", g("paged.pool_blocks")));
+                fields.push(("cow_copies", c("paged.cow_copies")));
             }
             if let Some((k, p)) = e.spec_cfg {
                 fields.push(("draft_k", Json::num(k as f64)));
@@ -210,17 +231,28 @@ fn emit_bench_serve(entries: &[ServeEntry]) -> anyhow::Result<()> {
                     fields.push(("sim_accept_prob", Json::num(p)));
                 }
             }
-            if let Some(sp) = &st.spec {
-                fields.push(("acceptance_rate", Json::num(sp.acceptance_rate())));
-                fields.push(("tokens_per_verify", Json::num(sp.tokens_per_verify())));
-                fields.push(("draft_steps", Json::num(sp.draft_steps as f64)));
-                fields.push(("verify_steps", Json::num(sp.verify_steps as f64)));
+            if m.has_counter("spec.rounds") {
+                fields.push(("acceptance_rate", g("spec.acceptance_rate")));
+                fields.push(("tokens_per_verify", g("spec.tokens_per_verify")));
+                fields.push(("draft_steps", c("spec.draft_steps")));
+                fields.push(("verify_steps", c("spec.verify_steps")));
             }
             fields.push(("adapters", Json::Arr(lanes)));
             Json::obj(fields)
         })
         .collect();
-    let j = Json::obj(vec![("bench", Json::str("serve")), ("entries", Json::Arr(rows))]);
+    let now_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let j = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("schema_version", Json::num(loram::obs::export::TRACE_SCHEMA_VERSION as f64)),
+        ("git_rev", Json::str(&git_rev())),
+        ("generated_unix", Json::num(now_unix)),
+        ("run_wall_s", Json::num(run_wall_s)),
+        ("entries", Json::Arr(rows)),
+    ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
     std::fs::write(path, j.to_string())?;
     for e in entries {
@@ -246,6 +278,7 @@ fn main() -> anyhow::Result<()> {
         .find(|a| !a.starts_with('-'))
         .unwrap_or_default();
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
+    let t_run = std::time::Instant::now();
     println!("loram bench suite (filter: {:?})", filter);
 
     // ---------------- pure-substrate benches -----------------------------
@@ -350,7 +383,7 @@ fn main() -> anyhow::Result<()> {
             let st = serve_shared_prefix_workload(paged, sysp, 32, 16)?;
             entries.push(ServeEntry { path, engine: "sim", requests: 32, spec_cfg: None, stats: st });
         }
-        emit_bench_serve(&entries)?;
+        emit_bench_serve(&entries, t_run.elapsed().as_secs_f64())?;
     }
 
     // ---------------- runtime benches (need artifacts) --------------------
@@ -585,7 +618,7 @@ fn main() -> anyhow::Result<()> {
                 });
             }
         }
-        emit_bench_serve(&entries)?;
+        emit_bench_serve(&entries, t_run.elapsed().as_secs_f64())?;
     }
 
     if run("pallas") {

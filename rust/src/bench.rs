@@ -40,12 +40,14 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Be
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
+    // one sort for both percentiles (stats::percentile re-sorts per call)
+    let pcts = stats::percentiles_of(&samples, &[50.0, 99.0]);
     BenchResult {
         name: name.to_string(),
         iters,
         mean_ms: stats::mean(&samples),
-        p50_ms: stats::percentile(&samples, 50.0),
-        p99_ms: stats::percentile(&samples, 99.0),
+        p50_ms: pcts[0],
+        p99_ms: pcts[1],
         throughput: None,
     }
 }

@@ -136,49 +136,55 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                           prefill: &str,
                           srv: &Server<Generator<'_>>|
      -> Result<()> {
-        let st = &srv.stats;
+        // every cell reads back out of the unified metrics registry
+        // (DESIGN.md §2g) — the CSV cannot drift from BENCH_serve.json or
+        // the serve summary, because all three read the same names
+        let m = srv.stats.to_metrics();
         log::info(format!(
             "tab8 {method} [{decode_path}/{prefill}]: {:.1} tok/s, ttft {:.1} ms, \
              occupancy {:.2}, queue wait {:.2} ms (peak depth {}, {} padded \
              prefill tokens)",
-            st.tokens_per_sec(),
-            st.mean_ttft_ms(),
-            st.mean_occupancy(),
-            st.mean_queue_wait_ms(),
-            st.peak_queue_depth,
-            st.prefill.padded_prefill_tokens
+            m.gauge("serve.tokens_per_sec"),
+            m.gauge("serve.mean_ttft_ms"),
+            m.gauge("serve.mean_occupancy"),
+            m.gauge("serve.mean_queue_wait_ms"),
+            m.gauge("serve.peak_queue_depth") as usize,
+            m.counter("prefill.padded_tokens") as usize
         ));
-        let (rate, dsteps, vsteps) = match &st.spec {
-            Some(sp) => (
-                format!("{:.3}", sp.acceptance_rate()),
-                sp.draft_steps.to_string(),
-                sp.verify_steps.to_string(),
-            ),
-            None => (String::new(), String::new(), String::new()),
+        let spec = m.has_counter("spec.rounds");
+        let (rate, dsteps, vsteps) = if spec {
+            (
+                format!("{:.3}", m.gauge("spec.acceptance_rate")),
+                format!("{}", m.counter("spec.draft_steps") as usize),
+                format!("{}", m.counter("spec.verify_steps") as usize),
+            )
+        } else {
+            (String::new(), String::new(), String::new())
         };
-        let (hit_rate, blocks, cow) = match &st.paged {
-            Some(p) => (
-                format!("{:.3}", p.prefix_hit_rate()),
-                p.blocks_in_use.to_string(),
-                p.cow_copies.to_string(),
-            ),
-            None => (String::new(), String::new(), String::new()),
+        let (hit_rate, blocks, cow) = if m.has_gauge("paged.prefix_hit_rate") {
+            (
+                format!("{:.3}", m.gauge("paged.prefix_hit_rate")),
+                format!("{}", m.gauge("paged.blocks_in_use") as usize),
+                format!("{}", m.counter("paged.cow_copies") as usize),
+            )
+        } else {
+            (String::new(), String::new(), String::new())
         };
         scsv.row(&crate::csv_row![
             method,
             decode_path,
             prefill,
             "all",
-            st.admitted,
-            format!("{:.2}", st.tokens_per_sec()),
-            format!("{:.2}", st.mean_ttft_ms()),
-            format!("{:.2}", st.mean_latency_ms()),
-            format!("{:.3}", st.mean_occupancy()),
-            format!("{:.2}", st.mean_queue_wait_ms()),
-            st.peak_queue_depth,
-            st.prefill.padded_prefill_tokens,
-            format!("{:.0}", st.ttft_tick_p(95.0)),
-            format!("{:.0}", st.itl_tick_p(95.0)),
+            m.counter("serve.admitted") as usize,
+            format!("{:.2}", m.gauge("serve.tokens_per_sec")),
+            format!("{:.2}", m.gauge("serve.mean_ttft_ms")),
+            format!("{:.2}", m.gauge("serve.mean_latency_ms")),
+            format!("{:.3}", m.gauge("serve.mean_occupancy")),
+            format!("{:.2}", m.gauge("serve.mean_queue_wait_ms")),
+            m.gauge("serve.peak_queue_depth") as usize,
+            m.counter("prefill.padded_tokens") as usize,
+            format!("{:.0}", m.gauge("serve.ttft_tick_p95")),
+            format!("{:.0}", m.gauge("serve.itl_tick_p95")),
             rate,
             dsteps,
             vsteps,
@@ -186,9 +192,11 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             blocks,
             cow
         ])?;
-        for (adapter, lane) in &st.per_adapter {
-            let lane_rate = if st.spec.is_some() {
-                format!("{:.3}", lane.draft_accept_share())
+        for adapter in srv.stats.per_adapter.keys() {
+            let label = crate::serve::adapter_label(*adapter);
+            let k = |field: &str| format!("adapter.{label}.{field}");
+            let lane_rate = if spec {
+                format!("{:.3}", m.gauge(&k("draft_accept_share")))
             } else {
                 String::new()
             };
@@ -196,11 +204,11 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 method,
                 decode_path,
                 prefill,
-                crate::serve::adapter_label(*adapter),
-                lane.requests,
-                format!("{:.2}", lane.tokens_per_sec(st.decode_ms)),
-                format!("{:.2}", lane.mean_ttft_ms()),
-                format!("{:.2}", lane.mean_latency_ms()),
+                label,
+                m.counter(&k("requests")) as usize,
+                format!("{:.2}", m.gauge(&k("tokens_per_sec"))),
+                format!("{:.2}", m.gauge(&k("mean_ttft_ms"))),
+                format!("{:.2}", m.gauge(&k("mean_latency_ms"))),
                 "",
                 "",
                 "",

@@ -38,6 +38,8 @@
 //! row already computed, and [`PagedKv`] carries each row's table. Same
 //! `KvDecoder` surface, probing `decode_*_paged_<model>` artifact names.
 
+use crate::obs::trace::{self, Event};
+use crate::obs::Metrics;
 use crate::runtime::{Runtime, Session};
 use crate::tensor::{Dtype, Tensor, TensorStore};
 use crate::tokenizer::{pad_to, PAD};
@@ -142,6 +144,15 @@ impl PrefillStats {
             chunks: self.chunks + other.chunks,
         }
     }
+
+    /// Export into the unified registry (DESIGN.md §2g) under `prefill.*`.
+    pub fn export_into(&self, m: &mut Metrics) {
+        m.set_counter("prefill.tokens", self.prefill_tokens as f64);
+        m.set_counter("prefill.padded_tokens", self.padded_prefill_tokens as f64);
+        m.set_counter("prefill.chunks", self.chunks as f64);
+        let share = self.padded_prefill_tokens as f64 / self.prefill_tokens.max(1) as f64;
+        m.set_gauge("prefill.padded_share", share);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -238,6 +249,7 @@ impl BlockPool {
         debug_assert_eq!(self.refcnt[id], 0);
         self.refcnt[id] = 1;
         self.pinned[id] = false;
+        trace::emit(|| Event::BlockAlloc { block: id });
         Some(id)
     }
 
@@ -257,6 +269,7 @@ impl BlockPool {
         if self.refcnt[id] == 0 {
             self.pinned[id] = false;
             self.free.push(id);
+            trace::emit(|| Event::BlockFree { block: id });
         }
         Ok(())
     }
@@ -284,6 +297,7 @@ impl BlockPool {
         ensure!(!self.pinned[id], "kvcache: refusing to evict pinned block {id}");
         self.refcnt[id] = 0;
         self.free.push(id);
+        trace::emit(|| Event::BlockFree { block: id });
         Ok(())
     }
 
@@ -302,6 +316,7 @@ impl BlockPool {
             .with_context(|| format!("kvcache: pool exhausted forking shared block {id}"))?;
         self.refcnt[id] -= 1;
         self.cow_copies += 1;
+        trace::emit(|| Event::CowCopy { block: fresh });
         Ok(fresh)
     }
 }
@@ -471,6 +486,18 @@ impl PagedStats {
     pub fn utilization(&self) -> f64 {
         self.blocks_in_use as f64 / self.pool_blocks.max(1) as f64
     }
+
+    /// Export into the unified registry (DESIGN.md §2g) under `paged.*`.
+    pub fn export_into(&self, m: &mut Metrics) {
+        m.set_counter("paged.lookups", self.lookups as f64);
+        m.set_counter("paged.prefix_hits", self.prefix_hits as f64);
+        m.set_counter("paged.prefix_hit_tokens", self.prefix_hit_tokens as f64);
+        m.set_counter("paged.cow_copies", self.cow_copies as f64);
+        m.set_gauge("paged.blocks_in_use", self.blocks_in_use as f64);
+        m.set_gauge("paged.pool_blocks", self.pool_blocks as f64);
+        m.set_gauge("paged.prefix_hit_rate", self.prefix_hit_rate());
+        m.set_gauge("paged.utilization", self.utilization());
+    }
 }
 
 /// One admitted row's view of the pool: its physical block run, of which
@@ -614,6 +641,7 @@ impl PagedKv {
             if shared > 0 {
                 self.prefix_hits += 1;
                 self.prefix_hit_tokens += shared * bs;
+                trace::emit(|| Event::PrefixHit { blocks: shared, tokens: shared * bs });
             }
             for &id in &blocks {
                 self.pool.retain(id)?;
@@ -1476,6 +1504,7 @@ impl KvDecoder {
         pstats.prefill_tokens += bucket;
         pstats.padded_prefill_tokens += bucket - window.len();
         pstats.chunks += 1;
+        trace::emit(|| Event::PrefillWindow { row, start, bucket });
         Ok(())
     }
 
@@ -1787,7 +1816,11 @@ impl KvDecoder {
     /// rolled-back positions live in the row's own private blocks — the
     /// re-decode overwrites them there, never needing a fork).
     pub fn rewind(&mut self, row: usize, n: usize) -> Result<()> {
-        self.slots.rewind(row, n)
+        self.slots.rewind(row, n)?;
+        if n > 0 {
+            trace::emit(|| Event::Rewind { row, n });
+        }
+        Ok(())
     }
 
     /// Free a row's cache slot after `take`; a paged decoder also releases
@@ -1798,6 +1831,7 @@ impl KvDecoder {
         if let Some(pk) = self.paged.as_mut() {
             pk.evict_row(row)?;
         }
+        trace::emit(|| Event::Evict { row });
         Ok(())
     }
 }

@@ -29,6 +29,8 @@
 
 use super::generate::argmax;
 use super::kvcache::{KvDecoder, VerifyFeed};
+use crate::obs::trace::{self, Event};
+use crate::obs::Metrics;
 use crate::runtime::Runtime;
 use crate::tensor::TensorStore;
 use crate::tokenizer::PAD;
@@ -62,6 +64,18 @@ impl SpecStats {
     /// target forward amortises over this many tokens).
     pub fn tokens_per_verify(&self) -> f64 {
         self.emitted_tokens as f64 / self.verify_steps.max(1) as f64
+    }
+
+    /// Export into the unified registry (DESIGN.md §2g) under `spec.*`.
+    pub fn export_into(&self, m: &mut Metrics) {
+        m.set_counter("spec.rounds", self.rounds as f64);
+        m.set_counter("spec.draft_steps", self.draft_steps as f64);
+        m.set_counter("spec.verify_steps", self.verify_steps as f64);
+        m.set_counter("spec.drafted_tokens", self.drafted_tokens as f64);
+        m.set_counter("spec.accepted_tokens", self.accepted_tokens as f64);
+        m.set_counter("spec.emitted_tokens", self.emitted_tokens as f64);
+        m.set_gauge("spec.acceptance_rate", self.acceptance_rate());
+        m.set_gauge("spec.tokens_per_verify", self.tokens_per_verify());
     }
 }
 
@@ -466,6 +480,7 @@ impl SpecDecoder {
             }
             self.stats.accepted_tokens += a.min(p);
             self.stats.emitted_tokens += p;
+            trace::emit(|| Event::VerifyRound { row, k: ke, accepted: a.min(p) });
             out.push(Some(SpecRowOut::Greedy {
                 tokens: target_tok[..p].to_vec(),
                 accepted: a.min(p),

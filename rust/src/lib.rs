@@ -21,12 +21,14 @@
 //! * [`coordinator`] — pipeline, training loops, evaluators, experiments,
 //!   and the decode state machine behind generation
 //! * [`serve`] — continuous-batching generation scheduler
+//! * [`obs`] — request-lifecycle tracing + unified metrics registry
 //! * [`bench`] — bench harness (no criterion in the vendor set)
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod memory;
+pub mod obs;
 pub mod params;
 pub mod pruning;
 pub mod quant;

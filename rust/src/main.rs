@@ -23,9 +23,10 @@ use loram::data::instruct::Dataset;
 use loram::memory;
 use loram::params::init_lora;
 use loram::runtime::Runtime;
-use loram::serve::Server;
+use loram::serve::{Server, SimEngine};
 use loram::tensor::TensorStore;
 use loram::util::cli::Args;
+use loram::util::json::Json;
 use loram::util::log;
 use loram::util::rng::Rng;
 use std::path::{Path, PathBuf};
@@ -48,6 +49,9 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "memory" => cmd_memory(),
+        // artifact-free serving: the scheduler over a SimEngine, no PJRT
+        // runtime or artifact dir needed (CI exercises `--trace` this way)
+        "serve" if args.get("engine") == Some("sim") => cmd_serve_sim(args),
         sub => {
             let dir = args
                 .get("artifacts")
@@ -106,12 +110,20 @@ usage: loram <subcommand> [--key value] [--flag]
              [--block-size N]          assert the paged family's KV block
                                        size is N (sanity check only; the
                                        size is baked into the artifacts)
+             [--engine pjrt|sim]       sim: artifact-free scheduler run on
+                                       the deterministic tick clock
+                                       ([--sim-mode chunked|spec|paged]
+                                       [--batch N])
+             [--trace out.json]        write a Perfetto-loadable Chrome
+                                       trace (+ .jsonl event log); audit
+                                       it with tools/trace_report.py
   downstream --base tiny [--lora f.lmck]    math / CSR / code battery
   memory                                    paper Tables 4-6 (exact, analytic)
   repro      --exp fig3|fig4|tab1|fig5|fig6|fig7|fig8|tab456|tab7|tab8|fig16|appD|all
              [--scale smoke|paper] [--seed N]
 
-common: --artifacts DIR (default artifacts/), --quiet
+common: --artifacts DIR (default artifacts/), --quiet,
+        LORAM_LOG=error|warn|info|debug (log threshold; tick-stamped under --trace)
 ";
 
 fn cmd_info(rt: &Runtime) -> Result<()> {
@@ -316,7 +328,130 @@ fn drafter_weights(
     )
 }
 
+/// `--trace out.json`: install the bounded ring sink before any request
+/// is enqueued. Wall clocks run only on the PJRT engine — sim traces stay
+/// on the tick clock alone, so identical runs export identical bytes.
+fn trace_begin(args: &Args, wall: bool) {
+    if args.get("trace").is_some() {
+        loram::obs::trace::install(loram::obs::trace::DEFAULT_CAP, wall);
+    }
+}
+
+/// Drain the sink into the Chrome-trace file (+ `.jsonl` sibling), with
+/// the scheduler's own percentiles embedded for `tools/trace_report.py
+/// --check` to cross-check against its replay of the raw events.
+fn trace_finish(args: &Args, st: &loram::serve::ServerStats) -> Result<()> {
+    let Some(path) = args.get("trace") else { return Ok(()) };
+    let sink = loram::obs::trace::take()
+        .context("--trace set but the sink is gone (double finish?)")?;
+    let ps = [50.0, 95.0];
+    let ttft = st.ttft_tick_pcts(&ps);
+    let itl = st.itl_tick_pcts(&ps);
+    let mut stats = vec![
+        ("served", Json::num(st.served as f64)),
+        ("admitted", Json::num(st.admitted as f64)),
+        ("rejected", Json::num(st.rejected as f64)),
+        ("total_tokens", Json::num(st.total_tokens as f64)),
+        ("ticks", Json::num(st.ticks as f64)),
+        ("ttft_tick_p50", Json::num(ttft[0])),
+        ("ttft_tick_p95", Json::num(ttft[1])),
+        ("itl_tick_p50", Json::num(itl[0])),
+        ("itl_tick_p95", Json::num(itl[1])),
+    ];
+    if let Some(pg) = &st.paged {
+        stats.push(("cow_copies", Json::num(pg.cow_copies as f64)));
+        stats.push(("blocks_in_use", Json::num(pg.blocks_in_use as f64)));
+    }
+    let jsonl = loram::obs::export::write_trace_files(
+        Path::new(path),
+        &sink,
+        vec![("serverStats", Json::obj(stats))],
+    )?;
+    println!(
+        "trace: {} events ({} dropped) -> {path} (+ {})",
+        sink.len(),
+        sink.dropped(),
+        jsonl.display()
+    );
+    Ok(())
+}
+
+/// `serve --engine sim`: the scheduler over a [`SimEngine`] — no
+/// artifacts, no PJRT, deterministic on the tick clock. The cheapest way
+/// to produce a complete `--trace` file (the ci.sh trace lane), and a
+/// scheduler demo that runs anywhere.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 24);
+    let batch = args.get_usize("batch", 4);
+    let mode = args.get_or("sim-mode", "chunked");
+    trace_begin(args, false);
+    let mut server = match mode {
+        "chunked" => Server::new(SimEngine::with_prefill(batch, vec![16, 64], false), 0),
+        "spec" => Server::new(
+            SimEngine::with_spec(
+                batch,
+                args.get_usize("spec-k", 4),
+                args.get_f64("accept", 0.7),
+                args.get_usize("seed", 0) as u64,
+            ),
+            0,
+        ),
+        // same-bytes sizing as the §2f tests: pool 8·batch blocks × 8
+        // slots, rows decoupled from the grid
+        "paged" => Server::new(
+            SimEngine::with_paged(8 * batch, 8, 8 * batch, vec![16, 64])?,
+            0,
+        ),
+        other => bail!("bad --sim-mode '{other}' (chunked|spec|paged)"),
+    };
+    if mode != "spec" {
+        server.set_prefill_budget(Some(args.get_usize("prefill-budget", 16)));
+    }
+    let sys = "system: you are a terse helpful assistant. ";
+    for i in 0..n {
+        let prompt = match mode {
+            // shared system prompt: exercises prefix reuse + block ledger
+            "paged" => format!("{sys}user {i}"),
+            _ if i % 3 == 0 => "L".repeat(60), // near-grid-long
+            _ => format!("req {i}"),
+        };
+        server.enqueue(prompt, serve_cfg(i));
+    }
+    let responses = server.drain()?;
+    anyhow::ensure!(responses.len() == n, "sim served {} of {n}", responses.len());
+    let st = &server.stats;
+    println!(
+        "sim[{mode}] served {} requests over {} ticks — {} tokens, \
+         ttft p50/p95 {:.0}/{:.0} ticks, itl p95 {:.0} ticks, peak {} rows",
+        st.served,
+        st.ticks,
+        st.total_tokens,
+        st.ttft_tick_p(50.0),
+        st.ttft_tick_p(95.0),
+        st.itl_tick_p(95.0),
+        st.peak_in_flight
+    );
+    if let Some(pg) = &st.paged {
+        println!(
+            "paged kv: {} prefix hits ({} tokens reused), {}/{} blocks in \
+             use, {} cow copies",
+            pg.prefix_hits,
+            pg.prefix_hit_tokens,
+            pg.blocks_in_use,
+            pg.pool_blocks,
+            pg.cow_copies
+        );
+    }
+    trace_finish(args, st)
+}
+
 fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
+    if let Some(e) = args.get("engine") {
+        if e != "pjrt" {
+            bail!("bad --engine '{e}' (pjrt|sim)");
+        }
+    }
+    trace_begin(args, true);
     let base = args.get_or("base", "tiny");
     let (params, lora) = load_weights(rt, args, base)?;
     let path = match args.get_or("decode-path", "auto") {
@@ -553,7 +688,7 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
             lane.mean_ttft_ms()
         );
     }
-    Ok(())
+    trace_finish(args, st)
 }
 
 /// Mixed per-request sampling configs for the serve demo workload.

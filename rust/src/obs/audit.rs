@@ -1,0 +1,298 @@
+//! In-process trace auditor — the Rust mirror of `tools/trace_report.py`.
+//!
+//! Replays a raw event stream and checks the scheduler's conservation
+//! laws, reconstructing the TTFT/ITL tick distributions exactly as
+//! `serve::Server::step` accumulates them (same per-row first-token /
+//! last-token-tick state machine, same event order), so tests can assert
+//! `audit.ttft_ticks == stats.ttft_ticks` element-for-element. The Python
+//! tool applies the identical rules to exported traces; this module is
+//! what lets `cargo test` enforce them without Python.
+//!
+//! Laws checked (violations are human-readable strings):
+//! 1. per request: enqueue ≤ admit ≤ first-token ≤ finish (tick order)
+//! 2. token conservation: DecodeStep count per request == `Finish.tokens`
+//! 3. lifecycle: every admitted request finishes or is rejected; no
+//!    decode on an unoccupied row; no double-admit of a live row
+//! 4. block discipline: no alloc of a live block, no free of a dead one
+//!    (end-of-run residency is reported, not judged — the prefix index
+//!    legitimately holds blocks across requests)
+//! 5. `cow_copies` is reported for the caller to judge (0 under serve —
+//!    the §2f share-only-full-blocks invariant)
+
+use super::trace::{Event, Stamped};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+struct Life {
+    enq: Option<u64>,
+    admit: Option<u64>,
+    first_tok: Option<u64>,
+    last_tok: Option<u64>,
+    finish: Option<u64>,
+    tokens: usize,
+    finish_tokens: Option<usize>,
+    rejected: bool,
+}
+
+/// Replay result: violations plus the reconstructed distributions.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub violations: Vec<String>,
+    /// enqueue → first-token tick counts, in `Server::step` push order
+    pub ttft_ticks: Vec<usize>,
+    /// inter-token tick gaps, in `Server::step` push order
+    pub itl_ticks: Vec<usize>,
+    pub enqueued: usize,
+    pub admitted: usize,
+    pub finished: usize,
+    pub rejected: usize,
+    pub requeues: usize,
+    pub tokens: usize,
+    /// blocks still allocated when the trace ends
+    pub live_blocks: usize,
+    pub cow_copies: usize,
+    pub prefix_hits: usize,
+    pub verify_rounds: usize,
+}
+
+impl AuditReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Replay `events` (chronological emission order, as a `TraceSink` stores
+/// them) and check every conservation law.
+pub fn audit(events: &[Stamped]) -> AuditReport {
+    let mut r = AuditReport::default();
+    let mut lives: BTreeMap<u64, Life> = BTreeMap::new();
+    // engine row -> occupant request
+    let mut rows: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut live_blocks: BTreeMap<usize, u64> = BTreeMap::new();
+
+    for s in events {
+        let t = s.tick;
+        match &s.ev {
+            Event::Enqueue { req } => {
+                r.enqueued += 1;
+                let l = lives.entry(*req).or_default();
+                if l.enq.is_some() {
+                    r.violations.push(format!("req {req}: enqueued twice"));
+                }
+                l.enq = Some(t);
+            }
+            Event::Requeue { .. } => r.requeues += 1,
+            Event::Admit { req, row } => {
+                r.admitted += 1;
+                if let Some(prev) = rows.get(row) {
+                    r.violations
+                        .push(format!("row {row}: admit req {req} over live req {prev}"));
+                }
+                rows.insert(*row, *req);
+                let l = lives.entry(*req).or_default();
+                if l.admit.is_some() {
+                    r.violations.push(format!("req {req}: admitted twice"));
+                }
+                match l.enq {
+                    None => r.violations.push(format!("req {req}: admitted, never enqueued")),
+                    Some(e) if t < e => {
+                        r.violations.push(format!("req {req}: admit tick {t} < enqueue {e}"))
+                    }
+                    _ => {}
+                }
+                l.admit = Some(t);
+            }
+            Event::Reject { req } => {
+                r.rejected += 1;
+                let l = lives.entry(*req).or_default();
+                l.rejected = true;
+                // mid-flight rejection frees the row
+                if let Some(&row) =
+                    rows.iter().find_map(|(row, occ)| (occ == req).then_some(row))
+                {
+                    rows.remove(&row);
+                }
+            }
+            Event::DecodeStep { row } => {
+                r.tokens += 1;
+                let Some(req) = rows.get(row).copied() else {
+                    r.violations.push(format!("tick {t}: token on unoccupied row {row}"));
+                    continue;
+                };
+                let l = lives.entry(req).or_default();
+                l.tokens += 1;
+                // exact Server::step replication: TTFT on the first token,
+                // an ITL gap for every token with a predecessor
+                if l.first_tok.is_none() {
+                    l.first_tok = Some(t);
+                    let enq = l.enq.unwrap_or(t);
+                    r.ttft_ticks.push((t - enq.min(t)) as usize);
+                }
+                if let Some(last) = l.last_tok {
+                    r.itl_ticks.push((t - last.min(t)) as usize);
+                }
+                l.last_tok = Some(t);
+            }
+            Event::Finish { req, row, tokens } => {
+                r.finished += 1;
+                match rows.remove(row) {
+                    None => {
+                        r.violations.push(format!("req {req}: finish on unoccupied row {row}"))
+                    }
+                    Some(occ) if occ != *req => r.violations.push(format!(
+                        "row {row}: finish req {req} but occupant is req {occ}"
+                    )),
+                    _ => {}
+                }
+                let l = lives.entry(*req).or_default();
+                l.finish = Some(t);
+                l.finish_tokens = Some(*tokens);
+            }
+            Event::BlockAlloc { block } => {
+                if live_blocks.insert(*block, t).is_some() {
+                    r.violations.push(format!("block {block}: allocated while live"));
+                }
+            }
+            Event::BlockFree { block } => {
+                if live_blocks.remove(block).is_none() {
+                    r.violations.push(format!("block {block}: freed while free"));
+                }
+            }
+            Event::CowCopy { .. } => r.cow_copies += 1,
+            Event::PrefixHit { .. } => r.prefix_hits += 1,
+            Event::VerifyRound { k, accepted, .. } => {
+                r.verify_rounds += 1;
+                if accepted > k {
+                    r.violations
+                        .push(format!("tick {t}: verify accepted {accepted} > drafted {k}"));
+                }
+            }
+            // informational: no conservation law attaches
+            Event::PrefillWindow { .. }
+            | Event::Rewind { .. }
+            | Event::Evict { .. }
+            | Event::Gauge { .. }
+            | Event::SessionRun { .. } => {}
+        }
+    }
+
+    for (req, l) in &lives {
+        let (Some(enq), Some(admit)) = (l.enq, l.admit) else {
+            if l.admit.is_some() {
+                // already flagged above
+            } else if !l.rejected && l.enq.is_some() {
+                r.violations.push(format!("req {req}: enqueued but never admitted or rejected"));
+            }
+            continue;
+        };
+        if l.rejected {
+            continue;
+        }
+        let Some(finish) = l.finish else {
+            r.violations.push(format!("req {req}: admitted but never finished"));
+            continue;
+        };
+        let Some(first) = l.first_tok else {
+            r.violations.push(format!("req {req}: finished without a first token"));
+            continue;
+        };
+        if !(enq <= admit && admit <= first && first <= finish) {
+            r.violations.push(format!(
+                "req {req}: tick order broken (enq {enq} ≤ admit {admit} ≤ first {first} ≤ finish {finish})"
+            ));
+        }
+        if let Some(ft) = l.finish_tokens {
+            if ft != l.tokens {
+                r.violations.push(format!(
+                    "req {req}: {} DecodeStep tokens but Finish says {ft}",
+                    l.tokens
+                ));
+            }
+        }
+    }
+    if !rows.is_empty() {
+        let stuck: Vec<String> = rows.iter().map(|(row, req)| format!("{row}:req {req}")).collect();
+        r.violations.push(format!("rows still occupied at end of trace: {}", stuck.join(", ")));
+    }
+    r.live_blocks = live_blocks.len();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(tick: u64, ev: Event) -> Stamped {
+        Stamped { tick, wall_ms: 0.0, ev }
+    }
+
+    #[test]
+    fn clean_lifecycle_passes_and_reconstructs_latencies() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(2, Event::DecodeStep { row: 0 }), // ttft = 2
+            st(3, Event::DecodeStep { row: 0 }), // itl = 1
+            st(5, Event::DecodeStep { row: 0 }), // itl = 2
+            st(5, Event::Finish { req: 0, row: 0, tokens: 3 }),
+        ];
+        let a = audit(&evs);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!(a.ttft_ticks, vec![2]);
+        assert_eq!(a.itl_ticks, vec![1, 2]);
+        assert_eq!(a.tokens, 3);
+        assert_eq!(a.finished, 1);
+    }
+
+    #[test]
+    fn token_mismatch_and_orphan_rows_are_violations() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::DecodeStep { row: 0 }),
+            st(1, Event::DecodeStep { row: 3 }), // unoccupied row
+            st(2, Event::Finish { req: 0, row: 0, tokens: 9 }), // wrong total
+            st(2, Event::Enqueue { req: 1 }),
+            st(2, Event::Admit { req: 1, row: 1 }), // never finishes
+        ];
+        let a = audit(&evs);
+        assert!(!a.ok());
+        let text = a.violations.join("\n");
+        assert!(text.contains("unoccupied row 3"), "{text}");
+        assert!(text.contains("Finish says 9"), "{text}");
+        assert!(text.contains("req 1: admitted but never finished"), "{text}");
+        assert!(text.contains("rows still occupied"), "{text}");
+    }
+
+    #[test]
+    fn block_discipline_is_enforced() {
+        let evs = vec![
+            st(0, Event::BlockAlloc { block: 4 }),
+            st(0, Event::BlockAlloc { block: 4 }), // double alloc
+            st(1, Event::BlockFree { block: 4 }),
+            st(1, Event::BlockFree { block: 7 }), // free of a dead block
+            st(2, Event::BlockAlloc { block: 5 }), // stays live at end
+        ];
+        let a = audit(&evs);
+        let text = a.violations.join("\n");
+        assert!(text.contains("block 4: allocated while live"), "{text}");
+        assert!(text.contains("block 7: freed while free"), "{text}");
+        assert_eq!(a.live_blocks, 1);
+    }
+
+    #[test]
+    fn mid_flight_reject_frees_the_row() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::Reject { req: 0 }),
+            st(1, Event::Enqueue { req: 1 }),
+            st(1, Event::Admit { req: 1, row: 0 }),
+            st(2, Event::DecodeStep { row: 0 }),
+            st(2, Event::Finish { req: 1, row: 0, tokens: 1 }),
+        ];
+        let a = audit(&evs);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!(a.rejected, 1);
+    }
+}

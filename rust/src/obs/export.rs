@@ -1,0 +1,427 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto-loadable) + JSONL.
+//!
+//! `serve --trace out.json` writes one Chrome trace-format object with
+//! three extra top-level keys Perfetto ignores but `tools/trace_report.py`
+//! reads: `loramEvents` (the raw typed events), `serverStats` (the
+//! scheduler's own percentiles, for the bit-for-bit cross-check) and
+//! `otherData` (clock domain, drop count, schema version). A compact
+//! `out.jsonl` sibling carries the same raw events one-per-line.
+//!
+//! Chrome-trace mapping (all `ts` in the tick domain, 1 tick = 1000 µs so
+//! Perfetto renders one tick per millisecond):
+//! * request lifecycle → `B`/`E` span "req N" on the row's thread track
+//! * `PrefillWindow`   → `X` slice on the row track (`args.start/bucket`)
+//! * `DecodeStep` / `VerifyRound` / `Rewind` / `Evict` → thread instants
+//! * queue events (`Enqueue`/`Reject`/`Requeue`) → instants on tid 0
+//! * block events → instants on the `kv-pool` track (tid 900)
+//! * `SessionRun` → `X` on the `session` track (tid 901), dur = measured ms
+//! * `Gauge` → `C` counter tracks (queue depth, in-flight, blocks in use)
+
+use super::trace::{Event, Stamped, TraceSink};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Trace file schema version (bump on breaking event/field changes).
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+pub const TID_SCHED: usize = 0;
+pub const TID_KV: usize = 900;
+pub const TID_SESSION: usize = 901;
+
+fn row_tid(row: usize) -> usize {
+    row + 1
+}
+
+/// One raw event as a flat JSON object: `tick`, `wall_ms`, `kind`, fields.
+pub fn event_json(s: &Stamped) -> Json {
+    let mut f: Vec<(&str, Json)> = vec![
+        ("tick", Json::num(s.tick as f64)),
+        ("wall_ms", Json::num(s.wall_ms)),
+        ("kind", Json::str(s.ev.kind())),
+    ];
+    match &s.ev {
+        Event::Enqueue { req } | Event::Reject { req } | Event::Requeue { req } => {
+            f.push(("req", Json::num(*req as f64)));
+        }
+        Event::Admit { req, row } => {
+            f.push(("req", Json::num(*req as f64)));
+            f.push(("row", Json::num(*row as f64)));
+        }
+        Event::PrefillWindow { row, start, bucket } => {
+            f.push(("row", Json::num(*row as f64)));
+            f.push(("start", Json::num(*start as f64)));
+            f.push(("bucket", Json::num(*bucket as f64)));
+        }
+        Event::DecodeStep { row } | Event::Evict { row } => {
+            f.push(("row", Json::num(*row as f64)));
+        }
+        Event::VerifyRound { row, k, accepted } => {
+            f.push(("row", Json::num(*row as f64)));
+            f.push(("k", Json::num(*k as f64)));
+            f.push(("accepted", Json::num(*accepted as f64)));
+        }
+        Event::Rewind { row, n } => {
+            f.push(("row", Json::num(*row as f64)));
+            f.push(("n", Json::num(*n as f64)));
+        }
+        Event::Finish { req, row, tokens } => {
+            f.push(("req", Json::num(*req as f64)));
+            f.push(("row", Json::num(*row as f64)));
+            f.push(("tokens", Json::num(*tokens as f64)));
+        }
+        Event::BlockAlloc { block } | Event::BlockFree { block } | Event::CowCopy { block } => {
+            f.push(("block", Json::num(*block as f64)));
+        }
+        Event::PrefixHit { blocks, tokens } => {
+            f.push(("blocks", Json::num(*blocks as f64)));
+            f.push(("tokens", Json::num(*tokens as f64)));
+        }
+        Event::Gauge { name, value } => {
+            f.push(("name", Json::str(*name)));
+            f.push(("value", Json::num(*value)));
+        }
+        Event::SessionRun { artifact, h2d_ms, exec_ms, d2h_ms } => {
+            f.push(("artifact", Json::str(artifact.clone())));
+            f.push(("h2d_ms", Json::num(*h2d_ms)));
+            f.push(("exec_ms", Json::num(*exec_ms)));
+            f.push(("d2h_ms", Json::num(*d2h_ms)));
+        }
+    }
+    Json::obj(f)
+}
+
+/// Compact event log: one `event_json` object per line.
+pub fn jsonl(events: &[Stamped]) -> String {
+    let mut out = String::new();
+    for s in events {
+        out.push_str(&event_json(s).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn ts(tick: u64) -> f64 {
+    (tick * 1000) as f64
+}
+
+fn te(name: &str, ph: &str, tick: u64, tid: usize, args: Vec<(&str, Json)>) -> Json {
+    let mut f = vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str(ph)),
+        ("ts", Json::num(ts(tick))),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(tid as f64)),
+    ];
+    if ph == "i" {
+        f.push(("s", Json::str("t"))); // thread-scoped instant
+    }
+    if !args.is_empty() {
+        f.push(("args", Json::obj(args)));
+    }
+    Json::obj(f)
+}
+
+fn meta_thread(tid: usize, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("thread_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// Build the Chrome trace-event array from raw events.
+pub fn chrome_events(events: &[Stamped]) -> Vec<Json> {
+    let mut out: Vec<Json> = Vec::new();
+    // open request spans: row -> (req, admit tick)
+    let mut open: BTreeMap<usize, (u64, u64)> = BTreeMap::new();
+    // admitted request -> row, for closing the span on a mid-flight Reject
+    let mut req_row: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut used_rows: Vec<usize> = Vec::new();
+    let mut saw_kv = false;
+    let mut saw_session = false;
+    let mut last_tick: u64 = 0;
+
+    for s in events {
+        last_tick = last_tick.max(s.tick);
+        match &s.ev {
+            Event::Enqueue { req } => {
+                out.push(te(&format!("enqueue req {req}"), "i", s.tick, TID_SCHED, vec![]));
+            }
+            Event::Requeue { req } => {
+                out.push(te(&format!("requeue req {req}"), "i", s.tick, TID_SCHED, vec![]));
+            }
+            Event::Reject { req } => {
+                out.push(te(&format!("reject req {req}"), "i", s.tick, TID_SCHED, vec![]));
+                if let Some(row) = req_row.remove(req) {
+                    // mid-flight failure: close the open span
+                    if open.remove(&row).is_some() {
+                        out.push(te(&format!("req {req}"), "E", s.tick, row_tid(row), vec![]));
+                    }
+                }
+            }
+            Event::Admit { req, row } => {
+                if !used_rows.contains(row) {
+                    used_rows.push(*row);
+                }
+                open.insert(*row, (*req, s.tick));
+                req_row.insert(*req, *row);
+                out.push(te(
+                    &format!("req {req}"),
+                    "B",
+                    s.tick,
+                    row_tid(*row),
+                    vec![("req", Json::num(*req as f64))],
+                ));
+            }
+            Event::Finish { req, row, tokens } => {
+                open.remove(row);
+                req_row.remove(req);
+                out.push(te(
+                    &format!("req {req}"),
+                    "E",
+                    s.tick,
+                    row_tid(*row),
+                    vec![("tokens", Json::num(*tokens as f64))],
+                ));
+            }
+            Event::PrefillWindow { row, start, bucket } => {
+                let mut e = te(
+                    &format!("prefill[{bucket}]"),
+                    "X",
+                    s.tick,
+                    row_tid(*row),
+                    vec![
+                        ("start", Json::num(*start as f64)),
+                        ("bucket", Json::num(*bucket as f64)),
+                    ],
+                );
+                if let Json::Obj(m) = &mut e {
+                    m.insert("dur".to_string(), Json::num(1000.0));
+                }
+                out.push(e);
+            }
+            Event::DecodeStep { row } => {
+                out.push(te("tok", "i", s.tick, row_tid(*row), vec![]));
+            }
+            Event::VerifyRound { row, k, accepted } => {
+                out.push(te(
+                    "verify",
+                    "i",
+                    s.tick,
+                    row_tid(*row),
+                    vec![
+                        ("k", Json::num(*k as f64)),
+                        ("accepted", Json::num(*accepted as f64)),
+                    ],
+                ));
+            }
+            Event::Rewind { row, n } => {
+                out.push(te("rewind", "i", s.tick, row_tid(*row), vec![(
+                    "n",
+                    Json::num(*n as f64),
+                )]));
+            }
+            Event::Evict { row } => {
+                out.push(te("evict", "i", s.tick, row_tid(*row), vec![]));
+            }
+            Event::BlockAlloc { block } => {
+                saw_kv = true;
+                out.push(te("alloc", "i", s.tick, TID_KV, vec![(
+                    "block",
+                    Json::num(*block as f64),
+                )]));
+            }
+            Event::BlockFree { block } => {
+                saw_kv = true;
+                out.push(te("free", "i", s.tick, TID_KV, vec![(
+                    "block",
+                    Json::num(*block as f64),
+                )]));
+            }
+            Event::PrefixHit { blocks, tokens } => {
+                saw_kv = true;
+                out.push(te("prefix_hit", "i", s.tick, TID_KV, vec![
+                    ("blocks", Json::num(*blocks as f64)),
+                    ("tokens", Json::num(*tokens as f64)),
+                ]));
+            }
+            Event::CowCopy { block } => {
+                saw_kv = true;
+                out.push(te("cow_copy", "i", s.tick, TID_KV, vec![(
+                    "block",
+                    Json::num(*block as f64),
+                )]));
+            }
+            Event::Gauge { name, value } => {
+                out.push(Json::obj(vec![
+                    ("name", Json::str(*name)),
+                    ("ph", Json::str("C")),
+                    ("ts", Json::num(ts(s.tick))),
+                    ("pid", Json::num(0.0)),
+                    ("args", Json::obj(vec![(*name, Json::num(*value))])),
+                ]));
+            }
+            Event::SessionRun { artifact, h2d_ms, exec_ms, d2h_ms } => {
+                saw_session = true;
+                let mut e = te(
+                    artifact,
+                    "X",
+                    s.tick,
+                    TID_SESSION,
+                    vec![
+                        ("h2d_ms", Json::num(*h2d_ms)),
+                        ("exec_ms", Json::num(*exec_ms)),
+                        ("d2h_ms", Json::num(*d2h_ms)),
+                    ],
+                );
+                if let Json::Obj(m) = &mut e {
+                    // ms rendered in the tick µs domain (1 ms = 1000 µs)
+                    let dur = ((h2d_ms + exec_ms + d2h_ms) * 1000.0).max(1.0);
+                    m.insert("dur".to_string(), Json::num(dur));
+                }
+                out.push(e);
+            }
+        }
+    }
+    // close spans still open at end-of-trace so Perfetto renders them
+    for (row, (req, _)) in &open {
+        out.push(te(&format!("req {req}"), "E", last_tick + 1, row_tid(*row), vec![]));
+    }
+    // thread-name metadata
+    let mut meta = vec![Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str("loram-serve"))])),
+    ])];
+    meta.push(meta_thread(TID_SCHED, "scheduler"));
+    used_rows.sort_unstable();
+    for row in used_rows {
+        meta.push(meta_thread(row_tid(row), &format!("row {row}")));
+    }
+    if saw_kv {
+        meta.push(meta_thread(TID_KV, "kv-pool"));
+    }
+    if saw_session {
+        meta.push(meta_thread(TID_SESSION, "session"));
+    }
+    meta.extend(out);
+    meta
+}
+
+/// Full trace-file JSON: Chrome `traceEvents` plus the raw-event /
+/// stats side-channels read by `tools/trace_report.py`. `extra` carries
+/// caller context, e.g. `("serverStats", ...)`.
+pub fn trace_json(sink: &TraceSink, extra: Vec<(&str, Json)>) -> Json {
+    let events: Vec<Stamped> = sink.events().iter().cloned().collect();
+    let mut top = vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(chrome_events(&events))),
+        ("loramEvents", Json::Arr(events.iter().map(event_json).collect())),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema_version", Json::num(TRACE_SCHEMA_VERSION as f64)),
+                ("clock", Json::str(if sink.wall_clock() { "wall" } else { "tick" })),
+                ("dropped", Json::num(sink.dropped() as f64)),
+            ]),
+        ),
+    ];
+    top.extend(extra);
+    Json::obj(top)
+}
+
+/// Write `path` (Chrome trace) and a `.jsonl` sibling (compact event log).
+/// Returns the jsonl path.
+pub fn write_trace_files(
+    path: &Path,
+    sink: &TraceSink,
+    extra: Vec<(&str, Json)>,
+) -> std::io::Result<PathBuf> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let json = trace_json(sink, extra);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(json.to_string().as_bytes())?;
+    f.write_all(b"\n")?;
+    let jsonl_path = path.with_extension("jsonl");
+    let events: Vec<Stamped> = sink.events().iter().cloned().collect();
+    std::fs::write(&jsonl_path, jsonl(&events))?;
+    Ok(jsonl_path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace;
+
+    fn sample_sink() -> TraceSink {
+        trace::install(1024, false);
+        trace::set_tick(0);
+        trace::emit(|| Event::Enqueue { req: 1 });
+        trace::emit(|| Event::Admit { req: 1, row: 0 });
+        trace::set_tick(1);
+        trace::emit(|| Event::PrefillWindow { row: 0, start: 0, bucket: 16 });
+        trace::set_tick(2);
+        trace::emit(|| Event::DecodeStep { row: 0 });
+        trace::emit(|| Event::Gauge { name: "queue_depth", value: 0.0 });
+        trace::set_tick(3);
+        trace::emit(|| Event::Finish { req: 1, row: 0, tokens: 1 });
+        trace::take().unwrap()
+    }
+
+    #[test]
+    fn chrome_trace_has_spans_counters_and_metadata() {
+        let sink = sample_sink();
+        let j = trace_json(&sink, vec![("serverStats", Json::obj(vec![]))]);
+        let s = j.to_string();
+        // parses back as valid JSON
+        let parsed = Json::parse(&s).unwrap();
+        let evs = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let phs: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").and_then(|p| p.as_str())).collect();
+        assert!(phs.contains(&"B") && phs.contains(&"E"), "request span missing");
+        assert!(phs.contains(&"X"), "prefill slice missing");
+        assert!(phs.contains(&"C"), "counter track missing");
+        assert!(phs.contains(&"M"), "thread metadata missing");
+        // side-channels present
+        assert!(parsed.get("loramEvents").and_then(|e| e.as_arr()).unwrap().len() == sink.len());
+        assert!(parsed.get("serverStats").is_some());
+        assert_eq!(
+            parsed.get("otherData").and_then(|o| o.get("clock")).and_then(|c| c.as_str()),
+            Some("tick")
+        );
+    }
+
+    #[test]
+    fn jsonl_is_one_event_per_line() {
+        let sink = sample_sink();
+        let events: Vec<Stamped> = sink.events().iter().cloned().collect();
+        let text = jsonl(&events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), sink.len());
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("kind").and_then(|k| k.as_str()), Some("Enqueue"));
+        assert_eq!(first.get("tick").and_then(|t| t.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn export_is_deterministic_for_tick_clock_traces() {
+        let a = {
+            let sink = sample_sink();
+            trace_json(&sink, vec![]).to_string()
+        };
+        let b = {
+            let sink = sample_sink();
+            trace_json(&sink, vec![]).to_string()
+        };
+        assert_eq!(a, b, "tick-clock trace export must be byte-deterministic");
+    }
+}

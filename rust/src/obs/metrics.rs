@@ -1,0 +1,168 @@
+//! Unified metrics registry: counters / gauges / histograms.
+//!
+//! The serving stack's stats structs (`ServerStats`, `PrefillStats`,
+//! `PagedStats`, `SpecStats`) each export into one `Metrics` registry
+//! (`ServerStats::to_metrics` fans out to the others), and every external
+//! surface — `BENCH_serve.json`, `tab8_serving.csv`, the `serve` summary —
+//! reads named registry entries instead of reaching into struct fields.
+//! Adding a stat means adding one `set_counter`/`observe` call; the
+//! exporters pick it up by name.
+//!
+//! Names are dot-scoped (`serve.total_tokens`, `paged.prefix_hits`,
+//! `adapter.<label>.tokens`) and iterate in sorted order (BTreeMap), so
+//! serialized registries are deterministic.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    // -- counters (monotonic totals) --------------------------------------
+    pub fn inc(&mut self, name: &str, by: f64) {
+        *self.counters.entry(name.to_string()).or_insert(0.0) += by;
+    }
+    /// Set a counter to an absolute total (used when exporting an already
+    /// accumulated stats struct).
+    pub fn set_counter(&mut self, name: &str, v: f64) {
+        self.counters.insert(name.to_string(), v);
+    }
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+    pub fn has_counter(&self, name: &str) -> bool {
+        self.counters.contains_key(name)
+    }
+
+    // -- gauges (last-value samples) --------------------------------------
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+    pub fn has_gauge(&self, name: &str) -> bool {
+        self.gauges.contains_key(name)
+    }
+
+    // -- histograms (raw observation vectors) -----------------------------
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().push(v);
+    }
+    pub fn observe_all(&mut self, name: &str, vs: &[f64]) {
+        self.hists.entry(name.to_string()).or_default().extend_from_slice(vs);
+    }
+    pub fn hist(&self, name: &str) -> &[f64] {
+        self.hists.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+    /// Batch percentiles of one histogram (single sort via
+    /// `stats::percentiles_of`).
+    pub fn hist_pcts(&self, name: &str, ps: &[f64]) -> Vec<f64> {
+        stats::percentiles_of(self.hist(name), ps)
+    }
+
+    /// Merge another registry into this one: counters add, gauges take the
+    /// other's value, histograms concatenate.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.hists {
+            self.hists.entry(k.clone()).or_default().extend_from_slice(v);
+        }
+    }
+
+    /// Deterministic JSON snapshot: histograms are summarized (count, mean,
+    /// p50/p95), raw vectors stay in-process.
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<(&str, Json)> =
+            self.counters.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect();
+        let gauges: Vec<(&str, Json)> =
+            self.gauges.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect();
+        let hists: Vec<(&str, Json)> = self
+            .hists
+            .iter()
+            .map(|(k, v)| {
+                let ps = stats::percentiles_of(v, &[50.0, 95.0]);
+                (
+                    k.as_str(),
+                    Json::obj(vec![
+                        ("count", Json::num(v.len() as f64)),
+                        ("mean", Json::num(stats::mean(v))),
+                        ("p50", Json::num(ps[0])),
+                        ("p95", Json::num(ps[1])),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("hists", Json::obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_hists_roundtrip() {
+        let mut m = Metrics::new();
+        m.inc("serve.total_tokens", 10.0);
+        m.inc("serve.total_tokens", 5.0);
+        m.set_counter("serve.served", 3.0);
+        m.set_gauge("queue_depth", 7.0);
+        m.set_gauge("queue_depth", 2.0);
+        m.observe_all("serve.ttft_ticks", &[1.0, 3.0, 2.0]);
+        assert_eq!(m.counter("serve.total_tokens"), 15.0);
+        assert_eq!(m.counter("serve.served"), 3.0);
+        assert_eq!(m.counter("missing"), 0.0);
+        assert_eq!(m.gauge("queue_depth"), 2.0);
+        assert_eq!(m.hist("serve.ttft_ticks"), &[1.0, 3.0, 2.0]);
+        assert_eq!(m.hist_pcts("serve.ttft_ticks", &[0.0, 50.0, 100.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn merge_adds_counters_concats_hists() {
+        let mut a = Metrics::new();
+        a.inc("c", 1.0);
+        a.observe("h", 1.0);
+        a.set_gauge("g", 1.0);
+        let mut b = Metrics::new();
+        b.inc("c", 2.0);
+        b.observe("h", 2.0);
+        b.set_gauge("g", 9.0);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3.0);
+        assert_eq!(a.hist("h"), &[1.0, 2.0]);
+        assert_eq!(a.gauge("g"), 9.0);
+    }
+
+    #[test]
+    fn json_snapshot_is_sorted_and_summarized() {
+        let mut m = Metrics::new();
+        m.set_counter("b", 2.0);
+        m.set_counter("a", 1.0);
+        m.observe_all("h", &[1.0, 2.0, 3.0]);
+        let s = m.to_json().to_string();
+        // BTreeMap ordering: "a" before "b"; hist summarized, not raw
+        assert!(s.find("\"a\"").unwrap() < s.find("\"b\"").unwrap());
+        assert!(s.contains("\"count\":3"));
+        assert!(!s.contains("[1,2,3]"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Observability: request-lifecycle tracing + the unified metrics registry
+//! (DESIGN.md §2g).
+//!
+//! * [`trace`] — typed scheduler events into a bounded thread-local ring,
+//!   off by default and zero-cost when disabled (dual tick/wall clocks;
+//!   sim traces are byte-deterministic)
+//! * [`metrics`] — counters/gauges/histograms registry; the single export
+//!   path behind `BENCH_serve.json`, `tab8_serving.csv` and the serve
+//!   summary
+//! * [`export`] — Chrome trace-event JSON (Perfetto) + JSONL writers
+//! * [`audit`] — in-process conservation-law checker, the Rust mirror of
+//!   `tools/trace_report.py`
+
+pub mod audit;
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::Metrics;
+pub use trace::{Event, Stamped, TraceSink};

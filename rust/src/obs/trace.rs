@@ -1,0 +1,297 @@
+//! Request-lifecycle trace sink.
+//!
+//! A bounded ring buffer of typed scheduler events, **off by default** and
+//! zero-cost when disabled: [`emit`] takes a closure, so the event (and any
+//! `String` inside it) is never constructed unless a sink is installed. The
+//! per-thread [`recorded`] counter counts constructed events, which is what
+//! the "no allocation on the disabled hot path" test asserts on.
+//!
+//! Two clock domains stamp every event:
+//! * `tick` — the scheduler tick ([`set_tick`] is called by `serve::Server`
+//!   at enqueue time and around each `step`). Deterministic under `SimEngine`.
+//! * `wall_ms` — milliseconds since [`install`]. Sim traces install with
+//!   `wall_clock = false` so `wall_ms` stays `0.0` and two identical sim
+//!   runs serialize to identical bytes.
+//!
+//! The sink is thread-local: the serving stack is single-threaded by design
+//! (see DESIGN.md §2g), and `cargo test` runs tests on parallel threads —
+//! a process-global sink would interleave events across unrelated tests.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Typed scheduler event. Variants are row- or block-keyed where the
+/// emitting layer does not know the request id; `tools/trace_report.py`
+/// reconstructs the row → request mapping from `Admit`/`Finish` lifetimes.
+///
+/// NOTE: `tools/event_sync_check.py` parses this enum's variant names out
+/// of the source text and diffs them against the Python parser's kind
+/// table — keep one variant per line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Request entered the server queue.
+    Enqueue { req: u64 },
+    /// Request left the queue and reserved engine row `row`.
+    Admit { req: u64, row: usize },
+    /// Request dropped: admission prefill error or mid-chunk failure.
+    Reject { req: u64 },
+    /// Admission gate (`can_admit`) bounced the queue head back.
+    Requeue { req: u64 },
+    /// One chunked-prefill window ran: `bucket` padded tokens at `start`.
+    PrefillWindow { row: usize, start: usize, bucket: usize },
+    /// One sampled token on `row` (emitted per token, not per batch step).
+    DecodeStep { row: usize },
+    /// One speculative verify round: `k` drafted, `accepted` kept.
+    VerifyRound { row: usize, k: usize, accepted: usize },
+    /// KV cache rewound `n` positions on `row` (speculation rollback).
+    Rewind { row: usize, n: usize },
+    /// Engine released `row` (cache slot freed / paged tables dropped).
+    Evict { row: usize },
+    /// Request completed with `tokens` sampled tokens.
+    Finish { req: u64, row: usize, tokens: usize },
+    /// Paged pool handed out physical block `block`.
+    BlockAlloc { block: usize },
+    /// Physical block refcount hit zero (or was reclaimed/evicted).
+    BlockFree { block: usize },
+    /// Prefix-index hit mapped `blocks` shared blocks (`tokens` tokens).
+    PrefixHit { blocks: usize, tokens: usize },
+    /// Copy-on-write fork into fresh block `block` (must not fire in serve).
+    CowCopy { block: usize },
+    /// Sampled per-tick gauge (queue depth, in-flight rows, blocks in use).
+    Gauge { name: &'static str, value: f64 },
+    /// One `runtime::Session::run` with its h2d / execute / d2h split.
+    SessionRun { artifact: String, h2d_ms: f64, exec_ms: f64, d2h_ms: f64 },
+}
+
+/// Event-kind names, in enum order. Mirrored by `KINDS` in
+/// `tools/trace_report.py`; `tools/event_sync_check.py` fails CI on drift.
+pub const KINDS: &[&str] = &[
+    "Enqueue",
+    "Admit",
+    "Reject",
+    "Requeue",
+    "PrefillWindow",
+    "DecodeStep",
+    "VerifyRound",
+    "Rewind",
+    "Evict",
+    "Finish",
+    "BlockAlloc",
+    "BlockFree",
+    "PrefixHit",
+    "CowCopy",
+    "Gauge",
+    "SessionRun",
+];
+
+impl Event {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Enqueue { .. } => "Enqueue",
+            Event::Admit { .. } => "Admit",
+            Event::Reject { .. } => "Reject",
+            Event::Requeue { .. } => "Requeue",
+            Event::PrefillWindow { .. } => "PrefillWindow",
+            Event::DecodeStep { .. } => "DecodeStep",
+            Event::VerifyRound { .. } => "VerifyRound",
+            Event::Rewind { .. } => "Rewind",
+            Event::Evict { .. } => "Evict",
+            Event::Finish { .. } => "Finish",
+            Event::BlockAlloc { .. } => "BlockAlloc",
+            Event::BlockFree { .. } => "BlockFree",
+            Event::PrefixHit { .. } => "PrefixHit",
+            Event::CowCopy { .. } => "CowCopy",
+            Event::Gauge { .. } => "Gauge",
+            Event::SessionRun { .. } => "SessionRun",
+        }
+    }
+}
+
+/// An [`Event`] stamped with both clock domains.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stamped {
+    pub tick: u64,
+    pub wall_ms: f64,
+    pub ev: Event,
+}
+
+/// Bounded ring of stamped events. When full, the oldest event is dropped
+/// and `dropped` counts it — a trace is a window, never an OOM.
+#[derive(Debug)]
+pub struct TraceSink {
+    cap: usize,
+    wall: bool,
+    t0: Instant,
+    events: VecDeque<Stamped>,
+    dropped: u64,
+}
+
+/// Default ring capacity: enough for every event of a bench-sized sim run
+/// (hundreds of requests × tens of tokens × a handful of events each).
+pub const DEFAULT_CAP: usize = 1 << 18;
+
+impl TraceSink {
+    fn new(cap: usize, wall: bool) -> TraceSink {
+        TraceSink {
+            cap: cap.max(1),
+            wall,
+            t0: Instant::now(),
+            events: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, tick: u64, ev: Event) {
+        let wall_ms = if self.wall { self.t0.elapsed().as_secs_f64() * 1e3 } else { 0.0 };
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(Stamped { tick, wall_ms, ev });
+    }
+
+    pub fn events(&self) -> &VecDeque<Stamped> {
+        &self.events
+    }
+    pub fn into_events(self) -> Vec<Stamped> {
+        self.events.into()
+    }
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+    /// `true` when this sink stamps wall-clock ms (pjrt serve); `false`
+    /// for tick-only sim traces.
+    pub fn wall_clock(&self) -> bool {
+        self.wall
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<Option<TraceSink>> = const { RefCell::new(None) };
+    static TICK: Cell<u64> = const { Cell::new(0) };
+    static RECORDED: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Install a sink on this thread (replacing any previous one).
+/// `wall_clock = false` pins `wall_ms` to 0.0 for byte-deterministic traces.
+pub fn install(cap: usize, wall_clock: bool) {
+    SINK.with(|s| *s.borrow_mut() = Some(TraceSink::new(cap, wall_clock)));
+}
+
+/// Remove and return this thread's sink (tracing becomes disabled again).
+pub fn take() -> Option<TraceSink> {
+    SINK.with(|s| s.borrow_mut().take())
+}
+
+/// Is a sink installed on this thread?
+pub fn active() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+/// Set the scheduler tick that stamps subsequent events (and, while a sink
+/// is active, `util::log` lines).
+pub fn set_tick(t: u64) {
+    TICK.with(|c| c.set(t));
+}
+
+/// Current scheduler tick on this thread.
+pub fn tick() -> u64 {
+    TICK.with(|c| c.get())
+}
+
+/// Record an event. The closure runs — and the event is constructed — only
+/// when a sink is active; the disabled path is one thread-local branch.
+#[inline]
+pub fn emit(f: impl FnOnce() -> Event) {
+    SINK.with(|s| {
+        if let Some(sink) = s.borrow_mut().as_mut() {
+            let ev = f();
+            RECORDED.with(|c| c.set(c.get() + 1));
+            sink.push(TICK.with(|c| c.get()), ev);
+        }
+    });
+}
+
+/// Monotonic count of events *constructed* on this thread. With tracing
+/// disabled this never moves — the acceptance test for the zero-cost claim.
+pub fn recorded() -> u64 {
+    RECORDED.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_constructs_nothing() {
+        let _ = take();
+        let before = recorded();
+        for _ in 0..64 {
+            emit(|| Event::DecodeStep { row: 0 });
+        }
+        assert_eq!(recorded(), before, "disabled trace must not build events");
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        install(4, false);
+        for i in 0..10 {
+            set_tick(i);
+            emit(|| Event::DecodeStep { row: i as usize });
+        }
+        let sink = take().unwrap();
+        assert_eq!(sink.len(), 4);
+        assert_eq!(sink.dropped(), 6);
+        // the ring keeps the newest events
+        assert_eq!(sink.events()[0].tick, 6);
+        assert_eq!(sink.events()[3].tick, 9);
+    }
+
+    #[test]
+    fn sim_clock_pins_wall_ms_to_zero() {
+        install(16, false);
+        set_tick(3);
+        emit(|| Event::Enqueue { req: 7 });
+        let sink = take().unwrap();
+        let s = &sink.events()[0];
+        assert_eq!(s.tick, 3);
+        assert_eq!(s.wall_ms, 0.0);
+        assert_eq!(s.ev, Event::Enqueue { req: 7 });
+    }
+
+    #[test]
+    fn kind_table_matches_enum_order() {
+        let sample: Vec<Event> = vec![
+            Event::Enqueue { req: 0 },
+            Event::Admit { req: 0, row: 0 },
+            Event::Reject { req: 0 },
+            Event::Requeue { req: 0 },
+            Event::PrefillWindow { row: 0, start: 0, bucket: 16 },
+            Event::DecodeStep { row: 0 },
+            Event::VerifyRound { row: 0, k: 4, accepted: 2 },
+            Event::Rewind { row: 0, n: 2 },
+            Event::Evict { row: 0 },
+            Event::Finish { req: 0, row: 0, tokens: 1 },
+            Event::BlockAlloc { block: 0 },
+            Event::BlockFree { block: 0 },
+            Event::PrefixHit { blocks: 1, tokens: 8 },
+            Event::CowCopy { block: 0 },
+            Event::Gauge { name: "queue_depth", value: 0.0 },
+            Event::SessionRun {
+                artifact: "decode_step".into(),
+                h2d_ms: 0.0,
+                exec_ms: 0.0,
+                d2h_ms: 0.0,
+            },
+        ];
+        let kinds: Vec<&str> = sample.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, KINDS, "Event::kind()/KINDS drifted from the enum");
+    }
+}

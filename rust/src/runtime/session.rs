@@ -24,6 +24,7 @@
 //! executions, execute time, and the h2d/d2h bytes they actually move.
 
 use super::{literal_to_tensor, tensor_to_literal, Artifact, Runtime};
+use crate::obs::trace::{self, Event};
 use crate::tensor::{Data, Dtype, Tensor, TensorStore};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::{BTreeSet, HashMap};
@@ -405,12 +406,23 @@ impl Session {
 
     /// Execute once. Bound state outputs donate back onto their input
     /// slots; every other output is fetched to the host and returned.
+    ///
+    /// When a trace sink is active (`obs::trace`), every run emits one
+    /// `SessionRun` event with its h2d / execute / d2h wall-ms split —
+    /// the timing hook DESIGN.md §2g's per-tick attribution rides on.
+    /// The `Instant` reads cost nanoseconds next to a PJRT execution and
+    /// the event itself is only built while tracing.
     pub fn run(&mut self, rt: &Runtime) -> Result<TensorStore> {
+        let t_flush = Instant::now();
         self.flush_groups(rt)?;
+        let mut h2d_ms = t_flush.elapsed().as_secs_f64() * 1e3;
+        let mut exec_ms = 0.0;
+        let mut d2h_ms = 0.0;
         let art = self.art.clone();
         let mut host = TensorStore::new();
         match &mut self.slots {
             Slots::Host(slots) => {
+                let t_h2d = Instant::now();
                 let mut lits = Vec::with_capacity(slots.len());
                 let mut h2d = 0u64;
                 for (i, s) in slots.iter().enumerate() {
@@ -421,7 +433,11 @@ impl Session {
                     lits.push(tensor_to_literal(t)?);
                 }
                 rt.metrics.borrow_mut().h2d_bytes += h2d;
+                h2d_ms += t_h2d.elapsed().as_secs_f64() * 1e3;
+                let t_exec = Instant::now();
                 let outs = rt.execute_literals(&art, &lits)?;
+                exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+                let t_d2h = Instant::now();
                 for (j, lit) in outs.into_iter().enumerate() {
                     let spec = &art.meta.outputs[j];
                     let t = literal_to_tensor(&lit, spec)?;
@@ -430,6 +446,7 @@ impl Session {
                         None => host.insert(spec.name.clone(), t),
                     }
                 }
+                d2h_ms = t_d2h.elapsed().as_secs_f64() * 1e3;
             }
             Slots::Device(slots) => {
                 let t0 = Instant::now();
@@ -442,9 +459,11 @@ impl Session {
                         })
                     })
                     .collect::<Result<_>>()?;
+                let t_exec = Instant::now();
                 let mut bufs = art
                     .execute_buffers(&refs)
                     .with_context(|| format!("execute_b {}", art.meta.name))?;
+                exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
                 let outs = std::mem::take(&mut bufs[0]);
                 if outs.len() != art.meta.outputs.len() {
                     bail!(
@@ -455,6 +474,7 @@ impl Session {
                         art.meta.outputs.len()
                     );
                 }
+                let t_d2h = Instant::now();
                 for (j, buf) in outs.into_iter().enumerate() {
                     match self.out_bind[j] {
                         Some(slot) => {
@@ -469,11 +489,18 @@ impl Session {
                         }
                     }
                 }
+                d2h_ms = t_d2h.elapsed().as_secs_f64() * 1e3;
                 let mut m = rt.metrics.borrow_mut();
                 m.executions += 1;
                 m.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
             }
         }
+        trace::emit(|| Event::SessionRun {
+            artifact: art.meta.name.clone(),
+            h2d_ms,
+            exec_ms,
+            d2h_ms,
+        });
         Ok(host)
     }
 

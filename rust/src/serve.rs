@@ -25,6 +25,8 @@ use crate::coordinator::adapters::AdapterId;
 use crate::coordinator::generate::{Generator, PrefillTickOut, SampleCfg, StepOut};
 use crate::coordinator::kvcache::{chunk_plan, PagedKv, PagedStats, PrefillStats};
 use crate::coordinator::speculative::SpecStats;
+use crate::obs::trace::{self, Event};
+use crate::obs::Metrics;
 use crate::tokenizer::Tokenizer;
 use crate::util::log;
 use crate::util::rng::Rng;
@@ -199,6 +201,9 @@ struct InFlight {
     /// yet decoding); queue-wait/admitted accounting lands on completion
     /// so a mid-chunk rejection never leaks into either
     pending: bool,
+    /// tokens sampled for this request so far (the trace `Finish` total —
+    /// `Response.tokens` differs after EOS/PAD trimming)
+    tokens: usize,
 }
 
 pub struct Server<E> {
@@ -213,6 +218,9 @@ pub struct Server<E> {
     /// (None = every admission completes the tick it begins — the
     /// monolithic stall the §2e budget loop removes)
     prefill_budget: Option<usize>,
+    /// per-tick gauge samples (queue depth, in-flight rows, blocks in
+    /// use) — merged into the registry snapshot by [`Server::metrics`]
+    tick_metrics: Metrics,
 }
 
 /// Per-adapter slice of the serving stats (keyed by [`AdapterId`]; the
@@ -363,14 +371,92 @@ impl ServerStats {
     pub fn itl_tick_p(&self, p: f64) -> f64 {
         tick_percentile(&self.itl_ticks, p)
     }
+
+    /// Batch percentiles of the TTFT tick distribution — one sort via
+    /// `stats::percentiles_of` (exporters all want p50+p95 of the same
+    /// vector; `ttft_tick_p` re-sorts per call).
+    pub fn ttft_tick_pcts(&self, ps: &[f64]) -> Vec<f64> {
+        tick_pcts(&self.ttft_ticks, ps)
+    }
+
+    /// Batch percentiles of the ITL tick-gap distribution.
+    pub fn itl_tick_pcts(&self, ps: &[f64]) -> Vec<f64> {
+        tick_pcts(&self.itl_ticks, ps)
+    }
+
+    /// Export every counter this struct accumulates into the unified
+    /// registry (DESIGN.md §2g) — the single path `BENCH_serve.json`,
+    /// `tab8_serving.csv` and the serve summary read. Derived rates are
+    /// exported as gauges so no exporter re-implements a formula.
+    pub fn to_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        m.set_counter("serve.served", self.served as f64);
+        m.set_counter("serve.admitted", self.admitted as f64);
+        m.set_counter("serve.rejected", self.rejected as f64);
+        m.set_counter("serve.decode_steps", self.decode_steps as f64);
+        m.set_counter("serve.decode_ms", self.decode_ms);
+        m.set_counter("serve.total_tokens", self.total_tokens as f64);
+        m.set_counter("serve.accepted_tokens", self.accepted_tokens as f64);
+        m.set_counter("serve.ticks", self.ticks as f64);
+        m.set_counter("serve.total_ttft_ms", self.total_ttft_ms);
+        m.set_counter("serve.total_latency_ms", self.total_latency_ms);
+        m.set_counter("serve.total_queue_wait_ms", self.total_queue_wait_ms);
+        m.set_gauge("serve.peak_queue_depth", self.peak_queue_depth as f64);
+        m.set_gauge("serve.peak_in_flight", self.peak_in_flight as f64);
+        m.set_gauge("serve.tokens_per_sec", self.tokens_per_sec());
+        m.set_gauge("serve.mean_ttft_ms", self.mean_ttft_ms());
+        m.set_gauge("serve.mean_latency_ms", self.mean_latency_ms());
+        m.set_gauge("serve.mean_queue_wait_ms", self.mean_queue_wait_ms());
+        m.set_gauge("serve.mean_occupancy", self.mean_occupancy());
+        m.set_gauge("serve.draft_accept_share", self.draft_accept_share());
+        let ttft = self.ttft_tick_pcts(&[50.0, 95.0]);
+        m.set_gauge("serve.ttft_tick_p50", ttft[0]);
+        m.set_gauge("serve.ttft_tick_p95", ttft[1]);
+        let itl = self.itl_tick_pcts(&[50.0, 95.0]);
+        m.set_gauge("serve.itl_tick_p50", itl[0]);
+        m.set_gauge("serve.itl_tick_p95", itl[1]);
+        m.observe_all(
+            "serve.ttft_ticks",
+            &self.ttft_ticks.iter().map(|&t| t as f64).collect::<Vec<_>>(),
+        );
+        m.observe_all(
+            "serve.itl_ticks",
+            &self.itl_ticks.iter().map(|&t| t as f64).collect::<Vec<_>>(),
+        );
+        self.prefill.export_into(&mut m);
+        if let Some(s) = &self.spec {
+            s.export_into(&mut m);
+        }
+        if let Some(p) = &self.paged {
+            p.export_into(&mut m);
+        }
+        for (adapter, lane) in &self.per_adapter {
+            let label = adapter_label(*adapter);
+            let k = |field: &str| format!("adapter.{label}.{field}");
+            m.set_counter(&k("requests"), lane.requests as f64);
+            m.set_counter(&k("served"), lane.served as f64);
+            m.set_counter(&k("tokens"), lane.tokens as f64);
+            m.set_counter(&k("accepted_tokens"), lane.accepted_tokens as f64);
+            m.set_gauge(&k("mean_ttft_ms"), lane.mean_ttft_ms());
+            m.set_gauge(&k("mean_latency_ms"), lane.mean_latency_ms());
+            m.set_gauge(&k("tokens_per_sec"), lane.tokens_per_sec(self.decode_ms));
+            m.set_gauge(&k("draft_accept_share"), lane.draft_accept_share());
+        }
+        m
+    }
 }
 
 fn tick_percentile(xs: &[usize], p: f64) -> f64 {
+    tick_pcts(xs, &[p])[0]
+}
+
+/// Batch tick percentiles: one f64 conversion + one sort for all `ps`.
+fn tick_pcts(xs: &[usize], ps: &[f64]) -> Vec<f64> {
     if xs.is_empty() {
-        return 0.0;
+        return vec![0.0; ps.len()];
     }
     let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
-    crate::util::stats::percentile(&v, p)
+    crate::util::stats::percentiles_of(&v, ps)
 }
 
 impl<E: DecodeEngine> Server<E> {
@@ -384,7 +470,36 @@ impl<E: DecodeEngine> Server<E> {
             rng: Rng::new(seed),
             stats: ServerStats::default(),
             prefill_budget: None,
+            tick_metrics: Metrics::new(),
         }
+    }
+
+    /// Sample the per-tick gauges into the registry and (when tracing)
+    /// the trace's counter tracks. Runs once per counted scheduler tick.
+    fn sample_gauges(&mut self, active: usize, pending: usize) {
+        let qd = self.queue.len() as f64;
+        let inflight = (active + pending) as f64;
+        self.tick_metrics.set_gauge("serve.queue_depth", qd);
+        self.tick_metrics.observe("serve.queue_depth", qd);
+        self.tick_metrics.set_gauge("serve.in_flight", inflight);
+        self.tick_metrics.observe("serve.in_flight", inflight);
+        trace::emit(|| Event::Gauge { name: "queue_depth", value: qd });
+        trace::emit(|| Event::Gauge { name: "in_flight", value: inflight });
+        if let Some(p) = &self.stats.paged {
+            let blocks = p.blocks_in_use as f64;
+            self.tick_metrics.set_gauge("paged.blocks_in_use", blocks);
+            self.tick_metrics.observe("paged.blocks_in_use", blocks);
+            trace::emit(|| Event::Gauge { name: "blocks_in_use", value: blocks });
+        }
+    }
+
+    /// Registry snapshot: the cumulative [`ServerStats`] export plus the
+    /// per-tick gauge samples. This is the single surface the exporters
+    /// (`BENCH_serve.json`, `tab8_serving.csv`, the serve summary) read.
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.stats.to_metrics();
+        m.merge(&self.tick_metrics);
+        m
     }
 
     /// Cap the prefill window tokens each tick spends on admissions
@@ -416,6 +531,8 @@ impl<E: DecodeEngine> Server<E> {
             Instant::now(),
             self.stats.ticks,
         ));
+        trace::set_tick(self.stats.ticks as u64);
+        trace::emit(|| Event::Enqueue { req: id });
         self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
         id
     }
@@ -452,6 +569,7 @@ impl<E: DecodeEngine> Server<E> {
             if !self.engine.can_admit(&req.prompt, &req.cfg)
                 && (admitted_now > 0 || self.in_flight() > 0)
             {
+                trace::emit(|| Event::Requeue { req: req.id });
                 self.queue.push_front((req, t0, enq_tick));
                 break;
             }
@@ -460,6 +578,7 @@ impl<E: DecodeEngine> Server<E> {
                     Ok(x) => x,
                     Err(e) => {
                         log::warn(format!("request {} rejected at admission: {e:#}", req.id));
+                        trace::emit(|| Event::Reject { req: req.id });
                         self.stats.rejected += 1;
                         last_err = Some(e);
                         continue;
@@ -474,6 +593,7 @@ impl<E: DecodeEngine> Server<E> {
                 bail!("engine admitted into occupied row {row}");
             }
             let queue_wait_ms = t0.elapsed().as_secs_f64() * 1e3;
+            trace::emit(|| Event::Admit { req: req.id, row });
             *slot = Some(InFlight {
                 id: req.id,
                 enqueued: t0,
@@ -483,6 +603,7 @@ impl<E: DecodeEngine> Server<E> {
                 queue_wait_ms,
                 adapter: req.adapter,
                 pending: !done,
+                tokens: 0,
             });
             if done {
                 self.stats.admitted += 1;
@@ -506,6 +627,10 @@ impl<E: DecodeEngine> Server<E> {
     /// §Perf stall-amortization model: tick time max(decode, budget·c_tok)
     /// instead of decode + S·c_tok).
     pub fn step(&mut self) -> Result<Vec<Response>> {
+        // admission (and any engine-side prefill/block events it triggers)
+        // happens on the pre-increment tick; decode events land on the
+        // post-increment tick below — matching `enq_tick`/`ttft_ticks`
+        trace::set_tick(self.stats.ticks as u64);
         self.admit()?;
         self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
         let tick = self
@@ -532,6 +657,7 @@ impl<E: DecodeEngine> Server<E> {
                 .and_then(|s| s.take())
                 .with_context(|| format!("prefill failed for untracked row {row}"))?;
             log::warn(format!("request {} rejected mid-admission", f.id));
+            trace::emit(|| Event::Reject { req: f.id });
             self.stats.rejected += 1;
         }
         self.stats.prefill = self.engine.prefill_stats();
@@ -551,6 +677,8 @@ impl<E: DecodeEngine> Server<E> {
             return Ok(vec![]);
         }
         self.stats.ticks += 1;
+        trace::set_tick(self.stats.ticks as u64);
+        self.sample_gauges(active, pending);
         if active == 0 {
             // the tick only fed prefill windows; decoding starts once an
             // admission completes
@@ -578,7 +706,9 @@ impl<E: DecodeEngine> Server<E> {
                 .get_mut(ev.row)
                 .and_then(|s| s.as_mut())
                 .with_context(|| format!("decode event for idle row {}", ev.row))?;
+            trace::emit(|| Event::DecodeStep { row: ev.row });
             self.stats.total_tokens += 1;
+            f.tokens += 1;
             let adapter = f.adapter;
             if f.ttft_ms.is_none() {
                 f.ttft_ms = Some(f.enqueued.elapsed().as_secs_f64() * 1e3);
@@ -604,6 +734,7 @@ impl<E: DecodeEngine> Server<E> {
         let mut out = vec![];
         for row in done_rows {
             let f = self.inflight[row].take().expect("finished row tracked");
+            trace::emit(|| Event::Finish { req: f.id, row, tokens: f.tokens });
             let ids = self.engine.take(row).unwrap_or_default();
             let ttft_ms = f.ttft_ms.unwrap_or_default();
             let latency_ms = f.enqueued.elapsed().as_secs_f64() * 1e3;
@@ -672,8 +803,10 @@ pub struct SimEngine {
     /// real [`PagedKv`] block tables, share resident prefixes, and are
     /// gated on pool headroom instead of row count
     paged: Option<PagedKv>,
-    /// planned window tokens still to process per mid-admission row
-    pending: Vec<Option<usize>>,
+    /// per mid-admission row: (window tokens still to process, total
+    /// planned) — the planned total makes the trace's `PrefillWindow`
+    /// `start` offsets reconstructible from `planned - remaining`
+    pending: Vec<Option<(usize, usize)>>,
     pstats: PrefillStats,
     /// (prompt, cfg, adapter) in admission order, for test assertions
     pub admissions: Vec<(String, SampleCfg, Option<AdapterId>)>,
@@ -876,7 +1009,7 @@ impl DecodeEngine for SimEngine {
             // in-call: the cost is charged either way, but only deferred
             // ones pend for prefill_tick pacing
             if defer {
-                self.pending[row] = Some(planned);
+                self.pending[row] = Some((planned, planned));
                 return Ok((row, false));
             }
         }
@@ -890,7 +1023,7 @@ impl DecodeEngine for SimEngine {
         }
         let mut left = budget;
         for row in 0..self.pending.len() {
-            let Some(remaining) = self.pending[row].as_mut() else { continue };
+            let Some((remaining, planned)) = self.pending[row].as_mut() else { continue };
             // drain the planned window tokens at the tick budget — bucket
             // granularity (padding included) is already charged in the
             // plan — with at least one token of progress per tick, the
@@ -903,7 +1036,9 @@ impl DecodeEngine for SimEngine {
                 break;
             };
             let take = (*remaining).min(cap);
+            let start = *planned - *remaining;
             *remaining -= take;
+            trace::emit(|| Event::PrefillWindow { row, start, bucket: take });
             out.spent += take;
             left = left.saturating_sub(take);
             if *remaining == 0 {
@@ -960,6 +1095,7 @@ impl DecodeEngine for SimEngine {
                     sp.stats.drafted_tokens += k_eff;
                     sp.stats.accepted_tokens += accepted;
                     sp.stats.emitted_tokens += accepted + 1;
+                    trace::emit(|| Event::VerifyRound { row: i, k: k_eff, accepted });
                     for j in 0..accepted + 1 {
                         r.emitted.push(token);
                         events.push(StepOut {
@@ -980,7 +1116,11 @@ impl DecodeEngine for SimEngine {
         if let Some(kv) = self.paged.as_mut() {
             let _ = kv.evict_row(row);
         }
-        self.rows.get_mut(row)?.take().map(|r| r.emitted)
+        let out = self.rows.get_mut(row)?.take().map(|r| r.emitted);
+        if out.is_some() {
+            trace::emit(|| Event::Evict { row });
+        }
+        out
     }
 
     fn decode_text(&self, ids: &[i32]) -> String {
@@ -1610,5 +1750,158 @@ mod tests {
         let rs = srv.drain().unwrap();
         assert_eq!(rs.len(), 1);
         assert_eq!(rs[0].tokens, 1);
+    }
+
+    // `trace` and `Event` arrive via `super::*` (the serving imports)
+    use crate::obs::audit::{audit, AuditReport};
+    use crate::obs::export;
+
+    /// Percentiles reconstructed from raw trace ticks, via the same
+    /// [`crate::util::stats::percentiles_of`] the ServerStats helpers use.
+    fn trace_pcts(ticks: &[usize], ps: &[f64]) -> Vec<f64> {
+        let v: Vec<f64> = ticks.iter().map(|&t| t as f64).collect();
+        crate::util::stats::percentiles_of(&v, ps)
+    }
+
+    /// The trace is the ground truth the stats must agree with: replaying
+    /// the raw events reconstructs the *exact* TTFT/ITL tick vectors the
+    /// scheduler accumulated, so the percentiles match bit-for-bit.
+    fn assert_trace_matches_stats(a: &AuditReport, st: &ServerStats) {
+        assert!(a.ok(), "conservation violations: {:#?}", a.violations);
+        assert_eq!(a.finished, st.served);
+        assert_eq!(a.tokens, st.total_tokens);
+        assert_eq!(a.ttft_ticks, st.ttft_ticks, "ttft vectors diverge");
+        assert_eq!(a.itl_ticks, st.itl_ticks, "itl vectors diverge");
+        let ps = [50.0, 95.0];
+        assert_eq!(trace_pcts(&a.ttft_ticks, &ps), st.ttft_tick_pcts(&ps));
+        assert_eq!(trace_pcts(&a.itl_ticks, &ps), st.itl_tick_pcts(&ps));
+    }
+
+    /// ISSUE 7 scenario 1: bursty mixed-length load through the chunked
+    /// token-budget scheduler — the trace audit passes and reproduces the
+    /// scheduler's latency distributions exactly.
+    #[test]
+    fn trace_audit_bursty_chunked_load_matches_server_stats() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let mut srv = Server::new(SimEngine::with_prefill(4, vec![16, 64], false), 0);
+        srv.set_prefill_budget(Some(16));
+        let mut sent = 0;
+        for _burst in 0..3 {
+            for i in 0..6 {
+                let prompt =
+                    if i % 3 == 0 { "L".repeat(60) } else { "hi".to_string() };
+                srv.enqueue(prompt, cfg(0.9, 4));
+                sent += 1;
+            }
+            for _ in 0..6 {
+                srv.step().unwrap(); // next burst lands mid-decode
+            }
+        }
+        srv.drain().unwrap();
+        let sink = trace::take().expect("sink installed");
+        assert_eq!(sink.dropped(), 0, "ring too small for the scenario");
+        let evs = sink.into_events();
+        let a = audit(&evs);
+        assert_eq!(a.enqueued, sent);
+        assert_trace_matches_stats(&a, &srv.stats);
+        // the paced admissions left PrefillWindow breadcrumbs whose token
+        // sum is the planned prefill work the stats charged
+        let windowed: usize = evs
+            .iter()
+            .filter_map(|s| match s.ev {
+                Event::PrefillWindow { bucket, .. } => Some(bucket),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(windowed, srv.stats.prefill.prefill_tokens);
+    }
+
+    /// ISSUE 7 scenario 2: the 0%-acceptance speculative storm — every
+    /// VerifyRound in the trace shows `accepted == 0`, one round per
+    /// emitted token, and the audit still balances.
+    #[test]
+    fn trace_audit_zero_acceptance_spec_storm() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let mut srv = Server::new(SimEngine::with_spec(2, 4, 0.0, 7), 0);
+        for i in 0..6 {
+            srv.enqueue(format!("req{i}"), cfg(0.9, 3 + i % 3));
+        }
+        srv.drain().unwrap();
+        let evs = trace::take().expect("sink installed").into_events();
+        let a = audit(&evs);
+        assert_trace_matches_stats(&a, &srv.stats);
+        let spec = srv.stats.spec.expect("spec engine reports counters");
+        assert_eq!(a.verify_rounds, spec.rounds);
+        assert!(a.verify_rounds > 0);
+        for s in &evs {
+            if let Event::VerifyRound { accepted, .. } = s.ev {
+                assert_eq!(accepted, 0, "storm rounds must accept nothing");
+            }
+        }
+    }
+
+    /// ISSUE 7 scenario 3: paged serving with a shared system prompt —
+    /// the trace carries the block ledger (alloc/free pairing audited,
+    /// end-of-trace residency == the pool's `blocks_in_use`), prefix hits,
+    /// and zero copy-on-write forks.
+    #[test]
+    fn trace_audit_paged_prefix_reuse_balances_the_block_ledger() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let sys = "system: you are a terse helpful assistant. ";
+        let mut srv =
+            Server::new(SimEngine::with_paged(32, 8, 32, vec![16, 64]).unwrap(), 0);
+        srv.set_prefill_budget(Some(16));
+        for u in 0..8 {
+            srv.enqueue(format!("{sys}user {u}"), cfg(0.9, 4));
+        }
+        srv.drain().unwrap();
+        let a = audit(&trace::take().expect("sink installed").into_events());
+        assert_trace_matches_stats(&a, &srv.stats);
+        assert!(a.prefix_hits > 0, "shared system prompt never hit");
+        assert_eq!(a.cow_copies, 0, "the serving flow never forks a block");
+        // blocks still live in the trace are exactly the pool's current
+        // residency (the prefix index legitimately retains them)
+        let ps = srv.engine.paged_stats().expect("paged stats");
+        assert_eq!(a.live_blocks, ps.blocks_in_use);
+    }
+
+    /// ISSUE 7 determinism: two identical sim runs produce byte-identical
+    /// exported traces — the tick clock carries no wall time.
+    #[test]
+    fn identical_sim_runs_export_identical_trace_bytes() {
+        let run = || {
+            trace::install(trace::DEFAULT_CAP, false);
+            let mut srv = Server::new(SimEngine::with_spec(2, 3, 0.5, 13), 5);
+            for i in 0..5 {
+                srv.enqueue(format!("req{i}"), cfg(0.9, 4 + i % 2));
+            }
+            srv.drain().unwrap();
+            let sink = trace::take().expect("sink installed");
+            assert!(!sink.wall_clock());
+            export::trace_json(&sink, vec![]).to_string()
+        };
+        let (a, b) = (run(), run());
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "sim traces must be byte-deterministic");
+    }
+
+    /// ISSUE 7 acceptance: with no sink installed, serving records no
+    /// events at all — the closures passed to `trace::emit` never run.
+    #[test]
+    fn disabled_tracing_records_no_events() {
+        assert!(!trace::active());
+        let before = trace::recorded();
+        let mut srv = Server::new(SimEngine::with_prefill(2, vec![8, 32], false), 0);
+        srv.set_prefill_budget(Some(8));
+        for i in 0..4 {
+            srv.enqueue(format!("req{i}"), cfg(0.9, 3));
+        }
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 4);
+        assert_eq!(
+            trace::recorded(),
+            before,
+            "disabled tracing must not construct events"
+        );
     }
 }

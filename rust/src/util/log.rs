@@ -1,33 +1,126 @@
 //! Lightweight logging + CSV result writers.
+//!
+//! Level filtering: the `LORAM_LOG` env var (`error|warn|info|debug`)
+//! sets the threshold once at first use; `--quiet` / [`set_verbose`]
+//! lower it to `warn` when no env override is present. While a trace
+//! sink is installed (`obs::trace`), log lines are stamped with the
+//! current scheduler tick instead of wall time, so a log line lands next
+//! to its trace events on the same deterministic clock.
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
 
-static VERBOSE: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(true);
-
-pub fn set_verbose(v: bool) {
-    VERBOSE.store(v, std::sync::atomic::Ordering::Relaxed);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
 }
 
-pub fn info(msg: impl AsRef<str>) {
-    if VERBOSE.load(std::sync::atomic::Ordering::Relaxed) {
+impl Level {
+    /// Parse a `LORAM_LOG` value; unknown strings get `None` (caller
+    /// keeps its default rather than silently going quiet).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Current threshold; `UNSET` defers to `LORAM_LOG` (or `Info`) on first
+/// use so env filtering needs no init call.
+const UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn threshold() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != UNSET {
+        return match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        };
+    }
+    let lvl = std::env::var("LORAM_LOG")
+        .ok()
+        .as_deref()
+        .and_then(Level::parse)
+        .unwrap_or(Level::Info);
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Legacy verbosity toggle (`--quiet`): drops the threshold to `Warn`
+/// (or back to `Info`) unless a `LORAM_LOG` env override is set — the
+/// env var is the operator's explicit word and wins.
+pub fn set_verbose(v: bool) {
+    if std::env::var("LORAM_LOG").ok().as_deref().and_then(Level::parse).is_some() {
+        let _ = threshold(); // make sure the env value is latched
+        return;
+    }
+    set_level(if v { Level::Info } else { Level::Warn });
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= threshold()
+}
+
+/// Timestamp prefix: the scheduler tick while a trace sink is active
+/// (deterministic, correlates with trace events), wall seconds otherwise.
+fn stamp() -> String {
+    if crate::obs::trace::active() {
+        format!("[tick {:>7}]", crate::obs::trace::tick())
+    } else {
         let t = SystemTime::now()
             .duration_since(UNIX_EPOCH)
             .unwrap_or_default()
             .as_secs_f64();
-        eprintln!("[{:>12.3}] {}", t % 100_000.0, msg.as_ref());
+        format!("[{:>12.3}]", t % 100_000.0)
+    }
+}
+
+fn line(tag: &str, msg: &str) {
+    eprintln!("{} {}{}", stamp(), tag, msg);
+}
+
+pub fn error(msg: impl AsRef<str>) {
+    if enabled(Level::Error) {
+        line("ERROR ", msg.as_ref());
     }
 }
 
 /// Warnings print even under `--quiet`: they flag silent-degradation
-/// hazards (e.g. a decode artifact pair with one half missing).
+/// hazards (e.g. a decode artifact pair with one half missing). Only an
+/// explicit `LORAM_LOG=error` silences them.
 pub fn warn(msg: impl AsRef<str>) {
-    let t = SystemTime::now()
-        .duration_since(UNIX_EPOCH)
-        .unwrap_or_default()
-        .as_secs_f64();
-    eprintln!("[{:>12.3}] WARN {}", t % 100_000.0, msg.as_ref());
+    if enabled(Level::Warn) {
+        line("WARN ", msg.as_ref());
+    }
+}
+
+pub fn info(msg: impl AsRef<str>) {
+    if enabled(Level::Info) {
+        line("", msg.as_ref());
+    }
+}
+
+pub fn debug(msg: impl AsRef<str>) {
+    if enabled(Level::Debug) {
+        line("DEBUG ", msg.as_ref());
+    }
 }
 
 /// Incrementally written CSV file (header + rows), used by every experiment
@@ -65,4 +158,52 @@ macro_rules! csv_row {
     ($($v:expr),* $(,)?) => {
         vec![$(format!("{}", $v)),*]
     };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_accepts_the_documented_values() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" warning "), Some(Level::Warn));
+        assert_eq!(Level::parse("Info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn levels_order_from_error_to_debug() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn threshold_gates_enabled() {
+        // process-global: restore when done so parallel log output from
+        // other tests is unaffected (enabled() is the only reader)
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn stamp_uses_tick_clock_while_tracing() {
+        crate::obs::trace::install(8, false);
+        crate::obs::trace::set_tick(42);
+        let s = stamp();
+        assert!(s.contains("tick"), "{s}");
+        assert!(s.contains("42"), "{s}");
+        crate::obs::trace::take();
+        assert!(!stamp().contains("tick"));
+    }
 }

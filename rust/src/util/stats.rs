@@ -16,20 +16,54 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on a sorted copy; p in [0, 100].
+///
+/// NaN-safe: ordering is `f64::total_cmp` (NaNs sort above every number
+/// instead of panicking mid-sort), so a poisoned sample degrades a high
+/// percentile rather than aborting a bench run. Callers holding
+/// already-sorted data should use [`percentile_sorted`]; callers needing
+/// several percentiles of one sample should use [`percentiles_of`] —
+/// both skip the per-call copy + sort this function pays.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    v.sort_by(f64::total_cmp);
+    percentile_sorted(&v, p)
+}
+
+/// Sorted-input fast path of [`percentile`]: no copy, no sort. `xs` must
+/// be ascending (debug-asserted); the interpolation is bit-identical to
+/// [`percentile`] — `rank = (p/100)·(n-1)`, lerp between the straddling
+/// samples — which is what lets `tools/trace_report.py` reproduce the
+/// exported percentiles exactly.
+pub fn percentile_sorted(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(
+        xs.windows(2).all(|w| w[0].total_cmp(&w[1]) != std::cmp::Ordering::Greater),
+        "percentile_sorted needs ascending input"
+    );
+    let rank = (p / 100.0) * (xs.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        xs[lo]
     } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        xs[lo] + (rank - lo as f64) * (xs[hi] - xs[lo])
     }
+}
+
+/// Batch percentiles: one sort amortized over every requested `p` (the
+/// stats-export paths all want p50+p95 or p50+p99 of the same sample).
+pub fn percentiles_of(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
 }
 
 /// Unbiased pass@k estimator (Chen et al. 2021): 1 - C(n-c, k)/C(n, k).
@@ -74,6 +108,38 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn sorted_fast_path_matches_general_percentile() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0, 2.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        for p in [0.0, 10.0, 25.0, 50.0, 90.0, 95.0, 100.0] {
+            assert_eq!(percentile(&xs, p), percentile_sorted(&sorted, p));
+        }
+        assert_eq!(
+            percentiles_of(&xs, &[50.0, 95.0]),
+            vec![percentile(&xs, 50.0), percentile(&xs, 95.0)]
+        );
+    }
+
+    #[test]
+    fn nan_ordering_degrades_instead_of_panicking() {
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        // total_cmp sorts the NaN last: low percentiles stay numeric
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let ps = percentiles_of(&xs, &[0.0, 100.0]);
+        assert_eq!(ps[0], 1.0);
+        assert!(ps[1].is_nan());
+    }
+
+    #[test]
+    fn empty_batch_percentiles_are_zero() {
+        assert_eq!(percentiles_of(&[], &[50.0, 95.0]), vec![0.0, 0.0]);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 
     #[test]

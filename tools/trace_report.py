@@ -1,0 +1,357 @@
+#!/usr/bin/env python3
+"""Audit + report for `loram serve --trace` files.
+
+Reads a trace written by `serve --trace out.json` (the Chrome trace-event
+file, whose `loramEvents` key carries the raw typed events) or the compact
+`out.jsonl` sibling, replays the event stream, and checks the scheduler's
+conservation laws — the same laws `rust/src/obs/audit.rs` enforces inside
+`cargo test`:
+
+  1. per request: enqueue <= admit <= first-token <= finish (tick order)
+  2. token conservation: DecodeStep count per request == Finish.tokens
+  3. lifecycle: every admitted request finishes or is rejected; no decode
+     on an unoccupied row; no double-admit of a live row
+  4. block discipline: no alloc of a live block, no free of a dead one;
+     end-of-trace residency is compared against the exported blocks_in_use
+  5. copy-on-write: cow_copies must be 0 under serve (the share-only-
+     full-blocks invariant, DESIGN.md Sec 2f)
+
+It then recomputes the TTFT/ITL tick percentiles from the raw events with
+the *identical* interpolation the Rust side uses (rank = (p/100)*(n-1),
+lerp between the straddling samples — `util::stats::percentile_sorted`),
+so under `--check` the recomputed values must equal the `serverStats`
+block embedded in the trace file bit-for-bit, not merely approximately.
+
+Usage:
+    python3 tools/trace_report.py out.json           # human summary
+    python3 tools/trace_report.py --check out.json   # CI gate (exit != 0
+                                                     # on any violation)
+
+`KINDS` below mirrors `Event` in rust/src/obs/trace.rs, in enum order —
+tools/event_sync_check.py fails CI when the two drift. Keep one kind per
+line.
+"""
+
+import json
+import math
+import sys
+
+# kind -> required payload fields, in Rust enum order (one per line).
+KINDS = {
+    "Enqueue": ("req",),
+    "Admit": ("req", "row"),
+    "Reject": ("req",),
+    "Requeue": ("req",),
+    "PrefillWindow": ("row", "start", "bucket"),
+    "DecodeStep": ("row",),
+    "VerifyRound": ("row", "k", "accepted"),
+    "Rewind": ("row", "n"),
+    "Evict": ("row",),
+    "Finish": ("req", "row", "tokens"),
+    "BlockAlloc": ("block",),
+    "BlockFree": ("block",),
+    "PrefixHit": ("blocks", "tokens"),
+    "CowCopy": ("block",),
+    "Gauge": ("name", "value"),
+    "SessionRun": ("artifact", "h2d_ms", "exec_ms", "d2h_ms"),
+}
+
+
+def percentile(xs, p):
+    """Bit-identical mirror of util::stats::percentile/percentile_sorted:
+    sort, rank = (p/100)*(n-1), lerp between the straddling samples."""
+    if not xs:
+        return 0.0
+    v = sorted(xs)
+    rank = (p / 100.0) * (len(v) - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    if lo == hi:
+        return float(v[lo])
+    return v[lo] + (rank - lo) * (v[hi] - v[lo])
+
+
+def load(path):
+    """Return (events, server_stats_or_None, other_data) from a Chrome
+    trace file (loramEvents key) or a .jsonl event log."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        # one event object per line: the .jsonl sibling
+        events = [json.loads(line) for line in text.splitlines() if line.strip()]
+        return events, None, {}
+    if isinstance(doc, dict) and "kind" in doc:
+        return [doc], None, {}  # single-line .jsonl parses as one object
+    if "loramEvents" not in doc:
+        raise SystemExit(
+            f"{path}: JSON object without 'loramEvents' — not a "
+            "`serve --trace` file"
+        )
+    return doc["loramEvents"], doc.get("serverStats"), doc.get("otherData", {})
+
+
+def audit(events):
+    """Replay the event stream; mirror of rust/src/obs/audit.rs::audit."""
+    r = {
+        "violations": [],
+        "ttft_ticks": [],
+        "itl_ticks": [],
+        "enqueued": 0,
+        "admitted": 0,
+        "finished": 0,
+        "rejected": 0,
+        "requeues": 0,
+        "tokens": 0,
+        "cow_copies": 0,
+        "prefix_hits": 0,
+        "verify_rounds": 0,
+        "session_runs": 0,
+        "gauges": {},
+    }
+    bad = r["violations"].append
+    lives = {}  # req -> life dict
+    rows = {}  # engine row -> occupant req
+    live_blocks = {}  # block -> alloc tick
+
+    def life(req):
+        return lives.setdefault(
+            req,
+            {
+                "enq": None,
+                "admit": None,
+                "first": None,
+                "last": None,
+                "finish": None,
+                "tokens": 0,
+                "finish_tokens": None,
+                "rejected": False,
+            },
+        )
+
+    for i, ev in enumerate(events):
+        kind = ev.get("kind")
+        if kind not in KINDS:
+            bad(f"event {i}: unknown kind {kind!r}")
+            continue
+        missing = [f for f in ("tick",) + KINDS[kind] if f not in ev]
+        if missing:
+            bad(f"event {i} ({kind}): missing fields {missing}")
+            continue
+        t = ev["tick"]
+        if kind == "Enqueue":
+            r["enqueued"] += 1
+            l = life(ev["req"])
+            if l["enq"] is not None:
+                bad(f"req {ev['req']}: enqueued twice")
+            l["enq"] = t
+        elif kind == "Requeue":
+            r["requeues"] += 1
+        elif kind == "Admit":
+            r["admitted"] += 1
+            row, req = ev["row"], ev["req"]
+            if row in rows:
+                bad(f"row {row}: admit req {req} over live req {rows[row]}")
+            rows[row] = req
+            l = life(req)
+            if l["admit"] is not None:
+                bad(f"req {req}: admitted twice")
+            if l["enq"] is None:
+                bad(f"req {req}: admitted, never enqueued")
+            elif t < l["enq"]:
+                bad(f"req {req}: admit tick {t} < enqueue {l['enq']}")
+            l["admit"] = t
+        elif kind == "Reject":
+            r["rejected"] += 1
+            l = life(ev["req"])
+            l["rejected"] = True
+            # mid-flight rejection frees the row
+            for row, occ in list(rows.items()):
+                if occ == ev["req"]:
+                    del rows[row]
+        elif kind == "DecodeStep":
+            r["tokens"] += 1
+            row = ev["row"]
+            if row not in rows:
+                bad(f"tick {t}: token on unoccupied row {row}")
+                continue
+            l = life(rows[row])
+            l["tokens"] += 1
+            # exact Server::step replication: TTFT on the first token, an
+            # ITL gap for every token with a predecessor
+            if l["first"] is None:
+                l["first"] = t
+                enq = l["enq"] if l["enq"] is not None else t
+                r["ttft_ticks"].append(t - min(enq, t))
+            if l["last"] is not None:
+                r["itl_ticks"].append(t - min(l["last"], t))
+            l["last"] = t
+        elif kind == "Finish":
+            r["finished"] += 1
+            req, row = ev["req"], ev["row"]
+            occ = rows.pop(row, None)
+            if occ is None:
+                bad(f"req {req}: finish on unoccupied row {row}")
+            elif occ != req:
+                bad(f"row {row}: finish req {req} but occupant is req {occ}")
+            l = life(req)
+            l["finish"] = t
+            l["finish_tokens"] = ev["tokens"]
+        elif kind == "BlockAlloc":
+            if ev["block"] in live_blocks:
+                bad(f"block {ev['block']}: allocated while live")
+            live_blocks[ev["block"]] = t
+        elif kind == "BlockFree":
+            if live_blocks.pop(ev["block"], None) is None:
+                bad(f"block {ev['block']}: freed while free")
+        elif kind == "CowCopy":
+            r["cow_copies"] += 1
+        elif kind == "PrefixHit":
+            r["prefix_hits"] += 1
+        elif kind == "VerifyRound":
+            r["verify_rounds"] += 1
+            if ev["accepted"] > ev["k"]:
+                bad(f"tick {t}: verify accepted {ev['accepted']} > drafted {ev['k']}")
+        elif kind == "SessionRun":
+            r["session_runs"] += 1
+        elif kind == "Gauge":
+            g = r["gauges"].setdefault(ev["name"], [])
+            g.append(ev["value"])
+        # PrefillWindow / Rewind / Evict: informational, no law attaches
+
+    for req, l in sorted(lives.items()):
+        if l["admit"] is None:
+            if not l["rejected"] and l["enq"] is not None:
+                bad(f"req {req}: enqueued but never admitted or rejected")
+            continue
+        if l["rejected"]:
+            continue
+        if l["finish"] is None:
+            bad(f"req {req}: admitted but never finished")
+            continue
+        if l["first"] is None:
+            bad(f"req {req}: finished without a first token")
+            continue
+        enq = l["enq"] if l["enq"] is not None else l["admit"]
+        if not (enq <= l["admit"] <= l["first"] <= l["finish"]):
+            bad(
+                f"req {req}: tick order broken (enq {enq} <= admit "
+                f"{l['admit']} <= first {l['first']} <= finish {l['finish']})"
+            )
+        if l["finish_tokens"] is not None and l["finish_tokens"] != l["tokens"]:
+            bad(
+                f"req {req}: {l['tokens']} DecodeStep tokens but Finish "
+                f"says {l['finish_tokens']}"
+            )
+    if rows:
+        stuck = ", ".join(f"{row}:req {req}" for row, req in sorted(rows.items()))
+        bad(f"rows still occupied at end of trace: {stuck}")
+    r["live_blocks"] = len(live_blocks)
+    return r
+
+
+def check(report, stats, other):
+    """The --check gate: conservation + bit-for-bit percentile agreement
+    with the serverStats block the exporter embedded."""
+    errs = list(report["violations"])
+    if other.get("dropped", 0):
+        errs.append(
+            f"ring dropped {other['dropped']} events — conservation cannot "
+            "be audited; raise the sink capacity"
+        )
+    if report["cow_copies"] != 0:
+        errs.append(
+            f"{report['cow_copies']} copy-on-write forks in a serve trace "
+            "(the Sec 2f share-only-full-blocks invariant)"
+        )
+    if stats is None:
+        errs.append("trace carries no serverStats block (need --check input "
+                    "from `serve --trace`)")
+        return errs
+    for key, got in [
+        ("served", report["finished"]),
+        ("rejected", report["rejected"]),
+        ("total_tokens", report["tokens"]),
+    ]:
+        want = stats.get(key)
+        if want is not None and got != want:
+            errs.append(f"{key}: trace replay says {got}, serverStats says {want}")
+    for key, ticks in [("ttft", report["ttft_ticks"]), ("itl", report["itl_ticks"])]:
+        for p in (50, 95):
+            want = stats.get(f"{key}_tick_p{p}")
+            if want is None:
+                continue
+            got = percentile(ticks, float(p))
+            # bit-for-bit: same vector, same interpolation, same IEEE ops
+            if got != want:
+                errs.append(
+                    f"{key} p{p}: recomputed {got!r} != exported {want!r} "
+                    f"(n={len(ticks)})"
+                )
+    want_blocks = stats.get("blocks_in_use")
+    if want_blocks is not None and report["live_blocks"] != want_blocks:
+        errs.append(
+            f"block ledger: {report['live_blocks']} blocks live at end of "
+            f"trace, serverStats says {want_blocks} in use"
+        )
+    return errs
+
+
+def summarize(report, stats, other, path):
+    print(f"{path}: clock={other.get('clock', '?')} "
+          f"schema={other.get('schema_version', '?')} "
+          f"dropped={other.get('dropped', 0)}")
+    print(
+        f"  requests: {report['enqueued']} enqueued, {report['admitted']} "
+        f"admitted, {report['finished']} finished, {report['rejected']} "
+        f"rejected ({report['requeues']} requeues)"
+    )
+    print(
+        f"  tokens: {report['tokens']} sampled; {report['verify_rounds']} "
+        f"verify rounds, {report['prefix_hits']} prefix hits, "
+        f"{report['cow_copies']} cow copies, {report['live_blocks']} blocks "
+        f"live at end, {report['session_runs']} session runs"
+    )
+    for key, ticks in [("ttft", report["ttft_ticks"]), ("itl", report["itl_ticks"])]:
+        p50, p95 = percentile(ticks, 50.0), percentile(ticks, 95.0)
+        print(f"  {key}: n={len(ticks)} p50={p50:g} p95={p95:g} ticks")
+    for name, vals in sorted(report["gauges"].items()):
+        print(f"  gauge {name}: n={len(vals)} max={max(vals):g}")
+    if stats is not None:
+        print(f"  serverStats: {json.dumps(stats, sort_keys=True)}")
+    if report["violations"]:
+        print(f"  VIOLATIONS ({len(report['violations'])}):")
+        for v in report["violations"]:
+            print(f"    - {v}")
+
+
+def main(argv):
+    argv = argv[1:]
+    checking = "--check" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 1:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: trace_report.py [--check] trace.json|trace.jsonl")
+        return 2
+    events, stats, other = load(paths[0])
+    report = audit(events)
+    if checking:
+        errs = check(report, stats, other)
+        if errs:
+            print(f"trace_report: {paths[0]} FAILED ({len(errs)} problems):")
+            for e in errs:
+                print(f"  - {e}")
+            return 1
+        print(
+            f"trace_report: {paths[0]} OK — {len(events)} events, "
+            f"{report['finished']} requests conserved, percentiles match "
+            "serverStats bit-for-bit"
+        )
+        return 0
+    summarize(report, stats, other, paths[0])
+    return 1 if report["violations"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
