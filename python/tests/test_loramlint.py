@@ -1,0 +1,422 @@
+"""loramlint suite tests (stdlib only — no jax, no cargo).
+
+Each lint pass gets a firing fixture and a quiet fixture, the rustsrc
+model gets lexer/test-span/annotation coverage, the ratchet baseline
+gets a new-violation AND a stale-entry failure, and each contract-mirror
+pair gets a drift fixture. The final test is the acceptance gate: the
+real repo must scan clean against the committed baseline.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "tools"))
+
+from loramlint import contract_mirror, lock_discipline  # noqa: E402
+from loramlint import panic_surface, report, result_hygiene  # noqa: E402
+from loramlint import trace_coverage  # noqa: E402
+from loramlint.cli import Context  # noqa: E402
+from loramlint.rustsrc import RustFile, lex  # noqa: E402
+
+
+def ctx_for(files, config=None, texts=None):
+    """A Context over in-memory sources: `files` maps relpath -> rust
+    source; `texts` maps relpath -> raw text for ctx.read()."""
+    ctx = Context(str(REPO), {p: RustFile(p, s) for p, s in files.items()},
+                  config or {})
+    if texts:
+        ctx._texts.update(texts)
+    return ctx
+
+
+# --------------------------------------------------------------- rustsrc
+
+
+def test_lexer_ignores_strings_and_comments():
+    toks = lex('let s = "x.unwrap()"; /* .expect( /* nested */ */ // panic!\n')
+    idents = [t.text for t in toks if t.kind == "ident"]
+    assert "unwrap" not in idents and "expect" not in idents
+    assert [t.text for t in toks if t.kind == "str"] == ['"x.unwrap()"']
+
+
+def test_lexer_lifetime_vs_char():
+    toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; }")
+    kinds = {t.text: t.kind for t in toks if t.kind in ("lifetime", "char")}
+    assert kinds["'a"] == "lifetime" and kinds["'x'"] == "char"
+
+
+def test_cfg_test_spans_and_fn_extraction():
+    rf = RustFile("x.rs", (
+        "impl Server {\n"
+        "    pub fn step(&mut self) { self.n += 1; }\n"
+        "}\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    #[test]\n"
+        "    fn t() { x.unwrap(); }\n"
+        "}\n"
+    ))
+    assert not rf.is_test_line(2) and rf.is_test_line(7)
+    quals = {f.qual: f.is_test for f in rf.fns}
+    assert quals == {"Server::step": False, "t": True}
+
+
+def test_allow_annotation_requires_reason():
+    rf = RustFile("x.rs", (
+        "fn a() { x.unwrap(); } // lint: allow(panic, \"boot-time only\")\n"
+        "// lint: allow(panic)\n"
+        "fn b() { y.unwrap(); }\n"
+    ))
+    assert rf.allow(1, "panic-surface")  # alias resolves, reason present
+    assert rf.allow(3, "panic-surface") is None  # bare: does NOT suppress
+    assert rf.bare_allow(3, "panic-surface")
+
+
+# --------------------------------------------------------- panic-surface
+
+HOT = {"hot_paths": ("hot.rs",)}
+
+
+def test_panic_surface_fires_on_each_kind():
+    src = (
+        "fn f(v: &[u8]) -> u8 {\n"
+        "    let a = v.first().unwrap();\n"
+        "    let b = opt.expect(\"msg\");\n"
+        "    if bad { panic!(\"no\"); }\n"
+        "    v[0]\n"
+        "}\n"
+    )
+    out = panic_surface.run(ctx_for({"hot.rs": src}, HOT))
+    kinds = sorted(v.key.split("@")[0] for v in out)
+    assert kinds == ["expect", "index", "panic", "unwrap"]
+
+
+def test_panic_surface_quiet_on_clean_and_test_code():
+    src = (
+        "fn f(v: &[u8]) -> anyhow::Result<u8> {\n"
+        "    let a = v.first().copied().unwrap_or(0);\n"
+        "    v.get(1).copied().ok_or_else(|| anyhow::anyhow!(\"short\"))\n"
+        "}\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    #[test] fn t() { assert_eq!(f(&[1][..]).unwrap(), 1); }\n"
+        "}\n"
+    )
+    assert panic_surface.run(ctx_for({"hot.rs": src}, HOT)) == []
+
+
+def test_panic_surface_allow_with_reason_suppresses():
+    src = (
+        "fn f() {\n"
+        "    // lint: allow(panic, \"invariant: ladder validated above\")\n"
+        "    let g = l.last().unwrap();\n"
+        "    let h = l.last().unwrap(); // lint: allow(panic)\n"
+        "}\n"
+    )
+    out = panic_surface.run(ctx_for({"hot.rs": src}, HOT))
+    assert len(out) == 1 and out[0].line == 4
+    assert "no reason" in out[0].msg
+
+
+def test_panic_surface_scopes_to_hot_paths_only():
+    src = "fn f() { x.unwrap(); }\n"
+    assert panic_surface.run(ctx_for({"cold.rs": src}, HOT)) == []
+
+
+# -------------------------------------------------------- result-hygiene
+
+
+def test_result_hygiene_fires_in_scope_quiet_outside():
+    src = "fn f() { let _ = fallible(); }\n"
+    fires = result_hygiene.run(
+        ctx_for({"rust/src/coordinator/x.rs": src}))
+    assert [v.line for v in fires] == [1]
+    quiet = result_hygiene.run(ctx_for({"rust/src/serve.rs": src}))
+    assert quiet == []
+
+
+def test_result_hygiene_named_discard_and_allow_are_quiet():
+    src = (
+        "fn f() {\n"
+        "    let _released = fallible();\n"
+        "    // lint: allow(result, \"best-effort cleanup\")\n"
+        "    let _ = fallible();\n"
+        "}\n"
+    )
+    assert result_hygiene.run(
+        ctx_for({"rust/src/coordinator/x.rs": src})) == []
+
+
+# ------------------------------------------------------- lock-discipline
+
+LOCKS = {"lock_targets": ("l.rs",)}
+
+
+def test_lock_guard_held_across_run_fires():
+    src = (
+        "impl G {\n"
+        "    fn step(&self) {\n"
+        "        let st = self.state.borrow_mut();\n"
+        "        st.sess.run(rt);\n"
+        "    }\n"
+        "}\n"
+    )
+    out = lock_discipline.run(ctx_for({"l.rs": src}, LOCKS))
+    assert len(out) == 1 and "held across `run(`" in out[0].msg
+
+
+def test_lock_drop_and_block_scope_end_liveness():
+    src = (
+        "impl G {\n"
+        "    fn a(&self) {\n"
+        "        let st = self.state.borrow_mut();\n"
+        "        drop(st);\n"
+        "        self.sess.run(rt);\n"
+        "    }\n"
+        "    fn b(&self) {\n"
+        "        { let st = self.state.borrow_mut(); st.tick(); }\n"
+        "        self.sess.run(rt);\n"
+        "    }\n"
+        "    fn c(&self) {\n"
+        "        self.state.borrow_mut().tick();\n"
+        "        self.sess.run(rt);\n"
+        "    }\n"
+        "}\n"
+    )
+    assert lock_discipline.run(ctx_for({"l.rs": src}, LOCKS)) == []
+
+
+def test_lock_order_inversion_fires_and_table_published():
+    src = (
+        "impl G {\n"
+        "    fn ab(&self) { let a = self.a_lock.lock(); let b = self.b_lock.lock(); }\n"
+        "    fn ba(&self) { let b = self.b_lock.lock(); let a = self.a_lock.lock(); }\n"
+        "}\n"
+    )
+    ctx = ctx_for({"l.rs": src}, LOCKS)
+    out = lock_discipline.run(ctx)
+    assert any("inversion" in v.msg for v in out)
+    table = ctx.artifacts["lock_order_table"]
+    assert table["l.rs:G::ab"] == ["self.a_lock", "self.b_lock"]
+
+
+def test_lock_plain_file_read_is_not_an_acquisition():
+    src = "impl G { fn f(&self) { let n = file.read(buf); self.sess.run(rt); } }\n"
+    assert lock_discipline.run(ctx_for({"l.rs": src}, LOCKS)) == []
+
+
+# ------------------------------------------------------- trace-coverage
+
+TRACE_RS = (
+    'pub enum Event {\n'
+    '    Admit { req: u64 },\n'
+    '    Evict { row: usize },\n'
+    '}\n'
+    'pub const KINDS: &[&str] = &["Admit", "Evict"];\n'
+)
+TRACE_CFG = {
+    "trace_required": (("s.rs", "Server", "admit", ("Admit",)),),
+    "trace_rs": "t.rs",
+}
+
+
+def _trace_files(admit_body):
+    return {
+        "s.rs": f"impl Server {{ fn admit(&mut self) {{ {admit_body} }} }}\n",
+        "t.rs": TRACE_RS,
+    }
+
+
+def test_trace_coverage_quiet_when_emitting():
+    files = _trace_files(
+        "emit(|| Event::Admit { req }); x.push(Event::Evict { row });")
+    assert trace_coverage.run(ctx_for(files, TRACE_CFG)) == []
+
+
+def test_trace_coverage_no_emit_and_missing_kind_fire():
+    out = trace_coverage.run(
+        ctx_for(_trace_files("self.rows += 1; let e = Event::Evict { row };"),
+                TRACE_CFG))
+    keys = {v.key.split("@")[0] for v in out}
+    assert "no-emit" in keys
+
+
+def test_trace_coverage_rename_detection():
+    files = {
+        "s.rs": "impl Server { fn admit_row(&mut self) { emit(|| Event::Admit { req }); emit(|| Event::Evict { row }); } }\n",
+        "t.rs": TRACE_RS,
+    }
+    out = trace_coverage.run(ctx_for(files, TRACE_CFG))
+    assert any(v.key == "missing-fn@Server::admit" for v in out)
+
+
+def test_trace_coverage_kind_liveness():
+    # Evict declared but never constructed; Ghost constructed but undeclared
+    files = _trace_files("emit(|| Event::Admit { req }); emit(|| Event::Ghost { x });")
+    out = trace_coverage.run(ctx_for(files, TRACE_CFG))
+    keys = {v.key for v in out}
+    assert "dead-kind@Evict" in keys and "unknown-kind@Ghost" in keys
+
+
+# ------------------------------------------------------- contract-mirror
+
+KV_OK = (
+    "pub fn chunk_ladder(seq: usize) -> Vec<usize> {\n"
+    "    let mut v = vec![16.min(seq), 64.min(seq), seq];\n"
+    "    v.sort_unstable(); v.dedup(); v\n"
+    "}\n"
+    "pub const PAGED_BLOCK: usize = 8;\n"
+    "pub fn paged_pool_blocks(b: usize, s: usize, block: usize) -> usize {\n"
+    "    b * (s / block)\n"
+    "}\n"
+)
+AOT_OK = (
+    "def chunk_ladder(s):\n    return sorted({min(16, s), min(64, s), s})\n"
+    "PAGED_BLOCK = 8\n"
+    "def paged_pool_blocks(b, s, block=PAGED_BLOCK):\n"
+    "    return b * (s // block)\n"
+)
+
+
+def _mirror_ctx(kv_src, aot_src, contracts):
+    return ctx_for(
+        {"rust/src/coordinator/kvcache.rs": kv_src},
+        {"contracts": [c for c in contract_mirror.CONTRACTS
+                       if c.name in contracts]},
+        texts={"python/compile/aot.py": aot_src},
+    )
+
+
+def test_chunk_ladder_contract_drift_and_clean():
+    assert contract_mirror.run(
+        _mirror_ctx(KV_OK, AOT_OK, {"chunk-ladder"})) == []
+    drifted = AOT_OK.replace("min(64, s)", "min(32, s)")
+    out = contract_mirror.run(_mirror_ctx(KV_OK, drifted, {"chunk-ladder"}))
+    assert len(out) == 1 and "drifted" in out[0].msg
+
+
+def test_paged_geometry_contract_drift_on_const_and_formula():
+    assert contract_mirror.run(
+        _mirror_ctx(KV_OK, AOT_OK, {"paged-geometry"})) == []
+    out = contract_mirror.run(_mirror_ctx(
+        KV_OK.replace("PAGED_BLOCK: usize = 8", "PAGED_BLOCK: usize = 16"),
+        AOT_OK, {"paged-geometry"}))
+    assert any("PAGED_BLOCK drifted" in v.msg for v in out)
+    out = contract_mirror.run(_mirror_ctx(
+        KV_OK.replace("b * (s / block)", "b * s / block"),
+        AOT_OK, {"paged-geometry"}))
+    assert any("formula drifted" in v.msg for v in out)
+
+
+def test_trace_schema_version_contract_drift():
+    ctx = ctx_for({}, {"contracts": [
+        c for c in contract_mirror.CONTRACTS
+        if c.name == "trace-schema-version"]},
+        texts={
+            "rust/src/obs/export.rs":
+                "pub const TRACE_SCHEMA_VERSION: u64 = 2;\n",
+            "tools/trace_report.py": "TRACE_SCHEMA_VERSION = 1\n",
+        })
+    out = contract_mirror.run(ctx)
+    assert len(out) == 1 and "writes 2" in out[0].msg
+
+
+def test_event_kinds_contract_drift():
+    trace = (
+        'pub enum Event {\n    Admit { req: u64 },\n    Extra { x: u64 },\n}\n'
+        'pub const KINDS: &[&str] = &["Admit", "Extra"];\n'
+    )
+    rep = 'KINDS = {\n    "Admit": ("req",),\n}\n'
+    ctx = ctx_for({}, {"contracts": [
+        c for c in contract_mirror.CONTRACTS if c.name == "event-kinds"]},
+        texts={"rust/src/obs/trace.rs": trace,
+               "tools/trace_report.py": rep})
+    out = contract_mirror.run(ctx)
+    assert any("only in trace.rs: ['Extra']" in v.msg for v in out)
+
+
+def test_metrics_keys_contract_flags_unproduced_consumer_key():
+    texts = {
+        "rust/src/serve.rs": 'm.set_counter("serve.served", 1);\n',
+        "rust/src/coordinator/kvcache.rs": "",
+        "rust/src/coordinator/speculative.rs": "",
+        "rust/benches/bench_main.rs":
+            'let a = m.counter("serve.served"); let b = m.counter("serve.gone");\n',
+        "rust/src/coordinator/experiments/tab8.rs": "",
+        "tools/trace_report.py": "",
+        "rust/src/main.rs": "",
+    }
+    ctx = ctx_for({}, {"contracts": [
+        c for c in contract_mirror.CONTRACTS if c.name == "metrics-keys"]},
+        texts=texts)
+    out = contract_mirror.run(ctx)
+    assert len(out) == 1 and "serve.gone" in out[0].msg
+
+
+# ------------------------------------------------------ ratchet baseline
+
+
+def _v(key, line=1, file="a.rs", rule="panic-surface"):
+    return report.Violation(rule, file, line, key, f"msg {key}")
+
+
+def test_baseline_ratchet_new_and_stale_both_fail(tmp_path):
+    path = tmp_path / "baseline.json"
+    report.write_baseline(str(path), [_v("k1"), _v("k2")])
+    doc = report.load_baseline(str(path))
+    # identical scan: clean
+    new, stale = report.check_against_baseline([_v("k1"), _v("k2")], doc)
+    assert new == [] and stale == []
+    # one extra site: NEW violation
+    new, stale = report.check_against_baseline(
+        [_v("k1"), _v("k2"), _v("k3", line=9)], doc)
+    assert [v.key for v in new] == ["k3"] and new[0].line == 9 and stale == []
+    # one fixed site: STALE baseline entry (ratchet must shrink)
+    new, stale = report.check_against_baseline([_v("k1")], doc)
+    assert new == [] and len(stale) == 1 and "k2" in stale[0]
+
+
+def test_baseline_counts_duplicate_lines(tmp_path):
+    path = tmp_path / "baseline.json"
+    report.write_baseline(str(path), [_v("dup", 1), _v("dup", 5)])
+    doc = report.load_baseline(str(path))
+    # same count, different lines: still clean (content-keyed, not line-keyed)
+    new, stale = report.check_against_baseline(
+        [_v("dup", 2), _v("dup", 7)], doc)
+    assert new == [] and stale == []
+    # third copy of the same line: new
+    new, _ = report.check_against_baseline(
+        [_v("dup", 2), _v("dup", 7), _v("dup", 8)], doc)
+    assert len(new) == 1
+
+
+# ---------------------------------------------------------- acceptance
+
+
+def test_real_repo_scans_clean_against_committed_baseline():
+    res = subprocess.run(
+        [sys.executable, str(REPO / "tools/loramlint/__main__.py"),
+         "rust/src", "--json"],
+        cwd=str(REPO), capture_output=True, text=True)
+    doc = json.loads(res.stdout)
+    assert res.returncode == 0, (doc["new_violations"], doc["stale_baseline"])
+    assert doc["new_violations"] == [] and doc["stale_baseline"] == []
+    assert len(doc["scanned_files"]) > 40
+
+
+def test_repo_hot_paths_have_no_unwrap_expect_in_serve_and_kvcache():
+    # the PR 8 burn-down acceptance: serve.rs + kvcache.rs carry zero
+    # non-test unwrap/expect/panic! (pre-PR scan had 6)
+    ctx = Context(str(REPO), {})
+    for rel in ("rust/src/serve.rs", "rust/src/coordinator/kvcache.rs"):
+        assert ctx.rust_file(rel) is not None
+    out = panic_surface.run(ctx)
+    bad = [v for v in out
+           if v.file in ("rust/src/serve.rs", "rust/src/coordinator/kvcache.rs")
+           and v.key.split("@")[0] in ("unwrap", "expect", "panic")]
+    assert bad == []

@@ -38,6 +38,15 @@
 //! row already computed, and [`PagedKv`] carries each row's table. Same
 //! `KvDecoder` surface, probing `decode_*_paged_<model>` artifact names.
 
+
+// The static mirror of this policy is `tools/loramlint` (panic-surface
+// pass); both gate the same hot path. Test code is exempt on both sides.
+#![cfg_attr(
+    not(test),
+    deny(clippy::unwrap_used, clippy::expect_used, clippy::panic, clippy::unreachable)
+)]
+#![cfg_attr(not(test), warn(clippy::indexing_slicing))]
+
 use crate::obs::trace::{self, Event};
 use crate::obs::Metrics;
 use crate::runtime::{Runtime, Session};
@@ -57,6 +66,19 @@ pub fn chunk_ladder(seq: usize) -> Vec<usize> {
     v.sort_unstable();
     v.dedup();
     v
+}
+
+/// Paged-KV block size in token slots — the Rust mirror of aot.py's
+/// `PAGED_BLOCK`. Both sides size the same compiled artifacts, so the
+/// pair is a `contract-mirror` lint contract (`paged-geometry`).
+pub const PAGED_BLOCK: usize = 8;
+
+/// Pool size (in blocks) that byte-matches a dense `b x s` KV grid — the
+/// Rust mirror of aot.py's `paged_pool_blocks`. The parameter names and
+/// the expression mirror the Python source token-for-token: the lint
+/// compares the two formulas textually, not numerically.
+pub fn paged_pool_blocks(b: usize, s: usize, block: usize) -> usize {
+    b * (s / block)
 }
 
 /// Pick the bucket for the next prefill window of a prompt with
@@ -111,8 +133,9 @@ pub(crate) fn chunk_plan(ladder: &[usize], len: usize) -> Vec<(usize, usize, usi
     let mut out = vec![];
     let mut start = 0;
     while start < len {
-        let bucket = next_bucket(ladder, len - start, usize::MAX, true)
-            .expect("unbounded budget always funds a bucket");
+        let Some(bucket) = next_bucket(ladder, len - start, usize::MAX, true) else {
+            break; // empty ladder: no window can be planned
+        };
         let take = bucket.min(len - start);
         out.push((start, take, bucket));
         start += take;
@@ -444,6 +467,7 @@ impl PrefixIndex {
     /// Drop every entry, releasing the index's references.
     pub fn clear(&mut self, pool: &mut BlockPool) {
         for (_, e) in self.map.drain() {
+            // lint: allow(result, "best-effort drain: one bad refcount must not abort the clear")
             let _ = pool.release(e.block);
         }
     }
@@ -653,6 +677,7 @@ impl PagedKv {
                 None => {
                     if self.index.reclaim(&mut self.pool, want - blocks.len()) == 0 {
                         for &id in &blocks {
+                            // lint: allow(result, "rollback of just-alloc'd blocks; the bail! below carries the error")
                             let _ = self.pool.release(id);
                         }
                         bail!(
@@ -740,6 +765,7 @@ impl PagedKv {
         let bs = self.pool.block_size();
         let run = self.index.lookup(bs, tokens);
         for &id in &run {
+            // lint: allow(result, "pin of a block the index just returned cannot fail")
             let _ = self.pool.pin(id);
         }
         run.len()
@@ -1376,7 +1402,10 @@ impl KvDecoder {
         prefill.set(rt, "last_pos", &Tensor::from_i32(&[], vec![(seq.len() - 1) as i32]))?;
         match paged.as_ref() {
             Some(pk) => {
-                let table = pk.table_i32(row).expect("planned above");
+                let table = match pk.table_i32(row) {
+                    Some(t) => t,
+                    None => bail!("row {row} has no paged block table (plan_admit missing)"),
+                };
                 prefill.set(rt, "block_table", &Tensor::from_i32(&[table.len()], table))?;
             }
             None => {
@@ -1410,6 +1439,7 @@ impl KvDecoder {
         if let Err(e) = run {
             // a failed paged admission must not leak the planned blocks
             if let Some(pk) = self.paged.as_mut() {
+                // lint: allow(result, "cleanup on the error path; `e` below is the root cause")
                 let _ = pk.evict_row(row);
             }
             return Err(e);
@@ -1591,6 +1621,7 @@ impl KvDecoder {
             return;
         }
         if let Some(pk) = self.paged.as_mut() {
+            // lint: allow(result, "abort of an unplanned row is a no-op Err by design")
             let _ = pk.evict_row(row);
         }
     }
@@ -1758,7 +1789,9 @@ impl KvDecoder {
         }
         let batch = self.batch;
         let Self { step, verify, cache_names, adapter_in, paged, .. } = self;
-        let sess = verify.as_mut().expect("draft_k implies a verify session");
+        let Some(sess) = verify.as_mut() else {
+            bail!("verify round without a verify session (draft_k = 0?)")
+        };
         sess.set(rt, "tokens", &Tensor::from_i32(&[batch, k + 1], toks))?;
         sess.set(rt, "pos", &Tensor::from_i32(&[batch], pos))?;
         if let Some(pk) = paged.as_ref() {

@@ -18,6 +18,7 @@ use anyhow::{bail, Context, Result};
 use loram::coordinator::downstream::{eval_all, ModelUnderTest};
 use loram::coordinator::experiments::{self, Scale};
 use loram::coordinator::generate::{Generator, SampleCfg};
+use loram::coordinator::kvcache::{paged_pool_blocks, PAGED_BLOCK};
 use loram::coordinator::pipeline::{ensure_base, Pipeline, PipelineConfig, Variant};
 use loram::data::instruct::Dataset;
 use loram::memory;
@@ -396,10 +397,15 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             ),
             0,
         ),
-        // same-bytes sizing as the §2f tests: pool 8·batch blocks × 8
-        // slots, rows decoupled from the grid
+        // same-bytes sizing as the §2f tests: the pool byte-matches a
+        // dense `batch x 64` grid, rows decoupled from the grid
         "paged" => Server::new(
-            SimEngine::with_paged(8 * batch, 8, 8 * batch, vec![16, 64])?,
+            SimEngine::with_paged(
+                paged_pool_blocks(batch, 64, PAGED_BLOCK),
+                PAGED_BLOCK,
+                8 * batch,
+                vec![16, 64],
+            )?,
             0,
         ),
         other => bail!("bad --sim-mode '{other}' (chunked|spec|paged)"),

@@ -23,6 +23,16 @@
 //! Both backends account uniformly into [`super::RuntimeMetrics`]:
 //! executions, execute time, and the h2d/d2h bytes they actually move.
 
+
+// The static mirror of this policy is `tools/loramlint` (panic-surface
+// pass, ratcheted in baseline.json); `warn` until the remaining sites
+// burn down, then promote to `deny` as serve.rs/kvcache.rs already did.
+#![cfg_attr(
+    not(test),
+    warn(clippy::unwrap_used, clippy::expect_used, clippy::panic, clippy::unreachable)
+)]
+#![cfg_attr(not(test), warn(clippy::indexing_slicing))]
+
 use super::{literal_to_tensor, tensor_to_literal, Artifact, Runtime};
 use crate::obs::trace::{self, Event};
 use crate::tensor::{Data, Dtype, Tensor, TensorStore};

@@ -21,6 +21,15 @@
 //! queue has no head-of-line blocking either. [`ServerStats`] keeps a
 //! per-adapter lane breakdown on top of the aggregate counters.
 
+
+// The static mirror of this policy is `tools/loramlint` (panic-surface
+// pass); both gate the same hot path. Test code is exempt on both sides.
+#![cfg_attr(
+    not(test),
+    deny(clippy::unwrap_used, clippy::expect_used, clippy::panic, clippy::unreachable)
+)]
+#![cfg_attr(not(test), warn(clippy::indexing_slicing))]
+
 use crate::coordinator::adapters::AdapterId;
 use crate::coordinator::generate::{Generator, PrefillTickOut, SampleCfg, StepOut};
 use crate::coordinator::kvcache::{chunk_plan, PagedKv, PagedStats, PrefillStats};
@@ -733,7 +742,9 @@ impl<E: DecodeEngine> Server<E> {
         self.stats.spec = self.engine.spec_stats();
         let mut out = vec![];
         for row in done_rows {
-            let f = self.inflight[row].take().expect("finished row tracked");
+            let Some(f) = self.inflight.get_mut(row).and_then(Option::take) else {
+                continue; // engine finished a row the server no longer tracks
+            };
             trace::emit(|| Event::Finish { req: f.id, row, tokens: f.tokens });
             let ids = self.engine.take(row).unwrap_or_default();
             let ttft_ms = f.ttft_ms.unwrap_or_default();
@@ -868,7 +879,7 @@ impl SimEngine {
     /// `[grid]` bucket is the monolithic pad-to-S baseline — and `stall`
     /// freezes decode while admissions are in flight.
     pub fn with_prefill(batch: usize, ladder: Vec<usize>, stall: bool) -> SimEngine {
-        assert!(!ladder.is_empty() && ladder.windows(2).all(|w| w[0] < w[1]));
+        assert!(!ladder.is_empty() && ladder.iter().zip(ladder.iter().skip(1)).all(|(a, b)| a < b));
         let mut e = SimEngine::new(batch);
         e.prefill_model = Some(SimPrefill { ladder, stall });
         e
@@ -891,8 +902,13 @@ impl SimEngine {
         batch_rows: usize,
         ladder: Vec<usize>,
     ) -> Result<SimEngine> {
-        assert!(!ladder.is_empty() && ladder.windows(2).all(|w| w[0] < w[1]));
-        let grid = *ladder.last().expect("non-empty ladder");
+        let Some(&grid) = ladder.last() else {
+            bail!("with_paged: empty prefill ladder")
+        };
+        ensure!(
+            ladder.iter().zip(ladder.iter().skip(1)).all(|(a, b)| a < b),
+            "with_paged: ladder must be strictly increasing"
+        );
         let mut e = SimEngine::new(batch_rows);
         e.prefill_model = Some(SimPrefill { ladder, stall: false });
         e.paged = Some(PagedKv::new(pool_blocks, block, batch_rows, grid)?);
@@ -997,7 +1013,9 @@ impl DecodeEngine for SimEngine {
             }
         }
         if let Some(pm) = &self.prefill_model {
-            let grid = *pm.ladder.last().expect("non-empty ladder");
+            // constructors validate the ladder; an empty one degrades to
+            // single-token windows rather than taking the batch down
+            let grid = pm.ladder.last().copied().unwrap_or(1);
             let len = self.tk.encode(prompt).len().clamp(1, grid);
             let len = len.saturating_sub(resident).max(1);
             let plan = chunk_plan(&pm.ladder, len);

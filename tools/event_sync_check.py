@@ -1,77 +1,45 @@
 #!/usr/bin/env python3
 """Fail CI when the trace-event schema drifts between Rust and Python.
 
-The trace-event vocabulary lives in two places that cannot share code:
+Thin shim: the actual check moved into the loramlint suite as the
+`event-kinds` contract of the contract-mirror pass
+(`tools/loramlint/contract_mirror.py`), alongside the other
+cross-language pairs (chunk ladder, paged geometry, schema version,
+metrics keys). This wrapper keeps the historical CLI so existing
+invocations — `python3 tools/event_sync_check.py [repo_root]` — and
+ci.sh muscle memory keep working.
 
-  * `rust/src/obs/trace.rs` — the `Event` enum (one variant per line,
-    struct-style fields), which is what the serving stack emits, and
-  * `tools/trace_report.py` — the `KINDS` table (kind -> payload fields),
-    which is what the offline auditor validates against.
-
-This script parses both *source texts* and diffs variant names, order,
-and field lists. Adding an event kind (or a field) to one side without
-the other exits nonzero with the exact diff, so the schema cannot drift
-silently between a Rust refactor and the Python audit.
-
-Usage:
-    python3 tools/event_sync_check.py          # from the repo root
-    python3 tools/event_sync_check.py <repo>   # explicit repo root
+For the full suite: `python3 tools/loramlint rust/src`.
 """
 
 import os
-import re
 import sys
 
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+from loramlint.contract_mirror import (  # noqa: E402
+    diff_event_kinds,
+    parse_python_kinds,
+    parse_rust_event_enum,
+    parse_rust_kinds_const,
+)
+
+
+# path-based wrappers, preserving this script's historical API (the
+# loramlint extractors take source text, not paths)
 def parse_rust_enum(path):
-    """Return [(variant, [fields...])] from `pub enum Event { ... }`."""
     with open(path) as f:
-        src = f.read()
-    m = re.search(r"pub enum Event \{(.*?)\n\}", src, re.S)
-    if not m:
-        raise SystemExit(f"{path}: could not find `pub enum Event {{ ... }}`")
-    variants = []
-    for line in m.group(1).splitlines():
-        line = line.strip()
-        vm = re.match(r"([A-Z]\w*)\s*\{([^}]*)\}", line)
-        if not vm:
-            continue  # doc comments, attributes, blank lines
-        fields = re.findall(r"(\w+)\s*:", vm.group(2))
-        variants.append((vm.group(1), fields))
-    if not variants:
-        raise SystemExit(f"{path}: parsed zero variants — is the enum still "
-                         "one-variant-per-line?")
-    return variants
+        return parse_rust_event_enum(f.read(), path)
 
 
-def parse_rust_kinds_const(path):
-    """Return the KINDS const string list (the runtime kind table)."""
+def parse_rust_kinds(path):
     with open(path) as f:
-        src = f.read()
-    m = re.search(r"pub const KINDS[^=]*=\s*&\[(.*?)\];", src, re.S)
-    if not m:
-        raise SystemExit(f"{path}: could not find `pub const KINDS`")
-    return re.findall(r'"(\w+)"', m.group(1))
+        return parse_rust_kinds_const(f.read(), path)
 
 
-def parse_python_kinds(path):
-    """Return [(kind, [fields...])] from trace_report.py's KINDS dict."""
+def parse_py_kinds(path):
     with open(path) as f:
-        src = f.read()
-    m = re.search(r"^KINDS = \{(.*?)\n\}", src, re.S | re.M)
-    if not m:
-        raise SystemExit(f"{path}: could not find `KINDS = {{ ... }}`")
-    kinds = []
-    for line in m.group(1).splitlines():
-        km = re.match(r'\s*"(\w+)":\s*\(([^)]*)\)', line)
-        if not km:
-            continue
-        fields = re.findall(r'"(\w+)"', km.group(2))
-        kinds.append((km.group(1), fields))
-    if not kinds:
-        raise SystemExit(f"{path}: parsed zero kinds — is KINDS still "
-                         "one-kind-per-line?")
-    return kinds
+        return parse_python_kinds(f.read(), path)
 
 
 def main(argv):
@@ -79,38 +47,17 @@ def main(argv):
         os.path.dirname(os.path.abspath(__file__)))
     trace_rs = os.path.join(root, "rust", "src", "obs", "trace.rs")
     report_py = os.path.join(root, "tools", "trace_report.py")
-    rust = parse_rust_enum(trace_rs)
-    rust_const = parse_rust_kinds_const(trace_rs)
-    py = parse_python_kinds(report_py)
-
-    errs = []
-    rust_names = [n for n, _ in rust]
-    py_names = [n for n, _ in py]
-    if rust_names != rust_const:
-        errs.append(
-            "trace.rs: `Event` variants and the `KINDS` const disagree:\n"
-            f"  enum : {rust_names}\n  const: {rust_const}"
-        )
-    if rust_names != py_names:
-        only_rust = [n for n in rust_names if n not in py_names]
-        only_py = [n for n in py_names if n not in rust_names]
-        detail = []
-        if only_rust:
-            detail.append(f"only in trace.rs: {only_rust}")
-        if only_py:
-            detail.append(f"only in trace_report.py: {only_py}")
-        if not detail:
-            detail.append(f"order differs:\n  rust:   {rust_names}\n"
-                          f"  python: {py_names}")
-        errs.append("event kinds drifted — " + "; ".join(detail))
-    else:
-        for (name, rf), (_, pf) in zip(rust, py):
-            if rf != pf:
-                errs.append(
-                    f"{name}: payload fields drifted — trace.rs has {rf}, "
-                    f"trace_report.py has {pf}"
-                )
-
+    with open(trace_rs) as f:
+        trace_src = f.read()
+    with open(report_py) as f:
+        report_src = f.read()
+    try:
+        rust = parse_rust_event_enum(trace_src, trace_rs)
+        rust_const = parse_rust_kinds_const(trace_src, trace_rs)
+        py = parse_python_kinds(report_src, report_py)
+    except Exception as e:  # extraction anchors gone
+        raise SystemExit(str(e))
+    errs = diff_event_kinds(rust, rust_const, py)
     if errs:
         print(f"event_sync_check: FAILED ({len(errs)} problems):")
         for e in errs:
@@ -118,7 +65,8 @@ def main(argv):
         return 1
     print(
         f"event_sync_check: OK — {len(rust)} event kinds in sync between "
-        "rust/src/obs/trace.rs and tools/trace_report.py"
+        "rust/src/obs/trace.rs and tools/trace_report.py "
+        "(via loramlint contract-mirror)"
     )
     return 0
 

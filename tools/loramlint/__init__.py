@@ -1,0 +1,15 @@
+"""loramlint: stdlib-only static analysis for the loram Rust stack.
+
+Five passes over a token-level Rust source model (`rustsrc.py`):
+
+  panic-surface    no unwrap/expect/panic!/slice-index in hot paths
+  contract-mirror  Rust<->Python shared constants/formulas stay in sync
+  trace-coverage   state transitions keep their Event emission sites
+  lock-discipline  no guard held across engine calls; lock-order table
+  result-hygiene   no `let _ =` discards in coordinator/
+
+Violations ratchet against the committed `baseline.json` (monotone
+shrink). See DESIGN.md §2h; entry point: `python3 tools/loramlint rust/src`.
+"""
+
+__version__ = "1.0"

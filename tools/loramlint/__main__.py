@@ -1,0 +1,17 @@
+"""Entry point: `python3 tools/loramlint <rust_src>` or
+`python3 tools/loramlint/__main__.py <rust_src>` — both work in a bare
+stdlib environment (the direct-file form bootstraps sys.path so the
+package-relative imports resolve)."""
+
+import os
+import sys
+
+if __package__ in (None, ""):
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    from loramlint.cli import main
+else:
+    from .cli import main
+
+sys.exit(main())

@@ -1,0 +1,219 @@
+"""loramlint driver: load sources once, run passes, ratchet, report.
+
+Usage (from the repo root, bare stdlib python3):
+
+    python3 tools/loramlint/__main__.py rust/src
+    python3 tools/loramlint/__main__.py rust/src --update-baseline
+    python3 tools/loramlint/__main__.py rust/src --select panic-surface --json
+    python3 tools/loramlint/__main__.py rust/src --locks
+
+Exit codes: 0 clean against the committed baseline; 1 new violations or
+stale baseline entries (the ratchet fails in BOTH directions); 2 usage.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from . import (
+    contract_mirror,
+    lock_discipline,
+    panic_surface,
+    report,
+    result_hygiene,
+    trace_coverage,
+)
+from .rustsrc import RustFile
+
+PASSES = (
+    ("panic-surface", panic_surface.run),
+    ("contract-mirror", contract_mirror.run),
+    ("trace-coverage", trace_coverage.run),
+    ("lock-discipline", lock_discipline.run),
+    ("result-hygiene", result_hygiene.run),
+)
+
+
+class Context:
+    """What every pass sees: parsed rust files, raw texts, config, and a
+    scratch `artifacts` dict (the lock pass publishes its acquisition-
+    order table there)."""
+
+    def __init__(self, repo, rust_files, config=None):
+        self.repo = repo  # absolute repo root
+        self.rust_files = rust_files  # relpath -> RustFile (the scan set)
+        self.config = config or {}
+        self.artifacts = {}
+        self._texts = {}
+
+    def read(self, relpath):
+        """Raw text of any repo file ('/'-separated relpath), or None."""
+        if relpath not in self._texts:
+            path = os.path.join(self.repo, *relpath.split("/"))
+            try:
+                with open(path, encoding="utf-8") as f:
+                    self._texts[relpath] = f.read()
+            except OSError:
+                self._texts[relpath] = None
+        return self._texts[relpath]
+
+    def rust_file(self, relpath):
+        """Parsed RustFile for `relpath`, loading lazily if it was outside
+        the scanned tree (e.g. rust/benches)."""
+        if relpath in self.rust_files:
+            return self.rust_files[relpath]
+        text = self.read(relpath)
+        if text is None:
+            return None
+        rf = RustFile(relpath, text)
+        self.rust_files[relpath] = rf
+        return rf
+
+
+def collect_rust_files(repo, rust_src_dir):
+    """relpath -> RustFile for every .rs under `rust_src_dir`."""
+    root = os.path.join(repo, *rust_src_dir.split("/"))
+    if not os.path.isdir(root):
+        raise SystemExit(f"loramlint: not a directory: {root}")
+    out = {}
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for name in sorted(filenames):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, repo).replace(os.sep, "/")
+            out[rel] = RustFile.from_path(path)
+    return out
+
+
+def run_passes(ctx, select=None):
+    violations = []
+    for name, run in PASSES:
+        if select and name not in select:
+            continue
+        violations.extend(run(ctx))
+    return violations
+
+
+def _default_repo():
+    # tools/loramlint/cli.py -> two levels above tools/
+    return os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="loramlint",
+        description="stdlib static-analysis suite for the loram Rust stack",
+    )
+    ap.add_argument(
+        "rust_src", nargs="?", default="rust/src",
+        help="repo-relative rust source dir to scan (default: rust/src)",
+    )
+    ap.add_argument(
+        "--repo", default=_default_repo(),
+        help="repo root (default: inferred from this file's location)",
+    )
+    ap.add_argument(
+        "--baseline", default=None,
+        help="ratchet baseline path (default: tools/loramlint/baseline.json)",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="regenerate the baseline from this scan and exit 0",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore the baseline: report every violation (exit 1 if any)",
+    )
+    ap.add_argument(
+        "--select", default=None,
+        help="comma-separated pass names to run (default: all)",
+    )
+    ap.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="emit machine-readable JSON instead of text",
+    )
+    ap.add_argument(
+        "--locks", action="store_true",
+        help="print the lock-acquisition-order table and exit",
+    )
+    args = ap.parse_args(argv)
+
+    repo = os.path.abspath(args.repo)
+    baseline_path = args.baseline or os.path.join(
+        repo, "tools", "loramlint", "baseline.json"
+    )
+    select = None
+    if args.select:
+        select = set(args.select.split(","))
+        known = {name for name, _ in PASSES}
+        bad = select - known
+        if bad:
+            ap.error(f"unknown pass(es): {sorted(bad)}; known: {sorted(known)}")
+    if args.locks:
+        select = {"lock-discipline"}
+
+    ctx = Context(repo, collect_rust_files(repo, args.rust_src))
+    violations = run_passes(ctx, select)
+
+    if args.locks:
+        table = ctx.artifacts.get("lock_order_table", {})
+        if args.as_json:
+            print(json.dumps(table, indent=1, sort_keys=True))
+        else:
+            print("lock/borrow acquisition order (per fn, non-test):")
+            for qual in sorted(table):
+                print(f"  {qual}: {' -> '.join(table[qual])}")
+        return 0
+
+    if args.update_baseline:
+        report.write_baseline(baseline_path, violations)
+        counts, _ = report.aggregate(violations)
+        total = sum(sum(c.values()) for c in counts.values())
+        print(
+            f"loramlint: baseline regenerated at {baseline_path} "
+            f"({total} ratcheted violation(s) across {len(counts)} "
+            "rule/file pair(s))"
+        )
+        return 0
+
+    if args.no_baseline:
+        new, stale = violations, []
+    else:
+        doc = report.load_baseline(baseline_path)
+        new, stale = report.check_against_baseline(violations, doc)
+
+    if args.as_json:
+        print(
+            json.dumps(
+                {
+                    "new_violations": [v.to_json() for v in new],
+                    "stale_baseline": stale,
+                    "scanned_files": sorted(ctx.rust_files),
+                    "total_current": len(violations),
+                },
+                indent=1,
+            )
+        )
+    else:
+        for v in sorted(new, key=lambda v: (v.file, v.line, v.rule)):
+            print(f"{v.file}:{v.line}: [{v.rule}] {v.msg}")
+        for s in stale:
+            print(f"STALE: {s}")
+        if new or stale:
+            print(
+                f"\nloramlint: FAIL — {len(new)} new violation(s), "
+                f"{len(stale)} stale baseline entr(y/ies). New code must "
+                "fix the site or carry `// lint: allow(<rule>, \"reason\")`; "
+                "fixed sites must shrink the baseline (--update-baseline)."
+            )
+        else:
+            print(
+                f"loramlint: OK — {len(ctx.rust_files)} file(s), "
+                f"{len(violations)} baselined violation(s), 0 new, 0 stale"
+            )
+    return 1 if (new or stale) else 0

@@ -1,0 +1,397 @@
+"""contract-mirror: declarative cross-language invariant pairs.
+
+The Rust serving stack and the Python emitter/auditors cannot share
+code, so every shared constant or formula lives twice. Each CONTRACT
+below names the two source-of-truth sites and how to extract a
+comparable value from each *source text*; drift fails the lint with the
+exact diff. This generalizes the old `tools/event_sync_check.py` (which
+survives as a thin shim over the `event-kinds` contract here).
+
+Shipped pairs:
+
+  chunk-ladder          kvcache.rs::chunk_ladder     ~ aot.py::chunk_ladder
+                        (the bucket constants: the probe-by-formula
+                        artifact discovery contract, DESIGN.md §2e)
+  paged-geometry        kvcache.rs::{PAGED_BLOCK, paged_pool_blocks}
+                        ~ aot.py::{PAGED_BLOCK, paged_pool_blocks}
+                        (pool bytes == dense grid bytes, §2f)
+  trace-schema-version  export.rs::TRACE_SCHEMA_VERSION
+                        ~ trace_report.py::TRACE_SCHEMA_VERSION
+  event-kinds           trace.rs::Event enum == trace.rs::KINDS const
+                        == trace_report.py::KINDS (names, order, fields)
+  metrics-keys          every registry key bench_main.rs / tab8.rs /
+                        trace_report.py *consumes* must be *produced* by
+                        ServerStats::to_metrics (+ the stats structs'
+                        export_into) / main.rs's serverStats embedding
+
+To add a pair: write an extractor for each side returning a comparable
+value, append a Contract to CONTRACTS, and add a drift + clean fixture
+to python/tests/test_loramlint.py (DESIGN.md §2h walks through one).
+"""
+
+import re
+
+from .report import Violation
+
+RULE = "contract-mirror"
+
+
+# -- generic source extraction helpers ---------------------------------------
+
+def _strip_py_strings(text):
+    text = re.sub(r'("""|\'\'\')(?:.|\n)*?\1', "", text)
+    return re.sub(r'#[^\n]*', "", text)
+
+
+def py_def_body(src, name):
+    """Body text of `def name(...):` up to the next top-level statement,
+    docstrings/comments stripped. None when the def is missing."""
+    m = re.search(rf"^def {re.escape(name)}\(.*?\):", src, re.M | re.S)
+    if not m:
+        return None
+    rest = src[m.end():]
+    stop = re.search(r"^\S", rest, re.M)
+    body = rest[: stop.start()] if stop else rest
+    return _strip_py_strings(body)
+
+
+def rust_fn_ints(rf, name):
+    """Sorted unique integer literals in the body of free fn `name`."""
+    for fn in rf.fns:
+        if fn.qual == name and not fn.is_test:
+            return sorted(
+                {
+                    int(t.text.replace("_", ""))
+                    for t in fn.body
+                    if t.kind == "num" and t.text.replace("_", "").isdigit()
+                }
+            )
+    return None
+
+
+def py_body_ints(body):
+    return sorted({int(x) for x in re.findall(r"\b\d+\b", body)})
+
+
+def rust_const_int(src, name):
+    m = re.search(
+        rf"\bconst {re.escape(name)}\s*:\s*\w+\s*=\s*(\d+)", src
+    )
+    return int(m.group(1)) if m else None
+
+
+def py_const_int(src, name):
+    m = re.search(rf"^{re.escape(name)}\s*=\s*(\d+)\s*$", src, re.M)
+    return int(m.group(1)) if m else None
+
+
+def _norm_formula(text):
+    """Whitespace-free, `//`->`/` normal form of an arithmetic expr."""
+    return re.sub(r"\s+", "", text).replace("//", "/")
+
+
+def rust_fn_return_expr(rf, name):
+    """The body text of a one-expression free fn, normalized."""
+    for fn in rf.fns:
+        if fn.qual == name and not fn.is_test:
+            return _norm_formula("".join(t.text for t in fn.body))
+    return None
+
+
+def py_return_expr(body):
+    m = re.search(r"return\s+(.+)", body)
+    return _norm_formula(m.group(1)) if m else None
+
+
+# -- event-kinds (the old event_sync_check, now a contract) ------------------
+
+def parse_rust_event_enum(src, path="trace.rs"):
+    """[(variant, [fields...])] from `pub enum Event { ... }` (one variant
+    per line, struct-style fields)."""
+    m = re.search(r"pub enum Event \{(.*?)\n\}", src, re.S)
+    if not m:
+        raise _Extract(f"{path}: could not find `pub enum Event {{ ... }}`")
+    variants = []
+    for line in m.group(1).splitlines():
+        vm = re.match(r"([A-Z]\w*)\s*\{([^}]*)\}", line.strip())
+        if not vm:
+            continue  # doc comments, attributes, blank lines
+        fields = re.findall(r"(\w+)\s*:", vm.group(2))
+        variants.append((vm.group(1), fields))
+    if not variants:
+        raise _Extract(
+            f"{path}: parsed zero Event variants — is the enum still "
+            "one-variant-per-line?"
+        )
+    return variants
+
+
+def parse_rust_kinds_const(src, path="trace.rs"):
+    m = re.search(r"pub const KINDS[^=]*=\s*&\[(.*?)\];", src, re.S)
+    if not m:
+        raise _Extract(f"{path}: could not find `pub const KINDS`")
+    return re.findall(r'"(\w+)"', m.group(1))
+
+
+def parse_python_kinds(src, path="trace_report.py"):
+    m = re.search(r"^KINDS = \{(.*?)\n\}", src, re.S | re.M)
+    if not m:
+        raise _Extract(f"{path}: could not find `KINDS = {{ ... }}`")
+    kinds = []
+    for line in m.group(1).splitlines():
+        km = re.match(r'\s*"(\w+)":\s*\(([^)]*)\)', line)
+        if km:
+            kinds.append((km.group(1), re.findall(r'"(\w+)"', km.group(2))))
+    if not kinds:
+        raise _Extract(f"{path}: parsed zero kinds from KINDS")
+    return kinds
+
+
+def diff_event_kinds(rust_variants, rust_const, py_kinds):
+    """The event_sync_check comparison, returned as problem strings."""
+    errs = []
+    rust_names = [n for n, _ in rust_variants]
+    py_names = [n for n, _ in py_kinds]
+    if rust_names != rust_const:
+        errs.append(
+            "trace.rs: `Event` variants and the `KINDS` const disagree:\n"
+            f"  enum : {rust_names}\n  const: {rust_const}"
+        )
+    if rust_names != py_names:
+        only_rust = [n for n in rust_names if n not in py_names]
+        only_py = [n for n in py_names if n not in rust_names]
+        detail = []
+        if only_rust:
+            detail.append(f"only in trace.rs: {only_rust}")
+        if only_py:
+            detail.append(f"only in trace_report.py: {only_py}")
+        if not detail:
+            detail.append(
+                f"order differs:\n  rust:   {rust_names}\n  python: {py_names}"
+            )
+        errs.append("event kinds drifted — " + "; ".join(detail))
+    else:
+        for (name, rf_), (_, pf) in zip(rust_variants, py_kinds):
+            if rf_ != pf:
+                errs.append(
+                    f"{name}: payload fields drifted — trace.rs has {rf_}, "
+                    f"trace_report.py has {pf}"
+                )
+    return errs
+
+
+# -- metrics-keys ------------------------------------------------------------
+
+PRODUCER_FILES = (
+    "rust/src/serve.rs",
+    "rust/src/coordinator/kvcache.rs",
+    "rust/src/coordinator/speculative.rs",
+)
+CONSUMER_RS = (
+    "rust/benches/bench_main.rs",
+    "rust/src/coordinator/experiments/tab8.rs",
+)
+NAMESPACES = ("serve.", "prefill.", "spec.", "paged.")
+
+_PRODUCE_RE = re.compile(
+    r'\b(?:set_counter|set_gauge|inc|observe|observe_all)\(\s*"([^"]+)"'
+)
+_CONSUME_RE = re.compile(
+    r'\b(?:counter|gauge|has_counter|has_gauge|hist|hist_pcts|c|g)\(\s*"([^"]+)"'
+)
+_ADAPTER_FIELD_RE = re.compile(r'\bk\(\s*"([^"]+)"\s*\)')
+_STATS_GET_RE = re.compile(r'stats\.get\(\s*f?"([^"{}]+)"')
+_SERVERSTATS_KEY_RE = re.compile(r'\(\s*"([a-z_0-9]+)"\s*,\s*Json::num')
+
+
+def check_metrics_keys(read):
+    """`read(relpath) -> text or None`; returns problem strings."""
+    errs = []
+    produced, prod_adapter = set(), set()
+    for relpath in PRODUCER_FILES:
+        text = read(relpath)
+        if text is None:
+            errs.append(f"metrics producer missing: {relpath}")
+            continue
+        produced.update(_PRODUCE_RE.findall(text))
+        prod_adapter.update(_ADAPTER_FIELD_RE.findall(text))
+    consumed, cons_adapter = {}, {}
+    for relpath in CONSUMER_RS:
+        text = read(relpath)
+        if text is None:
+            errs.append(f"metrics consumer missing: {relpath}")
+            continue
+        for key in _CONSUME_RE.findall(text):
+            if key.startswith(NAMESPACES):
+                consumed.setdefault(key, relpath)
+        for f in _ADAPTER_FIELD_RE.findall(text):
+            cons_adapter.setdefault(f, relpath)
+    for key in sorted(consumed):
+        if key not in produced:
+            errs.append(
+                f"{consumed[key]} reads registry key '{key}' but no "
+                "producer exports it (ServerStats::to_metrics / "
+                "export_into renamed or dropped it?)"
+            )
+    for f in sorted(cons_adapter):
+        if f not in prod_adapter:
+            errs.append(
+                f"{cons_adapter[f]} reads per-adapter field '{f}' but "
+                "ServerStats::to_metrics does not export it"
+            )
+    # serverStats side-channel: trace_report.py's --check keys must be
+    # embedded by main.rs's trace_finish
+    report = read("tools/trace_report.py")
+    mainrs = read("rust/src/main.rs")
+    if report is None or mainrs is None:
+        errs.append("trace_report.py or main.rs missing for serverStats check")
+        return errs
+    embedded = set(_SERVERSTATS_KEY_RE.findall(mainrs))
+    for key in sorted(set(_STATS_GET_RE.findall(report))):
+        expanded = [key]
+        if "{" in key or "}" in key:
+            continue  # f-string key, handled below
+        for k in expanded:
+            if k not in embedded:
+                errs.append(
+                    f"trace_report.py --check reads serverStats['{k}'] but "
+                    "main.rs trace_finish does not embed it"
+                )
+    # the f-string percentile keys: f"{key}_tick_p{p}" over ttft/itl, 50/95
+    if re.search(r'stats\.get\(f"\{key\}_tick_p\{p\}"\)', report):
+        for k in ("ttft", "itl"):
+            for p in (50, 95):
+                want = f"{k}_tick_p{p}"
+                if want not in embedded:
+                    errs.append(
+                        f"trace_report.py --check reads serverStats"
+                        f"['{want}'] but main.rs trace_finish does not "
+                        "embed it"
+                    )
+    return errs
+
+
+# -- the contract table ------------------------------------------------------
+
+class _Extract(Exception):
+    """Extraction failed: the mirror's anchor text is gone."""
+
+
+class Contract:
+    def __init__(self, name, check):
+        self.name = name
+        self.check = check  # fn(ctx) -> [problem strings]
+
+
+def _chunk_ladder(ctx):
+    rf = ctx.rust_file("rust/src/coordinator/kvcache.rs")
+    aot = ctx.read("python/compile/aot.py")
+    if rf is None or aot is None:
+        return ["kvcache.rs or aot.py missing"]
+    rust = rust_fn_ints(rf, "chunk_ladder")
+    body = py_def_body(aot, "chunk_ladder")
+    if rust is None:
+        return ["kvcache.rs: free fn `chunk_ladder` not found"]
+    if body is None:
+        return ["aot.py: `def chunk_ladder` not found"]
+    py = py_body_ints(body)
+    if rust != py:
+        return [
+            f"chunk_ladder bucket constants drifted — kvcache.rs uses "
+            f"{rust}, aot.py uses {py}"
+        ]
+    return []
+
+
+def _paged_geometry(ctx):
+    rf = ctx.rust_file("rust/src/coordinator/kvcache.rs")
+    aot = ctx.read("python/compile/aot.py")
+    if rf is None or aot is None:
+        return ["kvcache.rs or aot.py missing"]
+    errs = []
+    r_block = rust_const_int(rf.src, "PAGED_BLOCK")
+    p_block = py_const_int(aot, "PAGED_BLOCK")
+    if r_block is None:
+        errs.append("kvcache.rs: `pub const PAGED_BLOCK` not found")
+    if p_block is None:
+        errs.append("aot.py: `PAGED_BLOCK = <int>` not found")
+    if None not in (r_block, p_block) and r_block != p_block:
+        errs.append(
+            f"PAGED_BLOCK drifted — kvcache.rs says {r_block}, aot.py "
+            f"says {p_block}"
+        )
+    r_formula = rust_fn_return_expr(rf, "paged_pool_blocks")
+    body = py_def_body(aot, "paged_pool_blocks")
+    p_formula = py_return_expr(body) if body else None
+    if r_formula is None:
+        errs.append("kvcache.rs: free fn `paged_pool_blocks` not found")
+    if p_formula is None:
+        errs.append("aot.py: `def paged_pool_blocks` return expr not found")
+    if None not in (r_formula, p_formula) and r_formula != p_formula:
+        errs.append(
+            f"paged_pool_blocks formula drifted — kvcache.rs computes "
+            f"`{r_formula}`, aot.py computes `{p_formula}`"
+        )
+    return errs
+
+
+def _trace_schema_version(ctx):
+    export = ctx.read("rust/src/obs/export.rs")
+    report = ctx.read("tools/trace_report.py")
+    if export is None or report is None:
+        return ["export.rs or trace_report.py missing"]
+    r = rust_const_int(export, "TRACE_SCHEMA_VERSION")
+    p = py_const_int(report, "TRACE_SCHEMA_VERSION")
+    if r is None:
+        return ["export.rs: `TRACE_SCHEMA_VERSION` const not found"]
+    if p is None:
+        return [
+            "trace_report.py: `TRACE_SCHEMA_VERSION = <int>` not found — "
+            "the auditor must pin the schema it understands"
+        ]
+    if r != p:
+        return [
+            f"TRACE_SCHEMA_VERSION drifted — export.rs writes {r}, "
+            f"trace_report.py expects {p}"
+        ]
+    return []
+
+
+def _event_kinds(ctx):
+    trace = ctx.read("rust/src/obs/trace.rs")
+    report = ctx.read("tools/trace_report.py")
+    if trace is None or report is None:
+        return ["trace.rs or trace_report.py missing"]
+    try:
+        variants = parse_rust_event_enum(trace)
+        const = parse_rust_kinds_const(trace)
+        py = parse_python_kinds(report)
+    except _Extract as e:
+        return [str(e)]
+    return diff_event_kinds(variants, const, py)
+
+
+def _metrics_keys(ctx):
+    return check_metrics_keys(ctx.read)
+
+
+CONTRACTS = (
+    Contract("chunk-ladder", _chunk_ladder),
+    Contract("paged-geometry", _paged_geometry),
+    Contract("trace-schema-version", _trace_schema_version),
+    Contract("event-kinds", _event_kinds),
+    Contract("metrics-keys", _metrics_keys),
+)
+
+
+def run(ctx):
+    out = []
+    for c in ctx.config.get("contracts", CONTRACTS):
+        for problem in c.check(ctx):
+            out.append(
+                Violation(
+                    RULE, "contract", 0, f"{c.name}@{problem[:120]}",
+                    f"[{c.name}] {problem}",
+                )
+            )
+    return out

@@ -1,0 +1,216 @@
+"""lock-discipline: no Mutex/RefCell guard held across an engine call.
+
+The async pipelined engine (ROADMAP) will put real locks into the paths
+where today a single-threaded `RefCell` guards `DecodeState`. A guard
+held across `Session::run` / `donate_slots` is exactly the shape that
+deadlocks (or double-borrows) once those calls overlap ticks on another
+thread — so this pass:
+
+  1. flags any `.borrow()` / `.borrow_mut()` / `.lock()` /
+     `.try_lock()` guard still live at a `.run(` / `donate_slots(` /
+     `.take_slot(` / `.put_slot(` call in the same fn (liveness ends at
+     `drop(guard)`, at the guard's block close, or — for guards that are
+     never `let`-bound — at the end of the statement);
+  2. records the lock-acquisition-order table: per fn, the receiver
+     paths acquired in order while earlier guards are live, and fails on
+     a global order inversion (A-then-B in one fn, B-then-A in another),
+     the classic deadlock precondition.
+
+The existing `Generator` borrow-across-run sites are *known debt*,
+ratcheted in the committed baseline: the gate exists so the count only
+shrinks as the async refactor lands, and no NEW site slips in.
+`// lint: allow(lock, "reason")` is the per-site escape hatch.
+"""
+
+from .report import Violation
+from .rustsrc import norm_line
+
+RULE = "lock-discipline"
+
+TARGETS = (
+    "rust/src/serve.rs",
+    "rust/src/coordinator/kvcache.rs",
+    "rust/src/coordinator/generate.rs",
+    "rust/src/coordinator/speculative.rs",
+    "rust/src/coordinator/adapters.rs",
+    "rust/src/coordinator/evaluate.rs",
+    "rust/src/runtime/session.rs",
+)
+
+ACQUIRE = ("borrow", "borrow_mut", "lock", "try_lock", "read", "write")
+# only these receivers make `read`/`write` an acquisition (plain
+# `file.read(...)` IO must not count): a path ending in a lock-ish field
+LOCKY_HINTS = ("lock", "mutex", "rwlock", "cell", "state")
+
+CROSS_CALLS = ("run", "donate_slots", "take_slot", "put_slot")
+
+
+def _recv_path(code, i):
+    """Receiver path of the call at code[i] (an ACQUIRE ident): walk the
+    `a . b . c` chain backwards, returning 'a.b.c'."""
+    parts = []
+    k = i - 1  # the '.' before the method
+    while k >= 1:
+        if code[k].text != ".":
+            break
+        prev = code[k - 1]
+        if prev.kind == "ident":
+            parts.append(prev.text)
+            k -= 2
+        elif prev.text in (")", "]"):
+            parts.append("(..)")
+            break
+        else:
+            break
+    return ".".join(reversed(parts)) or "?"
+
+
+def _is_acquire(code, i):
+    t = code[i]
+    if t.kind != "ident" or t.text not in ACQUIRE:
+        return False
+    if i == 0 or code[i - 1].text != ".":
+        return False
+    if i + 1 >= len(code) or code[i + 1].text != "(":
+        return False
+    if t.text in ("read", "write"):
+        recv = _recv_path(code, i).lower()
+        return any(h in recv for h in LOCKY_HINTS)
+    return True
+
+
+def _is_cross_call(code, i):
+    t = code[i]
+    if t.kind != "ident" or t.text not in CROSS_CALLS:
+        return False
+    if i + 1 >= len(code) or code[i + 1].text != "(":
+        return False
+    # `.run(` / `.donate_slots(` method calls, or bare `donate_slots(`
+    return t.text in ("donate_slots",) or (i > 0 and code[i - 1].text == ".")
+
+
+class _Guard:
+    __slots__ = ("name", "recv", "depth", "line", "let_bound")
+
+    def __init__(self, name, recv, depth, line, let_bound):
+        self.name = name
+        self.recv = recv
+        self.depth = depth
+        self.line = line
+        self.let_bound = let_bound
+
+
+def scan_fn(fn):
+    """Return (violation_sites, order_edges, acquisitions) for one fn body.
+
+    violation_sites: [(line, guard_recv, call_name, guard_line)]
+    order_edges: [(earlier_recv, later_recv, fn_qual, line)] observed
+    while the earlier guard was live (the deadlock-order relation).
+    acquisitions: every acquired receiver path, in order.
+    """
+    code = fn.body
+    sites = []
+    order_edges = []
+    acquisitions = []
+    guards = []  # live _Guard list, in acquisition order
+    depth = 0
+    stmt_guards = []  # guards born in the current statement (not let-bound)
+    pending_let = None  # name of the binding whose init expr we are in
+    i = 0
+    n = len(code)
+    while i < n:
+        t = code[i]
+        if t.text in "({[":
+            depth += 1
+        elif t.text in ")}]":
+            depth -= 1
+            guards = [g for g in guards if g.depth <= depth]
+        elif t.text == ";":
+            # statement end: temporaries die; a pending let binds its name
+            for g in stmt_guards:
+                if pending_let is not None:
+                    g.name = pending_let
+                    g.let_bound = True
+                else:
+                    guards = [x for x in guards if x is not g]
+            stmt_guards = []
+            pending_let = None
+        elif t.kind == "ident" and t.text == "let":
+            # `let [mut] NAME = ...` — remember the name for guards in
+            # the init expression
+            k = i + 1
+            if k < n and code[k].kind == "ident" and code[k].text == "mut":
+                k += 1
+            if k < n and code[k].kind == "ident":
+                pending_let = code[k].text
+        elif t.kind == "ident" and t.text == "drop":
+            if i + 2 < n and code[i + 1].text == "(" and code[i + 2].kind == "ident":
+                victim = code[i + 2].text
+                guards = [g for g in guards if g.name != victim]
+        elif _is_acquire(code, i):
+            recv = _recv_path(code, i)
+            acquisitions.append(recv)
+            for g in guards:
+                order_edges.append((g.recv, recv, fn.qual, t.line))
+            g = _Guard(pending_let or "<tmp>", recv, depth, t.line, False)
+            guards.append(g)
+            stmt_guards.append(g)
+        elif _is_cross_call(code, i):
+            for g in guards:
+                sites.append((t.line, g.recv, t.text, g.line))
+        i += 1
+    return sites, order_edges, acquisitions
+
+
+def run(ctx):
+    out = []
+    all_edges = []
+    table = {}  # fn qual -> [recv in acquisition order]
+    for relpath in ctx.config.get("lock_targets", TARGETS):
+        rf = ctx.rust_file(relpath)
+        if rf is None:
+            continue
+        for fn in rf.fns:
+            if fn.is_test:
+                continue
+            sites, edges, acqs = scan_fn(fn)
+            for a, b, qual, _line in edges:
+                all_edges.append((a, b, qual))
+            if acqs:
+                table[f"{relpath}:{fn.qual}"] = acqs
+            for line, recv, call, gline in sites:
+                if rf.allow(line, RULE):
+                    continue
+                key = f"held@{norm_line(rf.line_text(line))}"
+                out.append(
+                    Violation(
+                        RULE,
+                        relpath,
+                        line,
+                        key,
+                        f"{fn.qual}: `{recv}` guard (acquired line {gline}) "
+                        f"held across `{call}(` — not async-engine safe",
+                    )
+                )
+    # global order-inversion check
+    fwd = {}
+    for a, b, qual in all_edges:
+        fwd.setdefault((a, b), qual)
+    for (a, b), qual in sorted(fwd.items()):
+        if a == b:
+            continue
+        if (b, a) in fwd:
+            other = fwd[(b, a)]
+            if (a, b) < (b, a):  # report each inverted pair once
+                out.append(
+                    Violation(
+                        RULE,
+                        "rust/src",
+                        0,
+                        f"order@{a}<>{b}",
+                        f"lock-order inversion: {qual} acquires "
+                        f"{a} then {b}, {other} acquires {b} then {a}",
+                    )
+                )
+    ctx.artifacts["lock_order_table"] = table
+    return out

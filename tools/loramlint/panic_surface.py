@@ -1,0 +1,79 @@
+"""panic-surface: no panics in the serving hot paths.
+
+Non-test code in the hot-path modules (the files the scheduler, the KV
+cache, and the session layer execute per tick) must not contain
+`.unwrap()`, `.expect(...)`, `panic!`, `unreachable!`, `todo!`,
+`unimplemented!`, or slice-index expressions — any of these takes the
+whole serving batch down when it fires. `Result` propagation (the files
+already return `anyhow::Result` almost everywhere) or a
+`// lint: allow(panic, "reason")` annotation with a real reason are the
+two ways out. `#[cfg(test)]` / `#[test]` code is exempt.
+
+This is the static mirror of the clippy policy (`clippy.toml` +
+`#![cfg_attr(not(test), deny(clippy::unwrap_used, ...))]` in the same
+modules) that the first session with a real toolchain inherits.
+"""
+
+from .report import Violation
+from .rustsrc import find_index_sites, norm_line
+
+RULE = "panic-surface"
+
+# repo-relative hot-path modules (the serving tick's execution surface)
+HOT_PATHS = (
+    "rust/src/serve.rs",
+    "rust/src/coordinator/kvcache.rs",
+    "rust/src/coordinator/generate.rs",
+    "rust/src/coordinator/speculative.rs",
+    "rust/src/coordinator/adapters.rs",
+    "rust/src/runtime/session.rs",
+)
+
+PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented")
+
+
+def _violation(rf, relpath, line, kind, detail, out):
+    if rf.allow(line, RULE):
+        return
+    key = f"{kind}@{norm_line(rf.line_text(line))}"
+    msg = f"{detail} in non-test hot-path code"
+    if rf.bare_allow(line, RULE):
+        msg += " (its lint:allow has no reason — reasons are required)"
+    out.append(Violation(RULE, relpath, line, key, msg))
+
+
+def run(ctx):
+    out = []
+    for relpath in ctx.config.get("hot_paths", HOT_PATHS):
+        rf = ctx.rust_file(relpath)
+        if rf is None:
+            continue
+        code = rf.code
+        for i, t in enumerate(code):
+            if rf.is_test_line(t.line):
+                continue
+            if t.kind != "ident":
+                continue
+            nxt = code[i + 1] if i + 1 < len(code) else None
+            prev = code[i - 1] if i > 0 else None
+            if (
+                t.text in ("unwrap", "expect")
+                and prev is not None
+                and prev.text == "."
+                and nxt is not None
+                and nxt.text == "("
+            ):
+                _violation(rf, relpath, t.line, t.text, f".{t.text}()", out)
+            elif (
+                t.text in PANIC_MACROS
+                and nxt is not None
+                and nxt.text == "!"
+                # `core::panic!` etc. still match on the final ident;
+                # `panic` as a plain ident (e.g. a field) does not
+            ):
+                _violation(rf, relpath, t.line, t.text, f"{t.text}!", out)
+        for line, recv in find_index_sites(code, is_test_line=rf.is_test_line):
+            _violation(
+                rf, relpath, line, "index", f"slice-index `{recv}[..]`", out
+            )
+    return out

@@ -1,0 +1,134 @@
+"""Violations + the ratchet baseline for loramlint.
+
+A violation's identity is (rule, file, key) where `key` is a
+whitespace-collapsed fingerprint of the offending source line — stable
+across unrelated edits (line numbers shift; line *content* only changes
+when the site itself is touched). Identical lines aggregate by count.
+
+The committed baseline (`tools/loramlint/baseline.json`) is a ratchet:
+
+  * current count >  baseline count  ->  NEW violation, CI fails;
+  * current count <  baseline count  ->  STALE baseline entry, CI fails
+    too — the baseline must be regenerated (``--update-baseline``) so it
+    only ever shrinks; a fixed site can never quietly regress later.
+
+Rules with no baseline entries (the contract-mirror pass ships none)
+therefore fail on *any* violation — the ratchet generalizes "zero
+tolerance" without a special case.
+"""
+
+import json
+import os
+from collections import Counter
+
+
+class Violation:
+    __slots__ = ("rule", "file", "line", "key", "msg")
+
+    def __init__(self, rule, file, line, key, msg):
+        self.rule = rule
+        self.file = file  # repo-relative, '/'-separated
+        self.line = line
+        self.key = key
+        self.msg = msg
+
+    def __repr__(self):
+        return f"{self.file}:{self.line}: [{self.rule}] {self.msg}"
+
+    def to_json(self):
+        return {
+            "rule": self.rule,
+            "file": self.file,
+            "line": self.line,
+            "key": self.key,
+            "msg": self.msg,
+        }
+
+
+def aggregate(violations):
+    """(rule, file) -> Counter{key: count} plus (rule, file, key) -> [lines]."""
+    counts = {}
+    lines = {}
+    for v in violations:
+        counts.setdefault((v.rule, v.file), Counter())[v.key] += 1
+        lines.setdefault((v.rule, v.file, v.key), []).append(v.line)
+    return counts, lines
+
+
+def load_baseline(path):
+    if not os.path.exists(path):
+        return {"version": 1, "ratchet": {}}
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "ratchet" not in doc:
+        raise SystemExit(f"{path}: not a loramlint baseline (no 'ratchet' key)")
+    return doc
+
+
+def baseline_counts(doc):
+    """Flatten the baseline doc to {(rule, file): Counter{key: count}}."""
+    out = {}
+    for rule, files in doc.get("ratchet", {}).items():
+        for file, keys in files.items():
+            out[(rule, file)] = Counter(
+                {k: int(c) for k, c in keys.items()}
+            )
+    return out
+
+
+def write_baseline(path, violations):
+    """Regenerate the baseline from the current scan (sorted, stable)."""
+    counts, _ = aggregate(violations)
+    ratchet = {}
+    for (rule, file), keys in sorted(counts.items()):
+        ratchet.setdefault(rule, {})[file] = {
+            k: keys[k] for k in sorted(keys)
+        }
+    doc = {"version": 1, "ratchet": ratchet}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def check_against_baseline(violations, baseline_doc):
+    """Return (new, stale): `new` is a list of Violations over the
+    baselined count; `stale` is a list of human strings naming baseline
+    entries the current scan no longer reaches."""
+    counts, lines = aggregate(violations)
+    base = baseline_counts(baseline_doc)
+    new = []
+    stale = []
+    all_pairs = set(counts) | set(base)
+    for pair in sorted(all_pairs):
+        rule, file = pair
+        cur = counts.get(pair, Counter())
+        b = base.get(pair, Counter())
+        for key in sorted(set(cur) | set(b)):
+            c, want = cur[key], b[key]
+            if c > want:
+                # surface the newest `c - want` sites (all lines listed —
+                # which of N identical lines is "new" is unknowable)
+                where = lines[(rule, file, key)]
+                for ln in where[: c - want]:
+                    new.append(
+                        Violation(
+                            rule,
+                            file,
+                            ln,
+                            key,
+                            f"new violation ({c} > baseline {want}): {key}"
+                            + (
+                                f" [also at lines {where}]"
+                                if len(where) > 1
+                                else ""
+                            ),
+                        )
+                    )
+            elif c < want:
+                stale.append(
+                    f"{file}: [{rule}] baseline lists {want} x '{key}' but "
+                    f"the scan found {c} — the site was fixed; shrink the "
+                    "baseline (run with --update-baseline and commit it)"
+                )
+    return new, stale

@@ -1,0 +1,52 @@
+"""result-hygiene: no `let _ =` discards in coordinator/.
+
+A `let _ = fallible_call()` in the coordinator silently swallows the
+`Err` — the serving stack's cleanup paths (block release, row eviction)
+must either propagate, log, or carry a
+`// lint: allow(result, "reason")` saying why the discard is sound
+(e.g. the value is an `Option` drained on purpose). Scope is
+`coordinator/` (plus any configured extra files): that's where Result
+values gate resource lifecycles.
+
+The lint is type-blind (no compiler here), so it flags the *pattern* —
+`let _ =` with a wildcard binding — rather than proving the RHS is a
+`Result`. Named discards (`let _released = ...`) are visible in review
+and not flagged.
+"""
+
+from .report import Violation
+from .rustsrc import norm_line
+
+RULE = "result-hygiene"
+
+SCOPE_PREFIX = "rust/src/coordinator/"
+
+
+def run(ctx):
+    out = []
+    for relpath, rf in ctx.rust_files.items():
+        if not relpath.startswith(ctx.config.get("result_scope", SCOPE_PREFIX)):
+            continue
+        code = rf.code
+        for i, t in enumerate(code):
+            if t.kind != "ident" or t.text != "let":
+                continue
+            if rf.is_test_line(t.line):
+                continue
+            nxt = code[i + 1] if i + 1 < len(code) else None
+            nxt2 = code[i + 2] if i + 2 < len(code) else None
+            if (
+                nxt is not None
+                and nxt.kind == "ident"
+                and nxt.text == "_"
+                and nxt2 is not None
+                and nxt2.text == "="
+            ):
+                if rf.allow(t.line, RULE):
+                    continue
+                key = f"let-discard@{norm_line(rf.line_text(t.line))}"
+                msg = "`let _ =` discards a fallible value in coordinator/"
+                if rf.bare_allow(t.line, RULE):
+                    msg += " (its lint:allow has no reason)"
+                out.append(Violation(RULE, relpath, t.line, key, msg))
+    return out

@@ -1,0 +1,491 @@
+"""Token-level Rust source model for loramlint.
+
+No Rust toolchain exists in this container (ROADMAP "Standing caveat"),
+so the lint passes cannot lean on rustc or syn. This module is the
+stand-in: a small, exact lexer (comments, raw/byte strings, char vs
+lifetime disambiguation, nested block comments) plus structural scans
+built on the token stream — brace matching, `#[cfg(test)]` / `#[test]`
+item spans, `fn` item extraction with the enclosing `impl`/`mod` path,
+and `// lint: allow(rule, "reason")` annotation parsing.
+
+It is a *model*, not a parser: good enough to answer "is this `.unwrap()`
+in non-test code?", "which impl does this fn belong to?", "is a borrow
+guard still live at this call?" — the questions the passes ask — while
+staying a few hundred lines of stdlib Python.
+"""
+
+import bisect
+import re
+
+KEYWORDS = frozenset(
+    (
+        "as break const continue crate dyn else enum extern false fn for if "
+        "impl in let loop match mod move mut pub ref return self Self static "
+        "struct super trait true type unsafe use where while async await"
+    ).split()
+)
+
+# identifier-ish tokens that precede `[` without forming an index expression
+_NON_INDEX_PREV_IDENTS = KEYWORDS
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind  # ident | num | str | char | lifetime | punct | comment
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return f"Tok({self.kind},{self.text!r},L{self.line})"
+
+
+def lex(src):
+    """Lex Rust source into a token list (comments included, kind='comment').
+
+    Handles: // and nested /* */ comments, "..." strings with escapes,
+    r"..."/r#"..."# raw strings, b"..."/br"..." byte strings, char
+    literals vs lifetimes, numeric literals (enough to not split on `.`
+    inside floats), multi-char punctuation left as single chars (the
+    passes match token sequences, never compound operators).
+    """
+    toks = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # comments
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            toks.append(Tok("comment", src[i:j], line))
+            i = j
+            continue
+        if src.startswith("/*", i):
+            depth, j, start_line = 1, i + 2, line
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    if src[j] == "\n":
+                        line += 1
+                    j += 1
+            toks.append(Tok("comment", src[i:j], start_line))
+            i = j
+            continue
+        # raw / byte strings: r"..", r#".."#, b"..", br#".."#
+        m = re.match(r'(?:b?r)(#*)"', src[i : i + 8])
+        if m and src[i] in "br":
+            hashes = m.group(1)
+            close = '"' + hashes
+            j = src.find(close, i + len(m.group(0)))
+            j = n if j < 0 else j + len(close)
+            text = src[i:j]
+            toks.append(Tok("str", text, line))
+            line += text.count("\n")
+            i = j
+            continue
+        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
+            j = i + (2 if c == "b" else 1)
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == '"':
+                    j += 1
+                    break
+                j += 1
+            text = src[i:j]
+            toks.append(Tok("str", text, line))
+            line += text.count("\n")
+            i = j
+            continue
+        # char literal vs lifetime
+        if c == "'":
+            m = re.match(r"'(\\.|[^'\\])'", src[i : i + 8])
+            if m:
+                toks.append(Tok("char", m.group(0), line))
+                i += len(m.group(0))
+                continue
+            m = re.match(r"'[A-Za-z_][A-Za-z0-9_]*", src[i:])
+            if m:
+                toks.append(Tok("lifetime", m.group(0), line))
+                i += len(m.group(0))
+                continue
+            toks.append(Tok("punct", c, line))
+            i += 1
+            continue
+        # identifiers / keywords
+        if c.isalpha() or c == "_":
+            m = re.match(r"[A-Za-z_][A-Za-z0-9_]*", src[i:])
+            toks.append(Tok("ident", m.group(0), line))
+            i += len(m.group(0))
+            continue
+        # numbers (floats keep their dot so `1.0` is not an index recv)
+        if c.isdigit():
+            m = re.match(r"\d[\d_]*(?:\.\d[\d_]*)?(?:[eE][+-]?\d+)?\w*", src[i:])
+            toks.append(Tok("num", m.group(0), line))
+            i += len(m.group(0))
+            continue
+        toks.append(Tok("punct", c, line))
+        i += 1
+    return toks
+
+
+_ALLOW_RE = re.compile(
+    r"lint:\s*allow\(\s*([a-z_-]+)\s*(?:,\s*\"([^\"]*)\")?\s*\)"
+)
+
+# short rule aliases accepted in annotations -> pass names
+RULE_ALIASES = {
+    "panic": "panic-surface",
+    "panic-surface": "panic-surface",
+    "result": "result-hygiene",
+    "result-hygiene": "result-hygiene",
+    "lock": "lock-discipline",
+    "lock-discipline": "lock-discipline",
+    "trace": "trace-coverage",
+    "trace-coverage": "trace-coverage",
+    "contract": "contract-mirror",
+    "contract-mirror": "contract-mirror",
+}
+
+
+class Fn:
+    __slots__ = ("name", "qual", "start_line", "end_line", "body", "is_test")
+
+    def __init__(self, name, qual, start_line, end_line, body, is_test):
+        self.name = name
+        self.qual = qual  # "Impl::name" or "name"
+        self.start_line = start_line
+        self.end_line = end_line
+        self.body = body  # list of code Toks (between the body braces)
+        self.is_test = is_test
+
+    def __repr__(self):
+        return f"Fn({self.qual} L{self.start_line}-{self.end_line})"
+
+
+class RustFile:
+    """One parsed Rust source file: tokens, test spans, fns, annotations."""
+
+    def __init__(self, path, src):
+        self.path = path
+        self.src = src
+        self.lines = src.splitlines()
+        toks = lex(src)
+        self.comments = [t for t in toks if t.kind == "comment"]
+        self.code = [t for t in toks if t.kind != "comment"]
+        self._test_spans = _test_spans(self.code)
+        self._comment_only_lines = _comment_only_lines(self.comments, self.code)
+        self._allows = self._parse_allows()
+        self.fns = _extract_fns(self.code, self.is_test_line)
+
+    @classmethod
+    def from_path(cls, path):
+        with open(path, encoding="utf-8") as f:
+            return cls(path, f.read())
+
+    # -- test regions -----------------------------------------------------
+    def is_test_line(self, line):
+        i = bisect.bisect_right(self._test_spans, (line, float("inf"))) - 1
+        if i < 0:
+            return False
+        lo, hi = self._test_spans[i]
+        return lo <= line <= hi
+
+    # -- annotations ------------------------------------------------------
+    def _parse_allows(self):
+        """line -> [(rule, reason)]. A trailing comment covers its own
+        line; a standalone annotation comment covers the next line."""
+        allows = {}
+        for t in self.comments:
+            for rule, reason in _ALLOW_RE.findall(t.text):
+                target = t.line
+                if t.line in self._comment_only_lines:
+                    target = t.line + 1
+                allows.setdefault(target, []).append(
+                    (RULE_ALIASES.get(rule, rule), reason or "")
+                )
+        return allows
+
+    def allow(self, line, rule):
+        """Return the (rule, reason) annotation covering `line`, or None.
+        An allow with an empty reason does NOT count (reasons are part of
+        the contract) — callers surface that as its own violation via
+        `bare_allow`."""
+        for r, reason in self._allows.get(line, []):
+            if r == rule and reason.strip():
+                return (r, reason)
+        return None
+
+    def bare_allow(self, line, rule):
+        """True when `line` carries an allow for `rule` with no reason."""
+        return any(
+            r == rule and not reason.strip()
+            for r, reason in self._allows.get(line, [])
+        )
+
+    def line_text(self, line):
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+def norm_line(text):
+    """Whitespace-collapsed fingerprint of a source line (baseline key)."""
+    return re.sub(r"\s+", " ", text.strip())[:160]
+
+
+def _comment_only_lines(comments, code):
+    code_lines = {t.line for t in code}
+    return {t.line for t in comments if t.line not in code_lines}
+
+
+def _attr_span(code, i):
+    """code[i] is '#': return (attr_text, next_index) past the `#[...]`
+    (or `#![...]`) group, else None."""
+    j = i + 1
+    if j < len(code) and code[j].kind == "punct" and code[j].text == "!":
+        j += 1
+    if j >= len(code) or code[j].text != "[":
+        return None
+    depth, k, parts = 0, j, []
+    while k < len(code):
+        t = code[k]
+        if t.text == "[":
+            depth += 1
+        elif t.text == "]":
+            depth -= 1
+            if depth == 0:
+                return ("".join(parts[1:]), k + 1)
+        parts.append(t.text)
+        k += 1
+    return ("".join(parts[1:]), len(code))
+
+
+def _is_test_attr(attr):
+    return (
+        "cfg(test" in attr
+        or "cfg(any(test" in attr
+        or attr == "test"
+        or attr.endswith("::test")
+    )
+
+
+def _item_end(code, i):
+    """From index i (start of an item after its attributes), return the
+    index just past the item: past the matching `}` of its first
+    top-level `{`, or past the first `;` before any `{`."""
+    depth = 0
+    k = i
+    while k < len(code):
+        t = code[k]
+        if t.text == ";" and depth == 0:
+            return k + 1
+        if t.text in "({[":
+            depth += 1
+        elif t.text in ")}]":
+            depth -= 1
+            if depth == 0 and t.text == "}":
+                return k + 1
+        k += 1
+    return len(code)
+
+
+def _test_spans(code):
+    """Merged, sorted (start_line, end_line) spans of #[cfg(test)]/#[test]
+    items."""
+    spans = []
+    i = 0
+    while i < len(code):
+        t = code[i]
+        if t.kind == "punct" and t.text == "#":
+            got = _attr_span(code, i)
+            if got:
+                attr, nxt = got
+                if _is_test_attr(attr):
+                    # skip any further stacked attributes
+                    k = nxt
+                    while k < len(code) and code[k].text == "#":
+                        more = _attr_span(code, k)
+                        if not more:
+                            break
+                        k = more[1]
+                    end = _item_end(code, k)
+                    if k < len(code):
+                        last = code[min(end, len(code)) - 1]
+                        spans.append((t.line, last.line))
+                i = nxt
+                continue
+        i += 1
+    spans.sort()
+    merged = []
+    for lo, hi in spans:
+        if merged and lo <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(hi, merged[-1][1]))
+        else:
+            merged.append((lo, hi))
+    return merged
+
+
+def _impl_name(code, i):
+    """code[i] is the 'impl' ident: return the Self-type name the block
+    implements ('Server' for `impl<E: X> Trait for Server<E> where ...`)."""
+    parts = []
+    depth = 0
+    k = i + 1
+    while k < len(code):
+        t = code[k]
+        if t.text == "<":
+            depth += 1
+        elif t.text == ">":
+            depth = max(0, depth - 1)
+        elif depth == 0:
+            if t.text == "{" or (t.kind == "ident" and t.text == "where"):
+                break
+            parts.append(t)
+        k += 1
+    # `impl Trait for Type` -> the Type side
+    for j, t in enumerate(parts):
+        if t.kind == "ident" and t.text == "for":
+            parts = parts[j + 1 :]
+            break
+    for t in parts:
+        if t.kind == "ident" and t.text not in ("dyn", "mut", "const"):
+            return t.text
+    return "?"
+
+
+def _extract_fns(code, is_test_line):
+    """All `fn` items with qualified names and body token slices.
+
+    Walks the token stream with a context stack of `impl`/`mod` blocks
+    (matched by brace depth) so each fn knows its enclosing type.
+    Trait-method *declarations* (`fn f(...);`) have no body and are
+    skipped."""
+    fns = []
+    stack = []  # (kind, name, close_depth)
+    depth = 0
+    i = 0
+    n = len(code)
+    while i < n:
+        t = code[i]
+        if t.text in "({[":
+            depth += 1
+            i += 1
+            continue
+        if t.text in ")}]":
+            depth -= 1
+            while stack and depth < stack[-1][2]:
+                stack.pop()
+            i += 1
+            continue
+        if t.kind == "ident" and t.text in ("impl", "mod", "trait"):
+            name = _impl_name(code, i) if t.text == "impl" else (
+                code[i + 1].text if i + 1 < n and code[i + 1].kind == "ident" else "?"
+            )
+            # find the block open (mod decls `mod x;` have none)
+            k = i + 1
+            d = 0
+            while k < n:
+                tk = code[k]
+                if tk.text == ";" and d == 0:
+                    k = None
+                    break
+                if tk.text == "<":
+                    d += 1
+                elif tk.text == ">":
+                    d = max(0, d - 1)
+                elif tk.text == "{" and d == 0:
+                    break
+                k += 1
+            if k is not None and k < n:
+                stack.append((t.text, name, depth + 1))
+                depth += 1
+                i = k + 1
+                continue
+            i += 1
+            continue
+        if t.kind == "ident" and t.text == "fn":
+            if i + 1 < n and code[i + 1].kind == "ident":
+                name = code[i + 1].text
+                # scan to the body `{` (skip generics/args/ret/where) or a
+                # `;` (trait declaration, no body)
+                k = i + 2
+                d = 0
+                body_open = None
+                while k < n:
+                    tk = code[k]
+                    if tk.text == ";" and d == 0:
+                        break
+                    if tk.text in "(<[":
+                        d += 1
+                    elif tk.text in ")>]":
+                        d = max(0, d - 1)
+                    elif tk.text == "{" and d == 0:
+                        body_open = k
+                        break
+                    k += 1
+                if body_open is not None:
+                    # matching close of the body
+                    d2 = 0
+                    j = body_open
+                    while j < n:
+                        if code[j].text in "({[":
+                            d2 += 1
+                        elif code[j].text in ")}]":
+                            d2 -= 1
+                            if d2 == 0:
+                                break
+                        j += 1
+                    qual = name
+                    for kind, sname, _ in reversed(stack):
+                        if kind in ("impl", "trait"):
+                            qual = f"{sname}::{name}"
+                            break
+                    fns.append(
+                        Fn(
+                            name,
+                            qual,
+                            t.line,
+                            code[min(j, n - 1)].line,
+                            code[body_open + 1 : j],
+                            is_test_line(t.line),
+                        )
+                    )
+                    # continue scanning *inside* the body too (nested fns,
+                    # and the context stack needs the braces): do not skip
+            i += 1
+            continue
+        i += 1
+    return fns
+
+
+def find_index_sites(code, *, is_test_line, skip_lines=()):
+    """Yield (line, prev_text) for every index expression `recv[...]` in
+    non-test code: a `[` whose previous token is an identifier (not a
+    keyword), `)`, `]`, or `?` — array literals/types (`[0; 4]`,
+    `: [f32; 4]`, `&[..]`, `vec![`) never match because their `[` follows
+    punctuation or a macro `!`."""
+    for i, t in enumerate(code):
+        if t.text != "[" or t.kind != "punct" or i == 0:
+            continue
+        p = code[i - 1]
+        if is_test_line(t.line) or t.line in skip_lines:
+            continue
+        if p.kind == "ident" and p.text not in _NON_INDEX_PREV_IDENTS:
+            yield (t.line, p.text)
+        elif p.kind == "punct" and p.text in (")", "]", "?"):
+            yield (t.line, p.text)

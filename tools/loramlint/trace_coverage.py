@@ -1,0 +1,183 @@
+"""trace-coverage: state transitions must emit their trace events.
+
+PR 7's observability contract is only as good as the emission sites: a
+refactor that moves row admission out of `Server::admit` without moving
+the `emit(|| Event::Admit ...)` leaves `trace_report.py` auditing a
+stream that silently stopped carrying admissions. This pass pins the
+coverage statically:
+
+  1. REQUIRED table — every state-transition fn (admit / evict / rewind
+     / finish / requeue / block lifecycle / verify round / session run)
+     must exist (a rename fails the lint, forcing the table — and the
+     reader's mental model — to move with the code) and its body must
+     construct each listed `Event::<Kind>`.
+  2. Kind liveness — every kind in `trace.rs::KINDS` must be constructed
+     somewhere in non-test rust/src code, and every constructed kind
+     must be in `KINDS` (the compiler would catch the latter; we have no
+     compiler in this container).
+
+`// lint: allow(trace, "reason")` on the `fn` line is the escape hatch
+for a transition that is genuinely ledger-only (its emitting caller is
+then named in the reason).
+"""
+
+import re
+
+from .report import Violation
+
+RULE = "trace-coverage"
+
+# (file, impl-type, fn, (required Event kinds...))
+REQUIRED = (
+    ("rust/src/serve.rs", "Server", "enqueue_adapter", ("Enqueue",)),
+    ("rust/src/serve.rs", "Server", "admit", ("Admit", "Requeue", "Reject")),
+    ("rust/src/serve.rs", "Server", "step", ("DecodeStep", "Finish", "Reject")),
+    ("rust/src/serve.rs", "Server", "sample_gauges", ("Gauge",)),
+    ("rust/src/serve.rs", "SimEngine", "prefill_tick", ("PrefillWindow",)),
+    ("rust/src/serve.rs", "SimEngine", "decode_step", ("VerifyRound",)),
+    ("rust/src/serve.rs", "SimEngine", "take", ("Evict",)),
+    ("rust/src/coordinator/kvcache.rs", "BlockPool", "alloc", ("BlockAlloc",)),
+    ("rust/src/coordinator/kvcache.rs", "BlockPool", "release", ("BlockFree",)),
+    ("rust/src/coordinator/kvcache.rs", "BlockPool", "evict", ("BlockFree",)),
+    ("rust/src/coordinator/kvcache.rs", "BlockPool", "cow", ("CowCopy",)),
+    ("rust/src/coordinator/kvcache.rs", "PagedKv", "plan_admit", ("PrefixHit",)),
+    ("rust/src/coordinator/kvcache.rs", "KvDecoder", "prefill_chunk", ("PrefillWindow",)),
+    ("rust/src/coordinator/kvcache.rs", "KvDecoder", "rewind", ("Rewind",)),
+    ("rust/src/coordinator/kvcache.rs", "KvDecoder", "evict", ("Evict",)),
+    ("rust/src/coordinator/speculative.rs", "SpecDecoder", "round", ("VerifyRound",)),
+    ("rust/src/runtime/session.rs", "Session", "run", ("SessionRun",)),
+)
+
+_KINDS_RE = re.compile(r"pub const KINDS[^=]*=\s*&\[(.*?)\];", re.S)
+
+
+def _body_event_kinds(fn):
+    """Event kinds constructed in a fn body: idents following `Event ::`."""
+    kinds = set()
+    code = fn.body
+    for i, t in enumerate(code):
+        if t.kind == "ident" and t.text == "Event":
+            if (
+                i + 3 < len(code)
+                and code[i + 1].text == ":"
+                and code[i + 2].text == ":"
+                and code[i + 3].kind == "ident"
+            ):
+                kinds.add(code[i + 3].text)
+    return kinds
+
+
+def _has_emit(fn):
+    code = fn.body
+    for i, t in enumerate(code):
+        if (
+            t.kind == "ident"
+            and t.text == "emit"
+            and i + 1 < len(code)
+            and code[i + 1].text == "("
+        ):
+            return True
+    return False
+
+
+def run(ctx):
+    out = []
+    required = ctx.config.get("trace_required", REQUIRED)
+    for relpath, impl, fname, kinds in required:
+        rf = ctx.rust_file(relpath)
+        if rf is None:
+            out.append(
+                Violation(
+                    RULE, relpath, 0, f"missing-file@{relpath}",
+                    f"trace-coverage target file missing: {relpath}",
+                )
+            )
+            continue
+        qual = f"{impl}::{fname}"
+        matches = [f for f in rf.fns if f.qual == qual and not f.is_test]
+        if not matches:
+            out.append(
+                Violation(
+                    RULE, relpath, 0, f"missing-fn@{qual}",
+                    f"state-transition fn `{qual}` not found — renamed or "
+                    "moved? update trace_coverage.REQUIRED with the new "
+                    "emission site",
+                )
+            )
+            continue
+        for fn in matches:
+            if rf.allow(fn.start_line, RULE):
+                continue
+            got = _body_event_kinds(fn)
+            if not _has_emit(fn):
+                out.append(
+                    Violation(
+                        RULE, relpath, fn.start_line, f"no-emit@{qual}",
+                        f"`{qual}` mutates request/row state but contains "
+                        f"no emit( call (expected {', '.join(kinds)})",
+                    )
+                )
+                continue
+            for kind in kinds:
+                if kind not in got:
+                    out.append(
+                        Violation(
+                            RULE, relpath, fn.start_line,
+                            f"missing-kind@{qual}:{kind}",
+                            f"`{qual}` no longer constructs "
+                            f"Event::{kind} — its lifecycle transition "
+                            "would vanish from the trace",
+                        )
+                    )
+
+    # -- kind liveness across the tree ------------------------------------
+    trace_rs = ctx.config.get("trace_rs", "rust/src/obs/trace.rs")
+    rf = ctx.rust_file(trace_rs)
+    if rf is None:
+        out.append(
+            Violation(RULE, trace_rs, 0, "missing-file@trace.rs",
+                      f"{trace_rs} not found — KINDS liveness unchecked")
+        )
+        return out
+    m = _KINDS_RE.search(rf.src)
+    if not m:
+        out.append(
+            Violation(RULE, trace_rs, 0, "missing-kinds-const",
+                      "`pub const KINDS` not found in trace.rs")
+        )
+        return out
+    declared = set(re.findall(r'"(\w+)"', m.group(1)))
+    constructed = {}  # kind -> first (file, line)
+    for relpath, f in ctx.rust_files.items():
+        if relpath == trace_rs or "/obs/" in relpath:
+            continue  # the obs subsystem itself (export/audit) matches all
+        code = f.code
+        for i, t in enumerate(code):
+            if (
+                t.kind == "ident"
+                and t.text == "Event"
+                and i + 3 < len(code)
+                and code[i + 1].text == ":"
+                and code[i + 2].text == ":"
+                and code[i + 3].kind == "ident"
+                and not f.is_test_line(t.line)
+            ):
+                constructed.setdefault(code[i + 3].text, (relpath, t.line))
+    for kind in sorted(declared - set(constructed)):
+        out.append(
+            Violation(
+                RULE, trace_rs, 0, f"dead-kind@{kind}",
+                f"Event::{kind} is declared in KINDS but never emitted "
+                "outside obs/ — dead vocabulary (or its emission site "
+                "was dropped in a refactor)",
+            )
+        )
+    for kind in sorted(set(constructed) - declared):
+        file, line = constructed[kind]
+        out.append(
+            Violation(
+                RULE, file, line, f"unknown-kind@{kind}",
+                f"Event::{kind} is constructed but not in trace.rs KINDS",
+            )
+        )
+    return out

@@ -36,6 +36,11 @@ import json
 import math
 import sys
 
+# The trace schema this auditor understands — must equal
+# rust/src/obs/export.rs::TRACE_SCHEMA_VERSION (loramlint contract-mirror
+# pass, `trace-schema-version` pair).
+TRACE_SCHEMA_VERSION = 1
+
 # kind -> required payload fields, in Rust enum order (one per line).
 KINDS = {
     "Enqueue": ("req",),
