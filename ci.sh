@@ -131,11 +131,31 @@ if [ "$HAVE_PY" = 1 ] && [ "$HAVE_CARGO" = 1 ]; then
 else
     skip trace-audit "no toolchain"
 fi
+# ---- §2i SLO-scheduler lane: the Python tick model (the exact mirror of
+# Server<SimEngine>) must (a) beat FIFO on goodput-under-SLO for the
+# headline bursty-heavytail workload — the same A/B the Rust bench
+# publishes into BENCH_serve.json — and (b) emit, for every scenario in
+# the catalog, a stream that passes the full trace_report conservation
+# audit bit-for-bit. Pure stdlib: this lane proves the scheduler laws
+# even on a box with no cargo and no jax.
+if [ "$HAVE_PY" = 1 ]; then
+    lane slo-sim
+    run python3 tools/slo_sim.py --ab bursty-heavytail -n 48 --seed 9
+    SLO_OUT=$(mktemp -d /tmp/loram_slo_XXXXXX)
+    for s in $(python3 tools/workload_gen.py --list); do
+        run python3 tools/slo_sim.py "$s" -n 32 --seed 3 --slo --out "$SLO_OUT/$s.json"
+        run python3 tools/trace_report.py --check "$SLO_OUT/$s.json"
+    done
+    rm -rf "$SLO_OUT"
+    pass "A/B goodput gate + per-scenario conservation audit"
+else
+    skip slo-sim "no python3"
+fi
 # the auditor's own unit tests are stdlib-only — run them even when the
 # jax-gated pytest lane below is skipped
 if [ "$HAVE_PYTEST" = 1 ]; then
     lane pytest-stdlib
-    (cd python && run python3 -m pytest -q tests/test_trace_report.py tests/test_loramlint.py)
+    (cd python && run python3 -m pytest -q tests/test_trace_report.py tests/test_loramlint.py tests/test_slo_sched.py)
     pass
 else
     skip pytest-stdlib "no pytest"

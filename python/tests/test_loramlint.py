@@ -358,6 +358,40 @@ def test_metrics_keys_contract_flags_unproduced_consumer_key():
     assert len(out) == 1 and "serve.gone" in out[0].msg
 
 
+def test_workload_scenarios_contract_drift_and_clean():
+    wl = 'pub const SCENARIOS: &[&str] = &["steady", "bursty-heavytail"];\n'
+    gen = 'SCENARIOS = [\n    "steady",\n    "bursty-heavytail",\n]\n'
+
+    def mkctx(w, g):
+        return ctx_for({}, {"contracts": [
+            c for c in contract_mirror.CONTRACTS
+            if c.name == "workload-scenarios"]},
+            texts={"rust/src/workload.rs": w, "tools/workload_gen.py": g})
+
+    assert contract_mirror.run(mkctx(wl, gen)) == []
+    drift = gen.replace('"bursty-heavytail"', '"bursty"')
+    out = contract_mirror.run(mkctx(wl, drift))
+    assert len(out) == 1 and "catalog drifted" in out[0].msg
+    # a reorder is drift too: the order is part of the contract
+    swap = 'SCENARIOS = [\n    "bursty-heavytail",\n    "steady",\n]\n'
+    out = contract_mirror.run(mkctx(wl, swap))
+    assert len(out) == 1 and "catalog drifted" in out[0].msg
+
+
+def test_trace_coverage_required_table_covers_slo_lifecycle():
+    # the §2i events must stay pinned to their emission sites: dropping
+    # one from REQUIRED would let a refactor silently un-trace it
+    required = {
+        (impl, fn): kinds for _, impl, fn, kinds in trace_coverage.REQUIRED
+    }
+    assert "Preempt" in required[("Server", "preempt")]
+    assert "Cancel" in required[("Server", "cancel_expired")]
+    assert "DeadlineMiss" in required[("Server", "step")]
+    assert "Preempt" in required[("Server", "step")], \
+        "the forced-admission pool-pressure requeue emits Preempt from step"
+    assert "Enqueue" in required[("Server", "enqueue_slo")]
+
+
 # ------------------------------------------------------ ratchet baseline
 
 

@@ -1,0 +1,305 @@
+"""SLO scheduler tick-model tests (stdlib only — no jax, no cargo).
+
+Three layers, mirroring DESIGN.md Sec 2i:
+
+1. `tools/workload_gen.py` golden pins — the PCG64-DXSM mirror and the
+   first requests of every scenario, the exact values
+   `rust/src/util/rng.rs` / `rust/src/workload.rs` assert in their unit
+   tests, so the adversarial streams are bit-identical cross-language.
+2. `tools/slo_sim.py` scenario pre-validation — the same scheduler
+   scenarios the `serve.rs` SimEngine tests assert (preempt-and-requeue
+   conservation, deadline-storm cancellation, priority admission order,
+   late-finish misses, fairness cap, SLO-beats-FIFO A/B), checked
+   against the Python tick model with the same expected numbers.
+3. Conservation — every model stream must pass the full
+   `tools/trace_report.py` law suite, --check included, bit-for-bit.
+"""
+
+import importlib.util
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "tools"))
+
+
+def _load(name, rel):
+    spec = importlib.util.spec_from_file_location(name, REPO / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+wg = _load("workload_gen", "tools/workload_gen.py")
+sim = _load("slo_sim", "tools/slo_sim.py")
+tr = _load("trace_report", "tools/trace_report.py")
+
+
+def req(max_new, priority="normal", deadline=None, adapter=None):
+    return {
+        "arrival_tick": 0,
+        "prompt_len": 1,
+        "max_new": max_new,
+        "priority": priority,
+        "deadline_ticks": deadline,
+        "adapter_ix": adapter,
+    }
+
+
+def audit_ok(srv):
+    """Full conservation suite over the model's stream: law replay plus
+    the bit-for-bit --check against the embedded serverStats."""
+    report = tr.audit(srv.events)
+    assert report["violations"] == [], report["violations"]
+    doc = srv.trace_doc()
+    errs = tr.check(report, doc["serverStats"], doc["otherData"])
+    assert errs == [], errs
+    return report
+
+
+# ------------------------------------------------- workload golden pins
+
+
+def test_rng_matches_the_rust_golden_values():
+    # pinned on the Rust side by rng.rs::matches_the_python_mirror_golden_values
+    r = wg.Rng(7)
+    assert [r.next_u64() for _ in range(4)] == [
+        11819415725983595385,
+        5343028139622295922,
+        12185485406386585458,
+        10788631124621038257,
+    ]
+    r = wg.Rng(0)
+    assert [r.next_u64() for _ in range(2)] == [
+        546717224284700557,
+        9027004767291937668,
+    ]
+    r = wg.Rng(9)
+    assert [r.below(8) for _ in range(6)] == [1, 0, 6, 7, 1, 1]
+
+
+def test_scenario_streams_match_the_rust_goldens():
+    # pinned on the Rust side by
+    # workload.rs::generated_streams_match_the_python_mirror_goldens
+    def gold(s):
+        return [
+            (r["arrival_tick"], r["prompt_len"], r["max_new"], r["priority"],
+             r["deadline_ticks"], r["adapter_ix"])
+            for r in wg.generate(s, 4, 9)
+        ]
+
+    assert gold("steady") == [
+        (0, 9, 4, "normal", None, None),
+        (1, 14, 7, "normal", None, None),
+        (2, 9, 4, "normal", None, None),
+        (3, 10, 4, "normal", None, None),
+    ]
+    assert gold("bursty-heavytail") == [
+        (1, 14, 8, "high", 12, None),
+        (1, 20, 6, "normal", None, None),
+        (1, 8, 14, "low", None, None),
+        (6, 11, 4, "normal", None, None),
+    ]
+    assert gold("adapter-skew") == [
+        (1, 14, 7, "normal", None, 0),
+        (2, 10, 2, "normal", None, 0),
+        (2, 10, 3, "normal", None, 0),
+        (2, 14, 6, "normal", None, 0),
+    ]
+    assert gold("deadline-storm") == [
+        (0, 9, 2, "normal", 5, None),
+        (0, 15, 2, "normal", 2, None),
+        (0, 10, 2, "normal", 4, None),
+        (0, 13, 3, "normal", 2, None),
+    ]
+    assert gold("rejection-storm") == [
+        (0, 150, 4, "normal", None, None),
+        (0, 158, 1, "normal", None, None),
+        (0, 103, 2, "normal", None, None),
+        (0, 76, 3, "normal", None, None),
+    ]
+
+
+def test_scenarios_are_deterministic_and_well_formed():
+    # mirror of workload.rs::scenarios_are_deterministic_and_well_formed
+    for s in wg.SCENARIOS:
+        a = wg.generate(s, 64, 9)
+        assert a == wg.generate(s, 64, 9), s
+        assert a != wg.generate(s, 64, 10), s
+        last = 0
+        for r in a:
+            assert r["arrival_tick"] >= last, f"{s} arrivals must be monotonic"
+            last = r["arrival_tick"]
+            assert r["prompt_len"] >= 1 and r["max_new"] >= 1
+
+
+def test_unknown_scenario_raises_with_the_catalog():
+    try:
+        wg.generate("nope", 1, 0)
+    except ValueError as e:
+        assert "steady" in str(e)
+    else:
+        raise AssertionError("unknown scenario must raise")
+
+
+# --------------------------------------- tick-model scenario pre-checks
+
+
+def test_preempt_and_requeue_conserves_every_token():
+    # mirror of serve.rs::preempted_request_streams_byte_identical…: a
+    # Low victim loses 2 tokens to a High arrival, re-runs from scratch,
+    # and the audit conserves the discarded life
+    srv = sim.SimServer(1, slo=True)
+    low = srv.enqueue(req(6, "low"))
+    assert srv.step() == [] and srv.step() == []  # 2 tokens sampled
+    vip = srv.enqueue(req(2, "high"))
+    done = srv.drain()
+    assert [d["id"] for d in done] == [vip, low], "vip overtakes the victim"
+    assert srv.preempted == 1
+    assert srv.total_tokens == 2 + 2 + 6  # discarded + vip + re-run
+    a = audit_ok(srv)
+    assert a["preempted_tokens"] == 2
+    assert len(a["ttft_ticks"]) == 2, "TTFT recorded once per request"
+
+
+def test_deadline_storm_cancels_only_expired_without_row_leaks():
+    # mirror of serve.rs::deadline_storm_cancels_only_expired…
+    srv = sim.SimServer(2, slo=True)
+    for _ in range(2):
+        srv.enqueue(req(10))                      # rows occupied
+    doomed = [srv.enqueue(req(2, deadline=1)) for _ in range(4)]
+    patient = [srv.enqueue(req(2, deadline=100)) for _ in range(2)]
+    done = srv.drain()
+    assert srv.cancelled == 4 and srv.served == 4
+    assert srv.deadline_misses == 0 and srv.rejected == 0
+    served_ids = {d["id"] for d in done}
+    assert served_ids.isdisjoint(doomed) and set(patient) <= served_ids
+    assert srv.free_rows() == 2, "rows leaked"
+    assert srv.goodput() == 4 / 8
+    a = audit_ok(srv)
+    assert a["cancelled"] == 4
+
+
+def test_priority_classes_admit_in_order_and_equals_never_preempt():
+    # mirror of serve.rs::priority_classes_admit_in_order…: strict-
+    # inequality preemption means Normal never evicts Normal
+    srv = sim.SimServer(1, slo=True)
+    a = srv.enqueue(req(2, "low"))
+    b = srv.enqueue(req(2, "normal"))
+    c = srv.enqueue(req(2, "high"))
+    d = srv.enqueue(req(2, "normal"))
+    done = srv.drain()
+    # the first admission already sees the whole queue, so the High entry
+    # goes first, FIFO within the Normal class, Low last — and since no
+    # higher class ever *waits* behind a live row, nothing is preempted
+    assert [x["id"] for x in done] == [c, b, d, a]
+    assert srv.preempted == 0
+    audit_ok(srv)
+
+
+def test_late_finish_records_a_deadline_miss_and_goodput_reflects_it():
+    # mirror of serve.rs::late_finish_records_deadline_miss…
+    srv = sim.SimServer(1, slo=True)
+    srv.enqueue(req(2, deadline=50))
+    srv.drain()
+    slow = srv.enqueue(req(5, deadline=2))  # needs 5 ticks, has 2
+    srv.drain()
+    assert srv.served == 2 and srv.cancelled == 0
+    assert srv.deadline_misses == 1
+    assert srv.goodput() == 1 / 2
+    a = audit_ok(srv)
+    assert a["deadline_misses"] == 1
+    # the miss belongs to the slow request
+    assert [e["req"] for e in srv.events if e["kind"] == "DeadlineMiss"] == [slow]
+
+
+def test_adapter_fairness_cap_bounds_the_hot_lane():
+    # mirror of serve.rs::adapter_fairness_cap_holds_under_ten_to_one_skew
+    reqs = wg.generate("adapter-skew", 40, 11)
+
+    def worst_cold_ttft(fair_rows):
+        srv = sim.SimServer(4, slo=True, fair_rows=fair_rows)
+        sim.run_workload(srv, reqs)
+        audit_ok(srv)
+        # replay peak concurrent hot-lane rows from the event stream
+        hot_ids = {
+            i for i, r in enumerate(reqs) if r["adapter_ix"] == 0
+        }
+        occ, peak = {}, 0
+        for e in srv.events:
+            if e["kind"] == "Admit":
+                occ[e["row"]] = e["req"]
+            elif e["kind"] in ("Finish", "Preempt"):
+                occ.pop(e["row"], None)
+            peak = max(peak, sum(1 for r in occ.values() if r in hot_ids))
+        cold = [
+            t for rid, (_, t) in srv.req_ttft.items()
+            if reqs[rid]["adapter_ix"] == 1
+        ]
+        return peak, max(cold)
+
+    capped_peak, capped_cold = worst_cold_ttft(2)
+    free_peak, free_cold = worst_cold_ttft(None)
+    assert capped_peak <= 2, "hot lane exceeded the row cap"
+    assert free_peak == 4, "uncapped run must fill the batch with hot rows"
+    assert capped_cold < free_cold, (
+        f"cap should shield the cold lane: {capped_cold} vs {free_cold}"
+    )
+
+
+def test_slo_beats_fifo_on_goodput_and_high_priority_ttft():
+    # the BENCH_serve A/B headline, pre-validated in the tick model
+    fifo, slo = sim.run_ab("bursty-heavytail", 48, 9, 4)
+    audit_ok(fifo)
+    audit_ok(slo)
+    assert fifo.preempted == 0, "FIFO must never preempt"
+    assert slo.preempted > 0, "the scenario must actually exercise preemption"
+    assert slo.goodput() > fifo.goodput()
+    assert sim.hi_ttft_p95(slo) < sim.hi_ttft_p95(fifo)
+
+
+def test_workload_run_collapses_idle_gaps():
+    # arrivals into an idle server enqueue immediately: the clock only
+    # advances while work exists (mirror of workload.rs::run's guard —
+    # without it the arrival wait would spin forever)
+    srv = sim.SimServer(2, slo=True)
+    reqs = [dict(req(1), arrival_tick=100), dict(req(1), arrival_tick=200)]
+    done = sim.run_workload(srv, reqs)
+    assert len(done) == 2
+    assert srv.ticks < 100, "idle ticks must not be burned"
+    audit_ok(srv)
+
+
+def test_every_scenario_stream_passes_conservation_under_both_policies():
+    # mirror of workload.rs::workload_through_slo_server_passes…,
+    # widened to the whole catalog × {fifo, slo}
+    for scenario in wg.SCENARIOS:
+        reqs = wg.generate(scenario, 24, 3)
+        for slo in (False, True):
+            srv = sim.SimServer(4, slo=slo)
+            done = sim.run_workload(srv, reqs)
+            a = audit_ok(srv)
+            assert a["enqueued"] == 24, scenario
+            assert a["finished"] == srv.served, scenario
+            assert a["tokens"] == srv.total_tokens, scenario
+            assert len(done) + srv.cancelled == 24, (
+                f"{scenario}: every arrival must be served or cancelled"
+            )
+
+
+def test_ab_cli_gate_exits_zero_on_the_headline_scenario(capsys):
+    rc = sim.main(["slo_sim.py", "--ab", "bursty-heavytail", "-n", "48",
+                   "--seed", "9"])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "SLO beats FIFO" in out
+
+
+def test_trace_doc_roundtrips_through_trace_report_check(tmp_path):
+    srv = sim.SimServer(4, slo=True)
+    sim.run_workload(srv, wg.generate("deadline-storm", 24, 5))
+    path = tmp_path / "slo.json"
+    import json
+
+    path.write_text(json.dumps(srv.trace_doc()))
+    assert tr.main(["trace_report.py", "--check", str(path)]) == 0

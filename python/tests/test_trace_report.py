@@ -105,6 +105,98 @@ def test_block_ledger_discipline():
     assert any("freed while free" in v for v in stray["violations"])
 
 
+def test_preempt_conserves_tokens_and_frees_row_for_reuse():
+    # same shape as audit.rs's preempt_conserves_tokens test: preempt
+    # discards 2 tokens, the row is immediately reusable, and the victim's
+    # second life re-finishes with a clean token slate
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 0, req=0, row=0),
+        ev("DecodeStep", 1, row=0),   # ttft = 1 (first-ever token)
+        ev("DecodeStep", 2, row=0),   # itl = 1
+        ev("Preempt", 3, req=0, row=0, tokens=2),
+        ev("Evict", 3, row=0),
+        ev("Enqueue", 3, req=1),
+        ev("Admit", 3, req=1, row=0),  # freed row is reusable
+        ev("DecodeStep", 4, row=0),
+        ev("Finish", 4, req=1, row=0, tokens=1),
+        ev("Admit", 5, req=0, row=1),  # re-admit after preempt
+        ev("DecodeStep", 6, row=1),    # no TTFT (already recorded)
+        ev("DecodeStep", 7, row=1),    # itl = 1, no cross-life gap
+        ev("DecodeStep", 8, row=1),
+        ev("Finish", 8, req=0, row=1, tokens=3),
+    ]
+    r = tr.audit(events)
+    assert r["violations"] == []
+    assert (r["preempted"], r["preempted_tokens"]) == (1, 2)
+    # global conservation: DecodeSteps == finish tokens + discarded
+    assert r["tokens"] == 3 + 1 + 2
+    assert r["ttft_ticks"] == [1, 1]
+    assert r["itl_ticks"] == [1, 1, 1]
+
+
+def test_preempt_token_lie_and_unadmitted_preempt_are_caught():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 0, req=0, row=0),
+        ev("DecodeStep", 1, row=0),
+        ev("Preempt", 2, req=0, row=0, tokens=5),  # lies: life sampled 1
+        ev("Preempt", 3, req=0, row=2, tokens=0),  # not admitted any more
+    ]
+    text = "\n".join(tr.audit(events)["violations"])
+    assert "Preempt says 5 tokens but life sampled 1" in text
+    assert "preempt on unoccupied row 2" in text
+    assert "preempted while not admitted" in text
+
+
+def test_cancel_is_terminal_and_pre_admission():
+    clean = tr.audit([ev("Enqueue", 0, req=0), ev("Cancel", 4, req=0)])
+    assert clean["violations"] == []
+    assert clean["cancelled"] == 1
+
+    bad = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 0, req=0, row=0),
+        ev("Cancel", 1, req=0),        # in flight: not cancellable
+        ev("Admit", 2, req=0, row=1),  # nothing after cancel
+    ]
+    text = "\n".join(tr.audit(bad)["violations"])
+    assert "cancelled while in flight" in text
+    assert "admitted after cancel" in text
+
+
+def test_deadline_miss_requires_a_finish_and_ledger_balances():
+    late = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 0, req=0, row=0),
+        ev("DecodeStep", 9, row=0),
+        ev("DeadlineMiss", 9, req=0),
+        ev("Finish", 9, req=0, row=0, tokens=1),
+    ]
+    r = tr.audit(late)
+    assert r["violations"] == []
+    assert r["deadline_misses"] == 1
+
+    orphan = tr.audit([ev("DeadlineMiss", 0, req=3)])
+    assert any("deadline miss without a finish" in v
+               for v in orphan["violations"])
+
+    # an admission with no terminal event breaks the admission ledger
+    open_adm = tr.audit([ev("Enqueue", 0, req=0), ev("Admit", 0, req=0, row=0)])
+    assert any("admission ledger broken" in v for v in open_adm["violations"])
+
+
+def test_mid_flight_reject_balances_the_ledger():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 0, req=0, row=0),
+        ev("Reject", 1, req=0),  # forced admission aborted mid-flight
+    ]
+    r = tr.audit(events)
+    assert r["violations"] == []
+    assert (r["admitted"], r["finished"], r["rejected"]) == (1, 0, 1)
+
+
 def test_verify_round_cannot_accept_more_than_drafted():
     r = tr.audit([ev("VerifyRound", 2, row=0, k=4, accepted=5)])
     assert any("accepted 5 > drafted 4" in v for v in r["violations"])
@@ -173,6 +265,37 @@ def test_check_fails_on_percentile_mismatch_dropped_events_and_cow():
     assert any("copy-on-write" in e for e in errs)
 
 
+def test_check_covers_slo_counters_and_goodput_bitwise():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 0, req=0, row=0),
+        ev("DecodeStep", 9, row=0),
+        ev("DeadlineMiss", 9, req=0),
+        ev("Finish", 9, req=0, row=0, tokens=1),
+        ev("Enqueue", 0, req=1),
+        ev("Cancel", 3, req=1),
+    ]
+    r = tr.audit(events)
+    stats = _stats_for(r)
+    stats.update({
+        "preempted": 0,
+        "cancelled": 1,
+        "deadline_misses": 1,
+        # (served - misses) / max(served + cancelled, 1) = 0/2
+        "goodput": 0.0,
+    })
+    assert tr.check(r, stats, {"dropped": 0}) == []
+
+    stats["cancelled"] = 2
+    errs = tr.check(r, stats, {"dropped": 0})
+    assert any("cancelled: trace replay says 1" in e for e in errs)
+
+    stats["cancelled"] = 1
+    stats["goodput"] = 0.5
+    errs = tr.check(r, stats, {"dropped": 0})
+    assert any("goodput: recomputed 0.0" in e for e in errs)
+
+
 def test_check_requires_serverstats():
     r = tr.audit(clean_lifecycle())
     assert any("serverStats" in e for e in tr.check(r, None, {}))
@@ -228,9 +351,13 @@ def test_event_schema_is_in_sync_between_rust_and_python():
     assert sync.main(["event_sync_check.py", str(REPO)]) == 0
 
 
-def test_schema_parsers_see_all_sixteen_kinds_with_fields():
+def test_schema_parsers_see_all_nineteen_kinds_with_fields():
     variants = sync.parse_rust_enum(str(REPO / "rust/src/obs/trace.rs"))
+    assert len(variants) == 19
     assert [n for n, _ in variants] == list(tr.KINDS)
     by_name = dict(variants)
     assert by_name["Finish"] == ["req", "row", "tokens"]
+    assert by_name["Preempt"] == ["req", "row", "tokens"]
+    assert by_name["Cancel"] == ["req"]
+    assert by_name["DeadlineMiss"] == ["req"]
     assert by_name["SessionRun"] == ["artifact", "h2d_ms", "exec_ms", "d2h_ms"]

@@ -138,6 +138,21 @@ fn serve_shared_prefix_workload(
     Ok(srv.stats)
 }
 
+/// The SLO-vs-FIFO A/B (DESIGN.md §2i): one bursty heavy-tail stream
+/// with a high-priority deadline-carrying slice
+/// (`workload::generate("bursty-heavytail")`), replayed through the
+/// same engine under plain FIFO admission vs the SLO-aware scheduler.
+/// The SLO row must win on goodput-under-SLO (misses and cancellations
+/// subtract) — the serve.rs scenario tests additionally pin the
+/// high-priority TTFT p95 win.
+fn serve_slo_workload(slo: bool, n: usize, seed: u64) -> anyhow::Result<ServerStats> {
+    let mut srv = Server::new(SimEngine::new(4), 7);
+    srv.set_slo(slo);
+    let reqs = loram::workload::generate("bursty-heavytail", n, seed)?;
+    loram::workload::run(&mut srv, &reqs)?;
+    Ok(srv.stats)
+}
+
 /// One serving measurement: which decode path it exercised (`reforward` /
 /// `kvcache` / `speculative`) and through which engine (`pjrt`, or `sim`
 /// when the scheduler ran without artifacts).
@@ -214,6 +229,11 @@ fn emit_bench_serve(entries: &[ServeEntry], run_wall_s: f64) -> anyhow::Result<(
                 ("prefill_tokens", c("prefill.tokens")),
                 ("padded_prefill_tokens", c("prefill.padded_tokens")),
                 ("peak_in_flight", g("serve.peak_in_flight")),
+                // §2i SLO columns: zero on plain-FIFO entries
+                ("preempted", c("serve.preempted")),
+                ("cancelled", c("serve.cancelled")),
+                ("deadline_misses", c("serve.deadline_misses")),
+                ("goodput", g("serve.goodput")),
             ];
             // §2f block-pool counters, present only on the paged path
             if m.has_gauge("paged.prefix_hit_rate") {
@@ -382,6 +402,13 @@ fn main() -> anyhow::Result<()> {
         for (path, paged) in [("prefix-dense", false), ("prefix-paged", true)] {
             let st = serve_shared_prefix_workload(paged, sysp, 32, 16)?;
             entries.push(ServeEntry { path, engine: "sim", requests: 32, spec_cfg: None, stats: st });
+        }
+        // the SLO A/B (§2i): the identical adversarial stream, FIFO vs
+        // SLO-aware — the slo-sched row carries the goodput win and the
+        // preempted/cancelled/deadline_misses accounting
+        for (path, slo) in [("slo-fifo", false), ("slo-sched", true)] {
+            let st = serve_slo_workload(slo, 48, 9)?;
+            entries.push(ServeEntry { path, engine: "sim", requests: 48, spec_cfg: None, stats: st });
         }
         emit_bench_serve(&entries, t_run.elapsed().as_secs_f64())?;
     }

@@ -121,6 +121,10 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     // prefix_hit_rate/blocks_in_use/cow_copies: the §2f block-pool
     // counters, blank off the paged path (cow_copies must read 0 — the
     // serving flow shares only full immutable prefix blocks)
+    // goodput/preempted/cancelled/deadline_misses: the §2i SLO columns —
+    // goodput is in-deadline finishes over offered load, and all four
+    // read 0/1.000 under the plain FIFO scheduler used here (aggregate
+    // rows only; the lane rows leave them blank)
     let mut scsv = Csv::create(
         ctx.out_dir.join("tab8_serving.csv"),
         &["method", "decode_path", "prefill", "adapter", "requests",
@@ -128,7 +132,8 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
           "mean_occupancy", "mean_queue_wait_ms", "peak_queue_depth",
           "padded_prefill_tokens", "ttft_p95_ticks", "itl_p95_ticks",
           "acceptance_rate", "draft_steps", "verify_steps",
-          "prefix_hit_rate", "blocks_in_use", "cow_copies"],
+          "prefix_hit_rate", "blocks_in_use", "cow_copies",
+          "goodput", "preempted", "cancelled", "deadline_misses"],
     )?;
     let serve_requests = workload_steps * 2;
     let mut serve_rows = |method: &str,
@@ -190,7 +195,11 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             vsteps,
             hit_rate,
             blocks,
-            cow
+            cow,
+            format!("{:.3}", m.gauge("serve.goodput")),
+            m.counter("serve.preempted") as usize,
+            m.counter("serve.cancelled") as usize,
+            m.counter("serve.deadline_misses") as usize
         ])?;
         for adapter in srv.stats.per_adapter.keys() {
             let label = crate::serve::adapter_label(*adapter);
@@ -216,6 +225,10 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 "",
                 "",
                 lane_rate,
+                "",
+                "",
+                "",
+                "",
                 "",
                 "",
                 "",

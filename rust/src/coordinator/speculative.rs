@@ -347,8 +347,19 @@ impl SpecDecoder {
         Ok(())
     }
 
-    /// Free a row in both decoders.
+    /// Free a row in both decoders. A preemption can land while the
+    /// drafter's frontier still sits past the target's committed position
+    /// (a verify round that drafted but never rewound — e.g. an error out
+    /// of `round` between the draft steps and the rewind). Those pending
+    /// draft positions are rewound first, so the trace shows the same
+    /// rewind-then-evict sequence as any rejected draft and the audit's
+    /// row lifecycle never sees an evict with unverified cache state.
     pub fn evict(&mut self, row: usize) -> Result<()> {
+        if let (Some(t), Some(d)) = (self.target.slots.len(row), self.drafter.slots.len(row)) {
+            if d > t {
+                self.drafter.rewind(row, d - t)?;
+            }
+        }
         self.target.evict(row)?;
         if self.drafter.slots.len(row).is_some() {
             self.drafter.evict(row)?;

@@ -37,6 +37,7 @@ pub mod serve;
 pub mod tensor;
 pub mod tokenizer;
 pub mod util;
+pub mod workload;
 
 /// Default artifact directory: `$LORAM_ARTIFACTS` or `artifacts/`.
 pub fn default_artifact_dir() -> std::path::PathBuf {

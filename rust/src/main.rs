@@ -115,6 +115,15 @@ usage: loram <subcommand> [--key value] [--flag]
                                        the deterministic tick clock
                                        ([--sim-mode chunked|spec|paged]
                                        [--batch N])
+             [--slo]                   SLO-aware scheduling (DESIGN.md
+                                       §2i): priority classes, deadline
+                                       cancellation, preemptive admission
+             [--workload SCENARIO]     sim only: adversarial generated
+                                       stream — steady|bursty-heavytail|
+                                       adapter-skew|deadline-storm|
+                                       rejection-storm  [--seed N]
+             [--fair-rows N]           cap the engine rows one adapter
+                                       lane may hold concurrently
              [--trace out.json]        write a Perfetto-loadable Chrome
                                        trace (+ .jsonl event log); audit
                                        it with tools/trace_report.py
@@ -352,6 +361,10 @@ fn trace_finish(args: &Args, st: &loram::serve::ServerStats) -> Result<()> {
         ("served", Json::num(st.served as f64)),
         ("admitted", Json::num(st.admitted as f64)),
         ("rejected", Json::num(st.rejected as f64)),
+        ("preempted", Json::num(st.preempted as f64)),
+        ("cancelled", Json::num(st.cancelled as f64)),
+        ("deadline_misses", Json::num(st.deadline_misses as f64)),
+        ("goodput", Json::num(st.goodput())),
         ("total_tokens", Json::num(st.total_tokens as f64)),
         ("ticks", Json::num(st.ticks as f64)),
         ("ttft_tick_p50", Json::num(ttft[0])),
@@ -413,18 +426,39 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if mode != "spec" {
         server.set_prefill_budget(Some(args.get_usize("prefill-budget", 16)));
     }
-    let sys = "system: you are a terse helpful assistant. ";
-    for i in 0..n {
-        let prompt = match mode {
-            // shared system prompt: exercises prefix reuse + block ledger
-            "paged" => format!("{sys}user {i}"),
-            _ if i % 3 == 0 => "L".repeat(60), // near-grid-long
-            _ => format!("req {i}"),
-        };
-        server.enqueue(prompt, serve_cfg(i));
+    if args.has_flag("slo") {
+        server.set_slo(true);
     }
-    let responses = server.drain()?;
-    anyhow::ensure!(responses.len() == n, "sim served {} of {n}", responses.len());
+    if args.get("fair-rows").is_some() {
+        server.set_adapter_fair_cap(Some(args.get_usize("fair-rows", 2)));
+    }
+    let responses = if let Some(scenario) = args.get("workload") {
+        // adversarial generated stream (DESIGN.md §2i scenario catalog):
+        // arrivals paced on the tick clock instead of all-upfront
+        let reqs =
+            loram::workload::generate(scenario, n, args.get_usize("seed", 0) as u64)?;
+        loram::workload::run(&mut server, &reqs)?
+    } else {
+        let sys = "system: you are a terse helpful assistant. ";
+        for i in 0..n {
+            let prompt = match mode {
+                // shared system prompt: exercises prefix reuse + block ledger
+                "paged" => format!("{sys}user {i}"),
+                _ if i % 3 == 0 => "L".repeat(60), // near-grid-long
+                _ => format!("req {i}"),
+            };
+            server.enqueue(prompt, serve_cfg(i));
+        }
+        server.drain()?
+    };
+    // under SLO scheduling, deadline-expired requests are cancelled, not
+    // served — everything else must still come back
+    anyhow::ensure!(
+        responses.len() + server.stats.cancelled == n,
+        "sim served {} + cancelled {} of {n}",
+        responses.len(),
+        server.stats.cancelled
+    );
     let st = &server.stats;
     println!(
         "sim[{mode}] served {} requests over {} ticks — {} tokens, \
@@ -437,6 +471,15 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         st.itl_tick_p(95.0),
         st.peak_in_flight
     );
+    if args.has_flag("slo") || args.get("workload").is_some() {
+        println!(
+            "slo: {} preempted, {} cancelled, {} deadline misses, goodput {:.3}",
+            st.preempted,
+            st.cancelled,
+            st.deadline_misses,
+            st.goodput()
+        );
+    }
     if let Some(pg) = &st.paged {
         println!(
             "paged kv: {} prefix hits ({} tokens reused), {}/{} blocks in \
@@ -613,6 +656,11 @@ fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {
     }
     if args.get("prefill-budget").is_some() {
         server.set_prefill_budget(Some(args.get_usize("prefill-budget", 64)));
+    }
+    if args.has_flag("slo") {
+        // the demo queue is all Normal/no-deadline, so this admits FIFO —
+        // but the preemptive machinery runs, matching the sim path
+        server.set_slo(true);
     }
     println!(
         "prefill: {}",

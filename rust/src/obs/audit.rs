@@ -18,6 +18,15 @@
 //!    legitimately holds blocks across requests)
 //! 5. `cow_copies` is reported for the caller to judge (0 under serve —
 //!    the §2f share-only-full-blocks invariant)
+//! 6. preemption conservation (§2i): `Preempt.tokens` equals the
+//!    DecodeStep count of the life it ends; the preempted row is freed;
+//!    the request may be re-admitted and its eventual `Finish.tokens`
+//!    counts only the final life (the discarded stream is accounted in
+//!    `preempted_tokens`, so total DecodeSteps == finish + preempted)
+//! 7. cancel is terminal and pre-admission: a `Cancel` of an in-flight
+//!    or finished request, or any `Admit` after `Cancel`, is a violation
+//! 8. admission ledger: admits == finishes + preempts + mid-flight
+//!    rejects, and `DeadlineMiss` only fires for requests that finish
 
 use super::trace::{Event, Stamped};
 use std::collections::BTreeMap;
@@ -25,13 +34,21 @@ use std::collections::BTreeMap;
 #[derive(Debug, Default)]
 struct Life {
     enq: Option<u64>,
+    /// First admission tick — tick-order law anchor (TTFT may precede a
+    /// later re-admission after preemption).
+    first_admit: Option<u64>,
+    /// Current-life admission tick; cleared by `Preempt` so a re-admit is
+    /// legal while a genuine double-admit still trips the law.
     admit: Option<u64>,
     first_tok: Option<u64>,
     last_tok: Option<u64>,
     finish: Option<u64>,
+    /// DecodeStep count of the *current* life (reset by `Preempt`).
     tokens: usize,
     finish_tokens: Option<usize>,
     rejected: bool,
+    cancelled: bool,
+    deadline_miss: bool,
 }
 
 /// Replay result: violations plus the reconstructed distributions.
@@ -48,6 +65,13 @@ pub struct AuditReport {
     pub rejected: usize,
     pub requeues: usize,
     pub tokens: usize,
+    /// SLO-scheduler lifecycle counts (§2i)
+    pub preempted: usize,
+    /// DecodeSteps discarded across all preemptions (global conservation:
+    /// `tokens == Σ Finish.tokens + preempted_tokens`)
+    pub preempted_tokens: usize,
+    pub cancelled: usize,
+    pub deadline_misses: usize,
     /// blocks still allocated when the trace ends
     pub live_blocks: usize,
     pub cow_copies: usize,
@@ -69,6 +93,8 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
     // engine row -> occupant request
     let mut rows: BTreeMap<usize, u64> = BTreeMap::new();
     let mut live_blocks: BTreeMap<usize, u64> = BTreeMap::new();
+    // admissions that ended in a mid-flight Reject (for the admission ledger)
+    let mut rejected_inflight: usize = 0;
 
     for s in events {
         let t = s.tick;
@@ -93,6 +119,9 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
                 if l.admit.is_some() {
                     r.violations.push(format!("req {req}: admitted twice"));
                 }
+                if l.cancelled {
+                    r.violations.push(format!("req {req}: admitted after cancel"));
+                }
                 match l.enq {
                     None => r.violations.push(format!("req {req}: admitted, never enqueued")),
                     Some(e) if t < e => {
@@ -100,12 +129,18 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
                     }
                     _ => {}
                 }
+                if l.first_admit.is_none() {
+                    l.first_admit = Some(t);
+                }
                 l.admit = Some(t);
             }
             Event::Reject { req } => {
                 r.rejected += 1;
                 let l = lives.entry(*req).or_default();
                 l.rejected = true;
+                if l.admit.is_some() {
+                    rejected_inflight += 1;
+                }
                 // mid-flight rejection frees the row
                 if let Some(&row) =
                     rows.iter().find_map(|(row, occ)| (occ == req).then_some(row))
@@ -148,6 +183,60 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
                 l.finish = Some(t);
                 l.finish_tokens = Some(*tokens);
             }
+            Event::Preempt { req, row, tokens } => {
+                r.preempted += 1;
+                match rows.remove(row) {
+                    None => r
+                        .violations
+                        .push(format!("req {req}: preempt on unoccupied row {row}")),
+                    Some(occ) if occ != *req => r.violations.push(format!(
+                        "row {row}: preempt req {req} but occupant is req {occ}"
+                    )),
+                    _ => {}
+                }
+                let l = lives.entry(*req).or_default();
+                if l.admit.is_none() {
+                    r.violations.push(format!("req {req}: preempted while not admitted"));
+                }
+                if *tokens != l.tokens {
+                    r.violations.push(format!(
+                        "req {req}: Preempt says {tokens} tokens but life sampled {}",
+                        l.tokens
+                    ));
+                }
+                // the discarded stream is conserved into preempted_tokens;
+                // the re-run life starts with a clean token/ITL slate (TTFT
+                // was recorded once, on the first-ever token)
+                r.preempted_tokens += l.tokens;
+                l.tokens = 0;
+                l.last_tok = None;
+                l.admit = None;
+            }
+            Event::Cancel { req } => {
+                r.cancelled += 1;
+                let l = lives.entry(*req).or_default();
+                if l.enq.is_none() {
+                    r.violations.push(format!("req {req}: cancelled, never enqueued"));
+                }
+                if l.cancelled {
+                    r.violations.push(format!("req {req}: cancelled twice"));
+                }
+                if l.admit.is_some() {
+                    r.violations.push(format!("req {req}: cancelled while in flight"));
+                }
+                if l.finish.is_some() {
+                    r.violations.push(format!("req {req}: cancelled after finish"));
+                }
+                l.cancelled = true;
+            }
+            Event::DeadlineMiss { req } => {
+                r.deadline_misses += 1;
+                let l = lives.entry(*req).or_default();
+                if l.deadline_miss {
+                    r.violations.push(format!("req {req}: deadline missed twice"));
+                }
+                l.deadline_miss = true;
+            }
             Event::BlockAlloc { block } => {
                 if live_blocks.insert(*block, t).is_some() {
                     r.violations.push(format!("block {block}: allocated while live"));
@@ -177,10 +266,13 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
     }
 
     for (req, l) in &lives {
+        if l.deadline_miss && l.finish.is_none() {
+            r.violations.push(format!("req {req}: deadline miss without a finish"));
+        }
         let (Some(enq), Some(admit)) = (l.enq, l.admit) else {
             if l.admit.is_some() {
                 // already flagged above
-            } else if !l.rejected && l.enq.is_some() {
+            } else if !l.rejected && !l.cancelled && l.enq.is_some() {
                 r.violations.push(format!("req {req}: enqueued but never admitted or rejected"));
             }
             continue;
@@ -196,9 +288,13 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
             r.violations.push(format!("req {req}: finished without a first token"));
             continue;
         };
-        if !(enq <= admit && admit <= first && first <= finish) {
+        // tick order anchors on the *first* admission: TTFT is recorded
+        // once per request, and a preempted request's final admit tick may
+        // legitimately postdate its first-ever token
+        let admit0 = l.first_admit.unwrap_or(admit);
+        if !(enq <= admit0 && admit0 <= first && first <= finish) {
             r.violations.push(format!(
-                "req {req}: tick order broken (enq {enq} ≤ admit {admit} ≤ first {first} ≤ finish {finish})"
+                "req {req}: tick order broken (enq {enq} ≤ admit {admit0} ≤ first {first} ≤ finish {finish})"
             ));
         }
         if let Some(ft) = l.finish_tokens {
@@ -209,6 +305,14 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
                 ));
             }
         }
+    }
+    // admission ledger: every admission ends in exactly one of finish /
+    // preempt / mid-flight reject
+    if r.admitted != r.finished + r.preempted + rejected_inflight {
+        r.violations.push(format!(
+            "admission ledger broken: {} admits != {} finishes + {} preempts + {} mid-flight rejects",
+            r.admitted, r.finished, r.preempted, rejected_inflight
+        ));
     }
     if !rows.is_empty() {
         let stuck: Vec<String> = rows.iter().map(|(row, req)| format!("{row}:req {req}")).collect();
@@ -278,6 +382,100 @@ mod tests {
         assert!(text.contains("block 4: allocated while live"), "{text}");
         assert!(text.contains("block 7: freed while free"), "{text}");
         assert_eq!(a.live_blocks, 1);
+    }
+
+    #[test]
+    fn preempt_conserves_tokens_and_frees_row_for_reuse() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::DecodeStep { row: 0 }), // ttft = 1 (first-ever token)
+            st(2, Event::DecodeStep { row: 0 }), // itl = 1
+            st(3, Event::Preempt { req: 0, row: 0, tokens: 2 }),
+            st(3, Event::Evict { row: 0 }),
+            st(3, Event::Enqueue { req: 1 }),
+            st(3, Event::Admit { req: 1, row: 0 }), // freed row is reusable
+            st(4, Event::DecodeStep { row: 0 }),
+            st(4, Event::Finish { req: 1, row: 0, tokens: 1 }),
+            st(5, Event::Admit { req: 0, row: 1 }), // re-admit after preempt
+            st(6, Event::DecodeStep { row: 1 }),    // no TTFT (already recorded)
+            st(7, Event::DecodeStep { row: 1 }),    // itl = 1, no cross-life gap
+            st(8, Event::DecodeStep { row: 1 }),
+            st(8, Event::Finish { req: 0, row: 1, tokens: 3 }),
+        ];
+        let a = audit(&evs);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!(a.preempted, 1);
+        assert_eq!(a.preempted_tokens, 2);
+        // global conservation: DecodeSteps == finish tokens + discarded
+        assert_eq!(a.tokens, 3 + 1 + 2);
+        assert_eq!(a.ttft_ticks, vec![1, 1]);
+        // req 0's ITL gaps never span the preemption boundary
+        assert_eq!(a.itl_ticks, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn preempt_token_lie_and_unadmitted_preempt_are_violations() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::DecodeStep { row: 0 }),
+            st(2, Event::Preempt { req: 0, row: 0, tokens: 5 }), // lies: sampled 1
+            st(3, Event::Preempt { req: 0, row: 2, tokens: 0 }), // not admitted
+        ];
+        let a = audit(&evs);
+        let text = a.violations.join("\n");
+        assert!(text.contains("Preempt says 5 tokens but life sampled 1"), "{text}");
+        assert!(text.contains("preempt on unoccupied row 2"), "{text}");
+        assert!(text.contains("preempted while not admitted"), "{text}");
+    }
+
+    #[test]
+    fn cancel_is_terminal_and_pre_admission() {
+        let clean = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(4, Event::Cancel { req: 0 }),
+        ];
+        let a = audit(&clean);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!(a.cancelled, 1);
+
+        let bad = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::Cancel { req: 0 }), // in flight: not cancellable
+            st(2, Event::Admit { req: 0, row: 1 }), // nothing after cancel
+        ];
+        let text = audit(&bad).violations.join("\n");
+        assert!(text.contains("cancelled while in flight"), "{text}");
+        assert!(text.contains("admitted after cancel"), "{text}");
+    }
+
+    #[test]
+    fn deadline_miss_requires_a_finish_and_admission_ledger_balances() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(9, Event::DecodeStep { row: 0 }),
+            st(9, Event::DeadlineMiss { req: 0 }),
+            st(9, Event::Finish { req: 0, row: 0, tokens: 1 }),
+        ];
+        let a = audit(&evs);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!(a.deadline_misses, 1);
+
+        let orphan = audit(&[st(0, Event::DeadlineMiss { req: 3 })]);
+        assert!(orphan
+            .violations
+            .iter()
+            .any(|v| v.contains("deadline miss without a finish")));
+
+        // an admission with no terminal event breaks the ledger
+        let open = audit(&[
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+        ]);
+        assert!(open.violations.iter().any(|v| v.contains("admission ledger broken")));
     }
 
     #[test]

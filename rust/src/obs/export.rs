@@ -12,7 +12,9 @@
 //! * request lifecycle → `B`/`E` span "req N" on the row's thread track
 //! * `PrefillWindow`   → `X` slice on the row track (`args.start/bucket`)
 //! * `DecodeStep` / `VerifyRound` / `Rewind` / `Evict` → thread instants
-//! * queue events (`Enqueue`/`Reject`/`Requeue`) → instants on tid 0
+//! * queue events (`Enqueue`/`Reject`/`Requeue`/`Cancel`/`DeadlineMiss`)
+//!   → instants on tid 0; `Preempt` closes the row span like a mid-flight
+//!   reject and drops a scheduler instant
 //! * block events → instants on the `kv-pool` track (tid 900)
 //! * `SessionRun` → `X` on the `session` track (tid 901), dur = measured ms
 //! * `Gauge` → `C` counter tracks (queue depth, in-flight, blocks in use)
@@ -42,7 +44,11 @@ pub fn event_json(s: &Stamped) -> Json {
         ("kind", Json::str(s.ev.kind())),
     ];
     match &s.ev {
-        Event::Enqueue { req } | Event::Reject { req } | Event::Requeue { req } => {
+        Event::Enqueue { req }
+        | Event::Reject { req }
+        | Event::Requeue { req }
+        | Event::Cancel { req }
+        | Event::DeadlineMiss { req } => {
             f.push(("req", Json::num(*req as f64)));
         }
         Event::Admit { req, row } => {
@@ -66,7 +72,7 @@ pub fn event_json(s: &Stamped) -> Json {
             f.push(("row", Json::num(*row as f64)));
             f.push(("n", Json::num(*n as f64)));
         }
-        Event::Finish { req, row, tokens } => {
+        Event::Finish { req, row, tokens } | Event::Preempt { req, row, tokens } => {
             f.push(("req", Json::num(*req as f64)));
             f.push(("row", Json::num(*row as f64)));
             f.push(("tokens", Json::num(*tokens as f64)));
@@ -187,6 +193,25 @@ pub fn chrome_events(events: &[Stamped]) -> Vec<Json> {
                     row_tid(*row),
                     vec![("tokens", Json::num(*tokens as f64))],
                 ));
+            }
+            Event::Preempt { req, row, tokens } => {
+                // preemption closes the span; a later re-admit opens a new one
+                open.remove(row);
+                req_row.remove(req);
+                out.push(te(
+                    &format!("req {req}"),
+                    "E",
+                    s.tick,
+                    row_tid(*row),
+                    vec![("preempted_tokens", Json::num(*tokens as f64))],
+                ));
+                out.push(te(&format!("preempt req {req}"), "i", s.tick, TID_SCHED, vec![]));
+            }
+            Event::Cancel { req } => {
+                out.push(te(&format!("cancel req {req}"), "i", s.tick, TID_SCHED, vec![]));
+            }
+            Event::DeadlineMiss { req } => {
+                out.push(te(&format!("deadline miss req {req}"), "i", s.tick, TID_SCHED, vec![]));
             }
             Event::PrefillWindow { row, start, bucket } => {
                 let mut e = te(

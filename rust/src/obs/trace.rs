@@ -50,6 +50,13 @@ pub enum Event {
     Evict { row: usize },
     /// Request completed with `tokens` sampled tokens.
     Finish { req: u64, row: usize, tokens: usize },
+    /// SLO scheduler evicted `row` mid-decode; `tokens` sampled so far are
+    /// discarded and the request is requeued for re-prefill from the prompt.
+    Preempt { req: u64, row: usize, tokens: usize },
+    /// Queued request dropped before admission: its deadline expired.
+    Cancel { req: u64 },
+    /// Request finished after its deadline (served, but outside the SLO).
+    DeadlineMiss { req: u64 },
     /// Paged pool handed out physical block `block`.
     BlockAlloc { block: usize },
     /// Physical block refcount hit zero (or was reclaimed/evicted).
@@ -77,6 +84,9 @@ pub const KINDS: &[&str] = &[
     "Rewind",
     "Evict",
     "Finish",
+    "Preempt",
+    "Cancel",
+    "DeadlineMiss",
     "BlockAlloc",
     "BlockFree",
     "PrefixHit",
@@ -98,6 +108,9 @@ impl Event {
             Event::Rewind { .. } => "Rewind",
             Event::Evict { .. } => "Evict",
             Event::Finish { .. } => "Finish",
+            Event::Preempt { .. } => "Preempt",
+            Event::Cancel { .. } => "Cancel",
+            Event::DeadlineMiss { .. } => "DeadlineMiss",
             Event::BlockAlloc { .. } => "BlockAlloc",
             Event::BlockFree { .. } => "BlockFree",
             Event::PrefixHit { .. } => "PrefixHit",
@@ -279,6 +292,9 @@ mod tests {
             Event::Rewind { row: 0, n: 2 },
             Event::Evict { row: 0 },
             Event::Finish { req: 0, row: 0, tokens: 1 },
+            Event::Preempt { req: 0, row: 0, tokens: 1 },
+            Event::Cancel { req: 0 },
+            Event::DeadlineMiss { req: 0 },
             Event::BlockAlloc { block: 0 },
             Event::BlockFree { block: 0 },
             Event::PrefixHit { blocks: 1, tokens: 8 },

@@ -122,6 +122,24 @@ mod tests {
         assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
     }
 
+    /// Cross-language contract: `tools/workload_gen.py::Rng` pins these
+    /// exact values (python/tests/test_slo_sched.py), so the adversarial
+    /// workload streams are bit-identical on both sides.
+    #[test]
+    fn matches_the_python_mirror_golden_values() {
+        let mut r = Rng::new(7);
+        assert_eq!(r.next_u64(), 11819415725983595385);
+        assert_eq!(r.next_u64(), 5343028139622295922);
+        assert_eq!(r.next_u64(), 12185485406386585458);
+        assert_eq!(r.next_u64(), 10788631124621038257);
+        let mut r = Rng::new(0);
+        assert_eq!(r.next_u64(), 546717224284700557);
+        assert_eq!(r.next_u64(), 9027004767291937668);
+        let mut r = Rng::new(9);
+        let draws: Vec<usize> = (0..6).map(|_| r.below(8)).collect();
+        assert_eq!(draws, vec![1, 0, 6, 7, 1, 1]);
+    }
+
     #[test]
     fn uniform_bounds_and_mean() {
         let mut r = Rng::new(3);

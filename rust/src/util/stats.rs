@@ -66,6 +66,19 @@ pub fn percentiles_of(xs: &[f64], ps: &[f64]) -> Vec<f64> {
     ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
 }
 
+/// Batch percentiles of a tick-count distribution — the serving TTFT/ITL
+/// helper (one f64 conversion + one sort for all `ps`). Empty input pins
+/// every percentile to 0.0; the interpolation is [`percentile_sorted`]'s
+/// `rank = (p/100)·(n-1)` lerp, bit-identical to what
+/// `tools/trace_report.py` recomputes from exported traces.
+pub fn tick_percentiles(xs: &[usize], ps: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    percentiles_of(&v, ps)
+}
+
 /// Unbiased pass@k estimator (Chen et al. 2021): 1 - C(n-c, k)/C(n, k).
 pub fn pass_at_k(n: usize, c: usize, k: usize) -> f64 {
     if n < k || c == 0 {
@@ -140,6 +153,22 @@ mod tests {
     fn empty_batch_percentiles_are_zero() {
         assert_eq!(percentiles_of(&[], &[50.0, 95.0]), vec![0.0, 0.0]);
         assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+    }
+
+    /// Spot values pinning the tick-percentile lerp to the exact numbers
+    /// `python/tests/test_trace_report.py` parametrizes over — the two
+    /// implementations must stay bit-identical (ISSUE 9 satellite).
+    #[test]
+    fn tick_percentiles_spot_values_match_trace_report() {
+        assert_eq!(
+            tick_percentiles(&[1, 2, 3, 4, 5], &[0.0, 25.0, 50.0, 100.0]),
+            vec![1.0, 2.0, 3.0, 5.0]
+        );
+        assert_eq!(tick_percentiles(&[1, 2], &[50.0]), vec![1.5]);
+        // unsorted input: the helper sorts, rank (50/100)·3 = 1.5 → 2.5
+        assert_eq!(tick_percentiles(&[4, 3, 2, 1], &[50.0]), vec![2.5]);
+        assert_eq!(tick_percentiles(&[10], &[0.0, 95.0]), vec![10.0, 10.0]);
+        assert_eq!(tick_percentiles(&[], &[50.0, 95.0]), vec![0.0, 0.0]);
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Trace-driven adversarial workload generator for the SLO serving bench
+//! (DESIGN.md §2i). Each scenario is a pure function of
+//! `(scenario, n, seed)` built from the repo PCG64-DXSM [`Rng`] using
+//! *integer draws only* — no float math touches the request stream — so
+//! `tools/workload_gen.py` reproduces every stream bit-for-bit and the
+//! Python tick model in `tools/slo_sim.py` replays identical arrivals.
+//! The loramlint contract-mirror pins [`SCENARIOS`] against the Python
+//! side; renaming a scenario on one side fails the lint.
+//!
+//! Draw order per request is part of the contract (the mirror consumes
+//! the same Rng stream): each arm documents its exact sequence of
+//! `below()` calls.
+
+use crate::coordinator::adapters::AdapterId;
+use crate::coordinator::generate::SampleCfg;
+use crate::serve::{DecodeEngine, Priority, Response, Server};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Scenario catalog — mirrored verbatim by `tools/workload_gen.py`.
+pub const SCENARIOS: &[&str] = &[
+    "steady",
+    "bursty-heavytail",
+    "adapter-skew",
+    "deadline-storm",
+    "rejection-storm",
+];
+
+/// One synthetic request: when it arrives (scheduler ticks), how big it
+/// is, and the SLO contract it carries. `prompt_len` is a *character*
+/// count (the sim tokenizer is byte-oriented); `deadline_ticks` is
+/// relative to arrival, exactly what [`Server::enqueue_slo`] takes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadReq {
+    pub arrival_tick: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub priority: Priority,
+    pub deadline_ticks: Option<usize>,
+    pub adapter_ix: Option<usize>,
+}
+
+/// Heavy-tailed length via integer doubling: uniform in `[base, 2·base)`
+/// then doubled with probability 1/4 per round until `cap` — a discrete
+/// Pareto-ish tail with no `powf`, so the mirror stays exact. Draws:
+/// one `below(base)`, then one `below(4)` per doubling round (the round
+/// that leaves the loop included; none once `cap` is hit).
+fn heavy_tail(rng: &mut Rng, base: usize, cap: usize) -> usize {
+    let mut len = base + rng.below(base);
+    while len < cap && rng.below(4) == 0 {
+        len *= 2;
+    }
+    len.min(cap)
+}
+
+/// Generate `n` requests of the named scenario. Arrival ticks are
+/// non-decreasing; every request has `prompt_len >= 1` and
+/// `max_new >= 1`. Unknown names are an error listing the catalog.
+pub fn generate(scenario: &str, n: usize, seed: u64) -> Result<Vec<WorkloadReq>> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    let mut tick = 0usize;
+    for i in 0..n {
+        let req = match scenario {
+            // one arrival per tick, uniform small sizes, no SLO terms —
+            // the control arm. Draws: below(8), below(4).
+            "steady" => WorkloadReq {
+                arrival_tick: i,
+                prompt_len: 8 + rng.below(8),
+                max_new: 4 + rng.below(4),
+                priority: Priority::Normal,
+                deadline_ticks: None,
+                adapter_ix: None,
+            },
+            // diurnal bursts of heavy-tail lengths with a high-priority
+            // deadline-carrying slice — the A/B headline scenario.
+            // Draws: below(4) gap coin [+ below(6) gap], heavy_tail(8),
+            // heavy_tail(4), below(10) class [+ below(8) deadline].
+            "bursty-heavytail" => {
+                if rng.below(4) == 0 {
+                    tick += 1 + rng.below(6);
+                }
+                let prompt_len = heavy_tail(&mut rng, 8, 512);
+                let max_new = heavy_tail(&mut rng, 4, 64);
+                let priority = match rng.below(10) {
+                    0 | 1 => Priority::High,
+                    2..=7 => Priority::Normal,
+                    _ => Priority::Low,
+                };
+                let deadline_ticks =
+                    (priority == Priority::High).then(|| 8 + rng.below(8));
+                WorkloadReq {
+                    arrival_tick: tick,
+                    prompt_len,
+                    max_new,
+                    priority,
+                    deadline_ticks,
+                    adapter_ix: None,
+                }
+            }
+            // 10:1 lane skew: ~10 of 11 requests hit the hot adapter —
+            // the fairness-cap stressor. Draws: below(2) gap coin,
+            // below(11) lane, below(8), below(6).
+            "adapter-skew" => {
+                tick += usize::from(rng.below(2) == 0);
+                let hot = rng.below(11) < 10;
+                WorkloadReq {
+                    arrival_tick: tick,
+                    prompt_len: 8 + rng.below(8),
+                    max_new: 2 + rng.below(6),
+                    priority: Priority::Normal,
+                    deadline_ticks: None,
+                    adapter_ix: Some(usize::from(!hot)),
+                }
+            }
+            // waves of 8 simultaneous arrivals, every request armed with
+            // a tight deadline — most of a wave expires in the queue.
+            // Draws: below(8), below(4), below(6).
+            "deadline-storm" => {
+                if i > 0 && i % 8 == 0 {
+                    tick += 4;
+                }
+                WorkloadReq {
+                    arrival_tick: tick,
+                    prompt_len: 8 + rng.below(8),
+                    max_new: 2 + rng.below(4),
+                    priority: Priority::Normal,
+                    deadline_ticks: Some(1 + rng.below(6)),
+                    adapter_ix: None,
+                }
+            }
+            // everything lands at tick 0 with heavy-tail prompts — the
+            // admission-pressure / rejection stressor. Draws:
+            // heavy_tail(64), below(4).
+            "rejection-storm" => WorkloadReq {
+                arrival_tick: 0,
+                prompt_len: heavy_tail(&mut rng, 64, 2048),
+                max_new: 1 + rng.below(4),
+                priority: Priority::Normal,
+                deadline_ticks: None,
+                adapter_ix: None,
+            },
+            other => bail!(
+                "unknown workload scenario {other:?} (expected one of {SCENARIOS:?})"
+            ),
+        };
+        out.push(req);
+    }
+    Ok(out)
+}
+
+/// Drive a server through a workload: enqueue each request at its
+/// arrival tick, stepping the scheduler between arrivals, then drain.
+/// The sim clock only advances while work exists, so idle gaps collapse
+/// — arrivals into an empty server enqueue immediately.
+pub fn run<E: DecodeEngine>(
+    srv: &mut Server<E>,
+    reqs: &[WorkloadReq],
+) -> Result<Vec<Response>> {
+    let mut out = vec![];
+    for r in reqs {
+        while srv.stats.ticks < r.arrival_tick && (srv.pending() > 0 || srv.in_flight() > 0)
+        {
+            out.extend(srv.step()?);
+        }
+        srv.enqueue_slo(
+            "x".repeat(r.prompt_len),
+            SampleCfg { max_new: r.max_new, ..SampleCfg::default() },
+            r.adapter_ix.map(AdapterId::for_slot),
+            r.priority,
+            r.deadline_ticks,
+        );
+    }
+    out.extend(srv.drain()?);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::audit::audit;
+    use crate::obs::trace;
+    use crate::serve::SimEngine;
+
+    #[test]
+    fn scenarios_are_deterministic_and_well_formed() {
+        for &s in SCENARIOS {
+            let a = generate(s, 64, 9).unwrap();
+            let b = generate(s, 64, 9).unwrap();
+            assert_eq!(a, b, "{s} must be a pure function of (n, seed)");
+            assert_eq!(a.len(), 64);
+            let mut last = 0;
+            for r in &a {
+                assert!(r.arrival_tick >= last, "{s} arrivals must be monotonic");
+                last = r.arrival_tick;
+                assert!(r.prompt_len >= 1 && r.max_new >= 1);
+            }
+            assert_ne!(
+                generate(s, 64, 10).unwrap(),
+                a,
+                "{s} must actually consume the seed"
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_heavytail_has_a_tail_bursts_and_a_deadline_class() {
+        let reqs = generate("bursty-heavytail", 256, 7).unwrap();
+        assert!(reqs.iter().all(|r| r.prompt_len <= 512 && r.max_new <= 64));
+        assert!(
+            reqs.iter().any(|r| r.prompt_len > 64),
+            "no heavy tail in 256 draws"
+        );
+        assert!(
+            reqs.iter()
+                .any(|r| r.priority == Priority::High && r.deadline_ticks.is_some()),
+            "the high-priority deadline slice is missing"
+        );
+        assert!(
+            reqs.iter().any(|r| r.priority == Priority::Low),
+            "no low class"
+        );
+        // bursts: some consecutive pair shares an arrival tick
+        assert!(reqs.windows(2).any(|w| w[0].arrival_tick == w[1].arrival_tick));
+    }
+
+    #[test]
+    fn adapter_skew_is_roughly_ten_to_one() {
+        let reqs = generate("adapter-skew", 512, 11).unwrap();
+        let hot = reqs.iter().filter(|r| r.adapter_ix == Some(0)).count();
+        let cold = reqs.iter().filter(|r| r.adapter_ix == Some(1)).count();
+        assert_eq!(hot + cold, 512);
+        assert!(cold > 0, "cold lane never drawn");
+        assert!(hot > 6 * cold, "skew collapsed: {hot}:{cold}");
+    }
+
+    #[test]
+    fn deadline_storm_arms_every_request_in_waves() {
+        let reqs = generate("deadline-storm", 32, 5).unwrap();
+        assert!(reqs.iter().all(|r| r.deadline_ticks.is_some()));
+        let waves: std::collections::BTreeSet<usize> =
+            reqs.iter().map(|r| r.arrival_tick).collect();
+        assert_eq!(waves.len(), 4, "32 requests must arrive in 4 waves of 8");
+    }
+
+    /// Cross-language contract: the first four requests of every
+    /// scenario at seed 9, exactly as `tools/workload_gen.py` produces
+    /// them (python/tests/test_slo_sched.py pins the same tuples).
+    #[test]
+    fn generated_streams_match_the_python_mirror_goldens() {
+        use Priority::{High, Low, Normal};
+        #[allow(clippy::type_complexity)]
+        let tup = |r: &WorkloadReq| -> (usize, usize, usize, Priority, Option<usize>, Option<usize>) {
+            (r.arrival_tick, r.prompt_len, r.max_new, r.priority, r.deadline_ticks, r.adapter_ix)
+        };
+        let gold = |s: &str| {
+            generate(s, 4, 9).unwrap().iter().map(tup).collect::<Vec<_>>()
+        };
+        assert_eq!(
+            gold("steady"),
+            vec![
+                (0, 9, 4, Normal, None, None),
+                (1, 14, 7, Normal, None, None),
+                (2, 9, 4, Normal, None, None),
+                (3, 10, 4, Normal, None, None),
+            ]
+        );
+        assert_eq!(
+            gold("bursty-heavytail"),
+            vec![
+                (1, 14, 8, High, Some(12), None),
+                (1, 20, 6, Normal, None, None),
+                (1, 8, 14, Low, None, None),
+                (6, 11, 4, Normal, None, None),
+            ]
+        );
+        assert_eq!(
+            gold("adapter-skew"),
+            vec![
+                (1, 14, 7, Normal, None, Some(0)),
+                (2, 10, 2, Normal, None, Some(0)),
+                (2, 10, 3, Normal, None, Some(0)),
+                (2, 14, 6, Normal, None, Some(0)),
+            ]
+        );
+        assert_eq!(
+            gold("deadline-storm"),
+            vec![
+                (0, 9, 2, Normal, Some(5), None),
+                (0, 15, 2, Normal, Some(2), None),
+                (0, 10, 2, Normal, Some(4), None),
+                (0, 13, 3, Normal, Some(2), None),
+            ]
+        );
+        assert_eq!(
+            gold("rejection-storm"),
+            vec![
+                (0, 150, 4, Normal, None, None),
+                (0, 158, 1, Normal, None, None),
+                (0, 103, 2, Normal, None, None),
+                (0, 76, 3, Normal, None, None),
+            ]
+        );
+    }
+
+    #[test]
+    fn unknown_scenario_errors_with_the_catalog() {
+        let err = generate("nope", 1, 0).unwrap_err().to_string();
+        assert!(err.contains("steady"), "error must list the catalog: {err}");
+    }
+
+    /// End-to-end: a bursty workload through the SLO scheduler passes
+    /// the full conservation audit — nothing leaks, every arrival is
+    /// served, cancelled, or (transiently) preempted and re-served.
+    #[test]
+    fn workload_through_slo_server_passes_conservation_audit() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let mut srv = Server::new(SimEngine::new(4), 0);
+        srv.set_slo(true);
+        let reqs = generate("bursty-heavytail", 24, 3).unwrap();
+        let rs = run(&mut srv, &reqs).unwrap();
+        let a = audit(&trace::take().expect("sink installed").into_events());
+        assert!(a.ok(), "conservation violations: {:#?}", a.violations);
+        assert_eq!(a.enqueued, 24);
+        assert_eq!(a.finished, srv.stats.served);
+        assert_eq!(a.tokens, srv.stats.total_tokens);
+        assert_eq!(rs.len() + srv.stats.cancelled, 24, "every arrival accounted");
+    }
+}

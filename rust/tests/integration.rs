@@ -15,7 +15,7 @@ use loram::data::{corpus::Corpus, make_batch};
 use loram::params::{init_lora, init_params};
 use loram::pruning;
 use loram::runtime::{BackendKind, Runtime, Session};
-use loram::serve::Server;
+use loram::serve::{Priority, Server};
 use loram::tensor::{Tensor, TensorStore};
 use loram::util::rng::Rng;
 
@@ -1264,4 +1264,74 @@ fn merge_equivalence_recovered_lora_on_full_model() {
         (p_fused - p_merged).abs() / p_merged < 1e-3,
         "fused {p_fused} merged {p_merged}"
     );
+}
+
+#[test]
+fn slo_preemption_on_kv_path_streams_byte_identical() {
+    // ISSUE 9 acceptance on the real kv-cache engine: a Low-priority row
+    // preempted for a High arrival (evict -> requeue -> re-prefill) must
+    // stream byte-identically to the same request in an unpreempted run.
+    let Some(rt) = try_runtime(DECODE_ARTS) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 36);
+    let lora = init_lora(&cfg, 37);
+    let kv = Some(DecodePath::KvCache);
+    let greedy = |max_new| SampleCfg { temperature: 0.0, top_p: 1.0, max_new };
+    let run = |with_vip: bool| -> (Vec<(u64, String)>, usize, usize) {
+        let gen =
+            Generator::with_path(&rt, "logits_tiny", &[&params, &lora], kv).unwrap();
+        let b = gen.batch_size();
+        let mut srv = Server::new(gen, 5);
+        srv.set_slo(true);
+        for i in 0..b {
+            srv.enqueue_slo(format!("Q: {i}+{i}="), greedy(6), None, Priority::Low, None);
+        }
+        srv.step().unwrap(); // grid full, every Low holds a row
+        srv.step().unwrap();
+        if with_vip {
+            srv.enqueue_slo("Q: 9+9=", greedy(2), None, Priority::High, None);
+        }
+        let rs = srv.drain().unwrap();
+        let mut texts: Vec<(u64, String)> =
+            rs.into_iter().map(|r| (r.id, r.text)).collect();
+        texts.sort();
+        (texts, srv.stats.preempted, b)
+    };
+    let (reference, p0, b) = run(false);
+    let (preempted, p1, _) = run(true);
+    assert_eq!(p0, 0, "the reference run must not preempt");
+    assert_eq!(p1, 1, "full grid + High arrival must preempt one row");
+    assert_eq!(preempted.len(), b + 1);
+    // every Low stream — including the evicted-and-rerun victim — is
+    // byte-identical to the unpreempted run
+    let lows: Vec<(u64, String)> =
+        preempted.into_iter().filter(|(id, _)| *id < b as u64).collect();
+    assert_eq!(lows, reference, "preempted stream diverged after re-prefill");
+}
+
+#[test]
+fn slo_deadline_cancellation_with_real_engine() {
+    // A queued request whose deadline expires behind a full grid is
+    // cancelled — never admitted, never decoded — while everything
+    // in flight finishes untouched.
+    let Some(rt) = try_runtime(&["logits_tiny"]) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 38);
+    let lora = init_lora(&cfg, 39);
+    let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora]).unwrap();
+    let b = gen.batch_size();
+    let mut srv = Server::new(gen, 3);
+    srv.set_slo(true);
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6 };
+    for i in 0..b {
+        srv.enqueue_slo(format!("Q: {i}+1="), greedy, None, Priority::Normal, None);
+    }
+    let doomed = srv.enqueue_slo("Q: late=", greedy, None, Priority::Normal, Some(1));
+    let responses = srv.drain().unwrap();
+    assert_eq!(srv.stats.cancelled, 1, "the expired request must cancel");
+    assert!(responses.iter().all(|r| r.id != doomed));
+    assert_eq!(responses.len(), b);
+    assert_eq!(srv.stats.served, b);
+    assert_eq!(srv.stats.rejected, 0);
+    assert_eq!(srv.stats.deadline_misses, 0, "in-flight rows had no deadlines");
 }

@@ -23,6 +23,10 @@ Shipped pairs:
                         trace_report.py *consumes* must be *produced* by
                         ServerStats::to_metrics (+ the stats structs'
                         export_into) / main.rs's serverStats embedding
+  workload-scenarios    workload.rs::SCENARIOS ~ workload_gen.py::
+                        SCENARIOS (names and order: the adversarial
+                        workload catalog, DESIGN.md §2i — slo_sim.py and
+                        the CLI both resolve scenario names through it)
 
 To add a pair: write an extractor for each side returning a comparable
 value, append a Contract to CONTRACTS, and add a drift + clean fixture
@@ -178,6 +182,28 @@ def diff_event_kinds(rust_variants, rust_const, py_kinds):
                     f"trace_report.py has {pf}"
                 )
     return errs
+
+
+# -- workload-scenarios ------------------------------------------------------
+
+def parse_rust_scenarios(src, path="workload.rs"):
+    m = re.search(r"pub const SCENARIOS[^=]*=\s*&\[(.*?)\];", src, re.S)
+    if not m:
+        raise _Extract(f"{path}: could not find `pub const SCENARIOS`")
+    names = re.findall(r'"([\w-]+)"', m.group(1))
+    if not names:
+        raise _Extract(f"{path}: parsed zero scenario names from SCENARIOS")
+    return names
+
+
+def parse_python_scenarios(src, path="workload_gen.py"):
+    m = re.search(r"^SCENARIOS = \[(.*?)\]", src, re.S | re.M)
+    if not m:
+        raise _Extract(f"{path}: could not find `SCENARIOS = [ ... ]`")
+    names = re.findall(r'"([\w-]+)"', m.group(1))
+    if not names:
+        raise _Extract(f"{path}: parsed zero scenario names from SCENARIOS")
+    return names
 
 
 # -- metrics-keys ------------------------------------------------------------
@@ -375,12 +401,32 @@ def _metrics_keys(ctx):
     return check_metrics_keys(ctx.read)
 
 
+def _workload_scenarios(ctx):
+    workload = ctx.read("rust/src/workload.rs")
+    gen = ctx.read("tools/workload_gen.py")
+    if workload is None or gen is None:
+        return ["workload.rs or workload_gen.py missing"]
+    try:
+        rust = parse_rust_scenarios(workload)
+        py = parse_python_scenarios(gen)
+    except _Extract as e:
+        return [str(e)]
+    if rust != py:
+        return [
+            f"workload scenario catalog drifted — workload.rs has {rust}, "
+            f"workload_gen.py has {py} (names and order are the contract; "
+            "the generators must mirror draw-for-draw)"
+        ]
+    return []
+
+
 CONTRACTS = (
     Contract("chunk-ladder", _chunk_ladder),
     Contract("paged-geometry", _paged_geometry),
     Contract("trace-schema-version", _trace_schema_version),
     Contract("event-kinds", _event_kinds),
     Contract("metrics-keys", _metrics_keys),
+    Contract("workload-scenarios", _workload_scenarios),
 )
 
 

@@ -29,9 +29,18 @@ RULE = "trace-coverage"
 
 # (file, impl-type, fn, (required Event kinds...))
 REQUIRED = (
-    ("rust/src/serve.rs", "Server", "enqueue_adapter", ("Enqueue",)),
+    ("rust/src/serve.rs", "Server", "enqueue_slo", ("Enqueue",)),
     ("rust/src/serve.rs", "Server", "admit", ("Admit", "Requeue", "Reject")),
-    ("rust/src/serve.rs", "Server", "step", ("DecodeStep", "Finish", "Reject")),
+    # step's Preempt is the forced-admission pool-pressure requeue; the
+    # scheduler-initiated eviction lives in Server::preempt
+    (
+        "rust/src/serve.rs",
+        "Server",
+        "step",
+        ("DecodeStep", "Finish", "Reject", "Preempt", "DeadlineMiss"),
+    ),
+    ("rust/src/serve.rs", "Server", "preempt", ("Preempt",)),
+    ("rust/src/serve.rs", "Server", "cancel_expired", ("Cancel",)),
     ("rust/src/serve.rs", "Server", "sample_gauges", ("Gauge",)),
     ("rust/src/serve.rs", "SimEngine", "prefill_tick", ("PrefillWindow",)),
     ("rust/src/serve.rs", "SimEngine", "decode_step", ("VerifyRound",)),

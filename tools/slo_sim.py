@@ -1,0 +1,381 @@
+#!/usr/bin/env python3
+"""Python tick model of the SLO serving scheduler (stdlib only).
+
+An exact mirror of `rust/src/serve.rs::Server` over the instant-prefill
+`SimEngine` (one marker token per row per tick, finish at `max_new`):
+same admission pick rule, same fairness-cap skip, same one-victim-
+per-tick preemption (lowest class, youngest enqueue, lowest row on
+ties), same deadline cancellation and miss accounting, and the same
+pre-/post-increment tick stamping — so for any workload from
+`tools/workload_gen.py` the event stream, the TTFT/ITL tick vectors and
+every counter equal what the Rust scheduler produces, event for event.
+`python/tests/test_slo_sched.py` pins the same scenario numbers the
+`serve.rs` unit tests assert, pre-validating them without cargo.
+
+The emitted trace document has the `serve --trace` shape (`loramEvents`
++ `serverStats`), so `tools/trace_report.py --check` audits the model's
+streams under the full conservation-law suite — the `slo-sim` CI lane.
+
+Usage:
+    python3 tools/slo_sim.py SCENARIO [-n N] [--seed S] [--batch B]
+            [--slo] [--fair-rows K] [--out trace.json]
+    python3 tools/slo_sim.py --ab SCENARIO [-n N] [--seed S] [--batch B]
+        # runs FIFO vs SLO on the same stream; exit 1 unless SLO wins
+        # on goodput-under-SLO
+"""
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from workload_gen import PRIORITIES, SCENARIOS, generate  # noqa: E402
+
+TRACE_SCHEMA_VERSION = 1
+
+
+def percentile(xs, p):
+    """rank = (p/100)*(n-1) lerp — same as util::stats / trace_report."""
+    if not xs:
+        return 0.0
+    v = sorted(xs)
+    rank = (p / 100.0) * (len(v) - 1)
+    lo, hi = math.floor(rank), math.ceil(rank)
+    if lo == hi:
+        return float(v[lo])
+    return v[lo] + (rank - lo) * (v[hi] - v[lo])
+
+
+def _prio(name):
+    return PRIORITIES.index(name)
+
+
+class SimServer:
+    """Mirror of `Server<SimEngine>` with instant admissions: the
+    `prefill_begin` path always completes, `can_admit` is always true,
+    and decode emits one token per occupied row per tick in row order."""
+
+    def __init__(self, batch, slo=False, fair_rows=None):
+        self.batch = batch
+        self.rows = [None] * batch
+        self.queue = []
+        self.next_id = 0
+        self.ticks = 0
+        self.slo = slo
+        # mirror set_adapter_fair_cap's cap.max(1) clamp
+        self.fair_rows = None if fair_rows is None else max(fair_rows, 1)
+        self.trace_tick = 0
+        self.events = []
+        self.admitted = 0
+        self.served = 0
+        self.rejected = 0
+        self.preempted = 0
+        self.cancelled = 0
+        self.deadline_misses = 0
+        self.total_tokens = 0
+        self.ttft_ticks = []
+        self.itl_ticks = []
+        # req id -> (priority name, ttft ticks) for A/B reporting
+        self.req_ttft = {}
+
+    def emit(self, kind, **fields):
+        self.events.append(
+            {"kind": kind, "tick": self.trace_tick, "wall_ms": 0.0, **fields}
+        )
+
+    def pending(self):
+        return len(self.queue)
+
+    def in_flight(self):
+        return sum(1 for f in self.rows if f is not None)
+
+    def free_rows(self):
+        return sum(1 for f in self.rows if f is None)
+
+    def enqueue(self, req):
+        """`req` is a workload_gen request dict; returns the id.
+        Mirrors enqueue_slo: the absolute deadline is `ticks + rel`."""
+        rid = self.next_id
+        self.next_id += 1
+        rel = req.get("deadline_ticks")
+        self.queue.append({
+            "id": rid,
+            "max_new": max(req["max_new"], 1),  # SimRow budget clamp
+            "priority": req.get("priority", "normal"),
+            "deadline_tick": None if rel is None else self.ticks + rel,
+            "adapter_ix": req.get("adapter_ix"),
+            "enq_tick": self.ticks,
+            "ttft_done": False,
+        })
+        self.trace_tick = self.ticks
+        self.emit("Enqueue", req=rid)
+        return rid
+
+    def _pick_ix(self):
+        if not self.slo and self.fair_rows is None:
+            return 0 if self.queue else None
+        best = None  # (priority ordinal, index)
+        for ix, q in enumerate(self.queue):
+            if self.fair_rows is not None:
+                lane = sum(
+                    1 for f in self.rows
+                    if f is not None and f["adapter_ix"] == q["adapter_ix"]
+                )
+                if lane >= self.fair_rows:
+                    continue
+            if best is None or (self.slo and _prio(q["priority"]) > best[0]):
+                best = (_prio(q["priority"]), ix)
+        return None if best is None else best[1]
+
+    def _cancel_expired(self):
+        now = self.ticks
+        kept = []
+        for q in self.queue:
+            d = q["deadline_tick"]
+            if d is not None and d <= now:
+                self.emit("Cancel", req=q["id"])
+                self.cancelled += 1
+            else:
+                kept.append(q)
+        self.queue = kept
+
+    def _preempt(self, row):
+        f = self.rows[row]
+        self.rows[row] = None
+        self.emit("Preempt", req=f["id"], row=row, tokens=f["tokens"])
+        self.preempted += 1
+        # back to the queue front with the original clocks; the next life
+        # restarts its token count but never re-records TTFT
+        self.queue.insert(0, {
+            "id": f["id"],
+            "max_new": f["max_new"],
+            "priority": f["priority"],
+            "deadline_tick": f["deadline_tick"],
+            "adapter_ix": f["adapter_ix"],
+            "enq_tick": f["enq_tick"],
+            "ttft_done": f["ttft_done"],
+        })
+
+    def _admit(self):
+        if self.slo:
+            self._cancel_expired()
+        preempted_now = False
+        while True:
+            while self.free_rows() > 0:
+                ix = self._pick_ix()
+                if ix is None:
+                    break
+                q = self.queue.pop(ix)
+                row = self.rows.index(None)  # SimEngine: first free row
+                self.emit("Admit", req=q["id"], row=row)
+                self.rows[row] = {**q, "tokens": 0, "last": None}
+                self.admitted += 1
+            # preemption: rows full and a strictly higher class waiting —
+            # one victim per tick, retry the loop into the freed row
+            if not self.slo or preempted_now or self.free_rows() > 0:
+                break
+            if not self.queue:
+                break
+            want = max(_prio(q["priority"]) for q in self.queue)
+            cands = [
+                (_prio(f["priority"]), -f["enq_tick"], row)
+                for row, f in enumerate(self.rows)
+                if f is not None and _prio(f["priority"]) < want
+            ]
+            if not cands:
+                break
+            self._preempt(min(cands)[2])
+            preempted_now = True
+
+    def step(self):
+        """One scheduler tick; returns finished request dicts. The clock
+        only advances while anything is active (idle = no-op, exactly the
+        Rust early return before `ticks += 1`)."""
+        self.trace_tick = self.ticks
+        self._admit()
+        if self.in_flight() == 0:
+            return []
+        self.ticks += 1
+        self.trace_tick = self.ticks
+        now = self.ticks
+        # sample_gauges mirror: one queue-depth + in-flight pair per
+        # counted tick, before the decode events
+        self.emit("Gauge", name="queue_depth", value=float(len(self.queue)))
+        self.emit("Gauge", name="in_flight", value=float(self.in_flight()))
+        done_rows = []
+        for row, f in enumerate(self.rows):
+            if f is None:
+                continue
+            self.emit("DecodeStep", row=row)
+            self.total_tokens += 1
+            f["tokens"] += 1
+            if not f["ttft_done"]:
+                f["ttft_done"] = True
+                self.ttft_ticks.append(now - f["enq_tick"])
+                self.req_ttft[f["id"]] = (f["priority"], now - f["enq_tick"])
+            if f["last"] is not None:
+                self.itl_ticks.append(now - f["last"])
+            f["last"] = now
+            if f["tokens"] == f["max_new"]:
+                done_rows.append(row)
+        out = []
+        for row in done_rows:
+            f = self.rows[row]
+            self.rows[row] = None
+            self.emit("Finish", req=f["id"], row=row, tokens=f["tokens"])
+            d = f["deadline_tick"]
+            if d is not None and now > d:
+                self.emit("DeadlineMiss", req=f["id"])
+                self.deadline_misses += 1
+            self.served += 1
+            out.append({"id": f["id"], "tokens": f["tokens"]})
+        return out
+
+    def drain(self):
+        out = []
+        while self.pending() > 0 or self.in_flight() > 0:
+            out.extend(self.step())
+        return out
+
+    def goodput(self):
+        return (self.served - self.deadline_misses) / float(
+            max(self.served + self.cancelled, 1)
+        )
+
+    def server_stats(self):
+        """The `serverStats` block `serve --trace` embeds, recomputed
+        from the model — the keys trace_report.py --check consumes."""
+        return {
+            "ticks": self.ticks,
+            "served": self.served,
+            "rejected": self.rejected,
+            "total_tokens": self.total_tokens,
+            "preempted": self.preempted,
+            "cancelled": self.cancelled,
+            "deadline_misses": self.deadline_misses,
+            "goodput": self.goodput(),
+            "ttft_tick_p50": percentile(self.ttft_ticks, 50.0),
+            "ttft_tick_p95": percentile(self.ttft_ticks, 95.0),
+            "itl_tick_p50": percentile(self.itl_ticks, 50.0),
+            "itl_tick_p95": percentile(self.itl_ticks, 95.0),
+        }
+
+    def trace_doc(self):
+        return {
+            "displayTimeUnit": "ms",
+            "traceEvents": [],
+            "loramEvents": self.events,
+            "otherData": {
+                "clock": "tick",
+                "schema_version": TRACE_SCHEMA_VERSION,
+                "dropped": 0,
+            },
+            "serverStats": self.server_stats(),
+        }
+
+
+def run_workload(srv, reqs):
+    """Mirror of workload.rs::run — step to each arrival tick (idle gaps
+    collapse: the clock only advances while work exists), then drain."""
+    out = []
+    for r in reqs:
+        while srv.ticks < r["arrival_tick"] and (
+            srv.pending() > 0 or srv.in_flight() > 0
+        ):
+            out.extend(srv.step())
+        srv.enqueue(r)
+    out.extend(srv.drain())
+    return out
+
+
+def hi_ttft_p95(srv):
+    """High-priority TTFT p95 across the run, for the A/B report."""
+    xs = [t for (p, t) in srv.req_ttft.values() if p == "high"]
+    return percentile(xs, 95.0)
+
+
+def run_ab(scenario, n, seed, batch):
+    reqs = generate(scenario, n, seed)
+    fifo = SimServer(batch, slo=False)
+    run_workload(fifo, reqs)
+    slo = SimServer(batch, slo=True)
+    run_workload(slo, reqs)
+    return fifo, slo
+
+
+def main(argv):
+    argv = argv[1:]
+    if "--list" in argv:
+        for s in SCENARIOS:
+            print(s)
+        return 0
+    pos = [a for a in argv if not a.startswith("-")]
+    flags = [a for a in argv if a.startswith("-")]
+    scenario = pos[0] if pos else None
+    if scenario is None:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: slo_sim.py [--ab] SCENARIO [-n N] [--seed S] "
+              "[--batch B] [--slo] [--fair-rows K] [--out F]")
+        print(f"scenarios: {', '.join(SCENARIOS)}")
+        return 2
+
+    def opt(name, default):
+        if name in argv:
+            return int(argv[argv.index(name) + 1])
+        return default
+
+    n = opt("-n", 64)
+    seed = opt("--seed", 0)
+    batch = opt("--batch", 4)
+    try:
+        if "--ab" in flags:
+            fifo, slo = run_ab(scenario, n, seed, batch)
+            gf, gs = fifo.goodput(), slo.goodput()
+            print(
+                f"slo_sim A/B {scenario!r} n={n} seed={seed} batch={batch}:"
+            )
+            print(
+                f"  fifo: goodput {gf:.3f}  misses {fifo.deadline_misses}  "
+                f"cancelled {fifo.cancelled}  hi-ttft-p95 "
+                f"{hi_ttft_p95(fifo):g}"
+            )
+            print(
+                f"  slo : goodput {gs:.3f}  misses {slo.deadline_misses}  "
+                f"cancelled {slo.cancelled}  preempted {slo.preempted}  "
+                f"hi-ttft-p95 {hi_ttft_p95(slo):g}"
+            )
+            if gs <= gf:
+                print("slo_sim: FAIL — the SLO scheduler did not beat FIFO "
+                      "on goodput-under-SLO")
+                return 1
+            print("slo_sim: OK — SLO beats FIFO on goodput-under-SLO")
+            return 0
+        reqs = generate(scenario, n, seed)
+        srv = SimServer(
+            batch,
+            slo="--slo" in flags,
+            fair_rows=opt("--fair-rows", None) if "--fair-rows" in argv else None,
+        )
+        run_workload(srv, reqs)
+        doc = srv.trace_doc()
+        if "--out" in argv:
+            path = argv[argv.index("--out") + 1]
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(
+                f"slo_sim: {scenario!r} n={n} -> {path} "
+                f"({len(srv.events)} events, goodput {srv.goodput():.3f})"
+            )
+        else:
+            json.dump(doc, sys.stdout, indent=1)
+            print()
+        return 0
+    except ValueError as e:
+        print(f"slo_sim: {e}")
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

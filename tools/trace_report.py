@@ -15,6 +15,13 @@ conservation laws — the same laws `rust/src/obs/audit.rs` enforces inside
      end-of-trace residency is compared against the exported blocks_in_use
   5. copy-on-write: cow_copies must be 0 under serve (the share-only-
      full-blocks invariant, DESIGN.md Sec 2f)
+  6. preemption conservation (Sec 2i): Preempt.tokens equals the
+     DecodeStep count of the life it ends; the preempted row is freed;
+     total DecodeSteps == sum(Finish.tokens) + preempted_tokens
+  7. cancel is terminal and pre-admission: cancelling an in-flight or
+     finished request, or any Admit after Cancel, is a violation
+  8. admission ledger: admits == finishes + preempts + mid-flight
+     rejects, and DeadlineMiss only fires for requests that finish
 
 It then recomputes the TTFT/ITL tick percentiles from the raw events with
 the *identical* interpolation the Rust side uses (rank = (p/100)*(n-1),
@@ -53,6 +60,9 @@ KINDS = {
     "Rewind": ("row", "n"),
     "Evict": ("row",),
     "Finish": ("req", "row", "tokens"),
+    "Preempt": ("req", "row", "tokens"),
+    "Cancel": ("req",),
+    "DeadlineMiss": ("req",),
     "BlockAlloc": ("block",),
     "BlockFree": ("block",),
     "PrefixHit": ("blocks", "tokens"),
@@ -109,6 +119,10 @@ def audit(events):
         "rejected": 0,
         "requeues": 0,
         "tokens": 0,
+        "preempted": 0,
+        "preempted_tokens": 0,
+        "cancelled": 0,
+        "deadline_misses": 0,
         "cow_copies": 0,
         "prefix_hits": 0,
         "verify_rounds": 0,
@@ -119,12 +133,18 @@ def audit(events):
     lives = {}  # req -> life dict
     rows = {}  # engine row -> occupant req
     live_blocks = {}  # block -> alloc tick
+    rejected_inflight = 0  # admissions ended by a mid-flight Reject
 
     def life(req):
         return lives.setdefault(
             req,
             {
                 "enq": None,
+                # first admission tick — tick-order law anchor (TTFT may
+                # precede a later re-admission after preemption)
+                "first_admit": None,
+                # current-life admission tick; cleared by Preempt so a
+                # re-admit is legal while a double-admit still trips
                 "admit": None,
                 "first": None,
                 "last": None,
@@ -132,6 +152,8 @@ def audit(events):
                 "tokens": 0,
                 "finish_tokens": None,
                 "rejected": False,
+                "cancelled": False,
+                "deadline_miss": False,
             },
         )
 
@@ -162,15 +184,21 @@ def audit(events):
             l = life(req)
             if l["admit"] is not None:
                 bad(f"req {req}: admitted twice")
+            if l["cancelled"]:
+                bad(f"req {req}: admitted after cancel")
             if l["enq"] is None:
                 bad(f"req {req}: admitted, never enqueued")
             elif t < l["enq"]:
                 bad(f"req {req}: admit tick {t} < enqueue {l['enq']}")
+            if l["first_admit"] is None:
+                l["first_admit"] = t
             l["admit"] = t
         elif kind == "Reject":
             r["rejected"] += 1
             l = life(ev["req"])
             l["rejected"] = True
+            if l["admit"] is not None:
+                rejected_inflight += 1
             # mid-flight rejection frees the row
             for row, occ in list(rows.items()):
                 if occ == ev["req"]:
@@ -203,6 +231,47 @@ def audit(events):
             l = life(req)
             l["finish"] = t
             l["finish_tokens"] = ev["tokens"]
+        elif kind == "Preempt":
+            r["preempted"] += 1
+            req, row = ev["req"], ev["row"]
+            occ = rows.pop(row, None)
+            if occ is None:
+                bad(f"req {req}: preempt on unoccupied row {row}")
+            elif occ != req:
+                bad(f"row {row}: preempt req {req} but occupant is req {occ}")
+            l = life(req)
+            if l["admit"] is None:
+                bad(f"req {req}: preempted while not admitted")
+            if ev["tokens"] != l["tokens"]:
+                bad(
+                    f"req {req}: Preempt says {ev['tokens']} tokens but "
+                    f"life sampled {l['tokens']}"
+                )
+            # the discarded stream is conserved into preempted_tokens; the
+            # re-run life starts with a clean token/ITL slate (TTFT was
+            # recorded once, on the first-ever token)
+            r["preempted_tokens"] += l["tokens"]
+            l["tokens"] = 0
+            l["last"] = None
+            l["admit"] = None
+        elif kind == "Cancel":
+            r["cancelled"] += 1
+            l = life(ev["req"])
+            if l["enq"] is None:
+                bad(f"req {ev['req']}: cancelled, never enqueued")
+            if l["cancelled"]:
+                bad(f"req {ev['req']}: cancelled twice")
+            if l["admit"] is not None:
+                bad(f"req {ev['req']}: cancelled while in flight")
+            if l["finish"] is not None:
+                bad(f"req {ev['req']}: cancelled after finish")
+            l["cancelled"] = True
+        elif kind == "DeadlineMiss":
+            r["deadline_misses"] += 1
+            l = life(ev["req"])
+            if l["deadline_miss"]:
+                bad(f"req {ev['req']}: deadline missed twice")
+            l["deadline_miss"] = True
         elif kind == "BlockAlloc":
             if ev["block"] in live_blocks:
                 bad(f"block {ev['block']}: allocated while live")
@@ -226,10 +295,18 @@ def audit(events):
         # PrefillWindow / Rewind / Evict: informational, no law attaches
 
     for req, l in sorted(lives.items()):
+        if l["deadline_miss"] and l["finish"] is None:
+            bad(f"req {req}: deadline miss without a finish")
         if l["admit"] is None:
-            if not l["rejected"] and l["enq"] is not None:
+            if (
+                not l["rejected"]
+                and not l["cancelled"]
+                and l["enq"] is not None
+            ):
                 bad(f"req {req}: enqueued but never admitted or rejected")
             continue
+        if l["enq"] is None:
+            continue  # already flagged: admitted, never enqueued
         if l["rejected"]:
             continue
         if l["finish"] is None:
@@ -238,17 +315,29 @@ def audit(events):
         if l["first"] is None:
             bad(f"req {req}: finished without a first token")
             continue
-        enq = l["enq"] if l["enq"] is not None else l["admit"]
-        if not (enq <= l["admit"] <= l["first"] <= l["finish"]):
+        # tick order anchors on the *first* admission: TTFT is recorded
+        # once per request, and a preempted request's final admit tick may
+        # legitimately postdate its first-ever token
+        enq = l["enq"]
+        admit0 = l["first_admit"] if l["first_admit"] is not None else l["admit"]
+        if not (enq <= admit0 <= l["first"] <= l["finish"]):
             bad(
                 f"req {req}: tick order broken (enq {enq} <= admit "
-                f"{l['admit']} <= first {l['first']} <= finish {l['finish']})"
+                f"{admit0} <= first {l['first']} <= finish {l['finish']})"
             )
         if l["finish_tokens"] is not None and l["finish_tokens"] != l["tokens"]:
             bad(
                 f"req {req}: {l['tokens']} DecodeStep tokens but Finish "
                 f"says {l['finish_tokens']}"
             )
+    # admission ledger: every admission ends in exactly one of finish /
+    # preempt / mid-flight reject
+    if r["admitted"] != r["finished"] + r["preempted"] + rejected_inflight:
+        bad(
+            f"admission ledger broken: {r['admitted']} admits != "
+            f"{r['finished']} finishes + {r['preempted']} preempts + "
+            f"{rejected_inflight} mid-flight rejects"
+        )
     if rows:
         stuck = ", ".join(f"{row}:req {req}" for row, req in sorted(rows.items()))
         bad(f"rows still occupied at end of trace: {stuck}")
@@ -278,10 +367,24 @@ def check(report, stats, other):
         ("served", report["finished"]),
         ("rejected", report["rejected"]),
         ("total_tokens", report["tokens"]),
+        ("preempted", report["preempted"]),
+        ("cancelled", report["cancelled"]),
+        ("deadline_misses", report["deadline_misses"]),
     ]:
         want = stats.get(key)
         if want is not None and got != want:
             errs.append(f"{key}: trace replay says {got}, serverStats says {want}")
+    want = stats.get("goodput")
+    if want is not None:
+        # bit-for-bit mirror of ServerStats::goodput: (served -
+        # deadline_misses) / max(served + cancelled, 1), IEEE f64 division
+        got = (report["finished"] - report["deadline_misses"]) / float(
+            max(report["finished"] + report["cancelled"], 1)
+        )
+        if got != want:
+            errs.append(
+                f"goodput: recomputed {got!r} != exported {want!r}"
+            )
     for key, ticks in [("ttft", report["ttft_ticks"]), ("itl", report["itl_ticks"])]:
         for p in (50, 95):
             want = stats.get(f"{key}_tick_p{p}")
@@ -311,6 +414,12 @@ def summarize(report, stats, other, path):
         f"  requests: {report['enqueued']} enqueued, {report['admitted']} "
         f"admitted, {report['finished']} finished, {report['rejected']} "
         f"rejected ({report['requeues']} requeues)"
+    )
+    print(
+        f"  slo: {report['preempted']} preempted "
+        f"({report['preempted_tokens']} tokens discarded), "
+        f"{report['cancelled']} cancelled, {report['deadline_misses']} "
+        f"deadline misses"
     )
     print(
         f"  tokens: {report['tokens']} sampled; {report['verify_rounds']} "

@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Adversarial workload generator — bit-exact mirror of
+`rust/src/workload.rs` (stdlib only).
+
+Both sides build each scenario from the repo PCG64-DXSM generator using
+*integer draws only*, and the per-request draw order is documented in the
+Rust arms as part of the contract — so `generate(scenario, n, seed)` here
+reproduces the Rust request stream field-for-field. The loramlint
+contract-mirror pins `SCENARIOS` below against `workload.rs::SCENARIOS`;
+renaming a scenario on one side fails the lint, and the golden-stream
+test in `python/tests/test_slo_sched.py` pins the first few draws of
+every scenario against the values `rust/src/workload.rs` asserts in its
+own unit tests.
+
+Usage:
+    python3 tools/workload_gen.py SCENARIO [-n N] [--seed S] [--out F]
+    python3 tools/workload_gen.py --list
+"""
+
+import json
+import sys
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+
+# Scenario catalog — must equal rust/src/workload.rs::SCENARIOS (the
+# loramlint `workload-scenarios` contract pair).
+SCENARIOS = [
+    "steady",
+    "bursty-heavytail",
+    "adapter-skew",
+    "deadline-storm",
+    "rejection-storm",
+]
+
+# Priority names in Rust enum order (Low < Normal < High) — index is the
+# comparison key, mirroring `serve::Priority`'s derived Ord.
+PRIORITIES = ("low", "normal", "high")
+
+
+class Rng:
+    """PCG64-DXSM, bit-identical to rust/src/util/rng.rs::Rng (wrapping
+    u128/u64 arithmetic emulated with masks)."""
+
+    MUL = 0x2360ED051FC65DA44385DF649FCCF645
+
+    def __init__(self, seed):
+        self.state = 0
+        self.inc = (((seed & MASK64) << 1) | 1) & MASK128
+        self.next_u64()
+        self.state = (self.state + (0x9E3779B97F4A7C15 ^ (seed & MASK64))) & MASK128
+        self.next_u64()
+
+    def next_u64(self):
+        self.state = (self.state * self.MUL + self.inc) & MASK128
+        hi = (self.state >> 64) & MASK64
+        lo = (self.state & MASK64) | 1
+        hi ^= hi >> 32
+        hi = (hi * 0xDA942042E4DD58B5) & MASK64
+        hi ^= hi >> 48
+        return (hi * lo) & MASK64
+
+    def below(self, n):
+        """Uniform integer in [0, n) — Lemire's method on 64 bits."""
+        assert n > 0
+        return (self.next_u64() * n) >> 64
+
+
+def heavy_tail(rng, base, cap):
+    """Mirror of workload.rs::heavy_tail: uniform in [base, 2*base), then
+    doubled with probability 1/4 per round until cap. The `len < cap`
+    short-circuit means no coin is drawn once cap is reached."""
+    length = base + rng.below(base)
+    while length < cap and rng.below(4) == 0:
+        length *= 2
+    return min(length, cap)
+
+
+def generate(scenario, n, seed):
+    """Mirror of workload.rs::generate — same Rng stream, same draw order
+    per arm. Returns a list of request dicts; `priority` is one of
+    PRIORITIES, `deadline_ticks`/`adapter_ix` are None when absent."""
+    rng = Rng(seed)
+    out = []
+    tick = 0
+    for i in range(n):
+        if scenario == "steady":
+            req = {
+                "arrival_tick": i,
+                "prompt_len": 8 + rng.below(8),
+                "max_new": 4 + rng.below(4),
+                "priority": "normal",
+                "deadline_ticks": None,
+                "adapter_ix": None,
+            }
+        elif scenario == "bursty-heavytail":
+            if rng.below(4) == 0:
+                tick += 1 + rng.below(6)
+            prompt_len = heavy_tail(rng, 8, 512)
+            max_new = heavy_tail(rng, 4, 64)
+            cls = rng.below(10)
+            priority = "high" if cls < 2 else ("normal" if cls < 8 else "low")
+            deadline = 8 + rng.below(8) if priority == "high" else None
+            req = {
+                "arrival_tick": tick,
+                "prompt_len": prompt_len,
+                "max_new": max_new,
+                "priority": priority,
+                "deadline_ticks": deadline,
+                "adapter_ix": None,
+            }
+        elif scenario == "adapter-skew":
+            tick += 1 if rng.below(2) == 0 else 0
+            hot = rng.below(11) < 10
+            req = {
+                "arrival_tick": tick,
+                "prompt_len": 8 + rng.below(8),
+                "max_new": 2 + rng.below(6),
+                "priority": "normal",
+                "deadline_ticks": None,
+                "adapter_ix": 0 if hot else 1,
+            }
+        elif scenario == "deadline-storm":
+            if i > 0 and i % 8 == 0:
+                tick += 4
+            req = {
+                "arrival_tick": tick,
+                "prompt_len": 8 + rng.below(8),
+                "max_new": 2 + rng.below(4),
+                "priority": "normal",
+                "deadline_ticks": 1 + rng.below(6),
+                "adapter_ix": None,
+            }
+        elif scenario == "rejection-storm":
+            req = {
+                "arrival_tick": 0,
+                "prompt_len": heavy_tail(rng, 64, 2048),
+                "max_new": 1 + rng.below(4),
+                "priority": "normal",
+                "deadline_ticks": None,
+                "adapter_ix": None,
+            }
+        else:
+            raise ValueError(
+                f"unknown workload scenario {scenario!r} "
+                f"(expected one of {SCENARIOS})"
+            )
+        out.append(req)
+    return out
+
+
+def main(argv):
+    argv = argv[1:]
+    if "--list" in argv:
+        for s in SCENARIOS:
+            print(s)
+        return 0
+    pos = [a for a in argv if not a.startswith("-")]
+    scenario = pos[0] if pos else None
+    if scenario is None:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: workload_gen.py SCENARIO [-n N] [--seed S] [--out F]")
+        print(f"scenarios: {', '.join(SCENARIOS)}")
+        return 2
+
+    def opt(name, default):
+        if name in argv:
+            return int(argv[argv.index(name) + 1])
+        return default
+
+    n = opt("-n", 64)
+    seed = opt("--seed", 0)
+    try:
+        reqs = generate(scenario, n, seed)
+    except ValueError as e:
+        print(f"workload_gen: {e}")
+        return 2
+    doc = {"scenario": scenario, "n": n, "seed": seed, "requests": reqs}
+    if "--out" in argv:
+        path = argv[argv.index("--out") + 1]
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"workload_gen: wrote {n} {scenario!r} requests to {path}")
+    else:
+        json.dump(doc, sys.stdout, indent=1)
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
