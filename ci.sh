@@ -151,11 +151,31 @@ if [ "$HAVE_PY" = 1 ]; then
 else
     skip slo-sim "no python3"
 fi
+# ---- §2j chaos lane: the fault-storm A/B gate — retry+isolation must
+# resolve every request (nothing lost silently) and beat abort-on-error
+# on offered-load goodput, the same A/B the Rust bench publishes into
+# BENCH_serve.json — plus, for every scenario in the chaos catalog, a
+# faulted sim run whose trace passes the full conservation audit (retry
+# ledger, failure terminality, degradation bracketing). Pure stdlib.
+if [ "$HAVE_PY" = 1 ]; then
+    lane chaos-sim
+    run python3 tools/slo_sim.py --chaos-ab faults -n 24 --seed 9 --batch 4
+    CHAOS_OUT=$(mktemp -d /tmp/loram_chaos_XXXXXX)
+    for c in $(python3 tools/chaos_gen.py --list); do
+        run python3 tools/slo_sim.py faults -n 16 --seed 3 --chaos "$c" \
+            --retry-budget 2 --out "$CHAOS_OUT/$c.json"
+        run python3 tools/trace_report.py --check "$CHAOS_OUT/$c.json"
+    done
+    rm -rf "$CHAOS_OUT"
+    pass "fault-storm A/B gate + per-scenario chaos conservation audit"
+else
+    skip chaos-sim "no python3"
+fi
 # the auditor's own unit tests are stdlib-only — run them even when the
 # jax-gated pytest lane below is skipped
 if [ "$HAVE_PYTEST" = 1 ]; then
     lane pytest-stdlib
-    (cd python && run python3 -m pytest -q tests/test_trace_report.py tests/test_loramlint.py tests/test_slo_sched.py)
+    (cd python && run python3 -m pytest -q tests/test_trace_report.py tests/test_loramlint.py tests/test_slo_sched.py tests/test_chaos_sched.py)
     pass
 else
     skip pytest-stdlib "no pytest"

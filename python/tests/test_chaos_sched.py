@@ -1,0 +1,288 @@
+"""Chaos scheduler tick-model tests (stdlib only — no jax, no cargo).
+
+Three layers, mirroring DESIGN.md Sec 2j:
+
+1. `tools/chaos_gen.py` golden pins — the fault plans at (ticks=32,
+   seed=9), the exact values `rust/src/chaos.rs` asserts in its unit
+   tests, so the injected fault streams are bit-identical cross-language
+   (same draw-for-draw contract as workload_gen vs workload.rs).
+2. `tools/slo_sim.py` chaos pre-validation — the same fault scenarios
+   the `serve.rs` ChaosEngine tests assert (row-fault isolation, retry
+   budget exhaustion, byte-identical no-fault serving, device loss,
+   degrade/recover, escalation-to-failing, the fault-storm A/B),
+   checked against the Python tick model with the same expected numbers.
+3. Conservation — every chaotic stream must pass the full
+   `tools/trace_report.py` law suite (retry ledger, failure terminality,
+   degradation bracketing included), --check and all, bit-for-bit.
+"""
+
+import json
+import importlib.util
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "tools"))
+
+
+def _load(name, rel):
+    spec = importlib.util.spec_from_file_location(name, REPO / rel)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+wg = _load("workload_gen", "tools/workload_gen.py")
+cg = _load("chaos_gen", "tools/chaos_gen.py")
+sim = _load("slo_sim", "tools/slo_sim.py")
+tr = _load("trace_report", "tools/trace_report.py")
+
+
+def req(max_new, priority="normal", deadline=None):
+    return {
+        "arrival_tick": 0,
+        "prompt_len": 1,
+        "max_new": max_new,
+        "priority": priority,
+        "deadline_ticks": deadline,
+        "adapter_ix": None,
+    }
+
+
+def planned(tick, kind_ix, row):
+    return {"tick": tick, "kind_ix": kind_ix, "row": row}
+
+
+def audit_ok(srv):
+    """Full conservation suite over the model's stream: law replay plus
+    the bit-for-bit --check against the embedded serverStats."""
+    report = tr.audit(srv.events)
+    assert report["violations"] == [], report["violations"]
+    doc = srv.trace_doc()
+    errs = tr.check(report, doc["serverStats"], doc["otherData"])
+    assert errs == [], errs
+    return report
+
+
+# ----------------------------------------------- fault-plan golden pins
+
+
+def test_fault_plans_match_the_rust_goldens():
+    # pinned on the Rust side by
+    # chaos.rs::plans_match_the_python_mirror_goldens (ticks=32, seed=9)
+    def gold(s):
+        plan = cg.generate(s, 32, 9)
+        return len(plan), [(f["tick"], f["kind_ix"], f["row"]) for f in plan]
+
+    n, first = gold("fault-storm")
+    assert n == 14
+    assert first[:4] == [(0, 0, 6), (2, 0, 2), (3, 2, 5), (4, 0, 5)]
+    n, first = gold("decode-flaky")
+    assert n == 9
+    assert first[:4] == [(0, 0, 0), (3, 0, 1), (5, 0, 4), (8, 0, 5)]
+    n, first = gold("admit-flaky")
+    assert n == 12
+    assert first[:4] == [(0, 1, 0), (1, 1, 0), (4, 1, 0), (5, 1, 0)]
+    n, first = gold("pool-squeeze")
+    assert n == 12
+    assert first[:4] == [(0, 2, 0), (1, 2, 0), (4, 2, 0), (5, 2, 0)]
+    assert gold("stuck-stall")[1] == [(1, 3, 0), (7, 3, 0), (17, 3, 0),
+                                      (27, 3, 0)]
+    assert gold("device-loss")[1] == [(5, 4, 0)]
+
+
+def test_fault_plans_are_deterministic_tick_sorted_and_in_range():
+    # mirror of chaos.rs::plans_are_deterministic_and_well_formed
+    for s in cg.CHAOS_SCENARIOS:
+        a = cg.generate(s, 64, 9)
+        assert a == cg.generate(s, 64, 9), s
+        last = -1
+        for f in a:
+            assert f["tick"] > last, f"{s}: plan must be tick-sorted, unique"
+            last = f["tick"]
+            assert 0 <= f["tick"] < 64
+            assert 0 <= f["kind_ix"] < len(cg.FAULT_KINDS)
+            assert 0 <= f["row"] < 8
+    storm = cg.generate("fault-storm", 64, 9)
+    assert all(f["kind_ix"] != 4 for f in storm), "storms must be survivable"
+
+
+def test_unknown_chaos_scenario_raises_with_the_catalog():
+    try:
+        cg.generate("nope", 8, 0)
+    except ValueError as e:
+        assert "fault-storm" in str(e)
+    else:
+        raise AssertionError("unknown chaos scenario must raise")
+
+
+def test_faults_workload_stream_matches_the_rust_goldens():
+    # pinned on the Rust side by
+    # workload.rs::generated_streams_match_the_python_mirror_goldens
+    gold = [
+        (r["arrival_tick"], r["prompt_len"], r["max_new"], r["priority"],
+         r["deadline_ticks"], r["adapter_ix"])
+        for r in wg.generate("faults", 4, 9)
+    ]
+    assert gold == [
+        (1, 15, 8, "normal", None, None),
+        (3, 6, 6, "normal", None, None),
+        (4, 14, 6, "normal", None, None),
+        (4, 14, 3, "normal", None, None),
+    ]
+    # mirror of workload.rs::faults_scenario_has_a_deadline_slice…
+    rs = wg.generate("faults", 64, 9)
+    hi = [r for r in rs if r["priority"] == "high"]
+    assert len(hi) == 6 and all(r["deadline_ticks"] is not None for r in hi)
+    assert not any(r["priority"] == "low" for r in rs)
+    assert rs[-1]["arrival_tick"] == 66, "arrivals must be paced, not a wall"
+
+
+# ---------------------------------------- chaos scenario pre-checks (§2j)
+
+
+def test_row_fault_is_retried_and_isolated_from_the_batch():
+    # mirror of serve.rs::row_fault_is_retried_and_isolated_from_the_batch:
+    # one transient fault on row 0; the other row never notices, the
+    # victim re-runs to completion, nothing is lost
+    srv = sim.SimServer(2, chaos=[planned(1, 0, 0)], retry_budget=2)
+    a = srv.enqueue(req(4))
+    b = srv.enqueue(req(4))
+    done = srv.drain()
+    assert {d["id"] for d in done} == {a, b}
+    assert all(d["tokens"] == 4 for d in done if not d.get("failed"))
+    assert (srv.retries, srv.preempted, srv.failed) == (1, 1, 0)
+    assert srv.injected == 1 and srv.health == "healthy"
+    rep = audit_ok(srv)
+    assert (rep["faults"], rep["retries"], rep["failed"]) == (1, 1, 0)
+    assert rep["preempted_tokens"] == 1
+
+
+def test_retry_budget_exhaustion_fails_terminally_with_first_class_outcome():
+    # mirror of serve.rs::retry_budget_exhaustion_fails_terminally…: two
+    # faults against a budget of one — the second is terminal, the
+    # failure is a first-class outcome, and goodput counts it
+    srv = sim.SimServer(1, chaos=[planned(1, 0, 0), planned(4, 0, 0)],
+                        retry_budget=1)
+    rid = srv.enqueue(req(4))
+    done = srv.drain()
+    assert [d["id"] for d in done] == [rid]
+    assert done[0]["failed"] and done[0]["tokens"] == 0
+    assert (srv.retries, srv.failed, srv.served) == (1, 1, 0)
+    assert srv.goodput() == 0.0
+    rep = audit_ok(srv)
+    assert (rep["faults"], rep["retries"], rep["failed"]) == (2, 1, 1)
+    assert rep["preempted_tokens"] == 1 and rep["failed_tokens"] == 1
+
+
+def test_chaos_off_retry_policy_is_byte_identical_to_plain_serving():
+    # mirror of serve.rs::chaos_off_retry_policy_is_byte_identical…: an
+    # empty fault plan plus an armed retry policy must not perturb a
+    # single event — the machinery is strictly opt-in
+    def drive(srv):
+        for i in range(6):
+            srv.enqueue(req(2 + i % 3, "high" if i % 3 == 0 else "normal"))
+            srv.step()
+        return srv.drain()
+
+    plain = sim.SimServer(2, slo=True)
+    chaotic = sim.SimServer(2, slo=True, chaos=[], retry_budget=3,
+                            backoff_base=2)
+    assert drive(plain) == drive(chaotic)
+    assert plain.events == chaotic.events
+    assert chaotic.injected == 0 and chaotic.retries == 0
+    assert plain.server_stats() == chaotic.server_stats()
+
+
+def test_device_loss_fails_everything_loudly_and_terminally():
+    # mirror of serve.rs::device_loss_fails_everything_loudly…: loss
+    # drains every survivor as Failed, and late arrivals fail too
+    srv = sim.SimServer(2, chaos=[planned(2, 4, 0)], retry_budget=2)
+    ids = [srv.enqueue(req(8)) for _ in range(3)]
+    done = srv.drain()
+    assert [d["id"] for d in done if d.get("failed")] and len(done) == 3
+    assert {d["id"] for d in done} == set(ids)
+    assert all(d.get("failed") for d in done)
+    assert srv.health == "failing" and srv.failed == 3
+    late = srv.enqueue(req(2))
+    out = srv.step()
+    assert [d["id"] for d in out] == [late] and out[0]["failed"]
+    rep = audit_ok(srv)
+    assert rep["failed"] == 4 and rep["degrades"] == 1
+
+
+def test_stuck_tick_degrades_and_clean_ticks_recover():
+    # mirror of serve.rs::stuck_tick_degrades_and_clean_ticks_recover: an
+    # engine-domain fault opens a degraded bracket; three clean decode
+    # ticks close it with Recover and serving never stops
+    srv = sim.SimServer(2, chaos=[planned(1, 3, 0)], retry_budget=2)
+    srv.enqueue(req(5))
+    srv.enqueue(req(5))
+    done = srv.drain()
+    assert len(done) == 2 and not any(d.get("failed") for d in done)
+    assert srv.health == "healthy" and srv.degraded_ticks == 3
+    rep = audit_ok(srv)
+    assert rep["degrades"] == 1
+    brackets = [e["kind"] for e in srv.events
+                if e["kind"] in ("Degrade", "Recover")]
+    assert brackets == ["Degrade", "Recover"]
+
+
+def test_three_consecutive_engine_faults_escalate_to_failing():
+    # mirror of serve.rs::three_consecutive_engine_faults_escalate…
+    plan = [planned(1, 3, 0), planned(2, 3, 0), planned(3, 3, 0)]
+    srv = sim.SimServer(1, chaos=plan, retry_budget=2)
+    rid = srv.enqueue(req(8))
+    done = srv.drain()
+    assert [d["id"] for d in done] == [rid] and done[0]["failed"]
+    assert srv.health == "failing" and srv.failed == 1
+    rep = audit_ok(srv)
+    assert rep["degrades"] == 2  # degraded, then the failing escalation
+
+
+def test_fault_storm_with_retry_isolation_loses_nothing_silently():
+    # the BENCH_serve fault-storm headline, pre-validated in the model:
+    # every offered request resolves as served/failed/cancelled/rejected
+    retry, abort, err = sim.run_chaos_ab("faults", 24, 9, 4,
+                                         "fault-storm", 64)
+    assert err is not None, "abort-on-error must die in the storm"
+    assert retry.injected > 0 and retry.served > 0
+    resolved = retry.served + retry.failed + retry.cancelled + retry.rejected
+    assert resolved == 24, "no request may vanish silently"
+    assert sim.goodput_offered(retry, 24) > sim.goodput_offered(abort, 24)
+    rep = audit_ok(retry)
+    assert rep["retries"] == retry.retries
+    assert rep["failed"] == retry.failed
+
+
+def test_every_chaos_scenario_stream_passes_conservation():
+    # widened mirror of serve.rs's per-scenario chaos tests: every fault
+    # plan, replayed over the faults workload, must satisfy the whole law
+    # suite — retry ledger, terminality and bracketing included
+    reqs = wg.generate("faults", 16, 3)
+    for scn in cg.CHAOS_SCENARIOS:
+        srv = sim.SimServer(4, chaos=cg.generate(scn, 64, 3),
+                            retry_budget=2)
+        done = sim.run_workload(srv, reqs)
+        rep = audit_ok(srv)
+        resolved = srv.served + srv.failed + srv.cancelled + srv.rejected
+        assert resolved == 16, f"{scn}: lost a request silently"
+        assert len(done) + srv.cancelled + srv.rejected == 16, scn
+        assert rep["faults"] >= rep["retries"], scn
+
+
+def test_chaos_ab_cli_gate_exits_zero_on_the_headline_scenario(capsys):
+    rc = sim.main(["slo_sim.py", "--chaos-ab", "faults", "-n", "24",
+                   "--seed", "9", "--batch", "4"])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "retry+isolation beats abort-on-error" in out
+
+
+def test_chaotic_trace_doc_roundtrips_through_trace_report_check(tmp_path):
+    srv = sim.SimServer(4, chaos=cg.generate("fault-storm", 64, 9),
+                        retry_budget=2)
+    sim.run_workload(srv, wg.generate("faults", 24, 9))
+    path = tmp_path / "chaos.json"
+    path.write_text(json.dumps(srv.trace_doc()))
+    assert tr.main(["trace_report.py", "--check", str(path)]) == 0

@@ -378,6 +378,46 @@ def test_workload_scenarios_contract_drift_and_clean():
     assert len(out) == 1 and "catalog drifted" in out[0].msg
 
 
+def test_chaos_contract_pairs_drift_and_clean():
+    chaos = (
+        'pub const FAULT_KINDS: &[&str] = &["decode-transient", "admit-fail"];\n'
+        'pub const CHAOS_SCENARIOS: &[&str] = &["fault-storm", "device-loss"];\n'
+    )
+    gen = (
+        'FAULT_KINDS = [\n    "decode-transient",\n    "admit-fail",\n]\n'
+        'CHAOS_SCENARIOS = [\n    "fault-storm",\n    "device-loss",\n]\n'
+    )
+
+    def mkctx(c, g, name):
+        return ctx_for({}, {"contracts": [
+            x for x in contract_mirror.CONTRACTS if x.name == name]},
+            texts={"rust/src/chaos.rs": c, "tools/chaos_gen.py": g})
+
+    for name in ("chaos-scenarios", "fault-kinds"):
+        assert contract_mirror.run(mkctx(chaos, gen, name)) == []
+    drift = gen.replace('"device-loss"', '"device-gone"')
+    out = contract_mirror.run(mkctx(chaos, drift, "chaos-scenarios"))
+    assert len(out) == 1 and "catalog drifted" in out[0].msg
+    # kind order is load-bearing: a plan's kind_ix indexes the table on
+    # both sides, so a reorder silently re-aims every scheduled fault
+    swap = gen.replace(
+        '"decode-transient",\n    "admit-fail"',
+        '"admit-fail",\n    "decode-transient"')
+    out = contract_mirror.run(mkctx(chaos, swap, "fault-kinds"))
+    assert len(out) == 1 and "taxonomy drifted" in out[0].msg
+
+
+def test_trace_coverage_required_table_covers_chaos_lifecycle():
+    # §2j events must stay pinned to their emission sites, like §2i's
+    required = {
+        (impl, fn): kinds for _, impl, fn, kinds in trace_coverage.REQUIRED
+    }
+    assert {"Fault", "Retry", "Failed"} <= set(required[("Server", "fault_row")])
+    assert {"Degrade", "Recover"} <= set(required[("Server", "set_health")])
+    assert "Failed" in required[("Server", "fail_everything")]
+    assert "Failed" in required[("Server", "fail_queue")]
+
+
 def test_trace_coverage_required_table_covers_slo_lifecycle():
     # the §2i events must stay pinned to their emission sites: dropping
     # one from REQUIRED would let a refactor silently un-trace it

@@ -208,6 +208,151 @@ def test_unknown_kind_and_missing_fields_are_violations():
     assert any("missing fields ['row']" in v for v in r["violations"])
 
 
+# ------------------------------------------------- chaos laws (Sec 2j)
+
+
+def retried_lifecycle():
+    """One request that faults once mid-decode, is preempted/retried, and
+    finishes on its second life — the clean shape for laws 9-11. Same
+    shape as audit.rs's retried lifecycle test."""
+    return [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("DecodeStep", 2, row=0),
+        ev("Fault", 3, req=0, row=0, fault="decode-transient"),
+        ev("Preempt", 3, req=0, row=0, tokens=1),
+        ev("Retry", 3, req=0, attempt=1),
+        ev("Admit", 5, req=0, row=0),
+        ev("DecodeStep", 6, row=0),
+        ev("DecodeStep", 7, row=0),
+        ev("Finish", 7, req=0, row=0, tokens=2),
+    ]
+
+
+def test_retried_lifecycle_passes_and_counts_the_retry_ledger():
+    r = tr.audit(retried_lifecycle())
+    assert r["violations"] == []
+    assert (r["faults"], r["retries"], r["failed"]) == (1, 1, 0)
+    # the faulted life's token is conserved like any preemption
+    assert r["preempted_tokens"] == 1
+
+
+def test_retry_without_a_pending_fault_is_caught():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("Retry", 2, req=0, attempt=1),  # no Fault preceded it
+    ]
+    r = tr.audit(events)
+    assert any("retry without a pending fault" in v for v in r["violations"])
+
+
+def test_retry_attempt_number_lie_is_caught():
+    events = retried_lifecycle()
+    events[5] = ev("Retry", 3, req=0, attempt=7)
+    r = tr.audit(events)
+    assert any("Retry says attempt 7 but this is retry 1" in v
+               for v in r["violations"])
+
+
+def test_fault_placement_violations_are_caught():
+    text = "\n".join(tr.audit([
+        ev("Fault", 0, req=5, row=0, fault="decode-transient"),
+        ev("Enqueue", 1, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("Fault", 2, req=0, row=3, fault="decode-transient"),
+    ])["violations"])
+    assert "req 5: fault while not admitted" in text
+    assert "req 0: fault on row 3 it does not occupy" in text
+
+
+def test_failed_token_and_attempt_lies_are_caught():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("DecodeStep", 2, row=0),
+        ev("Fault", 3, req=0, row=0, fault="decode-transient"),
+        ev("Failed", 3, req=0, tokens=9, attempts=2),  # sampled 1, 1 fault
+    ]
+    text = "\n".join(tr.audit(events)["violations"])
+    assert "Failed says 9 tokens but life sampled 1" in text
+    assert "Failed says 2 attempts but life took 1 faults" in text
+
+
+def test_terminal_failure_conserves_tokens_and_balances_the_ledger():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("DecodeStep", 2, row=0),
+        ev("Fault", 3, req=0, row=0, fault="decode-transient"),
+        ev("Failed", 3, req=0, tokens=1, attempts=1),
+        ev("Evict", 3, row=0),
+    ]
+    r = tr.audit(events)
+    assert r["violations"] == []
+    assert (r["faults"], r["retries"], r["failed"]) == (1, 0, 1)
+    assert r["failed_tokens"] == 1
+
+
+def test_dangling_fault_at_end_of_trace_is_caught():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("Fault", 2, req=0, row=0, fault="decode-transient"),
+        ev("Preempt", 2, req=0, row=0, tokens=0),
+    ]
+    r = tr.audit(events)
+    assert any("retry ledger broken at end of trace" in v
+               for v in r["violations"])
+
+
+def test_failure_is_terminal():
+    events = [
+        ev("Enqueue", 0, req=0),
+        ev("Admit", 1, req=0, row=0),
+        ev("Fault", 2, req=0, row=0, fault="decode-transient"),
+        ev("Failed", 2, req=0, tokens=0, attempts=1),
+        ev("Enqueue", 3, req=0),  # nothing may name req 0 again
+    ]
+    r = tr.audit(events)
+    assert any("Enqueue after Failed (failure is terminal)" in v
+               for v in r["violations"])
+
+
+def test_degradation_brackets_cleanly_and_violations_fire():
+    clean = tr.audit([ev("Degrade", 1, level="degraded"), ev("Recover", 4)])
+    assert clean["violations"] == []
+    assert clean["degrades"] == 1
+
+    # escalation to failing is a legal close for a degraded bracket
+    escalate = tr.audit([
+        ev("Degrade", 1, level="degraded"),
+        ev("Degrade", 3, level="failing"),
+    ])
+    assert escalate["violations"] == []
+
+    text = "\n".join(tr.audit([
+        ev("Recover", 0),
+        ev("Degrade", 1, level="degraded"),
+        ev("Degrade", 2, level="degraded"),
+    ])["violations"])
+    assert "recover while healthy" in text
+    assert "degrade to degraded while degraded" in text
+    assert "degradation never closed: trace ends degraded, not failing" in text
+
+    text = "\n".join(tr.audit([
+        ev("Degrade", 0, level="failing"),
+        ev("Recover", 1),
+        ev("Degrade", 2, level="failing"),
+    ])["violations"])
+    assert "recover from failing (failing is terminal)" in text
+    assert "degrade to failing while already failing" in text
+
+    weird = tr.audit([ev("Degrade", 0, level="borked")])
+    assert any("unknown degrade level 'borked'" in v
+               for v in weird["violations"])
+
+
 # ------------------------------------------------------------ percentile
 
 
@@ -351,9 +496,9 @@ def test_event_schema_is_in_sync_between_rust_and_python():
     assert sync.main(["event_sync_check.py", str(REPO)]) == 0
 
 
-def test_schema_parsers_see_all_nineteen_kinds_with_fields():
+def test_schema_parsers_see_all_twenty_four_kinds_with_fields():
     variants = sync.parse_rust_enum(str(REPO / "rust/src/obs/trace.rs"))
-    assert len(variants) == 19
+    assert len(variants) == 24
     assert [n for n, _ in variants] == list(tr.KINDS)
     by_name = dict(variants)
     assert by_name["Finish"] == ["req", "row", "tokens"]
@@ -361,3 +506,8 @@ def test_schema_parsers_see_all_nineteen_kinds_with_fields():
     assert by_name["Cancel"] == ["req"]
     assert by_name["DeadlineMiss"] == ["req"]
     assert by_name["SessionRun"] == ["artifact", "h2d_ms", "exec_ms", "d2h_ms"]
+    assert by_name["Fault"] == ["req", "row", "fault"]
+    assert by_name["Retry"] == ["req", "attempt"]
+    assert by_name["Failed"] == ["req", "tokens", "attempts"]
+    assert by_name["Degrade"] == ["level"]
+    assert by_name["Recover"] == []

@@ -14,6 +14,7 @@
 //! Requires `make artifacts` (tiny suite) for the runtime benches.
 
 use loram::bench::{bench, bench_throughput};
+use loram::chaos::ChaosEngine;
 use loram::coordinator::adapters::AdapterId;
 use loram::coordinator::evaluate::{test_sequences, Evaluator};
 use loram::coordinator::generate::{DecodePath, Generator, SampleCfg};
@@ -153,6 +154,29 @@ fn serve_slo_workload(slo: bool, n: usize, seed: u64) -> anyhow::Result<ServerSt
     Ok(srv.stats)
 }
 
+/// The fault-storm A/B (DESIGN.md §2j): the identical deterministic
+/// storm (`ChaosEngine`, scenario "fault-storm") over the `faults`
+/// workload stream, replayed under bounded retry + failure-domain
+/// isolation vs the pre-§2j abort-on-error contract. The retry row must
+/// resolve every request — served / failed / rejected, nothing lost
+/// silently — and carries the failed/retries/degraded_ticks columns;
+/// the abort row's drain error is the measurement (partial stats, zero
+/// graceful failures).
+fn serve_chaos_workload(retry: bool, n: usize, seed: u64) -> anyhow::Result<ServerStats> {
+    let chaos = ChaosEngine::new(SimEngine::new(4), "fault-storm", 64, seed)?;
+    let mut srv = Server::new(chaos, 7);
+    if retry {
+        srv.set_retry_policy(Some(2), 1);
+    }
+    let reqs = loram::workload::generate("faults", n, seed)?;
+    if let Err(e) = loram::workload::run(&mut srv, &reqs) {
+        // the abort arm dies at the first unabsorbed fault — expected;
+        // the retry arm surviving the storm is an acceptance criterion
+        anyhow::ensure!(!retry, "retry+isolation arm must survive the storm: {e}");
+    }
+    Ok(srv.stats)
+}
+
 /// One serving measurement: which decode path it exercised (`reforward` /
 /// `kvcache` / `speculative`) and through which engine (`pjrt`, or `sim`
 /// when the scheduler ran without artifacts).
@@ -234,6 +258,10 @@ fn emit_bench_serve(entries: &[ServeEntry], run_wall_s: f64) -> anyhow::Result<(
                 ("cancelled", c("serve.cancelled")),
                 ("deadline_misses", c("serve.deadline_misses")),
                 ("goodput", g("serve.goodput")),
+                // §2j fault columns: zero everywhere but the chaos rows
+                ("failed", c("serve.failed")),
+                ("retries", c("serve.retries")),
+                ("degraded_ticks", c("serve.degraded_ticks")),
             ];
             // §2f block-pool counters, present only on the paged path
             if m.has_gauge("paged.prefix_hit_rate") {
@@ -408,6 +436,14 @@ fn main() -> anyhow::Result<()> {
         // preempted/cancelled/deadline_misses accounting
         for (path, slo) in [("slo-fifo", false), ("slo-sched", true)] {
             let st = serve_slo_workload(slo, 48, 9)?;
+            entries.push(ServeEntry { path, engine: "sim", requests: 48, spec_cfg: None, stats: st });
+        }
+        // the fault-storm A/B (§2j): the same deterministic storm,
+        // abort-on-error (the drain dies at the first fault — partial
+        // stats, zero graceful failures) vs bounded retry + isolation
+        // (every request resolves; failed/retries/degraded_ticks filled)
+        for (path, retry) in [("chaos-abort", false), ("chaos-retry", true)] {
+            let st = serve_chaos_workload(retry, 48, 9)?;
             entries.push(ServeEntry { path, engine: "sim", requests: 48, spec_cfg: None, stats: st });
         }
         emit_bench_serve(&entries, t_run.elapsed().as_secs_f64())?;

@@ -1,0 +1,476 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md §2j).
+//!
+//! [`ChaosEngine`] wraps any [`DecodeEngine`] and injects faults from a
+//! *pregenerated plan* — a pure function of `(scenario, ticks, seed)`
+//! over the repo PCG64-DXSM [`Rng`] using integer draws only, exactly
+//! like `workload::generate`. Mirroring the plan rather than the live
+//! engine keeps the cross-language contract small: `tools/chaos_gen.py`
+//! reproduces every schedule bit-for-bit, the golden-plan test below
+//! pins the first draws of every scenario on both sides, and the
+//! loramlint contract-mirror pins [`FAULT_KINDS`] and
+//! [`CHAOS_SCENARIOS`] (names AND order) against the Python consts.
+//!
+//! The scheduler drives the plan through the [`DecodeEngine::begin_tick`]
+//! hook: each tick, the wrapper arms at most one planned fault and fires
+//! it at the matching surface —
+//!
+//! * `decode-transient` — `decode_step` errors once, classified
+//!   [`FaultDomain::Row`]; the scheduler retries just that request
+//! * `admit-fail` — the next `prefill_begin` this tick errors (the
+//!   existing admission-rejection isolation absorbs it)
+//! * `pool-exhaust` — `can_admit` refuses once (the request stays queued)
+//! * `stuck-tick` — `decode_step` errors, classified
+//!   [`FaultDomain::Engine`] (drives the health state machine)
+//! * `device-lost` — latched permanently; every subsequent call fails,
+//!   classified [`FaultDomain::Lost`] (drives `Failing`)
+//!
+//! A fault aimed at a tick the scheduler never decodes on, or at an
+//! unoccupied row, is a harmless miss by design — the plan stays pure.
+
+// Same hot-path policy as serve.rs (loramlint panic-surface mirror).
+#![cfg_attr(
+    not(test),
+    deny(clippy::unwrap_used, clippy::expect_used, clippy::panic, clippy::unreachable)
+)]
+#![cfg_attr(not(test), warn(clippy::indexing_slicing))]
+
+use crate::coordinator::adapters::AdapterId;
+use crate::coordinator::generate::{PrefillTickOut, SampleCfg, StepOut};
+use crate::coordinator::kvcache::{PagedStats, PrefillStats};
+use crate::coordinator::speculative::SpecStats;
+use crate::serve::{DecodeEngine, FaultDomain, FaultInfo};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+
+/// Fault taxonomy — mirrored verbatim by `tools/chaos_gen.py` (the
+/// loramlint `fault-kinds` contract pair). A plan entry's `kind_ix`
+/// indexes this table.
+pub const FAULT_KINDS: &[&str] = &[
+    "decode-transient",
+    "admit-fail",
+    "pool-exhaust",
+    "stuck-tick",
+    "device-lost",
+];
+
+/// Scenario catalog — mirrored verbatim by `tools/chaos_gen.py` (the
+/// loramlint `chaos-scenarios` contract pair).
+pub const CHAOS_SCENARIOS: &[&str] = &[
+    "fault-storm",
+    "decode-flaky",
+    "admit-flaky",
+    "pool-squeeze",
+    "stuck-stall",
+    "device-loss",
+];
+
+/// One scheduled fault: the scheduler tick it arms on (pre-increment
+/// clock, the value [`DecodeEngine::begin_tick`] receives), the
+/// [`FAULT_KINDS`] index, and the target row for row-scoped kinds.
+/// Rows are drawn in `[0, 8)` regardless of the wrapped engine's batch
+/// size — an out-of-range or unoccupied target is a harmless miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedFault {
+    pub tick: usize,
+    pub kind_ix: usize,
+    pub row: usize,
+}
+
+/// Generate the named scenario's fault schedule. Pure in
+/// `(scenario, ticks, seed)`; entries are tick-ascending. Draw order per
+/// arm is part of the cross-language contract (documented again in
+/// `tools/chaos_gen.py`). Unknown names error listing the catalog.
+pub fn generate(scenario: &str, ticks: usize, seed: u64) -> Result<Vec<PlannedFault>> {
+    ensure!(ticks >= 1, "chaos plan needs ticks >= 1");
+    let mut rng = Rng::new(seed);
+    let mut plan = vec![];
+    match scenario {
+        // the A/B headline: ~1/3 of ticks fault, any transient kind
+        // (device-lost excluded — the storm must be survivable).
+        // Draws per tick: below(3) coin; on 0: below(4) kind, below(8) row.
+        "fault-storm" => {
+            for t in 0..ticks {
+                if rng.below(3) == 0 {
+                    let kind_ix = rng.below(4);
+                    plan.push(PlannedFault { tick: t, kind_ix, row: rng.below(8) });
+                }
+            }
+        }
+        // Draws per tick: below(4) coin; on 0: below(8) row.
+        "decode-flaky" => {
+            for t in 0..ticks {
+                if rng.below(4) == 0 {
+                    plan.push(PlannedFault { tick: t, kind_ix: 0, row: rng.below(8) });
+                }
+            }
+        }
+        // Draws per tick: below(3) coin.
+        "admit-flaky" => {
+            for t in 0..ticks {
+                if rng.below(3) == 0 {
+                    plan.push(PlannedFault { tick: t, kind_ix: 1, row: 0 });
+                }
+            }
+        }
+        // Draws per tick: below(3) coin.
+        "pool-squeeze" => {
+            for t in 0..ticks {
+                if rng.below(3) == 0 {
+                    plan.push(PlannedFault { tick: t, kind_ix: 2, row: 0 });
+                }
+            }
+        }
+        // Draws per tick: below(6) coin.
+        "stuck-stall" => {
+            for t in 0..ticks {
+                if rng.below(6) == 0 {
+                    plan.push(PlannedFault { tick: t, kind_ix: 3, row: 0 });
+                }
+            }
+        }
+        // Single draw: below(ticks) loss tick.
+        "device-loss" => {
+            plan.push(PlannedFault { tick: rng.below(ticks), kind_ix: 4, row: 0 });
+        }
+        other => {
+            bail!("unknown chaos scenario {other:?} (expected one of {CHAOS_SCENARIOS:?})")
+        }
+    }
+    Ok(plan)
+}
+
+/// Fault-injecting wrapper engine. Deterministic: the same plan against
+/// the same inner engine and workload produces the same fault sequence,
+/// so chaos tests golden-pin their outcomes.
+pub struct ChaosEngine<E> {
+    inner: E,
+    plan: Vec<PlannedFault>,
+    /// next plan entry to consider (entries are tick-ascending)
+    cursor: usize,
+    /// the fault armed for the current tick, if any (at most one per
+    /// tick by construction of every scenario)
+    armed: Option<PlannedFault>,
+    /// `device-lost` latched: permanent, survives every tick
+    lost: bool,
+    last: Option<FaultInfo>,
+    /// faults actually fired at an engine surface (misses excluded)
+    pub injected: usize,
+}
+
+impl<E: DecodeEngine> ChaosEngine<E> {
+    /// Wrap `inner` with the named scenario's schedule.
+    pub fn new(inner: E, scenario: &str, ticks: usize, seed: u64) -> Result<ChaosEngine<E>> {
+        Ok(Self::from_plan(inner, generate(scenario, ticks, seed)?))
+    }
+
+    /// Wrap `inner` with an explicit schedule (tests pin exact faults).
+    pub fn from_plan(inner: E, plan: Vec<PlannedFault>) -> ChaosEngine<E> {
+        ChaosEngine { inner, plan, cursor: 0, armed: None, lost: false, last: None, injected: 0 }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// Plan entries not yet armed (diagnostics; misses stay consumed).
+    pub fn remaining(&self) -> usize {
+        self.plan.len().saturating_sub(self.cursor)
+    }
+
+    fn armed_kind(&self, kind_ix: usize) -> Option<PlannedFault> {
+        self.armed.filter(|f| f.kind_ix == kind_ix)
+    }
+}
+
+impl<E: DecodeEngine> DecodeEngine for ChaosEngine<E> {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn free_rows(&self) -> usize {
+        self.inner.free_rows()
+    }
+
+    fn begin_tick(&mut self, tick: u64) {
+        self.inner.begin_tick(tick);
+        // a fault armed for an earlier tick that never hit its surface is
+        // a miss — drop it so it cannot fire on the wrong tick
+        if self.armed.map_or(false, |f| (f.tick as u64) < tick) {
+            self.armed = None;
+        }
+        while let Some(&f) = self.plan.get(self.cursor) {
+            if (f.tick as u64) > tick {
+                break;
+            }
+            self.cursor += 1;
+            if f.kind_ix == 4 {
+                // device loss latches even when its exact tick was never
+                // decoded on — the device does not come back
+                self.lost = true;
+            } else if (f.tick as u64) == tick {
+                self.armed = Some(f);
+            }
+        }
+    }
+
+    fn prefill(
+        &mut self,
+        prompt: &str,
+        cfg: SampleCfg,
+        adapter: Option<AdapterId>,
+    ) -> Result<usize> {
+        if self.lost {
+            self.last = Some(FaultInfo { domain: FaultDomain::Lost, kind: "device-lost" });
+            bail!("chaos: device lost");
+        }
+        if self.armed_kind(1).is_some() {
+            self.armed = None;
+            self.injected += 1;
+            bail!("chaos: admission fault");
+        }
+        self.inner.prefill(prompt, cfg, adapter)
+    }
+
+    fn prefill_begin(
+        &mut self,
+        prompt: &str,
+        cfg: SampleCfg,
+        adapter: Option<AdapterId>,
+        defer: bool,
+    ) -> Result<(usize, bool)> {
+        if self.lost {
+            self.last = Some(FaultInfo { domain: FaultDomain::Lost, kind: "device-lost" });
+            bail!("chaos: device lost");
+        }
+        if self.armed_kind(1).is_some() {
+            self.armed = None;
+            self.injected += 1;
+            bail!("chaos: admission fault");
+        }
+        self.inner.prefill_begin(prompt, cfg, adapter, defer)
+    }
+
+    fn prefill_tick(&mut self, budget: usize) -> Result<PrefillTickOut> {
+        self.inner.prefill_tick(budget)
+    }
+
+    fn prefill_stats(&self) -> PrefillStats {
+        self.inner.prefill_stats()
+    }
+
+    fn decode_step(&mut self, rng: &mut Rng) -> Result<Vec<StepOut>> {
+        if self.lost {
+            self.last = Some(FaultInfo { domain: FaultDomain::Lost, kind: "device-lost" });
+            bail!("chaos: device lost");
+        }
+        if let Some(f) = self.armed_kind(0) {
+            self.armed = None;
+            self.injected += 1;
+            self.last =
+                Some(FaultInfo { domain: FaultDomain::Row(f.row), kind: "decode-transient" });
+            bail!("chaos: transient decode fault on row {}", f.row);
+        }
+        if self.armed_kind(3).is_some() {
+            self.armed = None;
+            self.injected += 1;
+            self.last = Some(FaultInfo { domain: FaultDomain::Engine, kind: "stuck-tick" });
+            bail!("chaos: stuck tick (watchdog timeout)");
+        }
+        self.last = None;
+        self.inner.decode_step(rng)
+    }
+
+    fn last_fault(&self) -> Option<FaultInfo> {
+        self.last
+    }
+
+    fn take(&mut self, row: usize) -> Option<Vec<i32>> {
+        self.inner.take(row)
+    }
+
+    fn decode_text(&self, ids: &[i32]) -> String {
+        self.inner.decode_text(ids)
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        self.inner.spec_stats()
+    }
+
+    fn set_spec_enabled(&mut self, on: bool) {
+        self.inner.set_spec_enabled(on);
+    }
+
+    fn can_admit(&mut self, prompt: &str, cfg: &SampleCfg) -> bool {
+        if self.lost {
+            return false;
+        }
+        if self.armed_kind(2).is_some() {
+            self.armed = None;
+            self.injected += 1;
+            return false;
+        }
+        self.inner.can_admit(prompt, cfg)
+    }
+
+    fn paged_stats(&self) -> Option<PagedStats> {
+        self.inner.paged_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::SimEngine;
+
+    #[test]
+    fn plans_are_deterministic_and_tick_ascending() {
+        for &s in CHAOS_SCENARIOS {
+            let a = generate(s, 256, 9).unwrap();
+            let b = generate(s, 256, 9).unwrap();
+            assert_eq!(a, b, "{s} must be a pure function of (ticks, seed)");
+            assert!(!a.is_empty(), "{s} generated no faults in 256 ticks");
+            let mut last = 0;
+            for f in &a {
+                assert!(f.tick >= last, "{s} plan must be tick-ascending");
+                last = f.tick;
+                assert!(f.kind_ix < FAULT_KINDS.len());
+                assert!(f.row < 8);
+            }
+            assert_ne!(generate(s, 256, 10).unwrap(), a, "{s} must consume the seed");
+        }
+    }
+
+    /// Cross-language contract: every scenario's plan at `(ticks=32,
+    /// seed=9)`, exactly as `tools/chaos_gen.py` produces it
+    /// (python/tests/test_chaos_sched.py pins the same tuples).
+    #[test]
+    fn plans_match_the_python_mirror_goldens() {
+        let gold = |s: &str| {
+            generate(s, 32, 9)
+                .unwrap()
+                .iter()
+                .map(|f| (f.tick, f.kind_ix, f.row))
+                .collect::<Vec<_>>()
+        };
+        let first4 = |s: &str| gold(s).into_iter().take(4).collect::<Vec<_>>();
+        assert_eq!(gold("fault-storm").len(), 14);
+        assert_eq!(first4("fault-storm"), vec![(0, 0, 6), (2, 0, 2), (3, 2, 5), (4, 0, 5)]);
+        assert_eq!(gold("decode-flaky").len(), 9);
+        assert_eq!(first4("decode-flaky"), vec![(0, 0, 0), (3, 0, 1), (5, 0, 4), (8, 0, 5)]);
+        assert_eq!(gold("admit-flaky").len(), 12);
+        assert_eq!(first4("admit-flaky"), vec![(0, 1, 0), (1, 1, 0), (4, 1, 0), (5, 1, 0)]);
+        assert_eq!(gold("pool-squeeze").len(), 12);
+        assert_eq!(first4("pool-squeeze"), vec![(0, 2, 0), (1, 2, 0), (4, 2, 0), (5, 2, 0)]);
+        assert_eq!(
+            gold("stuck-stall"),
+            vec![(1, 3, 0), (7, 3, 0), (17, 3, 0), (27, 3, 0)]
+        );
+        assert_eq!(gold("device-loss"), vec![(5, 4, 0)]);
+    }
+
+    #[test]
+    fn unknown_scenario_errors_with_the_catalog() {
+        let err = generate("nope", 8, 0).unwrap_err().to_string();
+        assert!(err.contains("fault-storm"), "error must list the catalog: {err}");
+    }
+
+    #[test]
+    fn armed_decode_fault_fires_once_and_classifies_the_row() {
+        let mut e = ChaosEngine::from_plan(
+            SimEngine::new(2),
+            vec![PlannedFault { tick: 1, kind_ix: 0, row: 1 }],
+        );
+        let mut rng = Rng::new(0);
+        e.prefill("hi", SampleCfg { max_new: 3, ..SampleCfg::default() }, None).unwrap();
+        e.begin_tick(0);
+        assert!(e.decode_step(&mut rng).is_ok(), "tick 0 is clean");
+        assert!(e.last_fault().is_none());
+        e.begin_tick(1);
+        let err = e.decode_step(&mut rng).unwrap_err().to_string();
+        assert!(err.contains("transient decode fault on row 1"), "{err}");
+        let info = e.last_fault().expect("fault must be classified");
+        assert_eq!(info.domain, FaultDomain::Row(1));
+        assert_eq!(info.kind, "decode-transient");
+        // one-shot: the same tick's next step is clean again
+        assert!(e.decode_step(&mut rng).is_ok());
+        assert!(e.last_fault().is_none(), "clean step clears the classification");
+        assert_eq!(e.injected, 1);
+    }
+
+    #[test]
+    fn unfired_fault_is_dropped_when_the_tick_passes() {
+        let mut e = ChaosEngine::from_plan(
+            SimEngine::new(2),
+            vec![PlannedFault { tick: 0, kind_ix: 0, row: 0 }],
+        );
+        let mut rng = Rng::new(0);
+        e.prefill("hi", SampleCfg::default(), None).unwrap();
+        e.begin_tick(0); // armed, but no decode happens this tick
+        e.begin_tick(1);
+        assert!(e.decode_step(&mut rng).is_ok(), "stale fault must not fire late");
+        assert_eq!(e.injected, 0);
+    }
+
+    #[test]
+    fn admit_and_pool_faults_hit_their_surfaces() {
+        let mut e = ChaosEngine::from_plan(
+            SimEngine::new(2),
+            vec![
+                PlannedFault { tick: 0, kind_ix: 1, row: 0 },
+                PlannedFault { tick: 1, kind_ix: 2, row: 0 },
+            ],
+        );
+        e.begin_tick(0);
+        let err = e
+            .prefill_begin("hi", SampleCfg::default(), None, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("admission fault"), "{err}");
+        // consumed: the next admission this tick succeeds
+        assert!(e.prefill_begin("hi", SampleCfg::default(), None, false).is_ok());
+        e.begin_tick(1);
+        assert!(!e.can_admit("hi", &SampleCfg::default()), "pool-exhaust spike");
+        assert!(e.can_admit("hi", &SampleCfg::default()), "spike is one-shot");
+        assert_eq!(e.injected, 2);
+    }
+
+    #[test]
+    fn device_loss_latches_even_across_skipped_ticks() {
+        let mut e = ChaosEngine::from_plan(
+            SimEngine::new(2),
+            vec![PlannedFault { tick: 3, kind_ix: 4, row: 0 }],
+        );
+        let mut rng = Rng::new(0);
+        e.prefill("hi", SampleCfg::default(), None).unwrap();
+        e.begin_tick(0);
+        assert!(e.decode_step(&mut rng).is_ok());
+        // the scheduler clock jumps straight past the loss tick
+        e.begin_tick(7);
+        let err = e.decode_step(&mut rng).unwrap_err().to_string();
+        assert!(err.contains("device lost"), "{err}");
+        assert_eq!(e.last_fault().map(|f| f.domain), Some(FaultDomain::Lost));
+        assert!(!e.can_admit("hi", &SampleCfg::default()));
+        assert!(e.prefill_begin("x", SampleCfg::default(), None, false).is_err());
+        // permanent: it never recovers
+        e.begin_tick(8);
+        assert!(e.decode_step(&mut rng).is_err());
+    }
+
+    #[test]
+    fn chaos_off_plan_is_fully_transparent() {
+        let mut plain = SimEngine::new(2);
+        let mut wrapped = ChaosEngine::from_plan(SimEngine::new(2), vec![]);
+        let mut r1 = Rng::new(0);
+        let mut r2 = Rng::new(0);
+        let cfg = SampleCfg { max_new: 2, ..SampleCfg::default() };
+        plain.prefill("hi", cfg, None).unwrap();
+        wrapped.prefill("hi", cfg, None).unwrap();
+        for t in 0..3 {
+            wrapped.begin_tick(t);
+            let a = plain.decode_step(&mut r1).unwrap();
+            let b = wrapped.decode_step(&mut r2).unwrap();
+            assert_eq!(a.len(), b.len(), "empty plan must not perturb decode");
+        }
+        assert_eq!(plain.take(0), wrapped.take(0));
+    }
+}

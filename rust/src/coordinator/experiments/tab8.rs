@@ -11,7 +11,8 @@ use crate::data::instruct::{Dataset, InstructGen};
 use crate::data::make_batch;
 use crate::params::init_lora;
 use crate::pruning;
-use crate::serve::Server;
+use crate::chaos::ChaosEngine;
+use crate::serve::{Server, ServerStats};
 use crate::tokenizer::Tokenizer;
 use crate::util::log::{self, Csv};
 use anyhow::Result;
@@ -125,6 +126,9 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     // goodput is in-deadline finishes over offered load, and all four
     // read 0/1.000 under the plain FIFO scheduler used here (aggregate
     // rows only; the lane rows leave them blank)
+    // failed/retries/degraded_ticks: the §2j fault columns — zero on
+    // every row but the fault-storm A/B pair at the bottom, where the
+    // retry+isolation arm must out-goodput the abort-on-error arm
     let mut scsv = Csv::create(
         ctx.out_dir.join("tab8_serving.csv"),
         &["method", "decode_path", "prefill", "adapter", "requests",
@@ -133,18 +137,19 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
           "padded_prefill_tokens", "ttft_p95_ticks", "itl_p95_ticks",
           "acceptance_rate", "draft_steps", "verify_steps",
           "prefix_hit_rate", "blocks_in_use", "cow_copies",
-          "goodput", "preempted", "cancelled", "deadline_misses"],
+          "goodput", "preempted", "cancelled", "deadline_misses",
+          "failed", "retries", "degraded_ticks"],
     )?;
     let serve_requests = workload_steps * 2;
     let mut serve_rows = |method: &str,
                           decode_path: &str,
                           prefill: &str,
-                          srv: &Server<Generator<'_>>|
+                          stats: &ServerStats|
      -> Result<()> {
         // every cell reads back out of the unified metrics registry
         // (DESIGN.md §2g) — the CSV cannot drift from BENCH_serve.json or
         // the serve summary, because all three read the same names
-        let m = srv.stats.to_metrics();
+        let m = stats.to_metrics();
         log::info(format!(
             "tab8 {method} [{decode_path}/{prefill}]: {:.1} tok/s, ttft {:.1} ms, \
              occupancy {:.2}, queue wait {:.2} ms (peak depth {}, {} padded \
@@ -199,9 +204,12 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             format!("{:.3}", m.gauge("serve.goodput")),
             m.counter("serve.preempted") as usize,
             m.counter("serve.cancelled") as usize,
-            m.counter("serve.deadline_misses") as usize
+            m.counter("serve.deadline_misses") as usize,
+            m.counter("serve.failed") as usize,
+            m.counter("serve.retries") as usize,
+            m.counter("serve.degraded_ticks") as usize
         ])?;
-        for adapter in srv.stats.per_adapter.keys() {
+        for adapter in stats.per_adapter.keys() {
             let label = crate::serve::adapter_label(*adapter);
             let k = |field: &str| format!("adapter.{label}.{field}");
             let lane_rate = if spec {
@@ -233,6 +241,9 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 "",
                 "",
                 "",
+                "",
+                "",
+                "",
                 ""
             ])?;
         }
@@ -249,7 +260,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         let mut srv = Server::new(gen, ctx.seed);
         enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
         srv.drain()?;
-        serve_rows(&method, &decode_path, prefill, &srv)?;
+        serve_rows(&method, &decode_path, prefill, &srv.stats)?;
         if chunked {
             // the §2e A/B: the same workload through the monolithic
             // pad-to-S admission, so the padded-token and latency deltas
@@ -261,7 +272,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             let mut srv = Server::new(gen, ctx.seed);
             enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
             srv.drain()?;
-            serve_rows(&format!("{method} (pad-to-S)"), &decode_path, "monolithic", &srv)?;
+            serve_rows(&format!("{method} (pad-to-S)"), &decode_path, "monolithic", &srv.stats)?;
         }
         // the §2f A/B: the same workload through the paged decode family
         // (pooled block caches + shared-prefix reuse) when it is in the
@@ -281,7 +292,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             let mut srv = Server::new(gen, ctx.seed);
             enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &[], 0.4);
             srv.drain()?;
-            serve_rows(&format!("{method} (paged)"), "kvcache-paged", prefill, &srv)?;
+            serve_rows(&format!("{method} (paged)"), "kvcache-paged", prefill, &srv.stats)?;
         } else {
             log::info(format!(
                 "tab8: no decode_*_paged_{base} family registered; skipping \
@@ -322,7 +333,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             let mut srv = Server::new(gen, ctx.seed);
             enqueue_serve_workload(&mut srv, serve_requests, ctx.seed, &ids, 0.4);
             srv.drain()?;
-            serve_rows(&method, &decode_path, prefill, &srv)?;
+            serve_rows(&method, &decode_path, prefill, &srv.stats)?;
         }
         None => log::info(format!(
             "tab8: no stacked logits_{big}_a<N> artifact; skipping the \
@@ -360,13 +371,50 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             &format!("{big} serve (drafter {big_pruned})"),
             "speculative",
             prefill,
-            &srv,
+            &srv.stats,
         )?;
     } else {
         log::info(format!(
             "tab8: decode_verify_{big} or the {big_pruned} drafter pair \
              missing; skipping the speculative serving row"
         ));
+    }
+
+    // the §2j fault-storm A/B: the same deterministic storm
+    // (`ChaosEngine`, scenario "fault-storm", pinned seed) through the
+    // real small-target engine, abort-on-error vs bounded retry +
+    // failure-domain isolation. The abort arm's drain dies at the first
+    // unabsorbed fault — its partial stats with zero graceful failures
+    // ARE the measurement; the retry arm must resolve every request and
+    // read higher goodput off the adjacent row.
+    {
+        let params = ensure_base(ctx.rt, small, pre, 1e-3, ctx.seed, &ctx.run_dir)?;
+        let mcfg = ctx.rt.load(&format!("eval_{small}"))?.meta.config.clone();
+        for (label, retry) in [("abort-on-error", false), ("retry+isolation", true)] {
+            let lora = init_lora(&mcfg, ctx.seed);
+            let gen = Generator::new(ctx.rt, &format!("logits_{small}"), &[&params, &lora])?;
+            let decode_path = gen.decode_path().name().to_string();
+            let prefill = if gen.chunked_prefill() { "chunked" } else { "monolithic" };
+            let chaos = ChaosEngine::new(gen, "fault-storm", 64, 9)?;
+            let mut srv = Server::new(chaos, ctx.seed);
+            if retry {
+                srv.set_retry_policy(Some(2), 1);
+            }
+            let reqs = crate::workload::generate("faults", serve_requests, 9)?;
+            if let Err(e) = crate::workload::run(&mut srv, &reqs) {
+                anyhow::ensure!(
+                    !retry,
+                    "tab8 chaos: the retry+isolation arm must survive the storm: {e}"
+                );
+                log::info(format!("tab8 chaos abort arm died as designed: {e:#}"));
+            }
+            serve_rows(
+                &format!("{small} serve fault-storm ({label})"),
+                &decode_path,
+                prefill,
+                &srv.stats,
+            )?;
+        }
     }
     log::info(format!("tab8 -> {}", ctx.out_dir.display()));
     Ok(())

@@ -21,10 +21,12 @@
 //! * [`coordinator`] — pipeline, training loops, evaluators, experiments,
 //!   and the decode state machine behind generation
 //! * [`serve`] — continuous-batching generation scheduler
+//! * [`chaos`] — deterministic fault injection for the serving stack
 //! * [`obs`] — request-lifecycle tracing + unified metrics registry
 //! * [`bench`] — bench harness (no criterion in the vendor set)
 
 pub mod bench;
+pub mod chaos;
 pub mod coordinator;
 pub mod data;
 pub mod memory;

@@ -15,6 +15,7 @@
 //! the PJRT runtime (see DESIGN.md).
 
 use anyhow::{bail, Context, Result};
+use loram::chaos::ChaosEngine;
 use loram::coordinator::downstream::{eval_all, ModelUnderTest};
 use loram::coordinator::experiments::{self, Scale};
 use loram::coordinator::generate::{Generator, SampleCfg};
@@ -121,9 +122,19 @@ usage: loram <subcommand> [--key value] [--flag]
              [--workload SCENARIO]     sim only: adversarial generated
                                        stream — steady|bursty-heavytail|
                                        adapter-skew|deadline-storm|
-                                       rejection-storm  [--seed N]
+                                       rejection-storm|faults  [--seed N]
              [--fair-rows N]           cap the engine rows one adapter
                                        lane may hold concurrently
+             [--chaos SCENARIO]        sim only: deterministic fault
+                                       injection (DESIGN.md §2j) —
+                                       fault-storm|decode-flaky|
+                                       admit-flaky|pool-squeeze|
+                                       stuck-stall|device-loss
+                                       [--chaos-ticks T] plan horizon
+             [--retry-budget N]        bounded retries per faulted request
+                                       (§2j; without it faults are fatal)
+             [--backoff-base T]        exponential retry backoff base in
+                                       ticks (default 1)
              [--trace out.json]        write a Perfetto-loadable Chrome
                                        trace (+ .jsonl event log); audit
                                        it with tools/trace_report.py
@@ -364,6 +375,9 @@ fn trace_finish(args: &Args, st: &loram::serve::ServerStats) -> Result<()> {
         ("preempted", Json::num(st.preempted as f64)),
         ("cancelled", Json::num(st.cancelled as f64)),
         ("deadline_misses", Json::num(st.deadline_misses as f64)),
+        ("failed", Json::num(st.failed as f64)),
+        ("retries", Json::num(st.retries as f64)),
+        ("degraded_ticks", Json::num(st.degraded_ticks as f64)),
         ("goodput", Json::num(st.goodput())),
         ("total_tokens", Json::num(st.total_tokens as f64)),
         ("ticks", Json::num(st.ticks as f64)),
@@ -397,32 +411,58 @@ fn trace_finish(args: &Args, st: &loram::serve::ServerStats) -> Result<()> {
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 24);
     let batch = args.get_usize("batch", 4);
-    let mode = args.get_or("sim-mode", "chunked");
+    let mode = args.get_or("sim-mode", "chunked").to_string();
     trace_begin(args, false);
-    let mut server = match mode {
-        "chunked" => Server::new(SimEngine::with_prefill(batch, vec![16, 64], false), 0),
-        "spec" => Server::new(
-            SimEngine::with_spec(
-                batch,
-                args.get_usize("spec-k", 4),
-                args.get_f64("accept", 0.7),
-                args.get_usize("seed", 0) as u64,
-            ),
-            0,
+    let engine = match mode.as_str() {
+        "chunked" => SimEngine::with_prefill(batch, vec![16, 64], false),
+        "spec" => SimEngine::with_spec(
+            batch,
+            args.get_usize("spec-k", 4),
+            args.get_f64("accept", 0.7),
+            args.get_usize("seed", 0) as u64,
         ),
         // same-bytes sizing as the §2f tests: the pool byte-matches a
         // dense `batch x 64` grid, rows decoupled from the grid
-        "paged" => Server::new(
-            SimEngine::with_paged(
-                paged_pool_blocks(batch, 64, PAGED_BLOCK),
-                PAGED_BLOCK,
-                8 * batch,
-                vec![16, 64],
-            )?,
-            0,
-        ),
+        "paged" => SimEngine::with_paged(
+            paged_pool_blocks(batch, 64, PAGED_BLOCK),
+            PAGED_BLOCK,
+            8 * batch,
+            vec![16, 64],
+        )?,
         other => bail!("bad --sim-mode '{other}' (chunked|spec|paged)"),
     };
+    // §2j: --chaos wraps the engine in deterministic fault injection;
+    // the scheduler and workload code below is shared byte-for-byte
+    if let Some(scenario) = args.get("chaos") {
+        let chaotic = ChaosEngine::new(
+            engine,
+            scenario,
+            args.get_usize("chaos-ticks", 64),
+            args.get_usize("seed", 0) as u64,
+        )?;
+        let server = drive_sim(args, Server::new(chaotic, 0), &mode, n)?;
+        println!(
+            "chaos[{scenario}]: {} faults injected ({} unfired), health {:?}",
+            server.engine.injected,
+            server.engine.remaining(),
+            server.health()
+        );
+        trace_finish(args, &server.stats)
+    } else {
+        let server = drive_sim(args, Server::new(engine, 0), &mode, n)?;
+        trace_finish(args, &server.stats)
+    }
+}
+
+/// The sim demo body, generic over the engine so the chaos-wrapped and
+/// plain paths share one driver. Returns the drained server for
+/// engine-specific reporting.
+fn drive_sim<E: loram::serve::DecodeEngine>(
+    args: &Args,
+    mut server: Server<E>,
+    mode: &str,
+    n: usize,
+) -> Result<Server<E>> {
     if mode != "spec" {
         server.set_prefill_budget(Some(args.get_usize("prefill-budget", 16)));
     }
@@ -431,6 +471,14 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     }
     if args.get("fair-rows").is_some() {
         server.set_adapter_fair_cap(Some(args.get_usize("fair-rows", 2)));
+    }
+    // §2j: bounded retry/backoff is opt-in — without it any injected
+    // fault stays fatal, which is exactly the abort-on-error baseline
+    if args.get("retry-budget").is_some() {
+        server.set_retry_policy(
+            Some(args.get_usize("retry-budget", 2) as u32),
+            args.get_usize("backoff-base", 1) as u64,
+        );
     }
     let responses = if let Some(scenario) = args.get("workload") {
         // adversarial generated stream (DESIGN.md §2i scenario catalog):
@@ -451,13 +499,14 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         }
         server.drain()?
     };
-    // under SLO scheduling, deadline-expired requests are cancelled, not
-    // served — everything else must still come back
+    // every enqueue resolves as exactly one of response (served or
+    // failed), cancellation, or admission rejection — nothing vanishes
     anyhow::ensure!(
-        responses.len() + server.stats.cancelled == n,
-        "sim served {} + cancelled {} of {n}",
+        responses.len() + server.stats.cancelled + server.stats.rejected == n,
+        "sim resolved {} + cancelled {} + rejected {} of {n}",
         responses.len(),
-        server.stats.cancelled
+        server.stats.cancelled,
+        server.stats.rejected
     );
     let st = &server.stats;
     println!(
@@ -491,7 +540,13 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             pg.cow_copies
         );
     }
-    trace_finish(args, st)
+    if st.failed > 0 || st.retries > 0 || st.degraded_ticks > 0 {
+        println!(
+            "faults: {} failed, {} retries, {} rejected, {} degraded ticks",
+            st.failed, st.retries, st.rejected, st.degraded_ticks
+        );
+    }
+    Ok(server)
 }
 
 fn cmd_serve(rt: &Runtime, args: &Args) -> Result<()> {

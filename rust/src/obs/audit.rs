@@ -26,7 +26,18 @@
 //! 7. cancel is terminal and pre-admission: a `Cancel` of an in-flight
 //!    or finished request, or any `Admit` after `Cancel`, is a violation
 //! 8. admission ledger: admits == finishes + preempts + mid-flight
-//!    rejects, and `DeadlineMiss` only fires for requests that finish
+//!    rejects + fails, and `DeadlineMiss` only fires for requests that
+//!    finish
+//! 9. retry ledger (§2j): every `Fault` is answered by exactly one
+//!    `Retry` or terminal `Failed` — per request, faults == retries
+//!    while live, and faults == retries + 1 at an in-flight `Failed`;
+//!    `Retry` attempts count 1, 2, … in order
+//! 10. failure terminality: `Failed` is a terminal outcome — no event
+//!     may name the request afterwards; `Failed.tokens` conserves the
+//!     discarded life (like `Preempt`) into `failed_tokens`
+//! 11. degradation bracketing: every `Degrade("degraded")` is closed by
+//!     a `Recover` or escalates to `Degrade("failing")`; a trace may
+//!     only end degraded if it ends in the failing state
 
 use super::trace::{Event, Stamped};
 use std::collections::BTreeMap;
@@ -49,6 +60,9 @@ struct Life {
     rejected: bool,
     cancelled: bool,
     deadline_miss: bool,
+    faults: usize,
+    retries: usize,
+    failed: bool,
 }
 
 /// Replay result: violations plus the reconstructed distributions.
@@ -72,6 +86,15 @@ pub struct AuditReport {
     pub preempted_tokens: usize,
     pub cancelled: usize,
     pub deadline_misses: usize,
+    /// chaos lifecycle counts (§2j)
+    pub faults: usize,
+    pub retries: usize,
+    pub failed: usize,
+    /// DecodeSteps discarded across all terminal failures (global
+    /// conservation: `tokens == Σ Finish.tokens + preempted_tokens +
+    /// failed_tokens`)
+    pub failed_tokens: usize,
+    pub degrades: usize,
     /// blocks still allocated when the trace ends
     pub live_blocks: usize,
     pub cow_copies: usize,
@@ -95,9 +118,35 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
     let mut live_blocks: BTreeMap<usize, u64> = BTreeMap::new();
     // admissions that ended in a mid-flight Reject (for the admission ledger)
     let mut rejected_inflight: usize = 0;
+    // admissions that ended in a terminal Failed (for the admission ledger)
+    let mut failed_inflight: usize = 0;
+    // degradation bracket state (law 11)
+    let mut health = "healthy";
 
     for s in events {
         let t = s.tick;
+        // law 10: Failed is terminal — nothing may name the request after
+        let named = match &s.ev {
+            Event::Enqueue { req }
+            | Event::Requeue { req }
+            | Event::Reject { req }
+            | Event::Cancel { req }
+            | Event::DeadlineMiss { req }
+            | Event::Admit { req, .. }
+            | Event::Finish { req, .. }
+            | Event::Preempt { req, .. }
+            | Event::Fault { req, .. }
+            | Event::Retry { req, .. } => Some(*req),
+            _ => None,
+        };
+        if let Some(req) = named {
+            if lives.get(&req).map_or(false, |l| l.failed) {
+                r.violations.push(format!(
+                    "req {req}: {} after Failed (failure is terminal)",
+                    s.ev.kind()
+                ));
+            }
+        }
         match &s.ev {
             Event::Enqueue { req } => {
                 r.enqueued += 1;
@@ -237,6 +286,108 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
                 }
                 l.deadline_miss = true;
             }
+            Event::Fault { req, row, .. } => {
+                r.faults += 1;
+                let occupied = rows.get(row) == Some(req);
+                let l = lives.entry(*req).or_default();
+                if l.admit.is_none() {
+                    r.violations.push(format!("req {req}: fault while not admitted"));
+                } else if !occupied {
+                    r.violations
+                        .push(format!("req {req}: fault on row {row} it does not occupy"));
+                }
+                l.faults += 1;
+            }
+            Event::Retry { req, attempt } => {
+                r.retries += 1;
+                let l = lives.entry(*req).or_default();
+                if l.faults != l.retries + 1 {
+                    r.violations.push(format!(
+                        "req {req}: retry without a pending fault ({} faults, {} retries)",
+                        l.faults, l.retries
+                    ));
+                } else if *attempt != l.retries + 1 {
+                    r.violations.push(format!(
+                        "req {req}: Retry says attempt {attempt} but this is retry {}",
+                        l.retries + 1
+                    ));
+                }
+                l.retries += 1;
+            }
+            Event::Failed { req, tokens, attempts } => {
+                r.failed += 1;
+                let freed_row =
+                    rows.iter().find_map(|(row, occ)| (occ == req).then_some(*row));
+                let l = lives.entry(*req).or_default();
+                if l.enq.is_none() {
+                    r.violations.push(format!("req {req}: failed, never enqueued"));
+                }
+                if l.cancelled {
+                    r.violations.push(format!("req {req}: failed after cancel"));
+                }
+                if l.finish.is_some() {
+                    r.violations.push(format!("req {req}: failed after finish"));
+                }
+                if *tokens != l.tokens {
+                    r.violations.push(format!(
+                        "req {req}: Failed says {tokens} tokens but life sampled {}",
+                        l.tokens
+                    ));
+                }
+                if *attempts != l.faults {
+                    r.violations.push(format!(
+                        "req {req}: Failed says {attempts} attempts but life took {} faults",
+                        l.faults
+                    ));
+                }
+                if l.admit.is_some() {
+                    // in-flight failure: closes the admission (ledger), frees
+                    // the row, conserves the discarded stream (like Preempt)
+                    if l.faults != l.retries + 1 {
+                        r.violations.push(format!(
+                            "req {req}: retry ledger broken at Failed ({} faults != {} retries + 1)",
+                            l.faults, l.retries
+                        ));
+                    }
+                    failed_inflight += 1;
+                    if let Some(row) = freed_row {
+                        rows.remove(&row);
+                    }
+                } else if l.faults != l.retries {
+                    r.violations.push(format!(
+                        "req {req}: retry ledger broken at queue Failed ({} faults != {} retries)",
+                        l.faults, l.retries
+                    ));
+                }
+                r.failed_tokens += l.tokens;
+                l.tokens = 0;
+                l.last_tok = None;
+                l.admit = None;
+                l.failed = true;
+            }
+            Event::Degrade { level } => {
+                r.degrades += 1;
+                if !matches!(*level, "degraded" | "failing") {
+                    r.violations.push(format!("tick {t}: unknown degrade level {level:?}"));
+                } else if *level == "degraded" && health != "healthy" {
+                    r.violations.push(format!("tick {t}: degrade to degraded while {health}"));
+                } else if *level == "failing" && health == "failing" {
+                    r.violations
+                        .push(format!("tick {t}: degrade to failing while already failing"));
+                } else {
+                    health = *level;
+                }
+            }
+            Event::Recover {} => {
+                if health == "healthy" {
+                    r.violations.push(format!("tick {t}: recover while healthy"));
+                } else if health == "failing" {
+                    r.violations
+                        .push(format!("tick {t}: recover from failing (failing is terminal)"));
+                } else {
+                    health = "healthy";
+                }
+            }
             Event::BlockAlloc { block } => {
                 if live_blocks.insert(*block, t).is_some() {
                     r.violations.push(format!("block {block}: allocated while live"));
@@ -269,10 +420,16 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
         if l.deadline_miss && l.finish.is_none() {
             r.violations.push(format!("req {req}: deadline miss without a finish"));
         }
+        if !l.failed && l.faults != l.retries {
+            r.violations.push(format!(
+                "req {req}: retry ledger broken at end of trace ({} faults, {} retries, no terminal Failed)",
+                l.faults, l.retries
+            ));
+        }
         let (Some(enq), Some(admit)) = (l.enq, l.admit) else {
             if l.admit.is_some() {
                 // already flagged above
-            } else if !l.rejected && !l.cancelled && l.enq.is_some() {
+            } else if !l.rejected && !l.cancelled && !l.failed && l.enq.is_some() {
                 r.violations.push(format!("req {req}: enqueued but never admitted or rejected"));
             }
             continue;
@@ -307,12 +464,16 @@ pub fn audit(events: &[Stamped]) -> AuditReport {
         }
     }
     // admission ledger: every admission ends in exactly one of finish /
-    // preempt / mid-flight reject
-    if r.admitted != r.finished + r.preempted + rejected_inflight {
+    // preempt / mid-flight reject / terminal failure
+    if r.admitted != r.finished + r.preempted + rejected_inflight + failed_inflight {
         r.violations.push(format!(
-            "admission ledger broken: {} admits != {} finishes + {} preempts + {} mid-flight rejects",
-            r.admitted, r.finished, r.preempted, rejected_inflight
+            "admission ledger broken: {} admits != {} finishes + {} preempts + {} mid-flight rejects + {} fails",
+            r.admitted, r.finished, r.preempted, rejected_inflight, failed_inflight
         ));
+    }
+    if health == "degraded" {
+        r.violations
+            .push("degradation never closed: trace ends degraded, not failing".to_string());
     }
     if !rows.is_empty() {
         let stuck: Vec<String> = rows.iter().map(|(row, req)| format!("{row}:req {req}")).collect();
@@ -492,5 +653,135 @@ mod tests {
         let a = audit(&evs);
         assert!(a.ok(), "unexpected violations: {:?}", a.violations);
         assert_eq!(a.rejected, 1);
+    }
+
+    #[test]
+    fn retry_ledger_clean_fault_retry_finish() {
+        // retry-as-preempt: Fault → Preempt (conserve the life) → Retry,
+        // then a fresh admission that finishes normally
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::DecodeStep { row: 0 }),
+            st(2, Event::Fault { req: 0, row: 0, fault: "decode-transient" }),
+            st(2, Event::Preempt { req: 0, row: 0, tokens: 1 }),
+            st(2, Event::Retry { req: 0, attempt: 1 }),
+            st(4, Event::Admit { req: 0, row: 0 }),
+            st(5, Event::DecodeStep { row: 0 }),
+            st(5, Event::Finish { req: 0, row: 0, tokens: 1 }),
+        ];
+        let a = audit(&evs);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!((a.faults, a.retries, a.failed), (1, 1, 0));
+        assert_eq!(a.preempted_tokens, 1);
+    }
+
+    #[test]
+    fn terminal_failed_conserves_tokens_and_balances_ledger() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::DecodeStep { row: 0 }),
+            st(2, Event::Fault { req: 0, row: 0, fault: "decode-transient" }),
+            st(2, Event::Failed { req: 0, tokens: 1, attempts: 1 }),
+        ];
+        let a = audit(&evs);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.failed_tokens, 1);
+        // the in-flight Failed closed the admission and freed the row, so
+        // the extended ledger balances and no "rows still occupied" fires
+    }
+
+    #[test]
+    fn queue_failed_needs_no_admission() {
+        // Failing-mode drain: queued requests fail with zero tokens and
+        // zero attempts, and a trace may legally end in the failing state
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(1, Event::Degrade { level: "failing" }),
+            st(1, Event::Failed { req: 0, tokens: 0, attempts: 0 }),
+        ];
+        let a = audit(&evs);
+        assert!(a.ok(), "unexpected violations: {:?}", a.violations);
+        assert_eq!(a.failed, 1);
+    }
+
+    #[test]
+    fn retry_ledger_violations_fire() {
+        // Retry with no pending fault
+        let t1 = audit(&[
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::Retry { req: 0, attempt: 1 }),
+        ])
+        .violations
+        .join("\n");
+        assert!(t1.contains("retry without a pending fault"), "{t1}");
+
+        // Failed lies about both conserved quantities
+        let t2 = audit(&[
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::DecodeStep { row: 0 }),
+            st(2, Event::Fault { req: 0, row: 0, fault: "decode-transient" }),
+            st(2, Event::Failed { req: 0, tokens: 7, attempts: 3 }),
+        ])
+        .violations
+        .join("\n");
+        assert!(t2.contains("Failed says 7 tokens but life sampled 1"), "{t2}");
+        assert!(t2.contains("Failed says 3 attempts but life took 1 faults"), "{t2}");
+
+        // a fault with no answering Retry or Failed dangles at EOF
+        let t3 = audit(&[
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::Fault { req: 0, row: 0, fault: "stuck-tick" }),
+            st(2, Event::DecodeStep { row: 0 }),
+            st(2, Event::Finish { req: 0, row: 0, tokens: 1 }),
+        ])
+        .violations
+        .join("\n");
+        assert!(t3.contains("retry ledger broken at end of trace"), "{t3}");
+    }
+
+    #[test]
+    fn failure_is_terminal() {
+        let evs = vec![
+            st(0, Event::Enqueue { req: 0 }),
+            st(0, Event::Admit { req: 0, row: 0 }),
+            st(1, Event::Fault { req: 0, row: 0, fault: "decode-transient" }),
+            st(1, Event::Failed { req: 0, tokens: 0, attempts: 1 }),
+            st(2, Event::Enqueue { req: 0 }), // anything naming the req trips law 10
+        ];
+        let text = audit(&evs).violations.join("\n");
+        assert!(text.contains("Enqueue after Failed (failure is terminal)"), "{text}");
+    }
+
+    #[test]
+    fn degradation_brackets_are_enforced() {
+        let clean = audit(&[
+            st(0, Event::Degrade { level: "degraded" }),
+            st(2, Event::Recover {}),
+            st(3, Event::Degrade { level: "degraded" }),
+            st(4, Event::Degrade { level: "failing" }), // ending failing is legal
+        ]);
+        assert!(clean.ok(), "unexpected violations: {:?}", clean.violations);
+        assert_eq!(clean.degrades, 3);
+
+        let text = audit(&[st(0, Event::Recover {})]).violations.join("\n");
+        assert!(text.contains("recover while healthy"), "{text}");
+
+        let text =
+            audit(&[st(0, Event::Degrade { level: "degraded" })]).violations.join("\n");
+        assert!(text.contains("degradation never closed"), "{text}");
+
+        let text = audit(&[
+            st(0, Event::Degrade { level: "failing" }),
+            st(1, Event::Recover {}),
+        ])
+        .violations
+        .join("\n");
+        assert!(text.contains("recover from failing (failing is terminal)"), "{text}");
     }
 }

@@ -94,6 +94,24 @@ pub fn event_json(s: &Stamped) -> Json {
             f.push(("exec_ms", Json::num(*exec_ms)));
             f.push(("d2h_ms", Json::num(*d2h_ms)));
         }
+        Event::Fault { req, row, fault } => {
+            f.push(("req", Json::num(*req as f64)));
+            f.push(("row", Json::num(*row as f64)));
+            f.push(("fault", Json::str(*fault)));
+        }
+        Event::Retry { req, attempt } => {
+            f.push(("req", Json::num(*req as f64)));
+            f.push(("attempt", Json::num(*attempt as f64)));
+        }
+        Event::Failed { req, tokens, attempts } => {
+            f.push(("req", Json::num(*req as f64)));
+            f.push(("tokens", Json::num(*tokens as f64)));
+            f.push(("attempts", Json::num(*attempts as f64)));
+        }
+        Event::Degrade { level } => {
+            f.push(("level", Json::str(*level)));
+        }
+        Event::Recover {} => {}
     }
     Json::obj(f)
 }
@@ -309,6 +327,30 @@ pub fn chrome_events(events: &[Stamped]) -> Vec<Json> {
                     m.insert("dur".to_string(), Json::num(dur));
                 }
                 out.push(e);
+            }
+            Event::Fault { req, row, fault } => {
+                out.push(te(&format!("fault[{fault}] req {req}"), "i", s.tick, row_tid(*row), vec![]));
+            }
+            Event::Retry { req, attempt } => {
+                out.push(te(&format!("retry req {req} #{attempt}"), "i", s.tick, TID_SCHED, vec![]));
+            }
+            Event::Failed { req, tokens, attempts } => {
+                // terminal failure closes the open span like a mid-flight reject
+                if let Some(row) = req_row.remove(req) {
+                    if open.remove(&row).is_some() {
+                        out.push(te(&format!("req {req}"), "E", s.tick, row_tid(row), vec![]));
+                    }
+                }
+                out.push(te(&format!("failed req {req}"), "i", s.tick, TID_SCHED, vec![
+                    ("tokens", Json::num(*tokens as f64)),
+                    ("attempts", Json::num(*attempts as f64)),
+                ]));
+            }
+            Event::Degrade { level } => {
+                out.push(te(&format!("degrade[{level}]"), "i", s.tick, TID_SCHED, vec![]));
+            }
+            Event::Recover {} => {
+                out.push(te("recover", "i", s.tick, TID_SCHED, vec![]));
             }
         }
     }

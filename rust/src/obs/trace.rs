@@ -69,6 +69,17 @@ pub enum Event {
     Gauge { name: &'static str, value: f64 },
     /// One `runtime::Session::run` with its h2d / execute / d2h split.
     SessionRun { artifact: String, h2d_ms: f64, exec_ms: f64, d2h_ms: f64 },
+    /// A fault (`fault` names a `chaos::FAULT_KINDS` entry) hit `req` on `row`.
+    Fault { req: u64, row: usize, fault: &'static str },
+    /// Faulted request requeued for retry `attempt` (1-based) with backoff.
+    Retry { req: u64, attempt: usize },
+    /// Terminal failure: retry budget exhausted (or the engine was lost);
+    /// `tokens` sampled so far are discarded, `attempts` faults were taken.
+    Failed { req: u64, tokens: usize, attempts: usize },
+    /// Health state left `Healthy`: `level` is "degraded" or "failing".
+    Degrade { level: &'static str },
+    /// Health state returned to `Healthy` (closes the `Degrade` bracket).
+    Recover {},
 }
 
 /// Event-kind names, in enum order. Mirrored by `KINDS` in
@@ -93,6 +104,11 @@ pub const KINDS: &[&str] = &[
     "CowCopy",
     "Gauge",
     "SessionRun",
+    "Fault",
+    "Retry",
+    "Failed",
+    "Degrade",
+    "Recover",
 ];
 
 impl Event {
@@ -117,6 +133,11 @@ impl Event {
             Event::CowCopy { .. } => "CowCopy",
             Event::Gauge { .. } => "Gauge",
             Event::SessionRun { .. } => "SessionRun",
+            Event::Fault { .. } => "Fault",
+            Event::Retry { .. } => "Retry",
+            Event::Failed { .. } => "Failed",
+            Event::Degrade { .. } => "Degrade",
+            Event::Recover { .. } => "Recover",
         }
     }
 }
@@ -306,6 +327,11 @@ mod tests {
                 exec_ms: 0.0,
                 d2h_ms: 0.0,
             },
+            Event::Fault { req: 0, row: 0, fault: "decode-transient" },
+            Event::Retry { req: 0, attempt: 1 },
+            Event::Failed { req: 0, tokens: 1, attempts: 2 },
+            Event::Degrade { level: "degraded" },
+            Event::Recover {},
         ];
         let kinds: Vec<&str> = sample.iter().map(|e| e.kind()).collect();
         assert_eq!(kinds, KINDS, "Event::kind()/KINDS drifted from the enum");

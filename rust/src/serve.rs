@@ -58,6 +58,29 @@ use std::cmp::Reverse;
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
+/// Failure domain of an engine fault (DESIGN.md §2j): how much blast
+/// radius the scheduler must assume when an engine call errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDomain {
+    /// one row's request is afflicted; every other row is healthy —
+    /// the scheduler retries or fails just that request
+    Row(usize),
+    /// the whole engine misbehaved this tick (stuck tick, watchdog
+    /// timeout); transient — a later tick may succeed
+    Engine,
+    /// the device is gone; no future tick can succeed
+    Lost,
+}
+
+/// Classification an engine attaches to its most recent error, read via
+/// [`DecodeEngine::last_fault`]. `kind` names a `chaos::FAULT_KINDS`
+/// entry and is carried verbatim into the `Fault` trace event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultInfo {
+    pub domain: FaultDomain,
+    pub kind: &'static str,
+}
+
 /// Row-oriented decode backend the scheduler drives.
 pub trait DecodeEngine {
     fn batch_size(&self) -> usize;
@@ -92,8 +115,27 @@ pub trait DecodeEngine {
     fn prefill_stats(&self) -> PrefillStats {
         PrefillStats::default()
     }
+    /// Called once at the top of every scheduler tick with the
+    /// *pre-increment* tick counter — fault-injecting engines key their
+    /// schedules on it (DESIGN.md §2j); real engines ignore it.
+    fn begin_tick(&mut self, tick: u64) {
+        let _ = tick;
+    }
     /// Sample one token for every active row (each under its own config).
     fn decode_step(&mut self, rng: &mut Rng) -> Result<Vec<StepOut>>;
+    /// Classification of the engine's most recent error, when the engine
+    /// distinguishes failure domains (chaos / fault-injecting engines).
+    /// `None` means any error is engine-wide and fatal — the pre-§2j
+    /// contract every real engine keeps by default.
+    fn last_fault(&self) -> Option<FaultInfo> {
+        None
+    }
+    /// Enable/disable speculative decoding when the engine has a drafter
+    /// (Degraded health turns the drafter off, §2j); engines without one
+    /// ignore it.
+    fn set_spec_enabled(&mut self, on: bool) {
+        let _ = on;
+    }
     /// Remove a row, returning its generated ids and freeing the slot.
     fn take(&mut self, row: usize) -> Option<Vec<i32>>;
     fn decode_text(&self, ids: &[i32]) -> String;
@@ -212,6 +254,34 @@ pub fn adapter_label(adapter: Option<AdapterId>) -> String {
     adapter.map_or_else(|| "base".to_string(), |id| id.to_string())
 }
 
+/// How a request resolved (DESIGN.md §2j). Every enqueue that is not
+/// cancelled or rejected at admission ends in exactly one [`Response`],
+/// and this field says which kind — a failure is a first-class response,
+/// never a silent drop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Outcome {
+    /// completed normally; `text`/`tokens` hold the generation
+    #[default]
+    Ok,
+    /// terminal failure: the retry budget was exhausted or the engine
+    /// was lost; `text` is empty and `tokens` is 0
+    Failed,
+}
+
+/// Scheduler health (DESIGN.md §2j). Engine-level faults degrade it;
+/// clean decode ticks recover it; `Failing` is terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Health {
+    #[default]
+    Healthy,
+    /// an engine-level transient fault was seen recently: speculative
+    /// decoding is disabled and admission is capped at one per tick
+    Degraded,
+    /// device lost or repeated engine faults: survivors and queue are
+    /// failed loudly; the server never serves again
+    Failing,
+}
+
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
@@ -226,6 +296,9 @@ pub struct Response {
     pub batch_rows: usize,
     /// adapter the request decoded under
     pub adapter: Option<AdapterId>,
+    /// how the request resolved (§2j); [`Outcome::Ok`] everywhere chaos
+    /// is off
+    pub outcome: Outcome,
 }
 
 /// A queued request with its wait-accounting clocks. `ttft_ms` is only
@@ -238,6 +311,11 @@ struct Queued {
     t0: Instant,
     enq_tick: usize,
     ttft_ms: Option<f64>,
+    /// engine faults this request has survived (retry count, §2j)
+    attempts: u32,
+    /// earliest tick the entry may be admitted — the retry backoff
+    /// (0 = immediately; only ever nonzero under a retry policy)
+    not_before: usize,
 }
 
 /// Per-request bookkeeping while its row decodes.
@@ -265,6 +343,8 @@ struct InFlight {
     /// tokens sampled for this request so far (the trace `Finish` total —
     /// `Response.tokens` differs after EOS/PAD trimming)
     tokens: usize,
+    /// engine faults this request has survived (retry count, §2j)
+    attempts: u32,
 }
 
 pub struct Server<E> {
@@ -288,6 +368,18 @@ pub struct Server<E> {
     /// per-tick gauge samples (queue depth, in-flight rows, blocks in
     /// use) — merged into the registry snapshot by [`Server::metrics`]
     tick_metrics: Metrics,
+    /// per-request retry budget (§2j). None = retries off: any engine
+    /// error propagates and aborts the tick, the pre-§2j contract
+    retry_budget: Option<u32>,
+    /// backoff base B: retry k waits B·2^(k-1) ticks before re-admission
+    backoff_base: u64,
+    /// health state machine (§2j); [`Health::Healthy`] forever when no
+    /// engine-level fault ever fires
+    health: Health,
+    /// consecutive clean decode ticks while Degraded (3 → Recover)
+    clean_ticks: u32,
+    /// consecutive engine-level faulted decode ticks (3 → Failing)
+    engine_fault_streak: u32,
 }
 
 /// Per-adapter slice of the serving stats (keyed by [`AdapterId`]; the
@@ -361,6 +453,15 @@ pub struct ServerStats {
     /// requests that finished after their deadline — served, but outside
     /// the SLO (subtracted from goodput, never from `served`)
     pub deadline_misses: usize,
+    /// requests terminally failed: retry budget exhausted or the engine
+    /// was lost (§2j) — resolved as first-class [`Outcome::Failed`]
+    /// responses, counted against goodput like cancellations
+    pub failed: usize,
+    /// fault → preempt → requeue cycles taken (each re-admission counts
+    /// into `admitted` again, like preemptions)
+    pub retries: usize,
+    /// decode ticks run while health was not [`Health::Healthy`]
+    pub degraded_ticks: usize,
     /// tokens that came from accepted speculative drafts (0 off the
     /// speculative path)
     pub accepted_tokens: usize,
@@ -427,14 +528,16 @@ impl ServerStats {
         self.total_queue_wait_ms / self.admitted.max(1) as f64
     }
 
-    /// Goodput under SLO: the fraction of *resolved* requests (served or
-    /// cancelled) that finished within their deadline. Requests without
-    /// a deadline count as good once served; a cancelled request is a
-    /// resolved non-good outcome, so deadline storms drag this down even
-    /// when every surviving request finishes in time.
+    /// Goodput under SLO: the fraction of *resolved* requests (served,
+    /// cancelled, or failed) that finished within their deadline.
+    /// Requests without a deadline count as good once served; cancelled
+    /// and terminally-failed requests are resolved non-good outcomes, so
+    /// deadline storms and fault storms both drag this down even when
+    /// every surviving request finishes in time. Identical to the PR 9
+    /// formula whenever `failed == 0`.
     pub fn goodput(&self) -> f64 {
         self.served.saturating_sub(self.deadline_misses) as f64
-            / (self.served + self.cancelled).max(1) as f64
+            / (self.served + self.cancelled + self.failed).max(1) as f64
     }
 
     /// Fraction of served tokens that came from accepted drafts.
@@ -483,6 +586,9 @@ impl ServerStats {
         m.set_counter("serve.preempted", self.preempted as f64);
         m.set_counter("serve.cancelled", self.cancelled as f64);
         m.set_counter("serve.deadline_misses", self.deadline_misses as f64);
+        m.set_counter("serve.failed", self.failed as f64);
+        m.set_counter("serve.retries", self.retries as f64);
+        m.set_counter("serve.degraded_ticks", self.degraded_ticks as f64);
         m.set_counter("serve.decode_steps", self.decode_steps as f64);
         m.set_counter("serve.decode_ms", self.decode_ms);
         m.set_counter("serve.total_tokens", self.total_tokens as f64);
@@ -558,6 +664,11 @@ impl<E: DecodeEngine> Server<E> {
             slo: false,
             fair_rows: None,
             tick_metrics: Metrics::new(),
+            retry_budget: None,
+            backoff_base: 1,
+            health: Health::Healthy,
+            clean_ticks: 0,
+            engine_fault_streak: 0,
         }
     }
 
@@ -618,6 +729,29 @@ impl<E: DecodeEngine> Server<E> {
         self.fair_rows = cap.map(|c| c.max(1));
     }
 
+    /// Turn on bounded retries with exponential backoff (DESIGN.md §2j):
+    /// a row-scoped engine fault preempts the afflicted request — the
+    /// partial stream is discarded and conserved, exactly like an SLO
+    /// preemption — and requeues it at the queue front, waiting
+    /// `backoff_base · 2^(k-1)` ticks before retry `k`, up to `budget`
+    /// retries; the next fault past the budget fails it terminally as a
+    /// first-class [`Outcome::Failed`] response. Engine-scoped faults
+    /// drive the [`Health`] machine instead. `None` restores the
+    /// abort-on-error contract (any engine error propagates, every
+    /// in-flight request dies with the tick) — and with no fault ever
+    /// firing, a server with a retry policy behaves byte-identically to
+    /// one without.
+    pub fn set_retry_policy(&mut self, budget: Option<u32>, backoff_base: u64) {
+        self.retry_budget = budget;
+        self.backoff_base = backoff_base.max(1);
+    }
+
+    /// Current health state (§2j); [`Health::Healthy`] forever when no
+    /// engine-level fault ever fires.
+    pub fn health(&self) -> Health {
+        self.health
+    }
+
     pub fn enqueue(&mut self, prompt: impl Into<String>, cfg: SampleCfg) -> u64 {
         self.enqueue_adapter(prompt, cfg, None)
     }
@@ -661,6 +795,8 @@ impl<E: DecodeEngine> Server<E> {
             t0: Instant::now(),
             enq_tick: self.stats.ticks,
             ttft_ms: None,
+            attempts: 0,
+            not_before: 0,
         });
         trace::set_tick(self.stats.ticks as u64);
         trace::emit(|| Event::Enqueue { req: id });
@@ -684,11 +820,15 @@ impl<E: DecodeEngine> Server<E> {
     /// looks past it, so a skewed queue cannot starve the other lanes.
     /// `None` = nothing admissible right now.
     fn pick_ix(&self) -> Option<usize> {
-        if !self.slo && self.fair_rows.is_none() {
+        if !self.slo && self.fair_rows.is_none() && self.retry_budget.is_none() {
             return (!self.queue.is_empty()).then_some(0);
         }
+        let now = self.stats.ticks;
         let mut best: Option<(Priority, usize)> = None;
         for (ix, q) in self.queue.iter().enumerate() {
+            if q.not_before > now {
+                continue; // §2j retry backoff: not admissible yet
+            }
             if let Some(cap) = self.fair_rows {
                 let lane_rows = self
                     .inflight
@@ -756,6 +896,8 @@ impl<E: DecodeEngine> Server<E> {
             t0: f.enqueued,
             enq_tick: f.enq_tick,
             ttft_ms: f.ttft_ms,
+            attempts: f.attempts,
+            not_before: 0,
         });
         Ok(())
     }
@@ -785,6 +927,12 @@ impl<E: DecodeEngine> Server<E> {
         let mut preempted_now = false;
         loop {
             while self.engine.free_rows() > 0 {
+                // Degraded health shrinks admission to one request per
+                // tick (§2j): keep serving, stop piling load on an
+                // engine that just faulted
+                if self.health == Health::Degraded && admitted_now >= 1 {
+                    break;
+                }
                 let Some(ix) = self.pick_ix() else { break };
                 let Some(q) = self.queue.remove(ix) else { break };
                 // a paged engine may have free rows but no block-pool
@@ -837,6 +985,7 @@ impl<E: DecodeEngine> Server<E> {
                     pending: !done,
                     forced: !can,
                     tokens: 0,
+                    attempts: q.attempts,
                 });
                 if done {
                     self.stats.admitted += 1;
@@ -865,7 +1014,10 @@ impl<E: DecodeEngine> Server<E> {
             preempted_now = true;
         }
         if let Some(e) = last_err {
-            if admitted_now == 0 && self.in_flight() == 0 {
+            // under a retry policy transient admission faults are
+            // expected — rejection isolation plus the fault-storm A/B
+            // account for them, so a no-progress tick is not fatal (§2j)
+            if admitted_now == 0 && self.in_flight() == 0 && self.retry_budget.is_none() {
                 return Err(e.context("every admission failed with no requests in flight"));
             }
         }
@@ -884,6 +1036,12 @@ impl<E: DecodeEngine> Server<E> {
         // happens on the pre-increment tick; decode events land on the
         // post-increment tick below — matching `enq_tick`/`ttft_ticks`
         trace::set_tick(self.stats.ticks as u64);
+        self.engine.begin_tick(self.stats.ticks as u64);
+        if self.health == Health::Failing {
+            // terminal: nothing decodes again — fail any late arrivals
+            // loudly instead of wedging them in the queue (§2j)
+            return Ok(self.fail_queue());
+        }
         self.admit()?;
         self.stats.peak_in_flight = self.stats.peak_in_flight.max(self.in_flight());
         let tick = self
@@ -928,6 +1086,8 @@ impl<E: DecodeEngine> Server<E> {
                     t0: f.enqueued,
                     enq_tick: f.enq_tick,
                     ttft_ms: f.ttft_ms,
+                    attempts: f.attempts,
+                    not_before: 0,
                 });
                 continue;
             }
@@ -949,9 +1109,21 @@ impl<E: DecodeEngine> Server<E> {
              window this tick"
         );
         if active == 0 && pending == 0 {
+            // §2j: when every queued entry is backing off, the only way
+            // forward is to let sim time pass — count an idle tick so
+            // `not_before` eventually unblocks instead of wedging drain
+            if self.retry_budget.is_some()
+                && !self.queue.is_empty()
+                && self.queue.iter().all(|q| q.not_before > self.stats.ticks)
+            {
+                self.stats.ticks += 1;
+            }
             return Ok(vec![]);
         }
         self.stats.ticks += 1;
+        if self.health != Health::Healthy {
+            self.stats.degraded_ticks += 1;
+        }
         trace::set_tick(self.stats.ticks as u64);
         self.sample_gauges(active, pending);
         if active == 0 {
@@ -960,8 +1132,23 @@ impl<E: DecodeEngine> Server<E> {
             return Ok(vec![]);
         }
         let t0 = Instant::now();
-        let events = self.engine.decode_step(&mut self.rng)?;
+        let step_out = self.engine.decode_step(&mut self.rng);
         self.stats.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let events = match step_out {
+            Ok(ev) => {
+                // a clean decode tick heals: the engine-fault streak
+                // resets, and three in a row while Degraded recover
+                self.engine_fault_streak = 0;
+                if self.health == Health::Degraded {
+                    self.clean_ticks += 1;
+                    if self.clean_ticks >= 3 {
+                        self.set_health(Health::Healthy);
+                    }
+                }
+                ev
+            }
+            Err(e) => return self.on_decode_fault(e, active),
+        };
         if events.is_empty() {
             // legitimate only while admissions are in flight: a stalled
             // tick (the monolithic sim cost model) or a prefill-only tick
@@ -1038,21 +1225,217 @@ impl<E: DecodeEngine> Server<E> {
                 latency_ms,
                 batch_rows: active,
                 adapter: f.req.adapter,
+                outcome: Outcome::Ok,
             });
         }
         Ok(out)
     }
 
+    /// Health transition (§2j): emits the `Degrade`/`Recover` trace
+    /// bracket and toggles the degradation levers — Degraded disables
+    /// speculative decoding (re-enabled on recovery); the admission cap
+    /// lives in [`Server::admit`]. No-op when already in the state.
+    fn set_health(&mut self, h: Health) {
+        if self.health == h {
+            return;
+        }
+        match h {
+            Health::Healthy => {
+                trace::emit(|| Event::Recover {});
+                self.engine.set_spec_enabled(true);
+            }
+            Health::Degraded => {
+                trace::emit(|| Event::Degrade { level: "degraded" });
+                self.engine.set_spec_enabled(false);
+            }
+            Health::Failing => trace::emit(|| Event::Degrade { level: "failing" }),
+        }
+        self.health = h;
+        self.clean_ticks = 0;
+    }
+
+    /// Route a `decode_step` error through the failure-domain machinery
+    /// (§2j). Without a retry policy, or when the engine does not
+    /// classify its faults, the error propagates — the pre-§2j
+    /// abort-on-error contract.
+    fn on_decode_fault(&mut self, err: anyhow::Error, active: usize) -> Result<Vec<Response>> {
+        if self.retry_budget.is_none() {
+            return Err(err);
+        }
+        let Some(info) = self.engine.last_fault() else {
+            return Err(err);
+        };
+        match info.domain {
+            FaultDomain::Row(row) => {
+                // blast radius one request: everything else keeps its
+                // row and decodes again next tick (a lost tick, not a
+                // lost batch)
+                if self.inflight.get(row).map_or(false, Option::is_some) {
+                    return Ok(self.fault_row(row, info.kind, active)?.into_iter().collect());
+                }
+                // aimed at an empty row: a harmless lost tick
+                Ok(vec![])
+            }
+            FaultDomain::Engine => {
+                self.clean_ticks = 0;
+                self.engine_fault_streak += 1;
+                if self.engine_fault_streak >= 3 {
+                    log::warn(format!(
+                        "engine fault streak hit {} ({}): failing",
+                        self.engine_fault_streak, info.kind
+                    ));
+                    return Ok(self.fail_everything(info.kind));
+                }
+                self.set_health(Health::Degraded);
+                Ok(vec![])
+            }
+            FaultDomain::Lost => Ok(self.fail_everything(info.kind)),
+        }
+    }
+
+    /// Resolve a row-scoped fault (§2j): within the retry budget the
+    /// request is preempted (partial stream discarded and conserved,
+    /// like an SLO preemption) and requeued at the front with
+    /// exponential backoff; past it, the request terminates as a
+    /// first-class [`Outcome::Failed`] response — never a silent drop,
+    /// never a wedged row.
+    fn fault_row(
+        &mut self,
+        row: usize,
+        kind: &'static str,
+        active: usize,
+    ) -> Result<Option<Response>> {
+        let f = self
+            .inflight
+            .get_mut(row)
+            .and_then(Option::take)
+            .with_context(|| format!("fault on untracked row {row}"))?;
+        let id = f.req.id;
+        trace::emit(|| Event::Fault { req: id, row, fault: kind });
+        let attempts = f.attempts + 1;
+        if attempts <= self.retry_budget.unwrap_or(0) {
+            let tokens = f.tokens;
+            trace::emit(|| Event::Preempt { req: id, row, tokens });
+            let _ = self.engine.take(row);
+            self.stats.preempted += 1;
+            trace::emit(|| Event::Retry { req: id, attempt: attempts as usize });
+            self.stats.retries += 1;
+            // exponential tick backoff: retry k waits B·2^(k-1) ticks
+            // (shift capped — a budget anywhere near 64 would overflow)
+            let backoff = (self.backoff_base << (attempts - 1).min(32)) as usize;
+            self.queue.push_front(Queued {
+                req: f.req,
+                t0: f.enqueued,
+                enq_tick: f.enq_tick,
+                ttft_ms: f.ttft_ms,
+                attempts,
+                not_before: self.stats.ticks + backoff,
+            });
+            self.stats.peak_queue_depth =
+                self.stats.peak_queue_depth.max(self.queue.len());
+            return Ok(None);
+        }
+        log::warn(format!("request {id} failed terminally after fault {attempts} ({kind})"));
+        let (tokens, n) = (f.tokens, attempts as usize);
+        trace::emit(|| Event::Failed { req: id, tokens, attempts: n });
+        let _ = self.engine.take(row);
+        self.stats.failed += 1;
+        Ok(Some(Self::failed_response(f.req, f.enqueued, f.ttft_ms, active)))
+    }
+
+    /// Enter [`Health::Failing`] (§2j): fail every survivor — in-flight
+    /// rows as terminal faults, queued requests as zero-token failures —
+    /// loudly, as [`Outcome::Failed`] responses. The server never
+    /// decodes again; later `step`s only flush late arrivals the same
+    /// way.
+    fn fail_everything(&mut self, kind: &'static str) -> Vec<Response> {
+        self.set_health(Health::Failing);
+        log::warn(format!("engine failing ({kind}): draining all requests as failed"));
+        let mut out = vec![];
+        for row in 0..self.inflight.len() {
+            let Some(f) = self.inflight.get_mut(row).and_then(Option::take) else {
+                continue;
+            };
+            let id = f.req.id;
+            trace::emit(|| Event::Fault { req: id, row, fault: kind });
+            let (tokens, attempts) = (f.tokens, (f.attempts + 1) as usize);
+            trace::emit(|| Event::Failed { req: id, tokens, attempts });
+            let _ = self.engine.take(row);
+            self.stats.failed += 1;
+            out.push(Self::failed_response(f.req, f.enqueued, f.ttft_ms, 0));
+        }
+        out.extend(self.fail_queue());
+        out
+    }
+
+    /// Fail every queued request (Failing-mode drain): zero tokens were
+    /// sampled and `attempts` faults were taken in earlier lives.
+    fn fail_queue(&mut self) -> Vec<Response> {
+        let mut out = vec![];
+        while let Some(q) = self.queue.pop_front() {
+            let id = q.req.id;
+            let attempts = q.attempts as usize;
+            trace::emit(|| Event::Failed { req: id, tokens: 0, attempts });
+            self.stats.failed += 1;
+            out.push(Self::failed_response(q.req, q.t0, q.ttft_ms, 0));
+        }
+        out
+    }
+
+    fn failed_response(
+        req: Request,
+        enqueued: Instant,
+        ttft_ms: Option<f64>,
+        batch_rows: usize,
+    ) -> Response {
+        Response {
+            id: req.id,
+            text: String::new(),
+            tokens: 0,
+            ttft_ms: ttft_ms.unwrap_or_default(),
+            latency_ms: enqueued.elapsed().as_secs_f64() * 1e3,
+            batch_rows,
+            adapter: req.adapter,
+            outcome: Outcome::Failed,
+        }
+    }
+
     /// Serve until queue and batch are empty; returns all responses in
-    /// completion order.
+    /// completion order. Bounded: a wedged row (an engine that never
+    /// finishes it) surfaces as a contextful error naming the stuck
+    /// rows after [`DRAIN_MAX_TICKS`] iterations instead of looping
+    /// forever.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut all = vec![];
+        let mut spins = 0usize;
         while self.pending() > 0 || self.in_flight() > 0 {
+            spins += 1;
+            if spins > DRAIN_MAX_TICKS {
+                let stuck: Vec<String> = self
+                    .inflight
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(row, s)| {
+                        s.as_ref().map(|f| format!("{row}:req {}", f.req.id))
+                    })
+                    .collect();
+                bail!(
+                    "drain stuck after {DRAIN_MAX_TICKS} ticks: rows [{}] never \
+                     finish, {} requests still queued",
+                    stuck.join(", "),
+                    self.pending()
+                );
+            }
             all.extend(self.step()?);
         }
         Ok(all)
     }
 }
+
+/// Iteration bound for [`Server::drain`] — far above any legitimate
+/// drain (the worst sim workloads run ~16k ticks) yet instant to hit in
+/// a test with a never-finishing engine.
+pub const DRAIN_MAX_TICKS: usize = 100_000;
 
 /// Deterministic in-process decode engine for scheduler tests and benches.
 ///
@@ -1095,6 +1478,11 @@ pub struct SimEngine {
     pstats: PrefillStats,
     /// (prompt, cfg, adapter) in admission order, for test assertions
     pub admissions: Vec<(String, SampleCfg, Option<AdapterId>)>,
+    /// degradation lever (§2j): while false, drafter mode is bypassed
+    /// and every row decodes one token per tick (the scheduler flips
+    /// this through [`DecodeEngine::set_spec_enabled`] on Degrade /
+    /// Recover)
+    spec_enabled: bool,
 }
 
 /// Admission cost model for the [`SimEngine`] (ISSUE 5 satellite: charge
@@ -1145,6 +1533,7 @@ impl SimEngine {
             pending: (0..batch).map(|_| None).collect(),
             pstats: PrefillStats::default(),
             admissions: vec![],
+            spec_enabled: true,
         }
     }
 
@@ -1362,7 +1751,8 @@ impl DecodeEngine for SimEngine {
                 continue; // finished, awaiting take
             }
             let token = Self::adapter_marker(r.adapter, &r.cfg);
-            match self.spec.as_mut() {
+            let spec = if self.spec_enabled { self.spec.as_mut() } else { None };
+            match spec {
                 None => {
                     r.emitted.push(token);
                     events.push(StepOut {
@@ -1436,6 +1826,10 @@ impl DecodeEngine for SimEngine {
 
     fn paged_stats(&self) -> Option<PagedStats> {
         self.paged.as_ref().map(|kv| kv.stats())
+    }
+
+    fn set_spec_enabled(&mut self, on: bool) {
+        self.spec_enabled = on;
     }
 }
 
@@ -2582,5 +2976,348 @@ mod tests {
             })
             .collect();
         assert_eq!(misses, vec![slow], "only the late finisher misses");
+    }
+
+    // ---- §2j chaos hardening: fault injection, retry, failure domains ----
+
+    use crate::chaos::{ChaosEngine, PlannedFault};
+
+    fn planned(tick: usize, kind_ix: usize, row: usize) -> PlannedFault {
+        PlannedFault { tick, kind_ix, row }
+    }
+
+    /// Tentpole acceptance: a transient row fault no longer aborts the
+    /// tick. The afflicted request is preempted, retried with backoff,
+    /// and re-served byte-identically; the other row keeps decoding and
+    /// the audit (retry ledger included) balances.
+    #[test]
+    fn row_fault_is_retried_and_isolated_from_the_batch() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let chaos = ChaosEngine::from_plan(SimEngine::new(2), vec![planned(1, 0, 0)]);
+        let mut srv = Server::new(chaos, 0);
+        srv.set_retry_policy(Some(2), 1);
+        let a = srv.enqueue("alpha", cfg(0.9, 4)); // row 0 at tick 1 — the target
+        let b = srv.enqueue("beta", cfg(0.5, 4));
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 2, "both requests must resolve");
+        let text = |id| rs.iter().find(|r| r.id == id).unwrap().text.clone();
+        assert_eq!(text(a), "ZZZZ", "retried stream must be byte-identical");
+        assert_eq!(text(b), "2222", "bystander row must be untouched");
+        assert!(rs.iter().all(|r| r.outcome == Outcome::Ok));
+        assert_eq!(srv.stats.served, 2);
+        assert_eq!(srv.stats.retries, 1);
+        assert_eq!(srv.stats.preempted, 1, "retry discards the partial life");
+        assert_eq!(srv.stats.failed, 0);
+        assert_eq!(srv.engine.injected, 1, "exactly the planned fault fired");
+        assert_eq!(srv.health(), Health::Healthy, "row faults never degrade");
+        let a = audit(&trace::take().expect("sink installed").into_events());
+        assert_trace_matches_stats(&a, &srv.stats);
+        assert_eq!((a.faults, a.retries, a.failed), (1, 1, 0));
+        assert_eq!(a.preempted_tokens, 1, "the one pre-fault token was discarded");
+    }
+
+    /// Tentpole acceptance: past the retry budget the request terminates
+    /// as a first-class `Outcome::Failed` response — never a silent
+    /// drop, never a wedged row — and its tokens land in `failed_tokens`.
+    #[test]
+    fn retry_budget_exhaustion_fails_terminally_with_first_class_outcome() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let chaos = ChaosEngine::from_plan(
+            SimEngine::new(1),
+            vec![planned(1, 0, 0), planned(4, 0, 0)],
+        );
+        let mut srv = Server::new(chaos, 0);
+        srv.set_retry_policy(Some(1), 1);
+        let victim = srv.enqueue("victim", cfg(0.9, 8));
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 1, "the failure is a response, not a drop");
+        assert_eq!(rs[0].id, victim);
+        assert_eq!(rs[0].outcome, Outcome::Failed);
+        assert_eq!(rs[0].tokens, 0, "a failed request delivers no text");
+        assert_eq!(srv.stats.served, 0);
+        assert_eq!(srv.stats.failed, 1);
+        assert_eq!(srv.stats.retries, 1, "the budget allowed one retry");
+        assert_eq!(srv.stats.preempted, 1);
+        assert_eq!(srv.stats.goodput(), 0.0, "failures drain goodput");
+        assert_eq!(srv.in_flight(), 0, "the faulted row was reclaimed");
+        assert_eq!(srv.engine.inner().free_rows(), 1);
+        let a = audit(&trace::take().expect("sink installed").into_events());
+        assert_trace_matches_stats(&a, &srv.stats);
+        assert_eq!((a.faults, a.retries, a.failed), (2, 1, 1));
+        assert_eq!(a.preempted_tokens, 1, "first life's token");
+        assert_eq!(a.failed_tokens, 1, "second life's token");
+    }
+
+    /// Acceptance self-A/B: with chaos off (an empty plan) the retry
+    /// policy is pure machinery — responses AND trace events are
+    /// byte-identical to a plain PR 9 server on the same workload.
+    #[test]
+    fn chaos_off_retry_policy_is_byte_identical_to_plain_serving() {
+        fn drive<E: DecodeEngine>(srv: &mut Server<E>) -> Vec<(u64, String, usize, Outcome)> {
+            for i in 0..6 {
+                srv.enqueue(format!("req{i}"), cfg(0.9, 2 + i % 3));
+                if i % 2 == 0 {
+                    srv.step().unwrap();
+                }
+            }
+            let rs = srv.drain().unwrap();
+            rs.iter().map(|r| (r.id, r.text.clone(), r.tokens, r.outcome)).collect()
+        }
+        fn ticked() -> Vec<(u64, Event)> {
+            let evs = trace::take().expect("sink installed").into_events();
+            evs.into_iter().map(|s| (s.tick, s.ev)).collect()
+        }
+
+        trace::install(trace::DEFAULT_CAP, false);
+        let mut plain = Server::new(SimEngine::new(2), 0);
+        let plain_rs = drive(&mut plain);
+        let plain_evs = ticked();
+
+        trace::install(trace::DEFAULT_CAP, false);
+        let mut hard = Server::new(ChaosEngine::from_plan(SimEngine::new(2), vec![]), 0);
+        hard.set_retry_policy(Some(3), 2);
+        let hard_rs = drive(&mut hard);
+        let hard_evs = ticked();
+
+        assert_eq!(hard.engine.injected, 0, "an empty plan injects nothing");
+        assert_eq!(plain_rs, hard_rs, "responses must be byte-identical");
+        assert_eq!(plain_evs, hard_evs, "trace streams must be byte-identical");
+    }
+
+    /// Device loss is permanent: every survivor — in-flight and queued —
+    /// fails loudly as a response, the server enters `Failing`, and late
+    /// arrivals keep failing instead of wedging in the queue.
+    #[test]
+    fn device_loss_fails_everything_loudly_and_terminally() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let chaos = ChaosEngine::from_plan(SimEngine::new(2), vec![planned(2, 4, 0)]);
+        let mut srv = Server::new(chaos, 0);
+        srv.set_retry_policy(Some(2), 1);
+        srv.enqueue("a", cfg(0.9, 6));
+        srv.enqueue("b", cfg(0.9, 6));
+        let queued = srv.enqueue("c", cfg(0.9, 6)); // waits behind the full batch
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 3, "all three resolve, none silently dropped");
+        assert!(rs.iter().all(|r| r.outcome == Outcome::Failed));
+        assert!(rs.iter().any(|r| r.id == queued), "queued survivor fails too");
+        assert_eq!(srv.health(), Health::Failing);
+        assert_eq!(srv.stats.failed, 3);
+        assert_eq!(srv.stats.served, 0);
+        // failing is terminal: a late arrival fails loudly on the next step
+        let late = srv.enqueue("late", cfg(0.9, 2));
+        let rs2 = srv.step().unwrap();
+        assert_eq!(rs2.len(), 1);
+        assert_eq!((rs2[0].id, rs2[0].outcome), (late, Outcome::Failed));
+        assert_eq!(srv.stats.failed, 4);
+        let a = audit(&trace::take().expect("sink installed").into_events());
+        assert!(a.ok(), "violations: {:#?}", a.violations);
+        assert_eq!(a.failed, 4);
+        assert_eq!(a.degrades, 1, "one Degrade(failing), no recovery");
+    }
+
+    /// An engine-level stall degrades the server (speculation off,
+    /// admission shrunk) and three clean decode ticks recover it — the
+    /// Degrade/Recover bracket the audit's law 11 enforces.
+    #[test]
+    fn stuck_tick_degrades_and_clean_ticks_recover() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let chaos = ChaosEngine::from_plan(SimEngine::new(2), vec![planned(1, 3, 0)]);
+        let mut srv = Server::new(chaos, 0);
+        srv.set_retry_policy(Some(2), 1);
+        srv.enqueue("a", cfg(0.9, 6));
+        srv.enqueue("b", cfg(0.5, 6));
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 2, "a stall costs a tick, not the batch");
+        assert!(rs.iter().all(|r| r.outcome == Outcome::Ok));
+        assert_eq!(srv.health(), Health::Healthy, "three clean ticks recovered");
+        assert_eq!(srv.stats.degraded_ticks, 3);
+        assert_eq!(srv.stats.failed, 0);
+        assert_eq!(srv.stats.retries, 0, "engine faults retry nothing row-level");
+        let evs = trace::take().expect("sink installed").into_events();
+        let a = audit(&evs);
+        assert_trace_matches_stats(&a, &srv.stats);
+        assert_eq!(a.degrades, 1);
+        let brackets: Vec<&str> = evs
+            .iter()
+            .filter_map(|s| match s.ev {
+                Event::Degrade { level } => Some(level),
+                Event::Recover {} => Some("recover"),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(brackets, vec!["degraded", "recover"]);
+    }
+
+    /// Three consecutive engine faults escalate Degraded → Failing: the
+    /// engine is not coming back, so survivors fail loudly instead of
+    /// losing a tick forever.
+    #[test]
+    fn three_consecutive_engine_faults_escalate_to_failing() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let chaos = ChaosEngine::from_plan(
+            SimEngine::new(1),
+            vec![planned(1, 3, 0), planned(2, 3, 0), planned(3, 3, 0)],
+        );
+        let mut srv = Server::new(chaos, 0);
+        srv.set_retry_policy(Some(2), 1);
+        let only = srv.enqueue("only", cfg(0.9, 8));
+        let rs = srv.drain().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!((rs[0].id, rs[0].outcome), (only, Outcome::Failed));
+        assert_eq!(srv.health(), Health::Failing);
+        let a = audit(&trace::take().expect("sink installed").into_events());
+        assert!(a.ok(), "violations: {:#?}", a.violations);
+        assert_eq!(a.degrades, 2, "degraded first, then failing");
+        assert_eq!(a.failed, 1);
+    }
+
+    /// The fault-storm acceptance gate: under the named storm scenario
+    /// with retry + isolation, zero requests are lost silently — every
+    /// enqueue resolves as exactly one of served / failed / rejected and
+    /// the extended admission ledger (audit laws 8–11) balances.
+    #[test]
+    fn fault_storm_with_retry_isolation_loses_nothing_silently() {
+        trace::install(trace::DEFAULT_CAP, false);
+        let chaos = ChaosEngine::new(SimEngine::new(4), "fault-storm", 64, 9).unwrap();
+        let mut srv = Server::new(chaos, 0);
+        srv.set_retry_policy(Some(2), 1);
+        let n = 12;
+        for i in 0..n {
+            srv.enqueue(format!("req{i}"), cfg(0.9, 3 + i % 4));
+        }
+        let rs = srv.drain().unwrap();
+        assert_eq!(
+            rs.len() + srv.stats.rejected,
+            n,
+            "every enqueue must resolve: {} responses + {} rejects",
+            rs.len(),
+            srv.stats.rejected
+        );
+        let served = rs.iter().filter(|r| r.outcome == Outcome::Ok).count();
+        let failed = rs.iter().filter(|r| r.outcome == Outcome::Failed).count();
+        assert_eq!(served, srv.stats.served);
+        assert_eq!(failed, srv.stats.failed);
+        assert!(served > 0, "the storm must be survivable");
+        assert!(srv.engine.injected > 0, "the storm must actually storm");
+        let a = audit(&trace::take().expect("sink installed").into_events());
+        assert_trace_matches_stats(&a, &srv.stats);
+        assert_eq!(a.enqueued, n);
+        assert_eq!(a.retries, srv.stats.retries);
+        assert_eq!(a.failed, srv.stats.failed);
+    }
+
+    /// The A/B the bench publishes, in miniature: the same storm without
+    /// a retry policy aborts the whole batch at the first decode fault
+    /// (the pre-§2j contract, still the default).
+    #[test]
+    fn same_storm_without_retry_policy_aborts_on_first_fault() {
+        let chaos = ChaosEngine::new(SimEngine::new(4), "fault-storm", 64, 9).unwrap();
+        let mut srv = Server::new(chaos, 0);
+        for i in 0..12 {
+            srv.enqueue(format!("req{i}"), cfg(0.9, 3 + i % 4));
+        }
+        let err = srv.drain().unwrap_err().to_string();
+        assert!(err.contains("chaos:"), "the injected fault surfaces: {err}");
+        assert_eq!(srv.stats.failed, 0, "abort-on-error fails no one gracefully");
+    }
+
+    /// Unclassified engine errors stay fatal even under a retry policy:
+    /// the §2j machinery only absorbs faults the engine classifies.
+    #[test]
+    fn unclassified_decode_error_is_fatal_even_with_retry_policy() {
+        struct BlowsUp(SimEngine);
+        impl DecodeEngine for BlowsUp {
+            fn batch_size(&self) -> usize {
+                self.0.batch_size()
+            }
+            fn free_rows(&self) -> usize {
+                self.0.free_rows()
+            }
+            fn prefill(
+                &mut self,
+                prompt: &str,
+                cfg: SampleCfg,
+                adapter: Option<AdapterId>,
+            ) -> Result<usize> {
+                self.0.prefill(prompt, cfg, adapter)
+            }
+            fn decode_step(&mut self, _rng: &mut Rng) -> Result<Vec<StepOut>> {
+                bail!("segfault adjacent")
+            }
+            fn take(&mut self, row: usize) -> Option<Vec<i32>> {
+                self.0.take(row)
+            }
+            fn decode_text(&self, ids: &[i32]) -> String {
+                self.0.decode_text(ids)
+            }
+        }
+        let mut srv = Server::new(BlowsUp(SimEngine::new(1)), 0);
+        srv.set_retry_policy(Some(3), 1);
+        srv.enqueue("x", cfg(0.9, 2));
+        let err = srv.drain().unwrap_err().to_string();
+        assert!(err.contains("segfault adjacent"), "{err}");
+    }
+
+    /// Satellite: a wedged row can no longer spin `drain` forever — the
+    /// guard trips with an error naming the stuck rows.
+    #[test]
+    fn never_finishing_engine_trips_the_drain_guard_naming_stuck_rows() {
+        struct NeverDone {
+            occupied: bool,
+        }
+        impl DecodeEngine for NeverDone {
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn free_rows(&self) -> usize {
+                usize::from(!self.occupied)
+            }
+            fn prefill(
+                &mut self,
+                _prompt: &str,
+                _cfg: SampleCfg,
+                _adapter: Option<AdapterId>,
+            ) -> Result<usize> {
+                self.occupied = true;
+                Ok(0)
+            }
+            fn decode_step(&mut self, _rng: &mut Rng) -> Result<Vec<StepOut>> {
+                ensure!(self.occupied, "decode on empty batch");
+                // a token every tick, finished never
+                Ok(vec![StepOut { row: 0, token: 7, finished: false, accepted: false }])
+            }
+            fn take(&mut self, _row: usize) -> Option<Vec<i32>> {
+                self.occupied.then(|| {
+                    self.occupied = false;
+                    vec![]
+                })
+            }
+            fn decode_text(&self, _ids: &[i32]) -> String {
+                String::new()
+            }
+        }
+        let mut srv = Server::new(NeverDone { occupied: false }, 0);
+        let id = srv.enqueue("stuck", cfg(0.9, 2));
+        let err = srv.drain().unwrap_err().to_string();
+        assert!(err.contains("drain stuck after"), "{err}");
+        assert!(err.contains(&format!("0:req {id}")), "names the stuck row: {err}");
+    }
+
+    /// Satellite: the chaos lifecycle counters flatten into the unified
+    /// metrics registry like every other ServerStats field.
+    #[test]
+    fn chaos_counters_flatten_into_metrics() {
+        let chaos = ChaosEngine::from_plan(
+            SimEngine::new(1),
+            vec![planned(1, 0, 0), planned(4, 0, 0)],
+        );
+        let mut srv = Server::new(chaos, 0);
+        srv.set_retry_policy(Some(1), 1);
+        srv.enqueue("victim", cfg(0.9, 8));
+        srv.drain().unwrap();
+        let m = srv.stats.to_metrics();
+        assert_eq!(m.counter("serve.failed"), 1.0);
+        assert_eq!(m.counter("serve.retries"), 1.0);
+        assert!(m.has_counter("serve.degraded_ticks"));
     }
 }

@@ -24,6 +24,7 @@ pub const SCENARIOS: &[&str] = &[
     "adapter-skew",
     "deadline-storm",
     "rejection-storm",
+    "faults",
 ];
 
 /// One synthetic request: when it arrives (scheduler ticks), how big it
@@ -140,6 +141,31 @@ pub fn generate(scenario: &str, n: usize, seed: u64) -> Result<Vec<WorkloadReq>>
                 deadline_ticks: None,
                 adapter_ix: None,
             },
+            // chaos-bench arrivals (§2j): a steady trickle with
+            // occasional gaps and a small deadline-armed slice, sized so
+            // the fault-storm A/B measures retry/backoff overhead rather
+            // than admission pressure. Draws: below(3) gap coin
+            // [+ below(4) gap], below(12), below(6), below(8) class
+            // [+ below(10) deadline].
+            "faults" => {
+                if rng.below(3) == 0 {
+                    tick += 1 + rng.below(4);
+                }
+                let prompt_len = 6 + rng.below(12);
+                let max_new = 3 + rng.below(6);
+                let priority =
+                    if rng.below(8) == 0 { Priority::High } else { Priority::Normal };
+                let deadline_ticks =
+                    (priority == Priority::High).then(|| 12 + rng.below(10));
+                WorkloadReq {
+                    arrival_tick: tick,
+                    prompt_len,
+                    max_new,
+                    priority,
+                    deadline_ticks,
+                    adapter_ix: None,
+                }
+            }
             other => bail!(
                 "unknown workload scenario {other:?} (expected one of {SCENARIOS:?})"
             ),
@@ -301,6 +327,28 @@ mod tests {
                 (0, 76, 3, Normal, None, None),
             ]
         );
+        assert_eq!(
+            gold("faults"),
+            vec![
+                (1, 15, 8, Normal, None, None),
+                (3, 6, 6, Normal, None, None),
+                (4, 14, 6, Normal, None, None),
+                (4, 14, 3, Normal, None, None),
+            ]
+        );
+    }
+
+    /// §2j chaos-bench arrivals: a deadline-armed High slice exists (so
+    /// goodput under the fault storm is meaningful) and the stream paces
+    /// out instead of dog-piling tick 0.
+    #[test]
+    fn faults_scenario_has_a_deadline_slice_and_paced_arrivals() {
+        let reqs = generate("faults", 64, 9).unwrap();
+        assert!(reqs
+            .iter()
+            .any(|r| r.priority == Priority::High && r.deadline_ticks.is_some()));
+        assert!(reqs.iter().all(|r| r.priority != Priority::Low));
+        assert!(reqs.last().unwrap().arrival_tick > 32, "arrivals must spread");
     }
 
     #[test]

@@ -15,7 +15,8 @@ use loram::data::{corpus::Corpus, make_batch};
 use loram::params::{init_lora, init_params};
 use loram::pruning;
 use loram::runtime::{BackendKind, Runtime, Session};
-use loram::serve::{Priority, Server};
+use loram::chaos::ChaosEngine;
+use loram::serve::{Outcome, Priority, Server};
 use loram::tensor::{Tensor, TensorStore};
 use loram::util::rng::Rng;
 
@@ -1334,4 +1335,82 @@ fn slo_deadline_cancellation_with_real_engine() {
     assert_eq!(srv.stats.served, b);
     assert_eq!(srv.stats.rejected, 0);
     assert_eq!(srv.stats.deadline_misses, 0, "in-flight rows had no deadlines");
+}
+
+#[test]
+fn chaos_fault_storm_on_real_engine_resolves_every_request() {
+    // §2j end-to-end on the PJRT decode path: the deterministic fault
+    // storm through the real engine under bounded retry +
+    // failure-domain isolation. Every enqueue must resolve as exactly
+    // one response (or a pre-admission reject) — nothing lost silently
+    // — and the survivors' streams are real decoded text.
+    let Some(rt) = try_runtime(&["logits_tiny"]) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 40);
+    let lora = init_lora(&cfg, 41);
+    let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora]).unwrap();
+    let chaos = ChaosEngine::new(gen, "fault-storm", 64, 9).unwrap();
+    let mut srv = Server::new(chaos, 5);
+    srv.set_retry_policy(Some(2), 1);
+    let n = 12;
+    let reqs = loram::workload::generate("faults", n, 9).unwrap();
+    let rs = loram::workload::run(&mut srv, &reqs).unwrap();
+    assert_eq!(
+        rs.len() + srv.stats.rejected,
+        n,
+        "every enqueue must resolve: {} responses + {} rejects",
+        rs.len(),
+        srv.stats.rejected
+    );
+    assert!(srv.engine.injected > 0, "the storm must actually storm");
+    let served = rs.iter().filter(|r| r.outcome == Outcome::Ok).count();
+    let failed = rs.iter().filter(|r| r.outcome == Outcome::Failed).count();
+    assert_eq!(served, srv.stats.served);
+    assert_eq!(failed, srv.stats.failed);
+    assert!(served > 0, "the storm must be survivable on the real engine");
+    assert!(
+        rs.iter().filter(|r| r.outcome == Outcome::Ok).all(|r| !r.text.is_empty()),
+        "served responses carry real decoded text"
+    );
+}
+
+#[test]
+fn chaos_off_real_engine_is_byte_identical_to_plain_serving() {
+    // §2j acceptance on the real engine: an armed-but-empty chaos plan
+    // plus a retry policy that never fires must leave every decoded
+    // stream byte-identical to the plain server — the failure-domain
+    // machinery is pure overheadless opt-in until a fault actually fires.
+    let Some(rt) = try_runtime(&["logits_tiny"]) else { return };
+    let cfg = rt.load("logits_tiny").unwrap().meta.config.clone();
+    let params = init_params(&cfg, 42);
+    let lora = init_lora(&cfg, 43);
+    let greedy = |i: usize| SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 4 + i % 3 };
+    let drive = |wrap: bool| -> Vec<(u64, String, Outcome)> {
+        let gen = Generator::new(&rt, "logits_tiny", &[&params, &lora]).unwrap();
+        let mut collect = |rs: Vec<loram::serve::Response>| {
+            let mut v: Vec<_> =
+                rs.into_iter().map(|r| (r.id, r.text, r.outcome)).collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        if wrap {
+            let mut srv = Server::new(ChaosEngine::from_plan(gen, vec![]), 5);
+            srv.set_retry_policy(Some(3), 2);
+            for i in 0..6 {
+                srv.enqueue(format!("Q: {i}+2="), greedy(i));
+            }
+            let rs = srv.drain().unwrap();
+            assert_eq!(srv.engine.injected, 0);
+            assert_eq!(srv.stats.retries, 0);
+            assert_eq!(srv.stats.failed, 0);
+            collect(rs)
+        } else {
+            let mut srv = Server::new(gen, 5);
+            for i in 0..6 {
+                srv.enqueue(format!("Q: {i}+2="), greedy(i));
+            }
+            collect(srv.drain().unwrap())
+        }
+    };
+    assert_eq!(drive(true), drive(false), "chaos-off streams diverged");
 }

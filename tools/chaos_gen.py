@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Deterministic fault-plan generator — bit-exact mirror of
+`rust/src/chaos.rs` (stdlib only).
+
+Like `workload_gen.py` for arrivals, this mirrors the *plan*, not the
+live engine: both sides pregenerate the full fault schedule as a pure
+function of `(scenario, ticks, seed)` from the repo PCG64-DXSM stream
+using integer draws only, so `tools/slo_sim.py` can replay the exact
+faults `chaos::ChaosEngine` injects and `python/tests/test_chaos_sched.py`
+pre-validates every `serve.rs` chaos test without cargo. The loramlint
+contract-mirror pins both `CHAOS_SCENARIOS` and `FAULT_KINDS` below
+against the Rust consts (names AND order); the golden-plan test pins the
+first draws of every scenario at seed 9 on both sides.
+
+Draw order per scenario is part of the contract (documented again in the
+Rust arms):
+
+  fault-storm:  per tick: coin below(3); on 0: kind below(4), row below(8)
+  decode-flaky: per tick: coin below(4); on 0: kind 0, row below(8)
+  admit-flaky:  per tick: coin below(3); on 0: kind 1, row 0
+  pool-squeeze: per tick: coin below(3); on 0: kind 2, row 0
+  stuck-stall:  per tick: coin below(6); on 0: kind 3, row 0
+  device-loss:  single draw: tick below(ticks), kind 4, row 0
+
+Rows are drawn in [0, 8) regardless of the target engine's batch size; a
+fault aimed at an out-of-range or unoccupied row is a harmless lost tick
+by design (the schedule stays pure).
+
+Usage:
+    python3 tools/chaos_gen.py SCENARIO [--ticks T] [--seed S] [--out F]
+    python3 tools/chaos_gen.py --list
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from workload_gen import Rng  # noqa: E402
+
+# Fault taxonomy — must equal rust/src/chaos.rs::FAULT_KINDS (the
+# loramlint `fault-kinds` contract pair). Index is the plan's `kind_ix`.
+FAULT_KINDS = [
+    "decode-transient",
+    "admit-fail",
+    "pool-exhaust",
+    "stuck-tick",
+    "device-lost",
+]
+
+# Scenario catalog — must equal rust/src/chaos.rs::CHAOS_SCENARIOS (the
+# loramlint `chaos-scenarios` contract pair).
+CHAOS_SCENARIOS = [
+    "fault-storm",
+    "decode-flaky",
+    "admit-flaky",
+    "pool-squeeze",
+    "stuck-stall",
+    "device-loss",
+]
+
+
+def generate(scenario, ticks, seed):
+    """Mirror of chaos.rs::generate — same Rng stream, same draw order
+    per arm. Returns a list of {"tick", "kind_ix", "row"} dicts sorted by
+    tick (generation order is already tick-ascending)."""
+    if ticks < 1:
+        raise ValueError("chaos plan needs ticks >= 1")
+    rng = Rng(seed)
+    plan = []
+
+    def push(tick, kind_ix, row):
+        plan.append({"tick": tick, "kind_ix": kind_ix, "row": row})
+
+    if scenario == "fault-storm":
+        # the A/B headline: ~1/3 of ticks fault, any transient kind
+        # (device-lost excluded — the storm must be survivable)
+        for t in range(ticks):
+            if rng.below(3) == 0:
+                kind = rng.below(4)
+                push(t, kind, rng.below(8))
+    elif scenario == "decode-flaky":
+        for t in range(ticks):
+            if rng.below(4) == 0:
+                push(t, 0, rng.below(8))
+    elif scenario == "admit-flaky":
+        for t in range(ticks):
+            if rng.below(3) == 0:
+                push(t, 1, 0)
+    elif scenario == "pool-squeeze":
+        for t in range(ticks):
+            if rng.below(3) == 0:
+                push(t, 2, 0)
+    elif scenario == "stuck-stall":
+        for t in range(ticks):
+            if rng.below(6) == 0:
+                push(t, 3, 0)
+    elif scenario == "device-loss":
+        push(rng.below(ticks), 4, 0)
+    else:
+        raise ValueError(
+            f"unknown chaos scenario {scenario!r} "
+            f"(expected one of {CHAOS_SCENARIOS})"
+        )
+    return plan
+
+
+def main(argv):
+    argv = argv[1:]
+    if "--list" in argv:
+        for s in CHAOS_SCENARIOS:
+            print(s)
+        return 0
+    pos = [a for a in argv if not a.startswith("-")]
+    scenario = pos[0] if pos else None
+    if scenario is None:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: chaos_gen.py SCENARIO [--ticks T] [--seed S] [--out F]")
+        print(f"scenarios: {', '.join(CHAOS_SCENARIOS)}")
+        return 2
+
+    def opt(name, default):
+        if name in argv:
+            return int(argv[argv.index(name) + 1])
+        return default
+
+    ticks = opt("--ticks", 64)
+    seed = opt("--seed", 0)
+    try:
+        plan = generate(scenario, ticks, seed)
+    except ValueError as e:
+        print(f"chaos_gen: {e}")
+        return 2
+    doc = {
+        "scenario": scenario,
+        "ticks": ticks,
+        "seed": seed,
+        "kinds": FAULT_KINDS,
+        "faults": plan,
+    }
+    if "--out" in argv:
+        path = argv[argv.index("--out") + 1]
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"chaos_gen: wrote {len(plan)} {scenario!r} faults to {path}")
+    else:
+        json.dump(doc, sys.stdout, indent=1)
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -27,6 +27,14 @@ Shipped pairs:
                         SCENARIOS (names and order: the adversarial
                         workload catalog, DESIGN.md §2i — slo_sim.py and
                         the CLI both resolve scenario names through it)
+  chaos-scenarios       chaos.rs::CHAOS_SCENARIOS ~ chaos_gen.py::
+                        CHAOS_SCENARIOS (the fault-plan catalog,
+                        DESIGN.md §2j — both sides pregenerate the same
+                        schedule draw-for-draw)
+  fault-kinds           chaos.rs::FAULT_KINDS ~ chaos_gen.py::
+                        FAULT_KINDS (names AND order: a plan's `kind_ix`
+                        indexes this table on both sides, so reordering
+                        silently re-aims every scheduled fault)
 
 To add a pair: write an extractor for each side returning a comparable
 value, append a Contract to CONTRACTS, and add a drift + clean fixture
@@ -203,6 +211,32 @@ def parse_python_scenarios(src, path="workload_gen.py"):
     names = re.findall(r'"([\w-]+)"', m.group(1))
     if not names:
         raise _Extract(f"{path}: parsed zero scenario names from SCENARIOS")
+    return names
+
+
+# -- chaos-scenarios / fault-kinds -------------------------------------------
+
+def parse_rust_const_list(src, name, path):
+    """String items of `pub const NAME: &[&str] = &[ ... ];`."""
+    m = re.search(
+        rf"pub const {re.escape(name)}[^=]*=\s*&\[(.*?)\];", src, re.S
+    )
+    if not m:
+        raise _Extract(f"{path}: could not find `pub const {name}`")
+    names = re.findall(r'"([\w-]+)"', m.group(1))
+    if not names:
+        raise _Extract(f"{path}: parsed zero names from {name}")
+    return names
+
+
+def parse_python_const_list(src, name, path):
+    """String items of a module-level `NAME = [ ... ]` list."""
+    m = re.search(rf"^{re.escape(name)} = \[(.*?)\]", src, re.S | re.M)
+    if not m:
+        raise _Extract(f"{path}: could not find `{name} = [ ... ]`")
+    names = re.findall(r'"([\w-]+)"', m.group(1))
+    if not names:
+        raise _Extract(f"{path}: parsed zero names from {name}")
     return names
 
 
@@ -420,6 +454,44 @@ def _workload_scenarios(ctx):
     return []
 
 
+def _chaos_scenarios(ctx):
+    chaos = ctx.read("rust/src/chaos.rs")
+    gen = ctx.read("tools/chaos_gen.py")
+    if chaos is None or gen is None:
+        return ["chaos.rs or chaos_gen.py missing"]
+    try:
+        rust = parse_rust_const_list(chaos, "CHAOS_SCENARIOS", "chaos.rs")
+        py = parse_python_const_list(gen, "CHAOS_SCENARIOS", "chaos_gen.py")
+    except _Extract as e:
+        return [str(e)]
+    if rust != py:
+        return [
+            f"chaos scenario catalog drifted — chaos.rs has {rust}, "
+            f"chaos_gen.py has {py} (names and order are the contract; "
+            "the plan generators must mirror draw-for-draw)"
+        ]
+    return []
+
+
+def _fault_kinds(ctx):
+    chaos = ctx.read("rust/src/chaos.rs")
+    gen = ctx.read("tools/chaos_gen.py")
+    if chaos is None or gen is None:
+        return ["chaos.rs or chaos_gen.py missing"]
+    try:
+        rust = parse_rust_const_list(chaos, "FAULT_KINDS", "chaos.rs")
+        py = parse_python_const_list(gen, "FAULT_KINDS", "chaos_gen.py")
+    except _Extract as e:
+        return [str(e)]
+    if rust != py:
+        return [
+            f"fault taxonomy drifted — chaos.rs has {rust}, chaos_gen.py "
+            f"has {py} (a plan's kind_ix indexes this table on both "
+            "sides: names AND order are the contract)"
+        ]
+    return []
+
+
 CONTRACTS = (
     Contract("chunk-ladder", _chunk_ladder),
     Contract("paged-geometry", _paged_geometry),
@@ -427,6 +499,8 @@ CONTRACTS = (
     Contract("event-kinds", _event_kinds),
     Contract("metrics-keys", _metrics_keys),
     Contract("workload-scenarios", _workload_scenarios),
+    Contract("chaos-scenarios", _chaos_scenarios),
+    Contract("fault-kinds", _fault_kinds),
 )
 
 

@@ -41,6 +41,17 @@ REQUIRED = (
     ),
     ("rust/src/serve.rs", "Server", "preempt", ("Preempt",)),
     ("rust/src/serve.rs", "Server", "cancel_expired", ("Cancel",)),
+    # §2j failure domains: a row fault must leave a Fault + (Retry or
+    # terminal Failed) pair, and every health transition must be visible
+    (
+        "rust/src/serve.rs",
+        "Server",
+        "fault_row",
+        ("Fault", "Preempt", "Retry", "Failed"),
+    ),
+    ("rust/src/serve.rs", "Server", "set_health", ("Degrade", "Recover")),
+    ("rust/src/serve.rs", "Server", "fail_everything", ("Fault", "Failed")),
+    ("rust/src/serve.rs", "Server", "fail_queue", ("Failed",)),
     ("rust/src/serve.rs", "Server", "sample_gauges", ("Gauge",)),
     ("rust/src/serve.rs", "SimEngine", "prefill_tick", ("PrefillWindow",)),
     ("rust/src/serve.rs", "SimEngine", "decode_step", ("VerifyRound",)),

@@ -16,12 +16,29 @@ The emitted trace document has the `serve --trace` shape (`loramEvents`
 + `serverStats`), so `tools/trace_report.py --check` audits the model's
 streams under the full conservation-law suite — the `slo-sim` CI lane.
 
+Chaos (§2j): `--chaos SCN` replays a `tools/chaos_gen.py` fault plan
+against the model — the same plan `chaos::ChaosEngine` injects — through
+the same failure-domain machinery `serve.rs` grew: row faults preempt +
+retry with exponential backoff under `--retry-budget`/`--backoff-base`
+(budget exhaustion → a terminal `Failed`), engine faults walk the
+Healthy → Degraded → Failing health machine, and device loss drains
+every survivor as a loud failure. Without a retry budget the first
+fault aborts the run (the pre-§2j contract), which is exactly what
+`--chaos-ab` measures: retry + isolation vs abort-on-error on the same
+storm, gated on offered-load goodput.
+
 Usage:
     python3 tools/slo_sim.py SCENARIO [-n N] [--seed S] [--batch B]
-            [--slo] [--fair-rows K] [--out trace.json]
+            [--slo] [--fair-rows K] [--chaos CSCN] [--chaos-ticks T]
+            [--retry-budget R] [--backoff-base B] [--out trace.json]
     python3 tools/slo_sim.py --ab SCENARIO [-n N] [--seed S] [--batch B]
         # runs FIFO vs SLO on the same stream; exit 1 unless SLO wins
         # on goodput-under-SLO
+    python3 tools/slo_sim.py --chaos-ab SCENARIO [-n N] [--seed S]
+            [--batch B] [--chaos CSCN] [--chaos-ticks T]
+        # retry+isolation vs abort-on-error under the same fault storm;
+        # exit 1 unless retry wins on offered-load goodput and loses
+        # zero requests silently
 """
 
 import json
@@ -31,9 +48,15 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+from chaos_gen import FAULT_KINDS, generate as chaos_plan  # noqa: E402
 from workload_gen import PRIORITIES, SCENARIOS, generate  # noqa: E402
 
 TRACE_SCHEMA_VERSION = 1
+
+
+class AbortOnError(RuntimeError):
+    """A decode fault with no retry policy — the pre-§2j contract: the
+    whole run aborts (what `--chaos-ab` measures against)."""
 
 
 def percentile(xs, p):
@@ -57,7 +80,8 @@ class SimServer:
     `prefill_begin` path always completes, `can_admit` is always true,
     and decode emits one token per occupied row per tick in row order."""
 
-    def __init__(self, batch, slo=False, fair_rows=None):
+    def __init__(self, batch, slo=False, fair_rows=None, chaos=None,
+                 retry_budget=None, backoff_base=1):
         self.batch = batch
         self.rows = [None] * batch
         self.queue = []
@@ -79,6 +103,23 @@ class SimServer:
         self.itl_ticks = []
         # req id -> (priority name, ttft ticks) for A/B reporting
         self.req_ttft = {}
+        # §2j chaos: a chaos_gen plan replayed like chaos::ChaosEngine —
+        # armed on the pre-increment tick, at most one fault per tick,
+        # stale arms dropped, device loss latched permanently
+        self.plan = chaos or []
+        self.cursor = 0
+        self.armed = None
+        self.lost = False
+        self.injected = 0
+        # §2j retry/backoff policy (mirror of set_retry_policy)
+        self.retry_budget = retry_budget
+        self.backoff_base = max(backoff_base, 1)
+        self.health = "healthy"
+        self.clean_ticks = 0
+        self.engine_fault_streak = 0
+        self.failed = 0
+        self.retries = 0
+        self.degraded_ticks = 0
 
     def emit(self, kind, **fields):
         self.events.append(
@@ -108,16 +149,20 @@ class SimServer:
             "adapter_ix": req.get("adapter_ix"),
             "enq_tick": self.ticks,
             "ttft_done": False,
+            "attempts": 0,
+            "not_before": 0,
         })
         self.trace_tick = self.ticks
         self.emit("Enqueue", req=rid)
         return rid
 
     def _pick_ix(self):
-        if not self.slo and self.fair_rows is None:
+        if not self.slo and self.fair_rows is None and self.retry_budget is None:
             return 0 if self.queue else None
         best = None  # (priority ordinal, index)
         for ix, q in enumerate(self.queue):
+            if q["not_before"] > self.ticks:
+                continue  # §2j retry backoff: not admissible yet
             if self.fair_rows is not None:
                 lane = sum(
                     1 for f in self.rows
@@ -156,18 +201,79 @@ class SimServer:
             "adapter_ix": f["adapter_ix"],
             "enq_tick": f["enq_tick"],
             "ttft_done": f["ttft_done"],
+            "attempts": f["attempts"],
+            "not_before": 0,
         })
+
+    # ---- §2j chaos engine mirror (chaos::ChaosEngine surfaces) ----
+
+    def _begin_tick(self, tick):
+        """Mirror of ChaosEngine::begin_tick: drop a stale arm, advance
+        the cursor, latch device loss, arm the tick's fault."""
+        if self.armed is not None and self.armed["tick"] < tick:
+            self.armed = None
+        while self.cursor < len(self.plan):
+            f = self.plan[self.cursor]
+            if f["tick"] > tick:
+                break
+            self.cursor += 1
+            if f["kind_ix"] == 4:
+                self.lost = True
+            elif f["tick"] == tick:
+                self.armed = f
+
+    def _armed_kind(self, kind_ix):
+        if self.armed is not None and self.armed["kind_ix"] == kind_ix:
+            return self.armed
+        return None
+
+    def _can_admit(self):
+        """Mirror of ChaosEngine::can_admit over the always-true inner."""
+        if self.lost:
+            return False
+        if self._armed_kind(2) is not None:
+            self.armed = None
+            self.injected += 1
+            return False
+        return True
+
+    def _prefill_ok(self):
+        """Mirror of ChaosEngine::prefill_begin over the always-Ok inner:
+        True = admitted, False = the admission bailed (Reject path)."""
+        if self.lost:
+            return False
+        if self._armed_kind(1) is not None:
+            self.armed = None
+            self.injected += 1
+            return False
+        return True
 
     def _admit(self):
         if self.slo:
             self._cancel_expired()
+        admitted_now = 0
+        had_err = False
         preempted_now = False
         while True:
             while self.free_rows() > 0:
+                # Degraded health shrinks admission to one per tick (§2j)
+                if self.health == "degraded" and admitted_now >= 1:
+                    break
                 ix = self._pick_ix()
                 if ix is None:
                     break
                 q = self.queue.pop(ix)
+                can = self._can_admit()
+                if not can and (admitted_now > 0 or self.in_flight() > 0):
+                    self.emit("Requeue", req=q["id"])
+                    self.queue.insert(ix, q)
+                    break
+                if not self._prefill_ok():
+                    self.emit("Reject", req=q["id"])
+                    self.rejected += 1
+                    had_err = True
+                    continue
+                admitted_now += 1
                 row = self.rows.index(None)  # SimEngine: first free row
                 self.emit("Admit", req=q["id"], row=row)
                 self.rows[row] = {**q, "tokens": 0, "last": None}
@@ -188,22 +294,150 @@ class SimServer:
                 break
             self._preempt(min(cands)[2])
             preempted_now = True
+        if (had_err and admitted_now == 0 and self.in_flight() == 0
+                and self.retry_budget is None):
+            raise AbortOnError(
+                "every admission failed with no requests in flight"
+            )
+
+    # ---- §2j failure-domain machinery (serve.rs §2j mirror) ----
+
+    def _set_health(self, h):
+        if self.health == h:
+            return
+        if h == "healthy":
+            self.emit("Recover")
+        else:
+            self.emit("Degrade", level=h)
+        self.health = h
+        self.clean_ticks = 0
+
+    def _fault_row(self, row, kind):
+        """Row-scoped fault: retry within budget (preempt + backoff) or
+        terminate as a first-class failure."""
+        f = self.rows[row]
+        self.rows[row] = None
+        self.emit("Fault", req=f["id"], row=row, fault=kind)
+        attempts = f["attempts"] + 1
+        if attempts <= self.retry_budget:
+            self.emit("Preempt", req=f["id"], row=row, tokens=f["tokens"])
+            self.preempted += 1
+            self.emit("Retry", req=f["id"], attempt=attempts)
+            self.retries += 1
+            backoff = self.backoff_base << min(attempts - 1, 32)
+            self.queue.insert(0, {
+                "id": f["id"],
+                "max_new": f["max_new"],
+                "priority": f["priority"],
+                "deadline_tick": f["deadline_tick"],
+                "adapter_ix": f["adapter_ix"],
+                "enq_tick": f["enq_tick"],
+                "ttft_done": f["ttft_done"],
+                "attempts": attempts,
+                "not_before": self.ticks + backoff,
+            })
+            return []
+        self.emit("Failed", req=f["id"], tokens=f["tokens"], attempts=attempts)
+        self.failed += 1
+        return [{"id": f["id"], "tokens": 0, "failed": True}]
+
+    def _fail_everything(self, kind):
+        """Enter failing: every survivor fails loudly — in-flight rows as
+        terminal faults, queued requests as zero-token failures."""
+        self._set_health("failing")
+        out = []
+        for row in range(self.batch):
+            f = self.rows[row]
+            if f is None:
+                continue
+            self.rows[row] = None
+            self.emit("Fault", req=f["id"], row=row, fault=kind)
+            self.emit(
+                "Failed", req=f["id"], tokens=f["tokens"],
+                attempts=f["attempts"] + 1,
+            )
+            self.failed += 1
+            out.append({"id": f["id"], "tokens": 0, "failed": True})
+        out.extend(self._fail_queue())
+        return out
+
+    def _fail_queue(self):
+        out = []
+        while self.queue:
+            q = self.queue.pop(0)
+            self.emit("Failed", req=q["id"], tokens=0, attempts=q["attempts"])
+            self.failed += 1
+            out.append({"id": q["id"], "tokens": 0, "failed": True})
+        return out
+
+    def _decode_fault(self):
+        """Mirror of ChaosEngine::decode_step's chaos preamble: the fault
+        that fires this tick, or None for a clean decode."""
+        if self.lost:
+            return {"domain": "lost", "kind": "device-lost", "row": None}
+        f = self._armed_kind(0)
+        if f is not None:
+            self.armed = None
+            self.injected += 1
+            return {"domain": "row", "kind": FAULT_KINDS[0], "row": f["row"]}
+        if self._armed_kind(3) is not None:
+            self.armed = None
+            self.injected += 1
+            return {"domain": "engine", "kind": FAULT_KINDS[3], "row": None}
+        return None
+
+    def _on_decode_fault(self, fault):
+        if self.retry_budget is None:
+            raise AbortOnError(f"chaos: {fault['kind']} with no retry policy")
+        if fault["domain"] == "row":
+            row = fault["row"]
+            if row < self.batch and self.rows[row] is not None:
+                return self._fault_row(row, fault["kind"])
+            return []  # aimed at an empty row: a harmless lost tick
+        if fault["domain"] == "engine":
+            self.clean_ticks = 0
+            self.engine_fault_streak += 1
+            if self.engine_fault_streak >= 3:
+                return self._fail_everything(fault["kind"])
+            self._set_health("degraded")
+            return []
+        return self._fail_everything(fault["kind"])
 
     def step(self):
         """One scheduler tick; returns finished request dicts. The clock
         only advances while anything is active (idle = no-op, exactly the
         Rust early return before `ticks += 1`)."""
         self.trace_tick = self.ticks
+        self._begin_tick(self.ticks)
+        if self.health == "failing":
+            # terminal: fail any late arrivals loudly (§2j)
+            return self._fail_queue()
         self._admit()
         if self.in_flight() == 0:
+            # §2j: when every queued entry is backing off, let sim time
+            # pass so `not_before` unblocks instead of wedging drain
+            if (self.retry_budget is not None and self.queue
+                    and all(q["not_before"] > self.ticks for q in self.queue)):
+                self.ticks += 1
             return []
         self.ticks += 1
+        if self.health != "healthy":
+            self.degraded_ticks += 1
         self.trace_tick = self.ticks
         now = self.ticks
         # sample_gauges mirror: one queue-depth + in-flight pair per
         # counted tick, before the decode events
         self.emit("Gauge", name="queue_depth", value=float(len(self.queue)))
         self.emit("Gauge", name="in_flight", value=float(self.in_flight()))
+        fault = self._decode_fault()
+        if fault is not None:
+            return self._on_decode_fault(fault)
+        # a clean decode tick heals (mirror of the serve.rs Ok arm)
+        self.engine_fault_streak = 0
+        if self.health == "degraded":
+            self.clean_ticks += 1
+            if self.clean_ticks >= 3:
+                self._set_health("healthy")
         done_rows = []
         for row, f in enumerate(self.rows):
             if f is None:
@@ -241,7 +475,7 @@ class SimServer:
 
     def goodput(self):
         return (self.served - self.deadline_misses) / float(
-            max(self.served + self.cancelled, 1)
+            max(self.served + self.cancelled + self.failed, 1)
         )
 
     def server_stats(self):
@@ -255,6 +489,9 @@ class SimServer:
             "preempted": self.preempted,
             "cancelled": self.cancelled,
             "deadline_misses": self.deadline_misses,
+            "failed": self.failed,
+            "retries": self.retries,
+            "degraded_ticks": self.degraded_ticks,
             "goodput": self.goodput(),
             "ttft_tick_p50": percentile(self.ttft_ticks, 50.0),
             "ttft_tick_p95": percentile(self.ttft_ticks, 95.0),
@@ -305,6 +542,29 @@ def run_ab(scenario, n, seed, batch):
     return fifo, slo
 
 
+def goodput_offered(srv, n):
+    """Goodput against *offered* load: (served - misses) / n. The A/B
+    gate uses this because abort-on-error's tiny completed set would
+    flatter its plain (completion-denominator) goodput."""
+    return (srv.served - srv.deadline_misses) / float(max(n, 1))
+
+
+def run_chaos_ab(scenario, n, seed, batch, chaos_scn, chaos_ticks):
+    """Retry+isolation vs abort-on-error under the same fault plan (§2j).
+    Returns (retry_srv, abort_srv, abort_error_or_None)."""
+    reqs = generate(scenario, n, seed)
+    plan = chaos_plan(chaos_scn, chaos_ticks, seed)
+    retry = SimServer(batch, chaos=plan, retry_budget=2, backoff_base=1)
+    run_workload(retry, reqs)
+    abort = SimServer(batch, chaos=plan, retry_budget=None)
+    err = None
+    try:
+        run_workload(abort, reqs)
+    except AbortOnError as e:
+        err = e
+    return retry, abort, err
+
+
 def main(argv):
     argv = argv[1:]
     if "--list" in argv:
@@ -316,8 +576,10 @@ def main(argv):
     scenario = pos[0] if pos else None
     if scenario is None:
         print(__doc__.strip().splitlines()[0])
-        print("usage: slo_sim.py [--ab] SCENARIO [-n N] [--seed S] "
-              "[--batch B] [--slo] [--fair-rows K] [--out F]")
+        print("usage: slo_sim.py [--ab|--chaos-ab] SCENARIO [-n N] "
+              "[--seed S] [--batch B] [--slo] [--fair-rows K] "
+              "[--chaos CSCN] [--chaos-ticks T] [--retry-budget R] "
+              "[--backoff-base B] [--out F]")
         print(f"scenarios: {', '.join(SCENARIOS)}")
         return 2
 
@@ -326,10 +588,52 @@ def main(argv):
             return int(argv[argv.index(name) + 1])
         return default
 
+    def sopt(name, default):
+        if name in argv:
+            return argv[argv.index(name) + 1]
+        return default
+
     n = opt("-n", 64)
     seed = opt("--seed", 0)
     batch = opt("--batch", 4)
+    chaos_scn = sopt("--chaos", None)
+    chaos_ticks = opt("--chaos-ticks", 64)
     try:
+        if "--chaos-ab" in flags:
+            retry, abort, err = run_chaos_ab(
+                scenario, n, seed, batch, chaos_scn or "fault-storm",
+                chaos_ticks,
+            )
+            go_r, go_a = goodput_offered(retry, n), goodput_offered(abort, n)
+            print(
+                f"slo_sim chaos A/B {scenario!r} x "
+                f"{chaos_scn or 'fault-storm'!r} n={n} seed={seed} "
+                f"batch={batch}:"
+            )
+            print(
+                f"  retry: goodput-offered {go_r:.3f}  served {retry.served}"
+                f"  failed {retry.failed}  retries {retry.retries}"
+                f"  rejected {retry.rejected}  injected {retry.injected}"
+            )
+            print(
+                f"  abort: goodput-offered {go_a:.3f}  served {abort.served}"
+                f"  aborted {'yes: ' + str(err) if err else 'no'}"
+            )
+            resolved = (retry.served + retry.failed + retry.cancelled
+                        + retry.rejected)
+            if resolved != n:
+                print(
+                    f"slo_sim: FAIL — retry arm lost requests silently "
+                    f"({resolved} of {n} resolved)"
+                )
+                return 1
+            if go_r <= go_a:
+                print("slo_sim: FAIL — retry+isolation did not beat "
+                      "abort-on-error on offered-load goodput")
+                return 1
+            print("slo_sim: OK — retry+isolation beats abort-on-error, "
+                  "zero requests lost silently")
+            return 0
         if "--ab" in flags:
             fifo, slo = run_ab(scenario, n, seed, batch)
             gf, gs = fifo.goodput(), slo.goodput()
@@ -357,6 +661,11 @@ def main(argv):
             batch,
             slo="--slo" in flags,
             fair_rows=opt("--fair-rows", None) if "--fair-rows" in argv else None,
+            chaos=chaos_plan(chaos_scn, chaos_ticks, seed) if chaos_scn else None,
+            retry_budget=(
+                opt("--retry-budget", None) if "--retry-budget" in argv else None
+            ),
+            backoff_base=opt("--backoff-base", 1),
         )
         run_workload(srv, reqs)
         doc = srv.trace_doc()

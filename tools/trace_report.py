@@ -21,7 +21,18 @@ conservation laws — the same laws `rust/src/obs/audit.rs` enforces inside
   7. cancel is terminal and pre-admission: cancelling an in-flight or
      finished request, or any Admit after Cancel, is a violation
   8. admission ledger: admits == finishes + preempts + mid-flight
-     rejects, and DeadlineMiss only fires for requests that finish
+     rejects + fails, and DeadlineMiss only fires for requests that
+     finish
+  9. retry ledger (Sec 2j): every Fault is answered by exactly one Retry
+     or terminal Failed — per request, faults == retries while live,
+     and faults == retries + 1 at an in-flight Failed; Retry attempts
+     count 1, 2, ... in order
+ 10. failure terminality: Failed is a terminal outcome — no event may
+     name the request afterwards; Failed.tokens conserves the discarded
+     life (like Preempt) into failed_tokens
+ 11. degradation bracketing: every Degrade("degraded") is closed by a
+     Recover or escalates to Degrade("failing"); a trace may only end
+     degraded if it ends in the failing state
 
 It then recomputes the TTFT/ITL tick percentiles from the raw events with
 the *identical* interpolation the Rust side uses (rank = (p/100)*(n-1),
@@ -69,6 +80,11 @@ KINDS = {
     "CowCopy": ("block",),
     "Gauge": ("name", "value"),
     "SessionRun": ("artifact", "h2d_ms", "exec_ms", "d2h_ms"),
+    "Fault": ("req", "row", "fault"),
+    "Retry": ("req", "attempt"),
+    "Failed": ("req", "tokens", "attempts"),
+    "Degrade": ("level",),
+    "Recover": (),
 }
 
 
@@ -123,6 +139,11 @@ def audit(events):
         "preempted_tokens": 0,
         "cancelled": 0,
         "deadline_misses": 0,
+        "faults": 0,
+        "retries": 0,
+        "failed": 0,
+        "failed_tokens": 0,
+        "degrades": 0,
         "cow_copies": 0,
         "prefix_hits": 0,
         "verify_rounds": 0,
@@ -134,6 +155,8 @@ def audit(events):
     rows = {}  # engine row -> occupant req
     live_blocks = {}  # block -> alloc tick
     rejected_inflight = 0  # admissions ended by a mid-flight Reject
+    failed_inflight = 0  # admissions ended by a terminal Failed
+    health = "healthy"  # degradation bracket state (law 11)
 
     def life(req):
         return lives.setdefault(
@@ -154,6 +177,9 @@ def audit(events):
                 "rejected": False,
                 "cancelled": False,
                 "deadline_miss": False,
+                "faults": 0,
+                "retries": 0,
+                "failed": False,
             },
         )
 
@@ -167,6 +193,11 @@ def audit(events):
             bad(f"event {i} ({kind}): missing fields {missing}")
             continue
         t = ev["tick"]
+        # law 10: Failed is terminal — nothing may name the request after
+        if "req" in KINDS[kind] and kind != "Failed":
+            prior = lives.get(ev["req"])
+            if prior is not None and prior["failed"]:
+                bad(f"req {ev['req']}: {kind} after Failed (failure is terminal)")
         if kind == "Enqueue":
             r["enqueued"] += 1
             l = life(ev["req"])
@@ -272,6 +303,89 @@ def audit(events):
             if l["deadline_miss"]:
                 bad(f"req {ev['req']}: deadline missed twice")
             l["deadline_miss"] = True
+        elif kind == "Fault":
+            r["faults"] += 1
+            req, row = ev["req"], ev["row"]
+            l = life(req)
+            if l["admit"] is None:
+                bad(f"req {req}: fault while not admitted")
+            elif rows.get(row) != req:
+                bad(f"req {req}: fault on row {row} it does not occupy")
+            l["faults"] += 1
+        elif kind == "Retry":
+            r["retries"] += 1
+            l = life(ev["req"])
+            if l["faults"] != l["retries"] + 1:
+                bad(
+                    f"req {ev['req']}: retry without a pending fault "
+                    f"({l['faults']} faults, {l['retries']} retries)"
+                )
+            elif ev["attempt"] != l["retries"] + 1:
+                bad(
+                    f"req {ev['req']}: Retry says attempt {ev['attempt']} "
+                    f"but this is retry {l['retries'] + 1}"
+                )
+            l["retries"] += 1
+        elif kind == "Failed":
+            r["failed"] += 1
+            req = ev["req"]
+            l = life(req)
+            if l["enq"] is None:
+                bad(f"req {req}: failed, never enqueued")
+            if l["cancelled"]:
+                bad(f"req {req}: failed after cancel")
+            if l["finish"] is not None:
+                bad(f"req {req}: failed after finish")
+            if ev["tokens"] != l["tokens"]:
+                bad(
+                    f"req {req}: Failed says {ev['tokens']} tokens but "
+                    f"life sampled {l['tokens']}"
+                )
+            if ev["attempts"] != l["faults"]:
+                bad(
+                    f"req {req}: Failed says {ev['attempts']} attempts but "
+                    f"life took {l['faults']} faults"
+                )
+            if l["admit"] is not None:
+                # in-flight failure: closes the admission (ledger), frees
+                # the row, conserves the discarded stream (like Preempt)
+                if l["faults"] != l["retries"] + 1:
+                    bad(
+                        f"req {req}: retry ledger broken at Failed "
+                        f"({l['faults']} faults != {l['retries']} retries + 1)"
+                    )
+                failed_inflight += 1
+                for row, occ in list(rows.items()):
+                    if occ == req:
+                        del rows[row]
+            elif l["faults"] != l["retries"]:
+                bad(
+                    f"req {req}: retry ledger broken at queue Failed "
+                    f"({l['faults']} faults != {l['retries']} retries)"
+                )
+            r["failed_tokens"] += l["tokens"]
+            l["tokens"] = 0
+            l["last"] = None
+            l["admit"] = None
+            l["failed"] = True
+        elif kind == "Degrade":
+            r["degrades"] += 1
+            level = ev["level"]
+            if level not in ("degraded", "failing"):
+                bad(f"tick {t}: unknown degrade level {level!r}")
+            elif level == "degraded" and health != "healthy":
+                bad(f"tick {t}: degrade to degraded while {health}")
+            elif level == "failing" and health == "failing":
+                bad(f"tick {t}: degrade to failing while already failing")
+            else:
+                health = level
+        elif kind == "Recover":
+            if health == "healthy":
+                bad(f"tick {t}: recover while healthy")
+            elif health == "failing":
+                bad(f"tick {t}: recover from failing (failing is terminal)")
+            else:
+                health = "healthy"
         elif kind == "BlockAlloc":
             if ev["block"] in live_blocks:
                 bad(f"block {ev['block']}: allocated while live")
@@ -297,10 +411,17 @@ def audit(events):
     for req, l in sorted(lives.items()):
         if l["deadline_miss"] and l["finish"] is None:
             bad(f"req {req}: deadline miss without a finish")
+        if not l["failed"] and l["faults"] != l["retries"]:
+            bad(
+                f"req {req}: retry ledger broken at end of trace "
+                f"({l['faults']} faults, {l['retries']} retries, no "
+                "terminal Failed)"
+            )
         if l["admit"] is None:
             if (
                 not l["rejected"]
                 and not l["cancelled"]
+                and not l["failed"]
                 and l["enq"] is not None
             ):
                 bad(f"req {req}: enqueued but never admitted or rejected")
@@ -331,13 +452,16 @@ def audit(events):
                 f"says {l['finish_tokens']}"
             )
     # admission ledger: every admission ends in exactly one of finish /
-    # preempt / mid-flight reject
-    if r["admitted"] != r["finished"] + r["preempted"] + rejected_inflight:
+    # preempt / mid-flight reject / terminal failure
+    if r["admitted"] != r["finished"] + r["preempted"] + rejected_inflight + failed_inflight:
         bad(
             f"admission ledger broken: {r['admitted']} admits != "
             f"{r['finished']} finishes + {r['preempted']} preempts + "
-            f"{rejected_inflight} mid-flight rejects"
+            f"{rejected_inflight} mid-flight rejects + "
+            f"{failed_inflight} fails"
         )
+    if health == "degraded":
+        bad("degradation never closed: trace ends degraded, not failing")
     if rows:
         stuck = ", ".join(f"{row}:req {req}" for row, req in sorted(rows.items()))
         bad(f"rows still occupied at end of trace: {stuck}")
@@ -370,6 +494,8 @@ def check(report, stats, other):
         ("preempted", report["preempted"]),
         ("cancelled", report["cancelled"]),
         ("deadline_misses", report["deadline_misses"]),
+        ("failed", report["failed"]),
+        ("retries", report["retries"]),
     ]:
         want = stats.get(key)
         if want is not None and got != want:
@@ -377,9 +503,10 @@ def check(report, stats, other):
     want = stats.get("goodput")
     if want is not None:
         # bit-for-bit mirror of ServerStats::goodput: (served -
-        # deadline_misses) / max(served + cancelled, 1), IEEE f64 division
+        # deadline_misses) / max(served + cancelled + failed, 1), IEEE
+        # f64 division
         got = (report["finished"] - report["deadline_misses"]) / float(
-            max(report["finished"] + report["cancelled"], 1)
+            max(report["finished"] + report["cancelled"] + report["failed"], 1)
         )
         if got != want:
             errs.append(
@@ -420,6 +547,11 @@ def summarize(report, stats, other, path):
         f"({report['preempted_tokens']} tokens discarded), "
         f"{report['cancelled']} cancelled, {report['deadline_misses']} "
         f"deadline misses"
+    )
+    print(
+        f"  chaos: {report['faults']} faults, {report['retries']} retries, "
+        f"{report['failed']} failed ({report['failed_tokens']} tokens "
+        f"discarded), {report['degrades']} degrades"
     )
     print(
         f"  tokens: {report['tokens']} sampled; {report['verify_rounds']} "

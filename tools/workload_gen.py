@@ -31,6 +31,7 @@ SCENARIOS = [
     "adapter-skew",
     "deadline-storm",
     "rejection-storm",
+    "faults",
 ]
 
 # Priority names in Rust enum order (Low < Normal < High) — index is the
@@ -138,6 +139,21 @@ def generate(scenario, n, seed):
                 "max_new": 1 + rng.below(4),
                 "priority": "normal",
                 "deadline_ticks": None,
+                "adapter_ix": None,
+            }
+        elif scenario == "faults":
+            if rng.below(3) == 0:
+                tick += 1 + rng.below(4)
+            prompt_len = 6 + rng.below(12)
+            max_new = 3 + rng.below(6)
+            priority = "high" if rng.below(8) == 0 else "normal"
+            deadline = 12 + rng.below(10) if priority == "high" else None
+            req = {
+                "arrival_tick": tick,
+                "prompt_len": prompt_len,
+                "max_new": max_new,
+                "priority": priority,
+                "deadline_ticks": deadline,
                 "adapter_ix": None,
             }
         else:
